@@ -1,0 +1,179 @@
+"""AOT pipeline: lower the L2 superstep modules to HLO *text* artifacts.
+
+HLO text (``as_hlo_text()``), NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Emits, per configuration in ``CONFIGS``:
+  fftu_ss0_<cfg>[_inv].hlo.txt   superstep 0 (fftn + Pallas twiddle + pack)
+  fftu_ss2_<cfg>[_inv].hlo.txt   superstep 2 (strided F_p tensor transform)
+  fftn_<shape>.hlo.txt           plain local fftn (engine parity tests)
+  stockham_<b>x<n>.hlo.txt       the L1 Pallas kernel standalone
+plus ``manifest.json`` describing every artifact's signature, consumed by
+``rust/src/runtime/manifest.rs``. Content-hashing of the compile sources
+makes ``make artifacts`` a no-op when nothing changed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import stockham
+
+# (name, global shape, processor grid) — local shapes follow.
+CONFIGS = [
+    ("l8x8_g2x2", (16, 16), (2, 2)),
+    ("l16x16x16_g2x2x2", (32, 32, 32), (2, 2, 2)),
+    ("l16x16x16_g1x1x1", (16, 16, 16), (1, 1, 1)),
+]
+FFTN_SHAPES = [(16, 16), (16, 16, 16)]
+STOCKHAM_SHAPES = [(8, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_superstep0(shape, pgrid, inverse):
+    local = tuple(n // q for n, q in zip(shape, pgrid))
+    tab_specs = []
+    for n, q in zip(shape, pgrid):
+        tab_specs += [f32((n // q,)), f32((n // q,))]
+
+    def fn(x_re, x_im, *tables):
+        return model.superstep0(x_re, x_im, list(tables), pgrid, inverse=inverse)
+
+    return jax.jit(fn).lower(f32(local), f32(local), *tab_specs)
+
+
+def lower_superstep2(shape, pgrid, inverse):
+    local = tuple(n // q for n, q in zip(shape, pgrid))
+
+    def fn(w_re, w_im):
+        return model.superstep2(w_re, w_im, shape, pgrid, inverse=inverse)
+
+    return jax.jit(fn).lower(f32(local), f32(local))
+
+
+def lower_fftn(shape, inverse=False):
+    def fn(x_re, x_im):
+        return model.local_fftn(x_re, x_im, inverse=inverse)
+
+    return jax.jit(fn).lower(f32(shape), f32(shape))
+
+
+def lower_stockham(batch, n):
+    def fn(x_re, x_im):
+        return stockham.stockham_fft(x_re, x_im)
+
+    return jax.jit(fn).lower(f32((batch, n)), f32((batch, n)))
+
+
+def source_digest() -> str:
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    digest = source_digest()
+    stamp = out / "manifest.json"
+    if stamp.exists() and not args.force:
+        try:
+            if json.loads(stamp.read_text()).get("source_digest") == digest:
+                print("artifacts up to date (source digest unchanged)")
+                return
+        except json.JSONDecodeError:
+            pass
+
+    manifest = {"source_digest": digest, "modules": []}
+
+    def emit(name, lowered, sig):
+        text = to_hlo_text(lowered)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest["modules"].append({"name": name, "file": path.name, **sig})
+        print(f"  {name}: {len(text)} chars")
+
+    for cfg_name, shape, pgrid in CONFIGS:
+        local = [n // q for n, q in zip(shape, pgrid)]
+        packet = [n // (q * q) for n, q in zip(shape, pgrid)]
+        p = int(np.prod(pgrid))
+        for inverse in (False, True):
+            suffix = "_inv" if inverse else ""
+            emit(
+                f"fftu_ss0_{cfg_name}{suffix}",
+                lower_superstep0(shape, pgrid, inverse),
+                {
+                    "kind": "superstep0",
+                    "shape": list(shape),
+                    "pgrid": list(pgrid),
+                    "local": local,
+                    "packet": packet,
+                    "p": p,
+                    "inverse": inverse,
+                },
+            )
+            emit(
+                f"fftu_ss2_{cfg_name}{suffix}",
+                lower_superstep2(shape, pgrid, inverse),
+                {
+                    "kind": "superstep2",
+                    "shape": list(shape),
+                    "pgrid": list(pgrid),
+                    "local": local,
+                    "packet": packet,
+                    "p": p,
+                    "inverse": inverse,
+                },
+            )
+    for shape in FFTN_SHAPES:
+        sname = "x".join(map(str, shape))
+        emit(
+            f"fftn_{sname}",
+            lower_fftn(shape),
+            {"kind": "fftn", "shape": list(shape), "inverse": False},
+        )
+    for batch, n in STOCKHAM_SHAPES:
+        emit(
+            f"stockham_{batch}x{n}",
+            lower_stockham(batch, n),
+            {"kind": "stockham", "shape": [batch, n], "inverse": False},
+        )
+
+    stamp.write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {stamp} ({len(manifest['modules'])} modules)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Everything here is the *specification*: kernels must match these within
+float32 tolerance. The oracles are deliberately written with the most
+direct jnp formulation available (``jnp.fft``, explicit broadcasting), not
+with any kernel-style tricks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def fft1d_batched(x_re, x_im, inverse: bool = False):
+    """Batched 1D DFT over the last axis of split re/im float32 arrays.
+
+    Matches the paper's Eq. (1.1) convention: forward uses
+    ``e^{-2 pi i jk/n}``; the inverse is unscaled (no 1/n), mirroring
+    FFTW/FFTU.
+    """
+    x = (x_re + 1j * x_im).astype(jnp.complex64)
+    if inverse:
+        y = jnp.conj(jnp.fft.fft(jnp.conj(x)))
+    else:
+        y = jnp.fft.fft(x)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def twiddle_tables(shape, pgrid, s_coords):
+    """Per-axis twiddle vectors ``tw[l][t] = omega_{n_l}^{t * s_l}`` for
+    the local array of processor ``s`` (Eq. 3.1 storage scheme).
+
+    Returns numpy complex64 arrays of length ``n_l / p_l``.
+    """
+    tables = []
+    for n, p, s in zip(shape, pgrid, s_coords):
+        t = np.arange(n // p)
+        w = np.exp(-2j * np.pi * ((t * s) % n) / n)
+        tables.append(w.astype(np.complex64))
+    return tables
+
+
+def twiddle_apply(x_re, x_im, tables_re, tables_im, conj: bool = False):
+    """Multiply a local d-dim array elementwise by the separable twiddle
+    ``prod_l tw[l][t_l]`` (the multiply half of Alg. 3.1)."""
+    x = x_re + 1j * x_im
+    d = x.ndim
+    w = jnp.ones((), dtype=jnp.complex64)
+    for l in range(d):
+        tw = tables_re[l] + 1j * tables_im[l]
+        if conj:
+            tw = jnp.conj(tw)
+        shape = [1] * d
+        shape[l] = -1
+        w = w * tw.reshape(shape)
+    y = x * w
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)

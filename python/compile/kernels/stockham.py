@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: batched radix-2 Stockham autosort FFT.
+
+This is the TPU re-thinking of the paper's local-FFT hot spot (DESIGN.md
+§Hardware-Adaptation): a Stockham schedule has **no bit-reversal
+gather** — every stage is a dense, stride-regular vector operation, which
+is exactly what the TPU VPU wants (scatter/gather is the anti-pattern).
+The batch dimension is tiled by BlockSpec so one (tile_b, n) panel of
+split re/im float32 lives in VMEM across all ``log2 n`` stages: the whole
+transform is one HBM round-trip, the VMEM analogue of FFTU fusing
+twiddling into packing to save a RAM pass.
+
+Pallas runs with ``interpret=True`` everywhere in this repo: the CPU PJRT
+client cannot execute Mosaic custom-calls, so interpret mode (which
+lowers to plain HLO) is both the correctness path and the artifact path.
+VMEM/footprint analysis for a real TPU is in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def stage_weights(n: int, inverse: bool) -> np.ndarray:
+    """All stage twiddles, concatenated: for each sub-length
+    ``n_cur = n, n/2, ..., 2`` the ``m = n_cur/2`` weights
+    ``w_p = e^{±2 pi i p / n_cur}``. Total length ``n - 1``. Passed to
+    the kernel as an input (Pallas forbids captured constants)."""
+    sign = 1.0 if inverse else -1.0
+    parts = []
+    n_cur = n
+    while n_cur > 1:
+        m = n_cur // 2
+        ang = sign * 2.0 * np.pi * np.arange(m) / n_cur
+        parts.append(np.cos(ang) + 1j * np.sin(ang))
+        n_cur = m
+    return np.concatenate(parts).astype(np.complex64)
+
+
+def _stockham_kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref, *, n: int):
+    """One (tile_b, n) panel: full radix-2 Stockham pipeline in VMEM."""
+    re = xr_ref[...]
+    im = xi_ref[...]
+    wr_all = wr_ref[...]
+    wi_all = wi_ref[...]
+    tb = re.shape[0]
+    n_cur, s, woff = n, 1, 0
+    while n_cur > 1:
+        m = n_cur // 2
+        wr = wr_all[woff:woff + m].reshape(1, m, 1)
+        wi = wi_all[woff:woff + m].reshape(1, m, 1)
+        woff += m
+        vr = re.reshape(tb, n_cur, s)
+        vi = im.reshape(tb, n_cur, s)
+        ar, ai = vr[:, :m, :], vi[:, :m, :]
+        br, bi = vr[:, m:, :], vi[:, m:, :]
+        er, ei = ar + br, ai + bi
+        dr, di = ar - br, ai - bi
+        our = dr * wr - di * wi
+        oui = dr * wi + di * wr
+        # Interleave even/odd along the sub-transform axis (autosort).
+        re = jnp.stack([er, our], axis=2).reshape(tb, n)
+        im = jnp.stack([ei, oui], axis=2).reshape(tb, n)
+        n_cur, s = m, 2 * s
+    or_ref[...] = re
+    oi_ref[...] = im
+
+
+@functools.lru_cache(maxsize=None)
+def _build(batch: int, n: int, tile_b: int):
+    if n & (n - 1) != 0 or n < 2:
+        raise ValueError(f"stockham kernel needs a power-of-two length, got {n}")
+    if batch % tile_b != 0:
+        raise ValueError(f"tile_b={tile_b} must divide batch={batch}")
+    kern = functools.partial(_stockham_kernel, n=n)
+    spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
+    wspec = pl.BlockSpec((n - 1,), lambda i: (0,))
+    return pl.pallas_call(
+        kern,
+        grid=(batch // tile_b,),
+        in_specs=[spec, spec, wspec, wspec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        ],
+        interpret=True,
+    )
+
+
+def stockham_fft(x_re, x_im, *, inverse: bool = False, tile_b: int | None = None):
+    """Batched 1D FFT of split re/im float32 arrays of shape (batch, n).
+
+    ``tile_b`` is the VMEM batch tile; the default keeps one panel under
+    ~2 MiB (4 arrays x tile_b x n x 4 B), far below the 16 MiB VMEM of a
+    TPU core, leaving room for double-buffering.
+    """
+    batch, n = x_re.shape
+    if tile_b is None:
+        tile_b = max(1, min(batch, (1 << 17) // max(n, 1)))
+        while batch % tile_b != 0:
+            tile_b -= 1
+    f = _build(batch, n, tile_b)
+    w = stage_weights(n, inverse)
+    wr = jnp.asarray(np.real(w), dtype=jnp.float32)
+    wi = jnp.asarray(np.imag(w), dtype=jnp.float32)
+    return tuple(f(x_re, x_im, wr, wi))
+
+
+def vmem_footprint_bytes(tile_b: int, n: int) -> int:
+    """Bytes of VMEM one grid step holds: in+out panels, re+im planes."""
+    return 4 * tile_b * n * 4

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: fused twiddle multiply (the hot half of Alg. 3.1).
+
+FFTU's §3 insight is that twiddling must be fused with packing to avoid
+an extra pass over CPU RAM. The TPU translation: the twiddle factors are
+a rank-1-separable tensor ``prod_l tw_l[t_l]``, so a VMEM tile of the
+local array can be twiddled with O(sum_l n_l/p_l) table traffic instead
+of materializing an N/p-element weight array in HBM (that is exactly the
+Eq. 3.1 memory argument). The kernel reconstructs the weight on the fly
+from the per-axis vectors while the tile is resident.
+
+Kernels are provided for d = 1, 2, 3 local arrays (the leading axis is
+tiled); higher d falls back to the jnp reference (documented in
+DESIGN.md — the d > 3 case reshapes to 3D around the packing axes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel_1d(xr, xi, t0r, t0i, or_, oi_):
+    wr, wi = t0r[...], t0i[...]
+    a, b = xr[...], xi[...]
+    or_[...] = a * wr - b * wi
+    oi_[...] = a * wi + b * wr
+
+
+def _kernel_2d(xr, xi, t0r, t0i, t1r, t1i, or_, oi_):
+    # Weight tile = outer(t0, t1) rebuilt in VMEM.
+    wr = t0r[...][:, None] * t1r[...][None, :] - t0i[...][:, None] * t1i[...][None, :]
+    wi = t0r[...][:, None] * t1i[...][None, :] + t0i[...][:, None] * t1r[...][None, :]
+    a, b = xr[...], xi[...]
+    or_[...] = a * wr - b * wi
+    oi_[...] = a * wi + b * wr
+
+
+def _kernel_3d(xr, xi, t0r, t0i, t1r, t1i, t2r, t2i, or_, oi_):
+    w01r = t0r[...][:, None] * t1r[...][None, :] - t0i[...][:, None] * t1i[...][None, :]
+    w01i = t0r[...][:, None] * t1i[...][None, :] + t0i[...][:, None] * t1r[...][None, :]
+    wr = w01r[:, :, None] * t2r[...][None, None, :] - w01i[:, :, None] * t2i[...][None, None, :]
+    wi = w01r[:, :, None] * t2i[...][None, None, :] + w01i[:, :, None] * t2r[...][None, None, :]
+    a, b = xr[...], xi[...]
+    or_[...] = a * wr - b * wi
+    oi_[...] = a * wi + b * wr
+
+
+@functools.lru_cache(maxsize=None)
+def _build(shape: tuple, tile0: int):
+    d = len(shape)
+    if d not in (1, 2, 3):
+        return None
+    kern = {1: _kernel_1d, 2: _kernel_2d, 3: _kernel_3d}[d]
+    n0 = shape[0]
+    grid = (n0 // tile0,)
+    tile_shape = (tile0,) + tuple(shape[1:])
+    zeros = (0,) * (d - 1)
+    arr_spec = pl.BlockSpec(tile_shape, lambda i: (i,) + zeros)
+    # Axis-0 table is tiled with the array; other tables are broadcast.
+    t0_spec = pl.BlockSpec((tile0,), lambda i: (i,))
+    in_specs = [arr_spec, arr_spec, t0_spec, t0_spec]
+    for l in range(1, d):
+        tl_spec = pl.BlockSpec((shape[l],), lambda i: (0,))
+        in_specs += [tl_spec, tl_spec]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[arr_spec, arr_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(shape, jnp.float32),
+            jax.ShapeDtypeStruct(shape, jnp.float32),
+        ],
+        interpret=True,
+    )
+
+
+def twiddle_apply(x_re, x_im, tables_re, tables_im, *, conj: bool = False, tile0: int | None = None):
+    """Elementwise multiply by the separable twiddle tensor.
+
+    ``tables_re/im[l]`` are the per-axis vectors of length ``shape[l]``.
+    ``conj=True`` applies the inverse-transform weights.
+    """
+    shape = tuple(x_re.shape)
+    d = len(shape)
+    t_im = [(-t if conj else t) for t in tables_im]
+    if tile0 is None:
+        rest = 1
+        for s in shape[1:]:
+            rest *= s
+        tile0 = max(1, min(shape[0], (1 << 16) // max(rest, 1)))
+        while shape[0] % tile0 != 0:
+            tile0 -= 1
+    f = _build(shape, tile0)
+    if f is None:
+        # d > 3: jnp fallback (see module docstring).
+        return ref.twiddle_apply(x_re, x_im, tables_re, t_im, conj=False)
+    args = [x_re, x_im]
+    for l in range(d):
+        args += [tables_re[l], t_im[l]]
+    out = f(*args)
+    return tuple(out)

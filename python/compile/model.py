@@ -1,0 +1,107 @@
+"""L2: the FFTU superstep computations as JAX functions (build-time only).
+
+Each function here is one *local* computation of Algorithm 2.3, written
+over split re/im float32 arrays (the `xla` crate has no C64 literal type)
+and AOT-lowered by ``aot.py`` to HLO text that the Rust coordinator loads
+via PJRT.
+
+  superstep0: local fftn  ∘  fused twiddle (Pallas)  ∘  pack reshape
+              -> per-destination packets, ready for the all-to-all.
+  superstep2: strided F_{p_1} (x) ... (x) F_{p_d} of W^{(s)}.
+
+The twiddle tables are runtime *inputs* (they depend on the processor
+coordinates s), so a single lowered module serves every rank — the same
+SPMD property the paper's MPI program has.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import twiddle as twiddle_kernel
+
+
+def _to_complex(re, im):
+    return (re + 1j * im).astype(jnp.complex64)
+
+
+def _from_complex(x):
+    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+
+
+def pack_reshape(z, pgrid):
+    """Packing permutation of Alg. 3.1 as reshapes/transposes.
+
+    Input: local array ``z`` of shape ``(n_1/p_1, ..., n_d/p_d)``.
+    Output: ``(p, packet_len)`` — row r is the packet for destination
+    rank r (row-major over the processor grid), containing the strided
+    subarray ``z(k : p : n/p)`` in row-major packet order (Alg. 2.3
+    line 5).
+    """
+    d = z.ndim
+    local = z.shape
+    # Split each axis t_l = j_l * p_l + k_l -> (j_l, k_l).
+    split = []
+    for l in range(d):
+        split += [local[l] // pgrid[l], pgrid[l]]
+    z = z.reshape(split)
+    # Order axes: (k_1..k_d, j_1..j_d): receiver coords first.
+    perm = [2 * l + 1 for l in range(d)] + [2 * l for l in range(d)]
+    z = jnp.transpose(z, perm)
+    p = int(np.prod(pgrid))
+    return z.reshape(p, -1)
+
+
+def superstep0(x_re, x_im, tables, pgrid, *, inverse: bool = False):
+    """Local fftn + fused twiddle (Pallas kernel) + pack.
+
+    ``tables`` is a flat list [t0_re, t0_im, t1_re, t1_im, ...] of the
+    per-axis twiddle vectors (Eq. 3.1). Returns (packets_re, packets_im)
+    of shape (p, packet_len).
+    """
+    x = _to_complex(x_re, x_im)
+    if inverse:
+        y = jnp.conj(jnp.fft.fftn(jnp.conj(x)))
+    else:
+        y = jnp.fft.fftn(x)
+    y_re, y_im = _from_complex(y)
+    d = x.ndim
+    t_re = [tables[2 * l] for l in range(d)]
+    t_im = [tables[2 * l + 1] for l in range(d)]
+    z_re, z_im = twiddle_kernel.twiddle_apply(y_re, y_im, t_re, t_im, conj=inverse)
+    return pack_reshape(z_re, pgrid), pack_reshape(z_im, pgrid)
+
+
+def superstep2(w_re, w_im, shape, pgrid, *, inverse: bool = False):
+    """Strided tensor transform of Alg. 2.3 line 7.
+
+    The local axis l of extent ``n_l/p_l`` is viewed as
+    ``(c_l, t_l) = (p_l, n_l/p_l^2)``; the DFT runs over the c axes.
+    """
+    w = _to_complex(w_re, w_im)
+    d = w.ndim
+    split = []
+    for l in range(d):
+        per = shape[l] // (pgrid[l] * pgrid[l])
+        split += [pgrid[l], per]
+    v = w.reshape(split)
+    fft_axes = tuple(2 * l for l in range(d) if pgrid[l] > 1)
+    if fft_axes:
+        if inverse:
+            v = jnp.conj(jnp.fft.fftn(jnp.conj(v), axes=fft_axes))
+        else:
+            v = jnp.fft.fftn(v, axes=fft_axes)
+    v = v.reshape(w.shape)
+    return _from_complex(v)
+
+
+def local_fftn(x_re, x_im, *, inverse: bool = False):
+    """Plain local multidimensional FFT (engine parity tests, and the
+    p = 1 degenerate configuration)."""
+    x = _to_complex(x_re, x_im)
+    if inverse:
+        y = jnp.conj(jnp.fft.fftn(jnp.conj(x)))
+    else:
+        y = jnp.fft.fftn(x)
+    return _from_complex(y)

@@ -1,0 +1,6 @@
+# Make `compile.*` importable whether pytest runs from the repo root
+# (`pytest python/tests/`) or from within python/ (`pytest tests/`).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,121 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; assert_allclose against ref.py. This is the
+CORE correctness signal for the kernels that end up inside the AOT
+artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref, stockham, twiddle
+
+RNG = np.random.default_rng(0xF0)
+
+
+def rand_pair(shape):
+    return (
+        RNG.standard_normal(shape).astype(np.float32),
+        RNG.standard_normal(shape).astype(np.float32),
+    )
+
+
+class TestStockham:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        log_n=st.integers(min_value=1, max_value=8),
+        batch=st.integers(min_value=1, max_value=12),
+        inverse=st.booleans(),
+    )
+    def test_matches_reference(self, log_n, batch, inverse):
+        n = 1 << log_n
+        xr, xi = rand_pair((batch, n))
+        gr, gi = stockham.stockham_fft(jnp.asarray(xr), jnp.asarray(xi), inverse=inverse)
+        wr, wi = ref.fft1d_batched(xr, xi, inverse=inverse)
+        assert_allclose(np.asarray(gr), np.asarray(wr), atol=2e-4 * n, rtol=1e-4)
+        assert_allclose(np.asarray(gi), np.asarray(wi), atol=2e-4 * n, rtol=1e-4)
+
+    def test_explicit_tile_sizes(self):
+        xr, xi = rand_pair((8, 32))
+        base = stockham.stockham_fft(jnp.asarray(xr), jnp.asarray(xi))
+        for tb in (1, 2, 4, 8):
+            got = stockham.stockham_fft(jnp.asarray(xr), jnp.asarray(xi), tile_b=tb)
+            assert_allclose(np.asarray(got[0]), np.asarray(base[0]), atol=1e-5)
+            assert_allclose(np.asarray(got[1]), np.asarray(base[1]), atol=1e-5)
+
+    def test_rejects_non_power_of_two(self):
+        xr, xi = rand_pair((2, 12))
+        with pytest.raises(ValueError):
+            stockham.stockham_fft(jnp.asarray(xr), jnp.asarray(xi))
+
+    def test_roundtrip(self):
+        xr, xi = rand_pair((4, 64))
+        fr, fi = stockham.stockham_fft(jnp.asarray(xr), jnp.asarray(xi))
+        br, bi = stockham.stockham_fft(fr, fi, inverse=True)
+        assert_allclose(np.asarray(br) / 64.0, xr, atol=1e-4)
+        assert_allclose(np.asarray(bi) / 64.0, xi, atol=1e-4)
+
+    def test_delta_gives_constant(self):
+        n = 16
+        xr = np.zeros((1, n), np.float32)
+        xr[0, 0] = 1.0
+        xi = np.zeros((1, n), np.float32)
+        gr, gi = stockham.stockham_fft(jnp.asarray(xr), jnp.asarray(xi))
+        assert_allclose(np.asarray(gr), np.ones((1, n), np.float32), atol=1e-6)
+        assert_allclose(np.asarray(gi), np.zeros((1, n), np.float32), atol=1e-6)
+
+    def test_vmem_footprint_estimate(self):
+        # The default tile must stay under 16 MiB VMEM.
+        for n in (64, 1024, 8192):
+            tb = max(1, (1 << 17) // n)
+            assert stockham.vmem_footprint_bytes(tb, n) <= 16 << 20
+
+
+def tables_for(shape, pgrid, s):
+    gshape = tuple(n * p for n, p in zip(shape, pgrid))
+    tabs = ref.twiddle_tables(gshape, pgrid, s)
+    tr = [jnp.asarray(np.real(t)) for t in tabs]
+    ti = [jnp.asarray(np.imag(t)) for t in tabs]
+    return tr, ti
+
+
+class TestTwiddle:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        d=st.integers(min_value=1, max_value=3),
+        data=st.data(),
+        conj=st.booleans(),
+    )
+    def test_matches_reference(self, d, data, conj):
+        shape = tuple(data.draw(st.sampled_from([2, 3, 4, 6, 8])) for _ in range(d))
+        pgrid = tuple(data.draw(st.sampled_from([1, 2, 3])) for _ in range(d))
+        s = tuple(data.draw(st.integers(min_value=0, max_value=p - 1)) for p in pgrid)
+        tr, ti = tables_for(shape, pgrid, s)
+        xr, xi = rand_pair(shape)
+        gr, gi = twiddle.twiddle_apply(jnp.asarray(xr), jnp.asarray(xi), tr, ti, conj=conj)
+        ti_ref = [(-t if conj else t) for t in ti]
+        wr, wi = ref.twiddle_apply(xr, xi, tr, ti_ref)
+        assert_allclose(np.asarray(gr), np.asarray(wr), atol=1e-5)
+        assert_allclose(np.asarray(gi), np.asarray(wi), atol=1e-5)
+
+    def test_4d_falls_back_to_jnp(self):
+        shape = (2, 2, 2, 2)
+        pgrid = (2, 1, 2, 1)
+        tr, ti = tables_for(shape, pgrid, (1, 0, 1, 0))
+        xr, xi = rand_pair(shape)
+        gr, gi = twiddle.twiddle_apply(jnp.asarray(xr), jnp.asarray(xi), tr, ti)
+        wr, wi = ref.twiddle_apply(xr, xi, tr, ti)
+        assert_allclose(np.asarray(gr), np.asarray(wr), atol=1e-5)
+        assert_allclose(np.asarray(gi), np.asarray(wi), atol=1e-5)
+
+    def test_zero_rank_twiddle_is_identity(self):
+        # s = 0 on all axes: all weights are 1.
+        shape, pgrid = (4, 8), (2, 2)
+        tr, ti = tables_for(shape, pgrid, (0, 0))
+        xr, xi = rand_pair(shape)
+        gr, gi = twiddle.twiddle_apply(jnp.asarray(xr), jnp.asarray(xi), tr, ti)
+        assert_allclose(np.asarray(gr), xr, atol=1e-6)
+        assert_allclose(np.asarray(gi), xi, atol=1e-6)

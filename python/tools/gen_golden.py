@@ -1,0 +1,35 @@
+"""Regenerate the numpy golden vectors in rust/tests/data/.
+
+Run from the repo root:  python python/tools/gen_golden.py
+Keep the seed fixed — the goldens are committed and the Rust tests
+compare against them bit-for-bit (well, to 1e-12 relative).
+"""
+
+import numpy as np
+
+CASES = [
+    ("c1d_16", (16,)),
+    ("c1d_60", (60,)),
+    ("c1d_101", (101,)),  # prime -> Bluestein path
+    ("c2d_8x12", (8, 12)),
+    ("c3d_4x6x10", (4, 6, 10)),
+]
+
+
+def main() -> None:
+    rng = np.random.default_rng(0x601D)
+    for name, shape in CASES:
+        n = int(np.prod(shape))
+        x = (rng.standard_normal(n) + 1j * rng.standard_normal(n)).astype(np.complex128)
+        y = np.fft.fftn(x.reshape(shape)).reshape(-1)
+        with open(f"rust/tests/data/{name}.txt", "w") as f:
+            f.write(" ".join(map(str, shape)) + "\n")
+            for v in x:
+                f.write(f"{v.real:.17e} {v.imag:.17e}\n")
+            for v in y:
+                f.write(f"{v.real:.17e} {v.imag:.17e}\n")
+        print(name)
+
+
+if __name__ == "__main__":
+    main()

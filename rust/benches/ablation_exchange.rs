@@ -1,0 +1,80 @@
+//! Bench E-pack: packet-placement ablation, mirroring §3's two MPI
+//! strategies (MPI_Alltoall + manual local unpacking vs MPI_Alltoallv
+//! with derived datatypes that place data directly).
+//!
+//! In the shared-memory runtime the analogue is the receive side:
+//! (a) run-copy unpack — contiguous runs of the packet block are
+//!     memcpy'd into W (our default, the "derived datatype" analogue);
+//! (b) element-scatter unpack — every element is placed individually
+//!     (the naive manual unpacking).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fftu::dist::unravel;
+use fftu::fft::{C64, Planner};
+use fftu::fftu::{pack_twiddle, unpack, FftuPlan, TwiddleTables};
+use fftu::Direction;
+
+/// Naive element-by-element unpack (variant b).
+fn unpack_scatter(plan: &FftuPlan, incoming: &[Vec<C64>], w: &mut [C64]) {
+    let d = plan.shape.len();
+    for (src, packet) in incoming.iter().enumerate() {
+        let sc = plan.dist.proc_coords(src);
+        for (off, &v) in packet.iter().enumerate() {
+            let j = unravel(off, &plan.packet_shape);
+            let mut woff = 0;
+            for l in 0..d {
+                woff = woff * plan.local_shape[l] + sc[l] * plan.packet_shape[l] + j[l];
+            }
+            w[woff] = v;
+        }
+    }
+}
+
+fn main() {
+    println!("## E-pack: unpack strategy ablation (§3 alltoall vs alltoallv analogue)\n");
+    println!("| config | run-copy (ms) | element-scatter (ms) | speedup |");
+    println!("|---|---|---|---|");
+    let planner = Planner::new();
+    for (shape, grid) in [
+        (vec![256usize, 256], vec![4usize, 4]),
+        (vec![128, 128, 64], vec![2, 2, 2]),
+        (vec![64, 64, 64], vec![4, 4, 4]),
+        (vec![1 << 16, 64], vec![16, 4]),
+    ] {
+        let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner).unwrap());
+        let tables = TwiddleTables::new(&plan, &plan.dist.proc_coords(0));
+        let nl = plan.local_len();
+        let local: Vec<C64> =
+            (0..nl).map(|i| C64::new((i % 9) as f64, -((i % 3) as f64))).collect();
+        let mut packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+        pack_twiddle(&plan, &tables, &local, &mut packets, Direction::Forward);
+        let mut w1 = vec![C64::ZERO; nl];
+        let mut w2 = vec![C64::ZERO; nl];
+        let reps = (1 << 22) / nl + 1;
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            unpack(&plan, &packets, &mut w1);
+            std::hint::black_box(&w1);
+        }
+        let runs = t0.elapsed().as_secs_f64() / reps as f64;
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            unpack_scatter(&plan, &packets, &mut w2);
+            std::hint::black_box(&w2);
+        }
+        let scatter = t0.elapsed().as_secs_f64() / reps as f64;
+        assert_eq!(w1, w2, "the two unpack strategies must agree");
+        println!(
+            "| {:?}/{:?} | {:.3} | {:.3} | {:.2}x |",
+            shape,
+            grid,
+            runs * 1e3,
+            scatter * 1e3,
+            scatter / runs
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Bench E-twiddle: ablation of Algorithm 3.1's fusion.
+//!
+//! §3: "We combine the packing with the twiddling to minimize the
+//! consumption of CPU-RAM bandwidth." This bench measures the fused
+//! pack+twiddle against the unfused alternative (a twiddle pass over
+//! the local array followed by a separate packing pass), on local
+//! volumes where the working set exceeds cache — the regime where the
+//! paper's argument applies.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fftu::fft::{C64, Planner};
+use fftu::fftu::{pack_twiddle, FftuPlan, TwiddleTables};
+use fftu::Direction;
+
+/// Unfused variant: twiddle pass, then pure packing pass.
+fn twiddle_then_pack(
+    plan: &FftuPlan,
+    tables: &TwiddleTables,
+    local: &mut [C64],
+    packets: &mut [Vec<C64>],
+) {
+    // Pass 1: twiddle in place (separable weights, one row at a time).
+    let d = plan.shape.len();
+    let inner = plan.local_shape[d - 1];
+    let rows = local.len() / inner;
+    for row in 0..rows {
+        // Rebuild the prefix factor for this row.
+        let mut idx = row;
+        let mut factor = C64::ONE;
+        for l in (0..d - 1).rev() {
+            let t = idx % plan.local_shape[l];
+            idx /= plan.local_shape[l];
+            factor *= tables.per_axis[l][t];
+        }
+        let base = row * inner;
+        for (t, v) in local[base..base + inner].iter_mut().enumerate() {
+            *v = *v * (factor * tables.per_axis[d - 1][t]);
+        }
+    }
+    // Pass 2: pack (zero twiddle tables would make pack_twiddle do this,
+    // but write it directly to avoid charging the fused path's factor
+    // multiplications).
+    let pgrid = &plan.pgrid;
+    let pshape = &plan.packet_shape;
+    for (flat, &v) in local.iter().enumerate() {
+        let mut idx = flat;
+        let mut r = 0usize;
+        let mut o = 0usize;
+        // Decompose flat row-major index into t_l, building receiver and
+        // offset as in Alg. 3.1.
+        let mut coords = [0usize; 8];
+        for l in (0..d).rev() {
+            coords[l] = idx % plan.local_shape[l];
+            idx /= plan.local_shape[l];
+        }
+        for l in 0..d {
+            r = r * pgrid[l] + coords[l] % pgrid[l];
+            o = o * pshape[l] + coords[l] / pgrid[l];
+        }
+        packets[r][o] = v;
+    }
+}
+
+fn main() {
+    println!("## E-twiddle: fused pack+twiddle (Alg 3.1) vs separate passes\n");
+    println!("| local volume | fused (ms) | unfused (ms) | fused speedup |");
+    println!("|---|---|---|---|");
+    let planner = Planner::new();
+    for (shape, grid) in [
+        (vec![256usize, 256], vec![2usize, 2]),
+        (vec![1024, 512], vec![2, 2]),
+        (vec![128, 128, 64], vec![2, 2, 2]),
+        (vec![1 << 18, 16], vec![4, 2]), // table 4.3's high-aspect regime
+    ] {
+        let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner).unwrap());
+        let tables = TwiddleTables::new(&plan, &plan.dist.proc_coords(1));
+        let nl = plan.local_len();
+        let local: Vec<C64> =
+            (0..nl).map(|i| C64::new((i % 9) as f64, (i % 4) as f64)).collect();
+        let mut packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+        let reps = (1 << 22) / nl + 1;
+
+        let mut work = local.clone();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            pack_twiddle(&plan, &tables, &work, &mut packets, Direction::Forward);
+            std::hint::black_box(&packets);
+        }
+        let fused = t0.elapsed().as_secs_f64() / reps as f64;
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            work.copy_from_slice(&local);
+            twiddle_then_pack(&plan, &tables, &mut work, &mut packets);
+            std::hint::black_box(&packets);
+        }
+        let unfused = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "| {:?} local {} | {:.3} | {:.3} | {:.2}x |",
+            shape,
+            nl,
+            fused * 1e3,
+            unfused * 1e3,
+            unfused / fused
+        );
+    }
+    println!("\n(The unfused variant includes the extra copy_from_slice to preserve");
+    println!(" the input, mirroring the extra RAM pass the paper's argument counts.)");
+}

@@ -1,0 +1,64 @@
+//! Design-choice ablation: processor-grid shape for a fixed p.
+//!
+//! `choose_grid` balances p_l so packets stay as cubic as possible
+//! (DESIGN.md: "the same balancing PFFT does"). This bench compares the
+//! balanced grid against skewed alternatives with the same p on (a) the
+//! exchange h-relation (identical — FFTU always moves N/p(1-1/p)) and
+//! (b) the real pack+twiddle + superstep-2 cost, which *does* depend on
+//! packet shape through twiddle-table sizes and stride patterns.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fftu::fft::{C64, Planner};
+use fftu::fftu::{choose_grid, pack_twiddle, FftuPlan, TwiddleTables};
+use fftu::Direction;
+
+fn pack_time(plan: &Arc<FftuPlan>) -> f64 {
+    let tables = TwiddleTables::new(plan, &plan.dist.proc_coords(plan.num_procs() - 1));
+    let nl = plan.local_len();
+    let local: Vec<C64> = (0..nl).map(|i| C64::new((i % 7) as f64, 0.5)).collect();
+    let mut packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+    let reps = ((1 << 22) / nl).max(1);
+    pack_twiddle(plan, &tables, &local, &mut packets, Direction::Forward);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        pack_twiddle(plan, &tables, &local, &mut packets, Direction::Forward);
+        std::hint::black_box(&packets);
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    println!("## E-grid: processor-grid shape ablation (fixed p, FFTU)\n");
+    println!("| shape | grid | packet shape | twiddle words | pack+twiddle (ms) |");
+    println!("|---|---|---|---|---|");
+    let planner = Planner::new();
+    let shape = vec![256usize, 256, 64];
+    let p = 16usize;
+    let mut grids: Vec<Vec<usize>> = vec![
+        choose_grid(&shape, p).unwrap(), // balanced
+        vec![16, 1, 1],                  // all on the largest axis
+        vec![4, 4, 1],
+        vec![2, 2, 4],
+        vec![1, 16, 1],
+    ];
+    grids.dedup();
+    for grid in grids {
+        let Ok(plan) = FftuPlan::new(&shape, &grid, &planner) else {
+            println!("| {shape:?} | {grid:?} | (invalid: p_l^2 does not divide n_l) | - | - |");
+            continue;
+        };
+        let plan = Arc::new(plan);
+        let tw_words: usize = shape.iter().zip(&grid).map(|(&n, &q)| n / q).sum();
+        let t = pack_time(&plan);
+        println!(
+            "| {shape:?} | {grid:?} | {:?} | {tw_words} | {:.3} |",
+            plan.packet_shape,
+            t * 1e3,
+        );
+    }
+    println!("\n(The h-relation is grid-independent for FFTU — N/p (1 - 1/p) words");
+    println!(" regardless — so grid choice is purely a local-bandwidth concern,");
+    println!(" unlike slab/pencil where it moves the p_max ceiling.)");
+}

@@ -1,0 +1,136 @@
+//! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md
+//! §Perf): sequential FFT throughput, pack+twiddle bandwidth, BSP
+//! exchange overhead, and the superstep-2 strided transforms.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fftu::bsp::run_spmd;
+use fftu::fft::{C64, Plan, Planner};
+use fftu::fftu::{pack_twiddle, FftuPlan, TwiddleTables, Worker};
+use fftu::Direction;
+
+fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f(); // warm
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    println!("## hotpath microbenchmarks\n");
+
+    // 1. Sequential 1D FFT throughput across sizes.
+    println!("| 1D FFT n | time (us) | model Gflop/s |");
+    println!("|---|---|---|");
+    for logn in [8usize, 10, 12, 14, 16, 20] {
+        let n = 1 << logn;
+        let plan = Plan::new(n);
+        let mut data: Vec<C64> =
+            (0..n).map(|i| C64::new((i % 7) as f64, (i % 3) as f64)).collect();
+        let mut scratch = vec![C64::ZERO; plan.scratch_len(n)];
+        let reps = ((1 << 22) / n).max(1);
+        let t = bench(reps, || {
+            plan.execute(&mut data, &mut scratch, Direction::Forward);
+            std::hint::black_box(&data);
+        });
+        println!(
+            "| 2^{logn} | {:.1} | {:.2} |",
+            t * 1e6,
+            5.0 * n as f64 * logn as f64 / t / 1e9
+        );
+    }
+
+    // 2. Batched 3D local FFT (superstep 0's local volume).
+    let shape = [64usize, 64, 64];
+    let planner = Planner::new();
+    let nd = fftu::fft::NdPlan::new(&shape, &planner);
+    let n: usize = shape.iter().product();
+    let mut data: Vec<C64> = (0..n).map(|i| C64::new((i % 5) as f64, 0.25)).collect();
+    let mut scratch = vec![C64::ZERO; nd.scratch_len()];
+    let t = bench(3, || {
+        nd.execute(&mut data, &mut scratch, Direction::Forward);
+        std::hint::black_box(&data);
+    });
+    println!(
+        "\n64^3 fftn: {:.2} ms ({:.2} Gflop/s model rate)",
+        t * 1e3,
+        nd.model_flops() / t / 1e9
+    );
+
+    // 3. pack+twiddle bandwidth (Alg 3.1).
+    println!("\n| pack+twiddle local | time (ms) | GB/s (rw) |");
+    println!("|---|---|---|");
+    for (shape, grid) in [
+        (vec![256usize, 256], vec![2usize, 2]),
+        (vec![64, 64, 64], vec![2, 2, 2]),
+        (vec![1 << 18, 16], vec![4, 2]),
+    ] {
+        let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner).unwrap());
+        let tables = TwiddleTables::new(&plan, &plan.dist.proc_coords(1));
+        let nl = plan.local_len();
+        let local: Vec<C64> = (0..nl).map(|i| C64::new(i as f64, 1.0)).collect();
+        let mut packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+        let reps = ((1 << 22) / nl).max(1);
+        let t = bench(reps, || {
+            pack_twiddle(&plan, &tables, &local, &mut packets, Direction::Forward);
+            std::hint::black_box(&packets);
+        });
+        println!(
+            "| {:?} ({} elems) | {:.3} | {:.2} |",
+            shape,
+            nl,
+            t * 1e3,
+            (2 * nl * 16) as f64 / t / 1e9
+        );
+    }
+
+    // 4. Full FFTU transform wall-clock on the threaded runtime.
+    println!("\n| FFTU shape/grid | wall per transform (ms) |");
+    println!("|---|---|");
+    for (shape, grid) in [
+        (vec![64usize, 64, 64], vec![2usize, 2, 2]),
+        (vec![128, 128], vec![4, 4]),
+    ] {
+        let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner).unwrap());
+        let n: usize = shape.iter().product();
+        let global: Vec<C64> = (0..n).map(|i| C64::new((i % 11) as f64, 0.5)).collect();
+        let locals = plan.dist.scatter(&global);
+        let reps = 5;
+        let outcome = run_spmd(plan.num_procs(), |ctx| {
+            let mut worker = Worker::new(plan.clone(), ctx.rank());
+            let mut local = locals[ctx.rank()].clone();
+            ctx.barrier();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                worker.execute(ctx, &mut local, Direction::Forward);
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        });
+        let wall = outcome.outputs.iter().cloned().fold(0.0f64, f64::max);
+        println!("| {shape:?}/{grid:?} | {:.3} |", wall * 1e3);
+    }
+
+    // 5. Exchange-only overhead (empty compute).
+    let p = 4;
+    let words = 1 << 16;
+    let outcome = run_spmd(p, |ctx| {
+        let reps = 20;
+        ctx.barrier();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let out: Vec<Vec<C64>> = (0..p).map(|_| vec![C64::ONE; words / p]).collect();
+            let inc = ctx.exchange("bench", out);
+            std::hint::black_box(&inc);
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    });
+    let wall = outcome.outputs.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "\nexchange p={p}, {words} words total: {:.1} us ({:.2} GB/s)",
+        wall * 1e6,
+        (words * 16) as f64 / wall / 1e9
+    );
+}

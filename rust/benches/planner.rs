@@ -1,0 +1,61 @@
+//! Bench E-plan: plan rigor, mirroring the paper's §4.1 anecdote about
+//! FFTW_ESTIMATE / FFTW_MEASURE / FFTW_PATIENT (2.331 / 0.176 / 0.170 s
+//! execution with 0.03 / 2.7 / 239 s setup on a 256^3 array).
+//!
+//! Our planner has Estimate (default radix order) and Measure (times
+//! candidate radix orders). The point being reproduced: better planning
+//! costs setup time and buys execution time, with diminishing returns —
+//! which is why FFTU (like the paper) uses the MEASURE-class rigor.
+
+use std::time::Instant;
+
+use fftu::fft::{C64, NdPlan, Plan, PlanRigor, Planner};
+use fftu::Direction;
+
+fn time_plan(n: usize, rigor: PlanRigor, reps: usize) -> (f64, f64) {
+    let t0 = Instant::now();
+    let plan = Plan::with_rigor(n, rigor);
+    let setup = t0.elapsed().as_secs_f64();
+    let mut data: Vec<C64> =
+        (0..n).map(|i| C64::new((i % 13) as f64, (i % 7) as f64)).collect();
+    let mut scratch = vec![C64::ZERO; plan.scratch_len(n)];
+    plan.execute(&mut data, &mut scratch, Direction::Forward); // warm
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        plan.execute(&mut data, &mut scratch, Direction::Forward);
+        std::hint::black_box(&data);
+    }
+    (setup, t0.elapsed().as_secs_f64() / reps as f64)
+}
+
+fn main() {
+    println!("## E-plan: planner rigor (paper §4.1 FFTW flags analogue)\n");
+    println!("| n | rigor | setup (s) | exec (s) |");
+    println!("|---|-------|-----------|----------|");
+    for n in [1usize << 16, 1 << 18, 1 << 20] {
+        for (name, rigor) in [("Estimate", PlanRigor::Estimate), ("Measure", PlanRigor::Measure)] {
+            let (setup, exec) = time_plan(n, rigor, 5);
+            println!("| 2^{} | {name} | {setup:.4} | {exec:.5} |", n.trailing_zeros());
+        }
+    }
+    // 3D planning path used by FFTU superstep 0 on a 256^3-class local
+    // volume (the paper's test size, scaled to this host's memory).
+    let shape = [128usize, 128, 128];
+    let planner = Planner::new();
+    let t0 = Instant::now();
+    let nd = NdPlan::new(&shape, &planner);
+    let setup = t0.elapsed().as_secs_f64();
+    let n: usize = shape.iter().product();
+    let mut data: Vec<C64> = (0..n).map(|i| C64::new((i % 11) as f64, 0.3)).collect();
+    let mut scratch = vec![C64::ZERO; nd.scratch_len()];
+    nd.execute(&mut data, &mut scratch, Direction::Forward);
+    let t0 = Instant::now();
+    let reps = 3;
+    for _ in 0..reps {
+        nd.execute(&mut data, &mut scratch, Direction::Forward);
+        std::hint::black_box(&data);
+    }
+    let exec = t0.elapsed().as_secs_f64() / reps as f64;
+    let rate = 5.0 * n as f64 * (n as f64).log2() / exec / 1e9;
+    println!("\n128^3 fftn: setup {setup:.4} s, exec {exec:.4} s ({rate:.2} Gflop/s model rate)");
+}

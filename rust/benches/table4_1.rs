@@ -1,0 +1,35 @@
+//! Bench T4.1: regenerate Table 4.1 (1024^3 c2c FFT, FFTU vs PFFT vs
+//! FFTW vs heFFTe, p = 1..4096).
+//!
+//! Prints (a) the paper-scale table from the calibrated cost model over
+//! the validated analytic ledgers, and (b) an executed scaled-down run
+//! (64^3) on the BSP runtime. See EXPERIMENTS.md §T4.1.
+
+use fftu::report::{self, tables::fitted_machine};
+
+fn main() {
+    let machine = fitted_machine(1);
+    println!("machine: {machine:?}\n");
+    println!("{}", report::table_4_1_model(&machine).render());
+    println!("{}", report::comm_steps_table(&[1024, 1024, 1024], 4096).render());
+    println!(
+        "{}",
+        report::table_executed(
+            "Table 4.1 (executed, scaled): 64^3 on the BSP runtime (single-core testbed: wall-clock validates work, not scaling)",
+            &[64, 64, 64],
+            &[1, 2, 4, 8],
+            2,
+        )
+        .render()
+    );
+    // Headline check: model speedup at p = 4096 vs the paper's 149x.
+    let shape = [1024usize, 1024, 1024];
+    let n: f64 = (1u64 << 30) as f64;
+    let seq = 5.0 * n * 30.0 / machine.r_flops;
+    let t = machine.predict(&fftu::costmodel::fftu_report(&shape, 4096), 4096);
+    let tflops = 5.0 * n * 30.0 / t / 1e12;
+    println!(
+        "headline: FFTU model speedup at p=4096 = {:.1}x (paper: 149x); top rate {tflops:.3} Tflop/s (paper: 0.946)",
+        seq / t
+    );
+}

@@ -1,0 +1,26 @@
+//! Bench T4.2: regenerate Table 4.2 (64^5, FFTU vs PFFT vs FFTW).
+//! See EXPERIMENTS.md §T4.2.
+
+use fftu::report::{self, tables::fitted_machine};
+
+fn main() {
+    let machine = fitted_machine(2);
+    println!("machine: {machine:?}\n");
+    println!("{}", report::table_4_2_model(&machine).render());
+    println!("{}", report::comm_steps_table(&[64, 64, 64, 64, 64], 4096).render());
+    println!(
+        "{}",
+        report::table_executed(
+            "Table 4.2 (executed, scaled): 16^5 on the BSP runtime",
+            &[16, 16, 16, 16, 16],
+            &[1, 2, 4, 8],
+            2,
+        )
+        .render()
+    );
+    let shape = [64usize; 5];
+    let n: f64 = shape.iter().map(|&x| x as f64).product();
+    let seq = 5.0 * n * n.log2() / machine.r_flops;
+    let t = machine.predict(&fftu::costmodel::fftu_report(&shape, 4096), 4096);
+    println!("headline: FFTU model speedup at p=4096 = {:.1}x (paper: 176x)", seq / t);
+}

@@ -1,0 +1,37 @@
+//! Bench T4.3: regenerate Table 4.3 (16,777,216 x 64 high-aspect array,
+//! FFTU vs FFTW; PFFT crashed on this input in the paper).
+//! Also reproduces the §4.2 twiddle-table observation: for this shape
+//! the twiddle table is sum(n_l/p_l) words, too large for cache.
+//! See EXPERIMENTS.md §T4.3.
+
+use fftu::report::{self, tables::fitted_machine};
+
+fn main() {
+    let machine = fitted_machine(3);
+    println!("machine: {machine:?}\n");
+    println!("{}", report::table_4_3_model(&machine).render());
+    println!("{}", report::comm_steps_table(&[1 << 24, 64], 4096).render());
+    println!(
+        "{}",
+        report::table_executed(
+            "Table 4.3 (executed, scaled): 2^18 x 16 on the BSP runtime",
+            &[1 << 18, 16],
+            &[1, 2, 4, 8],
+            2,
+        )
+        .render()
+    );
+    // Twiddle-table size comparison (Eq. 3.1): the cache argument of §4.2.
+    for (name, shape, grid) in [
+        ("1024^3 @p=64", vec![1024usize, 1024, 1024], vec![4usize, 4, 4]),
+        ("2^24x64 @p=64", vec![1 << 24, 64], vec![32usize, 2]),
+        ("2^24x64 @p=4096", vec![1 << 24, 64], vec![1 << 9, 8]),
+    ] {
+        let words: usize = shape.iter().zip(&grid).map(|(&n, &p)| n / p).sum();
+        println!(
+            "twiddle table for {name}: {words} words = {} KiB {}",
+            words * 16 / 1024,
+            if words * 16 > 512 * 1024 { "(exceeds the 512 KiB Rome L2 -> the §4.2 slowdown)" } else { "(fits in cache)" }
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! heFFTe-style brick-to-brick pipeline (§1.2).
+//!
+//! heFFTe's input and output are d-dimensional blocks ("bricks"); it
+//! internally reshapes to pencil distributions by *tensor transpositions*
+//! (its name for the all-to-all), transforms one axis per pencil
+//! orientation, and reshapes back to bricks on output. For a 3D array
+//! this is the brick -> pencil-z -> pencil-y -> pencil-x -> brick
+//! pipeline of the heFFTe paper, with d + 1 communication steps.
+
+use std::sync::Arc;
+
+use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
+use crate::dist::{GridDist, RedistPlan};
+use crate::fft::ndfft::transform_axis;
+use crate::fft::{C64, Direction, Plan, Planner};
+
+use super::pencil::fit_grid;
+
+/// heFFTe is bound by its pencil stages exactly like PFFT with r = d-1
+/// processors axes available per stage; in practice its brick grid bounds
+/// p by `prod_l n_l / 2^d`-ish, but the pencil stages are the binding
+/// constraint we model: p must fit on d-1 axes at every stage.
+pub fn heffte_pmax(shape: &[usize]) -> usize {
+    let d = shape.len();
+    // Worst stage: processors sit on all axes except the transformed
+    // one; the binding stage excludes the largest axis.
+    let total: usize = shape.iter().product();
+    let max_axis = *shape.iter().max().unwrap();
+    let _ = d;
+    total / max_axis
+}
+
+/// The heFFTe pipeline's distribution chain: brick, one pencil per axis
+/// (last axis first), brick again. Shared by the executor and the
+/// analytic cost model.
+pub fn heffte_schedule(
+    shape: &[usize],
+    p: usize,
+) -> Result<(Vec<GridDist>, Vec<usize>), String> {
+    let d = shape.len();
+    let all_axes: Vec<usize> = (0..d).collect();
+    let brick_grid = fit_grid(shape, &all_axes, p)
+        .ok_or_else(|| format!("cannot build a {p}-processor brick grid for {shape:?}"))?;
+    let dist_brick = GridDist::blocks(shape, &brick_grid)?;
+    let mut dists: Vec<GridDist> = vec![dist_brick.clone()];
+    let mut stage_axis: Vec<usize> = Vec::new();
+    for l in (0..d).rev() {
+        let allowed: Vec<usize> = (0..d).filter(|&m| m != l).collect();
+        let grid = fit_grid(shape, &allowed, p)
+            .ok_or_else(|| format!("cannot place {p} processors avoiding axis {l}"))?;
+        dists.push(GridDist::blocks(shape, &grid)?);
+        stage_axis.push(l);
+    }
+    dists.push(dist_brick); // reshape back to bricks
+    Ok((dists, stage_axis))
+}
+
+/// Run the brick-to-brick heFFTe-like pipeline.
+pub fn heffte_global(
+    shape: &[usize],
+    p: usize,
+    global: &[C64],
+    dir: Direction,
+) -> Result<(Vec<C64>, CostReport), String> {
+    let (dists, stage_axis) = heffte_schedule(shape, p)?;
+    let dist_brick = dists[0].clone();
+    let mut redists: Vec<RedistPlan> = Vec::new();
+    for w in dists.windows(2) {
+        redists.push(RedistPlan::new(&w[0], &w[1])?);
+    }
+
+    let planner = Planner::new();
+    let axis_plan: Vec<Arc<Plan>> = shape.iter().map(|&n| planner.plan(n)).collect();
+    let locals = dist_brick.scatter(global);
+    let outcome = run_spmd(p, |ctx: &mut Ctx| {
+        let mut local = locals[ctx.rank()].clone();
+        let max_axis = *shape.iter().max().unwrap();
+        let mut scratch = vec![C64::ZERO; local.len().max(4 * max_axis)];
+        for (i, &l) in stage_axis.iter().enumerate() {
+            local = redistribute(ctx, &redists[i], "heffte-reshape", &local);
+            if scratch.len() < local.len() {
+                scratch.resize(local.len(), C64::ZERO);
+            }
+            ctx.begin_comp("heffte-axis");
+            let lshape = dists[i + 1].local_shape().to_vec();
+            transform_axis(&mut local, &lshape, l, &axis_plan[l], &mut scratch, dir);
+            let n = lshape[l] as f64;
+            ctx.charge_flops(5.0 * local.len() as f64 * n.log2());
+        }
+        // Final reshape back to bricks.
+        redistribute(ctx, redists.last().unwrap(), "heffte-reshape-out", &local)
+    });
+    Ok((dist_brick.gather(&outcome.outputs), outcome.report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fftn_inplace, rel_l2_error};
+    use crate::testing::Rng;
+
+    #[test]
+    fn heffte_3d_correct_with_d_plus_1_reshapes() {
+        let shape = [8usize, 8, 8];
+        let n: usize = shape.iter().product();
+        let mut rng = Rng::new(0x4EF);
+        let x: Vec<C64> = (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+        let mut want = x.clone();
+        fftn_inplace(&mut want, &shape, Direction::Forward);
+        let (got, report) = heffte_global(&shape, 8, &x, Direction::Forward).unwrap();
+        assert!(rel_l2_error(&got, &want) < 1e-9);
+        // d pencil reshapes + 1 brick reshape out = 4 for d = 3.
+        assert_eq!(report.comm_supersteps(), 4);
+    }
+
+    #[test]
+    fn heffte_2d_correct() {
+        let shape = [8usize, 4];
+        let n: usize = shape.iter().product();
+        let mut rng = Rng::new(0x4F0);
+        let x: Vec<C64> = (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+        let mut want = x.clone();
+        fftn_inplace(&mut want, &shape, Direction::Forward);
+        let (got, report) = heffte_global(&shape, 4, &x, Direction::Forward).unwrap();
+        assert!(rel_l2_error(&got, &want) < 1e-9);
+        assert_eq!(report.comm_supersteps(), 3);
+    }
+
+    #[test]
+    fn heffte_pmax_excludes_largest_axis() {
+        assert_eq!(heffte_pmax(&[1024, 1024, 1024]), 1 << 20);
+        assert_eq!(heffte_pmax(&[1 << 24, 64]), 64);
+    }
+}

@@ -1,0 +1,32 @@
+//! Comparator algorithms from §1.2, implemented from their published
+//! descriptions and validated against the sequential oracle.
+//!
+//! All baselines run on the same BSP machine and sequential FFT substrate
+//! as FFTU, so the comparison isolates *communication structure* — the
+//! paper's subject — from kernel quality.
+//!
+//! | Baseline | Input dist | Comm supersteps (fwd) | p_max |
+//! |---|---|---|---|
+//! | [`slab`] (parallel FFTW) | slab axis 0 | 1 (+1 if same-dist out) | `min(n_1, N/n_1)` |
+//! | [`pencil`] (PFFT, r-dim) | blocks on r axes | `ceil(r/(d-r))` (+1) | see §1.2 |
+//! | [`heffte`] (heFFTe) | bricks | pencil pipeline + reshapes | pencil-bound |
+//! | [`popovici`] (cyclic d-step) | cyclic | d | `prod sqrt(n_l)` |
+
+pub mod heffte;
+pub mod pencil;
+pub mod popovici;
+pub mod slab;
+
+pub use heffte::{heffte_global, heffte_pmax, heffte_schedule};
+pub use pencil::{pencil_global, pencil_pmax, pencil_schedule, pfft_best_pmax};
+pub use popovici::{popovici_global, popovici_pmax};
+pub use slab::{slab_dists, slab_global, slab_pmax};
+
+/// Whether the transform must end in the distribution it started in
+/// ("same", the paper's default comparison) or may end transposed
+/// ("different", FFTW_TRANSPOSED_OUT / PFFT_TRANSPOSED_OUT).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OutputDist {
+    Same,
+    Different,
+}

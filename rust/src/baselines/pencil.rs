@@ -1,0 +1,288 @@
+//! PFFT-style r-dimensional decomposition (§1.2).
+//!
+//! The input is block-distributed over the first `r` axes (a pencil
+//! distribution when `r = 2`). The `d - r` remaining axes are local and
+//! transformed immediately; then the algorithm performs
+//! `ceil(r / (d-r))` redistributions, each making up to `d - r`
+//! still-untransformed axes local, until every axis has been transformed.
+//! With `OutputDist::Same` a final redistribution restores the input
+//! distribution (this is the extra step the paper's Tables 4.1/4.2 charge
+//! PFFT for in the "same" columns).
+
+use std::sync::Arc;
+
+use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
+use crate::dist::{GridDist, RedistPlan};
+use crate::fft::ndfft::transform_axis;
+use crate::fft::{C64, Direction, Plan, Planner};
+
+use super::OutputDist;
+
+/// Place `p` processors block-wise on the axes in `allowed` (all other
+/// grid entries 1). Greedy: largest prime factors first, each assigned to
+/// the allowed axis with the most remaining capacity. Returns `None` if
+/// `p` does not fit.
+pub(crate) fn fit_grid(shape: &[usize], allowed: &[usize], p: usize) -> Option<Vec<usize>> {
+    let d = shape.len();
+    let mut grid = vec![1usize; d];
+    let mut factors = prime_factors(p);
+    factors.sort_unstable_by(|a, b| b.cmp(a));
+    for f in factors {
+        let mut best: Option<(usize, usize)> = None; // (capacity, axis)
+        for &l in allowed {
+            let q = grid[l] * f;
+            if shape[l] % q == 0 {
+                let cap = shape[l] / q;
+                if best.map(|(c, _)| cap > c).unwrap_or(true) {
+                    best = Some((cap, l));
+                }
+            }
+        }
+        let (_, l) = best?;
+        grid[l] *= f;
+    }
+    Some(grid)
+}
+
+pub(crate) fn prime_factors(mut n: usize) -> Vec<usize> {
+    let mut fs = Vec::new();
+    let mut q = 2;
+    while q * q <= n {
+        while n % q == 0 {
+            fs.push(q);
+            n /= q;
+        }
+        q += 1;
+    }
+    if n > 1 {
+        fs.push(n);
+    }
+    fs
+}
+
+/// The paper's p_max for an r-dimensional decomposition (§1.2): with a
+/// single redistribution (`r <= d/2`), the best split
+/// `max_S min(prod_S, prod_{S^c})`; for `r > d/2` (multiple
+/// redistributions) the processors must at some stage sit on the `r`
+/// smallest axes, giving the product of the `r` smallest sizes (for
+/// d = 3, r = 2 this is the paper's `min(n1n2, n2n3, n1n3) = n2n3`).
+pub fn pencil_pmax(shape: &[usize], r: usize) -> usize {
+    let d = shape.len();
+    assert!(r >= 1 && r < d);
+    if 2 * r <= d {
+        // Enumerate r-subsets (d is small).
+        let mut best = 0;
+        let total: usize = shape.iter().product();
+        for mask in 0usize..(1 << d) {
+            if (mask.count_ones() as usize) != r {
+                continue;
+            }
+            let prod_s: usize = (0..d).filter(|l| mask >> l & 1 == 1).map(|l| shape[l]).product();
+            best = best.max(prod_s.min(total / prod_s));
+        }
+        best
+    } else {
+        let mut sorted = shape.to_vec();
+        sorted.sort_unstable();
+        sorted[..r].iter().product()
+    }
+}
+
+/// Best PFFT p_max over all decomposition ranks `1 <= r < d`.
+pub fn pfft_best_pmax(shape: &[usize]) -> usize {
+    (1..shape.len()).map(|r| pencil_pmax(shape, r)).max().unwrap()
+}
+
+/// The pencil algorithm's full distribution schedule: the input
+/// distribution plus one `(distribution, axes-to-transform)` entry per
+/// redistribution stage. Shared by the executor and the analytic cost
+/// model.
+pub fn pencil_schedule(
+    shape: &[usize],
+    r: usize,
+    p: usize,
+) -> Result<(GridDist, Vec<(GridDist, Vec<usize>)>), String> {
+    let d = shape.len();
+    if r == 0 || r >= d {
+        return Err(format!("decomposition rank r={r} must satisfy 1 <= r < d={d}"));
+    }
+    // Input distribution: p processors block-wise on the first r axes.
+    let in_axes: Vec<usize> = (0..r).collect();
+    let in_grid = fit_grid(shape, &in_axes, p)
+        .ok_or_else(|| format!("cannot place {p} processors on first {r} axes of {shape:?}"))?;
+    let dist_in = GridDist::blocks(shape, &in_grid)?;
+
+    // Each stage redistributes so that the next chunk of <= d-r
+    // untransformed axes becomes local, with processors allowed on every
+    // other axis.
+    let mut pending: Vec<usize> = (0..r).collect();
+    let mut stages: Vec<(GridDist, Vec<usize>)> = Vec::new();
+    while !pending.is_empty() {
+        let take = (d - r).min(pending.len());
+        let now: Vec<usize> = pending.drain(..take).collect();
+        let allowed: Vec<usize> = (0..d).filter(|l| !now.contains(l)).collect();
+        let grid = fit_grid(shape, &allowed, p).ok_or_else(|| {
+            format!("cannot place {p} processors avoiding axes {now:?} of {shape:?}")
+        })?;
+        stages.push((GridDist::blocks(shape, &grid)?, now));
+    }
+    Ok((dist_in, stages))
+}
+
+/// Run the r-dimensional decomposition algorithm.
+pub fn pencil_global(
+    shape: &[usize],
+    r: usize,
+    p: usize,
+    global: &[C64],
+    dir: Direction,
+    out: OutputDist,
+) -> Result<(Vec<C64>, CostReport), String> {
+    let d = shape.len();
+    let (dist_in, stages) = pencil_schedule(shape, r, p)?;
+    let mut dists: Vec<GridDist> = vec![dist_in.clone()];
+    for (dist, _) in &stages {
+        dists.push(dist.clone());
+    }
+    // Compile the redistribution plans between consecutive distributions.
+    let mut redists: Vec<RedistPlan> = Vec::new();
+    for w in dists.windows(2) {
+        redists.push(RedistPlan::new(&w[0], &w[1])?);
+    }
+    let back = RedistPlan::new(dists.last().unwrap(), &dist_in)?;
+
+    let planner = Planner::new();
+    let axis_plan: Vec<Arc<Plan>> = shape.iter().map(|&n| planner.plan(n)).collect();
+
+    let locals = dist_in.scatter(global);
+    let local_axes_first: Vec<usize> = (r..d).collect();
+    let outcome = run_spmd(p, |ctx: &mut Ctx| {
+        let mut local = locals[ctx.rank()].clone();
+        let max_axis = *shape.iter().max().unwrap();
+        let mut scratch = vec![C64::ZERO; local.len().max(4 * max_axis)];
+        // Stage 0: transform the initially local axes.
+        ctx.begin_comp("pencil-local-axes");
+        let lshape = dist_in.local_shape().to_vec();
+        for &l in &local_axes_first {
+            transform_axis(&mut local, &lshape, l, &axis_plan[l], &mut scratch, dir);
+            ctx.charge_flops(flops_axis(&lshape, l));
+        }
+        // Redistribution stages.
+        for (i, (dist, now)) in stages.iter().enumerate() {
+            local = redistribute(ctx, &redists[i], "pencil-transpose", &local);
+            if scratch.len() < local.len() {
+                scratch.resize(local.len(), C64::ZERO);
+            }
+            ctx.begin_comp("pencil-stage-axes");
+            let lshape = dist.local_shape().to_vec();
+            for &l in now {
+                transform_axis(&mut local, &lshape, l, &axis_plan[l], &mut scratch, dir);
+                ctx.charge_flops(flops_axis(&lshape, l));
+            }
+        }
+        match out {
+            OutputDist::Different => local,
+            OutputDist::Same => redistribute(ctx, &back, "pencil-transpose-back", &local),
+        }
+    });
+    let final_dist = match out {
+        OutputDist::Different => dists.last().unwrap(),
+        OutputDist::Same => &dist_in,
+    };
+    Ok((final_dist.gather(&outcome.outputs), outcome.report))
+}
+
+fn flops_axis(local_shape: &[usize], l: usize) -> f64 {
+    let total: usize = local_shape.iter().product();
+    let n = local_shape[l];
+    if n <= 1 {
+        0.0
+    } else {
+        5.0 * total as f64 * (n as f64).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fftn_inplace, rel_l2_error};
+    use crate::testing::Rng;
+
+    fn rand_global(n: usize, rng: &mut Rng) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+    }
+
+    fn check(shape: &[usize], r: usize, p: usize, out: OutputDist, want_comm: usize) {
+        let mut rng = Rng::new(0xEC1);
+        let n: usize = shape.iter().product();
+        let x = rand_global(n, &mut rng);
+        let mut want = x.clone();
+        fftn_inplace(&mut want, shape, Direction::Forward);
+        let (got, report) = pencil_global(shape, r, p, &x, Direction::Forward, out).unwrap();
+        let err = rel_l2_error(&got, &want);
+        assert!(err < 1e-9, "shape {shape:?} r={r} p={p} {out:?}: err {err}");
+        assert_eq!(
+            report.comm_supersteps(),
+            want_comm,
+            "shape {shape:?} r={r} p={p} {out:?}"
+        );
+    }
+
+    #[test]
+    fn pencil_3d_r2_needs_two_transposes() {
+        // d=3, r=2: ceil(2/1) = 2 redistributions (+1 for same).
+        check(&[8, 8, 8], 2, 4, OutputDist::Different, 2);
+        check(&[8, 8, 8], 2, 4, OutputDist::Same, 3);
+        check(&[8, 8, 8], 2, 16, OutputDist::Different, 2);
+    }
+
+    #[test]
+    fn pencil_3d_r1_is_slab_like() {
+        check(&[8, 8, 8], 1, 8, OutputDist::Different, 1);
+        check(&[8, 8, 8], 1, 8, OutputDist::Same, 2);
+    }
+
+    #[test]
+    fn pencil_5d_r2_single_redistribution() {
+        // d=5, r=2: ceil(2/3) = 1 redistribution.
+        check(&[4, 4, 4, 4, 4], 2, 16, OutputDist::Different, 1);
+        check(&[4, 4, 4, 4, 4], 2, 16, OutputDist::Same, 2);
+    }
+
+    #[test]
+    fn pencil_4d_r2() {
+        check(&[4, 4, 4, 4], 2, 16, OutputDist::Different, 1);
+    }
+
+    #[test]
+    fn pmax_matches_paper_formulas() {
+        // d=3, r=2, 1024^3: pmax = n2 n3 = 2^20.
+        assert_eq!(pencil_pmax(&[1024, 1024, 1024], 2), 1 << 20);
+        // d=5, r=2, 64^5: single redistribution, min(64^2, 64^3) = 4096.
+        assert_eq!(pencil_pmax(&[64, 64, 64, 64, 64], 2), 4096);
+        // d=4 equal sizes, r=2: N^{1/2}.
+        assert_eq!(pencil_pmax(&[16, 16, 16, 16], 2), 256);
+        // r=1 is the slab bound min(n1, N/n1).
+        assert_eq!(pencil_pmax(&[1024, 1024, 1024], 1), 1024);
+        assert_eq!(pfft_best_pmax(&[1024, 1024, 1024]), 1 << 20);
+    }
+
+    #[test]
+    fn pencil_inverse_roundtrip() {
+        let mut rng = Rng::new(0xEC2);
+        let shape = [4usize, 4, 4];
+        let n = 64;
+        let x = rand_global(n, &mut rng);
+        let (y, _) = pencil_global(&shape, 2, 4, &x, Direction::Forward, OutputDist::Same).unwrap();
+        let (z, _) = pencil_global(&shape, 2, 4, &y, Direction::Inverse, OutputDist::Same).unwrap();
+        let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
+        assert!(crate::fft::max_abs_diff(&z, &x) < 1e-9);
+    }
+
+    #[test]
+    fn pencil_rejects_oversized_p() {
+        let x = vec![C64::ZERO; 4 * 4 * 4];
+        // p = 32 cannot sit on two axes of 4x4x4 (max 16).
+        assert!(pencil_global(&[4, 4, 4], 2, 32, &x, Direction::Forward, OutputDist::Same).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Parallel-FFTW-style slab algorithm (§1.2).
+//!
+//! Start in a slab distribution along axis 0: axes `1..d` are local, so
+//! transform them sequentially. Then perform one global transpose to a
+//! distribution in which axis 0 is local — a slab along axis 1 when
+//! `p <= n_2`, otherwise a block distribution over as many of the later
+//! axes as needed (FFTW's `r > 2` case) — and transform axis 0. With
+//! `OutputDist::Same` a second transpose returns to the input slab.
+
+use std::sync::Arc;
+
+use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
+use crate::dist::{GridDist, RedistPlan};
+use crate::fft::ndfft::transform_axis;
+use crate::fft::{C64, Direction, Plan, Planner};
+
+use super::OutputDist;
+
+/// Maximum processors for the slab algorithm: `min(n_1, N/n_1)` (§1.2).
+pub fn slab_pmax(shape: &[usize]) -> usize {
+    let n1 = shape[0];
+    let rest: usize = shape[1..].iter().product();
+    n1.min(rest)
+}
+
+/// Choose the post-transpose distribution: axis 0 local, `p` processors
+/// spread block-wise over axes `1..d` greedily (FFTW uses axis 1 alone
+/// when possible; we generalize exactly as the paper describes for the
+/// `8 x 4 x 2` example, ending in a pencil or higher-rank block grid).
+fn second_dist(shape: &[usize], p: usize) -> Result<GridDist, String> {
+    let d = shape.len();
+    let mut grid = vec![1usize; d];
+    let mut rem = p;
+    for l in 1..d {
+        if rem == 1 {
+            break;
+        }
+        let take = gcd_pow(rem, shape[l]);
+        grid[l] = take;
+        rem /= take;
+    }
+    if rem != 1 {
+        return Err(format!("slab algorithm cannot place {p} processors for shape {shape:?}"));
+    }
+    GridDist::blocks(shape, &grid)
+}
+
+/// Largest divisor of `cap`'s headroom: greatest `g` dividing both `rem`
+/// (a processor count) and `n` (an axis length).
+fn gcd_pow(rem: usize, n: usize) -> usize {
+    let mut g = 1;
+    for c in 1..=rem.min(n) {
+        if rem % c == 0 && n % c == 0 {
+            g = c;
+        }
+    }
+    g
+}
+
+/// The two distributions the slab algorithm moves between: the input
+/// slab along axis 0 and the post-transpose distribution with axis 0
+/// local. Shared by the executor and the analytic cost model so the
+/// paper-scale predictions use exactly the executed schedule.
+pub fn slab_dists(shape: &[usize], p: usize) -> Result<(GridDist, GridDist), String> {
+    let d = shape.len();
+    if d < 2 {
+        return Err("slab algorithm needs d >= 2".into());
+    }
+    if shape[0] % p != 0 {
+        return Err(format!("slab requires p | n_1 ({p} ∤ {})", shape[0]));
+    }
+    if p > slab_pmax(shape) {
+        return Err(format!("slab p_max = {} < p = {p}", slab_pmax(shape)));
+    }
+    Ok((GridDist::slab(shape, 0, p)?, second_dist(shape, p)?))
+}
+
+/// Run the slab algorithm on the BSP machine over a scattered global
+/// array; returns the gathered result and the cost report.
+pub fn slab_global(
+    shape: &[usize],
+    p: usize,
+    global: &[C64],
+    dir: Direction,
+    out: OutputDist,
+) -> Result<(Vec<C64>, CostReport), String> {
+    let d = shape.len();
+    let (dist_in, dist_mid) = slab_dists(shape, p)?;
+    let transpose = RedistPlan::new(&dist_in, &dist_mid)?;
+    let back = RedistPlan::new(&dist_mid, &dist_in)?;
+
+    let planner = Planner::new();
+    let local_in_shape: Vec<usize> = dist_in.local_shape().to_vec();
+    let local_mid_shape: Vec<usize> = dist_mid.local_shape().to_vec();
+    // Plans for the locally transformed axes in each phase.
+    let plans_in: Vec<Arc<Plan>> = (1..d).map(|l| planner.plan(shape[l])).collect();
+    let plan_axis0 = planner.plan(shape[0]);
+    let mid_axes_local: Vec<usize> = (0..d).filter(|&l| dist_mid.grid()[l] == 1).collect();
+
+    let locals = dist_in.scatter(global);
+    let outcome = run_spmd(p, |ctx: &mut Ctx| {
+        let mut local = locals[ctx.rank()].clone();
+        let scratch_len = local.len().max(4 * shape.iter().copied().max().unwrap());
+        let mut scratch = vec![C64::ZERO; scratch_len];
+        // Phase 1: transform the d-1 local axes.
+        ctx.begin_comp("slab-local-axes");
+        for (i, l) in (1..d).enumerate() {
+            transform_axis(&mut local, &local_in_shape, l, &plans_in[i], &mut scratch, dir);
+            ctx.charge_flops(flops_axis(&local_in_shape, l));
+        }
+        // Phase 2: global transpose so axis 0 becomes local.
+        let mut mid = redistribute(ctx, &transpose, "slab-transpose", &local);
+        // Phase 3: transform axis 0 (it is local in dist_mid).
+        ctx.begin_comp("slab-axis0");
+        debug_assert!(mid_axes_local.contains(&0));
+        transform_axis(&mut mid, &local_mid_shape, 0, &plan_axis0, &mut scratch, dir);
+        ctx.charge_flops(flops_axis(&local_mid_shape, 0));
+        match out {
+            OutputDist::Different => mid,
+            OutputDist::Same => redistribute(ctx, &back, "slab-transpose-back", &mid),
+        }
+    });
+    let gathered = match out {
+        OutputDist::Different => dist_mid.gather(&outcome.outputs),
+        OutputDist::Same => dist_in.gather(&outcome.outputs),
+    };
+    Ok((gathered, outcome.report))
+}
+
+/// Model flops for transforming axis `l` of a local array: the paper's
+/// per-element convention, `5 log2(n_l)` per element.
+fn flops_axis(local_shape: &[usize], l: usize) -> f64 {
+    let total: usize = local_shape.iter().product();
+    let n = local_shape[l];
+    if n <= 1 {
+        0.0
+    } else {
+        5.0 * total as f64 * (n as f64).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fftn_inplace, rel_l2_error};
+    use crate::testing::Rng;
+
+    fn rand_global(n: usize, rng: &mut Rng) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+    }
+
+    fn check(shape: &[usize], p: usize, out: OutputDist, want_comm: usize) {
+        let mut rng = Rng::new(0x5AB);
+        let n: usize = shape.iter().product();
+        let x = rand_global(n, &mut rng);
+        let mut want = x.clone();
+        fftn_inplace(&mut want, shape, Direction::Forward);
+        let (got, report) = slab_global(shape, p, &x, Direction::Forward, out).unwrap();
+        let err = rel_l2_error(&got, &want);
+        assert!(err < 1e-9, "shape {shape:?} p={p} {out:?}: err {err}");
+        assert_eq!(report.comm_supersteps(), want_comm, "shape {shape:?} p={p} {out:?}");
+    }
+
+    #[test]
+    fn slab_2d_3d_correct() {
+        check(&[8, 8], 4, OutputDist::Same, 2);
+        check(&[8, 8], 4, OutputDist::Different, 1);
+        check(&[8, 8, 8], 8, OutputDist::Same, 2);
+        check(&[8, 8, 8], 8, OutputDist::Different, 1);
+        check(&[16, 4, 4], 4, OutputDist::Same, 2);
+    }
+
+    #[test]
+    fn slab_needs_higher_rank_second_dist() {
+        // The paper's 8x4x2 example: p = 8 forces a 4x2 pencil for the
+        // final step.
+        check(&[8, 4, 2], 8, OutputDist::Same, 2);
+        check(&[8, 4, 2], 8, OutputDist::Different, 1);
+    }
+
+    #[test]
+    fn slab_pmax_matches_paper() {
+        assert_eq!(slab_pmax(&[1024, 1024, 1024]), 1024);
+        assert_eq!(slab_pmax(&[64, 64, 64, 64, 64]), 64);
+        assert_eq!(slab_pmax(&[1 << 24, 64]), 64);
+        assert_eq!(slab_pmax(&[8, 4, 2]), 8);
+    }
+
+    #[test]
+    fn slab_rejects_p_beyond_pmax() {
+        let x = vec![C64::ZERO; 8 * 4 * 2];
+        assert!(slab_global(&[8, 4, 2], 16, &x, Direction::Forward, OutputDist::Same).is_err());
+    }
+
+    #[test]
+    fn slab_inverse_roundtrip() {
+        let mut rng = Rng::new(0x5AC);
+        let shape = [8usize, 8];
+        let x = rand_global(64, &mut rng);
+        let (y, _) = slab_global(&shape, 2, &x, Direction::Forward, OutputDist::Same).unwrap();
+        let (z, _) = slab_global(&shape, 2, &y, Direction::Inverse, OutputDist::Same).unwrap();
+        let z: Vec<C64> = z.iter().map(|v| *v / 64.0).collect();
+        assert!(crate::fft::max_abs_diff(&z, &x) < 1e-9);
+    }
+}

@@ -1,0 +1,208 @@
+//! BSP cost accounting (§2.1.2, §2.3).
+//!
+//! The BSP cost of an algorithm is `sum_i w_i + g * sum_i h_i + l * S`
+//! where `w_i` is the max flop count of computation superstep `i` over
+//! processors, `h_i` the max of words sent/received in communication
+//! superstep `i`, and `S` the number of (charged) synchronizations. The
+//! paper charges `l` only for communication supersteps because its
+//! implementation uses one-sided Puts (§2.1.2); we follow that convention.
+//!
+//! Each virtual processor records its own [`ProcLedger`]; after a run the
+//! per-processor ledgers are folded into a [`CostReport`] taking maxima
+//! per superstep, which plugs straight into Eq. (2.12)-style predictions.
+
+/// Kind of a superstep, mirroring the paper's comp/comm split.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SuperstepKind {
+    Computation,
+    Communication,
+}
+
+/// One processor's view of one superstep.
+#[derive(Clone, Debug)]
+pub struct ProcSuperstep {
+    pub kind: SuperstepKind,
+    pub label: &'static str,
+    /// Real flops charged by the algorithm (model counts, e.g.
+    /// `5 n log2 n` per local FFT — the paper's §2.3 convention).
+    pub flops: f64,
+    /// Words (complex numbers) sent to other processors.
+    pub words_out: usize,
+    /// Words received from other processors.
+    pub words_in: usize,
+    /// Words moved through local pack/unpack buffers in this superstep
+    /// (includes the self-packet); models the CPU-RAM traffic that §4.2
+    /// identifies as the real cost driver alongside the network.
+    pub mem_words: usize,
+}
+
+/// Per-processor ledger filled in during a run.
+#[derive(Clone, Debug, Default)]
+pub struct ProcLedger {
+    pub steps: Vec<ProcSuperstep>,
+}
+
+impl ProcLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn begin(&mut self, kind: SuperstepKind, label: &'static str) {
+        self.steps.push(ProcSuperstep {
+            kind,
+            label,
+            flops: 0.0,
+            words_out: 0,
+            words_in: 0,
+            mem_words: 0,
+        });
+    }
+
+    fn cur(&mut self) -> &mut ProcSuperstep {
+        self.steps.last_mut().expect("charge before begin_superstep")
+    }
+
+    pub fn charge_flops(&mut self, flops: f64) {
+        self.cur().flops += flops;
+    }
+
+    pub fn charge_words(&mut self, out: usize, inn: usize) {
+        let c = self.cur();
+        c.words_out += out;
+        c.words_in += inn;
+    }
+
+    pub fn charge_mem_words(&mut self, words: usize) {
+        self.cur().mem_words += words;
+    }
+}
+
+/// Aggregated superstep cost: maxima over processors.
+#[derive(Clone, Debug)]
+pub struct SuperstepCost {
+    pub kind: SuperstepKind,
+    pub label: &'static str,
+    /// max over processors of flops in this superstep.
+    pub w_max: f64,
+    /// max over processors of max(words out, words in): the h-relation.
+    pub h_max: usize,
+    /// max over processors of locally moved (packed/unpacked) words.
+    pub mem_max: usize,
+    /// Total words moved (for bandwidth sanity checks, not BSP cost).
+    pub words_total: usize,
+}
+
+/// Whole-algorithm cost report.
+#[derive(Clone, Debug, Default)]
+pub struct CostReport {
+    pub supersteps: Vec<SuperstepCost>,
+}
+
+impl CostReport {
+    /// Fold per-processor ledgers (all must have recorded the same
+    /// superstep sequence — BSP algorithms are SPMD).
+    pub fn from_procs(procs: &[ProcLedger]) -> Self {
+        assert!(!procs.is_empty());
+        let n_steps = procs[0].steps.len();
+        for (i, pl) in procs.iter().enumerate() {
+            assert_eq!(
+                pl.steps.len(),
+                n_steps,
+                "processor {i} recorded {} supersteps, expected {n_steps} (SPMD violation)",
+                pl.steps.len()
+            );
+        }
+        let supersteps = (0..n_steps)
+            .map(|i| {
+                let kind = procs[0].steps[i].kind;
+                let label = procs[0].steps[i].label;
+                let mut w_max = 0.0f64;
+                let mut h_max = 0usize;
+                let mut mem_max = 0usize;
+                let mut words_total = 0usize;
+                for pl in procs {
+                    let st = &pl.steps[i];
+                    assert_eq!(st.kind, kind, "superstep {i} kind mismatch (SPMD violation)");
+                    w_max = w_max.max(st.flops);
+                    h_max = h_max.max(st.words_out.max(st.words_in));
+                    mem_max = mem_max.max(st.mem_words);
+                    words_total += st.words_out;
+                }
+                SuperstepCost { kind, label, w_max, h_max, mem_max, words_total }
+            })
+            .collect();
+        CostReport { supersteps }
+    }
+
+    /// Number of communication supersteps (the paper's headline metric:
+    /// FFTU has exactly one).
+    pub fn comm_supersteps(&self) -> usize {
+        self.supersteps
+            .iter()
+            .filter(|s| s.kind == SuperstepKind::Communication)
+            .count()
+    }
+
+    /// Total computation cost `sum w_i` (flops).
+    pub fn total_w(&self) -> f64 {
+        self.supersteps.iter().map(|s| s.w_max).sum()
+    }
+
+    /// Total communication volume `sum h_i` (words).
+    pub fn total_h(&self) -> usize {
+        self.supersteps.iter().map(|s| s.h_max).sum()
+    }
+
+    /// BSP predicted time in seconds for a machine with flop rate `r`
+    /// (flops/s), per-word cost `g` (seconds/word), and sync latency `l`
+    /// (seconds): `T = W/r + H*g + S*l` — Eq. (2.12) instantiated.
+    pub fn predict_seconds(&self, r_flops_per_s: f64, g_s_per_word: f64, l_s: f64) -> f64 {
+        self.total_w() / r_flops_per_s
+            + self.total_h() as f64 * g_s_per_word
+            + self.comm_supersteps() as f64 * l_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_procs() -> Vec<ProcLedger> {
+        let mut a = ProcLedger::new();
+        a.begin(SuperstepKind::Computation, "fft");
+        a.charge_flops(100.0);
+        a.begin(SuperstepKind::Communication, "alltoall");
+        a.charge_words(40, 40);
+        let mut b = ProcLedger::new();
+        b.begin(SuperstepKind::Computation, "fft");
+        b.charge_flops(80.0);
+        b.begin(SuperstepKind::Communication, "alltoall");
+        b.charge_words(60, 20);
+        vec![a, b]
+    }
+
+    #[test]
+    fn report_takes_maxima() {
+        let report = CostReport::from_procs(&sample_procs());
+        assert_eq!(report.supersteps.len(), 2);
+        assert_eq!(report.supersteps[0].w_max, 100.0);
+        assert_eq!(report.supersteps[1].h_max, 60);
+        assert_eq!(report.comm_supersteps(), 1);
+    }
+
+    #[test]
+    fn predict_matches_formula() {
+        let report = CostReport::from_procs(&sample_procs());
+        let t = report.predict_seconds(1000.0, 0.01, 0.5);
+        assert!((t - (100.0 / 1000.0 + 60.0 * 0.01 + 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPMD violation")]
+    fn mismatched_superstep_counts_panic() {
+        let mut a = ProcLedger::new();
+        a.begin(SuperstepKind::Computation, "x");
+        let b = ProcLedger::new();
+        CostReport::from_procs(&[a, b]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal argument parser (no clap in the offline vendor set).
+//!
+//! Grammar: `fftu <subcommand> [--flag] [--key value] ...`. Values that
+//! look like `a,b,c` parse into vectors (shapes, grids, p-lists).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "\u{1}"; // marker for value-less flags
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("stray `--`".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(key.to_string(), v);
+                } else {
+                    args.flags.insert(key.to_string(), FLAG_SET.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str()).filter(|s| *s != FLAG_SET)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().map_err(|_| format!("--{key} expects an integer, got `{v}`")))
+            .transpose()
+    }
+
+    pub fn get_vec(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|x| {
+                        parse_size(x.trim())
+                            .ok_or_else(|| format!("--{key}: bad entry `{x}`"))
+                    })
+                    .collect::<Result<Vec<usize>, String>>()
+            })
+            .transpose()
+    }
+}
+
+/// Parse "64", "2^24", or "1024" style sizes.
+pub fn parse_size(s: &str) -> Option<usize> {
+    if let Some((base, exp)) = s.split_once('^') {
+        let base: usize = base.trim().parse().ok()?;
+        let exp: u32 = exp.trim().parse().ok()?;
+        return base.checked_pow(exp);
+    }
+    s.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["run", "--shape", "16,16", "--grid", "2,2", "--inverse"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_vec("shape").unwrap(), Some(vec![16, 16]));
+        assert_eq!(a.get_vec("grid").unwrap(), Some(vec![2, 2]));
+        assert!(a.flag("inverse"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn equals_form_and_positional() {
+        let a = parse(&["table", "4.1", "--reps=5"]);
+        assert_eq!(a.positional, vec!["4.1"]);
+        assert_eq!(a.get_usize("reps").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn power_sizes() {
+        assert_eq!(parse_size("2^24"), Some(1 << 24));
+        assert_eq!(parse_size("64"), Some(64));
+        assert_eq!(parse_size("x"), None);
+        let a = parse(&["run", "--shape", "2^24,64"]);
+        assert_eq!(a.get_vec("shape").unwrap(), Some(vec![1 << 24, 64]));
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["run", "--reps", "abc"]);
+        assert!(a.get_usize("reps").is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! Launcher configuration files: simple `key = value` format with `#`
+//! comments, so jobs can be described declaratively and replayed
+//! (`fftu run --config job.cfg`; flags on the command line override the
+//! file). Values use the same grammar as the CLI (`2^24,64` shapes).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::args::parse_size;
+
+/// A parsed configuration file.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`, got `{raw}`", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            values.insert(key.to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.get(key)
+            .map(|v| {
+                parse_size(v).ok_or_else(|| format!("config `{key}`: bad integer `{v}`"))
+            })
+            .transpose()
+    }
+
+    pub fn get_vec(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|x| {
+                        parse_size(x.trim()).ok_or_else(|| format!("config `{key}`: bad entry `{x}`"))
+                    })
+                    .collect()
+            })
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, String> {
+        self.get(key)
+            .map(|v| match v {
+                "true" | "yes" | "1" => Ok(true),
+                "false" | "no" | "0" => Ok(false),
+                other => Err(format!("config `{key}`: bad bool `{other}`")),
+            })
+            .transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_keys_comments_and_sizes() {
+        let cfg = Config::parse(
+            "# an FFTU job\nshape = 2^10,1024, 64  # trailing comment\nengine = native\nreps=5\ninverse = yes\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_vec("shape").unwrap(), Some(vec![1024, 1024, 64]));
+        assert_eq!(cfg.get("engine"), Some("native"));
+        assert_eq!(cfg.get_usize("reps").unwrap(), Some(5));
+        assert_eq!(cfg.get_bool("inverse").unwrap(), Some(true));
+        assert_eq!(cfg.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("just words\n").is_err());
+        assert!(Config::parse("= value\n").is_err());
+        let cfg = Config::parse("reps = abc\n").unwrap();
+        assert!(cfg.get_usize("reps").is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! ASCII rendering of data distributions — regenerates Figures 1.1-1.3
+//! as terminal art (`fftu dist ...`), and doubles as a debugging aid.
+
+use crate::dist::GridDist;
+
+/// Render a 1D or 2D distribution: each cell shows the owning processor
+/// rank. 3D arrays are rendered as z-slices.
+pub fn render(dist: &GridDist) -> String {
+    let shape = dist.shape();
+    let mut owner = vec![0usize; dist.total()];
+    for rank in 0..dist.num_procs() {
+        for loff in 0..dist.local_len() {
+            owner[dist.global_offset_of(rank, loff)] = rank;
+        }
+    }
+    let glyph = |r: usize| -> char {
+        match r {
+            0..=9 => (b'0' + r as u8) as char,
+            10..=35 => (b'a' + (r - 10) as u8) as char,
+            _ => '*',
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "shape {:?}, grid {:?}, {} processors, local {:?}\n",
+        shape,
+        dist.grid(),
+        dist.num_procs(),
+        dist.local_shape()
+    ));
+    match shape.len() {
+        1 => {
+            for &o in &owner {
+                out.push(glyph(o));
+            }
+            out.push('\n');
+        }
+        2 => {
+            for i in 0..shape[0] {
+                for j in 0..shape[1] {
+                    out.push(glyph(owner[i * shape[1] + j]));
+                }
+                out.push('\n');
+            }
+        }
+        3 => {
+            for k in 0..shape[2] {
+                out.push_str(&format!("z = {k}:\n"));
+                for i in 0..shape[0] {
+                    for j in 0..shape[1] {
+                        out.push(glyph(owner[(i * shape[1] + j) * shape[2] + k]));
+                    }
+                    out.push('\n');
+                }
+            }
+        }
+        _ => out.push_str("(rendering only supported for d <= 3)\n"),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_1_1_cyclic_1d() {
+        // Fig 1.1(a): cyclic over 3 procs of a length-9 array: 012012012.
+        let d = GridDist::cyclic(&[9], &[3]).unwrap();
+        let s = render(&d);
+        assert!(s.contains("012012012"), "{s}");
+    }
+
+    #[test]
+    fn figure_1_1_cyclic_2d() {
+        let d = GridDist::cyclic(&[4, 4], &[2, 2]).unwrap();
+        let s = render(&d);
+        // Rows alternate 0101 / 2323.
+        assert!(s.contains("0101"), "{s}");
+        assert!(s.contains("2323"), "{s}");
+    }
+
+    #[test]
+    fn figure_1_2_slab() {
+        let d = GridDist::slab(&[8, 4], 0, 4).unwrap();
+        let s = render(&d);
+        assert!(s.contains("0000\n0000\n1111"), "{s}");
+    }
+
+    #[test]
+    fn figure_1_3_pencil_renders_3d() {
+        let d = GridDist::blocks(&[4, 4, 4], &[2, 2, 1]).unwrap();
+        let s = render(&d);
+        assert!(s.contains("z = 0"), "{s}");
+        assert!(s.contains("0011"), "{s}");
+    }
+}

@@ -1,0 +1,276 @@
+//! The `fftu` launcher: subcommand dispatch (S17 in DESIGN.md).
+
+pub mod args;
+pub mod config;
+pub mod dist_show;
+
+use std::sync::Arc;
+
+use crate::baselines::OutputDist;
+use crate::dist::{AxisDist, GridDist};
+use crate::fft::{C64, Direction, Planner};
+use crate::fftu::{choose_grid, FftuPlan};
+use crate::report::{self, measure_fftu};
+use crate::testing::Rng;
+
+use args::Args;
+
+pub const USAGE: &str = "\
+fftu — minimizing communication in the multidimensional FFT (Koopman & Bisseling)
+
+USAGE: fftu <command> [options]
+
+COMMANDS:
+  run        run a distributed FFT
+               --shape n1,n2,...   global array shape (sizes accept 2^k)
+               --grid p1,p2,...    cyclic processor grid (default: chosen for --p)
+               --p P               total processors (grid auto-chosen)
+               --engine native|xla local-transform engine (default native)
+               --algo fftu|slab|pencil|heffte|popovici (default fftu)
+               --inverse           inverse transform (1/N-normalized)
+               --reps R            timed repetitions (default 3)
+               --config FILE       key=value job file (flags override);
+                                   see examples/configs/
+  table      regenerate a paper table: `fftu table 4.1|4.2|4.3 [--executed]`
+  pmax       print the E-pmax processor-ceiling comparison
+  commsteps  communication supersteps per algorithm
+               --shape ... --p P
+  dist       render a distribution (Figs 1.1-1.3)
+               --shape ... --grid ... --kind cyclic|block|slab0|group-cyclic
+  calibrate  print machine parameters (measured + snellius-like)
+  selftest   quick end-to-end validation of every subsystem
+  help       this text
+";
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn dispatch(argv: Vec<String>) -> i32 {
+    match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some("run") => cmd_run(&args),
+        Some("table") => cmd_table(&args),
+        Some("pmax") => {
+            println!("{}", report::pmax_table().render());
+            Ok(())
+        }
+        Some("commsteps") => {
+            let shape = args.get_vec("shape")?.ok_or("--shape required")?;
+            let p = args.get_usize("p")?.ok_or("--p required")?;
+            println!("{}", report::comm_steps_table(&shape, p).render());
+            Ok(())
+        }
+        Some("dist") => cmd_dist(&args),
+        Some("calibrate") => cmd_calibrate(),
+        Some("selftest") => cmd_selftest(),
+        Some(other) => Err(format!("unknown command `{other}`; try `fftu help`")),
+    }
+}
+
+fn resolve_grid(args: &Args, cfg: &config::Config, shape: &[usize]) -> Result<Vec<usize>, String> {
+    if let Some(grid) = args.get_vec("grid")?.or(cfg.get_vec("grid")?) {
+        return Ok(grid);
+    }
+    let p = args.get_usize("p")?.or(cfg.get_usize("p")?).unwrap_or(1);
+    choose_grid(shape, p).ok_or_else(|| {
+        format!(
+            "no cyclic grid with p = {p} for shape {shape:?} (p_max = {})",
+            crate::fftu::fftu_pmax(shape)
+        )
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    // Declarative job files: `--config job.cfg`; explicit flags override.
+    let cfg = match args.get("config") {
+        Some(path) => config::Config::load(std::path::Path::new(path))?,
+        None => config::Config::default(),
+    };
+    let shape = args
+        .get_vec("shape")?
+        .or(cfg.get_vec("shape")?)
+        .unwrap_or_else(|| vec![32, 32, 32]);
+    let reps = args.get_usize("reps")?.or(cfg.get_usize("reps")?).unwrap_or(3);
+    let inverse = args.flag("inverse") || cfg.get_bool("inverse")?.unwrap_or(false);
+    let dir = if inverse { Direction::Inverse } else { Direction::Forward };
+    let engine = args.get("engine").or(cfg.get("engine")).unwrap_or("native");
+    let algo = args.get("algo").or(cfg.get("algo")).unwrap_or("fftu");
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(42);
+    let global: Vec<C64> =
+        (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+
+    match (algo, engine) {
+        ("fftu", "native") => {
+            let grid = resolve_grid(args, &cfg, &shape)?;
+            let (wall, rep) = measure_fftu(&shape, &grid, reps)?;
+            let p: usize = grid.iter().product();
+            println!(
+                "fftu native: shape {shape:?} grid {grid:?} p={p} dir={dir:?}\n\
+                 wall/transform: {wall:.6} s  ({:.3} Gflop/s model rate)\n\
+                 comm supersteps/transform: {}  h = {} words",
+                5.0 * n as f64 * (n as f64).log2() / wall / 1e9,
+                rep.comm_supersteps() / reps,
+                rep.supersteps
+                    .iter()
+                    .find(|s| s.kind == crate::bsp::SuperstepKind::Communication)
+                    .map(|s| s.h_max)
+                    .unwrap_or(0),
+            );
+            Ok(())
+        }
+        ("fftu", "xla") => {
+            let grid = resolve_grid(args, &cfg, &shape)?;
+            let xla =
+                crate::runtime::XlaFftu::load(std::path::Path::new("artifacts"), &shape, &grid)
+                    .map_err(|e| format!("{e:#}"))?;
+            let t0 = std::time::Instant::now();
+            let out = xla.execute_global(&global, dir).map_err(|e| format!("{e:#}"))?;
+            let wall = t0.elapsed().as_secs_f64();
+            let checksum: f64 = out.iter().map(|v| v.re + v.im).sum();
+            println!(
+                "fftu xla (sequential-SPMD over PJRT artifacts): shape {shape:?} grid {grid:?}\n\
+                 wall: {wall:.6} s  checksum {checksum:.6}"
+            );
+            Ok(())
+        }
+        (algo, "native") => {
+            let p = args.get_usize("p")?.or(cfg.get_usize("p")?).unwrap_or(4);
+            let t0 = std::time::Instant::now();
+            let rep = match algo {
+                "slab" => {
+                    crate::baselines::slab_global(&shape, p, &global, dir, OutputDist::Same)?.1
+                }
+                "pencil" => {
+                    let r = args.get_usize("r")?.unwrap_or_else(|| 2.min(shape.len() - 1));
+                    crate::baselines::pencil_global(&shape, r, p, &global, dir, OutputDist::Same)?.1
+                }
+                "heffte" => crate::baselines::heffte_global(&shape, p, &global, dir)?.1,
+                "popovici" => {
+                    let grid = resolve_grid(args, &cfg, &shape)?;
+                    crate::baselines::popovici_global(&shape, &grid, &global, dir)?.1
+                }
+                other => return Err(format!("unknown --algo {other}")),
+            };
+            println!(
+                "{algo}: shape {shape:?} p={p} wall {:.6} s, {} comm supersteps, sum h = {} words",
+                t0.elapsed().as_secs_f64(),
+                rep.comm_supersteps(),
+                rep.total_h()
+            );
+            Ok(())
+        }
+        (a, e) => Err(format!("unsupported combination --algo {a} --engine {e}")),
+    }
+}
+
+fn cmd_table(args: &Args) -> Result<(), String> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("4.1");
+    let id = match which {
+        "4.1" => 1u8,
+        "4.2" => 2,
+        "4.3" => 3,
+        other => return Err(format!("unknown table `{other}` (use 4.1, 4.2, 4.3)")),
+    };
+    let machine = report::tables::fitted_machine(id);
+    let table = match id {
+        1 => report::table_4_1_model(&machine),
+        2 => report::table_4_2_model(&machine),
+        _ => report::table_4_3_model(&machine),
+    };
+    println!("{}", table.render());
+    if args.flag("executed") {
+        let reps = args.get_usize("reps")?.unwrap_or(2);
+        let (title, shape, plist): (&str, Vec<usize>, Vec<usize>) = match id {
+            1 => ("Table 4.1 (executed, scaled): 64^3", vec![64, 64, 64], vec![1, 2, 4, 8]),
+            2 => ("Table 4.2 (executed, scaled): 16^5", vec![16; 5], vec![1, 2, 4, 8]),
+            _ => ("Table 4.3 (executed, scaled): 2^18 x 16", vec![1 << 18, 16], vec![1, 2, 4, 8]),
+        };
+        println!("{}", report::table_executed(title, &shape, &plist, reps).render());
+    }
+    Ok(())
+}
+
+fn cmd_dist(args: &Args) -> Result<(), String> {
+    let shape = args.get_vec("shape")?.unwrap_or_else(|| vec![8, 8]);
+    let kind = args.get("kind").unwrap_or("cyclic");
+    let dist = match kind {
+        "cyclic" => {
+            let grid = args.get_vec("grid")?.unwrap_or_else(|| vec![2; shape.len()]);
+            GridDist::cyclic(&shape, &grid)?
+        }
+        "block" => {
+            let grid = args.get_vec("grid")?.unwrap_or_else(|| vec![2; shape.len()]);
+            GridDist::blocks(&shape, &grid)?
+        }
+        "slab0" => {
+            let p = args.get_usize("p")?.unwrap_or(4);
+            GridDist::slab(&shape, 0, p)?
+        }
+        "group-cyclic" => {
+            let grid = args.get_vec("grid")?.unwrap_or_else(|| vec![4]);
+            let c = args.get_usize("cycle")?.unwrap_or(2);
+            let axes: Vec<AxisDist> =
+                grid.iter().map(|&p| AxisDist::GroupCyclic { p, c }).collect();
+            GridDist::new(&shape, &axes)?
+        }
+        other => return Err(format!("unknown --kind {other}")),
+    };
+    println!("{}", dist_show::render(&dist));
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<(), String> {
+    let host = crate::costmodel::Machine::calibrate();
+    println!("measured host: {host:#?}");
+    let snel = crate::costmodel::Machine::snellius_like();
+    println!("snellius-like: {snel:#?}");
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<(), String> {
+    // Quick cross-subsystem validation, printable proof the binary works.
+    let planner = Planner::new();
+    let shape = [16usize, 16];
+    let grid = [2usize, 2];
+    let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner)?);
+    let mut rng = Rng::new(7);
+    let n = plan.total();
+    let x: Vec<C64> = (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+    let (y, rep) = crate::fftu::fftu_global(&shape, &grid, &x, Direction::Forward)?;
+    let mut want = x.clone();
+    crate::fft::fftn_inplace(&mut want, &shape, Direction::Forward);
+    let err = crate::fft::rel_l2_error(&y, &want);
+    println!(
+        "fftu vs sequential fftn: rel err {err:.2e} (single all-to-all: {})",
+        rep.comm_supersteps() == 1
+    );
+    if err > 1e-9 {
+        return Err("selftest failed: native".into());
+    }
+    match crate::runtime::XlaFftu::load(std::path::Path::new("artifacts"), &shape, &grid) {
+        Ok(xla) => {
+            let yx = xla.execute_global(&x, Direction::Forward).map_err(|e| format!("{e:#}"))?;
+            let err = crate::fft::rel_l2_error(&yx, &want);
+            println!("fftu xla engine vs sequential: rel err {err:.2e}");
+            if err > 1e-3 {
+                return Err("selftest failed: xla engine".into());
+            }
+        }
+        Err(e) => println!("xla engine skipped: {e:#} (run `make artifacts`)"),
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,264 @@
+//! BSP machine parameters and their calibration.
+//!
+//! The prediction model extends Eq. (2.12) with the two effects §4.2
+//! identifies as dominating real machines:
+//!
+//! ```text
+//! T = sum_i W_i / r                          computation
+//!   + sum_comm 2 * mem_i * g_mem             pack+unpack RAM traffic
+//!   + sum_comm h_i * g_net(p)                network h-relation
+//!   + S * (l + p * t_msg)                    sync + message startup
+//! ```
+//!
+//! `g_net(p)` is a *per-p effective gap*: on a real cluster the cost per
+//! word of an all-to-all depends on p (intra-socket vs inter-node,
+//! message sizes, MPI algorithm choice — all the effects the paper's
+//! §4.2 discusses but cannot model either). [`Machine::fitted_snellius`]
+//! extracts g_net(p) from the paper's own FFTU column (the program whose
+//! ledger we know exactly: one all-to-all of h = (N/p)(1-1/p)), then
+//! predicts every *other* algorithm with the same machine — so the
+//! comparison columns are genuinely predictive, while the FFTU column
+//! is calibrated by construction (stated explicitly in EXPERIMENTS.md).
+
+use std::time::Instant;
+
+use crate::bsp::{CostReport, SuperstepKind};
+use crate::fft::{fftn_inplace, C64, Direction};
+
+/// Effective network gap as a function of p.
+#[derive(Clone, Debug)]
+pub enum GapCurve {
+    /// Constant g (first-principles mode).
+    Const(f64),
+    /// Piecewise (log p)-linear interpolation through fitted points
+    /// `(p, g)`; clamped at the ends.
+    Fitted(Vec<(usize, f64)>),
+}
+
+impl GapCurve {
+    pub fn at(&self, p: usize) -> f64 {
+        match self {
+            GapCurve::Const(g) => *g,
+            GapCurve::Fitted(points) => {
+                assert!(!points.is_empty());
+                if p <= points[0].0 {
+                    return points[0].1;
+                }
+                if p >= points[points.len() - 1].0 {
+                    return points[points.len() - 1].1;
+                }
+                for w in points.windows(2) {
+                    let ((p0, g0), (p1, g1)) = (w[0], w[1]);
+                    if p >= p0 && p <= p1 {
+                        let x = ((p as f64).ln() - (p0 as f64).ln())
+                            / ((p1 as f64).ln() - (p0 as f64).ln());
+                        return g0 + x * (g1 - g0);
+                    }
+                }
+                unreachable!()
+            }
+        }
+    }
+}
+
+/// A BSP machine model.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    /// Sequential flop rate (flops/s).
+    pub r_flops: f64,
+    /// Per-word cost of local pack/unpack traffic (s per complex word
+    /// per pass).
+    pub g_mem: f64,
+    /// Effective network gap (s per word), possibly p-dependent.
+    pub g_net: GapCurve,
+    /// Synchronization latency per communication superstep (s).
+    pub l_sync: f64,
+    /// Message-startup cost charged as `p * t_msg` per communication
+    /// superstep.
+    pub t_msg: f64,
+}
+
+impl Machine {
+    /// First-principles Snellius-like parameters (no fitting):
+    /// - `r` from the paper's sequential FFTW time (17.541 s for
+    ///   `5 * 2^30 * 30` flops -> 9.2 Gflop/s);
+    /// - `g_mem` ~ 5e-9 s/word/pass (~3 GB/s/core effective streaming on
+    ///   AMD Rome under contention). The paper's own FFTU p=1 overhead
+    ///   (40.065 s vs 17.541 s sequential) implies an even higher
+    ///   effective value at p=1 — the paper attributes part of it to
+    ///   twiddle-table recomputation — so the model is expected to
+    ///   *under*-predict the p=1 row (noted in EXPERIMENTS.md);
+    /// - `g_net` from HDR100 injection bandwidth per core.
+    pub fn snellius_like() -> Machine {
+        Machine {
+            name: "snellius-like",
+            r_flops: 9.2e9,
+            g_mem: 5.0e-9,
+            g_net: GapCurve::Const(1.6e-7),
+            l_sync: 1.0e-3,
+            t_msg: 2.0e-5,
+        }
+    }
+
+    /// Snellius machine with `g_net(p)` fitted from a paper FFTU column
+    /// (rows of `(p, seconds)`), given the FFT shape of that table.
+    /// Rows with p = 1 are skipped (no network term to fit).
+    pub fn fitted_snellius(shape: &[usize], fftu_rows: &[(usize, f64)]) -> Machine {
+        let base = Machine::snellius_like();
+        let n: f64 = shape.iter().map(|&x| x as f64).product();
+        let mut points = Vec::new();
+        for &(p, t) in fftu_rows {
+            if p < 2 {
+                continue;
+            }
+            let rep = super::analytic::fftu_report(shape, p);
+            let w: f64 = rep.total_w();
+            let h = rep.total_h() as f64;
+            let mem = 2.0 * (n / p as f64);
+            let resid = t - w / base.r_flops - mem * base.g_mem - base.l_sync - p as f64 * base.t_msg;
+            if resid > 0.0 && h > 0.0 {
+                points.push((p, resid / h));
+            }
+        }
+        Machine { name: "snellius-fitted", g_net: GapCurve::Fitted(points), ..base }
+    }
+
+    /// Measure this host (used for the executed-scale sanity columns).
+    pub fn calibrate() -> Machine {
+        let shape = [64usize, 64, 64];
+        let n: usize = shape.iter().product();
+        let mut data: Vec<C64> =
+            (0..n).map(|i| C64::new((i % 17) as f64, (i % 5) as f64)).collect();
+        fftn_inplace(&mut data, &shape, Direction::Forward); // warm up plans
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            fftn_inplace(&mut data, &shape, Direction::Forward);
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        let r_flops = 5.0 * n as f64 * (n as f64).log2() / dt;
+
+        let words = 1 << 20;
+        let src = vec![C64::new(1.0, 2.0); words];
+        let mut dst = vec![C64::ZERO; words];
+        let t0 = Instant::now();
+        let copy_reps = 8;
+        for _ in 0..copy_reps {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&dst);
+        }
+        let g_mem = t0.elapsed().as_secs_f64() / (copy_reps * words) as f64;
+
+        Machine {
+            name: "calibrated-host",
+            r_flops,
+            g_mem,
+            // Shared-memory "network": same cost as a memory pass.
+            g_net: GapCurve::Const(g_mem),
+            l_sync: 5.0e-6,
+            t_msg: 1.0e-7,
+        }
+    }
+
+    /// Predicted wall-clock for a superstep ledger on `p` processors.
+    pub fn predict(&self, report: &CostReport, p: usize) -> f64 {
+        let mut t = 0.0;
+        let g = self.g_net.at(p);
+        for s in &report.supersteps {
+            match s.kind {
+                SuperstepKind::Computation => t += s.w_max / self.r_flops,
+                SuperstepKind::Communication => {
+                    t += s.mem_max as f64 * self.g_mem
+                        + s.h_max as f64 * g
+                        + p as f64 * self.t_msg
+                        + self.l_sync;
+                }
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::{ProcLedger, SuperstepKind};
+    use crate::report::paper::{TABLE_4_1, TABLE_4_2};
+
+    fn report_with(w: f64, h: usize, mem: usize) -> CostReport {
+        let mut pl = ProcLedger::new();
+        pl.begin(SuperstepKind::Computation, "w");
+        pl.charge_flops(w);
+        pl.begin(SuperstepKind::Communication, "h");
+        pl.charge_words(h, h);
+        pl.charge_mem_words(mem);
+        CostReport::from_procs(&[pl])
+    }
+
+    #[test]
+    fn predict_is_linear_in_components() {
+        let m = Machine {
+            name: "t",
+            r_flops: 1e9,
+            g_mem: 1e-9,
+            g_net: GapCurve::Const(1e-8),
+            l_sync: 1e-3,
+            t_msg: 1e-6,
+        };
+        let t = m.predict(&report_with(1e9, 1_000_000, 500_000), 64);
+        let want = 1.0 + 5e-4 + 0.01 + 64.0 * 1e-6 + 1e-3;
+        assert!((t - want).abs() < 1e-9, "{t} vs {want}");
+    }
+
+    #[test]
+    fn gap_curve_interpolates_and_clamps() {
+        let c = GapCurve::Fitted(vec![(2, 1.0e-7), (8, 3.0e-7)]);
+        assert_eq!(c.at(1), 1.0e-7);
+        assert_eq!(c.at(2), 1.0e-7);
+        assert_eq!(c.at(16), 3.0e-7);
+        let mid = c.at(4);
+        assert!(mid > 1.0e-7 && mid < 3.0e-7, "{mid}");
+    }
+
+    #[test]
+    fn fitted_machine_reproduces_fftu_column() {
+        let shape = [1024usize, 1024, 1024];
+        let rows: Vec<(usize, f64)> =
+            TABLE_4_1.iter().filter_map(|r| r.1.map(|t| (r.0, t))).collect();
+        let m = Machine::fitted_snellius(&shape, &rows);
+        // At fitted p the model must reproduce the paper's FFTU time.
+        for &(p, t_paper) in rows.iter().filter(|(p, _)| *p >= 2) {
+            let rep = super::super::analytic::fftu_report(&shape, p);
+            let t = m.predict(&rep, p);
+            let rel = (t - t_paper).abs() / t_paper;
+            assert!(rel < 0.02, "p={p}: model {t} vs paper {t_paper}");
+        }
+    }
+
+    #[test]
+    fn fitted_machine_for_5d_table() {
+        let shape = [64usize; 5];
+        let rows: Vec<(usize, f64)> =
+            TABLE_4_2.iter().filter_map(|r| r.1.map(|t| (r.0, t))).collect();
+        let m = Machine::fitted_snellius(&shape, &rows);
+        let rep = super::super::analytic::fftu_report(&shape, 4096);
+        let t = m.predict(&rep, 4096);
+        assert!((t - 0.099).abs() / 0.099 < 0.05, "{t}");
+    }
+
+    #[test]
+    fn snellius_reproduces_sequential_time_scale() {
+        let m = Machine::snellius_like();
+        let n = (1u64 << 30) as f64;
+        let t = 5.0 * n * 30.0 / m.r_flops;
+        assert!((t - 17.5).abs() < 0.5, "sequential model time {t}");
+    }
+
+    #[test]
+    fn calibrate_returns_sane_values() {
+        let m = Machine::calibrate();
+        assert!(m.r_flops > 1e8, "flop rate {}", m.r_flops);
+        assert!(m.g_mem > 1e-11 && m.g_mem < 1e-5, "g_mem {}", m.g_mem);
+    }
+}

@@ -1,0 +1,8 @@
+//! BSP cost model (§2.3): machine parameters and analytic per-algorithm
+//! ledgers, used to regenerate the paper's tables at Snellius scale.
+
+pub mod analytic;
+pub mod machine;
+
+pub use analytic::{fftu_report, heffte_report, pencil_report, popovici_report, slab_report};
+pub use machine::Machine;

@@ -1,0 +1,274 @@
+//! Minimal double-precision complex type used throughout the library.
+//!
+//! We deliberately do not pull in `num-complex` (the offline vendor set does
+//! not carry it); the handful of operations an FFT needs are implemented
+//! here, `#[inline]`d, and laid out `#[repr(C)]` so a `&[C64]` can be
+//! reinterpreted as interleaved `(re, im)` pairs when crossing the PJRT
+//! boundary.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A complex number with `f64` components.
+#[derive(Clone, Copy, PartialEq, Default)]
+#[repr(C)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+    pub const I: C64 = C64 { re: 0.0, im: 1.0 };
+
+    #[inline(always)]
+    pub const fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+
+    /// e^{i theta} = cos theta + i sin theta.
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        let (s, c) = theta.sin_cos();
+        C64 { re: c, im: s }
+    }
+
+    /// The primitive n-th root of unity used by the *forward* DFT,
+    /// `omega_n^k = e^{-2 pi i k / n}` (paper Eq. 1.1 convention).
+    #[inline]
+    pub fn root_of_unity(n: usize, k: usize) -> Self {
+        // Reduce k mod n first for accuracy with large k.
+        let k = k % n;
+        Self::cis(-2.0 * std::f64::consts::PI * (k as f64) / (n as f64))
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        C64 { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn scale(self, a: f64) -> Self {
+        C64 { re: self.re * a, im: self.im * a }
+    }
+
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// Multiply by i (used by split-radix style shortcuts).
+    #[inline(always)]
+    pub fn mul_i(self) -> Self {
+        C64 { re: -self.im, im: self.re }
+    }
+
+    /// Multiply by -i.
+    #[inline(always)]
+    pub fn mul_neg_i(self) -> Self {
+        C64 { re: self.im, im: -self.re }
+    }
+
+    /// Fused multiply-add: self * b + c.
+    #[inline(always)]
+    pub fn mul_add(self, b: C64, c: C64) -> Self {
+        C64 {
+            re: self.re.mul_add(b.re, (-self.im).mul_add(b.im, c.re)),
+            im: self.re.mul_add(b.im, self.im.mul_add(b.re, c.im)),
+        }
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn add(self, o: C64) -> C64 {
+        C64 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn sub(self, o: C64) -> C64 {
+        C64 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn mul(self, o: C64) -> C64 {
+        C64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Mul<f64> for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn mul(self, a: f64) -> C64 {
+        self.scale(a)
+    }
+}
+
+impl Div<f64> for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn div(self, a: f64) -> C64 {
+        self.scale(1.0 / a)
+    }
+}
+
+impl Div for C64 {
+    type Output = C64;
+    #[inline]
+    fn div(self, o: C64) -> C64 {
+        let d = o.norm_sqr();
+        C64 {
+            re: (self.re * o.re + self.im * o.im) / d,
+            im: (self.im * o.re - self.re * o.im) / d,
+        }
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn neg(self) -> C64 {
+        C64 { re: -self.re, im: -self.im }
+    }
+}
+
+impl AddAssign for C64 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: C64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for C64 {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: C64) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for C64 {
+    #[inline(always)]
+    fn mul_assign(&mut self, o: C64) {
+        *self = *self * o;
+    }
+}
+
+impl Sum for C64 {
+    fn sum<I: Iterator<Item = C64>>(iter: I) -> C64 {
+        iter.fold(C64::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Debug for C64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.im >= 0.0 {
+            write!(f, "{:.6}+{:.6}i", self.re, self.im)
+        } else {
+            write!(f, "{:.6}-{:.6}i", self.re, -self.im)
+        }
+    }
+}
+
+impl fmt::Display for C64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl From<f64> for C64 {
+    #[inline]
+    fn from(re: f64) -> Self {
+        C64 { re, im: 0.0 }
+    }
+}
+
+/// Max |a - b| over a pair of complex slices (infinity norm of the
+/// difference); used pervasively by tests.
+pub fn max_abs_diff(a: &[C64], b: &[C64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch in max_abs_diff");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (*x - *y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Relative L2 error ||a-b|| / max(||b||, eps); the standard FFT accuracy
+/// metric (compare against a higher-precision oracle in `b`).
+pub fn rel_l2_error(a: &[C64], b: &[C64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (*x - *y).norm_sqr()).sum();
+    let den: f64 = b.iter().map(|y| y.norm_sqr()).sum();
+    (num / den.max(f64::MIN_POSITIVE)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_identities() {
+        let a = C64::new(1.5, -2.5);
+        let b = C64::new(-0.5, 3.0);
+        assert_eq!(a + b - b, a);
+        let prod = a * b;
+        let quot = prod / b;
+        assert!((quot - a).abs() < 1e-12);
+        assert_eq!(a.mul_i(), a * C64::I);
+        assert_eq!(a.mul_neg_i(), a * -C64::I);
+    }
+
+    #[test]
+    fn roots_of_unity_cycle() {
+        let n = 12;
+        for k in 0..4 * n {
+            let w = C64::root_of_unity(n, k);
+            let w_red = C64::root_of_unity(n, k % n);
+            assert!((w - w_red).abs() < 1e-12);
+        }
+        // omega_n^n == 1
+        let mut acc = C64::ONE;
+        let w = C64::root_of_unity(n, 1);
+        for _ in 0..n {
+            acc *= w;
+        }
+        assert!((acc - C64::ONE).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conj_and_norm() {
+        let a = C64::new(3.0, 4.0);
+        assert!((a.abs() - 5.0).abs() < 1e-12);
+        assert_eq!(a.norm_sqr(), 25.0);
+        assert_eq!((a * a.conj()).re, 25.0);
+        assert!((a * a.conj()).im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn mul_add_matches_separate_ops() {
+        let a = C64::new(0.3, 0.7);
+        let b = C64::new(-1.1, 0.2);
+        let c = C64::new(2.0, -3.0);
+        let fused = a.mul_add(b, c);
+        let plain = a * b + c;
+        assert!((fused - plain).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! Sequential FFT substrate — the role FFTW plays for the paper's FFTU.
+//!
+//! Everything here is built from scratch: a complex type, a naive DFT
+//! oracle, a mixed-radix Stockham autosort engine with hard-coded
+//! radix-2/3/4/5/8 butterflies, Bluestein's algorithm for large prime
+//! sizes, a plan cache, and a row-major multidimensional `fftn`. The
+//! parallel algorithms in [`crate::fftu`] and [`crate::baselines`] only
+//! consume the plan-based API, exactly as FFTU consumes FFTW.
+
+pub mod complex;
+pub mod dft;
+pub mod ndfft;
+pub mod plan;
+pub mod real;
+pub mod spectral;
+pub mod stockham;
+
+pub use complex::{max_abs_diff, rel_l2_error, C64};
+pub use dft::{dft, dft_into, dft_nd, Direction};
+pub use ndfft::{fftn_inplace, ifftn_normalized_inplace, NdPlan};
+pub use plan::{fft_inplace, global_planner, ifft_normalized_inplace, Plan, PlanRigor, Planner};
+pub use real::{dct2, dct3, dst2, dst3, irfft, rfft};
+pub use spectral::{fft_omega, fftfreq, fftshift, ifftshift, radial_power_spectrum};

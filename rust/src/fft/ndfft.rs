@@ -1,0 +1,218 @@
+//! Multidimensional sequential FFT (`fftn`) over row-major arrays.
+//!
+//! The d-dimensional transform factorizes into 1D transforms along each
+//! axis (paper Eq. 1.3); we sweep axes last-to-first so the innermost
+//! (contiguous) axis uses the batched path and outer axes use the
+//! interleaved path of [`Plan`] without any explicit transpose.
+
+use std::sync::Arc;
+
+use super::complex::C64;
+use super::dft::Direction;
+use super::plan::{Plan, Planner};
+
+/// Row-major multidimensional FFT plan: one 1D plan per distinct axis
+/// length, plus a reusable scratch sized for the whole array.
+pub struct NdPlan {
+    shape: Vec<usize>,
+    axis_plans: Vec<Arc<Plan>>,
+    total: usize,
+}
+
+impl NdPlan {
+    pub fn new(shape: &[usize], planner: &Planner) -> Self {
+        assert!(!shape.is_empty(), "shape must have at least one dimension");
+        assert!(shape.iter().all(|&n| n >= 1));
+        let axis_plans = shape.iter().map(|&n| planner.plan(n)).collect();
+        let total = shape.iter().product();
+        NdPlan { shape: shape.to_vec(), axis_plans, total }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Scratch length needed by [`NdPlan::execute`].
+    pub fn scratch_len(&self) -> usize {
+        // Interleaved execution over an axis works on chunks of
+        // len*inner; the largest such chunk is bounded by the total, and
+        // Bluestein axes need their own 3m: take the max over axes.
+        let mut need = self.total;
+        for (axis, plan) in self.axis_plans.iter().enumerate() {
+            let inner: usize = self.shape[axis + 1..].iter().product();
+            need = need.max(plan.scratch_len(self.shape[axis] * inner));
+        }
+        need
+    }
+
+    /// Model flops for one execution: `5 N log2 N` (paper §2.3),
+    /// independent of shape.
+    pub fn model_flops(&self) -> f64 {
+        if self.total <= 1 {
+            0.0
+        } else {
+            5.0 * self.total as f64 * (self.total as f64).log2()
+        }
+    }
+
+    /// In-place transform of a row-major array of `total()` elements.
+    pub fn execute(&self, data: &mut [C64], scratch: &mut [C64], dir: Direction) {
+        assert_eq!(data.len(), self.total);
+        for (axis, plan) in self.axis_plans.iter().enumerate() {
+            let len = self.shape[axis];
+            if len == 1 {
+                continue;
+            }
+            let inner: usize = self.shape[axis + 1..].iter().product();
+            let chunk = len * inner;
+            if inner == 1 {
+                // Contiguous lines along the last axis: batch them all.
+                let batch = self.total / len;
+                plan.execute_batch(data, scratch, batch, dir);
+            } else {
+                // Lines with stride `inner`: each outer block of
+                // `len*inner` elements is `inner` interleaved transforms.
+                for block in data.chunks_exact_mut(chunk) {
+                    plan.execute_interleaved(block, scratch, inner, dir);
+                }
+            }
+        }
+    }
+}
+
+/// Transform one axis of a row-major array in place (all lines along
+/// `axis`). Shared by the sequential `NdPlan` and by every parallel
+/// algorithm's "transform the locally available axes" steps.
+pub fn transform_axis(
+    data: &mut [C64],
+    shape: &[usize],
+    axis: usize,
+    plan: &Plan,
+    scratch: &mut [C64],
+    dir: Direction,
+) {
+    let len = shape[axis];
+    assert_eq!(plan.len(), len, "plan length mismatch for axis {axis}");
+    let total: usize = shape.iter().product();
+    assert_eq!(data.len(), total);
+    if len == 1 {
+        return;
+    }
+    let inner: usize = shape[axis + 1..].iter().product();
+    if inner == 1 {
+        plan.execute_batch(data, scratch, total / len, dir);
+    } else {
+        for block in data.chunks_exact_mut(len * inner) {
+            plan.execute_interleaved(block, scratch, inner, dir);
+        }
+    }
+}
+
+/// One-shot convenience: forward/inverse n-dimensional FFT in place.
+pub fn fftn_inplace(data: &mut [C64], shape: &[usize], dir: Direction) {
+    let planner = super::plan::global_planner();
+    let plan = NdPlan::new(shape, planner);
+    let mut scratch = vec![C64::ZERO; plan.scratch_len()];
+    plan.execute(data, &mut scratch, dir);
+}
+
+/// Inverse n-dimensional FFT with 1/N normalization.
+pub fn ifftn_normalized_inplace(data: &mut [C64], shape: &[usize]) {
+    fftn_inplace(data, shape, Direction::Inverse);
+    let inv = 1.0 / data.len() as f64;
+    for v in data.iter_mut() {
+        *v = v.scale(inv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::{max_abs_diff, rel_l2_error};
+    use crate::fft::dft::dft_nd;
+    use crate::testing::{forall, Rng};
+
+    fn rand_array(total: usize, rng: &mut Rng) -> Vec<C64> {
+        (0..total).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+    }
+
+    fn check_shape(shape: &[usize], rng: &mut Rng) {
+        let total: usize = shape.iter().product();
+        let x = rand_array(total, rng);
+        let want = dft_nd(&x, shape, Direction::Forward);
+        let mut got = x.clone();
+        fftn_inplace(&mut got, shape, Direction::Forward);
+        let err = rel_l2_error(&got, &want);
+        assert!(err < 1e-9, "shape {shape:?}: err {err}");
+        ifftn_normalized_inplace(&mut got, shape);
+        assert!(max_abs_diff(&got, &x) < 1e-9, "shape {shape:?} roundtrip");
+    }
+
+    #[test]
+    fn small_shapes_match_reference() {
+        let mut rng = Rng::new(0xabc);
+        for shape in [
+            vec![1usize],
+            vec![4],
+            vec![8, 8],
+            vec![4, 6],
+            vec![3, 5, 7],
+            vec![8, 4, 2],
+            vec![2, 2, 2, 2],
+            vec![4, 4, 4, 4, 4],
+            vec![16, 1, 9],
+        ] {
+            check_shape(&shape, &mut rng);
+        }
+    }
+
+    #[test]
+    fn prop_random_shapes_match_reference() {
+        forall("fftn matches dft_nd", 30, 0xdead, |rng| {
+            let d = rng.range(1, 4);
+            let shape: Vec<usize> = (0..d).map(|_| rng.range(1, 12)).collect();
+            let total: usize = shape.iter().product();
+            let x = rand_array(total, rng);
+            let want = dft_nd(&x, &shape, Direction::Forward);
+            let mut got = x;
+            fftn_inplace(&mut got, &shape, Direction::Forward);
+            let err = rel_l2_error(&got, &want);
+            crate::prop_assert!(err < 1e-8, "shape {shape:?} err {err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Rng::new(11);
+        let shape = [6usize, 10];
+        let total = 60;
+        let x = rand_array(total, &mut rng);
+        let y = rand_array(total, &mut rng);
+        let alpha = C64::new(0.7, -1.3);
+        let combo: Vec<C64> = x.iter().zip(&y).map(|(a, b)| *a * alpha + *b).collect();
+        let mut fx = x.clone();
+        fftn_inplace(&mut fx, &shape, Direction::Forward);
+        let mut fy = y.clone();
+        fftn_inplace(&mut fy, &shape, Direction::Forward);
+        let mut fc = combo;
+        fftn_inplace(&mut fc, &shape, Direction::Forward);
+        let want: Vec<C64> = fx.iter().zip(&fy).map(|(a, b)| *a * alpha + *b).collect();
+        assert!(max_abs_diff(&fc, &want) < 1e-9);
+    }
+
+    #[test]
+    fn shape_with_unit_axes_equals_flat() {
+        let mut rng = Rng::new(12);
+        let x = rand_array(16, &mut rng);
+        let mut a = x.clone();
+        fftn_inplace(&mut a, &[16], Direction::Forward);
+        let mut b = x.clone();
+        fftn_inplace(&mut b, &[1, 16, 1], Direction::Forward);
+        assert!(max_abs_diff(&a, &b) < 1e-12);
+    }
+}

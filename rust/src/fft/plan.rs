@@ -1,0 +1,612 @@
+//! Plan-based sequential FFT execution (the FFTW-substitute API).
+//!
+//! A [`Plan`] is built once for a length `n` and reused for many
+//! executions, mirroring how FFTU builds FFTW plans during setup and runs
+//! them inside the supersteps. Composite `n` with prime factors up to
+//! [`super::stockham::MAX_GENERIC_RADIX`] run through the mixed-radix
+//! Stockham engine; anything else (large primes) is handled by Bluestein's
+//! chirp-z algorithm on a power-of-two grid.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::complex::C64;
+use super::dft::Direction;
+use super::stockham::{factorize, run_stage, Stage};
+
+/// How hard the planner tries; mirrors FFTW's ESTIMATE/MEASURE flags that
+/// the paper's §4.1 discusses. `Estimate` picks the default radix order;
+/// `Measure` additionally times candidate radix orders on a scratch buffer
+/// and keeps the fastest (see `bench planner`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum PlanRigor {
+    #[default]
+    Estimate,
+    Measure,
+}
+
+enum Kind {
+    /// n == 1.
+    Identity,
+    /// Mixed-radix Stockham pipeline.
+    Stockham { stages: Vec<Stage> },
+    /// The paper's sequential four-step framework (Algorithm 2.1) for
+    /// large n: `n = a * b` with `a ~ sqrt(n)`. Steps: (0) `F_b` on the
+    /// `a` interleaved subsequences `x(s : a : n)` — all at once with
+    /// cache-friendly contiguous inner loops; (1) twiddle by
+    /// `w_n^{k s}`; (2+3) `F_a` on the `n/a` contiguous chunks (each
+    /// cache-resident) and a final transpose. Beats the flat Stockham
+    /// once the working set falls out of L2 (see EXPERIMENTS.md §Perf).
+    FourStep {
+        a: usize,
+        b: usize,
+        plan_a: Box<Plan>,
+        plan_b: Box<Plan>,
+        /// `w_n^k` for `k in [b]` (forward); the per-chunk twiddle steps
+        /// through its powers incrementally.
+        tw_step: Vec<C64>,
+    },
+    /// Chirp-z for sizes with large prime factors. Stores the forward
+    /// chirp `b_j = e^{-i pi j^2 / n}` and the *forward* FFT of the
+    /// conjugate-chirp kernel on the length-`m` power-of-two grid.
+    Bluestein {
+        m: usize,
+        chirp: Vec<C64>,
+        kernel_fft_fwd: Vec<C64>,
+        kernel_fft_inv: Vec<C64>,
+        inner: Box<Plan>,
+    },
+}
+
+/// An FFT plan for a fixed length `n`, usable in both directions.
+pub struct Plan {
+    n: usize,
+    kind: Kind,
+}
+
+impl Plan {
+    /// Build a plan for length `n` with default rigor.
+    pub fn new(n: usize) -> Self {
+        Self::with_rigor(n, PlanRigor::Estimate)
+    }
+
+    pub fn with_rigor(n: usize, rigor: PlanRigor) -> Self {
+        assert!(n >= 1, "FFT length must be positive");
+        if n == 1 {
+            return Plan { n, kind: Kind::Identity };
+        }
+        match factorize(n) {
+            Some(factors) => {
+                let order = match rigor {
+                    PlanRigor::Estimate => factors,
+                    PlanRigor::Measure => measure_best_order(n, factors),
+                };
+                Plan { n, kind: Kind::Stockham { stages: build_stages(n, &order) } }
+            }
+            None => Plan { n, kind: build_bluestein(n) },
+        }
+    }
+
+    /// Build a four-step (Algorithm 2.1) plan with split `n = a * (n/a)`.
+    ///
+    /// Measured on this repo's single-core testbed the flat Stockham
+    /// wins (the four-step's two extra memory passes cost more than its
+    /// locality buys — see EXPERIMENTS.md §Perf), so this is an opt-in
+    /// constructor rather than an automatic threshold; on machines with
+    /// small private caches per core the trade-off flips.
+    pub fn four_step_split(n: usize, a: usize) -> Self {
+        assert!(n % a == 0 && a >= 2 && a * a <= n, "invalid four-step split");
+        let b = n / a;
+        let tw_step = (0..b).map(|k| C64::root_of_unity(n, k)).collect();
+        Plan {
+            n,
+            kind: Kind::FourStep {
+                a,
+                b,
+                plan_a: Box::new(Plan::new(a)),
+                plan_b: Box::new(Plan::new(b)),
+                tw_step,
+            },
+        }
+    }
+
+    /// Build a Stockham plan with an explicit radix order (used by the
+    /// `Measure` rigor and by the planner ablation bench).
+    pub fn with_radix_order(n: usize, order: &[usize]) -> Self {
+        assert_eq!(order.iter().product::<usize>(), n, "radix order must multiply to n");
+        Plan { n, kind: Kind::Stockham { stages: build_stages(n, order) } }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Scratch length required by [`Plan::execute`] and friends for a
+    /// buffer holding `total` elements (`total` = s * n * batch).
+    pub fn scratch_len(&self, total: usize) -> usize {
+        match &self.kind {
+            Kind::Identity => 0,
+            Kind::Stockham { .. } => total,
+            Kind::FourStep { plan_a, plan_b, .. } => total
+                .max(plan_a.scratch_len(total))
+                .max(plan_b.scratch_len(total)),
+            // Bluestein needs two length-m lines per transform, but we
+            // process transforms one line at a time, so scratch is 2m plus
+            // the inner plan's own ping-pong buffer.
+            Kind::Bluestein { m, .. } => 3 * m,
+        }
+    }
+
+    /// Model flop count per execution (the paper's `5 n log2 n`
+    /// convention, §2.3), used by the BSP cost ledger.
+    pub fn model_flops(&self) -> f64 {
+        if self.n <= 1 {
+            0.0
+        } else {
+            5.0 * self.n as f64 * (self.n as f64).log2()
+        }
+    }
+
+    /// Transform a single contiguous line in place.
+    pub fn execute(&self, data: &mut [C64], scratch: &mut [C64], dir: Direction) {
+        assert_eq!(data.len(), self.n);
+        self.execute_interleaved(data, scratch, 1, dir);
+    }
+
+    /// Transform `s` interleaved lines in place: element `j` of line `q`
+    /// lives at `data[q + j*s]`; `data.len() == s * n`. This is the layout
+    /// of FFTU superstep 2's strided `F_p` transforms.
+    pub fn execute_interleaved(&self, data: &mut [C64], scratch: &mut [C64], s: usize, dir: Direction) {
+        assert_eq!(data.len(), s * self.n, "data must hold s*n elements");
+        match &self.kind {
+            Kind::Identity => {}
+            Kind::Stockham { stages } => {
+                let scratch = &mut scratch[..data.len()];
+                run_stockham(stages, data, scratch, s, dir);
+            }
+            Kind::FourStep { .. } => self.four_step(data, scratch, s, dir),
+            Kind::Bluestein { .. } => {
+                // Gather each line contiguously, run chirp-z, scatter back.
+                let mut line = vec![C64::ZERO; self.n];
+                for q in 0..s {
+                    for j in 0..self.n {
+                        line[j] = data[q + j * s];
+                    }
+                    self.bluestein_line(&mut line, scratch, dir);
+                    for j in 0..self.n {
+                        data[q + j * s] = line[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Algorithm 2.1 (sequential four-step framework), generalized to
+    /// `s` interleaved lines. All four steps are cache-friendly: the
+    /// `F_b` pass runs all `a*s` interleaved subsequences together with
+    /// contiguous inner loops, the twiddle and `F_a` passes work on
+    /// contiguous `a*s`-element chunks, and the final transposition
+    /// copies `s`-element runs through the scratch buffer.
+    fn four_step(&self, data: &mut [C64], scratch: &mut [C64], s: usize, dir: Direction) {
+        let Kind::FourStep { a, b, plan_a, plan_b, tw_step } = &self.kind else {
+            unreachable!()
+        };
+        let (a, b) = (*a, *b);
+        let n = self.n;
+        // Step 0: z^(s_idx) = F_b(x(s_idx : a : n)) for all s_idx, lines.
+        plan_b.execute_interleaved(data, scratch, s * a, dir);
+        // Step 1: twiddle z^(s_idx)[k] *= w_n^{k * s_idx}. Chunk k holds
+        // s_idx in [a] as runs of s elements; step through powers of
+        // w_n^k incrementally (error ~ a*eps, far below test tolerance).
+        for (k, chunk) in data.chunks_exact_mut(a * s).enumerate() {
+            let step = match dir {
+                Direction::Forward => tw_step[k],
+                Direction::Inverse => tw_step[k].conj(),
+            };
+            let mut factor = step; // factor for s_idx = 1
+            for run in chunk.chunks_exact_mut(s).skip(1) {
+                for v in run {
+                    *v *= factor;
+                }
+                factor *= step;
+            }
+        }
+        // Steps 2+3: y(k : b : n) = F_a(w^(k)); w^(k) is chunk k with
+        // its a entries at stride s.
+        for chunk in data.chunks_exact_mut(a * s) {
+            plan_a.execute_interleaved(chunk, scratch, s, dir);
+        }
+        // Transposition: y[q + (c*b + k)*s] = data[q + (k*a + c)*s],
+        // i.e. a (b, a) -> (a, b) transpose in units of s-element runs,
+        // tiled for cache.
+        const TILE: usize = 32;
+        let scratch = &mut scratch[..s * n];
+        let mut k0 = 0;
+        while k0 < b {
+            let k1 = (k0 + TILE).min(b);
+            let mut c0 = 0;
+            while c0 < a {
+                let c1 = (c0 + TILE).min(a);
+                for k in k0..k1 {
+                    for c in c0..c1 {
+                        let src = (k * a + c) * s;
+                        let dst = (c * b + k) * s;
+                        scratch[dst..dst + s].copy_from_slice(&data[src..src + s]);
+                    }
+                }
+                c0 = c1;
+            }
+            k0 = k1;
+        }
+        data.copy_from_slice(scratch);
+    }
+
+    /// Transform `batch` contiguous lines stored back-to-back
+    /// (`data.len() == batch * n`). All lines progress through the stage
+    /// pipeline together, so per-stage twiddle tables are read once.
+    pub fn execute_batch(&self, data: &mut [C64], scratch: &mut [C64], batch: usize, dir: Direction) {
+        assert_eq!(data.len(), batch * self.n);
+        match &self.kind {
+            Kind::Identity => {}
+            Kind::Stockham { stages } => {
+                let scratch = &mut scratch[..data.len()];
+                run_stockham(stages, data, scratch, 1, dir);
+            }
+            Kind::FourStep { .. } => {
+                for line in data.chunks_exact_mut(self.n) {
+                    self.four_step(line, scratch, 1, dir);
+                }
+            }
+            Kind::Bluestein { .. } => {
+                for line in data.chunks_exact_mut(self.n) {
+                    self.bluestein_line(line, scratch, dir);
+                }
+            }
+        }
+    }
+
+    fn bluestein_line(&self, line: &mut [C64], scratch: &mut [C64], dir: Direction) {
+        let Kind::Bluestein { m, chirp, kernel_fft_fwd, kernel_fft_inv, inner } = &self.kind else {
+            unreachable!()
+        };
+        let m = *m;
+        let n = self.n;
+        let (u, rest) = scratch.split_at_mut(m);
+        let (inner_scratch, _) = rest.split_at_mut(m);
+        // The forward chirp encodes the forward DFT; the inverse DFT uses
+        // the conjugated chirp and the kernel FFT built from it.
+        let conj_chirp = dir == Direction::Inverse;
+        let kernel = if conj_chirp { kernel_fft_inv } else { kernel_fft_fwd };
+        let ch = |j: usize| if conj_chirp { chirp[j].conj() } else { chirp[j] };
+        for j in 0..n {
+            u[j] = line[j] * ch(j);
+        }
+        for v in u[n..].iter_mut() {
+            *v = C64::ZERO;
+        }
+        inner.execute(u, inner_scratch, Direction::Forward);
+        for (uj, kj) in u.iter_mut().zip(kernel) {
+            *uj *= *kj;
+        }
+        inner.execute(u, inner_scratch, Direction::Inverse);
+        let inv_m = 1.0 / m as f64;
+        for k in 0..n {
+            line[k] = u[k].scale(inv_m) * ch(k);
+        }
+    }
+}
+
+/// Largest divisor `a <= sqrt(n)` with a composite-friendly value
+/// (`a >= 8`), or None when n is prime-ish and Bluestein should handle it.
+pub fn best_split(n: usize) -> Option<usize> {
+    let mut best = None;
+    let mut a = 1;
+    while a * a <= n {
+        if n % a == 0 && a >= 8 {
+            best = Some(a);
+        }
+        a += 1;
+    }
+    best
+}
+
+fn build_stages(n: usize, factors: &[usize]) -> Vec<Stage> {
+    let mut stages = Vec::with_capacity(factors.len());
+    let mut sub = n;
+    for &r in factors {
+        stages.push(Stage::new(sub, r));
+        sub /= r;
+    }
+    debug_assert_eq!(sub, 1);
+    stages
+}
+
+fn run_stockham(stages: &[Stage], data: &mut [C64], scratch: &mut [C64], s0: usize, dir: Direction) {
+    let mut s = s0;
+    let mut in_data = true; // current source buffer
+    for stage in stages {
+        if in_data {
+            run_stage(stage, data, scratch, s, dir);
+        } else {
+            run_stage(stage, scratch, data, s, dir);
+        }
+        in_data = !in_data;
+        s *= stage.radix;
+    }
+    if !in_data {
+        data.copy_from_slice(scratch);
+    }
+}
+
+fn build_bluestein(n: usize) -> Kind {
+    let m = (2 * n - 1).next_power_of_two();
+    // b_j = e^{-i pi j^2 / n}; reduce j^2 mod 2n so the angle stays small.
+    let chirp: Vec<C64> = (0..n)
+        .map(|j| {
+            let e = (j * j) % (2 * n);
+            C64::cis(-std::f64::consts::PI * e as f64 / n as f64)
+        })
+        .collect();
+    let inner = Box::new(Plan::new(m));
+    let mut inner_scratch = vec![C64::ZERO; m];
+    let mut make_kernel = |conj: bool| -> Vec<C64> {
+        let mut kernel = vec![C64::ZERO; m];
+        for j in 0..n {
+            let c = if conj { chirp[j] } else { chirp[j].conj() };
+            kernel[j] = c;
+            if j > 0 {
+                kernel[m - j] = c;
+            }
+        }
+        inner.execute(&mut kernel, &mut inner_scratch, Direction::Forward);
+        kernel
+    };
+    let kernel_fft_fwd = make_kernel(false);
+    let kernel_fft_inv = make_kernel(true);
+    Kind::Bluestein { m, chirp, kernel_fft_fwd, kernel_fft_inv, inner }
+}
+
+/// `Measure` rigor: time a handful of candidate radix orders and keep the
+/// fastest, the moral equivalent of FFTW_MEASURE's codelet search.
+fn measure_best_order(n: usize, default: Vec<usize>) -> Vec<usize> {
+    let mut candidates: Vec<Vec<usize>> = vec![default.clone()];
+    // Reversed order, and an all-small-radix variant.
+    let mut rev = default.clone();
+    rev.reverse();
+    candidates.push(rev);
+    let mut small = Vec::new();
+    for &r in &default {
+        match r {
+            8 => small.extend_from_slice(&[2, 2, 2]),
+            4 => small.extend_from_slice(&[2, 2]),
+            _ => small.push(r),
+        }
+    }
+    candidates.push(small);
+    candidates.dedup();
+    let mut buf: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -(i as f64))).collect();
+    let mut scratch = vec![C64::ZERO; n];
+    let reps = (1 << 18) / n.max(1) + 1;
+    let mut best = (f64::INFINITY, default);
+    for cand in candidates {
+        let plan = Plan::with_radix_order(n, &cand);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            plan.execute(&mut buf, &mut scratch, Direction::Forward);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best.0 {
+            best = (dt, cand);
+        }
+    }
+    best.1
+}
+
+/// A thread-safe cache of plans keyed by length; the library-wide planner
+/// plays the role of FFTW's plan store.
+#[derive(Default)]
+pub struct Planner {
+    plans: Mutex<HashMap<usize, Arc<Plan>>>,
+}
+
+impl Planner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn plan(&self, n: usize) -> Arc<Plan> {
+        let mut map = self.plans.lock().unwrap();
+        map.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
+    }
+}
+
+/// Process-wide planner used by the convenience functions and by code
+/// that has no natural place to hang a `Planner` (e.g. examples).
+pub fn global_planner() -> &'static Planner {
+    static PLANNER: OnceLock<Planner> = OnceLock::new();
+    PLANNER.get_or_init(Planner::new)
+}
+
+/// One-shot in-place FFT of a contiguous line (plans are cached).
+pub fn fft_inplace(data: &mut [C64], dir: Direction) {
+    let plan = global_planner().plan(data.len());
+    let mut scratch = vec![C64::ZERO; plan.scratch_len(data.len())];
+    plan.execute(data, &mut scratch, dir);
+}
+
+/// In-place inverse FFT with 1/n normalization.
+pub fn ifft_normalized_inplace(data: &mut [C64]) {
+    let n = data.len();
+    fft_inplace(data, Direction::Inverse);
+    let inv = 1.0 / n as f64;
+    for v in data.iter_mut() {
+        *v = v.scale(inv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::{max_abs_diff, rel_l2_error};
+    use crate::fft::dft::dft;
+    use crate::testing::Rng;
+
+    fn rand_signal(n: usize, rng: &mut Rng) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+    }
+
+    fn check_against_dft(n: usize, rng: &mut Rng) {
+        let x = rand_signal(n, rng);
+        let want = dft(&x, Direction::Forward);
+        let plan = Plan::new(n);
+        let mut got = x.clone();
+        let mut scratch = vec![C64::ZERO; plan.scratch_len(n)];
+        plan.execute(&mut got, &mut scratch, Direction::Forward);
+        let err = rel_l2_error(&got, &want);
+        assert!(err < 1e-9, "n={n}: rel err {err}");
+        // Inverse round-trip.
+        plan.execute(&mut got, &mut scratch, Direction::Inverse);
+        let back: Vec<C64> = got.iter().map(|v| *v / n as f64).collect();
+        assert!(max_abs_diff(&back, &x) < 1e-9, "n={n} roundtrip");
+    }
+
+    #[test]
+    fn matches_dft_all_lengths_up_to_100() {
+        let mut rng = Rng::new(0xfeed);
+        for n in 1..=100 {
+            check_against_dft(n, &mut rng);
+        }
+    }
+
+    #[test]
+    fn matches_dft_powers_of_two() {
+        let mut rng = Rng::new(1);
+        for k in 0..=12 {
+            check_against_dft(1 << k, &mut rng);
+        }
+    }
+
+    #[test]
+    fn matches_dft_awkward_sizes() {
+        let mut rng = Rng::new(2);
+        // Large primes (Bluestein), prime powers, highly composite.
+        for n in [101, 127, 128 * 3, 243, 625, 720, 1009, 37 * 8] {
+            check_against_dft(n, &mut rng);
+        }
+    }
+
+    #[test]
+    fn interleaved_matches_per_line() {
+        let mut rng = Rng::new(3);
+        for (n, s) in [(8usize, 4usize), (12, 3), (16, 16), (5, 7), (37, 2)] {
+            let total = n * s;
+            let data: Vec<C64> = rand_signal(total, &mut rng);
+            // Reference: de-interleave, transform each, re-interleave.
+            let mut want = vec![C64::ZERO; total];
+            for q in 0..s {
+                let line: Vec<C64> = (0..n).map(|j| data[q + j * s]).collect();
+                let out = dft(&line, Direction::Forward);
+                for j in 0..n {
+                    want[q + j * s] = out[j];
+                }
+            }
+            let plan = Plan::new(n);
+            let mut got = data.clone();
+            let mut scratch = vec![C64::ZERO; plan.scratch_len(total).max(total)];
+            plan.execute_interleaved(&mut got, &mut scratch, s, Direction::Forward);
+            assert!(rel_l2_error(&got, &want) < 1e-9, "n={n} s={s}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_line() {
+        let mut rng = Rng::new(4);
+        let (n, b) = (24usize, 5usize);
+        let data = rand_signal(n * b, &mut rng);
+        let mut want = data.clone();
+        for line in want.chunks_exact_mut(n) {
+            let out = dft(line, Direction::Forward);
+            line.copy_from_slice(&out);
+        }
+        let plan = Plan::new(n);
+        let mut got = data;
+        let mut scratch = vec![C64::ZERO; plan.scratch_len(n * b)];
+        plan.execute_batch(&mut got, &mut scratch, b, Direction::Forward);
+        assert!(rel_l2_error(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn four_step_matches_stockham() {
+        // Algorithm 2.1 as an execution strategy must agree with the
+        // flat pipeline, including interleaved lines and the inverse.
+        let mut rng = Rng::new(0x45);
+        for (n, a) in [(256usize, 16usize), (4096, 64), (1 << 14, 128), (60 * 60, 60)] {
+            let x = rand_signal(n, &mut rng);
+            let flat = Plan::new(n);
+            let four = Plan::four_step_split(n, a);
+            let mut want = x.clone();
+            let mut scratch = vec![C64::ZERO; flat.scratch_len(n).max(four.scratch_len(n))];
+            flat.execute(&mut want, &mut scratch, Direction::Forward);
+            let mut got = x.clone();
+            four.execute(&mut got, &mut scratch, Direction::Forward);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 1e-10, "n={n} a={a}: err {err}");
+            // Inverse path too.
+            four.execute(&mut got, &mut scratch, Direction::Inverse);
+            let back: Vec<C64> = got.iter().map(|v| *v / n as f64).collect();
+            assert!(max_abs_diff(&back, &x) < 1e-9, "n={n} roundtrip");
+        }
+        // Interleaved lines through the four-step path.
+        let (n, a, s) = (1024usize, 32usize, 3usize);
+        let x = rand_signal(n * s, &mut rng);
+        let four = Plan::four_step_split(n, a);
+        let flat = Plan::new(n);
+        let mut scratch = vec![C64::ZERO; n * s];
+        let mut got = x.clone();
+        four.execute_interleaved(&mut got, &mut scratch, s, Direction::Forward);
+        let mut want = x.clone();
+        flat.execute_interleaved(&mut want, &mut scratch, s, Direction::Forward);
+        assert!(rel_l2_error(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn measured_plan_is_still_correct() {
+        let mut rng = Rng::new(5);
+        let n = 96;
+        let x = rand_signal(n, &mut rng);
+        let want = dft(&x, Direction::Forward);
+        let plan = Plan::with_rigor(n, PlanRigor::Measure);
+        let mut got = x;
+        let mut scratch = vec![C64::ZERO; plan.scratch_len(n)];
+        plan.execute(&mut got, &mut scratch, Direction::Forward);
+        assert!(rel_l2_error(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn planner_caches() {
+        let planner = Planner::new();
+        let a = planner.plan(64);
+        let b = planner.plan(64);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = Rng::new(6);
+        for n in [16usize, 60, 101] {
+            let x = rand_signal(n, &mut rng);
+            let energy_x: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+            let mut y = x.clone();
+            fft_inplace(&mut y, Direction::Forward);
+            let energy_y: f64 = y.iter().map(|v| v.norm_sqr()).sum();
+            let ratio = energy_y / (n as f64 * energy_x);
+            assert!((ratio - 1.0).abs() < 1e-10, "n={n} parseval ratio {ratio}");
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Real-input transforms: RFFT, DCT-II/III, DST-II/III.
+//!
+//! These are the §6 future-work extensions of the paper ("this could be
+//! extended to related transforms such as the real-to-complex fast
+//! Fourier transform (RFFT), the discrete sine transform (DST), and the
+//! discrete cosine transform (DCT)"), built on the complex plan engine:
+//!
+//! - RFFT of even n uses the classic packing trick: one complex FFT of
+//!   length n/2 plus an O(n) untangling pass — the paper's flop model
+//!   halves, as expected.
+//! - DCT-II uses Makhoul's even-odd permutation + quarter-wave phase;
+//!   DCT-III is its inverse. DST-II/III follow by sign-flip symmetry.
+//!
+//! Everything is validated against naive O(n^2) definitions in the
+//! tests. Parallel (cyclic-distribution) versions would use the zig-zag
+//! cyclic distribution of [2,11]; that remains future work here exactly
+//! as it does in the paper.
+
+use super::complex::C64;
+use super::dft::Direction;
+use super::plan::Plan;
+
+/// Real-to-complex FFT: returns the `n/2 + 1` nonredundant spectrum bins
+/// of a real signal of even length `n` (bins `k > n/2` follow from
+/// conjugate symmetry `X_{n-k} = conj(X_k)`).
+pub fn rfft(x: &[f64]) -> Vec<C64> {
+    let n = x.len();
+    assert!(n >= 2 && n % 2 == 0, "rfft requires even length >= 2");
+    let h = n / 2;
+    // Pack adjacent pairs into complex: z_j = x_{2j} + i x_{2j+1}.
+    let mut z: Vec<C64> = (0..h).map(|j| C64::new(x[2 * j], x[2 * j + 1])).collect();
+    let plan = Plan::new(h);
+    let mut scratch = vec![C64::ZERO; plan.scratch_len(h)];
+    plan.execute(&mut z, &mut scratch, Direction::Forward);
+    // Untangle: X_k = E_k + e^{-2 pi i k / n} O_k where
+    //   E_k = (Z_k + conj(Z_{h-k})) / 2, O_k = (Z_k - conj(Z_{h-k})) / (2i).
+    let mut out = Vec::with_capacity(h + 1);
+    for k in 0..=h {
+        let zk = if k == h { z[0] } else { z[k] };
+        let zc = if k == 0 { z[0] } else { z[h - k] }.conj();
+        let e = (zk + zc).scale(0.5);
+        let o = (zk - zc).scale(0.5).mul_neg_i();
+        let w = C64::root_of_unity(n, k);
+        out.push(e + w * o);
+    }
+    out
+}
+
+/// Inverse of [`rfft`]: reconstructs the real signal of length `n` from
+/// its `n/2 + 1` spectrum bins (unnormalized input convention: pass the
+/// exact output of `rfft`; the 1/n normalization happens here).
+pub fn irfft(spec: &[C64], n: usize) -> Vec<f64> {
+    assert!(n >= 2 && n % 2 == 0);
+    let h = n / 2;
+    assert_eq!(spec.len(), h + 1, "irfft needs n/2 + 1 bins");
+    // Re-tangle into the packed half-length spectrum.
+    let mut z = Vec::with_capacity(h);
+    for k in 0..h {
+        let xk = spec[k];
+        let xc = spec[h - k].conj();
+        let e = (xk + xc).scale(0.5);
+        let o = (xk - xc).scale(0.5) * C64::root_of_unity(n, k).conj();
+        z.push(e + o.mul_i());
+    }
+    let plan = Plan::new(h);
+    let mut scratch = vec![C64::ZERO; plan.scratch_len(h)];
+    plan.execute(&mut z, &mut scratch, Direction::Inverse);
+    let mut out = Vec::with_capacity(n);
+    let inv = 1.0 / h as f64;
+    for v in &z {
+        out.push(v.re * inv);
+        out.push(v.im * inv);
+    }
+    out
+}
+
+/// DCT-II: `y_k = 2 sum_j x_j cos(pi k (2j+1) / (2n))` (the common
+/// unnormalized "dct" convention, matching scipy's `dct(x, type=2)`).
+pub fn dct2(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    assert!(n >= 1);
+    if n == 1 {
+        return vec![2.0 * x[0]];
+    }
+    // Makhoul: v_j = x_{2j}, v_{n-1-j} = x_{2j+1}; then
+    // y_k = 2 Re( e^{-i pi k / (2n)} FFT(v)_k ).
+    let mut v = vec![C64::ZERO; n];
+    for j in 0..n.div_ceil(2) {
+        v[j] = C64::new(x[2 * j], 0.0);
+    }
+    for j in 0..n / 2 {
+        v[n - 1 - j] = C64::new(x[2 * j + 1], 0.0);
+    }
+    let plan = Plan::new(n);
+    let mut scratch = vec![C64::ZERO; plan.scratch_len(n)];
+    plan.execute(&mut v, &mut scratch, Direction::Forward);
+    (0..n)
+        .map(|k| {
+            let w = C64::cis(-std::f64::consts::PI * k as f64 / (2.0 * n as f64));
+            2.0 * (w * v[k]).re
+        })
+        .collect()
+}
+
+/// DCT-III (the inverse of DCT-II up to a factor `2n`):
+/// `y_j = x_0 + 2 sum_{k>=1} x_k cos(pi k (2j+1) / (2n))`.
+pub fn dct3(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    assert!(n >= 1);
+    if n == 1 {
+        return vec![x[0]];
+    }
+    // Invert Makhoul: V_k = e^{i pi k/(2n)} (x_k - i x_{n-k}) / 2 with
+    // x_n := 0, then v = IFFT(V) and un-permute.
+    let mut vk = vec![C64::ZERO; n];
+    for k in 0..n {
+        let xk = x[k];
+        let xn = if k == 0 { 0.0 } else { x[n - k] };
+        let w = C64::cis(std::f64::consts::PI * k as f64 / (2.0 * n as f64));
+        vk[k] = w * C64::new(xk, -xn);
+    }
+    let plan = Plan::new(n);
+    let mut scratch = vec![C64::ZERO; plan.scratch_len(n)];
+    plan.execute(&mut vk, &mut scratch, Direction::Inverse);
+    // Un-permute (inverse of the Makhoul even/odd ordering). The
+    // unnormalized inverse FFT supplies exactly the factor the textbook
+    // DCT-III definition needs — verified against the naive O(n^2)
+    // definition and by the dct3(dct2(x)) = 2n x identity in the tests.
+    let mut y = vec![0.0; n];
+    for j in 0..n.div_ceil(2) {
+        y[2 * j] = vk[j].re;
+    }
+    for j in 0..n / 2 {
+        y[2 * j + 1] = vk[n - 1 - j].re;
+    }
+    y
+}
+
+/// DST-II: `y_k = 2 sum_j x_j sin(pi (k+1) (2j+1) / (2n))` (scipy
+/// `dst(x, type=2)` convention). Computed from DCT-II by the sign-flip
+/// reflection `x'_j = (-1)^j x_j`, which maps DST-II_k to DCT-II_{n-1-k}.
+pub fn dst2(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let flipped: Vec<f64> =
+        x.iter().enumerate().map(|(j, &v)| if j % 2 == 0 { v } else { -v }).collect();
+    let c = dct2(&flipped);
+    (0..n).map(|k| c[n - 1 - k]).collect()
+}
+
+/// DST-III, the (scaled) inverse of DST-II: same reflection trick.
+pub fn dst3(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let reversed: Vec<f64> = (0..n).map(|k| x[n - 1 - k]).collect();
+    let c = dct3(&reversed);
+    c.iter().enumerate().map(|(j, &v)| if j % 2 == 0 { v } else { -v }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::{dft, Direction as Dir};
+    use crate::testing::{forall, Rng};
+    use std::f64::consts::PI;
+
+    fn rand_real(n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| rng.f64_signed()).collect()
+    }
+
+    fn naive_dct2(x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                2.0 * (0..n)
+                    .map(|j| x[j] * (PI * k as f64 * (2 * j + 1) as f64 / (2.0 * n as f64)).cos())
+                    .sum::<f64>()
+            })
+            .collect()
+    }
+
+    fn naive_dst2(x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                2.0 * (0..n)
+                    .map(|j| {
+                        x[j] * (PI * (k + 1) as f64 * (2 * j + 1) as f64 / (2.0 * n as f64)).sin()
+                    })
+                    .sum::<f64>()
+            })
+            .collect()
+    }
+
+    fn naive_dct3(x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        (0..n)
+            .map(|j| {
+                x[0] + 2.0
+                    * (1..n)
+                        .map(|k| {
+                            x[k] * (PI * k as f64 * (2 * j + 1) as f64 / (2.0 * n as f64)).cos()
+                        })
+                        .sum::<f64>()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rfft_matches_complex_fft() {
+        let mut rng = Rng::new(0x8EA1);
+        for n in [2usize, 4, 8, 16, 60, 128, 1024] {
+            let x = rand_real(n, &mut rng);
+            let xc: Vec<C64> = x.iter().map(|&v| C64::new(v, 0.0)).collect();
+            let full = dft(&xc, Dir::Forward);
+            let half = rfft(&x);
+            assert_eq!(half.len(), n / 2 + 1);
+            for k in 0..=n / 2 {
+                assert!((half[k] - full[k]).abs() < 1e-9 * n as f64, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip() {
+        let mut rng = Rng::new(0x8EA2);
+        for n in [2usize, 6, 32, 100, 512] {
+            let x = rand_real(n, &mut rng);
+            let back = irfft(&rfft(&x), n);
+            let err = x.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-10, "n={n}: {err}");
+        }
+    }
+
+    #[test]
+    fn prop_rfft_conjugate_symmetry_consistency() {
+        forall("rfft equals full FFT half-spectrum", 30, 0x8EA3, |rng| {
+            let n = 2 * rng.range(1, 64);
+            let x = rand_real(n, rng);
+            let xc: Vec<C64> = x.iter().map(|&v| C64::new(v, 0.0)).collect();
+            let full = dft(&xc, Dir::Forward);
+            let half = rfft(&x);
+            for k in 0..=n / 2 {
+                crate::prop_assert!(
+                    (half[k] - full[k]).abs() < 1e-8 * n as f64,
+                    "n={n} k={k}: {:?} vs {:?}",
+                    half[k],
+                    full[k]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dct2_matches_naive() {
+        let mut rng = Rng::new(0xDC2);
+        for n in [1usize, 2, 3, 4, 8, 15, 16, 60, 128] {
+            let x = rand_real(n, &mut rng);
+            let got = dct2(&x);
+            let want = naive_dct2(&x);
+            let err =
+                got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-8 * n as f64, "n={n}: {err}");
+        }
+    }
+
+    #[test]
+    fn dct3_matches_naive() {
+        let mut rng = Rng::new(0xDC3);
+        for n in [1usize, 2, 4, 8, 16, 60] {
+            let x = rand_real(n, &mut rng);
+            let got = dct3(&x);
+            let want = naive_dct3(&x);
+            let err =
+                got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-8 * n as f64, "n={n}: {err}");
+        }
+    }
+
+    #[test]
+    fn dct_roundtrip_identity() {
+        // DCT-III(DCT-II(x)) = 2n x  (textbook unnormalized pair).
+        let mut rng = Rng::new(0xDC4);
+        for n in [2usize, 8, 32, 100] {
+            let x = rand_real(n, &mut rng);
+            let back = dct3(&dct2(&x));
+            let err = x
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (b / (2.0 * n as f64) - a).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-9 * n as f64, "n={n}: {err}");
+        }
+    }
+
+    #[test]
+    fn dst2_matches_naive() {
+        let mut rng = Rng::new(0xD52);
+        for n in [1usize, 2, 4, 8, 16, 60, 128] {
+            let x = rand_real(n, &mut rng);
+            let got = dst2(&x);
+            let want = naive_dst2(&x);
+            let err =
+                got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-8 * n as f64, "n={n}: {err}");
+        }
+    }
+
+    #[test]
+    fn dst_roundtrip_identity() {
+        let mut rng = Rng::new(0xD53);
+        for n in [2usize, 8, 32] {
+            let x = rand_real(n, &mut rng);
+            let back = dst3(&dst2(&x));
+            let err = x
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (b / (2.0 * n as f64) - a).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-9 * n as f64, "n={n}: {err}");
+        }
+    }
+}

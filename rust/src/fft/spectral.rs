@@ -1,0 +1,125 @@
+//! Spectral-analysis helpers: frequency grids, fftshift, power spectra.
+//!
+//! Small utilities every FFT consumer ends up writing; used by the
+//! examples (Poisson k-vectors, wave-packet momenta, turbulence-style
+//! spectra) and kept here so applications built on the library don't
+//! have to re-derive sign/ordering conventions.
+
+use super::complex::C64;
+
+/// DFT sample frequencies in cycles per unit, matching `numpy.fft.fftfreq`:
+/// `[0, 1, ..., n/2-1, -n/2, ..., -1] / (n * d)`.
+pub fn fftfreq(n: usize, d: f64) -> Vec<f64> {
+    let scale = 1.0 / (n as f64 * d);
+    (0..n)
+        .map(|k| {
+            let signed = if k <= (n - 1) / 2 { k as f64 } else { k as f64 - n as f64 };
+            signed * scale
+        })
+        .collect()
+}
+
+/// Angular frequencies `2 pi * fftfreq` (the k-vectors spectral solvers
+/// multiply by).
+pub fn fft_omega(n: usize, length: f64) -> Vec<f64> {
+    fftfreq(n, length / n as f64)
+        .into_iter()
+        .map(|f| 2.0 * std::f64::consts::PI * f)
+        .collect()
+}
+
+/// Swap half-spaces so the zero-frequency bin sits at the center
+/// (numpy's `fftshift`), any rotation amount handled for odd n.
+pub fn fftshift<T: Copy>(x: &[T]) -> Vec<T> {
+    let n = x.len();
+    let mid = n.div_ceil(2);
+    let mut out = Vec::with_capacity(n);
+    out.extend_from_slice(&x[mid..]);
+    out.extend_from_slice(&x[..mid]);
+    out
+}
+
+/// Inverse of [`fftshift`].
+pub fn ifftshift<T: Copy>(x: &[T]) -> Vec<T> {
+    let n = x.len();
+    let mid = n / 2;
+    let mut out = Vec::with_capacity(n);
+    out.extend_from_slice(&x[mid..]);
+    out.extend_from_slice(&x[..mid]);
+    out
+}
+
+/// Isotropic (radially binned) power spectrum of a d-dimensional
+/// spectrum array: bin `|X[k]|^2` by `round(|k|)` over integer mode
+/// numbers. The classic diagnostic for turbulence / random-field
+/// examples.
+pub fn radial_power_spectrum(spec: &[C64], shape: &[usize]) -> Vec<f64> {
+    let n: usize = shape.iter().product();
+    assert_eq!(spec.len(), n);
+    let kmax = shape.iter().map(|&s| s / 2).fold(0usize, |a, b| a.max(b));
+    let mut power = vec![0.0; kmax + 1];
+    for (off, v) in spec.iter().enumerate() {
+        let idx = crate::dist::unravel(off, shape);
+        let mut k2 = 0.0f64;
+        for (l, &i) in idx.iter().enumerate() {
+            let s = shape[l];
+            let signed = if i <= s / 2 { i as f64 } else { i as f64 - s as f64 };
+            k2 += signed * signed;
+        }
+        let bin = k2.sqrt().round() as usize;
+        if bin <= kmax {
+            power[bin] += v.norm_sqr();
+        }
+    }
+    power
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fftn_inplace, Direction};
+
+    #[test]
+    fn fftfreq_matches_numpy_convention() {
+        let f = fftfreq(8, 1.0);
+        assert_eq!(f, vec![0.0, 0.125, 0.25, 0.375, -0.5, -0.375, -0.25, -0.125]);
+        let f = fftfreq(5, 1.0);
+        assert_eq!(f, vec![0.0, 0.2, 0.4, -0.4, -0.2]);
+    }
+
+    #[test]
+    fn shift_roundtrip_even_and_odd() {
+        for n in [6usize, 7] {
+            let x: Vec<usize> = (0..n).collect();
+            assert_eq!(ifftshift(&fftshift(&x)), x, "n={n}");
+        }
+        // Zero lands in the middle after shift.
+        let sh = fftshift(&fftfreq(8, 1.0));
+        assert_eq!(sh[4], 0.0);
+    }
+
+    #[test]
+    fn radial_spectrum_localizes_single_mode() {
+        // A pure mode at |k| = 3 puts all its power in bin 3.
+        let shape = [16usize, 16];
+        let n = 256;
+        let mut x = vec![C64::ZERO; n];
+        for (off, v) in x.iter_mut().enumerate() {
+            let i = off / 16;
+            let _j = off % 16;
+            *v = C64::cis(2.0 * std::f64::consts::PI * 3.0 * i as f64 / 16.0);
+        }
+        let mut spec = x;
+        fftn_inplace(&mut spec, &shape, Direction::Forward);
+        let power = radial_power_spectrum(&spec, &shape);
+        let total: f64 = power.iter().sum();
+        assert!(power[3] / total > 0.999, "{power:?}");
+    }
+
+    #[test]
+    fn fft_omega_scales_with_domain() {
+        let w = fft_omega(8, 2.0 * std::f64::consts::PI);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        assert!((w[7] + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,351 @@
+//! Mixed-radix Stockham autosort FFT stages.
+//!
+//! The Stockham formulation ping-pongs between two buffers and never
+//! performs a bit-reversal (or digit-reversal) permutation: each stage
+//! writes its outputs already sorted. This is the same reason the paper's
+//! four-step framework is attractive in parallel — data movement is
+//! merged into the butterfly passes instead of being a separate pass.
+//!
+//! Stage recurrence (decimation in frequency, forward sign):
+//! with current sub-length `n`, radix `r`, `m = n / r` and interleave
+//! stride `s`, for `p in [m]`, `q in [s]`:
+//!
+//! ```text
+//!   a_i = src[q + s*(p + m*i)]              i in [r]
+//!   b_k = sum_i a_i * w_r^{ik}              (r-point DFT)
+//!   dst[q + s*(r*p + k)] = b_k * w_n^{pk}
+//! ```
+//!
+//! then recurse with `n <- m`, `s <- s*r`. The interleave stride `s`
+//! doubles as a *batch* mechanism: a contiguous region of `s0 * n`
+//! elements holding `s0` interleaved transforms (element `j` of transform
+//! `q` at offset `q + j*s0`) is transformed wholesale by starting the
+//! recursion at `s = s0`. FFTU's superstep 2 (strided `F_p` transforms,
+//! Alg. 2.3 line 7) maps onto exactly this layout.
+
+use super::complex::C64;
+use super::dft::Direction;
+
+/// Radix sequence for a composite size, greedily preferring larger
+/// hard-coded butterflies. Returns `None` if a prime factor larger than
+/// [`MAX_GENERIC_RADIX`] remains (the caller then uses Bluestein).
+pub fn factorize(mut n: usize) -> Option<Vec<usize>> {
+    assert!(n >= 1);
+    let mut factors = Vec::new();
+    for &r in &[8usize, 4, 2] {
+        while n % r == 0 {
+            factors.push(r);
+            n /= r;
+        }
+    }
+    for &r in &[3usize, 5, 7] {
+        while n % r == 0 {
+            factors.push(r);
+            n /= r;
+        }
+    }
+    let mut r = 11;
+    while n > 1 {
+        if r > MAX_GENERIC_RADIX {
+            return None;
+        }
+        while n % r == 0 {
+            factors.push(r);
+            n /= r;
+        }
+        r += 2;
+    }
+    Some(factors)
+}
+
+/// Largest prime handled by the generic O(r^2) butterfly before we switch
+/// the whole transform to Bluestein.
+pub const MAX_GENERIC_RADIX: usize = 31;
+
+/// One Stockham stage: sub-length `n`, radix `r`, and the twiddle table
+/// `w_n^{pk}` laid out as `tw[p*r + k]` for `p in [n/r]`, `k in [r]`.
+pub struct Stage {
+    pub radix: usize,
+    pub sub_len: usize,
+    /// Twiddles for the *forward* direction; the inverse conjugates on the
+    /// fly (cheaper than storing both tables, and the conjugation fuses
+    /// into the butterfly's final multiply).
+    pub twiddle: Vec<C64>,
+    /// Forward r-point DFT weights `w_r^{ik}`, `[i*r + k]`, used by the
+    /// generic butterfly only (hard-coded radices ignore it).
+    pub dft_w: Vec<C64>,
+}
+
+impl Stage {
+    pub fn new(sub_len: usize, radix: usize) -> Self {
+        let m = sub_len / radix;
+        let mut twiddle = Vec::with_capacity(m * radix);
+        for p in 0..m {
+            for k in 0..radix {
+                twiddle.push(C64::root_of_unity(sub_len, p * k));
+            }
+        }
+        let dft_w = if matches!(radix, 2 | 3 | 4 | 5 | 8) {
+            Vec::new()
+        } else {
+            let mut w = Vec::with_capacity(radix * radix);
+            for i in 0..radix {
+                for k in 0..radix {
+                    w.push(C64::root_of_unity(radix, i * k));
+                }
+            }
+            w
+        };
+        Stage { radix, sub_len, twiddle, dft_w }
+    }
+}
+
+#[inline(always)]
+fn tw(t: C64, dir: Direction) -> C64 {
+    match dir {
+        Direction::Forward => t,
+        Direction::Inverse => t.conj(),
+    }
+}
+
+/// Execute one stage from `src` into `dst`.
+///
+/// `s` is the interleave stride at this stage; `src.len() == dst.len() ==
+/// s * n` where `n == stage.sub_len * (s_initial pieces already
+/// processed)` — callers pass the full buffers and the stage works over
+/// all of them.
+pub fn run_stage(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, dir: Direction) {
+    let r = stage.radix;
+    let n = stage.sub_len;
+    let m = n / r;
+    debug_assert_eq!(src.len() % (s * n), 0);
+    let blocks = src.len() / (s * n);
+    for blk in 0..blocks {
+        let src = &src[blk * s * n..(blk + 1) * s * n];
+        let dst = &mut dst[blk * s * n..(blk + 1) * s * n];
+        match r {
+            2 => stage_r2(stage, src, dst, s, m, dir),
+            3 => stage_r3(stage, src, dst, s, m, dir),
+            4 => stage_r4(stage, src, dst, s, m, dir),
+            5 => stage_r5(stage, src, dst, s, m, dir),
+            8 => stage_r8(stage, src, dst, s, m, dir),
+            _ => stage_generic(stage, src, dst, s, m, dir),
+        }
+    }
+}
+
+fn stage_r2(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, m: usize, dir: Direction) {
+    for p in 0..m {
+        let w = tw(stage.twiddle[p * 2 + 1], dir);
+        let (i0, i1) = (s * p, s * (p + m));
+        let o = s * 2 * p;
+        for q in 0..s {
+            let a = src[q + i0];
+            let b = src[q + i1];
+            dst[q + o] = a + b;
+            dst[q + o + s] = (a - b) * w;
+        }
+    }
+}
+
+fn stage_r4(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, m: usize, dir: Direction) {
+    // Forward radix-4 DFT: b_k = sum_i a_i (-i)^{ik}; inverse flips the
+    // sign of the imaginary rotations.
+    let fwd = dir == Direction::Forward;
+    for p in 0..m {
+        let w1 = tw(stage.twiddle[p * 4 + 1], dir);
+        let w2 = tw(stage.twiddle[p * 4 + 2], dir);
+        let w3 = tw(stage.twiddle[p * 4 + 3], dir);
+        let base = s * p;
+        let o = s * 4 * p;
+        for q in 0..s {
+            let a0 = src[q + base];
+            let a1 = src[q + base + s * m];
+            let a2 = src[q + base + s * 2 * m];
+            let a3 = src[q + base + s * 3 * m];
+            let t0 = a0 + a2;
+            let t1 = a0 - a2;
+            let t2 = a1 + a3;
+            let t3 = if fwd { (a1 - a3).mul_neg_i() } else { (a1 - a3).mul_i() };
+            dst[q + o] = t0 + t2;
+            dst[q + o + s] = (t1 + t3) * w1;
+            dst[q + o + 2 * s] = (t0 - t2) * w2;
+            dst[q + o + 3 * s] = (t1 - t3) * w3;
+        }
+    }
+}
+
+fn stage_r3(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, m: usize, dir: Direction) {
+    // 3-point DFT via the standard real/imag split:
+    //   b0 = a0 + a1 + a2
+    //   b1 = a0 + c*(a1+a2) +/- i s*(a1-a2) with c = cos(2pi/3)-... use
+    // t1 = a1 + a2, t2 = a0 - t1/2, t3 = sin(pi/3)*(a1 - a2)
+    //   forward: b1 = t2 - i t3, b2 = t2 + i t3
+    const SIN3: f64 = 0.866_025_403_784_438_6; // sin(pi/3)
+    let fwd = dir == Direction::Forward;
+    for p in 0..m {
+        let w1 = tw(stage.twiddle[p * 3 + 1], dir);
+        let w2 = tw(stage.twiddle[p * 3 + 2], dir);
+        let base = s * p;
+        let o = s * 3 * p;
+        for q in 0..s {
+            let a0 = src[q + base];
+            let a1 = src[q + base + s * m];
+            let a2 = src[q + base + s * 2 * m];
+            let t1 = a1 + a2;
+            let t2 = a0 - t1.scale(0.5);
+            let t3 = (a1 - a2).scale(SIN3);
+            let (b1, b2) = if fwd {
+                (t2 - t3.mul_i(), t2 + t3.mul_i())
+            } else {
+                (t2 + t3.mul_i(), t2 - t3.mul_i())
+            };
+            dst[q + o] = a0 + t1;
+            dst[q + o + s] = b1 * w1;
+            dst[q + o + 2 * s] = b2 * w2;
+        }
+    }
+}
+
+fn stage_r5(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, m: usize, dir: Direction) {
+    // Winograd-style 5-point butterfly.
+    const C1: f64 = 0.309_016_994_374_947_45; // cos(2pi/5)
+    const C2: f64 = -0.809_016_994_374_947_5; // cos(4pi/5)
+    const S1: f64 = 0.951_056_516_295_153_5; // sin(2pi/5)
+    const S2: f64 = 0.587_785_252_292_473_1; // sin(4pi/5)
+    let sign = if dir == Direction::Forward { 1.0 } else { -1.0 };
+    for p in 0..m {
+        let w1 = tw(stage.twiddle[p * 5 + 1], dir);
+        let w2 = tw(stage.twiddle[p * 5 + 2], dir);
+        let w3 = tw(stage.twiddle[p * 5 + 3], dir);
+        let w4 = tw(stage.twiddle[p * 5 + 4], dir);
+        let base = s * p;
+        let o = s * 5 * p;
+        for q in 0..s {
+            let a0 = src[q + base];
+            let a1 = src[q + base + s * m];
+            let a2 = src[q + base + s * 2 * m];
+            let a3 = src[q + base + s * 3 * m];
+            let a4 = src[q + base + s * 4 * m];
+            let t1 = a1 + a4;
+            let t2 = a2 + a3;
+            let t3 = a1 - a4;
+            let t4 = a2 - a3;
+            let m1 = a0 + t1.scale(C1) + t2.scale(C2);
+            let m2 = a0 + t1.scale(C2) + t2.scale(C1);
+            // forward: -i * (S1 t3 + S2 t4), -i * (S2 t3 - S1 t4)
+            let m3 = (t3.scale(S1) + t4.scale(S2)).mul_neg_i().scale(sign);
+            let m4 = (t3.scale(S2) - t4.scale(S1)).mul_neg_i().scale(sign);
+            dst[q + o] = a0 + t1 + t2;
+            dst[q + o + s] = (m1 + m3) * w1;
+            dst[q + o + 2 * s] = (m2 + m4) * w2;
+            dst[q + o + 3 * s] = (m2 - m4) * w3;
+            dst[q + o + 4 * s] = (m1 - m3) * w4;
+        }
+    }
+}
+
+fn stage_r8(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, m: usize, dir: Direction) {
+    // Radix-8 butterfly built from two radix-4 halves plus +/- pi/4
+    // rotations; keeps the stage count low for the (power-of-two) sizes
+    // the paper benchmarks (1024^3, 64^5, 2^24 x 64).
+    const INV_SQRT2: f64 = std::f64::consts::FRAC_1_SQRT_2;
+    let fwd = dir == Direction::Forward;
+    let rot_i = |v: C64| if fwd { v.mul_neg_i() } else { v.mul_i() };
+    // e^{-i pi/4} forward, conjugate inverse
+    let w8 = if fwd {
+        C64::new(INV_SQRT2, -INV_SQRT2)
+    } else {
+        C64::new(INV_SQRT2, INV_SQRT2)
+    };
+    let w8_3 = if fwd {
+        C64::new(-INV_SQRT2, -INV_SQRT2)
+    } else {
+        C64::new(-INV_SQRT2, INV_SQRT2)
+    };
+    for p in 0..m {
+        let base = s * p;
+        let o = s * 8 * p;
+        for q in 0..s {
+            let a: [C64; 8] = std::array::from_fn(|i| src[q + base + s * (i * m)]);
+            // even half: radix-4 on a0,a2,a4,a6
+            let e0 = a[0] + a[4];
+            let e1 = a[0] - a[4];
+            let e2 = a[2] + a[6];
+            let e3 = rot_i(a[2] - a[6]);
+            let even = [e0 + e2, e1 + e3, e0 - e2, e1 - e3];
+            // odd half: radix-4 on a1,a3,a5,a7
+            let o0 = a[1] + a[5];
+            let o1 = a[1] - a[5];
+            let o2 = a[3] + a[7];
+            let o3 = rot_i(a[3] - a[7]);
+            let odd4 = [o0 + o2, o1 + o3, o0 - o2, o1 - o3];
+            // twiddle odd half by w8^k
+            let odd = [
+                odd4[0],
+                odd4[1] * w8,
+                rot_i(odd4[2]),
+                odd4[3] * w8_3,
+            ];
+            for k in 0..4 {
+                let t = tw(stage.twiddle[p * 8 + k], dir);
+                let t2 = tw(stage.twiddle[p * 8 + k + 4], dir);
+                dst[q + o + k * s] = (even[k] + odd[k]) * t;
+                dst[q + o + (k + 4) * s] = (even[k] - odd[k]) * t2;
+            }
+        }
+    }
+}
+
+fn stage_generic(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, m: usize, dir: Direction) {
+    let r = stage.radix;
+    let mut a = vec![C64::ZERO; r];
+    for p in 0..m {
+        let base = s * p;
+        let o = s * r * p;
+        for q in 0..s {
+            for (i, ai) in a.iter_mut().enumerate() {
+                *ai = src[q + base + s * (i * m)];
+            }
+            for k in 0..r {
+                let mut acc = C64::ZERO;
+                for (i, &ai) in a.iter().enumerate() {
+                    acc = ai.mul_add(tw(stage.dft_w[i * r + k], dir), acc);
+                }
+                dst[q + o + k * s] = acc * tw(stage.twiddle[p * r + k], dir);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorize_composites() {
+        assert_eq!(factorize(1).unwrap(), vec![]);
+        assert_eq!(factorize(8).unwrap(), vec![8]);
+        assert_eq!(factorize(16).unwrap(), vec![8, 2]);
+        assert_eq!(factorize(64).unwrap(), vec![8, 8]);
+        assert_eq!(factorize(60).unwrap(), vec![4, 3, 5]);
+        assert_eq!(factorize(77).unwrap(), vec![7, 11]);
+        assert_eq!(factorize(31).unwrap(), vec![31]);
+    }
+
+    #[test]
+    fn factorize_large_prime_fails_over_to_bluestein() {
+        assert!(factorize(37).is_none());
+        assert!(factorize(2 * 37).is_none());
+        assert!(factorize(1009).is_none());
+    }
+
+    #[test]
+    fn factors_multiply_back() {
+        for n in 1..=200usize {
+            if let Some(f) = factorize(n) {
+                assert_eq!(f.iter().product::<usize>(), n, "n={n}");
+            }
+        }
+    }
+}

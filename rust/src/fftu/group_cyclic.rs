@@ -1,0 +1,119 @@
+//! Group-cyclic distribution support (§2.3).
+//!
+//! The paper notes: "It is possible to scale beyond p_max = sqrt(N), but
+//! in that case more than one communication superstep is needed and a
+//! generalization of the cyclic distribution must be used, called the
+//! group-cyclic distribution [10]". FFTU itself — like the paper's own
+//! implementation — stays within the single-all-to-all regime; this
+//! module provides the distribution machinery (assignment formula,
+//! validation, conversion plans to/from cyclic) that the multi-superstep
+//! extension of [10]/[2] builds on, plus the scaling analysis exposed by
+//! `fftu pmax`.
+
+use crate::dist::{AxisDist, GridDist, RedistPlan};
+
+/// Group-cyclic distribution of a d-dimensional array: cycle `c_l` per
+/// axis (paper §2.3: element `x_j` on processor
+/// `(j div (c n / p)) c + j mod c`).
+pub fn group_cyclic_dist(
+    shape: &[usize],
+    pgrid: &[usize],
+    cycles: &[usize],
+) -> Result<GridDist, String> {
+    if shape.len() != pgrid.len() || shape.len() != cycles.len() {
+        return Err("shape/pgrid/cycles rank mismatch".into());
+    }
+    let axes: Vec<AxisDist> = pgrid
+        .iter()
+        .zip(cycles)
+        .map(|(&p, &c)| AxisDist::GroupCyclic { p, c })
+        .collect();
+    GridDist::new(shape, &axes)
+}
+
+/// Redistribution plan from the d-dimensional cyclic distribution to a
+/// group-cyclic one over the same processor grid — the building block
+/// of the multi-superstep beyond-sqrt(N) algorithm, and of applications
+/// (§6) that need block-distributed output for non-FFT phases
+/// (`c = 1` makes every axis a block distribution).
+pub fn cyclic_to_group_cyclic(
+    shape: &[usize],
+    pgrid: &[usize],
+    cycles: &[usize],
+) -> Result<RedistPlan, String> {
+    let cyc = GridDist::cyclic(shape, pgrid)?;
+    let gc = group_cyclic_dist(shape, pgrid, cycles)?;
+    RedistPlan::new(&cyc, &gc)
+}
+
+/// How many communication supersteps the beyond-sqrt(N) extension of
+/// [10] needs for a 1D FFT of length `n` on `p` processors: 1 while
+/// `p^2 <= n`, and in general `ceil(log(p) / log(n/p))` passes, each
+/// splitting the remaining butterfly stages across groups.
+pub fn comm_supersteps_needed(n: usize, p: usize) -> usize {
+    assert!(p >= 1 && n >= p && n % p == 0);
+    if p == 1 {
+        return 0;
+    }
+    if p * p <= n {
+        return 1;
+    }
+    let np = (n / p) as f64;
+    ((p as f64).ln() / np.ln()).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::C64;
+
+    #[test]
+    fn paper_assignment_formula() {
+        // §2.3: x_j assigned to P((j div (cn/p)) c + j mod c).
+        let (n, p, c) = (48usize, 8usize, 4usize);
+        let dist = group_cyclic_dist(&[n], &[p], &[c]).unwrap();
+        for j in 0..n {
+            let want = (j / (c * n / p)) * c + j % c;
+            assert_eq!(dist.owner_of(&[j]).0, want, "j={j}");
+        }
+    }
+
+    #[test]
+    fn cyclic_to_block_roundtrip_for_applications() {
+        // §6: MD applications may need block-distributed data outside the
+        // FFT; c = 1 gives blocks.
+        let shape = [16usize, 8];
+        let pgrid = [2usize, 2];
+        let plan = cyclic_to_group_cyclic(&shape, &pgrid, &[1, 1]).unwrap();
+        let n: usize = shape.iter().product();
+        let global: Vec<C64> = (0..n).map(|i| C64::new(i as f64, 0.0)).collect();
+        let cyc = GridDist::cyclic(&shape, &pgrid).unwrap();
+        let locals = cyc.scatter(&global);
+        let moved = plan.apply(&locals);
+        let gc = group_cyclic_dist(&shape, &pgrid, &[1, 1]).unwrap();
+        assert_eq!(gc.gather(&moved), global);
+        // And h is strictly positive: data really moves.
+        assert!(plan.h_relation() > 0);
+    }
+
+    #[test]
+    fn superstep_counts() {
+        assert_eq!(comm_supersteps_needed(64, 1), 0);
+        assert_eq!(comm_supersteps_needed(64, 8), 1); // p^2 = n
+        assert_eq!(comm_supersteps_needed(64, 16), 2); // beyond sqrt(n)
+        // n/p = 2: only one butterfly level fits per pass -> log2(32).
+        assert_eq!(comm_supersteps_needed(64, 32), 5);
+        assert_eq!(comm_supersteps_needed(1 << 20, 1 << 10), 1);
+        assert_eq!(comm_supersteps_needed(1 << 20, 1 << 12), 2);
+    }
+
+    #[test]
+    fn group_cyclic_with_cycle_p_is_cyclic() {
+        let shape = [12usize];
+        let dist_gc = group_cyclic_dist(&shape, &[3], &[3]).unwrap();
+        let dist_cyc = GridDist::cyclic(&shape, &[3]).unwrap();
+        for j in 0..12 {
+            assert_eq!(dist_gc.owner_of(&[j]), dist_cyc.owner_of(&[j]));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! FFTU — the paper's contribution (Algorithm 2.3 + Algorithm 3.1).
+//!
+//! A parallel multidimensional FFT over the d-dimensional cyclic
+//! distribution with exactly **one** all-to-all communication superstep,
+//! starting and ending in the same distribution, for any `p_l^2 | n_l`
+//! processor grid (up to `sqrt(N)` processors in total).
+
+pub mod group_cyclic;
+pub mod pack;
+pub mod plan;
+pub mod worker;
+
+pub use group_cyclic::{comm_supersteps_needed, cyclic_to_group_cyclic, group_cyclic_dist};
+pub use pack::{pack_twiddle, unpack, TwiddleTables};
+pub use plan::{axis_pmax, choose_grid, fftu_pmax, FftuPlan};
+pub use worker::Worker;
+
+use std::sync::Arc;
+
+use crate::bsp::{run_spmd, CostReport};
+use crate::fft::{C64, Direction, Planner};
+
+/// Convenience driver: distribute `global` cyclically, run Algorithm 2.3
+/// on the BSP machine, gather the result. Used by tests, examples, and
+/// the table harness; long-lived applications keep [`Worker`]s alive
+/// across many transforms instead.
+pub fn fftu_global(
+    shape: &[usize],
+    pgrid: &[usize],
+    global: &[C64],
+    dir: Direction,
+) -> Result<(Vec<C64>, CostReport), String> {
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(shape, pgrid, &planner)?);
+    let locals = plan.dist.scatter(global);
+    let p = plan.num_procs();
+    let outcome = run_spmd(p, |ctx| {
+        let mut worker = Worker::new(plan.clone(), ctx.rank());
+        let mut local = locals[ctx.rank()].clone();
+        worker.execute(ctx, &mut local, dir);
+        local
+    });
+    let gathered = plan.dist.gather(&outcome.outputs);
+    Ok((gathered, outcome.report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_nd, fftn_inplace, max_abs_diff, rel_l2_error};
+    use crate::testing::{forall, Rng};
+
+    fn rand_global(n: usize, rng: &mut Rng) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+    }
+
+    fn check(shape: &[usize], pgrid: &[usize], rng: &mut Rng) {
+        let n: usize = shape.iter().product();
+        let x = rand_global(n, rng);
+        let mut want = x.clone();
+        fftn_inplace(&mut want, shape, Direction::Forward);
+        let (got, report) = fftu_global(shape, pgrid, &x, Direction::Forward).unwrap();
+        let err = rel_l2_error(&got, &want);
+        assert!(err < 1e-9, "shape {shape:?} grid {pgrid:?}: err {err}");
+        // The headline property: exactly ONE communication superstep.
+        assert_eq!(report.comm_supersteps(), 1, "shape {shape:?} grid {pgrid:?}");
+    }
+
+    #[test]
+    fn matches_sequential_1d() {
+        let mut rng = Rng::new(0x11);
+        check(&[16], &[2], &mut rng);
+        check(&[64], &[4], &mut rng);
+        check(&[36], &[6], &mut rng);
+        check(&[64], &[8], &mut rng); // p = sqrt(n), the limit
+    }
+
+    #[test]
+    fn matches_sequential_2d() {
+        let mut rng = Rng::new(0x22);
+        check(&[16, 16], &[2, 2], &mut rng);
+        check(&[16, 8], &[4, 2], &mut rng);
+        check(&[36, 4], &[3, 2], &mut rng);
+        check(&[9, 25], &[3, 5], &mut rng); // odd radices
+    }
+
+    #[test]
+    fn matches_sequential_3d() {
+        let mut rng = Rng::new(0x33);
+        check(&[8, 8, 8], &[2, 2, 2], &mut rng);
+        check(&[16, 8, 4], &[4, 2, 2], &mut rng);
+        check(&[16, 4, 4], &[2, 1, 2], &mut rng); // unit grid axis
+    }
+
+    #[test]
+    fn matches_sequential_5d() {
+        let mut rng = Rng::new(0x55);
+        check(&[4, 4, 4, 4, 4], &[2, 2, 2, 2, 2], &mut rng);
+        check(&[8, 4, 4, 4, 2], &[2, 2, 1, 2, 1], &mut rng);
+    }
+
+    #[test]
+    fn single_processor_reduces_to_sequential() {
+        let mut rng = Rng::new(0x66);
+        check(&[12, 10], &[1, 1], &mut rng);
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip_same_distribution() {
+        let mut rng = Rng::new(0x77);
+        let shape = [16usize, 16];
+        let pgrid = [4usize, 2];
+        let n = 256;
+        let x = rand_global(n, &mut rng);
+        let (y, _) = fftu_global(&shape, &pgrid, &x, Direction::Forward).unwrap();
+        let (z, _) = fftu_global(&shape, &pgrid, &y, Direction::Inverse).unwrap();
+        let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
+        assert!(max_abs_diff(&z, &x) < 1e-9);
+    }
+
+    #[test]
+    fn prop_random_shapes_and_grids() {
+        forall("fftu == sequential fftn", 25, 0x99, |rng| {
+            let d = rng.range(1, 3);
+            let mut shape = Vec::new();
+            let mut grid = Vec::new();
+            for _ in 0..d {
+                let p = rng.range(1, 3);
+                shape.push(p * p * rng.range(1, 4));
+                grid.push(p);
+            }
+            let n: usize = shape.iter().product();
+            let x = rand_global(n, rng);
+            let want = dft_nd(&x, &shape, Direction::Forward);
+            let (got, report) = fftu_global(&shape, &grid, &x, Direction::Forward)?;
+            let err = rel_l2_error(&got, &want);
+            crate::prop_assert!(err < 1e-8, "shape {shape:?} grid {grid:?} err {err}");
+            crate::prop_assert!(report.comm_supersteps() == 1, "not a single all-to-all");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn h_relation_matches_eq_2_12() {
+        // Superstep 1 moves every element once: h = N/p minus what stays
+        // local (the packet to self).
+        let shape = [16usize, 16];
+        let pgrid = [4usize, 4];
+        let n: usize = shape.iter().product();
+        let p: usize = pgrid.iter().product();
+        let mut rng = Rng::new(0xAA);
+        let x = rand_global(n, &mut rng);
+        let (_, report) = fftu_global(&shape, &pgrid, &x, Direction::Forward).unwrap();
+        let comm = report
+            .supersteps
+            .iter()
+            .find(|s| s.kind == crate::bsp::SuperstepKind::Communication)
+            .unwrap();
+        assert_eq!(comm.h_max, n / p - n / (p * p));
+    }
+}

@@ -1,0 +1,318 @@
+//! Algorithm 3.1 — fused packing and twiddling — plus the receive-side
+//! unpack that assembles `W^{(s)}` from the incoming packets.
+//!
+//! Packing walks the local array `X^{(s)}` once in row-major order,
+//! multiplies each element by its twiddle factor
+//! `prod_l omega_{n_l}^{t_l s_l}` (built incrementally, one complex
+//! multiply per loop level, ~two per element in the innermost loop —
+//! §3's "12 N/p real flops"), and deposits it at
+//! `packet_{t mod p}[t div p]` so each outgoing packet is contiguous.
+
+use crate::fft::{C64, Direction};
+
+use super::plan::FftuPlan;
+
+/// Per-rank twiddle tables: `tw[l][t] = omega_{n_l}^{t * s_l}` for
+/// `t in [n_l/p_l]`. Total memory `sum_l n_l/p_l` (Eq. 3.1), far below
+/// the `N/p` of the local array.
+pub struct TwiddleTables {
+    pub per_axis: Vec<Vec<C64>>,
+}
+
+impl TwiddleTables {
+    pub fn new(plan: &FftuPlan, s_coords: &[usize]) -> Self {
+        let per_axis = plan
+            .shape
+            .iter()
+            .zip(&plan.local_shape)
+            .zip(s_coords)
+            .map(|((&n, &ln), &s)| (0..ln).map(|t| C64::root_of_unity(n, t * s)).collect())
+            .collect();
+        TwiddleTables { per_axis }
+    }
+
+    /// Memory footprint in complex words (Eq. 3.1).
+    pub fn words(&self) -> usize {
+        self.per_axis.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// Fused pack + twiddle (Alg. 3.1). Fills `packets[r]` (preallocated to
+/// `plan.packet_len()` each, one per destination rank) from `local`
+/// (row-major, shape `plan.local_shape`). `dir` selects the forward or
+/// conjugated (inverse-transform) weights.
+pub fn pack_twiddle(
+    plan: &FftuPlan,
+    tables: &TwiddleTables,
+    local: &[C64],
+    packets: &mut [Vec<C64>],
+    dir: Direction,
+) {
+    let d = plan.shape.len();
+    debug_assert_eq!(local.len(), plan.local_len());
+    debug_assert_eq!(packets.len(), plan.num_procs());
+    for p in packets.iter_mut() {
+        debug_assert_eq!(p.len(), plan.packet_len());
+    }
+
+    // Per-axis decompositions of the local index t_l:
+    //   receiver coordinate  r_l = t_l mod p_l
+    //   packet offset        o_l = t_l div p_l
+    // Flattened: rank = sum r_l * rank_stride_l, offset = sum o_l * off_stride_l.
+    let pshape = &plan.pgrid;
+    let packet_shape = &plan.packet_shape;
+    let local_shape = &plan.local_shape;
+    let mut rank_stride = vec![1usize; d];
+    let mut off_stride = vec![1usize; d];
+    for l in (0..d.saturating_sub(1)).rev() {
+        rank_stride[l] = rank_stride[l + 1] * pshape[l + 1];
+        off_stride[l] = off_stride[l + 1] * packet_shape[l + 1];
+    }
+
+    // Odometer over the local multi-index with incremental prefix state:
+    //   factor[l]  = prod_{m <= l} tw[m][t_m]
+    //   rank[l]    = partial receiver rank over axes <= l
+    //   off[l]     = partial packet offset over axes <= l
+    let mut t = vec![0usize; d];
+    let mut factor = vec![C64::ONE; d];
+    let mut rank_part = vec![0usize; d];
+    let mut off_part = vec![0usize; d];
+    let conj = dir == Direction::Inverse;
+    let tw_at = |l: usize, tl: usize| -> C64 {
+        let w = tables.per_axis[l][tl];
+        if conj {
+            w.conj()
+        } else {
+            w
+        }
+    };
+    // Initialize prefix state for t = (0,...,0).
+    for l in 0..d {
+        let prev_f = if l == 0 { C64::ONE } else { factor[l - 1] };
+        let prev_r = if l == 0 { 0 } else { rank_part[l - 1] };
+        let prev_o = if l == 0 { 0 } else { off_part[l - 1] };
+        factor[l] = prev_f * tw_at(l, 0);
+        rank_part[l] = prev_r; // r_l = 0 contributes 0
+        off_part[l] = prev_o;
+    }
+
+    let inner_n = local_shape[d - 1];
+    let inner_p = pshape[d - 1];
+    let total = plan.local_len();
+    let mut flat = 0usize;
+    while flat < total {
+        // Innermost loop over t_{d-1}: two complex multiplies per element
+        // (factor update + application), matching §3's flop count.
+        let base_f = if d >= 2 { factor[d - 2] } else { C64::ONE };
+        let base_r = if d >= 2 { rank_part[d - 2] } else { 0 };
+        let base_o = if d >= 2 { off_part[d - 2] } else { 0 };
+        let tw_inner = &tables.per_axis[d - 1];
+        if inner_p == 1 {
+            // Whole inner row goes to one receiver, contiguously.
+            let packet = &mut packets[base_r];
+            let dst = &mut packet[base_o * inner_n..(base_o + 1) * inner_n];
+            let src = &local[flat..flat + inner_n];
+            if conj {
+                for ((dv, &sv), &w) in dst.iter_mut().zip(src).zip(tw_inner) {
+                    *dv = sv * (base_f * w.conj());
+                }
+            } else {
+                for ((dv, &sv), &w) in dst.iter_mut().zip(src).zip(tw_inner) {
+                    *dv = sv * (base_f * w);
+                }
+            }
+        } else {
+            let src = &local[flat..flat + inner_n];
+            for (ti, &sv) in src.iter().enumerate() {
+                let w = if conj { tw_inner[ti].conj() } else { tw_inner[ti] };
+                let f = base_f * w;
+                let r = base_r * inner_p + ti % inner_p;
+                let o = base_o * (inner_n / inner_p) + ti / inner_p;
+                packets[r][o] = sv * f;
+            }
+        }
+        flat += inner_n;
+        if flat >= total {
+            break;
+        }
+        // Advance the odometer over axes 0..d-2 (inner axis consumed),
+        // then rebuild the prefix state from the changed level downward
+        // (deeper levels depend on shallower ones).
+        let mut l = d as isize - 2;
+        while l >= 0 {
+            let lu = l as usize;
+            t[lu] += 1;
+            if t[lu] < local_shape[lu] {
+                break;
+            }
+            t[lu] = 0;
+            l -= 1;
+        }
+        debug_assert!(l >= 0, "odometer exhausted before flat reached total");
+        for m in l as usize..=d - 2 {
+            let prev_f = if m == 0 { C64::ONE } else { factor[m - 1] };
+            let prev_r = if m == 0 { 0 } else { rank_part[m - 1] };
+            let prev_o = if m == 0 { 0 } else { off_part[m - 1] };
+            factor[m] = prev_f * tw_at(m, t[m]);
+            rank_part[m] = prev_r * pshape[m] + t[m] % pshape[m];
+            off_part[m] = prev_o * packet_shape[m] + t[m] / pshape[m];
+        }
+    }
+}
+
+/// Assemble `W^{(s)}` (row-major, shape `local_shape`) from the incoming
+/// packets: the packet from sender `s'` occupies the block with axis-`l`
+/// range `[s'_l * n_l/p_l^2, (s'_l + 1) * n_l/p_l^2)` (Alg. 2.3 line 5).
+pub fn unpack(plan: &FftuPlan, incoming: &[Vec<C64>], w: &mut [C64]) {
+    let d = plan.shape.len();
+    debug_assert_eq!(w.len(), plan.local_len());
+    debug_assert_eq!(incoming.len(), plan.num_procs());
+    let packet_shape = &plan.packet_shape;
+    let local_shape = &plan.local_shape;
+    // Row-major strides of the local (W) array.
+    let mut lstride = vec![1usize; d];
+    for l in (0..d.saturating_sub(1)).rev() {
+        lstride[l] = lstride[l + 1] * local_shape[l + 1];
+    }
+    let run = packet_shape[d - 1]; // contiguous run along the last axis
+    let runs_per_packet = plan.packet_len() / run;
+    for (src_rank, packet) in incoming.iter().enumerate() {
+        debug_assert_eq!(packet.len(), plan.packet_len());
+        let sc = plan.dist.proc_coords(src_rank);
+        // Base corner of this sender's block in W.
+        let mut base = 0usize;
+        for l in 0..d {
+            base += sc[l] * packet_shape[l] * lstride[l];
+        }
+        // Iterate packet rows (all axes but the last), odometer style.
+        let mut j = vec![0usize; d]; // j[d-1] stays 0
+        for r in 0..runs_per_packet {
+            let mut woff = base;
+            for l in 0..d - 1 {
+                woff += j[l] * lstride[l];
+            }
+            w[woff..woff + run].copy_from_slice(&packet[r * run..(r + 1) * run]);
+            // Advance odometer over axes 0..d-1.
+            for l in (0..d.saturating_sub(1)).rev() {
+                j[l] += 1;
+                if j[l] < packet_shape[l] {
+                    break;
+                }
+                j[l] = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{ravel, unravel};
+    use crate::fft::Planner;
+    use crate::testing::{forall, Rng};
+
+    fn reference_pack(
+        plan: &FftuPlan,
+        s_coords: &[usize],
+        local: &[C64],
+        dir: Direction,
+    ) -> Vec<Vec<C64>> {
+        // Direct transliteration of Alg. 3.1 without incremental state.
+        let d = plan.shape.len();
+        let mut packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+        for (flat, &v) in local.iter().enumerate() {
+            let t = unravel(flat, &plan.local_shape);
+            let mut factor = C64::ONE;
+            for l in 0..d {
+                let w = C64::root_of_unity(plan.shape[l], t[l] * s_coords[l]);
+                factor *= if dir == Direction::Inverse { w.conj() } else { w };
+            }
+            let r: Vec<usize> = (0..d).map(|l| t[l] % plan.pgrid[l]).collect();
+            let o: Vec<usize> = (0..d).map(|l| t[l] / plan.pgrid[l]).collect();
+            packets[ravel(&r, &plan.pgrid)][ravel(&o, &plan.packet_shape)] = v * factor;
+        }
+        packets
+    }
+
+    #[test]
+    fn prop_pack_matches_reference() {
+        forall("pack_twiddle == Alg 3.1 reference", 40, 0xAB, |rng| {
+            let d = rng.range(1, 3);
+            // Pick shapes with p^2 | n.
+            let mut shape = Vec::new();
+            let mut grid = Vec::new();
+            for _ in 0..d {
+                let p = rng.range(1, 3);
+                let mult = rng.range(1, 3);
+                shape.push(p * p * mult);
+                grid.push(p);
+            }
+            let planner = Planner::new();
+            let plan = FftuPlan::new(&shape, &grid, &planner).map_err(|e| e)?;
+            let s_rank = rng.below(plan.num_procs());
+            let s_coords = plan.dist.proc_coords(s_rank);
+            let local: Vec<C64> = (0..plan.local_len())
+                .map(|_| C64::new(rng.f64_signed(), rng.f64_signed()))
+                .collect();
+            let tables = TwiddleTables::new(&plan, &s_coords);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let mut packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+                pack_twiddle(&plan, &tables, &local, &mut packets, dir);
+                let want = reference_pack(&plan, &s_coords, &local, dir);
+                for (r, (got, want)) in packets.iter().zip(&want).enumerate() {
+                    let err = crate::fft::max_abs_diff(got, want);
+                    crate::prop_assert!(
+                        err < 1e-12,
+                        "shape {shape:?} grid {grid:?} rank {s_rank} packet {r}: err {err}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn twiddle_table_memory_matches_eq_3_1() {
+        let planner = Planner::new();
+        let plan = FftuPlan::new(&[16, 36, 4], &[2, 3, 1], &planner).unwrap();
+        let tables = TwiddleTables::new(&plan, &[1, 2, 0]);
+        assert_eq!(tables.words(), 16 / 2 + 36 / 3 + 4);
+    }
+
+    #[test]
+    fn unpack_places_sender_blocks() {
+        let planner = Planner::new();
+        let plan = FftuPlan::new(&[8, 4], &[2, 2], &planner).unwrap();
+        // local shape (4,2), packet shape (2,1), 4 senders.
+        let incoming: Vec<Vec<C64>> = (0..4)
+            .map(|s| (0..2).map(|i| C64::new(s as f64, i as f64)).collect())
+            .collect();
+        let mut w = vec![C64::ZERO; plan.local_len()];
+        unpack(&plan, &incoming, &mut w);
+        // Sender (a,b) occupies rows [2a,2a+2), col b of the (4,2) array.
+        for a in 0..2 {
+            for b in 0..2 {
+                let s = a * 2 + b;
+                for i in 0..2 {
+                    let got = w[(2 * a + i) * 2 + b];
+                    assert_eq!(got, C64::new(s as f64, i as f64), "sender ({a},{b}) row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_then_unpack_is_twiddled_stride_permutation() {
+        // With one processor, pack o unpack must equal plain twiddling.
+        let planner = Planner::new();
+        let plan = FftuPlan::new(&[4, 9], &[1, 1], &planner).unwrap();
+        let tables = TwiddleTables::new(&plan, &[0, 0]);
+        let local: Vec<C64> = (0..36).map(|i| C64::new(i as f64, 0.5)).collect();
+        let mut packets = vec![vec![C64::ZERO; plan.packet_len()]; 1];
+        pack_twiddle(&plan, &tables, &local, &mut packets, Direction::Forward);
+        let mut w = vec![C64::ZERO; 36];
+        unpack(&plan, &packets, &mut w);
+        // s = 0 means all twiddles are 1: identity.
+        assert_eq!(w, local);
+    }
+}

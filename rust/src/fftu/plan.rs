@@ -1,0 +1,228 @@
+//! FFTU plan: shapes, processor grids, and the `p_max` rules of §2.3.
+
+use std::sync::Arc;
+
+use crate::dist::GridDist;
+use crate::fft::{NdPlan, Plan, Planner};
+
+/// Validated configuration of Algorithm 2.3 for one (shape, grid) pair.
+///
+/// Holds everything rank-independent: the cyclic distribution, the local
+/// FFT plan of superstep 0, the per-axis `F_{p_l}` plans of superstep 2,
+/// and the derived shapes. Per-rank state (twiddle tables, scratch) lives
+/// in [`super::worker::Worker`].
+pub struct FftuPlan {
+    /// Global array shape `n_1 x ... x n_d`.
+    pub shape: Vec<usize>,
+    /// Processor grid `p_1 x ... x p_d`.
+    pub pgrid: Vec<usize>,
+    /// Local shape `n_l / p_l`.
+    pub local_shape: Vec<usize>,
+    /// Packet shape `n_l / p_l^2` (the block granularity of superstep 1).
+    pub packet_shape: Vec<usize>,
+    /// The input/output distribution: d-dimensional cyclic.
+    pub dist: GridDist,
+    /// Local multidimensional FFT of superstep 0.
+    pub nd_plan: NdPlan,
+    /// `F_{p_l}` plans of superstep 2 (one per axis).
+    pub axis_plans: Vec<Arc<Plan>>,
+}
+
+impl FftuPlan {
+    /// Build a plan, checking the paper's constraint `p_l^2 | n_l`.
+    pub fn new(shape: &[usize], pgrid: &[usize], planner: &Planner) -> Result<Self, String> {
+        if shape.len() != pgrid.len() {
+            return Err(format!(
+                "shape rank {} != processor grid rank {}",
+                shape.len(),
+                pgrid.len()
+            ));
+        }
+        for (&n, &p) in shape.iter().zip(pgrid) {
+            if p == 0 {
+                return Err("processor grid entries must be positive".into());
+            }
+            if n % (p * p) != 0 {
+                return Err(format!(
+                    "FFTU requires p_l^2 | n_l per axis; violated: p={p}, n={n}"
+                ));
+            }
+        }
+        let dist = GridDist::cyclic(shape, pgrid)?;
+        let local_shape: Vec<usize> = shape.iter().zip(pgrid).map(|(&n, &p)| n / p).collect();
+        let packet_shape: Vec<usize> =
+            shape.iter().zip(pgrid).map(|(&n, &p)| n / (p * p)).collect();
+        let nd_plan = NdPlan::new(&local_shape, planner);
+        let axis_plans = pgrid.iter().map(|&p| planner.plan(p)).collect();
+        Ok(FftuPlan { shape: shape.to_vec(), pgrid: pgrid.to_vec(), local_shape, packet_shape, dist, nd_plan, axis_plans })
+    }
+
+    pub fn total(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn num_procs(&self) -> usize {
+        self.pgrid.iter().product()
+    }
+
+    pub fn local_len(&self) -> usize {
+        self.local_shape.iter().product()
+    }
+
+    pub fn packet_len(&self) -> usize {
+        self.packet_shape.iter().product()
+    }
+
+    /// Model flops of superstep 0's local FFT: `5 (N/p) log2(N/p)`.
+    pub fn flops_superstep0(&self) -> f64 {
+        self.nd_plan.model_flops()
+    }
+
+    /// Model flops of the twiddling: `12 N/p` real flops (§2.3/§3, two
+    /// complex multiplications per element in Alg. 3.1).
+    pub fn flops_twiddle(&self) -> f64 {
+        12.0 * self.local_len() as f64
+    }
+
+    /// Model flops of superstep 2: `5 (N/p) log2(p)` in total across the
+    /// per-axis `F_{p_l}` passes.
+    pub fn flops_superstep2(&self) -> f64 {
+        let p = self.num_procs();
+        if p <= 1 {
+            0.0
+        } else {
+            5.0 * self.local_len() as f64 * (p as f64).log2()
+        }
+    }
+}
+
+/// Largest usable `p_l` for one axis of length `n`: the biggest `q` with
+/// `q^2 | n` (the per-axis cyclic limit `p_l <= sqrt(n_l)` of §2.3).
+pub fn axis_pmax(n: usize) -> usize {
+    let mut best = 1;
+    let mut q = 1;
+    while q * q <= n {
+        if n % (q * q) == 0 {
+            best = q;
+        }
+        q += 1;
+    }
+    best
+}
+
+/// FFTU's maximum processor count for a shape: `prod_l axis_pmax(n_l)`
+/// (`sqrt(N)` when every `n_l` is a square, Eq. 2.13).
+pub fn fftu_pmax(shape: &[usize]) -> usize {
+    shape.iter().map(|&n| axis_pmax(n)).product()
+}
+
+/// Pick a processor grid with `prod p_l == p` and `p_l^2 | n_l`, or
+/// `None` if impossible. Greedy: repeatedly give the smallest prime
+/// factor of the remaining `p` to the axis with the most remaining
+/// headroom (largest `n_l / p_l^2`), which keeps packets as cubic as
+/// possible — the same balancing PFFT does for its pencil grids.
+pub fn choose_grid(shape: &[usize], p: usize) -> Option<Vec<usize>> {
+    let d = shape.len();
+    let mut grid = vec![1usize; d];
+    let mut rem = p;
+    let mut prime = 2;
+    let mut factors = Vec::new();
+    while rem > 1 {
+        while rem % prime == 0 {
+            factors.push(prime);
+            rem /= prime;
+        }
+        prime += 1;
+        if prime * prime > rem && rem > 1 {
+            factors.push(rem);
+            break;
+        }
+    }
+    // Largest factors first so they land on the roomiest axes.
+    factors.sort_unstable_by(|a, b| b.cmp(a));
+    for f in factors {
+        // Axis with max headroom that still satisfies (p_l*f)^2 | n_l.
+        let mut best: Option<(usize, usize)> = None; // (headroom, axis)
+        for l in 0..d {
+            let q = grid[l] * f;
+            if shape[l] % (q * q) == 0 {
+                let headroom = shape[l] / (q * q);
+                if best.map(|(h, _)| headroom > h).unwrap_or(true) {
+                    best = Some((headroom, l));
+                }
+            }
+        }
+        let (_, l) = best?;
+        grid[l] *= f;
+    }
+    Some(grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Planner;
+
+    #[test]
+    fn axis_pmax_examples() {
+        assert_eq!(axis_pmax(1024), 32);
+        assert_eq!(axis_pmax(256), 16);
+        assert_eq!(axis_pmax(512), 16); // not a square: one factor of 2 lost
+        assert_eq!(axis_pmax(64), 8);
+        assert_eq!(axis_pmax(7), 1);
+        assert_eq!(axis_pmax(36), 6);
+    }
+
+    #[test]
+    fn pmax_matches_paper_section_2_3() {
+        // "For a 3D array of size 1024^3, our algorithm can use up to
+        //  32^3 = 32,768 processors."
+        assert_eq!(fftu_pmax(&[1024, 1024, 1024]), 32_768);
+        // "For 3D arrays of size 256^3 and 512^3, up to 16^3 = 4096."
+        assert_eq!(fftu_pmax(&[256, 256, 256]), 4096);
+        assert_eq!(fftu_pmax(&[512, 512, 512]), 4096);
+        // "For a 2D array of size 2^24 x 64 ... p_max = 32,768."
+        assert_eq!(fftu_pmax(&[1 << 24, 64]), 32_768);
+        // 64^5: sqrt(N) = 2^15.
+        assert_eq!(fftu_pmax(&[64, 64, 64, 64, 64]), 1 << 15);
+    }
+
+    #[test]
+    fn choose_grid_valid_and_complete() {
+        for p in [1usize, 2, 4, 8, 16, 64, 256, 4096] {
+            let shape = [256usize, 256, 256];
+            let grid = choose_grid(&shape, p).unwrap_or_else(|| panic!("p={p}"));
+            assert_eq!(grid.iter().product::<usize>(), p);
+            for (l, &q) in grid.iter().enumerate() {
+                assert_eq!(shape[l] % (q * q), 0, "p={p} grid={grid:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn choose_grid_respects_pmax() {
+        assert!(choose_grid(&[16, 16], 17).is_none()); // 17 prime, no axis fits
+        // pmax([16,16]) = 4*4 = 16, so p = 32 must fail but 16 succeeds.
+        assert_eq!(fftu_pmax(&[16, 16]), 16);
+        assert!(choose_grid(&[16, 16], 32).is_none());
+        assert_eq!(choose_grid(&[16, 16], 16).unwrap(), vec![4, 4]);
+    }
+
+    #[test]
+    fn plan_rejects_bad_grid() {
+        let planner = Planner::new();
+        assert!(FftuPlan::new(&[8, 8], &[4, 1], &planner).is_err()); // 16 ∤ 8
+        assert!(FftuPlan::new(&[8, 8], &[2, 2], &planner).is_ok());
+    }
+
+    #[test]
+    fn plan_shapes() {
+        let planner = Planner::new();
+        let plan = FftuPlan::new(&[16, 36], &[2, 3], &planner).unwrap();
+        assert_eq!(plan.local_shape, vec![8, 12]);
+        assert_eq!(plan.packet_shape, vec![4, 4]);
+        assert_eq!(plan.local_len(), 96);
+        assert_eq!(plan.packet_len(), 16);
+        assert_eq!(plan.num_procs(), 6);
+    }
+}

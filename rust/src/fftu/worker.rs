@@ -1,0 +1,109 @@
+//! Per-processor FFTU execution state and the superstep bodies of
+//! Algorithm 2.3.
+
+use std::sync::Arc;
+
+use crate::bsp::Ctx;
+use crate::fft::{C64, Direction};
+
+use super::pack::{pack_twiddle, unpack, TwiddleTables};
+use super::plan::FftuPlan;
+
+/// Per-rank state: twiddle tables (which depend on the processor
+/// coordinates `s`), reusable packet buffers, and FFT scratch. Built once
+/// and reused across repetitions — nothing allocates on the steady-state
+/// path.
+pub struct Worker {
+    pub plan: Arc<FftuPlan>,
+    pub s_coords: Vec<usize>,
+    pub tables: TwiddleTables,
+    packets: Vec<Vec<C64>>,
+    w: Vec<C64>,
+    scratch: Vec<C64>,
+}
+
+impl Worker {
+    pub fn new(plan: Arc<FftuPlan>, rank: usize) -> Self {
+        let s_coords = plan.dist.proc_coords(rank);
+        let tables = TwiddleTables::new(&plan, &s_coords);
+        let packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+        let w = vec![C64::ZERO; plan.local_len()];
+        // Scratch must cover: local fftn (superstep 0), per-axis
+        // interleaved F_{p_l} (superstep 2), and any Bluestein lines.
+        let mut need = plan.nd_plan.scratch_len();
+        let d = plan.shape.len();
+        for l in 0..d {
+            let inner: usize = plan.local_shape[l + 1..].iter().product();
+            let chunk = plan.local_shape[l] * inner;
+            need = need.max(plan.axis_plans[l].scratch_len(chunk)).max(chunk);
+        }
+        let scratch = vec![C64::ZERO; need];
+        Worker { plan, s_coords, tables, packets, w, scratch }
+    }
+
+    /// Superstep 0: local multidimensional FFT + fused twiddle/pack.
+    /// After this call, `self.packets[r]` holds the outgoing packet for
+    /// rank `r` (Alg. 3.1 output).
+    pub fn superstep0(&mut self, local: &mut [C64], dir: Direction) {
+        self.plan.nd_plan.execute(local, &mut self.scratch, dir);
+        pack_twiddle(&self.plan, &self.tables, local, &mut self.packets, dir);
+    }
+
+    /// Superstep 1: the single all-to-all. Consumes the packed packets,
+    /// returns with `self.w` holding `W^{(s)}`.
+    pub fn superstep1(&mut self, ctx: &mut Ctx) {
+        let outgoing = std::mem::take(&mut self.packets);
+        let incoming = ctx.exchange("fftu-alltoall", outgoing);
+        unpack(&self.plan, &incoming, &mut self.w);
+        // Reclaim the incoming buffers as next iteration's outgoing
+        // packet buffers (same shapes), keeping the hot path allocation-free.
+        self.packets = incoming;
+    }
+
+    /// Superstep 2: strided `F_{p_1} (x) ... (x) F_{p_d}` transforms of
+    /// `W^{(s)}` (Alg. 2.3 line 7), writing the result into `out`
+    /// (the caller's local array, cyclic distribution).
+    pub fn superstep2(&mut self, out: &mut [C64], dir: Direction) {
+        let plan = &self.plan;
+        let d = plan.shape.len();
+        for l in 0..d {
+            let p_l = plan.pgrid[l];
+            if p_l == 1 {
+                continue;
+            }
+            let inner: usize = plan.local_shape[l + 1..].iter().product();
+            let per = plan.packet_shape[l]; // n_l / p_l^2
+            let chunk = plan.local_shape[l] * inner; // p_l * per * inner
+            let stride = per * inner;
+            let axis_plan = &plan.axis_plans[l];
+            for block in self.w.chunks_exact_mut(chunk) {
+                axis_plan.execute_interleaved(block, &mut self.scratch, stride, dir);
+            }
+        }
+        out.copy_from_slice(&self.w);
+    }
+
+    /// Run the full Algorithm 2.3 on this rank's local array (in place),
+    /// charging the BSP ledger with the model costs of §2.3.
+    pub fn execute(&mut self, ctx: &mut Ctx, local: &mut [C64], dir: Direction) {
+        ctx.begin_comp("fftu-superstep0");
+        ctx.charge_flops(self.plan.flops_superstep0() + self.plan.flops_twiddle());
+        self.superstep0(local, dir);
+        self.superstep1(ctx); // charges words itself
+        ctx.begin_comp("fftu-superstep2");
+        ctx.charge_flops(self.plan.flops_superstep2());
+        self.superstep2(local, dir);
+    }
+
+    /// Inverse transform with 1/N normalization, same communication
+    /// structure (the "same distribution" property of FFTU means the
+    /// inverse is literally the same program with conjugated weights,
+    /// §1.3).
+    pub fn execute_inverse_normalized(&mut self, ctx: &mut Ctx, local: &mut [C64]) {
+        self.execute(ctx, local, Direction::Inverse);
+        let inv = 1.0 / self.plan.total() as f64;
+        for v in local.iter_mut() {
+            *v = v.scale(inv);
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! # fftu — Minimizing communication in the multidimensional FFT
+//!
+//! A full reimplementation of Koopman & Bisseling's FFTU system
+//! (SIAM J. Sci. Comput. 2023, DOI 10.1137/22M1487242): a parallel
+//! multidimensional FFT over the d-dimensional cyclic distribution with a
+//! **single all-to-all communication superstep**, starting and ending in
+//! the same distribution, usable on up to `sqrt(N)` processors.
+//!
+//! The crate is organized as the paper's system plus every substrate it
+//! depends on:
+//!
+//! - [`fft`] — sequential FFT library (the FFTW substitute).
+//! - [`dist`] — data distributions (cyclic, slab, pencil, block,
+//!   group-cyclic) and the generic redistribution planner.
+//! - [`bsp`] — the BSP multiprocessor runtime: supersteps, one-sided
+//!   `Put`, all-to-all exchange, and the exact cost ledger.
+//! - [`fftu`] — the paper's contribution: Algorithm 2.3 (parallel
+//!   cyclic-to-cyclic multidimensional four-step FFT) with Algorithm 3.1
+//!   (fused packing + twiddling).
+//! - [`baselines`] — FFTW-slab, PFFT-pencil, heFFTe-like and
+//!   Popovici-style comparators, implemented from their published
+//!   descriptions and validated against the sequential oracle.
+//! - [`costmodel`] — BSP (g, l, r) machine model used to regenerate the
+//!   paper's tables at full Snellius scale.
+//! - [`runtime`] — PJRT engine loading AOT-compiled JAX/Pallas artifacts
+//!   (HLO text) for the local transforms.
+//! - [`report`], [`cli`], [`testing`] — table rendering, the launcher,
+//!   and the in-tree property-testing mini-framework.
+
+pub mod baselines;
+pub mod bsp;
+pub mod cli;
+pub mod costmodel;
+pub mod dist;
+pub mod fft;
+pub mod fftu;
+pub mod report;
+pub mod runtime;
+pub mod testing;
+
+pub use fft::{C64, Direction};

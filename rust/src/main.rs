@@ -1,0 +1,6 @@
+//! `fftu` — the launcher binary. See `fftu help` / README.md.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(fftu::cli::dispatch(argv));
+}

@@ -1,0 +1,12 @@
+//! Experiment reporting: table rendering, the paper's reference numbers,
+//! wall-clock measurement, and the table generators that regenerate
+//! every table in the paper's evaluation (DESIGN.md §4).
+
+pub mod measure;
+pub mod paper;
+pub mod table;
+pub mod tables;
+
+pub use measure::{measure_fftu, measure_once, Algo};
+pub use table::{fmt_secs, fmt_speedup, Table};
+pub use tables::{comm_steps_table, pmax_table, table_4_1_model, table_4_2_model, table_4_3_model, table_executed};

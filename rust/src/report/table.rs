@@ -1,0 +1,110 @@
+//! Plain-text table rendering for the experiment harness.
+
+/// A simple aligned-column table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |cells: &[String], width: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                s.push_str(&format!(" {:>w$} |", c, w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &width));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row, &width));
+        }
+        out
+    }
+}
+
+/// Format seconds with 3 significant figures, or "-" for None.
+pub fn fmt_secs(t: Option<f64>) -> String {
+    match t {
+        None => "-".to_string(),
+        Some(t) if t >= 100.0 => format!("{t:.0}"),
+        Some(t) if t >= 10.0 => format!("{t:.1}"),
+        Some(t) if t >= 1.0 => format!("{t:.2}"),
+        Some(t) => format!("{t:.3}"),
+    }
+}
+
+/// Format a speedup like "149x".
+pub fn fmt_speedup(s: Option<f64>) -> String {
+    match s {
+        None => "-".to_string(),
+        Some(s) => format!("{s:.1}x"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["p", "time"]);
+        t.row(vec!["1".into(), "17.541".into()]);
+        t.row(vec!["4096".into(), "0.118".into()]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.lines().count() == 5);
+        let lines: Vec<&str> = s.lines().collect();
+        // All body lines same width.
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_secs(Some(17.541)), "17.5");
+        assert_eq!(fmt_secs(Some(0.118)), "0.118");
+        assert_eq!(fmt_secs(None), "-");
+        assert_eq!(fmt_speedup(Some(148.65)), "148.7x");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

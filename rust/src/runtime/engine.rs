@@ -1,0 +1,137 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once on the
+//! CPU PJRT client, execute with split re/im f32 literals.
+//!
+//! Complex interchange convention (see DESIGN.md §2): every module takes
+//! and returns *pairs* of f32 arrays (re, im); complex is reconstructed
+//! with `lax.complex` inside the lowered module. The engine converts
+//! between the library's `C64` (f64) and the artifact's f32 planes at
+//! the boundary.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::fft::C64;
+
+/// A compiled AOT module ready to execute.
+pub struct XlaModule {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    n_outputs: usize,
+}
+
+/// Shared PJRT CPU client. One per process; executables keep it alive.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+}
+
+impl XlaEngine {
+    pub fn cpu() -> Result<Self> {
+        Ok(XlaEngine { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load(&self, path: &Path, name: &str, n_outputs: usize) -> Result<XlaModule> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(XlaModule { name: name.to_string(), exe, n_outputs })
+    }
+}
+
+impl XlaModule {
+    /// Execute with f32 inputs (each a flat buffer + dims); returns the
+    /// flat f32 outputs in module order.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .with_context(|| format!("reshaping input for {}", self.name))
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple().context("untupling result")?;
+        anyhow::ensure!(
+            parts.len() == self.n_outputs,
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.n_outputs,
+            parts.len()
+        );
+        parts.into_iter().map(|l| l.to_vec::<f32>().map_err(Into::into)).collect()
+    }
+
+    /// Execute a (re, im) -> (re, im) module on complex data: splits the
+    /// C64 buffer into f32 planes, runs, and re-joins.
+    pub fn run_complex(&self, data: &[C64], dims: &[i64], extra: &[(&[f32], &[i64])]) -> Result<Vec<C64>> {
+        let (re, im) = split_planes(data);
+        let mut inputs: Vec<(&[f32], &[i64])> = vec![(&re, dims), (&im, dims)];
+        inputs.extend_from_slice(extra);
+        let out = self.run_f32(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "{}: expected re/im outputs", self.name);
+        Ok(join_planes(&out[0], &out[1]))
+    }
+}
+
+/// C64 slice -> (re, im) f32 planes.
+pub fn split_planes(data: &[C64]) -> (Vec<f32>, Vec<f32>) {
+    let mut re = Vec::with_capacity(data.len());
+    let mut im = Vec::with_capacity(data.len());
+    for v in data {
+        re.push(v.re as f32);
+        im.push(v.im as f32);
+    }
+    (re, im)
+}
+
+/// (re, im) f32 planes -> C64 buffer.
+pub fn join_planes(re: &[f32], im: &[f32]) -> Vec<C64> {
+    assert_eq!(re.len(), im.len());
+    re.iter().zip(im).map(|(&r, &i)| C64::new(r as f64, i as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_join_roundtrip() {
+        let data: Vec<C64> = (0..10).map(|i| C64::new(i as f64, -(i as f64))).collect();
+        let (re, im) = split_planes(&data);
+        let back = join_planes(&re, &im);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn engine_runs_fftn_artifact() {
+        let dir = Path::new("artifacts");
+        if !dir.join("fftn_16x16.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = XlaEngine::cpu().unwrap();
+        let module = engine.load(&dir.join("fftn_16x16.hlo.txt"), "fftn_16x16", 2).unwrap();
+        // FFT of a delta is all-ones.
+        let mut x = vec![C64::ZERO; 256];
+        x[0] = C64::ONE;
+        let y = module.run_complex(&x, &[16, 16], &[]).unwrap();
+        for v in &y {
+            assert!((v.re - 1.0).abs() < 1e-4 && v.im.abs() < 1e-4, "{v:?}");
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Lists every AOT-lowered HLO module with its
+//! signature (kind, shapes, processor grid, direction).
+
+use std::path::{Path, PathBuf};
+
+use super::json::Json;
+
+/// Kind of an AOT module (mirrors `aot.py`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ModuleKind {
+    /// Algorithm 2.3 superstep 0: fftn + Pallas twiddle + pack.
+    Superstep0,
+    /// Algorithm 2.3 superstep 2: strided F_p tensor transform.
+    Superstep2,
+    /// Plain local fftn (engine parity tests).
+    Fftn,
+    /// Standalone L1 Stockham kernel.
+    Stockham,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModuleEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ModuleKind,
+    pub shape: Vec<usize>,
+    pub pgrid: Vec<usize>,
+    pub local: Vec<usize>,
+    pub packet: Vec<usize>,
+    pub p: usize,
+    pub inverse: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub modules: Vec<ModuleEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mods = v
+            .get("modules")
+            .and_then(|m| m.as_arr())
+            .ok_or("manifest missing `modules` array")?;
+        let mut modules = Vec::with_capacity(mods.len());
+        for m in mods {
+            let name = m
+                .get("name")
+                .and_then(|x| x.as_str())
+                .ok_or("module missing name")?
+                .to_string();
+            let kind = match m.get("kind").and_then(|x| x.as_str()) {
+                Some("superstep0") => ModuleKind::Superstep0,
+                Some("superstep2") => ModuleKind::Superstep2,
+                Some("fftn") => ModuleKind::Fftn,
+                Some("stockham") => ModuleKind::Stockham,
+                other => return Err(format!("module {name}: unknown kind {other:?}")),
+            };
+            let usize_vec =
+                |key: &str| m.get(key).and_then(|x| x.as_usize_vec()).unwrap_or_default();
+            modules.push(ModuleEntry {
+                file: dir.join(
+                    m.get("file").and_then(|x| x.as_str()).ok_or("module missing file")?,
+                ),
+                kind,
+                shape: usize_vec("shape"),
+                pgrid: usize_vec("pgrid"),
+                local: usize_vec("local"),
+                packet: usize_vec("packet"),
+                p: m.get("p").and_then(|x| x.as_usize()).unwrap_or(1),
+                inverse: m.get("inverse").and_then(|x| x.as_bool()).unwrap_or(false),
+                name,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), modules })
+    }
+
+    /// Find the module for (kind, shape, pgrid, inverse).
+    pub fn find(
+        &self,
+        kind: ModuleKind,
+        shape: &[usize],
+        pgrid: &[usize],
+        inverse: bool,
+    ) -> Option<&ModuleEntry> {
+        self.modules.iter().find(|m| {
+            m.kind == kind
+                && m.shape == shape
+                && (m.pgrid == pgrid || matches!(kind, ModuleKind::Fftn | ModuleKind::Stockham))
+                && m.inverse == inverse
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration-level check, skipped when artifacts are not built.
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(!m.modules.is_empty());
+        // Every referenced file must exist.
+        for e in &m.modules {
+            assert!(e.file.exists(), "missing {}", e.file.display());
+        }
+        // The quickstart config must be present in both directions.
+        for inv in [false, true] {
+            assert!(
+                m.find(ModuleKind::Superstep0, &[32, 32, 32], &[2, 2, 2], inv).is_some(),
+                "missing ss0 inv={inv}"
+            );
+            assert!(
+                m.find(ModuleKind::Superstep2, &[32, 32, 32], &[2, 2, 2], inv).is_some(),
+                "missing ss2 inv={inv}"
+            );
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime: PJRT loading/execution of the AOT artifacts (L2/L1 bridge).
+//!
+//! Python runs once at build time (`make artifacts`); this module makes
+//! the resulting HLO-text modules executable from the Rust request path.
+
+pub mod engine;
+pub mod json;
+pub mod manifest;
+pub mod xla_fftu;
+
+pub use engine::{join_planes, split_planes, XlaEngine, XlaModule};
+pub use manifest::{Manifest, ModuleEntry, ModuleKind};
+pub use xla_fftu::XlaFftu;

