@@ -1,25 +1,26 @@
-//! Quickstart: a distributed multidimensional FFT in a dozen lines.
+//! Quickstart: a distributed multidimensional FFT through the unified
+//! plan/execute API in a dozen lines.
 //!
 //! Run with `cargo run --release --example quickstart`.
 //!
-//! Demonstrates the core FFTU properties:
-//!   * cyclic in, cyclic out (same distribution — no reordering needed
-//!     between a forward transform and the inverse);
-//!   * exactly one all-to-all communication superstep per transform;
+//! Demonstrates the core FFTU properties and the `api` facade:
+//!   * one `Transform` descriptor drives every algorithm (`Algorithm`);
+//!   * exactly one all-to-all communication superstep per FFTU transform;
+//!   * normalization is a descriptor field (no hand-dividing by N);
+//!   * a `PlanCache` makes repeated transforms replanning-free;
 //!   * results identical to a sequential fftn.
 
+use fftu::api::{Algorithm, Normalization, PlanCache, Transform};
 use fftu::fft::{fftn_inplace, max_abs_diff, rel_l2_error, C64};
-use fftu::fftu::{fftu_global, fftu_pmax};
+use fftu::fftu::fftu_pmax;
 use fftu::Direction;
 
 fn main() {
-    // A 32 x 32 x 32 array over a 2 x 2 x 2 cyclic processor grid.
+    // A 32 x 32 x 32 array over 8 processors (grid chosen automatically).
     let shape = [32usize, 32, 32];
-    let grid = [2usize, 2, 2];
     let n: usize = shape.iter().product();
     println!(
-        "FFTU quickstart: shape {shape:?}, grid {grid:?} ({} procs), p_max = {}",
-        grid.iter().product::<usize>(),
+        "FFTU quickstart: shape {shape:?}, p = 8 (auto grid), p_max = {}",
         fftu_pmax(&shape)
     );
 
@@ -28,26 +29,38 @@ fn main() {
         .map(|i| C64::new((i % 7) as f64 - 3.0, (i % 5) as f64 - 2.0))
         .collect();
 
-    // Parallel forward FFT (Algorithm 2.3 on the BSP runtime).
-    let (y, report) = fftu_global(&shape, &grid, &x, Direction::Forward).unwrap();
+    // Plan once, execute as often as you like (the cache hands back the
+    // identical plan object for a repeated descriptor).
+    let cache = PlanCache::new(8);
+    let forward = Transform::new(&shape).procs(8);
+    let plan = cache.plan(Algorithm::Fftu, &forward).unwrap();
+    println!("planned: grid {:?} on {} procs", plan.grid().unwrap(), plan.procs());
+
+    let y = plan.execute(&x).unwrap();
     println!(
         "forward done: {} communication superstep(s), h = {} words/proc",
-        report.comm_supersteps(),
-        report.total_h()
+        y.report.comm_supersteps(),
+        y.report.total_h()
     );
 
     // Check against the sequential library.
     let mut want = x.clone();
     fftn_inplace(&mut want, &shape, Direction::Forward);
-    println!("vs sequential fftn: rel L2 err = {:.3e}", rel_l2_error(&y, &want));
+    println!("vs sequential fftn: rel L2 err = {:.3e}", rel_l2_error(&y.output, &want));
 
-    // Inverse: the SAME program with conjugated weights (cyclic-to-cyclic
-    // means no data reordering in between), normalized by 1/N.
-    let (z, _) = fftu_global(&shape, &grid, &y, Direction::Inverse).unwrap();
-    let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
-    println!("roundtrip max |x - ifft(fft(x))| = {:.3e}", max_abs_diff(&z, &x));
+    // Inverse: the SAME program with conjugated weights; the 1/N scaling
+    // comes from the descriptor, not from caller-side arithmetic.
+    let inverse = forward.clone().inverse().normalization(Normalization::ByN);
+    let z = cache.plan(Algorithm::Fftu, &inverse).unwrap().execute(&y.output).unwrap();
+    println!("roundtrip max |x - ifft(fft(x))| = {:.3e}", max_abs_diff(&z.output, &x));
 
-    assert!(rel_l2_error(&y, &want) < 1e-10);
-    assert!(max_abs_diff(&z, &x) < 1e-10);
+    // Rerun the forward transform: pure cache hit, zero planning work.
+    let again = cache.plan(Algorithm::Fftu, &forward).unwrap();
+    let _ = again.execute(&x).unwrap();
+    println!("plan cache: {} misses, {} hits", cache.misses(), cache.hits());
+
+    assert!(rel_l2_error(&y.output, &want) < 1e-10);
+    assert!(max_abs_diff(&z.output, &x) < 1e-10);
+    assert!(cache.hits() >= 1);
     println!("quickstart OK");
 }

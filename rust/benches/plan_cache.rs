@@ -1,0 +1,78 @@
+//! Bench E-cache: what the plan cache and batched execution buy.
+//!
+//! FFTW's whole execution model (and therefore the paper's: "we use the
+//! sequential FFTW program for the local FFTs") rests on plans being
+//! built once and executed many times. This bench quantifies the same
+//! split for the distributed facade:
+//!
+//! 1. plan+execute every iteration (cold, what the old free functions did),
+//! 2. plan once via `PlanCache`, execute per iteration (warm),
+//! 3. one batched descriptor executing the whole set in one SPMD session.
+
+use std::time::Instant;
+
+use fftu::api::{Algorithm, PlanCache, Transform};
+use fftu::fft::C64;
+
+fn data(n: usize) -> Vec<C64> {
+    (0..n).map(|i| C64::new((i % 13) as f64 - 6.0, (i % 7) as f64)).collect()
+}
+
+fn main() {
+    println!("## E-cache: plan reuse and batching through the api facade\n");
+    let reps = 8usize;
+    println!("| algo | shape | cold plan+exec (ms) | cached exec (ms) | batched/item (ms) |");
+    println!("|---|---|---|---|---|");
+    for (algo, shape, p) in [
+        (Algorithm::Fftu, vec![64usize, 64], 4usize),
+        (Algorithm::Fftu, vec![32, 32, 32], 8),
+        (Algorithm::slab(), vec![64, 64], 4),
+        (Algorithm::pencil(2), vec![32, 32, 32], 4),
+        (Algorithm::Heffte, vec![32, 32, 32], 8),
+        (Algorithm::Popovici, vec![64, 64], 4),
+    ] {
+        let n: usize = shape.iter().product();
+        let x = data(n);
+        let t = Transform::new(&shape).procs(p);
+
+        // 1. Cold: replan every iteration.
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let planned = t.plan(algo).unwrap();
+            std::hint::black_box(planned.execute(&x).unwrap());
+        }
+        let cold = t0.elapsed().as_secs_f64() / reps as f64;
+
+        // 2. Warm: one miss, reps-1 hits.
+        let cache = PlanCache::new(8);
+        let planned = cache.plan(algo, &t).unwrap();
+        std::hint::black_box(planned.execute(&x).unwrap()); // warm-up
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let planned = cache.plan(algo, &t).unwrap();
+            std::hint::black_box(planned.execute(&x).unwrap());
+        }
+        let warm = t0.elapsed().as_secs_f64() / reps as f64;
+        assert_eq!(cache.misses(), 1, "cache must have planned exactly once");
+
+        // 3. Batched: all reps in one SPMD session.
+        let tb = Transform::new(&shape).procs(p).batch(reps);
+        let xb: Vec<C64> = (0..reps).flat_map(|_| x.clone()).collect();
+        let batched = cache.plan(algo, &tb).unwrap();
+        let t0 = Instant::now();
+        std::hint::black_box(batched.execute_batch(&xb).unwrap());
+        let per_item = t0.elapsed().as_secs_f64() / reps as f64;
+
+        println!(
+            "| {} | {:?} p={} | {:.3} | {:.3} | {:.3} |",
+            algo.name(),
+            shape,
+            p,
+            cold * 1e3,
+            warm * 1e3,
+            per_item * 1e3
+        );
+    }
+    println!("\ncold includes grid resolution, validation, redistribution routing, and FFT planning per call;");
+    println!("cached reuses the identical plan object; batched also amortizes thread spawn + worker state.");
+}

@@ -1,0 +1,191 @@
+//! LRU plan cache keyed by the ([`Algorithm`], [`Transform`]) descriptor.
+//!
+//! Planning a distributed FFT is the expensive, fallible part: grid
+//! resolution, divisibility validation, redistribution routing (O(N)
+//! for the transpose-based baselines), and local FFT planning. Server
+//! workloads repeat a small set of descriptors millions of times, so the
+//! cache hands back the same `Arc<PlannedFft>` for a repeated descriptor
+//! — the second request does **no planning work at all** (see the
+//! pointer-identity test and `benches/plan_cache.rs`).
+//!
+//! Thread-safe: one `PlanCache` (e.g. in a `static` or an application
+//! context) can serve concurrent request threads; plans themselves are
+//! immutable and `Send + Sync`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::error::FftError;
+use super::plan::{plan, Algorithm, PlannedFft};
+use super::transform::Transform;
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct Key {
+    algo: Algorithm,
+    t: Transform,
+}
+
+struct State {
+    map: HashMap<Key, Arc<PlannedFft>>,
+    /// Recency list, least-recently-used first.
+    order: Vec<Key>,
+    hits: u64,
+    misses: u64,
+}
+
+/// A bounded, least-recently-used cache of [`PlannedFft`]s.
+pub struct PlanCache {
+    capacity: usize,
+    state: Mutex<State>,
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity` plans (at least 1).
+    pub fn new(capacity: usize) -> Self {
+        PlanCache {
+            capacity: capacity.max(1),
+            state: Mutex::new(State {
+                map: HashMap::new(),
+                order: Vec::new(),
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Return the cached plan for this exact descriptor, or plan it and
+    /// cache the result (evicting the least-recently-used entry when
+    /// full). Planning errors are not cached.
+    pub fn plan(&self, algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError> {
+        let key = Key { algo, t: t.clone() };
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(found) = st.map.get(&key).cloned() {
+                st.hits += 1;
+                if let Some(pos) = st.order.iter().position(|k| *k == key) {
+                    st.order.remove(pos);
+                }
+                st.order.push(key);
+                return Ok(found);
+            }
+        }
+        // Plan outside the lock: planning can be expensive and must not
+        // serialize unrelated descriptors.
+        let planned = plan(algo, t)?;
+        let mut st = self.state.lock().unwrap();
+        st.misses += 1;
+        if !st.map.contains_key(&key) {
+            if st.map.len() >= self.capacity {
+                let oldest = st.order.remove(0);
+                st.map.remove(&oldest);
+            }
+            st.map.insert(key.clone(), planned.clone());
+            st.order.push(key);
+        }
+        Ok(planned)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache hits so far (a hit means zero planning work was done).
+    pub fn hits(&self) -> u64 {
+        self.state.lock().unwrap().hits
+    }
+
+    /// Cache misses so far (each miss planned exactly once).
+    pub fn misses(&self) -> u64 {
+        self.state.lock().unwrap().misses
+    }
+
+    /// Drop every cached plan and reset the counters.
+    pub fn clear(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.map.clear();
+        st.order.clear();
+        st.hits = 0;
+        st.misses = 0;
+    }
+}
+
+impl Default for PlanCache {
+    /// A reasonable server default: 32 resident plans.
+    fn default() -> Self {
+        PlanCache::new(32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Normalization;
+
+    #[test]
+    fn second_request_reuses_the_same_plan() {
+        let cache = PlanCache::new(4);
+        let t = Transform::new(&[16, 16]).procs(4);
+        let a = cache.plan(Algorithm::Fftu, &t).unwrap();
+        let b = cache.plan(Algorithm::Fftu, &t).unwrap();
+        // Pointer identity: the second call did no planning work.
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn different_descriptors_plan_separately() {
+        let cache = PlanCache::new(4);
+        let t = Transform::new(&[16, 16]).procs(4);
+        let a = cache.plan(Algorithm::Fftu, &t).unwrap();
+        let b = cache.plan(Algorithm::Popovici, &t).unwrap();
+        let c = cache
+            .plan(Algorithm::Fftu, &t.clone().normalization(Normalization::ByN))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_not_hottest() {
+        let cache = PlanCache::new(2);
+        let t1 = Transform::new(&[16, 16]).procs(2);
+        let t2 = Transform::new(&[16, 16]).procs(4);
+        let t3 = Transform::new(&[16, 16]).procs(8);
+        let a1 = cache.plan(Algorithm::Fftu, &t1).unwrap();
+        let _ = cache.plan(Algorithm::Fftu, &t2).unwrap();
+        // Touch t1 so t2 is the LRU entry, then insert t3.
+        let a1_again = cache.plan(Algorithm::Fftu, &t1).unwrap();
+        assert!(Arc::ptr_eq(&a1, &a1_again));
+        let _ = cache.plan(Algorithm::Fftu, &t3).unwrap();
+        assert_eq!(cache.len(), 2);
+        // t1 must still be resident (hit), t2 must have been evicted
+        // (miss → replan).
+        let hits_before = cache.hits();
+        let _ = cache.plan(Algorithm::Fftu, &t1).unwrap();
+        assert_eq!(cache.hits(), hits_before + 1);
+        let misses_before = cache.misses();
+        let _ = cache.plan(Algorithm::Fftu, &t2).unwrap();
+        assert_eq!(cache.misses(), misses_before + 1);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = PlanCache::new(2);
+        let bad = Transform::new(&[15, 15]).procs(4); // no grid with p_l^2 | 15
+        assert!(cache.plan(Algorithm::Fftu, &bad).is_err());
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.misses(), 0);
+    }
+}

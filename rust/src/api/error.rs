@@ -1,0 +1,97 @@
+//! The crate-wide typed error.
+//!
+//! Every fallible operation on the public surface — descriptor
+//! validation, distribution construction, redistribution planning, and
+//! algorithm planning/execution — returns [`FftError`] instead of the
+//! stringly-typed `Result<_, String>` the crate started with. The
+//! variants are structured so callers can branch on *why* a transform
+//! was rejected (wrong rank, divisibility violation, processor ceiling,
+//! buffer length) rather than parsing a message.
+
+use std::fmt;
+
+/// Why a distributed-FFT operation was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FftError {
+    /// A shape and a processor grid (or cycle vector) have different
+    /// numbers of axes.
+    RankMismatch { shape: usize, grid: usize },
+    /// A per-axis positivity/divisibility constraint failed; `requires`
+    /// states the rule that was violated (e.g. `"p_l^2 | n_l"`).
+    AxisConstraint { axis: usize, n: usize, p: usize, requires: &'static str },
+    /// The processor count exceeds the algorithm's ceiling for this
+    /// shape (§1.2/§2.3 of the paper).
+    TooManyProcs { algo: &'static str, p: usize, pmax: usize },
+    /// No valid processor grid exists for this (shape, p) pair.
+    NoValidGrid { p: usize, pmax: usize },
+    /// Two distributions handed to a redistribution are incompatible.
+    DistMismatch { reason: &'static str },
+    /// An input buffer does not match the descriptor's element count.
+    InputLength { expected: usize, got: usize },
+    /// The transform descriptor itself is malformed (empty shape, zero
+    /// batch, bad decomposition rank, ...).
+    BadDescriptor { reason: String },
+    /// A valid request this build cannot serve (e.g. the XLA engine
+    /// without the `xla-pjrt` feature).
+    Unsupported { reason: String },
+}
+
+impl fmt::Display for FftError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FftError::RankMismatch { shape, grid } => {
+                write!(f, "shape rank {shape} != processor grid rank {grid}")
+            }
+            FftError::AxisConstraint { axis, n, p, requires } => {
+                write!(f, "axis {axis} (n = {n}, p = {p}) violates `{requires}`")
+            }
+            FftError::TooManyProcs { algo, p, pmax } => {
+                write!(f, "{algo} supports at most p_max = {pmax} processors, got p = {p}")
+            }
+            FftError::NoValidGrid { p, pmax } => {
+                write!(f, "no valid processor grid for p = {p} (p_max = {pmax})")
+            }
+            FftError::DistMismatch { reason } => {
+                write!(f, "incompatible distributions: {reason}")
+            }
+            FftError::InputLength { expected, got } => {
+                write!(f, "input length {got} does not match descriptor ({expected} elements)")
+            }
+            FftError::BadDescriptor { reason } => write!(f, "bad transform descriptor: {reason}"),
+            FftError::Unsupported { reason } => write!(f, "unsupported: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for FftError {}
+
+/// Lets `?` lift an [`FftError`] into the `Result<_, String>` layers
+/// (CLI, property-test closures) without boilerplate.
+impl From<FftError> for String {
+    fn from(e: FftError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = FftError::AxisConstraint { axis: 1, n: 8, p: 4, requires: "p_l^2 | n_l" };
+        let s = e.to_string();
+        assert!(s.contains("axis 1") && s.contains("p_l^2 | n_l"), "{s}");
+        let e = FftError::TooManyProcs { algo: "slab", p: 64, pmax: 8 };
+        assert!(e.to_string().contains("p_max = 8"), "{e}");
+    }
+
+    #[test]
+    fn converts_to_string_for_question_mark() {
+        fn inner() -> Result<(), String> {
+            Err(FftError::NoValidGrid { p: 7, pmax: 4 })?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().contains("p = 7"));
+    }
+}

@@ -1,0 +1,54 @@
+//! The crate's front door: one plan/execute API over every distributed
+//! FFT algorithm in the crate.
+//!
+//! The pieces:
+//!
+//! - [`Transform`] — the descriptor: shape, processor grid (explicit or
+//!   [`Grid::Auto`] via `choose_grid`), [`Direction`], [`Normalization`],
+//!   and batch count;
+//! - [`Algorithm`] — FFTU or any of the four published baselines
+//!   (slab/FFTW, pencil/PFFT, heFFTe, Popovici);
+//! - [`plan`] — plan-time validation returning a reusable
+//!   [`PlannedFft`] (all algorithms implement [`DistFft`]);
+//! - [`FftError`] — the typed error every fallible call returns;
+//! - [`PlanCache`] — an LRU cache keyed by the descriptor, so repeated
+//!   transforms reuse `FftuPlan`/baseline schedules instead of
+//!   replanning.
+//!
+//! ```
+//! use fftu::api::{Algorithm, DistFft, Normalization, PlanCache, Transform};
+//! use fftu::fft::{max_abs_diff, C64};
+//!
+//! let x: Vec<C64> = (0..256).map(|i| C64::new(i as f64, -(i as f64))).collect();
+//! let cache = PlanCache::new(8);
+//!
+//! // Forward FFTU on 4 auto-placed processors: ONE all-to-all.
+//! let fwd = cache.plan(Algorithm::Fftu, &Transform::new(&[16, 16]).procs(4))?;
+//! let y = fwd.execute(&x)?;
+//! assert_eq!(y.report.comm_supersteps(), 1);
+//!
+//! // Inverse with explicit 1/N normalization: exact round trip.
+//! let inv = cache.plan(
+//!     Algorithm::Fftu,
+//!     &Transform::new(&[16, 16]).procs(4).inverse().normalization(Normalization::ByN),
+//! )?;
+//! let z = inv.execute(&y.output)?;
+//! assert!(max_abs_diff(&z.output, &x) < 1e-9);
+//!
+//! // Same descriptor, different algorithm: d communication supersteps.
+//! let pop = cache.plan(Algorithm::Popovici, &Transform::new(&[16, 16]).procs(4))?;
+//! assert_eq!(pop.execute(&x)?.report.comm_supersteps(), 2);
+//! # Ok::<(), fftu::FftError>(())
+//! ```
+
+pub mod cache;
+pub mod error;
+pub mod plan;
+pub mod transform;
+
+pub use cache::PlanCache;
+pub use error::FftError;
+pub use plan::{plan, Algorithm, DistFft, Execution, PlannedFft};
+pub use transform::{Grid, Normalization, Transform};
+
+pub use crate::fft::Direction;

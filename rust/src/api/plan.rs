@@ -1,0 +1,325 @@
+//! Plan-time validation and the unified execute path: the [`Algorithm`]
+//! enum, the [`DistFft`] trait, and [`plan`], which turns a
+//! ([`Algorithm`], [`Transform`]) pair into a reusable [`PlannedFft`].
+//!
+//! Planning does all the expensive, fallible work once — grid
+//! resolution, divisibility checks, distribution schedules, compiled
+//! redistributions, local FFT plans — so execution is infallible apart
+//! from input-length checks and can be repeated (and batched) with no
+//! replanning. [`super::PlanCache`] builds on this split.
+
+use std::sync::Arc;
+
+use crate::baselines::{HefftePlan, OutputDist, PencilPlan, PopoviciPlan, SlabPlan};
+use crate::bsp::CostReport;
+use crate::fft::{C64, Planner};
+use crate::fftu::{choose_grid, fftu_execute_batch, fftu_pmax, FftuPlan};
+
+use super::error::FftError;
+use super::transform::{Grid, Transform};
+
+/// Which distributed-FFT algorithm executes a [`Transform`].
+///
+/// All five run on the same BSP machine and sequential FFT substrate, so
+/// choosing between them changes *communication structure only* — the
+/// paper's subject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// The paper's contribution: cyclic-to-cyclic, ONE all-to-all.
+    Fftu,
+    /// Parallel-FFTW slab decomposition (§1.2).
+    Slab { out: OutputDist },
+    /// PFFT r-dimensional block decomposition (§1.2).
+    Pencil { r: usize, out: OutputDist },
+    /// heFFTe brick-to-brick pipeline (§1.2).
+    Heffte,
+    /// Popovici et al. cyclic d-step (§1.2).
+    Popovici,
+}
+
+impl Algorithm {
+    /// Slab with the paper's default same-distribution output.
+    pub fn slab() -> Self {
+        Algorithm::Slab { out: OutputDist::Same }
+    }
+
+    /// Pencil with decomposition rank `r` and same-distribution output.
+    pub fn pencil(r: usize) -> Self {
+        Algorithm::Pencil { r, out: OutputDist::Same }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Fftu => "fftu",
+            Algorithm::Slab { .. } => "slab",
+            Algorithm::Pencil { .. } => "pencil",
+            Algorithm::Heffte => "heffte",
+            Algorithm::Popovici => "popovici",
+        }
+    }
+
+    /// Parse a CLI-style name; `pencil` defaults to `r = 2` capped at
+    /// `d - 1` when the shape rank is known to the caller.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "fftu" => Some(Algorithm::Fftu),
+            "slab" => Some(Algorithm::slab()),
+            "pencil" => Some(Algorithm::pencil(2)),
+            "heffte" => Some(Algorithm::Heffte),
+            "popovici" => Some(Algorithm::Popovici),
+            _ => None,
+        }
+    }
+
+    /// Documented communication-superstep count for a d-dimensional
+    /// transform — the paper's headline comparison (§1.2, Eq. 2.12).
+    pub fn comm_supersteps(self, d: usize) -> usize {
+        match self {
+            Algorithm::Fftu => 1,
+            Algorithm::Slab { out } => 1 + usize::from(out == OutputDist::Same),
+            Algorithm::Pencil { r, out } => {
+                // ceil(r / (d-r)) for a valid 1 <= r < d; clamp the span
+                // so an invalid r (which `plan` rejects) cannot divide by
+                // zero here.
+                let span = d.saturating_sub(r).max(1);
+                let stages = (r + span - 1) / span;
+                stages + usize::from(out == OutputDist::Same)
+            }
+            Algorithm::Heffte => d + 1,
+            Algorithm::Popovici => d,
+        }
+    }
+}
+
+/// Result of executing a planned transform: the output array(s), back to
+/// back for a batch, plus the exact BSP cost ledger of the run.
+#[derive(Debug)]
+pub struct Execution {
+    pub output: Vec<C64>,
+    pub report: CostReport,
+}
+
+/// The unified plan/execute interface every algorithm implements (via
+/// [`PlannedFft`]). Plans are immutable and `Send + Sync`: share one
+/// behind an `Arc` and execute from as many threads as you like.
+pub trait DistFft: Send + Sync {
+    /// The algorithm this plan executes.
+    fn algorithm(&self) -> Algorithm;
+    /// The descriptor this plan was built from.
+    fn transform(&self) -> &Transform;
+    /// Total processors the plan runs on.
+    fn procs(&self) -> usize;
+    /// The resolved per-axis cyclic grid (FFTU/Popovici), if any.
+    fn grid(&self) -> Option<&[usize]>;
+    /// Execute ONE transform (`shape.product()` elements, regardless of
+    /// the descriptor's batch count).
+    fn execute(&self, input: &[C64]) -> Result<Execution, FftError>;
+    /// Execute the descriptor's `batch` transforms from one contiguous
+    /// buffer, amortizing per-rank state across the batch.
+    fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError>;
+}
+
+enum Inner {
+    Fftu(Arc<FftuPlan>),
+    Slab(SlabPlan),
+    Pencil(PencilPlan),
+    Heffte(HefftePlan),
+    Popovici(PopoviciPlan),
+}
+
+/// A validated, reusable plan binding a [`Transform`] to an
+/// [`Algorithm`]. Built by [`plan`] (or [`Transform::plan`] /
+/// [`super::PlanCache::plan`]); executing it never replans.
+pub struct PlannedFft {
+    algo: Algorithm,
+    t: Transform,
+    grid: Option<Vec<usize>>,
+    p: usize,
+    inner: Inner,
+}
+
+/// Resolve the per-axis cyclic grid for the cyclic-family algorithms.
+fn resolve_cyclic_grid(t: &Transform) -> Result<Vec<usize>, FftError> {
+    match &t.grid {
+        Grid::Explicit(g) => Ok(g.clone()),
+        Grid::Auto { p } => choose_grid(&t.shape, *p)
+            .ok_or(FftError::NoValidGrid { p: *p, pmax: fftu_pmax(&t.shape) }),
+    }
+}
+
+/// Validate `t` and build a reusable plan for `algo`.
+pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError> {
+    t.validate()?;
+    let p = t.grid.procs();
+    let (inner, grid, p) = match algo {
+        Algorithm::Fftu => {
+            let grid = resolve_cyclic_grid(t)?;
+            let planner = Planner::new();
+            let plan = Arc::new(FftuPlan::new(&t.shape, &grid, &planner)?);
+            let p = plan.num_procs();
+            (Inner::Fftu(plan), Some(grid), p)
+        }
+        Algorithm::Slab { out } => (Inner::Slab(SlabPlan::new(&t.shape, p, out)?), None, p),
+        Algorithm::Pencil { r, out } => {
+            (Inner::Pencil(PencilPlan::new(&t.shape, r, p, out)?), None, p)
+        }
+        Algorithm::Heffte => (Inner::Heffte(HefftePlan::new(&t.shape, p)?), None, p),
+        Algorithm::Popovici => {
+            let grid = resolve_cyclic_grid(t)?;
+            let plan = PopoviciPlan::new(&t.shape, &grid)?;
+            let p = plan.num_procs();
+            (Inner::Popovici(plan), Some(grid), p)
+        }
+    };
+    Ok(Arc::new(PlannedFft { algo, t: t.clone(), grid, p, inner }))
+}
+
+impl PlannedFft {
+    pub fn algorithm(&self) -> Algorithm {
+        self.algo
+    }
+
+    pub fn transform(&self) -> &Transform {
+        &self.t
+    }
+
+    pub fn procs(&self) -> usize {
+        self.p
+    }
+
+    pub fn grid(&self) -> Option<&[usize]> {
+        self.grid.as_deref()
+    }
+
+    /// Execute ONE transform; see [`DistFft::execute`].
+    pub fn execute(&self, input: &[C64]) -> Result<Execution, FftError> {
+        self.run(input, 1)
+    }
+
+    /// Execute the descriptor's batch; see [`DistFft::execute_batch`].
+    pub fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError> {
+        self.run(input, self.t.batch)
+    }
+
+    fn run(&self, input: &[C64], batch: usize) -> Result<Execution, FftError> {
+        let n = self.t.total();
+        if input.len() != batch * n {
+            return Err(FftError::InputLength { expected: batch * n, got: input.len() });
+        }
+        let dir = self.t.direction;
+        let inputs: Vec<&[C64]> = input.chunks(n).collect();
+        let (mut outputs, report) = match &self.inner {
+            Inner::Fftu(plan) => fftu_execute_batch(plan, &inputs, dir),
+            Inner::Slab(plan) => plan.execute_batch_global(&inputs, dir),
+            Inner::Pencil(plan) => plan.execute_batch_global(&inputs, dir),
+            Inner::Heffte(plan) => plan.execute_batch_global(&inputs, dir),
+            Inner::Popovici(plan) => plan.execute_batch_global(&inputs, dir),
+        };
+        let scale = self.t.normalization.scale(n);
+        if scale != 1.0 {
+            for out in &mut outputs {
+                for v in out.iter_mut() {
+                    *v = v.scale(scale);
+                }
+            }
+        }
+        let mut flat = Vec::with_capacity(input.len());
+        for out in outputs {
+            flat.extend(out);
+        }
+        Ok(Execution { output: flat, report })
+    }
+}
+
+impl DistFft for PlannedFft {
+    fn algorithm(&self) -> Algorithm {
+        PlannedFft::algorithm(self)
+    }
+
+    fn transform(&self) -> &Transform {
+        PlannedFft::transform(self)
+    }
+
+    fn procs(&self) -> usize {
+        PlannedFft::procs(self)
+    }
+
+    fn grid(&self) -> Option<&[usize]> {
+        PlannedFft::grid(self)
+    }
+
+    fn execute(&self, input: &[C64]) -> Result<Execution, FftError> {
+        PlannedFft::execute(self, input)
+    }
+
+    fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError> {
+        PlannedFft::execute_batch(self, input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_nd, rel_l2_error, Direction};
+    use crate::testing::Rng;
+
+    fn rand(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+    }
+
+    #[test]
+    fn plan_resolves_auto_grid_for_cyclic_algorithms() {
+        let t = Transform::new(&[16, 16]).procs(4);
+        let p = plan(Algorithm::Fftu, &t).unwrap();
+        assert_eq!(p.grid().unwrap().iter().product::<usize>(), 4);
+        assert_eq!(p.procs(), 4);
+        let p = plan(Algorithm::Popovici, &t).unwrap();
+        assert_eq!(p.grid().unwrap().iter().product::<usize>(), 4);
+    }
+
+    #[test]
+    fn execute_through_trait_object() {
+        let t = Transform::new(&[8, 8]).procs(2);
+        let planned: Arc<dyn DistFft> = plan(Algorithm::Fftu, &t).unwrap();
+        let x = rand(64, 0xAB);
+        let want = dft_nd(&x, &[8, 8], Direction::Forward);
+        let got = planned.execute(&x).unwrap();
+        assert!(rel_l2_error(&got.output, &want) < 1e-9);
+        assert_eq!(got.report.comm_supersteps(), 1);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_length_with_typed_error() {
+        let t = Transform::new(&[8, 8]).procs(2);
+        let planned = plan(Algorithm::Fftu, &t).unwrap();
+        assert_eq!(
+            planned.execute(&[C64::ZERO; 10]).unwrap_err(),
+            FftError::InputLength { expected: 64, got: 10 }
+        );
+        let batched = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).batch(3)).unwrap();
+        assert_eq!(
+            batched.execute_batch(&[C64::ZERO; 64]).unwrap_err(),
+            FftError::InputLength { expected: 192, got: 64 }
+        );
+    }
+
+    #[test]
+    fn documented_comm_superstep_formulas() {
+        assert_eq!(Algorithm::Fftu.comm_supersteps(3), 1);
+        assert_eq!(Algorithm::slab().comm_supersteps(3), 2);
+        assert_eq!(Algorithm::Slab { out: OutputDist::Different }.comm_supersteps(3), 1);
+        assert_eq!(Algorithm::pencil(2).comm_supersteps(3), 3);
+        assert_eq!(Algorithm::Pencil { r: 2, out: OutputDist::Different }.comm_supersteps(5), 1);
+        assert_eq!(Algorithm::Heffte.comm_supersteps(3), 4);
+        assert_eq!(Algorithm::Popovici.comm_supersteps(3), 3);
+    }
+
+    #[test]
+    fn parse_round_trips_names() {
+        for name in ["fftu", "slab", "pencil", "heffte", "popovici"] {
+            assert_eq!(Algorithm::parse(name).unwrap().name(), name);
+        }
+        assert!(Algorithm::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,227 @@
+//! The [`Transform`] descriptor: everything that identifies a
+//! distributed multidimensional FFT *before* an algorithm is chosen —
+//! shape, processor grid (explicit or auto-chosen), direction,
+//! normalization, and batch count.
+//!
+//! The descriptor is plain data (`Eq + Hash`), which is what lets
+//! [`super::PlanCache`] key plans by it.
+
+use std::sync::Arc;
+
+use crate::fft::Direction;
+
+use super::error::FftError;
+use super::plan::{plan, Algorithm, PlannedFft};
+
+/// Output scaling, applied uniformly for every algorithm and direction.
+///
+/// The raw transforms (like FFTW's) are unnormalized: a forward followed
+/// by an inverse multiplies the data by `N`. The descriptor makes the
+/// convention explicit instead of leaving callers to hand-divide:
+///
+/// - [`Normalization::None`]: no scaling (FFTW default);
+/// - [`Normalization::Unitary`]: `1/sqrt(N)` — forward and inverse both
+///   unitary, so any forward/inverse pair round-trips;
+/// - [`Normalization::ByN`]: `1/N` — the classic inverse-transform
+///   scaling; `Forward` with `None` then `Inverse` with `ByN` is the
+///   identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Normalization {
+    None,
+    Unitary,
+    ByN,
+}
+
+impl Normalization {
+    /// The scale factor for an `n`-element transform.
+    pub fn scale(self, n: usize) -> f64 {
+        match self {
+            Normalization::None => 1.0,
+            Normalization::Unitary => 1.0 / (n as f64).sqrt(),
+            Normalization::ByN => 1.0 / n as f64,
+        }
+    }
+}
+
+/// Processor-grid request: either an explicit per-axis grid or a total
+/// processor count resolved per algorithm (via
+/// [`crate::fftu::choose_grid`] for the cyclic algorithms).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Grid {
+    /// `p` total processors; the planner picks the per-axis split.
+    Auto { p: usize },
+    /// Explicit per-axis processor counts (cyclic-family algorithms) —
+    /// its product is the processor count for the slab/pencil/brick
+    /// algorithms, which place processors themselves.
+    Explicit(Vec<usize>),
+}
+
+impl Grid {
+    /// Total processor count this request asks for.
+    pub fn procs(&self) -> usize {
+        match self {
+            Grid::Auto { p } => *p,
+            Grid::Explicit(g) => g.iter().product(),
+        }
+    }
+}
+
+/// Descriptor of one (possibly batched) distributed FFT.
+///
+/// Built with the fluent constructors and handed to
+/// [`Transform::plan`] / [`super::plan`] / [`super::PlanCache::plan`]:
+///
+/// ```
+/// use fftu::api::{Algorithm, Normalization, Transform};
+/// let t = Transform::new(&[16, 16])
+///     .procs(4)
+///     .inverse()
+///     .normalization(Normalization::ByN)
+///     .batch(2);
+/// assert_eq!(t.total(), 256);
+/// assert!(t.plan(Algorithm::Fftu).is_ok());
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Transform {
+    /// Global array shape `n_1 x ... x n_d`.
+    pub shape: Vec<usize>,
+    /// Processor grid request.
+    pub grid: Grid,
+    /// Transform direction (`Forward` is `e^{-2 pi i jk/n}`).
+    pub direction: Direction,
+    /// Output scaling.
+    pub normalization: Normalization,
+    /// Number of independent transforms per [`super::DistFft::execute_batch`]
+    /// call; the input buffer holds `batch` arrays back to back.
+    pub batch: usize,
+}
+
+impl Transform {
+    /// A forward, unnormalized, single transform on one processor.
+    pub fn new(shape: &[usize]) -> Self {
+        Transform {
+            shape: shape.to_vec(),
+            grid: Grid::Auto { p: 1 },
+            direction: Direction::Forward,
+            normalization: Normalization::None,
+            batch: 1,
+        }
+    }
+
+    /// Use an explicit per-axis processor grid.
+    pub fn grid(mut self, grid: &[usize]) -> Self {
+        self.grid = Grid::Explicit(grid.to_vec());
+        self
+    }
+
+    /// Use `p` total processors, letting the planner pick the split.
+    pub fn procs(mut self, p: usize) -> Self {
+        self.grid = Grid::Auto { p };
+        self
+    }
+
+    pub fn direction(mut self, dir: Direction) -> Self {
+        self.direction = dir;
+        self
+    }
+
+    pub fn forward(self) -> Self {
+        self.direction(Direction::Forward)
+    }
+
+    pub fn inverse(self) -> Self {
+        self.direction(Direction::Inverse)
+    }
+
+    pub fn normalization(mut self, norm: Normalization) -> Self {
+        self.normalization = norm;
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Elements per transform.
+    pub fn total(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Structural validation shared by every algorithm (the per-axis
+    /// divisibility rules are the algorithms' own, checked at plan time).
+    pub fn validate(&self) -> Result<(), FftError> {
+        if self.shape.is_empty() {
+            return Err(FftError::BadDescriptor { reason: "shape must have at least one axis".into() });
+        }
+        if let Some(axis) = self.shape.iter().position(|&n| n == 0) {
+            return Err(FftError::AxisConstraint { axis, n: 0, p: 0, requires: "n_l >= 1" });
+        }
+        if self.batch == 0 {
+            return Err(FftError::BadDescriptor { reason: "batch must be >= 1".into() });
+        }
+        match &self.grid {
+            Grid::Auto { p: 0 } => {
+                Err(FftError::BadDescriptor { reason: "processor count must be >= 1".into() })
+            }
+            Grid::Explicit(g) if g.len() != self.shape.len() => {
+                Err(FftError::RankMismatch { shape: self.shape.len(), grid: g.len() })
+            }
+            Grid::Explicit(g) => match g.iter().position(|&p| p == 0) {
+                Some(axis) => Err(FftError::AxisConstraint {
+                    axis,
+                    n: self.shape[axis],
+                    p: 0,
+                    requires: "p_l >= 1",
+                }),
+                None => Ok(()),
+            },
+            _ => Ok(()),
+        }
+    }
+
+    /// Plan this descriptor with `algo` — shorthand for
+    /// [`super::plan`]`(algo, self)`.
+    pub fn plan(&self, algo: Algorithm) -> Result<Arc<PlannedFft>, FftError> {
+        plan(algo, self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_chaining() {
+        let t = Transform::new(&[8, 4]);
+        assert_eq!(t.grid, Grid::Auto { p: 1 });
+        assert_eq!(t.direction, Direction::Forward);
+        assert_eq!(t.normalization, Normalization::None);
+        assert_eq!(t.batch, 1);
+        let t = t.grid(&[2, 2]).inverse().normalization(Normalization::ByN).batch(3);
+        assert_eq!(t.grid.procs(), 4);
+        assert_eq!(t.direction, Direction::Inverse);
+        assert_eq!(t.batch, 3);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_descriptors() {
+        assert!(Transform::new(&[]).validate().is_err());
+        assert!(Transform::new(&[8, 0]).validate().is_err());
+        assert!(Transform::new(&[8]).batch(0).validate().is_err());
+        assert!(Transform::new(&[8]).procs(0).validate().is_err());
+        assert!(matches!(
+            Transform::new(&[8, 8]).grid(&[2]).validate(),
+            Err(FftError::RankMismatch { shape: 2, grid: 1 })
+        ));
+        assert!(Transform::new(&[8, 8]).grid(&[2, 0]).validate().is_err());
+    }
+
+    #[test]
+    fn normalization_scales() {
+        assert_eq!(Normalization::None.scale(64), 1.0);
+        assert_eq!(Normalization::ByN.scale(64), 1.0 / 64.0);
+        assert!((Normalization::Unitary.scale(64) - 0.125).abs() < 1e-15);
+    }
+}

@@ -6,9 +6,13 @@
 //! orientation, and reshapes back to bricks on output. For a 3D array
 //! this is the brick -> pencil-z -> pencil-y -> pencil-x -> brick
 //! pipeline of the heFFTe paper, with d + 1 communication steps.
+//!
+//! Planning (distribution chain, compiled reshapes, local FFT plans)
+//! lives in [`HefftePlan`]; [`heffte_global`] is the one-shot wrapper.
 
 use std::sync::Arc;
 
+use crate::api::FftError;
 use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
 use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
@@ -21,12 +25,10 @@ use super::pencil::fit_grid;
 /// p by `prod_l n_l / 2^d`-ish, but the pencil stages are the binding
 /// constraint we model: p must fit on d-1 axes at every stage.
 pub fn heffte_pmax(shape: &[usize]) -> usize {
-    let d = shape.len();
     // Worst stage: processors sit on all axes except the transformed
     // one; the binding stage excludes the largest axis.
     let total: usize = shape.iter().product();
     let max_axis = *shape.iter().max().unwrap();
-    let _ = d;
     total / max_axis
 }
 
@@ -36,18 +38,18 @@ pub fn heffte_pmax(shape: &[usize]) -> usize {
 pub fn heffte_schedule(
     shape: &[usize],
     p: usize,
-) -> Result<(Vec<GridDist>, Vec<usize>), String> {
+) -> Result<(Vec<GridDist>, Vec<usize>), FftError> {
     let d = shape.len();
     let all_axes: Vec<usize> = (0..d).collect();
     let brick_grid = fit_grid(shape, &all_axes, p)
-        .ok_or_else(|| format!("cannot build a {p}-processor brick grid for {shape:?}"))?;
+        .ok_or(FftError::NoValidGrid { p, pmax: heffte_pmax(shape) })?;
     let dist_brick = GridDist::blocks(shape, &brick_grid)?;
     let mut dists: Vec<GridDist> = vec![dist_brick.clone()];
     let mut stage_axis: Vec<usize> = Vec::new();
     for l in (0..d).rev() {
         let allowed: Vec<usize> = (0..d).filter(|&m| m != l).collect();
         let grid = fit_grid(shape, &allowed, p)
-            .ok_or_else(|| format!("cannot place {p} processors avoiding axis {l}"))?;
+            .ok_or(FftError::NoValidGrid { p, pmax: heffte_pmax(shape) })?;
         dists.push(GridDist::blocks(shape, &grid)?);
         stage_axis.push(l);
     }
@@ -55,42 +57,86 @@ pub fn heffte_schedule(
     Ok((dists, stage_axis))
 }
 
-/// Run the brick-to-brick heFFTe-like pipeline.
+/// Validated, fully planned brick-to-brick heFFTe-like pipeline.
+pub struct HefftePlan {
+    shape: Vec<usize>,
+    p: usize,
+    dists: Vec<GridDist>,
+    stage_axis: Vec<usize>,
+    redists: Vec<RedistPlan>,
+    axis_plan: Vec<Arc<Plan>>,
+}
+
+impl HefftePlan {
+    pub fn new(shape: &[usize], p: usize) -> Result<Self, FftError> {
+        let (dists, stage_axis) = heffte_schedule(shape, p)?;
+        let mut redists: Vec<RedistPlan> = Vec::new();
+        for w in dists.windows(2) {
+            redists.push(RedistPlan::new(&w[0], &w[1])?);
+        }
+        let planner = Planner::new();
+        let axis_plan: Vec<Arc<Plan>> = shape.iter().map(|&n| planner.plan(n)).collect();
+        Ok(HefftePlan { shape: shape.to_vec(), p, dists, stage_axis, redists, axis_plan })
+    }
+
+    pub fn num_procs(&self) -> usize {
+        self.p
+    }
+
+    /// The brick distribution the input and output live in.
+    pub fn input_dist(&self) -> &GridDist {
+        &self.dists[0]
+    }
+
+    /// Execute on whole (global) arrays; the report covers the batch.
+    pub fn execute_batch_global(
+        &self,
+        inputs: &[&[C64]],
+        dir: Direction,
+    ) -> (Vec<Vec<C64>>, CostReport) {
+        let dist_brick = &self.dists[0];
+        let locals: Vec<Vec<Vec<C64>>> = inputs.iter().map(|g| dist_brick.scatter(g)).collect();
+        let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
+            let max_axis = *self.shape.iter().max().unwrap();
+            let mut scratch = vec![C64::ZERO; dist_brick.local_len().max(4 * max_axis)];
+            let mut outs = Vec::with_capacity(inputs.len());
+            for item in &locals {
+                let mut local = item[ctx.rank()].clone();
+                for (i, &l) in self.stage_axis.iter().enumerate() {
+                    local = redistribute(ctx, &self.redists[i], "heffte-reshape", &local);
+                    if scratch.len() < local.len() {
+                        scratch.resize(local.len(), C64::ZERO);
+                    }
+                    ctx.begin_comp("heffte-axis");
+                    let lshape = self.dists[i + 1].local_shape();
+                    transform_axis(&mut local, lshape, l, &self.axis_plan[l], &mut scratch, dir);
+                    let n = lshape[l] as f64;
+                    ctx.charge_flops(5.0 * local.len() as f64 * n.log2());
+                }
+                // Final reshape back to bricks.
+                outs.push(redistribute(
+                    ctx,
+                    self.redists.last().unwrap(),
+                    "heffte-reshape-out",
+                    &local,
+                ));
+            }
+            outs
+        });
+        (dist_brick.gather_batch(&outcome.outputs), outcome.report)
+    }
+}
+
+/// One-shot convenience: plan, run once, gather.
 pub fn heffte_global(
     shape: &[usize],
     p: usize,
     global: &[C64],
     dir: Direction,
-) -> Result<(Vec<C64>, CostReport), String> {
-    let (dists, stage_axis) = heffte_schedule(shape, p)?;
-    let dist_brick = dists[0].clone();
-    let mut redists: Vec<RedistPlan> = Vec::new();
-    for w in dists.windows(2) {
-        redists.push(RedistPlan::new(&w[0], &w[1])?);
-    }
-
-    let planner = Planner::new();
-    let axis_plan: Vec<Arc<Plan>> = shape.iter().map(|&n| planner.plan(n)).collect();
-    let locals = dist_brick.scatter(global);
-    let outcome = run_spmd(p, |ctx: &mut Ctx| {
-        let mut local = locals[ctx.rank()].clone();
-        let max_axis = *shape.iter().max().unwrap();
-        let mut scratch = vec![C64::ZERO; local.len().max(4 * max_axis)];
-        for (i, &l) in stage_axis.iter().enumerate() {
-            local = redistribute(ctx, &redists[i], "heffte-reshape", &local);
-            if scratch.len() < local.len() {
-                scratch.resize(local.len(), C64::ZERO);
-            }
-            ctx.begin_comp("heffte-axis");
-            let lshape = dists[i + 1].local_shape().to_vec();
-            transform_axis(&mut local, &lshape, l, &axis_plan[l], &mut scratch, dir);
-            let n = lshape[l] as f64;
-            ctx.charge_flops(5.0 * local.len() as f64 * n.log2());
-        }
-        // Final reshape back to bricks.
-        redistribute(ctx, redists.last().unwrap(), "heffte-reshape-out", &local)
-    });
-    Ok((dist_brick.gather(&outcome.outputs), outcome.report))
+) -> Result<(Vec<C64>, CostReport), FftError> {
+    let plan = HefftePlan::new(shape, p)?;
+    let (mut outs, report) = plan.execute_batch_global(&[global], dir);
+    Ok((outs.pop().unwrap(), report))
 }
 
 #[cfg(test)]
@@ -130,5 +176,24 @@ mod tests {
     fn heffte_pmax_excludes_largest_axis() {
         assert_eq!(heffte_pmax(&[1024, 1024, 1024]), 1 << 20);
         assert_eq!(heffte_pmax(&[1 << 24, 64]), 64);
+    }
+
+    #[test]
+    fn heffte_plan_reuse_and_typed_errors() {
+        let shape = [8usize, 4];
+        let plan = HefftePlan::new(&shape, 4).unwrap();
+        let mut rng = Rng::new(0x4F1);
+        for _ in 0..2 {
+            let x: Vec<C64> =
+                (0..32).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+            let mut want = x.clone();
+            fftn_inplace(&mut want, &shape, Direction::Forward);
+            let (got, _) = plan.execute_batch_global(&[&x], Direction::Forward);
+            assert!(rel_l2_error(&got[0], &want) < 1e-9);
+        }
+        assert!(matches!(
+            HefftePlan::new(&[4, 4], 64),
+            Err(FftError::NoValidGrid { p: 64, .. })
+        ));
     }
 }

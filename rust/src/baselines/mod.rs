@@ -11,21 +11,27 @@
 //! | [`pencil`] (PFFT, r-dim) | blocks on r axes | `ceil(r/(d-r))` (+1) | see §1.2 |
 //! | [`heffte`] (heFFTe) | bricks | pencil pipeline + reshapes | pencil-bound |
 //! | [`popovici`] (cyclic d-step) | cyclic | d | `prod sqrt(n_l)` |
+//!
+//! Each baseline follows the same plan/execute split as FFTU: a
+//! `*Plan` struct built once (validation, distribution schedules,
+//! compiled redistributions, local FFT plans) and executed many times.
+//! The `*_global` free functions are one-shot wrappers kept for tests
+//! and scripts; applications and the [`crate::api`] facade reuse plans.
 
 pub mod heffte;
 pub mod pencil;
 pub mod popovici;
 pub mod slab;
 
-pub use heffte::{heffte_global, heffte_pmax, heffte_schedule};
-pub use pencil::{pencil_global, pencil_pmax, pencil_schedule, pfft_best_pmax};
-pub use popovici::{popovici_global, popovici_pmax};
-pub use slab::{slab_dists, slab_global, slab_pmax};
+pub use heffte::{heffte_global, heffte_pmax, heffte_schedule, HefftePlan};
+pub use pencil::{pencil_global, pencil_pmax, pencil_schedule, pfft_best_pmax, PencilPlan};
+pub use popovici::{popovici_global, popovici_pmax, PopoviciPlan};
+pub use slab::{slab_dists, slab_global, slab_pmax, SlabPlan};
 
 /// Whether the transform must end in the distribution it started in
 /// ("same", the paper's default comparison) or may end transposed
 /// ("different", FFTW_TRANSPOSED_OUT / PFFT_TRANSPOSED_OUT).
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum OutputDist {
     Same,
     Different,

@@ -8,9 +8,13 @@
 //! With `OutputDist::Same` a final redistribution restores the input
 //! distribution (this is the extra step the paper's Tables 4.1/4.2 charge
 //! PFFT for in the "same" columns).
+//!
+//! Planning (schedule, compiled redistributions, local FFT plans) lives
+//! in [`PencilPlan`]; [`pencil_global`] is the one-shot wrapper.
 
 use std::sync::Arc;
 
+use crate::api::FftError;
 use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
 use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
@@ -101,15 +105,17 @@ pub fn pencil_schedule(
     shape: &[usize],
     r: usize,
     p: usize,
-) -> Result<(GridDist, Vec<(GridDist, Vec<usize>)>), String> {
+) -> Result<(GridDist, Vec<(GridDist, Vec<usize>)>), FftError> {
     let d = shape.len();
     if r == 0 || r >= d {
-        return Err(format!("decomposition rank r={r} must satisfy 1 <= r < d={d}"));
+        return Err(FftError::BadDescriptor {
+            reason: format!("decomposition rank r={r} must satisfy 1 <= r < d={d}"),
+        });
     }
     // Input distribution: p processors block-wise on the first r axes.
     let in_axes: Vec<usize> = (0..r).collect();
     let in_grid = fit_grid(shape, &in_axes, p)
-        .ok_or_else(|| format!("cannot place {p} processors on first {r} axes of {shape:?}"))?;
+        .ok_or(FftError::NoValidGrid { p, pmax: pencil_pmax(shape, r) })?;
     let dist_in = GridDist::blocks(shape, &in_grid)?;
 
     // Each stage redistributes so that the next chunk of <= d-r
@@ -121,15 +127,123 @@ pub fn pencil_schedule(
         let take = (d - r).min(pending.len());
         let now: Vec<usize> = pending.drain(..take).collect();
         let allowed: Vec<usize> = (0..d).filter(|l| !now.contains(l)).collect();
-        let grid = fit_grid(shape, &allowed, p).ok_or_else(|| {
-            format!("cannot place {p} processors avoiding axes {now:?} of {shape:?}")
-        })?;
+        let grid = fit_grid(shape, &allowed, p)
+            .ok_or(FftError::NoValidGrid { p, pmax: pencil_pmax(shape, r) })?;
         stages.push((GridDist::blocks(shape, &grid)?, now));
     }
     Ok((dist_in, stages))
 }
 
-/// Run the r-dimensional decomposition algorithm.
+/// Validated, fully planned r-dimensional decomposition pipeline.
+pub struct PencilPlan {
+    shape: Vec<usize>,
+    r: usize,
+    p: usize,
+    out: OutputDist,
+    dist_in: GridDist,
+    stages: Vec<(GridDist, Vec<usize>)>,
+    redists: Vec<RedistPlan>,
+    back: RedistPlan,
+    axis_plan: Vec<Arc<Plan>>,
+}
+
+impl PencilPlan {
+    pub fn new(shape: &[usize], r: usize, p: usize, out: OutputDist) -> Result<Self, FftError> {
+        let (dist_in, stages) = pencil_schedule(shape, r, p)?;
+        let mut dists: Vec<&GridDist> = vec![&dist_in];
+        for (dist, _) in &stages {
+            dists.push(dist);
+        }
+        let mut redists: Vec<RedistPlan> = Vec::new();
+        for w in dists.windows(2) {
+            redists.push(RedistPlan::new(w[0], w[1])?);
+        }
+        let back = RedistPlan::new(dists.last().unwrap(), &dist_in)?;
+        let planner = Planner::new();
+        let axis_plan: Vec<Arc<Plan>> = shape.iter().map(|&n| planner.plan(n)).collect();
+        Ok(PencilPlan {
+            shape: shape.to_vec(),
+            r,
+            p,
+            out,
+            dist_in,
+            stages,
+            redists,
+            back,
+            axis_plan,
+        })
+    }
+
+    pub fn num_procs(&self) -> usize {
+        self.p
+    }
+
+    pub fn input_dist(&self) -> &GridDist {
+        &self.dist_in
+    }
+
+    fn final_dist(&self) -> &GridDist {
+        match self.out {
+            OutputDist::Different => {
+                self.stages.last().map(|(d, _)| d).unwrap_or(&self.dist_in)
+            }
+            OutputDist::Same => &self.dist_in,
+        }
+    }
+
+    /// Execute on whole (global) arrays; the report covers the batch.
+    pub fn execute_batch_global(
+        &self,
+        inputs: &[&[C64]],
+        dir: Direction,
+    ) -> (Vec<Vec<C64>>, CostReport) {
+        let d = self.shape.len();
+        let locals: Vec<Vec<Vec<C64>>> =
+            inputs.iter().map(|g| self.dist_in.scatter(g)).collect();
+        // Axes r..d are local in the input distribution and are
+        // transformed up front; axes 0..r are covered by the stages.
+        let first_axes: Vec<usize> = (self.r..d).collect();
+        let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
+            let max_axis = *self.shape.iter().max().unwrap();
+            let mut scratch =
+                vec![C64::ZERO; self.dist_in.local_len().max(4 * max_axis)];
+            let mut outs = Vec::with_capacity(inputs.len());
+            for item in &locals {
+                let mut local = item[ctx.rank()].clone();
+                // Stage 0: transform the initially local axes.
+                ctx.begin_comp("pencil-local-axes");
+                let lshape = self.dist_in.local_shape();
+                for &l in &first_axes {
+                    transform_axis(&mut local, lshape, l, &self.axis_plan[l], &mut scratch, dir);
+                    ctx.charge_flops(flops_axis(lshape, l));
+                }
+                // Redistribution stages.
+                for (i, (dist, now)) in self.stages.iter().enumerate() {
+                    local = redistribute(ctx, &self.redists[i], "pencil-transpose", &local);
+                    if scratch.len() < local.len() {
+                        scratch.resize(local.len(), C64::ZERO);
+                    }
+                    ctx.begin_comp("pencil-stage-axes");
+                    let lshape = dist.local_shape();
+                    for &l in now {
+                        transform_axis(&mut local, lshape, l, &self.axis_plan[l], &mut scratch, dir);
+                        ctx.charge_flops(flops_axis(lshape, l));
+                    }
+                }
+                outs.push(match self.out {
+                    OutputDist::Different => local,
+                    OutputDist::Same => {
+                        redistribute(ctx, &self.back, "pencil-transpose-back", &local)
+                    }
+                });
+            }
+            outs
+        });
+        (self.final_dist().gather_batch(&outcome.outputs), outcome.report)
+    }
+}
+
+/// One-shot convenience: plan, run once, gather.
 pub fn pencil_global(
     shape: &[usize],
     r: usize,
@@ -137,59 +251,10 @@ pub fn pencil_global(
     global: &[C64],
     dir: Direction,
     out: OutputDist,
-) -> Result<(Vec<C64>, CostReport), String> {
-    let d = shape.len();
-    let (dist_in, stages) = pencil_schedule(shape, r, p)?;
-    let mut dists: Vec<GridDist> = vec![dist_in.clone()];
-    for (dist, _) in &stages {
-        dists.push(dist.clone());
-    }
-    // Compile the redistribution plans between consecutive distributions.
-    let mut redists: Vec<RedistPlan> = Vec::new();
-    for w in dists.windows(2) {
-        redists.push(RedistPlan::new(&w[0], &w[1])?);
-    }
-    let back = RedistPlan::new(dists.last().unwrap(), &dist_in)?;
-
-    let planner = Planner::new();
-    let axis_plan: Vec<Arc<Plan>> = shape.iter().map(|&n| planner.plan(n)).collect();
-
-    let locals = dist_in.scatter(global);
-    let local_axes_first: Vec<usize> = (r..d).collect();
-    let outcome = run_spmd(p, |ctx: &mut Ctx| {
-        let mut local = locals[ctx.rank()].clone();
-        let max_axis = *shape.iter().max().unwrap();
-        let mut scratch = vec![C64::ZERO; local.len().max(4 * max_axis)];
-        // Stage 0: transform the initially local axes.
-        ctx.begin_comp("pencil-local-axes");
-        let lshape = dist_in.local_shape().to_vec();
-        for &l in &local_axes_first {
-            transform_axis(&mut local, &lshape, l, &axis_plan[l], &mut scratch, dir);
-            ctx.charge_flops(flops_axis(&lshape, l));
-        }
-        // Redistribution stages.
-        for (i, (dist, now)) in stages.iter().enumerate() {
-            local = redistribute(ctx, &redists[i], "pencil-transpose", &local);
-            if scratch.len() < local.len() {
-                scratch.resize(local.len(), C64::ZERO);
-            }
-            ctx.begin_comp("pencil-stage-axes");
-            let lshape = dist.local_shape().to_vec();
-            for &l in now {
-                transform_axis(&mut local, &lshape, l, &axis_plan[l], &mut scratch, dir);
-                ctx.charge_flops(flops_axis(&lshape, l));
-            }
-        }
-        match out {
-            OutputDist::Different => local,
-            OutputDist::Same => redistribute(ctx, &back, "pencil-transpose-back", &local),
-        }
-    });
-    let final_dist = match out {
-        OutputDist::Different => dists.last().unwrap(),
-        OutputDist::Same => &dist_in,
-    };
-    Ok((final_dist.gather(&outcome.outputs), outcome.report))
+) -> Result<(Vec<C64>, CostReport), FftError> {
+    let plan = PencilPlan::new(shape, r, p, out)?;
+    let (mut outs, report) = plan.execute_batch_global(&[global], dir);
+    Ok((outs.pop().unwrap(), report))
 }
 
 fn flops_axis(local_shape: &[usize], l: usize) -> f64 {
@@ -268,21 +333,34 @@ mod tests {
     }
 
     #[test]
-    fn pencil_inverse_roundtrip() {
+    fn pencil_inverse_roundtrip_via_facade_normalization() {
+        use crate::api::{Algorithm, Normalization, Transform};
         let mut rng = Rng::new(0xEC2);
         let shape = [4usize, 4, 4];
-        let n = 64;
-        let x = rand_global(n, &mut rng);
-        let (y, _) = pencil_global(&shape, 2, 4, &x, Direction::Forward, OutputDist::Same).unwrap();
-        let (z, _) = pencil_global(&shape, 2, 4, &y, Direction::Inverse, OutputDist::Same).unwrap();
-        let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
-        assert!(crate::fft::max_abs_diff(&z, &x) < 1e-9);
+        let x = rand_global(64, &mut rng);
+        let fwd = Transform::new(&shape).procs(4).plan(Algorithm::pencil(2)).unwrap();
+        let y = fwd.execute(&x).unwrap();
+        let inv = Transform::new(&shape)
+            .procs(4)
+            .inverse()
+            .normalization(Normalization::ByN)
+            .plan(Algorithm::pencil(2))
+            .unwrap();
+        let z = inv.execute(&y.output).unwrap();
+        assert!(crate::fft::max_abs_diff(&z.output, &x) < 1e-9);
     }
 
     #[test]
-    fn pencil_rejects_oversized_p() {
+    fn pencil_rejects_oversized_p_with_typed_error() {
         let x = vec![C64::ZERO; 4 * 4 * 4];
         // p = 32 cannot sit on two axes of 4x4x4 (max 16).
-        assert!(pencil_global(&[4, 4, 4], 2, 32, &x, Direction::Forward, OutputDist::Same).is_err());
+        assert!(matches!(
+            pencil_global(&[4, 4, 4], 2, 32, &x, Direction::Forward, OutputDist::Same),
+            Err(FftError::NoValidGrid { p: 32, .. })
+        ));
+        assert!(matches!(
+            pencil_global(&[8, 8], 2, 4, &x[..64], Direction::Forward, OutputDist::Same),
+            Err(FftError::BadDescriptor { .. })
+        ));
     }
 }

@@ -12,14 +12,16 @@
 //! over `p_l` processors) and all other axes are the local batch
 //! dimensions. We reuse FFTU's pack/unpack/superstep machinery on that
 //! view; the exchange routes packets along rows of the processor grid
-//! (all coordinates fixed except `l`).
+//! (all coordinates fixed except `l`). Planning (view plans, per-axis
+//! FFT plans) lives in [`PopoviciPlan`].
 
 use std::sync::Arc;
 
+use crate::api::FftError;
 use crate::bsp::{run_spmd, CostReport, Ctx};
 use crate::dist::GridDist;
 use crate::fft::ndfft::transform_axis;
-use crate::fft::{C64, Direction, Planner};
+use crate::fft::{C64, Direction, Plan, Planner};
 use crate::fftu::pack::{pack_twiddle, unpack, TwiddleTables};
 use crate::fftu::plan::FftuPlan;
 
@@ -28,92 +30,156 @@ pub fn popovici_pmax(shape: &[usize]) -> usize {
     crate::fftu::fftu_pmax(shape)
 }
 
-/// Run the d-step cyclic algorithm on the BSP machine.
+/// Validated, fully planned d-step cyclic pipeline: one FFTU "view" plan
+/// per axis plus the local/strided FFT plans each round needs.
+pub struct PopoviciPlan {
+    shape: Vec<usize>,
+    pgrid: Vec<usize>,
+    dist: GridDist,
+    local_shape: Vec<usize>,
+    view_plans: Vec<Arc<FftuPlan>>,
+    /// `F_{n_l/p_l}` of each round's local transform.
+    axis_plans: Vec<Arc<Plan>>,
+    /// `F_{p_l}` of each round's strided transform.
+    fp_plans: Vec<Arc<Plan>>,
+}
+
+impl PopoviciPlan {
+    pub fn new(shape: &[usize], pgrid: &[usize]) -> Result<Self, FftError> {
+        let d = shape.len();
+        if d != pgrid.len() {
+            return Err(FftError::RankMismatch { shape: d, grid: pgrid.len() });
+        }
+        for (axis, (&n, &p)) in shape.iter().zip(pgrid).enumerate() {
+            if p == 0 {
+                return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l >= 1" });
+            }
+            if n % (p * p) != 0 {
+                return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l^2 | n_l" });
+            }
+        }
+        let dist = GridDist::cyclic(shape, pgrid)?;
+        let planner = Planner::new();
+        let local_shape: Vec<usize> = shape.iter().zip(pgrid).map(|(&n, &p)| n / p).collect();
+        let mut view_plans: Vec<Arc<FftuPlan>> = Vec::with_capacity(d);
+        for l in 0..d {
+            let mut vshape = local_shape.clone();
+            vshape[l] = shape[l];
+            let mut vgrid = vec![1usize; d];
+            vgrid[l] = pgrid[l];
+            view_plans.push(Arc::new(FftuPlan::new(&vshape, &vgrid, &planner)?));
+        }
+        let axis_plans: Vec<Arc<Plan>> =
+            local_shape.iter().map(|&n| planner.plan(n)).collect();
+        let fp_plans: Vec<Arc<Plan>> = pgrid.iter().map(|&p| planner.plan(p)).collect();
+        Ok(PopoviciPlan {
+            shape: shape.to_vec(),
+            pgrid: pgrid.to_vec(),
+            dist,
+            local_shape,
+            view_plans,
+            axis_plans,
+            fp_plans,
+        })
+    }
+
+    pub fn num_procs(&self) -> usize {
+        self.pgrid.iter().product()
+    }
+
+    pub fn input_dist(&self) -> &GridDist {
+        &self.dist
+    }
+
+    /// Execute on whole (global) arrays; the report covers the batch.
+    pub fn execute_batch_global(
+        &self,
+        inputs: &[&[C64]],
+        dir: Direction,
+    ) -> (Vec<Vec<C64>>, CostReport) {
+        let d = self.shape.len();
+        let p = self.num_procs();
+        let locals: Vec<Vec<Vec<C64>>> = inputs.iter().map(|g| self.dist.scatter(g)).collect();
+        let outcome = run_spmd(p, |ctx: &mut Ctx| {
+            let coords = self.dist.proc_coords(ctx.rank());
+            let max_axis = *self.shape.iter().max().unwrap();
+            let mut scratch = vec![C64::ZERO; self.dist.local_len().max(4 * max_axis)];
+            let mut outs = Vec::with_capacity(inputs.len());
+            for item in &locals {
+                let mut local = item[ctx.rank()].clone();
+                for l in 0..d {
+                    let vplan = &self.view_plans[l];
+                    let p_l = self.pgrid[l];
+                    // View coordinates: only axis l is distributed.
+                    let mut vcoords = vec![0usize; d];
+                    vcoords[l] = coords[l];
+                    let tables = TwiddleTables::new(vplan, &vcoords);
+                    // Superstep 0 of the view: local FFT along axis l + twiddle.
+                    ctx.begin_comp("popovici-local-fft");
+                    transform_axis(
+                        &mut local,
+                        &self.local_shape,
+                        l,
+                        &self.axis_plans[l],
+                        &mut scratch,
+                        dir,
+                    );
+                    // 5 (N/p) log2(n_l/p_l) for the axis-l lines + 12 N/p twiddle.
+                    let len_l = self.local_shape[l] as f64;
+                    let ss0 = if self.local_shape[l] > 1 {
+                        5.0 * local.len() as f64 * len_l.log2()
+                    } else {
+                        0.0
+                    };
+                    ctx.charge_flops(ss0 + vplan.flops_twiddle());
+                    let mut packets = vec![vec![C64::ZERO; vplan.packet_len()]; p_l];
+                    pack_twiddle(vplan, &tables, &local, &mut packets, dir);
+                    // Superstep 1: exchange along the axis-l row of the grid.
+                    let mut outgoing: Vec<Vec<C64>> = (0..p).map(|_| Vec::new()).collect();
+                    for (k, packet) in packets.into_iter().enumerate() {
+                        let mut tc = coords.clone();
+                        tc[l] = k;
+                        outgoing[self.dist.proc_rank(&tc)] = packet;
+                    }
+                    let mut incoming_all = ctx.exchange("popovici-alltoall", outgoing);
+                    let mut incoming: Vec<Vec<C64>> = Vec::with_capacity(p_l);
+                    for k in 0..p_l {
+                        let mut tc = coords.clone();
+                        tc[l] = k;
+                        incoming.push(std::mem::take(&mut incoming_all[self.dist.proc_rank(&tc)]));
+                    }
+                    unpack(vplan, &incoming, &mut local);
+                    // Superstep 2 of the view: strided F_{p_l} along axis l.
+                    ctx.begin_comp("popovici-strided-fft");
+                    if p_l > 1 {
+                        let inner: usize = self.local_shape[l + 1..].iter().product();
+                        let per = self.shape[l] / (p_l * p_l);
+                        let chunk = self.local_shape[l] * inner;
+                        let stride = per * inner;
+                        for block in local.chunks_exact_mut(chunk) {
+                            self.fp_plans[l].execute_interleaved(block, &mut scratch, stride, dir);
+                        }
+                    }
+                    ctx.charge_flops(vplan.flops_superstep2());
+                }
+                outs.push(local);
+            }
+            outs
+        });
+        (self.dist.gather_batch(&outcome.outputs), outcome.report)
+    }
+}
+
+/// One-shot convenience: plan, run once on the BSP machine, gather.
 pub fn popovici_global(
     shape: &[usize],
     pgrid: &[usize],
     global: &[C64],
     dir: Direction,
-) -> Result<(Vec<C64>, CostReport), String> {
-    let d = shape.len();
-    let dist = GridDist::cyclic(shape, pgrid)?;
-    for (&n, &p) in shape.iter().zip(pgrid) {
-        if n % (p * p) != 0 {
-            return Err(format!("popovici requires p_l^2 | n_l; violated: p={p}, n={n}"));
-        }
-    }
-    let planner = Planner::new();
-    // Per-axis view plans: axis l global, everything else is batch.
-    let mut view_plans: Vec<Arc<FftuPlan>> = Vec::with_capacity(d);
-    let local_shape: Vec<usize> = shape.iter().zip(pgrid).map(|(&n, &p)| n / p).collect();
-    for l in 0..d {
-        let mut vshape = local_shape.clone();
-        vshape[l] = shape[l];
-        let mut vgrid = vec![1usize; d];
-        vgrid[l] = pgrid[l];
-        view_plans.push(Arc::new(FftuPlan::new(&vshape, &vgrid, &planner)?));
-    }
-    let p: usize = pgrid.iter().product();
-    let locals = dist.scatter(global);
-
-    let outcome = run_spmd(p, |ctx: &mut Ctx| {
-        let mut local = locals[ctx.rank()].clone();
-        let coords = dist.proc_coords(ctx.rank());
-        let mut scratch =
-            vec![C64::ZERO; local.len().max(4 * shape.iter().copied().max().unwrap())];
-        for l in 0..d {
-            let vplan = &view_plans[l];
-            let p_l = pgrid[l];
-            // View coordinates: only axis l is distributed.
-            let mut vcoords = vec![0usize; d];
-            vcoords[l] = coords[l];
-            let tables = TwiddleTables::new(vplan, &vcoords);
-            // Superstep 0 of the view: local FFT along axis l + twiddle.
-            ctx.begin_comp("popovici-local-fft");
-            let axis_plan = planner.plan(local_shape[l]);
-            transform_axis(&mut local, &local_shape, l, &axis_plan, &mut scratch, dir);
-            // 5 (N/p) log2(n_l/p_l) for the axis-l lines + 12 N/p twiddle.
-            let len_l = local_shape[l] as f64;
-            let ss0 = if local_shape[l] > 1 {
-                5.0 * local.len() as f64 * len_l.log2()
-            } else {
-                0.0
-            };
-            ctx.charge_flops(ss0 + vplan.flops_twiddle());
-            let mut packets = vec![vec![C64::ZERO; vplan.packet_len()]; p_l];
-            pack_twiddle(vplan, &tables, &local, &mut packets, dir);
-            // Superstep 1: exchange along the axis-l row of the grid.
-            let mut outgoing: Vec<Vec<C64>> = (0..p).map(|_| Vec::new()).collect();
-            for (k, packet) in packets.into_iter().enumerate() {
-                let mut tc = coords.clone();
-                tc[l] = k;
-                outgoing[dist.proc_rank(&tc)] = packet;
-            }
-            let mut incoming_all = ctx.exchange("popovici-alltoall", outgoing);
-            let mut incoming: Vec<Vec<C64>> = Vec::with_capacity(p_l);
-            for k in 0..p_l {
-                let mut tc = coords.clone();
-                tc[l] = k;
-                incoming.push(std::mem::take(&mut incoming_all[dist.proc_rank(&tc)]));
-            }
-            unpack(vplan, &incoming, &mut local);
-            // Superstep 2 of the view: strided F_{p_l} along axis l.
-            ctx.begin_comp("popovici-strided-fft");
-            if p_l > 1 {
-                let inner: usize = local_shape[l + 1..].iter().product();
-                let per = shape[l] / (p_l * p_l);
-                let chunk = local_shape[l] * inner;
-                let stride = per * inner;
-                let fp = planner.plan(p_l);
-                for block in local.chunks_exact_mut(chunk) {
-                    fp.execute_interleaved(block, &mut scratch, stride, dir);
-                }
-            }
-            ctx.charge_flops(vplan.flops_superstep2());
-        }
-        local
-    });
-    Ok((dist.gather(&outcome.outputs), outcome.report))
+) -> Result<(Vec<C64>, CostReport), FftError> {
+    let plan = PopoviciPlan::new(shape, pgrid)?;
+    let (mut outs, report) = plan.execute_batch_global(&[global], dir);
+    Ok((outs.pop().unwrap(), report))
 }
 
 #[cfg(test)]
@@ -145,21 +211,36 @@ mod tests {
     }
 
     #[test]
-    fn popovici_roundtrip() {
+    fn popovici_roundtrip_via_facade_normalization() {
+        use crate::api::{Algorithm, Normalization, Transform};
         let mut rng = Rng::new(0xD1);
         let shape = [16usize, 16];
-        let pgrid = [2usize, 2];
         let n = 256;
         let x: Vec<C64> =
             (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
-        let (y, _) = popovici_global(&shape, &pgrid, &x, Direction::Forward).unwrap();
-        let (z, _) = popovici_global(&shape, &pgrid, &y, Direction::Inverse).unwrap();
-        let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
-        assert!(max_abs_diff(&z, &x) < 1e-9);
+        let fwd = Transform::new(&shape).grid(&[2, 2]).plan(Algorithm::Popovici).unwrap();
+        let y = fwd.execute(&x).unwrap();
+        let inv = Transform::new(&shape)
+            .grid(&[2, 2])
+            .inverse()
+            .normalization(Normalization::ByN)
+            .plan(Algorithm::Popovici)
+            .unwrap();
+        let z = inv.execute(&y.output).unwrap();
+        assert!(max_abs_diff(&z.output, &x) < 1e-9);
     }
 
     #[test]
     fn popovici_pmax_equals_fftu() {
         assert_eq!(popovici_pmax(&[1024, 1024, 1024]), 32_768);
+    }
+
+    #[test]
+    fn popovici_rejects_bad_grid_with_typed_error() {
+        let x = vec![C64::ZERO; 64];
+        assert_eq!(
+            popovici_global(&[8, 8], &[4, 1], &x, Direction::Forward).unwrap_err(),
+            FftError::AxisConstraint { axis: 0, n: 8, p: 4, requires: "p_l^2 | n_l" }
+        );
     }
 }

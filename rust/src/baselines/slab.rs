@@ -6,9 +6,16 @@
 //! `p <= n_2`, otherwise a block distribution over as many of the later
 //! axes as needed (FFTW's `r > 2` case) — and transform axis 0. With
 //! `OutputDist::Same` a second transpose returns to the input slab.
+//!
+//! Planning (distribution choice, redistribution routing, local FFT
+//! plans) lives in [`SlabPlan`]; [`slab_global`] is the one-shot
+//! convenience wrapper. Long-lived callers (and the [`crate::api`]
+//! facade's plan cache) build a `SlabPlan` once and execute it many
+//! times.
 
 use std::sync::Arc;
 
+use crate::api::FftError;
 use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
 use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
@@ -27,7 +34,7 @@ pub fn slab_pmax(shape: &[usize]) -> usize {
 /// spread block-wise over axes `1..d` greedily (FFTW uses axis 1 alone
 /// when possible; we generalize exactly as the paper describes for the
 /// `8 x 4 x 2` example, ending in a pencil or higher-rank block grid).
-fn second_dist(shape: &[usize], p: usize) -> Result<GridDist, String> {
+fn second_dist(shape: &[usize], p: usize) -> Result<GridDist, FftError> {
     let d = shape.len();
     let mut grid = vec![1usize; d];
     let mut rem = p;
@@ -40,7 +47,7 @@ fn second_dist(shape: &[usize], p: usize) -> Result<GridDist, String> {
         rem /= take;
     }
     if rem != 1 {
-        return Err(format!("slab algorithm cannot place {p} processors for shape {shape:?}"));
+        return Err(FftError::NoValidGrid { p, pmax: slab_pmax(shape) });
     }
     GridDist::blocks(shape, &grid)
 }
@@ -61,70 +68,133 @@ fn gcd_pow(rem: usize, n: usize) -> usize {
 /// slab along axis 0 and the post-transpose distribution with axis 0
 /// local. Shared by the executor and the analytic cost model so the
 /// paper-scale predictions use exactly the executed schedule.
-pub fn slab_dists(shape: &[usize], p: usize) -> Result<(GridDist, GridDist), String> {
+pub fn slab_dists(shape: &[usize], p: usize) -> Result<(GridDist, GridDist), FftError> {
     let d = shape.len();
     if d < 2 {
-        return Err("slab algorithm needs d >= 2".into());
-    }
-    if shape[0] % p != 0 {
-        return Err(format!("slab requires p | n_1 ({p} ∤ {})", shape[0]));
+        return Err(FftError::BadDescriptor { reason: "slab algorithm needs d >= 2".into() });
     }
     if p > slab_pmax(shape) {
-        return Err(format!("slab p_max = {} < p = {p}", slab_pmax(shape)));
+        return Err(FftError::TooManyProcs { algo: "slab", p, pmax: slab_pmax(shape) });
+    }
+    if shape[0] % p != 0 {
+        return Err(FftError::AxisConstraint { axis: 0, n: shape[0], p, requires: "p | n_1" });
     }
     Ok((GridDist::slab(shape, 0, p)?, second_dist(shape, p)?))
 }
 
-/// Run the slab algorithm on the BSP machine over a scattered global
-/// array; returns the gathered result and the cost report.
+/// Validated, fully planned slab pipeline for one (shape, p, output)
+/// triple: distributions, compiled transposes, and local FFT plans.
+pub struct SlabPlan {
+    shape: Vec<usize>,
+    p: usize,
+    out: OutputDist,
+    dist_in: GridDist,
+    dist_mid: GridDist,
+    transpose: RedistPlan,
+    back: RedistPlan,
+    plans_in: Vec<Arc<Plan>>,
+    plan_axis0: Arc<Plan>,
+    local_in_shape: Vec<usize>,
+    local_mid_shape: Vec<usize>,
+}
+
+impl SlabPlan {
+    pub fn new(shape: &[usize], p: usize, out: OutputDist) -> Result<Self, FftError> {
+        let d = shape.len();
+        let (dist_in, dist_mid) = slab_dists(shape, p)?;
+        let transpose = RedistPlan::new(&dist_in, &dist_mid)?;
+        let back = RedistPlan::new(&dist_mid, &dist_in)?;
+        let planner = Planner::new();
+        let plans_in: Vec<Arc<Plan>> = (1..d).map(|l| planner.plan(shape[l])).collect();
+        let plan_axis0 = planner.plan(shape[0]);
+        let local_in_shape = dist_in.local_shape().to_vec();
+        let local_mid_shape = dist_mid.local_shape().to_vec();
+        Ok(SlabPlan {
+            shape: shape.to_vec(),
+            p,
+            out,
+            dist_in,
+            dist_mid,
+            transpose,
+            back,
+            plans_in,
+            plan_axis0,
+            local_in_shape,
+            local_mid_shape,
+        })
+    }
+
+    pub fn num_procs(&self) -> usize {
+        self.p
+    }
+
+    /// The distribution the input (and, with `OutputDist::Same`, the
+    /// output) lives in.
+    pub fn input_dist(&self) -> &GridDist {
+        &self.dist_in
+    }
+
+    /// Execute the planned pipeline on whole (global) arrays: scatter,
+    /// run the BSP program once per batch item with persistent scratch,
+    /// gather. The report covers the entire batch.
+    pub fn execute_batch_global(
+        &self,
+        inputs: &[&[C64]],
+        dir: Direction,
+    ) -> (Vec<Vec<C64>>, CostReport) {
+        let d = self.shape.len();
+        let locals: Vec<Vec<Vec<C64>>> =
+            inputs.iter().map(|g| self.dist_in.scatter(g)).collect();
+        let mid_local = self.dist_mid.local_len();
+        let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
+            let scratch_len = self
+                .dist_in
+                .local_len()
+                .max(mid_local)
+                .max(4 * self.shape.iter().copied().max().unwrap());
+            let mut scratch = vec![C64::ZERO; scratch_len];
+            let mut outs = Vec::with_capacity(inputs.len());
+            for item in &locals {
+                let mut local = item[ctx.rank()].clone();
+                // Phase 1: transform the d-1 local axes.
+                ctx.begin_comp("slab-local-axes");
+                for (i, l) in (1..d).enumerate() {
+                    transform_axis(&mut local, &self.local_in_shape, l, &self.plans_in[i], &mut scratch, dir);
+                    ctx.charge_flops(flops_axis(&self.local_in_shape, l));
+                }
+                // Phase 2: global transpose so axis 0 becomes local.
+                let mut mid = redistribute(ctx, &self.transpose, "slab-transpose", &local);
+                // Phase 3: transform axis 0 (it is local in dist_mid).
+                ctx.begin_comp("slab-axis0");
+                transform_axis(&mut mid, &self.local_mid_shape, 0, &self.plan_axis0, &mut scratch, dir);
+                ctx.charge_flops(flops_axis(&self.local_mid_shape, 0));
+                outs.push(match self.out {
+                    OutputDist::Different => mid,
+                    OutputDist::Same => redistribute(ctx, &self.back, "slab-transpose-back", &mid),
+                });
+            }
+            outs
+        });
+        let final_dist = match self.out {
+            OutputDist::Different => &self.dist_mid,
+            OutputDist::Same => &self.dist_in,
+        };
+        (final_dist.gather_batch(&outcome.outputs), outcome.report)
+    }
+}
+
+/// One-shot convenience: plan, run once on the BSP machine over a
+/// scattered global array, gather.
 pub fn slab_global(
     shape: &[usize],
     p: usize,
     global: &[C64],
     dir: Direction,
     out: OutputDist,
-) -> Result<(Vec<C64>, CostReport), String> {
-    let d = shape.len();
-    let (dist_in, dist_mid) = slab_dists(shape, p)?;
-    let transpose = RedistPlan::new(&dist_in, &dist_mid)?;
-    let back = RedistPlan::new(&dist_mid, &dist_in)?;
-
-    let planner = Planner::new();
-    let local_in_shape: Vec<usize> = dist_in.local_shape().to_vec();
-    let local_mid_shape: Vec<usize> = dist_mid.local_shape().to_vec();
-    // Plans for the locally transformed axes in each phase.
-    let plans_in: Vec<Arc<Plan>> = (1..d).map(|l| planner.plan(shape[l])).collect();
-    let plan_axis0 = planner.plan(shape[0]);
-    let mid_axes_local: Vec<usize> = (0..d).filter(|&l| dist_mid.grid()[l] == 1).collect();
-
-    let locals = dist_in.scatter(global);
-    let outcome = run_spmd(p, |ctx: &mut Ctx| {
-        let mut local = locals[ctx.rank()].clone();
-        let scratch_len = local.len().max(4 * shape.iter().copied().max().unwrap());
-        let mut scratch = vec![C64::ZERO; scratch_len];
-        // Phase 1: transform the d-1 local axes.
-        ctx.begin_comp("slab-local-axes");
-        for (i, l) in (1..d).enumerate() {
-            transform_axis(&mut local, &local_in_shape, l, &plans_in[i], &mut scratch, dir);
-            ctx.charge_flops(flops_axis(&local_in_shape, l));
-        }
-        // Phase 2: global transpose so axis 0 becomes local.
-        let mut mid = redistribute(ctx, &transpose, "slab-transpose", &local);
-        // Phase 3: transform axis 0 (it is local in dist_mid).
-        ctx.begin_comp("slab-axis0");
-        debug_assert!(mid_axes_local.contains(&0));
-        transform_axis(&mut mid, &local_mid_shape, 0, &plan_axis0, &mut scratch, dir);
-        ctx.charge_flops(flops_axis(&local_mid_shape, 0));
-        match out {
-            OutputDist::Different => mid,
-            OutputDist::Same => redistribute(ctx, &back, "slab-transpose-back", &mid),
-        }
-    });
-    let gathered = match out {
-        OutputDist::Different => dist_mid.gather(&outcome.outputs),
-        OutputDist::Same => dist_in.gather(&outcome.outputs),
-    };
-    Ok((gathered, outcome.report))
+) -> Result<(Vec<C64>, CostReport), FftError> {
+    let plan = SlabPlan::new(shape, p, out)?;
+    let (mut outs, report) = plan.execute_batch_global(&[global], dir);
+    Ok((outs.pop().unwrap(), report))
 }
 
 /// Model flops for transforming axis `l` of a local array: the paper's
@@ -187,19 +257,44 @@ mod tests {
     }
 
     #[test]
-    fn slab_rejects_p_beyond_pmax() {
+    fn slab_rejects_p_beyond_pmax_with_typed_error() {
         let x = vec![C64::ZERO; 8 * 4 * 2];
-        assert!(slab_global(&[8, 4, 2], 16, &x, Direction::Forward, OutputDist::Same).is_err());
+        assert_eq!(
+            slab_global(&[8, 4, 2], 16, &x, Direction::Forward, OutputDist::Same).unwrap_err(),
+            FftError::TooManyProcs { algo: "slab", p: 16, pmax: 8 }
+        );
     }
 
     #[test]
-    fn slab_inverse_roundtrip() {
+    fn slab_plan_is_reusable_across_executions() {
+        let mut rng = Rng::new(0x5AD);
+        let shape = [8usize, 8];
+        let plan = SlabPlan::new(&shape, 2, OutputDist::Same).unwrap();
+        for _ in 0..3 {
+            let x = rand_global(64, &mut rng);
+            let mut want = x.clone();
+            fftn_inplace(&mut want, &shape, Direction::Forward);
+            let (got, rep) = plan.execute_batch_global(&[&x], Direction::Forward);
+            assert!(rel_l2_error(&got[0], &want) < 1e-9);
+            assert_eq!(rep.comm_supersteps(), 2);
+        }
+    }
+
+    #[test]
+    fn slab_inverse_roundtrip_via_facade_normalization() {
+        use crate::api::{Algorithm, Normalization, Transform};
         let mut rng = Rng::new(0x5AC);
         let shape = [8usize, 8];
         let x = rand_global(64, &mut rng);
-        let (y, _) = slab_global(&shape, 2, &x, Direction::Forward, OutputDist::Same).unwrap();
-        let (z, _) = slab_global(&shape, 2, &y, Direction::Inverse, OutputDist::Same).unwrap();
-        let z: Vec<C64> = z.iter().map(|v| *v / 64.0).collect();
-        assert!(crate::fft::max_abs_diff(&z, &x) < 1e-9);
+        let fwd = Transform::new(&shape).procs(2).plan(Algorithm::slab()).unwrap();
+        let y = fwd.execute(&x).unwrap();
+        let inv = Transform::new(&shape)
+            .procs(2)
+            .inverse()
+            .normalization(Normalization::ByN)
+            .plan(Algorithm::slab())
+            .unwrap();
+        let z = inv.execute(&y.output).unwrap();
+        assert!(crate::fft::max_abs_diff(&z.output, &x) < 1e-9);
     }
 }

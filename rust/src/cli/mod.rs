@@ -6,11 +6,11 @@ pub mod dist_show;
 
 use std::sync::Arc;
 
-use crate::baselines::OutputDist;
+use crate::api::{Algorithm, Normalization, PlanCache, Transform};
 use crate::dist::{AxisDist, GridDist};
 use crate::fft::{C64, Direction, Planner};
 use crate::fftu::{choose_grid, FftuPlan};
-use crate::report::{self, measure_fftu};
+use crate::report;
 use crate::testing::Rng;
 
 use args::Args;
@@ -21,14 +21,16 @@ fftu — minimizing communication in the multidimensional FFT (Koopman & Bisseli
 USAGE: fftu <command> [options]
 
 COMMANDS:
-  run        run a distributed FFT
+  run        run a distributed FFT through the unified plan/execute API
                --shape n1,n2,...   global array shape (sizes accept 2^k)
                --grid p1,p2,...    cyclic processor grid (default: chosen for --p)
                --p P               total processors (grid auto-chosen)
                --engine native|xla local-transform engine (default native)
                --algo fftu|slab|pencil|heffte|popovici (default fftu)
+               --r R               pencil decomposition rank (default min(2, d-1))
                --inverse           inverse transform (1/N-normalized)
-               --reps R            timed repetitions (default 3)
+               --reps R            timed repetitions (default 3; the plan is
+                                   built once and reused — plan-cache hits)
                --config FILE       key=value job file (flags override);
                                    see examples/configs/
   table      regenerate a paper table: `fftu table 4.1|4.2|4.3 [--executed]`
@@ -113,24 +115,6 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
 
     match (algo, engine) {
-        ("fftu", "native") => {
-            let grid = resolve_grid(args, &cfg, &shape)?;
-            let (wall, rep) = measure_fftu(&shape, &grid, reps)?;
-            let p: usize = grid.iter().product();
-            println!(
-                "fftu native: shape {shape:?} grid {grid:?} p={p} dir={dir:?}\n\
-                 wall/transform: {wall:.6} s  ({:.3} Gflop/s model rate)\n\
-                 comm supersteps/transform: {}  h = {} words",
-                5.0 * n as f64 * (n as f64).log2() / wall / 1e9,
-                rep.comm_supersteps() / reps,
-                rep.supersteps
-                    .iter()
-                    .find(|s| s.kind == crate::bsp::SuperstepKind::Communication)
-                    .map(|s| s.h_max)
-                    .unwrap_or(0),
-            );
-            Ok(())
-        }
         ("fftu", "xla") => {
             let grid = resolve_grid(args, &cfg, &shape)?;
             let xla =
@@ -146,29 +130,61 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             );
             Ok(())
         }
-        (algo, "native") => {
-            let p = args.get_usize("p")?.or(cfg.get_usize("p")?).unwrap_or(4);
-            let t0 = std::time::Instant::now();
-            let rep = match algo {
-                "slab" => {
-                    crate::baselines::slab_global(&shape, p, &global, dir, OutputDist::Same)?.1
+        (name, "native") => {
+            // The unified path: every algorithm goes through the
+            // Transform descriptor + DistFft facade, planned once and
+            // executed `reps` times from the plan cache.
+            let mut algorithm = Algorithm::parse(name)
+                .ok_or_else(|| format!("unknown --algo {name}; try `fftu help`"))?;
+            if let Algorithm::Pencil { out, .. } = algorithm {
+                let r = args
+                    .get_usize("r")?
+                    .or(cfg.get_usize("r")?)
+                    .unwrap_or_else(|| 2.min(shape.len().saturating_sub(1)).max(1));
+                algorithm = Algorithm::Pencil { r, out };
+            }
+            if reps == 0 {
+                return Err("--reps must be >= 1".into());
+            }
+            let mut descriptor = Transform::new(&shape).direction(dir).batch(reps);
+            if inverse {
+                descriptor = descriptor.normalization(Normalization::ByN);
+            }
+            descriptor = match args.get_vec("grid")?.or(cfg.get_vec("grid")?) {
+                Some(grid) => descriptor.grid(&grid),
+                None => {
+                    let p = args.get_usize("p")?.or(cfg.get_usize("p")?).unwrap_or(4);
+                    descriptor.procs(p)
                 }
-                "pencil" => {
-                    let r = args.get_usize("r")?.unwrap_or_else(|| 2.min(shape.len() - 1));
-                    crate::baselines::pencil_global(&shape, r, p, &global, dir, OutputDist::Same)?.1
-                }
-                "heffte" => crate::baselines::heffte_global(&shape, p, &global, dir)?.1,
-                "popovici" => {
-                    let grid = resolve_grid(args, &cfg, &shape)?;
-                    crate::baselines::popovici_global(&shape, &grid, &global, dir)?.1
-                }
-                other => return Err(format!("unknown --algo {other}")),
             };
+            let cache = PlanCache::new(8);
+            let planned = cache.plan(algorithm, &descriptor)?;
+            // Resolving again is a pure cache hit — proof for the log
+            // line that repeated requests do no planning work.
+            let _ = cache.plan(algorithm, &descriptor)?;
+            // The paper's §4.1 methodology: time `reps` transforms with
+            // per-rank state amortized. execute_batch runs the whole
+            // batch in ONE SPMD session, Workers built once.
+            let batched: Vec<C64> = (0..reps).flat_map(|_| global.iter().copied()).collect();
+            let t0 = std::time::Instant::now();
+            let exec = planned.execute_batch(&batched)?;
+            let wall = t0.elapsed().as_secs_f64() / reps as f64;
             println!(
-                "{algo}: shape {shape:?} p={p} wall {:.6} s, {} comm supersteps, sum h = {} words",
-                t0.elapsed().as_secs_f64(),
-                rep.comm_supersteps(),
-                rep.total_h()
+                "{}: shape {shape:?} p={}{} dir={dir:?}\n\
+                 wall/transform: {wall:.6} s  ({:.3} Gflop/s model rate)\n\
+                 comm supersteps/transform: {}  sum h/transform = {} words\n\
+                 plan cache: {} miss, {} hit ({reps} transforms in one planned batch)",
+                algorithm.name(),
+                planned.procs(),
+                planned
+                    .grid()
+                    .map(|g| format!(" grid {g:?}"))
+                    .unwrap_or_default(),
+                5.0 * n as f64 * (n as f64).log2() / wall / 1e9,
+                exec.report.comm_supersteps() / reps,
+                exec.report.total_h() / reps,
+                cache.misses(),
+                cache.hits(),
             );
             Ok(())
         }

@@ -12,6 +12,7 @@
 
 use crate::baselines::{heffte_schedule, pencil_schedule, slab_dists};
 use crate::bsp::{CostReport, SuperstepCost, SuperstepKind};
+use crate::api::FftError;
 use crate::dist::analytic_h;
 
 fn comp(label: &'static str, w: f64) -> SuperstepCost {
@@ -57,7 +58,7 @@ pub fn fftu_report(shape: &[usize], p: usize) -> CostReport {
 
 /// Parallel-FFTW slab: local axes 2..d, one transpose, axis 1, optional
 /// transpose back.
-pub fn slab_report(shape: &[usize], p: usize, same: bool) -> Result<CostReport, String> {
+pub fn slab_report(shape: &[usize], p: usize, same: bool) -> Result<CostReport, FftError> {
     let (dist_in, dist_mid) = slab_dists(shape, p)?;
     let n: f64 = shape.iter().map(|&x| x as f64).product();
     let np = n / p as f64;
@@ -83,7 +84,7 @@ pub fn pencil_report(
     r: usize,
     p: usize,
     same: bool,
-) -> Result<CostReport, String> {
+) -> Result<CostReport, FftError> {
     let (dist_in, stages) = pencil_schedule(shape, r, p)?;
     let n: f64 = shape.iter().map(|&x| x as f64).product();
     let np = n / p as f64;
@@ -103,7 +104,7 @@ pub fn pencil_report(
 }
 
 /// heFFTe-like brick pipeline: d pencil reshapes + 1 brick reshape out.
-pub fn heffte_report(shape: &[usize], p: usize) -> Result<CostReport, String> {
+pub fn heffte_report(shape: &[usize], p: usize) -> Result<CostReport, FftError> {
     let (dists, stage_axis) = heffte_schedule(shape, p)?;
     let n: f64 = shape.iter().map(|&x| x as f64).product();
     let np = n / p as f64;

@@ -1,0 +1,716 @@
+//! Data distributions (§1.1, §2.3) and the generic redistribution
+//! planner.
+//!
+//! Everything parallel in this crate is phrased over *per-axis*
+//! distributions of a d-dimensional row-major array: each axis `l` of
+//! length `n_l` is assigned to `p_l` processors independently, and a
+//! processor is identified by its coordinate vector in the
+//! `p_1 x ... x p_d` grid. All three distributions the paper uses are
+//! instances of the **group-cyclic** family with cycle `c`
+//! (element `j` of an axis goes to processor `(j div (c n / p)) c + j mod c`,
+//! §2.3):
+//!
+//! - `c = p`: the cyclic distribution (`j mod p`),
+//! - `c = 1`: the block distribution (`j div (n/p)`),
+//! - `1 < c < p`: the proper group-cyclic distributions used by the
+//!   beyond-`sqrt(N)` extension.
+//!
+//! [`RedistPlan`] compiles the exact packet routing between any two
+//! distributions of the same array over the same processor count — the
+//! "global transpose" building block every baseline pipeline uses —
+//! and [`analytic_h`] computes the h-relation of that routing in closed
+//! form (O(d·p) time), so the cost model can price paper-scale shapes
+//! (e.g. `2^24 x 64`) without touching any data.
+
+use crate::api::FftError;
+use crate::fft::C64;
+
+/// Row-major flattening of a multi-index.
+pub fn ravel(idx: &[usize], shape: &[usize]) -> usize {
+    debug_assert_eq!(idx.len(), shape.len());
+    let mut off = 0;
+    for (i, n) in idx.iter().zip(shape) {
+        debug_assert!(i < n);
+        off = off * n + i;
+    }
+    off
+}
+
+/// Inverse of [`ravel`].
+pub fn unravel(mut off: usize, shape: &[usize]) -> Vec<usize> {
+    let mut idx = vec![0usize; shape.len()];
+    for l in (0..shape.len()).rev() {
+        idx[l] = off % shape[l];
+        off /= shape[l];
+    }
+    idx
+}
+
+/// Distribution of one axis over `p` processors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AxisDist {
+    /// `j -> j mod p` (Fig. 1.1).
+    Cyclic { p: usize },
+    /// `j -> j div (n/p)` (Fig. 1.2).
+    Block { p: usize },
+    /// `j -> (j div (c n / p)) c + j mod c` (§2.3); `c = p` is cyclic,
+    /// `c = 1` is block.
+    GroupCyclic { p: usize, c: usize },
+}
+
+impl AxisDist {
+    /// Number of processors this axis is split over.
+    #[inline]
+    pub fn procs(self) -> usize {
+        match self {
+            AxisDist::Cyclic { p } | AxisDist::Block { p } | AxisDist::GroupCyclic { p, .. } => p,
+        }
+    }
+
+    /// The cycle `c` of the group-cyclic normal form.
+    #[inline]
+    pub fn cycle(self) -> usize {
+        match self {
+            AxisDist::Cyclic { p } => p,
+            AxisDist::Block { .. } => 1,
+            AxisDist::GroupCyclic { c, .. } => c,
+        }
+    }
+
+    /// Contiguous region length `c n / p` owned by each group of `c`
+    /// processors.
+    #[inline]
+    fn region(self, n: usize) -> usize {
+        self.cycle() * n / self.procs()
+    }
+
+    fn validate(self, axis: usize, n: usize) -> Result<(), FftError> {
+        let p = self.procs();
+        let c = self.cycle();
+        if n == 0 {
+            return Err(FftError::AxisConstraint { axis, n, p, requires: "n_l >= 1" });
+        }
+        if p == 0 {
+            return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l >= 1" });
+        }
+        if n % p != 0 {
+            return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l | n_l" });
+        }
+        if c == 0 || p % c != 0 {
+            return Err(FftError::AxisConstraint { axis, n, p, requires: "c_l | p_l" });
+        }
+        Ok(())
+    }
+
+    /// Owning processor coordinate of global index `j` (§2.3 formula).
+    #[inline]
+    pub fn owner(self, n: usize, j: usize) -> usize {
+        let c = self.cycle();
+        (j / self.region(n)) * c + j % c
+    }
+
+    /// Local index of global `j` on its owner.
+    #[inline]
+    pub fn local_index(self, n: usize, j: usize) -> usize {
+        (j % self.region(n)) / self.cycle()
+    }
+
+    /// Global index of local `t` on processor coordinate `a` — inverse
+    /// of ([`Self::owner`], [`Self::local_index`]).
+    #[inline]
+    pub fn global_index(self, n: usize, a: usize, t: usize) -> usize {
+        let c = self.cycle();
+        (a / c) * self.region(n) + t * c + a % c
+    }
+}
+
+/// A d-dimensional array distributed per-axis over a processor grid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GridDist {
+    shape: Vec<usize>,
+    axes: Vec<AxisDist>,
+    grid: Vec<usize>,
+    local_shape: Vec<usize>,
+}
+
+impl GridDist {
+    /// Build from explicit per-axis distributions, checking balance.
+    pub fn new(shape: &[usize], axes: &[AxisDist]) -> Result<Self, FftError> {
+        if shape.len() != axes.len() {
+            return Err(FftError::RankMismatch { shape: shape.len(), grid: axes.len() });
+        }
+        if shape.is_empty() {
+            return Err(FftError::BadDescriptor { reason: "shape must have at least one axis".into() });
+        }
+        for (l, (&n, &ax)) in shape.iter().zip(axes).enumerate() {
+            ax.validate(l, n)?;
+        }
+        let grid: Vec<usize> = axes.iter().map(|a| a.procs()).collect();
+        let local_shape: Vec<usize> = shape.iter().zip(&grid).map(|(&n, &p)| n / p).collect();
+        Ok(GridDist { shape: shape.to_vec(), axes: axes.to_vec(), grid, local_shape })
+    }
+
+    /// The d-dimensional cyclic distribution (FFTU's input and output).
+    pub fn cyclic(shape: &[usize], pgrid: &[usize]) -> Result<Self, FftError> {
+        if shape.len() != pgrid.len() {
+            return Err(FftError::RankMismatch { shape: shape.len(), grid: pgrid.len() });
+        }
+        let axes: Vec<AxisDist> = pgrid.iter().map(|&p| AxisDist::Cyclic { p }).collect();
+        Self::new(shape, &axes)
+    }
+
+    /// Block ("brick"/pencil) distribution with `grid[l]` blocks on axis
+    /// `l`.
+    pub fn blocks(shape: &[usize], pgrid: &[usize]) -> Result<Self, FftError> {
+        if shape.len() != pgrid.len() {
+            return Err(FftError::RankMismatch { shape: shape.len(), grid: pgrid.len() });
+        }
+        let axes: Vec<AxisDist> = pgrid.iter().map(|&p| AxisDist::Block { p }).collect();
+        Self::new(shape, &axes)
+    }
+
+    /// Slab distribution: `p` contiguous slabs along one axis, all other
+    /// axes local.
+    pub fn slab(shape: &[usize], axis: usize, p: usize) -> Result<Self, FftError> {
+        if axis >= shape.len() {
+            return Err(FftError::BadDescriptor {
+                reason: format!("slab axis {axis} out of range for rank {}", shape.len()),
+            });
+        }
+        let axes: Vec<AxisDist> = (0..shape.len())
+            .map(|l| AxisDist::Block { p: if l == axis { p } else { 1 } })
+            .collect();
+        Self::new(shape, &axes)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn axes(&self) -> &[AxisDist] {
+        &self.axes
+    }
+
+    /// Processors per axis.
+    pub fn grid(&self) -> &[usize] {
+        &self.grid
+    }
+
+    /// Per-processor local array shape `n_l / p_l`.
+    pub fn local_shape(&self) -> &[usize] {
+        &self.local_shape
+    }
+
+    pub fn total(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn num_procs(&self) -> usize {
+        self.grid.iter().product()
+    }
+
+    pub fn local_len(&self) -> usize {
+        self.local_shape.iter().product()
+    }
+
+    /// Grid coordinates of a processor rank (row-major over the grid).
+    pub fn proc_coords(&self, rank: usize) -> Vec<usize> {
+        unravel(rank, &self.grid)
+    }
+
+    /// Rank of a processor coordinate vector.
+    pub fn proc_rank(&self, coords: &[usize]) -> usize {
+        ravel(coords, &self.grid)
+    }
+
+    /// (owning rank, local offset) of a global multi-index.
+    pub fn owner_of(&self, gidx: &[usize]) -> (usize, usize) {
+        debug_assert_eq!(gidx.len(), self.shape.len());
+        let mut rank = 0;
+        let mut loff = 0;
+        for l in 0..self.shape.len() {
+            let ax = self.axes[l];
+            rank = rank * self.grid[l] + ax.owner(self.shape[l], gidx[l]);
+            loff = loff * self.local_shape[l] + ax.local_index(self.shape[l], gidx[l]);
+        }
+        (rank, loff)
+    }
+
+    /// Global multi-index of local offset `loff` on `rank`.
+    pub fn global_of(&self, rank: usize, loff: usize) -> Vec<usize> {
+        let coords = self.proc_coords(rank);
+        let t = unravel(loff, &self.local_shape);
+        (0..self.shape.len())
+            .map(|l| self.axes[l].global_index(self.shape[l], coords[l], t[l]))
+            .collect()
+    }
+
+    /// Global row-major offset of local offset `loff` on `rank`.
+    pub fn global_offset_of(&self, rank: usize, loff: usize) -> usize {
+        ravel(&self.global_of(rank, loff), &self.shape)
+    }
+
+    /// Split a global row-major array into per-rank local arrays.
+    pub fn scatter(&self, global: &[C64]) -> Vec<Vec<C64>> {
+        assert_eq!(global.len(), self.total(), "scatter: global length mismatch");
+        let p = self.num_procs();
+        let mut locals = vec![vec![C64::ZERO; self.local_len()]; p];
+        self.for_each_global(|off, rank, loff| locals[rank][loff] = global[off]);
+        locals
+    }
+
+    /// Reassemble the global array from per-rank local arrays.
+    pub fn gather(&self, locals: &[Vec<C64>]) -> Vec<C64> {
+        assert_eq!(locals.len(), self.num_procs(), "gather: wrong number of locals");
+        let mut global = vec![C64::ZERO; self.total()];
+        self.for_each_global(|off, rank, loff| global[off] = locals[rank][loff]);
+        global
+    }
+
+    /// Gather a whole batch at once: `outputs[rank][item]` are the local
+    /// arrays an SPMD run produced per rank and batch item; returns one
+    /// global array per item. One index sweep for the whole batch, no
+    /// per-item copies — the shared tail of every algorithm's
+    /// `execute_batch_global`.
+    pub fn gather_batch(&self, outputs: &[Vec<Vec<C64>>]) -> Vec<Vec<C64>> {
+        assert_eq!(outputs.len(), self.num_procs(), "gather_batch: wrong number of ranks");
+        let batch = outputs.first().map(|o| o.len()).unwrap_or(0);
+        let mut results = vec![vec![C64::ZERO; self.total()]; batch];
+        self.for_each_global(|off, rank, loff| {
+            for (b, res) in results.iter_mut().enumerate() {
+                res[off] = outputs[rank][b][loff];
+            }
+        });
+        results
+    }
+
+    /// Odometer over all global elements, calling `f(global_offset,
+    /// rank, local_offset)` — allocation-free inner loop.
+    fn for_each_global(&self, mut f: impl FnMut(usize, usize, usize)) {
+        let d = self.shape.len();
+        let total = self.total();
+        let mut idx = vec![0usize; d];
+        for off in 0..total {
+            let (rank, loff) = self.owner_of(&idx);
+            f(off, rank, loff);
+            for l in (0..d).rev() {
+                idx[l] += 1;
+                if idx[l] < self.shape[l] {
+                    break;
+                }
+                idx[l] = 0;
+            }
+        }
+    }
+}
+
+/// Compiled routing for moving an array from one distribution to
+/// another: which (destination rank, destination offset) every local
+/// element of every source rank goes to, in packet order.
+pub struct RedistPlan {
+    src: GridDist,
+    dst: GridDist,
+    /// `routes[s][k]` = (destination rank, destination local offset) of
+    /// source rank `s`'s local element `k`.
+    routes: Vec<Vec<(usize, usize)>>,
+    /// `placements[t][s]` = destination local offsets of the packet
+    /// `s -> t`, in the order [`Self::pack`] emits it.
+    placements: Vec<Vec<Vec<usize>>>,
+    h: usize,
+}
+
+impl RedistPlan {
+    pub fn new(src: &GridDist, dst: &GridDist) -> Result<Self, FftError> {
+        if src.shape() != dst.shape() {
+            return Err(FftError::DistMismatch { reason: "source and destination shapes differ" });
+        }
+        if src.num_procs() != dst.num_procs() {
+            return Err(FftError::DistMismatch { reason: "source and destination processor counts differ" });
+        }
+        let d = src.shape.len();
+        let p = src.num_procs();
+        // Per-axis lookup: global j -> (dst coordinate, dst local index).
+        let lookup: Vec<Vec<(usize, usize)>> = (0..d)
+            .map(|l| {
+                let n = src.shape[l];
+                let ax = dst.axes[l];
+                (0..n).map(|j| (ax.owner(n, j), ax.local_index(n, j))).collect()
+            })
+            .collect();
+        let mut routes = Vec::with_capacity(p);
+        let mut placements = vec![vec![Vec::new(); p]; p];
+        for s in 0..p {
+            let sc = src.proc_coords(s);
+            let mut route = Vec::with_capacity(src.local_len());
+            let mut t = vec![0usize; d];
+            for _ in 0..src.local_len() {
+                let mut rank = 0;
+                let mut loff = 0;
+                for l in 0..d {
+                    let j = src.axes[l].global_index(src.shape[l], sc[l], t[l]);
+                    let (b, u) = lookup[l][j];
+                    rank = rank * dst.grid[l] + b;
+                    loff = loff * dst.local_shape[l] + u;
+                }
+                route.push((rank, loff));
+                placements[rank][s].push(loff);
+                for l in (0..d).rev() {
+                    t[l] += 1;
+                    if t[l] < src.local_shape[l] {
+                        break;
+                    }
+                    t[l] = 0;
+                }
+            }
+            routes.push(route);
+        }
+        let mut h = 0usize;
+        for s in 0..p {
+            let out = src.local_len() - placements[s][s].len();
+            let inn: usize =
+                (0..p).filter(|&q| q != s).map(|q| placements[s][q].len()).sum();
+            h = h.max(out).max(inn);
+        }
+        Ok(RedistPlan { src: src.clone(), dst: dst.clone(), routes, placements, h })
+    }
+
+    pub fn src(&self) -> &GridDist {
+        &self.src
+    }
+
+    pub fn dst(&self) -> &GridDist {
+        &self.dst
+    }
+
+    /// h-relation of this redistribution: max over processors of
+    /// max(words sent, words received), self-packets excluded.
+    pub fn h_relation(&self) -> usize {
+        self.h
+    }
+
+    /// Split rank `s`'s local array into one outgoing packet per
+    /// destination rank (the packet to `s` itself included, as the BSP
+    /// exchange expects).
+    pub fn pack(&self, s: usize, local: &[C64]) -> Vec<Vec<C64>> {
+        let p = self.src.num_procs();
+        debug_assert_eq!(local.len(), self.src.local_len());
+        let mut packets: Vec<Vec<C64>> =
+            (0..p).map(|t| Vec::with_capacity(self.placements[t][s].len())).collect();
+        for (k, &(rank, _)) in self.routes[s].iter().enumerate() {
+            packets[rank].push(local[k]);
+        }
+        packets
+    }
+
+    /// Assemble rank `t`'s local array (destination distribution) from
+    /// the incoming packets.
+    pub fn unpack(&self, t: usize, incoming: &[Vec<C64>]) -> Vec<C64> {
+        let p = self.src.num_procs();
+        debug_assert_eq!(incoming.len(), p);
+        let mut out = vec![C64::ZERO; self.dst.local_len()];
+        for s in 0..p {
+            debug_assert_eq!(incoming[s].len(), self.placements[t][s].len());
+            for (pos, &loff) in self.placements[t][s].iter().enumerate() {
+                out[loff] = incoming[s][pos];
+            }
+        }
+        out
+    }
+
+    /// Sequential whole-array redistribution (the oracle the BSP
+    /// execution is validated against).
+    pub fn apply(&self, locals: &[Vec<C64>]) -> Vec<Vec<C64>> {
+        let p = self.src.num_procs();
+        assert_eq!(locals.len(), p);
+        let mut out = vec![vec![C64::ZERO; self.dst.local_len()]; p];
+        for s in 0..p {
+            for (k, &(rank, loff)) in self.routes[s].iter().enumerate() {
+                out[rank][loff] = locals[s][k];
+            }
+        }
+        out
+    }
+}
+
+/// Exact h-relation of redistributing between two distributions of the
+/// same array, in closed form — O(d·p) time and no per-element work, so
+/// the analytic cost model can price paper-scale shapes. Agrees exactly
+/// with [`RedistPlan::h_relation`] (see tests).
+///
+/// Derivation: every distribution here is balanced (`N/p` words per
+/// rank), so rank `s` sends `N/p - overlap(s)` and receives
+/// `N/p - overlap(s)` words, where `overlap(s)` is the number of
+/// elements rank `s` owns under *both* distributions. Hence
+/// `h = N/p - min_s overlap(s)`, and the overlap factorizes per axis
+/// into counts of an arithmetic progression inside an interval.
+pub fn analytic_h(src: &GridDist, dst: &GridDist) -> usize {
+    assert_eq!(src.shape(), dst.shape(), "analytic_h: shapes differ");
+    assert_eq!(src.num_procs(), dst.num_procs(), "analytic_h: processor counts differ");
+    let d = src.shape.len();
+    let p = src.num_procs();
+    let mut min_self = usize::MAX;
+    for s in 0..p {
+        let ca = src.proc_coords(s);
+        let cb = dst.proc_coords(s);
+        let mut overlap = 1usize;
+        for l in 0..d {
+            overlap *= axis_overlap(src.shape[l], src.axes[l], ca[l], dst.axes[l], cb[l]);
+            if overlap == 0 {
+                break;
+            }
+        }
+        min_self = min_self.min(overlap);
+    }
+    src.local_len() - min_self
+}
+
+/// Number of axis indices owned by coordinate `pa` of `a` AND `pb` of
+/// `b`: the intersection of two (interval ∩ residue-class) sets, counted
+/// via CRT.
+fn axis_overlap(n: usize, a: AxisDist, pa: usize, b: AxisDist, pb: usize) -> usize {
+    let (ca, la) = (a.cycle(), a.region(n));
+    let (cb, lb) = (b.cycle(), b.region(n));
+    let (ga, ra) = (pa / ca, pa % ca);
+    let (gb, rb) = (pb / cb, pb % cb);
+    let lo = (ga * la).max(gb * lb);
+    let hi = ((ga + 1) * la).min((gb + 1) * lb);
+    if lo >= hi {
+        return 0;
+    }
+    crt_count(lo, hi, ra, ca, rb, cb)
+}
+
+/// Count `j in [lo, hi)` with `j ≡ r1 (mod m1)` and `j ≡ r2 (mod m2)`.
+fn crt_count(lo: usize, hi: usize, r1: usize, m1: usize, r2: usize, m2: usize) -> usize {
+    let (g, x, _) = ext_gcd(m1 as i64, m2 as i64);
+    let g = g as usize;
+    if (r2 as i64 - r1 as i64) % g as i64 != 0 {
+        return 0;
+    }
+    let lcm = m1 / g * m2;
+    let m2g = (m2 / g) as i64;
+    // j0 = r1 + m1 * k with k ≡ (r2 - r1)/g * inv(m1/g) (mod m2/g);
+    // ext_gcd gives m1*x + m2*y = g, so x is that inverse (mod m2/g).
+    let mut k = ((r2 as i64 - r1 as i64) / g as i64 % m2g) * (x % m2g) % m2g;
+    if k < 0 {
+        k += m2g;
+    }
+    let j0 = r1 + m1 * k as usize; // the least solution, in [0, lcm)
+    let first = if j0 >= lo { j0 } else { j0 + (lo - j0 + lcm - 1) / lcm * lcm };
+    if first >= hi {
+        0
+    } else {
+        1 + (hi - 1 - first) / lcm
+    }
+}
+
+/// Extended Euclid: returns (g, x, y) with `a x + b y = g = gcd(a, b)`.
+fn ext_gcd(a: i64, b: i64) -> (i64, i64, i64) {
+    if b == 0 {
+        (a, 1, 0)
+    } else {
+        let (g, x, y) = ext_gcd(b, a % b);
+        (g, y, x - (a / b) * y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn ravel_unravel_roundtrip() {
+        let shape = [3usize, 4, 5];
+        for off in 0..60 {
+            assert_eq!(ravel(&unravel(off, &shape), &shape), off);
+        }
+    }
+
+    #[test]
+    fn cyclic_block_owner_formulas() {
+        let cyc = AxisDist::Cyclic { p: 4 };
+        let blk = AxisDist::Block { p: 4 };
+        for j in 0..16 {
+            assert_eq!(cyc.owner(16, j), j % 4);
+            assert_eq!(cyc.local_index(16, j), j / 4);
+            assert_eq!(blk.owner(16, j), j / 4);
+            assert_eq!(blk.local_index(16, j), j % 4);
+        }
+    }
+
+    #[test]
+    fn axis_global_inverts_owner() {
+        for ax in [
+            AxisDist::Cyclic { p: 4 },
+            AxisDist::Block { p: 4 },
+            AxisDist::GroupCyclic { p: 8, c: 2 },
+            AxisDist::GroupCyclic { p: 8, c: 4 },
+        ] {
+            let n = 48;
+            for j in 0..n {
+                let a = ax.owner(n, j);
+                let t = ax.local_index(n, j);
+                assert_eq!(ax.global_index(n, a, t), j, "{ax:?} j={j}");
+                assert!(a < ax.procs());
+            }
+        }
+    }
+
+    #[test]
+    fn grid_dist_validation_errors_are_typed() {
+        assert_eq!(
+            GridDist::cyclic(&[8, 8], &[2]).unwrap_err(),
+            FftError::RankMismatch { shape: 2, grid: 1 }
+        );
+        assert!(matches!(
+            GridDist::cyclic(&[9], &[2]).unwrap_err(),
+            FftError::AxisConstraint { axis: 0, requires: "p_l | n_l", .. }
+        ));
+        assert!(matches!(
+            GridDist::cyclic(&[8], &[0]).unwrap_err(),
+            FftError::AxisConstraint { requires: "p_l >= 1", .. }
+        ));
+        assert!(GridDist::slab(&[8, 4], 2, 2).is_err());
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_all_kinds() {
+        let mut rng = Rng::new(0xD157);
+        let dists = [
+            GridDist::cyclic(&[8, 6], &[2, 3]).unwrap(),
+            GridDist::blocks(&[8, 6], &[4, 1]).unwrap(),
+            GridDist::slab(&[8, 6], 0, 2).unwrap(),
+            GridDist::new(
+                &[16, 6],
+                &[AxisDist::GroupCyclic { p: 4, c: 2 }, AxisDist::Cyclic { p: 2 }],
+            )
+            .unwrap(),
+        ];
+        for dist in &dists {
+            let n = dist.total();
+            let global: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+            let locals = dist.scatter(&global);
+            assert_eq!(locals.len(), dist.num_procs());
+            for l in &locals {
+                assert_eq!(l.len(), dist.local_len());
+            }
+            assert_eq!(dist.gather(&locals), global);
+        }
+    }
+
+    #[test]
+    fn owner_of_and_global_of_are_inverse() {
+        let dist = GridDist::cyclic(&[8, 6], &[2, 3]).unwrap();
+        for rank in 0..dist.num_procs() {
+            for loff in 0..dist.local_len() {
+                let g = dist.global_of(rank, loff);
+                assert_eq!(dist.owner_of(&g), (rank, loff));
+            }
+        }
+    }
+
+    #[test]
+    fn redist_apply_matches_scatter_composition() {
+        let shape = [8usize, 6];
+        let src = GridDist::slab(&shape, 0, 4).unwrap();
+        let dst = GridDist::cyclic(&shape, &[2, 2]).unwrap();
+        let plan = RedistPlan::new(&src, &dst).unwrap();
+        let n: usize = shape.iter().product();
+        let global: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -(i as f64))).collect();
+        assert_eq!(plan.apply(&src.scatter(&global)), dst.scatter(&global));
+    }
+
+    #[test]
+    fn pack_unpack_equals_apply() {
+        let shape = [8usize, 8];
+        let src = GridDist::cyclic(&shape, &[2, 2]).unwrap();
+        let dst = GridDist::blocks(&shape, &[2, 2]).unwrap();
+        let plan = RedistPlan::new(&src, &dst).unwrap();
+        let global: Vec<C64> = (0..64).map(|i| C64::new(i as f64, 0.0)).collect();
+        let locals = src.scatter(&global);
+        let want = plan.apply(&locals);
+        let p = src.num_procs();
+        // Sequentially simulate the exchange.
+        let packed: Vec<Vec<Vec<C64>>> = (0..p).map(|s| plan.pack(s, &locals[s])).collect();
+        for t in 0..p {
+            let incoming: Vec<Vec<C64>> = (0..p).map(|s| packed[s][t].clone()).collect();
+            assert_eq!(plan.unpack(t, &incoming), want[t], "rank {t}");
+        }
+    }
+
+    #[test]
+    fn redist_rejects_mismatched_dists() {
+        let a = GridDist::cyclic(&[8, 8], &[2, 2]).unwrap();
+        let b = GridDist::cyclic(&[8, 4], &[2, 2]).unwrap();
+        let c = GridDist::cyclic(&[8, 8], &[2, 1]).unwrap();
+        assert!(matches!(RedistPlan::new(&a, &b), Err(FftError::DistMismatch { .. })));
+        assert!(matches!(RedistPlan::new(&a, &c), Err(FftError::DistMismatch { .. })));
+    }
+
+    #[test]
+    fn analytic_h_matches_compiled_plans() {
+        let shape = [16usize, 8];
+        let pairs = [
+            (GridDist::cyclic(&shape, &[2, 2]).unwrap(), GridDist::blocks(&shape, &[2, 2]).unwrap()),
+            (GridDist::slab(&shape, 0, 4).unwrap(), GridDist::blocks(&shape, &[1, 4]).unwrap()),
+            (GridDist::cyclic(&shape, &[4, 2]).unwrap(), GridDist::cyclic(&shape, &[2, 4]).unwrap()),
+            (
+                GridDist::new(&shape, &[AxisDist::GroupCyclic { p: 4, c: 2 }, AxisDist::Block { p: 2 }])
+                    .unwrap(),
+                GridDist::cyclic(&shape, &[4, 2]).unwrap(),
+            ),
+        ];
+        for (src, dst) in &pairs {
+            let plan = RedistPlan::new(src, dst).unwrap();
+            assert_eq!(analytic_h(src, dst), plan.h_relation(), "{src:?} -> {dst:?}");
+            let back = RedistPlan::new(dst, src).unwrap();
+            assert_eq!(analytic_h(dst, src), back.h_relation());
+        }
+    }
+
+    #[test]
+    fn prop_analytic_h_matches_random_pairs() {
+        forall("analytic_h == compiled h", 30, 0xA11, |rng| {
+            let n0 = 4 * rng.range(1, 4);
+            let n1 = 4 * rng.range(1, 4);
+            let shape = [n0, n1];
+            let pick = |rng: &mut Rng, n: usize| -> AxisDist {
+                let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+                let p = *rng.choose(&divs);
+                match rng.below(3) {
+                    0 => AxisDist::Cyclic { p },
+                    1 => AxisDist::Block { p },
+                    _ => {
+                        let cs: Vec<usize> = (1..=p).filter(|c| p % c == 0).collect();
+                        AxisDist::GroupCyclic { p, c: *rng.choose(&cs) }
+                    }
+                }
+            };
+            // Same total processor count on both sides: reuse per-axis p.
+            let a0 = pick(rng, n0);
+            let a1 = pick(rng, n1);
+            let b0 = match rng.below(3) {
+                0 => AxisDist::Cyclic { p: a0.procs() },
+                1 => AxisDist::Block { p: a0.procs() },
+                _ => a0,
+            };
+            let b1 = match rng.below(3) {
+                0 => AxisDist::Cyclic { p: a1.procs() },
+                1 => AxisDist::Block { p: a1.procs() },
+                _ => a1,
+            };
+            let src = GridDist::new(&shape, &[a0, a1]).map_err(|e| e.to_string())?;
+            let dst = GridDist::new(&shape, &[b0, b1]).map_err(|e| e.to_string())?;
+            let plan = RedistPlan::new(&src, &dst).map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                analytic_h(&src, &dst) == plan.h_relation(),
+                "shape {shape:?} {src:?} -> {dst:?}: analytic {} vs compiled {}",
+                analytic_h(&src, &dst),
+                plan.h_relation()
+            );
+            Ok(())
+        });
+    }
+}

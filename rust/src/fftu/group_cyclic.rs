@@ -10,6 +10,7 @@
 //! extension of [10]/[2] builds on, plus the scaling analysis exposed by
 //! `fftu pmax`.
 
+use crate::api::FftError;
 use crate::dist::{AxisDist, GridDist, RedistPlan};
 
 /// Group-cyclic distribution of a d-dimensional array: cycle `c_l` per
@@ -19,9 +20,12 @@ pub fn group_cyclic_dist(
     shape: &[usize],
     pgrid: &[usize],
     cycles: &[usize],
-) -> Result<GridDist, String> {
-    if shape.len() != pgrid.len() || shape.len() != cycles.len() {
-        return Err("shape/pgrid/cycles rank mismatch".into());
+) -> Result<GridDist, FftError> {
+    if shape.len() != pgrid.len() {
+        return Err(FftError::RankMismatch { shape: shape.len(), grid: pgrid.len() });
+    }
+    if shape.len() != cycles.len() {
+        return Err(FftError::RankMismatch { shape: shape.len(), grid: cycles.len() });
     }
     let axes: Vec<AxisDist> = pgrid
         .iter()
@@ -40,7 +44,7 @@ pub fn cyclic_to_group_cyclic(
     shape: &[usize],
     pgrid: &[usize],
     cycles: &[usize],
-) -> Result<RedistPlan, String> {
+) -> Result<RedistPlan, FftError> {
     let cyc = GridDist::cyclic(shape, pgrid)?;
     let gc = group_cyclic_dist(shape, pgrid, cycles)?;
     RedistPlan::new(&cyc, &gc)

@@ -17,31 +17,50 @@ pub use worker::Worker;
 
 use std::sync::Arc;
 
+use crate::api::FftError;
 use crate::bsp::{run_spmd, CostReport};
 use crate::fft::{C64, Direction, Planner};
 
 /// Convenience driver: distribute `global` cyclically, run Algorithm 2.3
 /// on the BSP machine, gather the result. Used by tests, examples, and
 /// the table harness; long-lived applications keep [`Worker`]s alive
-/// across many transforms instead.
+/// across many transforms instead (or go through [`crate::api`], whose
+/// plan cache reuses the [`FftuPlan`] across calls).
 pub fn fftu_global(
     shape: &[usize],
     pgrid: &[usize],
     global: &[C64],
     dir: Direction,
-) -> Result<(Vec<C64>, CostReport), String> {
+) -> Result<(Vec<C64>, CostReport), FftError> {
     let planner = Planner::new();
     let plan = Arc::new(FftuPlan::new(shape, pgrid, &planner)?);
-    let locals = plan.dist.scatter(global);
+    let (mut outs, report) = fftu_execute_batch(&plan, &[global], dir);
+    Ok((outs.pop().unwrap(), report))
+}
+
+/// Execute a prebuilt [`FftuPlan`] on a batch of global arrays in ONE
+/// SPMD session: per-rank [`Worker`] state (twiddle tables, packet
+/// buffers, scratch) is built once and reused for every batch item, so
+/// the steady-state path allocates nothing per transform. The report
+/// covers the whole batch (`batch` communication supersteps).
+pub fn fftu_execute_batch(
+    plan: &Arc<FftuPlan>,
+    inputs: &[&[C64]],
+    dir: Direction,
+) -> (Vec<Vec<C64>>, CostReport) {
+    let locals: Vec<Vec<Vec<C64>>> = inputs.iter().map(|g| plan.dist.scatter(g)).collect();
     let p = plan.num_procs();
     let outcome = run_spmd(p, |ctx| {
         let mut worker = Worker::new(plan.clone(), ctx.rank());
-        let mut local = locals[ctx.rank()].clone();
-        worker.execute(ctx, &mut local, dir);
-        local
+        let mut outs = Vec::with_capacity(inputs.len());
+        for item in &locals {
+            let mut local = item[ctx.rank()].clone();
+            worker.execute(ctx, &mut local, dir);
+            outs.push(local);
+        }
+        outs
     });
-    let gathered = plan.dist.gather(&outcome.outputs);
-    Ok((gathered, outcome.report))
+    (plan.dist.gather_batch(&outcome.outputs), outcome.report)
 }
 
 #[cfg(test)]
@@ -107,15 +126,25 @@ mod tests {
 
     #[test]
     fn forward_inverse_roundtrip_same_distribution() {
+        use crate::api::{Algorithm, Normalization, Transform};
         let mut rng = Rng::new(0x77);
         let shape = [16usize, 16];
         let pgrid = [4usize, 2];
         let n = 256;
         let x = rand_global(n, &mut rng);
-        let (y, _) = fftu_global(&shape, &pgrid, &x, Direction::Forward).unwrap();
-        let (z, _) = fftu_global(&shape, &pgrid, &y, Direction::Inverse).unwrap();
-        let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
-        assert!(max_abs_diff(&z, &x) < 1e-9);
+        // Forward unnormalized, inverse with the descriptor's 1/N
+        // normalization — no hand scaling anywhere.
+        let y = Transform::new(&shape).grid(&pgrid).plan(Algorithm::Fftu).unwrap()
+            .execute(&x).unwrap();
+        let z = Transform::new(&shape)
+            .grid(&pgrid)
+            .inverse()
+            .normalization(Normalization::ByN)
+            .plan(Algorithm::Fftu)
+            .unwrap()
+            .execute(&y.output)
+            .unwrap();
+        assert!(max_abs_diff(&z.output, &x) < 1e-9);
     }
 
     #[test]

@@ -248,7 +248,7 @@ mod tests {
                 grid.push(p);
             }
             let planner = Planner::new();
-            let plan = FftuPlan::new(&shape, &grid, &planner).map_err(|e| e)?;
+            let plan = FftuPlan::new(&shape, &grid, &planner)?;
             let s_rank = rng.below(plan.num_procs());
             let s_coords = plan.dist.proc_coords(s_rank);
             let local: Vec<C64> = (0..plan.local_len())

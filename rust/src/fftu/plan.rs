@@ -2,6 +2,7 @@
 
 use std::sync::Arc;
 
+use crate::api::FftError;
 use crate::dist::GridDist;
 use crate::fft::{NdPlan, Plan, Planner};
 
@@ -30,22 +31,16 @@ pub struct FftuPlan {
 
 impl FftuPlan {
     /// Build a plan, checking the paper's constraint `p_l^2 | n_l`.
-    pub fn new(shape: &[usize], pgrid: &[usize], planner: &Planner) -> Result<Self, String> {
+    pub fn new(shape: &[usize], pgrid: &[usize], planner: &Planner) -> Result<Self, FftError> {
         if shape.len() != pgrid.len() {
-            return Err(format!(
-                "shape rank {} != processor grid rank {}",
-                shape.len(),
-                pgrid.len()
-            ));
+            return Err(FftError::RankMismatch { shape: shape.len(), grid: pgrid.len() });
         }
-        for (&n, &p) in shape.iter().zip(pgrid) {
+        for (axis, (&n, &p)) in shape.iter().zip(pgrid).enumerate() {
             if p == 0 {
-                return Err("processor grid entries must be positive".into());
+                return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l >= 1" });
             }
             if n % (p * p) != 0 {
-                return Err(format!(
-                    "FFTU requires p_l^2 | n_l per axis; violated: p={p}, n={n}"
-                ));
+                return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l^2 | n_l" });
             }
         }
         let dist = GridDist::cyclic(shape, pgrid)?;
@@ -117,10 +112,16 @@ pub fn fftu_pmax(shape: &[usize]) -> usize {
 }
 
 /// Pick a processor grid with `prod p_l == p` and `p_l^2 | n_l`, or
-/// `None` if impossible. Greedy: repeatedly give the smallest prime
-/// factor of the remaining `p` to the axis with the most remaining
-/// headroom (largest `n_l / p_l^2`), which keeps packets as cubic as
-/// possible — the same balancing PFFT does for its pencil grids.
+/// `None` if impossible. Greedy: repeatedly give the largest remaining
+/// prime factor of `p` to the axis with the most remaining headroom
+/// (largest `n_l / p_l^2`), which keeps packets as cubic as possible —
+/// the same balancing PFFT does for its pencil grids.
+///
+/// **Tie-break (deterministic, part of the API contract):** when two
+/// axes have equal headroom, the axis with the larger `n_l` wins, and on
+/// a full tie the lower axis index wins. So `[16, 16, 4]` with `p = 2`
+/// always yields `[2, 1, 1]`, never `[1, 2, 1]`, regardless of
+/// evaluation order — plan-cache keys and reproducibility depend on this.
 pub fn choose_grid(shape: &[usize], p: usize) -> Option<Vec<usize>> {
     let d = shape.len();
     let mut grid = vec![1usize; d];
@@ -141,14 +142,15 @@ pub fn choose_grid(shape: &[usize], p: usize) -> Option<Vec<usize>> {
     // Largest factors first so they land on the roomiest axes.
     factors.sort_unstable_by(|a, b| b.cmp(a));
     for f in factors {
-        // Axis with max headroom that still satisfies (p_l*f)^2 | n_l.
-        let mut best: Option<(usize, usize)> = None; // (headroom, axis)
+        // Axis with max headroom that still satisfies (p_l*f)^2 | n_l;
+        // rank candidates by (headroom, n_l, lower index) lexicographically.
+        let mut best: Option<((usize, usize, std::cmp::Reverse<usize>), usize)> = None;
         for l in 0..d {
             let q = grid[l] * f;
             if shape[l] % (q * q) == 0 {
-                let headroom = shape[l] / (q * q);
-                if best.map(|(h, _)| headroom > h).unwrap_or(true) {
-                    best = Some((headroom, l));
+                let key = (shape[l] / (q * q), shape[l], std::cmp::Reverse(l));
+                if best.map(|(b, _)| key > b).unwrap_or(true) {
+                    best = Some((key, l));
                 }
             }
         }
@@ -209,9 +211,31 @@ mod tests {
     }
 
     #[test]
-    fn plan_rejects_bad_grid() {
+    fn choose_grid_tie_break_is_documented() {
+        // [16, 16, 4]: axes 0 and 1 tie on headroom at every step; the
+        // documented rule (larger n_l, then lower index) must pick axis 0
+        // first, then axis 1 — deterministically, on every call.
+        for _ in 0..4 {
+            assert_eq!(choose_grid(&[16, 16, 4], 2).unwrap(), vec![2, 1, 1]);
+            assert_eq!(choose_grid(&[16, 16, 4], 4).unwrap(), vec![2, 2, 1]);
+        }
+        // Larger-n_l preference on an equal-headroom tie that scan order
+        // alone would resolve differently.
+        assert_eq!(choose_grid(&[4, 16, 16], 2).unwrap(), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn plan_rejects_bad_grid_with_typed_errors() {
+        use crate::api::FftError;
         let planner = Planner::new();
-        assert!(FftuPlan::new(&[8, 8], &[4, 1], &planner).is_err()); // 16 ∤ 8
+        assert!(matches!(
+            FftuPlan::new(&[8, 8], &[4, 1], &planner), // 16 ∤ 8
+            Err(FftError::AxisConstraint { axis: 0, n: 8, p: 4, requires: "p_l^2 | n_l" })
+        ));
+        assert!(matches!(
+            FftuPlan::new(&[8, 8], &[2], &planner),
+            Err(FftError::RankMismatch { shape: 2, grid: 1 })
+        ));
         assert!(FftuPlan::new(&[8, 8], &[2, 2], &planner).is_ok());
     }
 

@@ -3,6 +3,7 @@
 
 use std::sync::Arc;
 
+use crate::api::Normalization;
 use crate::bsp::Ctx;
 use crate::fft::{C64, Direction};
 
@@ -95,15 +96,32 @@ impl Worker {
         self.superstep2(local, dir);
     }
 
+    /// Transform with an explicit output scaling — the same
+    /// [`Normalization`] convention the [`crate::api`] facade uses, so
+    /// persistent-worker applications and the facade agree on scaling by
+    /// construction. The scaling is purely local (cyclic in, cyclic out).
+    pub fn execute_normalized(
+        &mut self,
+        ctx: &mut Ctx,
+        local: &mut [C64],
+        dir: Direction,
+        norm: Normalization,
+    ) {
+        self.execute(ctx, local, dir);
+        let s = norm.scale(self.plan.total());
+        if s != 1.0 {
+            for v in local.iter_mut() {
+                *v = v.scale(s);
+            }
+        }
+    }
+
     /// Inverse transform with 1/N normalization, same communication
     /// structure (the "same distribution" property of FFTU means the
     /// inverse is literally the same program with conjugated weights,
-    /// §1.3).
+    /// §1.3). Shorthand for [`Self::execute_normalized`] with
+    /// [`Normalization::ByN`].
     pub fn execute_inverse_normalized(&mut self, ctx: &mut Ctx, local: &mut [C64]) {
-        self.execute(ctx, local, Direction::Inverse);
-        let inv = 1.0 / self.plan.total() as f64;
-        for v in local.iter_mut() {
-            *v = v.scale(inv);
-        }
+        self.execute_normalized(ctx, local, Direction::Inverse, Normalization::ByN);
     }
 }

@@ -4,11 +4,60 @@
 //! (SIAM J. Sci. Comput. 2023, DOI 10.1137/22M1487242): a parallel
 //! multidimensional FFT over the d-dimensional cyclic distribution with a
 //! **single all-to-all communication superstep**, starting and ending in
-//! the same distribution, usable on up to `sqrt(N)` processors.
+//! the same distribution, usable on up to `sqrt(N)` processors — plus
+//! the four published comparators (parallel FFTW slab, PFFT pencil,
+//! heFFTe bricks, Popovici d-step) on the same substrate, so the
+//! comparison isolates communication structure.
+//!
+//! ## Quickstart
+//!
+//! Everything goes through the [`api`] facade: describe the transform
+//! with a [`Transform`], pick an [`Algorithm`], `plan`, `execute`.
+//! Plans validate once, are immutable, and amortize across repeated and
+//! batched transforms (cache them with [`PlanCache`]):
+//!
+//! ```
+//! use fftu::api::{Algorithm, Normalization, Transform};
+//! use fftu::fft::{max_abs_diff, C64};
+//!
+//! // A 16x16 array on 4 processors, grid chosen automatically.
+//! let x: Vec<C64> = (0..256).map(|i| C64::new(1.0 + i as f64, 0.5)).collect();
+//! let fwd = Transform::new(&[16, 16]).procs(4).plan(Algorithm::Fftu)?;
+//! let y = fwd.execute(&x)?;
+//! // FFTU's headline property: exactly ONE communication superstep.
+//! assert_eq!(y.report.comm_supersteps(), 1);
+//!
+//! // The inverse is the same program with conjugated weights; 1/N
+//! // scaling is a descriptor field, not a caller-side hand-divide.
+//! let inv = Transform::new(&[16, 16])
+//!     .procs(4)
+//!     .inverse()
+//!     .normalization(Normalization::ByN)
+//!     .plan(Algorithm::Fftu)?;
+//! let z = inv.execute(&y.output)?;
+//! assert!(max_abs_diff(&z.output, &x) < 1e-9);
+//!
+//! // Swap the algorithm, keep the descriptor: Popovici's d-step pays d
+//! // all-to-alls for the same transform.
+//! let pop = Transform::new(&[16, 16]).procs(4).plan(Algorithm::Popovici)?;
+//! assert_eq!(pop.execute(&x)?.report.comm_supersteps(), 2);
+//! # Ok::<(), fftu::FftError>(())
+//! ```
+//!
+//! Every fallible call returns the typed [`FftError`]; batched
+//! transforms (`Transform::batch`) run through one SPMD session with
+//! per-rank state built once. Long-lived applications that interleave
+//! local physics with transforms (see `examples/poisson.rs`,
+//! `examples/wavepacket.rs`) drop down to [`fftu::Worker`] and keep the
+//! same [`api::Normalization`] convention.
+//!
+//! ## Layout
 //!
 //! The crate is organized as the paper's system plus every substrate it
 //! depends on:
 //!
+//! - [`api`] — the front door: `Transform` descriptor, `Algorithm` enum,
+//!   `DistFft` plan/execute trait, `FftError`, LRU `PlanCache`.
 //! - [`fft`] — sequential FFT library (the FFTW substitute).
 //! - [`dist`] — data distributions (cyclic, slab, pencil, block,
 //!   group-cyclic) and the generic redistribution planner.
@@ -19,14 +68,16 @@
 //!   (fused packing + twiddling).
 //! - [`baselines`] — FFTW-slab, PFFT-pencil, heFFTe-like and
 //!   Popovici-style comparators, implemented from their published
-//!   descriptions and validated against the sequential oracle.
+//!   descriptions and validated against the sequential oracle; each with
+//!   the same plan/execute split as FFTU.
 //! - [`costmodel`] — BSP (g, l, r) machine model used to regenerate the
 //!   paper's tables at full Snellius scale.
 //! - [`runtime`] — PJRT engine loading AOT-compiled JAX/Pallas artifacts
-//!   (HLO text) for the local transforms.
+//!   (HLO text) for the local transforms (behind the `xla-pjrt` feature).
 //! - [`report`], [`cli`], [`testing`] — table rendering, the launcher,
 //!   and the in-tree property-testing mini-framework.
 
+pub mod api;
 pub mod baselines;
 pub mod bsp;
 pub mod cli;
@@ -38,4 +89,5 @@ pub mod report;
 pub mod runtime;
 pub mod testing;
 
+pub use api::{Algorithm, DistFft, Execution, FftError, Grid, Normalization, PlanCache, Transform};
 pub use fft::{C64, Direction};

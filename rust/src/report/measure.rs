@@ -6,11 +6,16 @@
 //! and total-work behaviour (T(p) roughly flat at small p), while the
 //! strong-scaling *time* columns of the paper tables come from the
 //! calibrated cost model over the exact executed ledgers (DESIGN.md §6).
+//!
+//! Both helpers sit on the [`crate::api`] facade: `measure_fftu` times
+//! the steady state (plan built once, workers persistent, `reps`
+//! transforms), `measure_once` times one cold execution of any
+//! [`Algorithm`] including its planning cost.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::baselines::{heffte_global, pencil_global, popovici_global, slab_global, OutputDist};
+use crate::api::{plan, Algorithm, FftError, Transform};
 use crate::bsp::{run_spmd, CostReport};
 use crate::fft::{C64, Direction, Planner};
 use crate::fftu::{FftuPlan, Worker};
@@ -18,7 +23,11 @@ use crate::testing::Rng;
 
 /// Measured FFTU: workers built once, `reps` transforms timed per the
 /// paper's methodology (§4.1: repeat to wash out barrier skew).
-pub fn measure_fftu(shape: &[usize], pgrid: &[usize], reps: usize) -> Result<(f64, CostReport), String> {
+pub fn measure_fftu(
+    shape: &[usize],
+    pgrid: &[usize],
+    reps: usize,
+) -> Result<(f64, CostReport), FftError> {
     let planner = Planner::new();
     let plan = Arc::new(FftuPlan::new(shape, pgrid, &planner)?);
     let p = plan.num_procs();
@@ -40,55 +49,26 @@ pub fn measure_fftu(shape: &[usize], pgrid: &[usize], reps: usize) -> Result<(f6
     Ok((wall, outcome.report))
 }
 
-/// Which algorithm to measure.
-#[derive(Clone, Copy, Debug)]
-pub enum Algo {
-    Fftu,
-    Slab { same: bool },
-    Pencil { r: usize, same: bool },
-    Heffte,
-    Popovici,
-}
-
-/// One-shot wall-clock + ledger for any algorithm (includes scatter and
-/// plan setup for the baselines — used for sanity rows, not headline
-/// numbers; `measure_fftu` is the precise path).
+/// One-shot wall-clock + ledger for any algorithm through the unified
+/// facade (includes planning, scatter, and gather — used for sanity
+/// rows, not headline numbers; `measure_fftu` is the precise path).
 pub fn measure_once(
-    algo: Algo,
+    algo: Algorithm,
     shape: &[usize],
     p: usize,
     pgrid: Option<&[usize]>,
-) -> Result<(f64, CostReport), String> {
+) -> Result<(f64, CostReport), FftError> {
     let n: usize = shape.iter().product();
     let mut rng = Rng::new(0xBF);
     let global: Vec<C64> = (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
-    let t0 = Instant::now();
-    let report = match algo {
-        Algo::Fftu => {
-            let grid = pgrid
-                .map(|g| g.to_vec())
-                .or_else(|| crate::fftu::choose_grid(shape, p))
-                .ok_or_else(|| format!("no FFTU grid for p={p}"))?;
-            crate::fftu::fftu_global(shape, &grid, &global, Direction::Forward)?.1
-        }
-        Algo::Slab { same } => {
-            let out = if same { OutputDist::Same } else { OutputDist::Different };
-            slab_global(shape, p, &global, Direction::Forward, out)?.1
-        }
-        Algo::Pencil { r, same } => {
-            let out = if same { OutputDist::Same } else { OutputDist::Different };
-            pencil_global(shape, r, p, &global, Direction::Forward, out)?.1
-        }
-        Algo::Heffte => heffte_global(shape, p, &global, Direction::Forward)?.1,
-        Algo::Popovici => {
-            let grid = pgrid
-                .map(|g| g.to_vec())
-                .or_else(|| crate::fftu::choose_grid(shape, p))
-                .ok_or_else(|| format!("no cyclic grid for p={p}"))?;
-            popovici_global(shape, &grid, &global, Direction::Forward)?.1
-        }
+    let descriptor = match pgrid {
+        Some(g) => Transform::new(shape).grid(g),
+        None => Transform::new(shape).procs(p),
     };
-    Ok((t0.elapsed().as_secs_f64(), report))
+    let t0 = Instant::now();
+    let planned = plan(algo, &descriptor)?;
+    let exec = planned.execute(&global)?;
+    Ok((t0.elapsed().as_secs_f64(), exec.report))
 }
 
 #[cfg(test)]
@@ -106,11 +86,11 @@ mod tests {
     fn measure_once_all_algorithms() {
         let shape = [8usize, 8, 8];
         for algo in [
-            Algo::Fftu,
-            Algo::Slab { same: true },
-            Algo::Pencil { r: 2, same: false },
-            Algo::Heffte,
-            Algo::Popovici,
+            Algorithm::Fftu,
+            Algorithm::slab(),
+            Algorithm::Pencil { r: 2, out: crate::baselines::OutputDist::Different },
+            Algorithm::Heffte,
+            Algorithm::Popovici,
         ] {
             let (wall, _) = measure_once(algo, &shape, 4, None).unwrap();
             assert!(wall > 0.0, "{algo:?}");

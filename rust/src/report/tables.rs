@@ -9,11 +9,12 @@
 //! 2. **executed** — a scaled-down shape run for real on the BSP
 //!    runtime, with wall-clock, communication supersteps, and h words.
 
-use crate::baselines::{pencil_pmax, pfft_best_pmax, slab_pmax};
+use crate::api::Algorithm;
+use crate::baselines::{pencil_pmax, pfft_best_pmax, slab_pmax, OutputDist};
 use crate::costmodel::{fftu_report, heffte_report, pencil_report, popovici_report, slab_report, Machine};
 use crate::fftu::{choose_grid, fftu_pmax};
 
-use super::measure::{measure_fftu, measure_once, Algo};
+use super::measure::{measure_fftu, measure_once};
 use super::paper::{PaperRow, SEQ_FFTW_1024_3, SEQ_FFTW_2_24X64, SEQ_FFTW_64_5, TABLE_4_1, TABLE_4_2, TABLE_4_3};
 
 /// Machine fitted from a table's own FFTU column (see
@@ -171,12 +172,14 @@ pub fn table_executed(title: &str, shape: &[usize], plist: &[usize], reps: usize
             }
             None => (None, 0, 0),
         };
-        let slab = measure_once(Algo::Slab { same: true }, shape, p, None).ok().map(|x| x.0);
+        let slab = measure_once(Algorithm::slab(), shape, p, None).ok().map(|x| x.0);
         let d = shape.len();
         let r = if d >= 3 { 2 } else { 1 };
-        let pencil = measure_once(Algo::Pencil { r, same: false }, shape, p, None).ok().map(|x| x.0);
-        let heffte = measure_once(Algo::Heffte, shape, p, None).ok().map(|x| x.0);
-        let popovici = measure_once(Algo::Popovici, shape, p, None).ok().map(|x| x.0);
+        let pencil = measure_once(Algorithm::Pencil { r, out: OutputDist::Different }, shape, p, None)
+            .ok()
+            .map(|x| x.0);
+        let heffte = measure_once(Algorithm::Heffte, shape, p, None).ok().map(|x| x.0);
+        let popovici = measure_once(Algorithm::Popovici, shape, p, None).ok().map(|x| x.0);
         t.row(vec![
             p.to_string(),
             fmt_secs(fftu_wall),

@@ -2,12 +2,29 @@
 //!
 //! Python runs once at build time (`make artifacts`); this module makes
 //! the resulting HLO-text modules executable from the Rust request path.
+//!
+//! The PJRT engine itself needs the external `xla` and `anyhow` crates,
+//! which the offline build does not carry: it is gated behind the
+//! `xla-pjrt` cargo feature. Without the feature, [`XlaFftu`] is a stub
+//! whose `load` reports the engine as unavailable, so every call site
+//! (CLI selftest, integration tests) degrades to its skip path instead
+//! of failing to compile.
 
-pub mod engine;
 pub mod json;
 pub mod manifest;
+
+#[cfg(feature = "xla-pjrt")]
+pub mod engine;
+#[cfg(feature = "xla-pjrt")]
 pub mod xla_fftu;
 
+#[cfg(not(feature = "xla-pjrt"))]
+pub mod unavailable;
+
+#[cfg(feature = "xla-pjrt")]
 pub use engine::{join_planes, split_planes, XlaEngine, XlaModule};
 pub use manifest::{Manifest, ModuleEntry, ModuleKind};
+#[cfg(not(feature = "xla-pjrt"))]
+pub use unavailable::XlaFftu;
+#[cfg(feature = "xla-pjrt")]
 pub use xla_fftu::XlaFftu;

@@ -3,7 +3,7 @@
 //! offline into `rust/tests/data/` — an oracle fully independent of
 //! both this crate's code and the JAX artifact path.
 
-use fftu::fft::{fftn_inplace, rel_l2_error, C64};
+use fftu::fft::{fftn_inplace, ifftn_normalized_inplace, rel_l2_error, C64};
 use fftu::fftu::{choose_grid, fftu_global};
 use fftu::Direction;
 
@@ -65,9 +65,7 @@ fn inverse_recovers_numpy_input() {
     for name in CASES {
         let g = load(name);
         let mut back = g.output.clone();
-        fftn_inplace(&mut back, &g.shape, Direction::Inverse);
-        let n = g.input.len() as f64;
-        let back: Vec<C64> = back.iter().map(|v| *v / n).collect();
+        ifftn_normalized_inplace(&mut back, &g.shape);
         let err = rel_l2_error(&back, &g.input);
         assert!(err < 1e-12, "{name}: inverse err {err}");
     }

@@ -5,6 +5,7 @@
 
 use std::sync::Arc;
 
+use fftu::api::{Algorithm, FftError, Normalization, Transform};
 use fftu::baselines::{heffte_global, pencil_global, popovici_global, slab_global, OutputDist};
 use fftu::bsp::run_spmd;
 use fftu::fft::{dft_nd, fftn_inplace, max_abs_diff, rel_l2_error, C64, Planner};
@@ -78,17 +79,29 @@ fn prop_shift_theorem_through_fftu() {
 /// Forward on one grid, inverse on a DIFFERENT grid: possible because
 /// input and output distributions are both cyclic — but only if the
 /// grids match shapes. Gather/rescatter in between models an application
-/// checkpointing to disk between phases.
+/// checkpointing to disk between phases. Scaling comes from the
+/// descriptor's `Normalization`, not a caller-side divide.
 #[test]
 fn regrid_between_forward_and_inverse() {
     let shape = [16usize, 16];
     let n = 256;
     let mut rng = Rng::new(0x9E6);
     let x = rand_global(n, &mut rng);
-    let (y, _) = fftu_global(&shape, &[4, 2], &x, Direction::Forward).unwrap();
-    let (z, _) = fftu_global(&shape, &[2, 4], &y, Direction::Inverse).unwrap();
-    let z: Vec<C64> = z.iter().map(|v| *v / n as f64).collect();
-    assert!(max_abs_diff(&z, &x) < 1e-9);
+    let y = Transform::new(&shape)
+        .grid(&[4, 2])
+        .plan(Algorithm::Fftu)
+        .unwrap()
+        .execute(&x)
+        .unwrap();
+    let z = Transform::new(&shape)
+        .grid(&[2, 4])
+        .inverse()
+        .normalization(Normalization::ByN)
+        .plan(Algorithm::Fftu)
+        .unwrap()
+        .execute(&y.output)
+        .unwrap();
+    assert!(max_abs_diff(&z.output, &x) < 1e-9);
 }
 
 /// Workers survive hundreds of transforms without drift (the wavepacket
@@ -118,18 +131,31 @@ fn worker_reuse_is_stable() {
     assert_eq!(outcome.report.comm_supersteps(), 2 * rounds);
 }
 
-/// Misconfiguration must be a clean Err, never a panic or wrong answer.
+/// Misconfiguration must be a clean *typed* Err, never a panic, a
+/// string, or a wrong answer.
 #[test]
 fn failure_injection_bad_configs() {
     let x = vec![C64::ZERO; 64];
     // p_l^2 does not divide n_l.
-    assert!(fftu_global(&[8, 8], &[4, 1], &x, Direction::Forward).is_err());
+    assert!(matches!(
+        fftu_global(&[8, 8], &[4, 1], &x, Direction::Forward),
+        Err(FftError::AxisConstraint { requires: "p_l^2 | n_l", .. })
+    ));
     // Rank mismatch.
-    assert!(fftu_global(&[8, 8], &[2], &x, Direction::Forward).is_err());
+    assert!(matches!(
+        fftu_global(&[8, 8], &[2], &x, Direction::Forward),
+        Err(FftError::RankMismatch { shape: 2, grid: 1 })
+    ));
     // Slab beyond p_max.
-    assert!(slab_global(&[8, 8], 16, &x, Direction::Forward, OutputDist::Same).is_err());
+    assert!(matches!(
+        slab_global(&[8, 8], 16, &x, Direction::Forward, OutputDist::Same),
+        Err(FftError::TooManyProcs { algo: "slab", .. })
+    ));
     // Pencil with r >= d.
-    assert!(pencil_global(&[8, 8], 2, 4, &x, Direction::Forward, OutputDist::Same).is_err());
+    assert!(matches!(
+        pencil_global(&[8, 8], 2, 4, &x, Direction::Forward, OutputDist::Same),
+        Err(FftError::BadDescriptor { .. })
+    ));
     // choose_grid beyond sqrt(N).
     assert!(choose_grid(&[8, 8], 64).is_none());
 }
@@ -158,7 +184,7 @@ fn prop_fftu_vs_naive_dft() {
 }
 
 /// The XLA-artifact engine agrees with the native engine end to end
-/// (skipped when artifacts are absent).
+/// (skipped when artifacts are absent or the build has no PJRT engine).
 #[test]
 fn xla_and_native_engines_agree() {
     let dir = std::path::Path::new("artifacts");
@@ -172,7 +198,13 @@ fn xla_and_native_engines_agree() {
     let mut rng = Rng::new(0xCAFE);
     let x = rand_global(n, &mut rng);
     let (native, _) = fftu_global(&shape, &grid, &x, Direction::Forward).unwrap();
-    let xla = fftu::runtime::XlaFftu::load(dir, &shape, &grid).unwrap();
+    let xla = match fftu::runtime::XlaFftu::load(dir, &shape, &grid) {
+        Ok(xla) => xla,
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            return;
+        }
+    };
     let via_xla = xla.execute_global(&x, Direction::Forward).unwrap();
     let err = rel_l2_error(&via_xla, &native);
     assert!(err < 1e-4, "engines disagree: {err}");
