@@ -15,6 +15,17 @@ CASES = [
     ("c3d_4x6x10", (4, 6, 10)),
 ]
 
+# Real-input cases ("r" prefix): N real inputs (one per line) followed by
+# the prod(shape[:-1]) * (shape[-1]//2 + 1) complex bins of np.fft.rfftn.
+# Last axes must be even (the packing-trick requirement). Drawn AFTER the
+# complex cases so the shared rng stream keeps the committed complex
+# goldens bit-identical.
+REAL_CASES = [
+    ("r1d_16", (16,)),
+    ("r2d_8x12", (8, 12)),
+    ("r3d_4x6x10", (4, 6, 10)),
+]
+
 
 def main() -> None:
     rng = np.random.default_rng(0x601D)
@@ -26,6 +37,18 @@ def main() -> None:
             f.write(" ".join(map(str, shape)) + "\n")
             for v in x:
                 f.write(f"{v.real:.17e} {v.imag:.17e}\n")
+            for v in y:
+                f.write(f"{v.real:.17e} {v.imag:.17e}\n")
+        print(name)
+    for name, shape in REAL_CASES:
+        assert shape[-1] % 2 == 0, f"{name}: r2c needs an even last axis"
+        n = int(np.prod(shape))
+        x = rng.standard_normal(n)
+        y = np.fft.rfftn(x.reshape(shape)).reshape(-1)
+        with open(f"rust/tests/data/{name}.txt", "w") as f:
+            f.write(" ".join(map(str, shape)) + "\n")
+            for v in x:
+                f.write(f"{v:.17e}\n")
             for v in y:
                 f.write(f"{v.real:.17e} {v.imag:.17e}\n")
         print(name)

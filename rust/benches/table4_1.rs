@@ -11,7 +11,8 @@ fn main() {
     let machine = fitted_machine(1);
     println!("machine: {machine:?}\n");
     println!("{}", report::table_4_1_model(&machine).render());
-    println!("{}", report::comm_steps_table(&[1024, 1024, 1024], 4096).render());
+    let k = fftu::api::Kind::C2C;
+    println!("{}", report::comm_steps_table(&[1024, 1024, 1024], 4096, k).render());
     println!(
         "{}",
         report::table_executed(

@@ -7,7 +7,8 @@ fn main() {
     let machine = fitted_machine(2);
     println!("machine: {machine:?}\n");
     println!("{}", report::table_4_2_model(&machine).render());
-    println!("{}", report::comm_steps_table(&[64, 64, 64, 64, 64], 4096).render());
+    let k = fftu::api::Kind::C2C;
+    println!("{}", report::comm_steps_table(&[64, 64, 64, 64, 64], 4096, k).render());
     println!(
         "{}",
         report::table_executed(

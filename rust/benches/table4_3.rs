@@ -10,7 +10,7 @@ fn main() {
     let machine = fitted_machine(3);
     println!("machine: {machine:?}\n");
     println!("{}", report::table_4_3_model(&machine).render());
-    println!("{}", report::comm_steps_table(&[1 << 24, 64], 4096).render());
+    println!("{}", report::comm_steps_table(&[1 << 24, 64], 4096, fftu::api::Kind::C2C).render());
     println!(
         "{}",
         report::table_executed(

@@ -10,7 +10,11 @@
 //!
 //! Thread-safe: one `PlanCache` (e.g. in a `static` or an application
 //! context) can serve concurrent request threads; plans themselves are
-//! immutable and `Send + Sync`.
+//! immutable and `Send + Sync`. Concurrent first requests for the same
+//! descriptor may plan more than once, but every caller receives the
+//! single cache-resident `Arc` (losers of the planning race discard
+//! their copy), so pointer identity holds for identical descriptors —
+//! the concurrency suite in `rust/tests/invariants.rs` hammers this.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -74,14 +78,23 @@ impl PlanCache {
         let planned = plan(algo, t)?;
         let mut st = self.state.lock().unwrap();
         st.misses += 1;
-        if !st.map.contains_key(&key) {
-            if st.map.len() >= self.capacity {
-                let oldest = st.order.remove(0);
-                st.map.remove(&oldest);
+        if let Some(existing) = st.map.get(&key).cloned() {
+            // Lost a planning race: another thread inserted this
+            // descriptor while we were planning. Return the resident
+            // plan (discarding ours) so identical descriptors are always
+            // pointer-identical, no matter how they interleave.
+            if let Some(pos) = st.order.iter().position(|k| *k == key) {
+                st.order.remove(pos);
             }
-            st.map.insert(key.clone(), planned.clone());
             st.order.push(key);
+            return Ok(existing);
         }
+        if st.map.len() >= self.capacity {
+            let oldest = st.order.remove(0);
+            st.map.remove(&oldest);
+        }
+        st.map.insert(key.clone(), planned.clone());
+        st.order.push(key);
         Ok(planned)
     }
 

@@ -28,6 +28,10 @@ pub enum FftError {
     DistMismatch { reason: &'static str },
     /// An input buffer does not match the descriptor's element count.
     InputLength { expected: usize, got: usize },
+    /// An execute entry point was called on a plan of a different
+    /// [`crate::api::Kind`] (e.g. `execute` on an r2c plan, whose real
+    /// input goes through `execute_r2c`).
+    KindMismatch { kind: &'static str, call: &'static str, expected: &'static str },
     /// The transform descriptor itself is malformed (empty shape, zero
     /// batch, bad decomposition rank, ...).
     BadDescriptor { reason: String },
@@ -56,6 +60,9 @@ impl fmt::Display for FftError {
             }
             FftError::InputLength { expected, got } => {
                 write!(f, "input length {got} does not match descriptor ({expected} elements)")
+            }
+            FftError::KindMismatch { kind, call, expected } => {
+                write!(f, "`{call}` serves {expected} transforms, but this plan's kind is {kind}")
             }
             FftError::BadDescriptor { reason } => write!(f, "bad transform descriptor: {reason}"),
             FftError::Unsupported { reason } => write!(f, "unsupported: {reason}"),

@@ -5,7 +5,9 @@
 //!
 //! - [`Transform`] — the descriptor: shape, processor grid (explicit or
 //!   [`Grid::Auto`] via `choose_grid`), [`Direction`], [`Normalization`],
-//!   and batch count;
+//!   batch count, and [`Kind`] (complex c2c, or real r2c/c2r via the
+//!   packing trick — the complex core runs on the half shape, halving
+//!   flops and communication volume);
 //! - [`Algorithm`] — FFTU or any of the four published baselines
 //!   (slab/FFTW, pencil/PFFT, heFFTe, Popovici);
 //! - [`plan`] — plan-time validation returning a reusable
@@ -48,7 +50,7 @@ pub mod transform;
 
 pub use cache::PlanCache;
 pub use error::FftError;
-pub use plan::{plan, Algorithm, DistFft, Execution, PlannedFft};
-pub use transform::{Grid, Normalization, Transform};
+pub use plan::{plan, Algorithm, DistFft, Execution, PlannedFft, RealExecution};
+pub use transform::{Grid, Kind, Normalization, Transform};
 
 pub use crate::fft::Direction;

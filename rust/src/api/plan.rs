@@ -12,11 +12,14 @@ use std::sync::Arc;
 
 use crate::baselines::{HefftePlan, OutputDist, PencilPlan, PopoviciPlan, SlabPlan};
 use crate::bsp::CostReport;
+use crate::fft::realnd::{
+    pack_pairs, retangle_half_spectrum, unpack_pairs, untangle_half_spectrum, wrap_flops,
+};
 use crate::fft::{C64, Planner};
 use crate::fftu::{choose_grid, fftu_execute_batch, fftu_pmax, FftuPlan};
 
 use super::error::FftError;
-use super::transform::{Grid, Transform};
+use super::transform::{Grid, Kind, Transform};
 
 /// Which distributed-FFT algorithm executes a [`Transform`].
 ///
@@ -99,6 +102,14 @@ pub struct Execution {
     pub report: CostReport,
 }
 
+/// Result of a complex-to-real execution ([`PlannedFft::execute_c2r`]):
+/// real output array(s), back to back for a batch, plus the ledger.
+#[derive(Debug)]
+pub struct RealExecution {
+    pub output: Vec<f64>,
+    pub report: CostReport,
+}
+
 /// The unified plan/execute interface every algorithm implements (via
 /// [`PlannedFft`]). Plans are immutable and `Send + Sync`: share one
 /// behind an `Arc` and execute from as many threads as you like.
@@ -111,12 +122,22 @@ pub trait DistFft: Send + Sync {
     fn procs(&self) -> usize;
     /// The resolved per-axis cyclic grid (FFTU/Popovici), if any.
     fn grid(&self) -> Option<&[usize]>;
-    /// Execute ONE transform (`shape.product()` elements, regardless of
-    /// the descriptor's batch count).
+    /// Execute ONE C2C transform (`shape.product()` elements, regardless
+    /// of the descriptor's batch count).
     fn execute(&self, input: &[C64]) -> Result<Execution, FftError>;
-    /// Execute the descriptor's `batch` transforms from one contiguous
-    /// buffer, amortizing per-rank state across the batch.
+    /// Execute the descriptor's `batch` C2C transforms from one
+    /// contiguous buffer, amortizing per-rank state across the batch.
     fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError>;
+    /// Execute ONE R2C transform: `total()` reals in, `spectrum_total()`
+    /// Hermitian half-spectrum bins out.
+    fn execute_r2c(&self, input: &[f64]) -> Result<Execution, FftError>;
+    /// Execute the descriptor's `batch` R2C transforms back to back.
+    fn execute_r2c_batch(&self, input: &[f64]) -> Result<Execution, FftError>;
+    /// Execute ONE C2R transform: `spectrum_total()` half-spectrum bins
+    /// in, `total()` reals out.
+    fn execute_c2r(&self, input: &[C64]) -> Result<RealExecution, FftError>;
+    /// Execute the descriptor's `batch` C2R transforms back to back.
+    fn execute_c2r_batch(&self, input: &[C64]) -> Result<RealExecution, FftError>;
 }
 
 enum Inner {
@@ -125,6 +146,10 @@ enum Inner {
     Pencil(PencilPlan),
     Heffte(HefftePlan),
     Popovici(PopoviciPlan),
+    /// R2C/C2R: the complex core planned on the packed half shape;
+    /// pack/untangle wrap around it at execute time. Works for every
+    /// algorithm, so all five get real paths for free.
+    Real(Arc<PlannedFft>),
 }
 
 /// A validated, reusable plan binding a [`Transform`] to an
@@ -150,6 +175,15 @@ fn resolve_cyclic_grid(t: &Transform) -> Result<Vec<usize>, FftError> {
 /// Validate `t` and build a reusable plan for `algo`.
 pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError> {
     t.validate()?;
+    if t.kind != Kind::C2C {
+        // Real kinds: plan the complex core on the packed half shape
+        // (this is where the grid resolves and the per-axis divisibility
+        // rules apply — against n_d/2 on the last axis).
+        let inner = plan(algo, &t.complex_core())?;
+        let grid = inner.grid.clone();
+        let p = inner.p;
+        return Ok(Arc::new(PlannedFft { algo, t: t.clone(), grid, p, inner: Inner::Real(inner) }));
+    }
     let p = t.grid.procs();
     let (inner, grid, p) = match algo {
         Algorithm::Fftu => {
@@ -191,14 +225,55 @@ impl PlannedFft {
         self.grid.as_deref()
     }
 
-    /// Execute ONE transform; see [`DistFft::execute`].
+    /// Execute ONE C2C transform; see [`DistFft::execute`].
     pub fn execute(&self, input: &[C64]) -> Result<Execution, FftError> {
+        self.ensure_kind(Kind::C2C, "execute")?;
         self.run(input, 1)
     }
 
-    /// Execute the descriptor's batch; see [`DistFft::execute_batch`].
+    /// Execute the descriptor's C2C batch; see [`DistFft::execute_batch`].
     pub fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError> {
+        self.ensure_kind(Kind::C2C, "execute_batch")?;
         self.run(input, self.t.batch)
+    }
+
+    /// Execute ONE R2C transform; see [`DistFft::execute_r2c`].
+    pub fn execute_r2c(&self, input: &[f64]) -> Result<Execution, FftError> {
+        self.run_r2c(input, 1, "execute_r2c")
+    }
+
+    /// Execute the descriptor's R2C batch; see [`DistFft::execute_r2c_batch`].
+    pub fn execute_r2c_batch(&self, input: &[f64]) -> Result<Execution, FftError> {
+        self.run_r2c(input, self.t.batch, "execute_r2c_batch")
+    }
+
+    /// Execute ONE C2R transform; see [`DistFft::execute_c2r`].
+    pub fn execute_c2r(&self, input: &[C64]) -> Result<RealExecution, FftError> {
+        self.run_c2r(input, 1, "execute_c2r")
+    }
+
+    /// Execute the descriptor's C2R batch; see [`DistFft::execute_c2r_batch`].
+    pub fn execute_c2r_batch(&self, input: &[C64]) -> Result<RealExecution, FftError> {
+        self.run_c2r(input, self.t.batch, "execute_c2r_batch")
+    }
+
+    fn ensure_kind(&self, expected: Kind, call: &'static str) -> Result<(), FftError> {
+        if self.t.kind != expected {
+            return Err(FftError::KindMismatch {
+                kind: self.t.kind.name(),
+                call,
+                expected: expected.name(),
+            });
+        }
+        Ok(())
+    }
+
+    /// The planned complex core of a real-kind plan.
+    fn real_inner(&self) -> &Arc<PlannedFft> {
+        match &self.inner {
+            Inner::Real(inner) => inner,
+            _ => unreachable!("real-kind plans always hold Inner::Real"),
+        }
     }
 
     fn run(&self, input: &[C64], batch: usize) -> Result<Execution, FftError> {
@@ -214,6 +289,7 @@ impl PlannedFft {
             Inner::Pencil(plan) => plan.execute_batch_global(&inputs, dir),
             Inner::Heffte(plan) => plan.execute_batch_global(&inputs, dir),
             Inner::Popovici(plan) => plan.execute_batch_global(&inputs, dir),
+            Inner::Real(_) => unreachable!("real kinds dispatch through run_r2c/run_c2r"),
         };
         let scale = self.t.normalization.scale(n);
         if scale != 1.0 {
@@ -228,6 +304,75 @@ impl PlannedFft {
             flat.extend(out);
         }
         Ok(Execution { output: flat, report })
+    }
+
+    /// R2C: pack adjacent last-axis pairs (local), run the complex core
+    /// on the half shape (FFTU: still ONE all-to-all over half the
+    /// volume), untangle by conjugate symmetry (local), normalize
+    /// against the real total `N`.
+    fn run_r2c(
+        &self,
+        input: &[f64],
+        batch: usize,
+        call: &'static str,
+    ) -> Result<Execution, FftError> {
+        self.ensure_kind(Kind::R2C, call)?;
+        let n = self.t.total();
+        if input.len() != batch * n {
+            return Err(FftError::InputLength { expected: batch * n, got: input.len() });
+        }
+        // Row-major + even last axis: items stay pair-aligned, so the
+        // whole batch packs in one pass.
+        let packed = pack_pairs(input);
+        let half = self.real_inner().run(&packed, batch)?;
+        let nh = n / 2;
+        let nspec = self.t.spectrum_total();
+        let scale = self.t.normalization.scale(n);
+        let mut output = Vec::with_capacity(batch * nspec);
+        for item in half.output.chunks(nh) {
+            let mut spec = untangle_half_spectrum(item, &self.t.shape);
+            if scale != 1.0 {
+                for v in spec.iter_mut() {
+                    *v = v.scale(scale);
+                }
+            }
+            output.extend(spec);
+        }
+        let mut report = half.report;
+        report.push_comp("r2c-untangle", batch as f64 * wrap_flops(&self.t.shape) / self.p as f64);
+        Ok(Execution { output, report })
+    }
+
+    /// C2R: retangle the Hermitian half-spectrum (local), run the inverse
+    /// complex core on the half shape, unpack pairs. The raw (`None`)
+    /// result is `N x` — the same unnormalized convention as C2C, so
+    /// [`super::Normalization::ByN`] gives the exact inverse of an
+    /// unnormalized R2C.
+    fn run_c2r(
+        &self,
+        input: &[C64],
+        batch: usize,
+        call: &'static str,
+    ) -> Result<RealExecution, FftError> {
+        self.ensure_kind(Kind::C2R, call)?;
+        let n = self.t.total();
+        let nh = n / 2;
+        let nspec = self.t.spectrum_total();
+        if input.len() != batch * nspec {
+            return Err(FftError::InputLength { expected: batch * nspec, got: input.len() });
+        }
+        let mut packed = Vec::with_capacity(batch * nh);
+        for item in input.chunks(nspec) {
+            packed.extend(retangle_half_spectrum(item, &self.t.shape));
+        }
+        let half = self.real_inner().run(&packed, batch)?;
+        // The unnormalized inverse over N/2 points yields (N/2) z;
+        // doubling makes the raw c2r the true N-scaled adjoint.
+        let scale = 2.0 * self.t.normalization.scale(n);
+        let output = unpack_pairs(&half.output, scale);
+        let mut report = half.report;
+        report.push_comp("c2r-retangle", batch as f64 * wrap_flops(&self.t.shape) / self.p as f64);
+        Ok(RealExecution { output, report })
     }
 }
 
@@ -254,6 +399,22 @@ impl DistFft for PlannedFft {
 
     fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError> {
         PlannedFft::execute_batch(self, input)
+    }
+
+    fn execute_r2c(&self, input: &[f64]) -> Result<Execution, FftError> {
+        PlannedFft::execute_r2c(self, input)
+    }
+
+    fn execute_r2c_batch(&self, input: &[f64]) -> Result<Execution, FftError> {
+        PlannedFft::execute_r2c_batch(self, input)
+    }
+
+    fn execute_c2r(&self, input: &[C64]) -> Result<RealExecution, FftError> {
+        PlannedFft::execute_c2r(self, input)
+    }
+
+    fn execute_c2r_batch(&self, input: &[C64]) -> Result<RealExecution, FftError> {
+        PlannedFft::execute_c2r_batch(self, input)
     }
 }
 
@@ -301,6 +462,83 @@ mod tests {
         assert_eq!(
             batched.execute_batch(&[C64::ZERO; 64]).unwrap_err(),
             FftError::InputLength { expected: 192, got: 64 }
+        );
+    }
+
+    #[test]
+    fn r2c_plan_resolves_grid_on_the_half_shape() {
+        let t = Transform::new(&[16, 16]).procs(4).r2c();
+        let planned = plan(Algorithm::Fftu, &t).unwrap();
+        // Grid lives on the packed half shape [16, 8].
+        let grid = planned.grid().unwrap();
+        assert_eq!(grid.iter().product::<usize>(), 4);
+        assert_eq!(planned.procs(), 4);
+        for (l, &q) in grid.iter().enumerate() {
+            let half = [16usize, 8];
+            assert_eq!(half[l] % (q * q), 0, "grid {grid:?}");
+        }
+    }
+
+    #[test]
+    fn r2c_matches_sequential_rfftn_and_keeps_one_alltoall() {
+        use crate::fft::realnd::rfftn;
+        let shape = [8usize, 16];
+        let n = 128;
+        let mut rng = Rng::new(0xAC);
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let want = rfftn(&x, &shape);
+        let planned = plan(Algorithm::Fftu, &Transform::new(&shape).procs(4).r2c()).unwrap();
+        let got = planned.execute_r2c(&x).unwrap();
+        assert_eq!(got.output.len(), 8 * 9);
+        assert!(rel_l2_error(&got.output, &want) < 1e-10);
+        assert_eq!(got.report.comm_supersteps(), 1);
+    }
+
+    #[test]
+    fn c2r_with_by_n_inverts_unnormalized_r2c() {
+        use crate::api::Normalization;
+        let shape = [4usize, 6, 8];
+        let n = 192;
+        let mut rng = Rng::new(0xAD);
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).procs(2).r2c()).unwrap();
+        let spec = fwd.execute_r2c(&x).unwrap();
+        let inv = plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape).procs(2).c2r().normalization(Normalization::ByN),
+        )
+        .unwrap();
+        let back = inv.execute_c2r(&spec.output).unwrap();
+        let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10, "roundtrip err {err}");
+    }
+
+    #[test]
+    fn kind_mismatch_is_a_typed_error() {
+        let r2c = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).r2c()).unwrap();
+        assert_eq!(
+            r2c.execute(&[C64::ZERO; 64]).unwrap_err(),
+            FftError::KindMismatch { kind: "r2c", call: "execute", expected: "c2c" }
+        );
+        let c2c = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2)).unwrap();
+        assert_eq!(
+            c2c.execute_r2c(&[0.0; 64]).unwrap_err(),
+            FftError::KindMismatch { kind: "c2c", call: "execute_r2c", expected: "r2c" }
+        );
+        assert_eq!(
+            c2c.execute_c2r(&[C64::ZERO; 64]).unwrap_err(),
+            FftError::KindMismatch { kind: "c2c", call: "execute_c2r", expected: "c2r" }
+        );
+        // Real-kind input lengths are checked against the real/spectrum
+        // totals.
+        assert_eq!(
+            r2c.execute_r2c(&[0.0; 10]).unwrap_err(),
+            FftError::InputLength { expected: 64, got: 10 }
+        );
+        let c2r = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).c2r()).unwrap();
+        assert_eq!(
+            c2r.execute_c2r(&[C64::ZERO; 10]).unwrap_err(),
+            FftError::InputLength { expected: 8 * 5, got: 10 }
         );
     }
 

@@ -8,10 +8,53 @@
 
 use std::sync::Arc;
 
+use crate::fft::realnd;
 use crate::fft::Direction;
 
 use super::error::FftError;
 use super::plan::{plan, Algorithm, PlannedFft};
+
+/// What the transform's input and output are made of.
+///
+/// - [`Kind::C2C`]: complex in, complex out — the default.
+/// - [`Kind::R2C`]: real in, Hermitian half-spectrum out (shape
+///   `[..., n_d/2 + 1]`, numpy `rfftn` layout). Forward-only; requires
+///   an even last axis. Executed via the packing trick: the complex core
+///   runs on the *half shape* `[..., n_d/2]`, so flops and communication
+///   volume roughly halve (FFTU keeps its single all-to-all).
+/// - [`Kind::C2R`]: Hermitian half-spectrum in, real out — the adjoint
+///   of R2C. Inverse-only; with [`Normalization::ByN`] it is the exact
+///   inverse of an unnormalized R2C.
+///
+/// Real-kind plans execute through [`super::PlannedFft::execute_r2c`] /
+/// [`super::PlannedFft::execute_c2r`]; calling the complex entry points
+/// on them returns [`FftError::KindMismatch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    C2C,
+    R2C,
+    C2R,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::C2C => "c2c",
+            Kind::R2C => "r2c",
+            Kind::C2R => "c2r",
+        }
+    }
+
+    /// Parse a CLI-style name.
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "c2c" => Some(Kind::C2C),
+            "r2c" => Some(Kind::R2C),
+            "c2r" => Some(Kind::C2R),
+            _ => None,
+        }
+    }
+}
 
 /// Output scaling, applied uniformly for every algorithm and direction.
 ///
@@ -94,10 +137,15 @@ pub struct Transform {
     /// Number of independent transforms per [`super::DistFft::execute_batch`]
     /// call; the input buffer holds `batch` arrays back to back.
     pub batch: usize,
+    /// Input/output domain: complex-to-complex (default), real-to-complex,
+    /// or complex-to-real. For the real kinds, `shape` is the *real*
+    /// array shape and the grid applies to the packed half shape
+    /// `[..., n_d/2]` the complex core runs on.
+    pub kind: Kind,
 }
 
 impl Transform {
-    /// A forward, unnormalized, single transform on one processor.
+    /// A forward, unnormalized, single complex transform on one processor.
     pub fn new(shape: &[usize]) -> Self {
         Transform {
             shape: shape.to_vec(),
@@ -105,6 +153,7 @@ impl Transform {
             direction: Direction::Forward,
             normalization: Normalization::None,
             batch: 1,
+            kind: Kind::C2C,
         }
     }
 
@@ -143,9 +192,63 @@ impl Transform {
         self
     }
 
-    /// Elements per transform.
+    /// Set the transform [`Kind`]. The real kinds fix the direction
+    /// (R2C is forward-only, C2R inverse-only), overriding any earlier
+    /// `direction`/`forward`/`inverse` call.
+    pub fn kind(mut self, kind: Kind) -> Self {
+        self.kind = kind;
+        match kind {
+            Kind::R2C => self.direction = Direction::Forward,
+            Kind::C2R => self.direction = Direction::Inverse,
+            Kind::C2C => {}
+        }
+        self
+    }
+
+    /// Shorthand for [`Transform::kind`]`(Kind::R2C)`.
+    pub fn r2c(self) -> Self {
+        self.kind(Kind::R2C)
+    }
+
+    /// Shorthand for [`Transform::kind`]`(Kind::C2R)`.
+    pub fn c2r(self) -> Self {
+        self.kind(Kind::C2R)
+    }
+
+    /// Elements per transform in the *real* domain: the product of
+    /// `shape`. For C2C this is also the complex element count.
     pub fn total(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    /// Shape of the spectral-domain buffer: `shape` for C2C, the
+    /// Hermitian half-spectrum `[..., n_d/2 + 1]` for R2C/C2R.
+    pub fn spectrum_shape(&self) -> Vec<usize> {
+        match self.kind {
+            Kind::C2C => self.shape.clone(),
+            Kind::R2C | Kind::C2R => realnd::spectrum_shape(&self.shape),
+        }
+    }
+
+    /// Complex elements per transform in the spectral domain.
+    pub fn spectrum_total(&self) -> usize {
+        self.spectrum_shape().iter().product()
+    }
+
+    /// The C2C descriptor of the packed complex core a real-kind
+    /// transform runs through: half shape `[..., n_d/2]`, same grid
+    /// request and batch, unnormalized (the wrapper applies the
+    /// descriptor's normalization once, against the real total `N`).
+    pub(crate) fn complex_core(&self) -> Transform {
+        debug_assert!(self.kind != Kind::C2C);
+        Transform {
+            shape: realnd::half_shape(&self.shape),
+            grid: self.grid.clone(),
+            direction: self.direction,
+            normalization: Normalization::None,
+            batch: self.batch,
+            kind: Kind::C2C,
+        }
     }
 
     /// Structural validation shared by every algorithm (the per-axis
@@ -159,6 +262,24 @@ impl Transform {
         }
         if self.batch == 0 {
             return Err(FftError::BadDescriptor { reason: "batch must be >= 1".into() });
+        }
+        if self.kind != Kind::C2C {
+            realnd::validate_even_last_axis(&self.shape)?;
+            let required = match self.kind {
+                Kind::R2C => Direction::Forward,
+                Kind::C2R => Direction::Inverse,
+                Kind::C2C => unreachable!(),
+            };
+            if self.direction != required {
+                return Err(FftError::BadDescriptor {
+                    reason: format!(
+                        "{} transforms are {:?}-only (got {:?}); C2R is the inverse path",
+                        self.kind.name(),
+                        required,
+                        self.direction
+                    ),
+                });
+            }
         }
         match &self.grid {
             Grid::Auto { p: 0 } => {
@@ -216,6 +337,45 @@ mod tests {
             Err(FftError::RankMismatch { shape: 2, grid: 1 })
         ));
         assert!(Transform::new(&[8, 8]).grid(&[2, 0]).validate().is_err());
+    }
+
+    #[test]
+    fn real_kinds_fix_direction_and_shapes() {
+        let t = Transform::new(&[8, 12]).r2c();
+        assert_eq!(t.kind, Kind::R2C);
+        assert_eq!(t.direction, Direction::Forward);
+        assert_eq!(t.spectrum_shape(), vec![8, 7]);
+        assert_eq!(t.spectrum_total(), 56);
+        assert!(t.validate().is_ok());
+        let core = t.complex_core();
+        assert_eq!(core.shape, vec![8, 6]);
+        assert_eq!(core.kind, Kind::C2C);
+        assert_eq!(core.normalization, Normalization::None);
+
+        let t = Transform::new(&[8, 12]).c2r();
+        assert_eq!(t.direction, Direction::Inverse);
+        assert!(t.validate().is_ok());
+        // kind() overrides an earlier direction call, but a later
+        // explicit direction that contradicts the kind is rejected.
+        assert!(Transform::new(&[8, 12]).inverse().r2c().validate().is_ok());
+        assert!(Transform::new(&[8, 12]).r2c().inverse().validate().is_err());
+        assert!(Transform::new(&[8, 12]).c2r().forward().validate().is_err());
+        // Odd last axis cannot pack.
+        assert!(matches!(
+            Transform::new(&[8, 9]).r2c().validate(),
+            Err(FftError::AxisConstraint { axis: 1, n: 9, .. })
+        ));
+        // C2C is unaffected.
+        assert_eq!(Transform::new(&[8, 9]).spectrum_shape(), vec![8, 9]);
+        assert!(Transform::new(&[8, 9]).validate().is_ok());
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in [Kind::C2C, Kind::R2C, Kind::C2R] {
+            assert_eq!(Kind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(Kind::parse("dct"), None);
     }
 
     #[test]

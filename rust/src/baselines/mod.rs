@@ -24,9 +24,11 @@ pub mod popovici;
 pub mod slab;
 
 pub use heffte::{heffte_global, heffte_pmax, heffte_schedule, HefftePlan};
-pub use pencil::{pencil_global, pencil_pmax, pencil_schedule, pfft_best_pmax, PencilPlan};
+pub use pencil::{
+    pencil_global, pencil_pmax, pencil_r2c_global, pencil_schedule, pfft_best_pmax, PencilPlan,
+};
 pub use popovici::{popovici_global, popovici_pmax, PopoviciPlan};
-pub use slab::{slab_dists, slab_global, slab_pmax, SlabPlan};
+pub use slab::{slab_dists, slab_global, slab_pmax, slab_r2c_global, SlabPlan};
 
 /// Whether the transform must end in the distribution it started in
 /// ("same", the paper's default comparison) or may end transposed

@@ -243,6 +243,27 @@ impl PencilPlan {
     }
 }
 
+/// Real-to-complex pencil transform via the packing trick: pack adjacent
+/// last-axis pairs, run the r-dimensional decomposition on the half
+/// shape `[..., n_d/2]`, untangle into the Hermitian half-spectrum
+/// (`[..., n_d/2 + 1]`, unnormalized). The PFFT-style cross-check for
+/// the distributed r2c conformance suite.
+pub fn pencil_r2c_global(
+    shape: &[usize],
+    r: usize,
+    p: usize,
+    real: &[f64],
+    out: OutputDist,
+) -> Result<(Vec<C64>, CostReport), FftError> {
+    use crate::fft::realnd::{half_shape, r2c_drive, validate_even_last_axis};
+    validate_even_last_axis(shape)?;
+    let plan = PencilPlan::new(&half_shape(shape), r, p, out)?;
+    r2c_drive(shape, p, real, |packed| {
+        let (mut outs, report) = plan.execute_batch_global(&[packed], Direction::Forward);
+        Ok((outs.pop().unwrap(), report))
+    })
+}
+
 /// One-shot convenience: plan, run once, gather.
 pub fn pencil_global(
     shape: &[usize],
@@ -330,6 +351,20 @@ mod tests {
         // r=1 is the slab bound min(n1, N/n1).
         assert_eq!(pencil_pmax(&[1024, 1024, 1024], 1), 1024);
         assert_eq!(pfft_best_pmax(&[1024, 1024, 1024]), 1 << 20);
+    }
+
+    #[test]
+    fn pencil_r2c_matches_sequential_rfftn() {
+        use crate::fft::realnd::rfftn;
+        let mut rng = Rng::new(0xEC3);
+        for (shape, r, p) in [(vec![8usize, 8, 8], 2usize, 4usize), (vec![8, 16], 1, 4)] {
+            let n: usize = shape.iter().product();
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let want = rfftn(&x, &shape);
+            let (got, _) = pencil_r2c_global(&shape, r, p, &x, OutputDist::Same).unwrap();
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 1e-10, "shape {shape:?} r={r} p={p}: err {err}");
+        }
     }
 
     #[test]

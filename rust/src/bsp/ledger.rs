@@ -134,6 +134,22 @@ impl CostReport {
         CostReport { supersteps }
     }
 
+    /// Append a computation superstep recorded *outside* `run_spmd` —
+    /// used by facade-level wrapper passes (the r2c untangle / c2r
+    /// retangle) that perform a per-rank share of work around the SPMD
+    /// section. `w_max` follows the ledger's convention: the maximum
+    /// per-processor flop count of the pass.
+    pub fn push_comp(&mut self, label: &'static str, w_max: f64) {
+        self.supersteps.push(SuperstepCost {
+            kind: SuperstepKind::Computation,
+            label,
+            w_max,
+            h_max: 0,
+            mem_max: 0,
+            words_total: 0,
+        });
+    }
+
     /// Number of communication supersteps (the paper's headline metric:
     /// FFTU has exactly one).
     pub fn comm_supersteps(&self) -> usize {
@@ -188,6 +204,17 @@ mod tests {
         assert_eq!(report.supersteps[0].w_max, 100.0);
         assert_eq!(report.supersteps[1].h_max, 60);
         assert_eq!(report.comm_supersteps(), 1);
+    }
+
+    #[test]
+    fn push_comp_appends_computation_only() {
+        let mut report = CostReport::from_procs(&sample_procs());
+        let comm_before = report.comm_supersteps();
+        let w_before = report.total_w();
+        report.push_comp("r2c-untangle", 64.0);
+        assert_eq!(report.comm_supersteps(), comm_before);
+        assert_eq!(report.total_w(), w_before + 64.0);
+        assert_eq!(report.supersteps.last().unwrap().h_max, 0);
     }
 
     #[test]

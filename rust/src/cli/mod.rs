@@ -6,9 +6,9 @@ pub mod dist_show;
 
 use std::sync::Arc;
 
-use crate::api::{Algorithm, Normalization, PlanCache, Transform};
+use crate::api::{Algorithm, Kind, Normalization, PlanCache, Transform};
 use crate::dist::{AxisDist, GridDist};
-use crate::fft::{C64, Direction, Planner};
+use crate::fft::{realnd, C64, Direction, Planner};
 use crate::fftu::{choose_grid, FftuPlan};
 use crate::report;
 use crate::testing::Rng;
@@ -28,6 +28,9 @@ COMMANDS:
                --engine native|xla local-transform engine (default native)
                --algo fftu|slab|pencil|heffte|popovici (default fftu)
                --r R               pencil decomposition rank (default min(2, d-1))
+               --kind c2c|r2c|c2r  transform kind (default c2c); r2c/c2r run
+                                   real input/output via the packing trick
+                                   (complex core on [..., n_d/2], even n_d)
                --inverse           inverse transform (1/N-normalized)
                --reps R            timed repetitions (default 3; the plan is
                                    built once and reused — plan-cache hits)
@@ -36,7 +39,7 @@ COMMANDS:
   table      regenerate a paper table: `fftu table 4.1|4.2|4.3 [--executed]`
   pmax       print the E-pmax processor-ceiling comparison
   commsteps  communication supersteps per algorithm
-               --shape ... --p P
+               --shape ... --p P [--kind c2c|r2c|c2r]
   dist       render a distribution (Figs 1.1-1.3)
                --shape ... --grid ... --kind cyclic|block|slab0|group-cyclic
   calibrate  print machine parameters (measured + snellius-like)
@@ -71,7 +74,13 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         Some("commsteps") => {
             let shape = args.get_vec("shape")?.ok_or("--shape required")?;
             let p = args.get_usize("p")?.ok_or("--p required")?;
-            println!("{}", report::comm_steps_table(&shape, p).render());
+            let kind_name = args.get("kind").unwrap_or("c2c");
+            let kind = Kind::parse(kind_name)
+                .ok_or_else(|| format!("unknown --kind {kind_name}; use c2c|r2c|c2r"))?;
+            if kind != Kind::C2C {
+                realnd::validate_even_last_axis(&shape)?;
+            }
+            println!("{}", report::comm_steps_table(&shape, p, kind).render());
             Ok(())
         }
         Some("dist") => cmd_dist(&args),
@@ -109,13 +118,19 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let dir = if inverse { Direction::Inverse } else { Direction::Forward };
     let engine = args.get("engine").or(cfg.get("engine")).unwrap_or("native");
     let algo = args.get("algo").or(cfg.get("algo")).unwrap_or("fftu");
+    let kind_name = args.get("kind").or(cfg.get("kind")).unwrap_or("c2c");
+    let kind = Kind::parse(kind_name)
+        .ok_or_else(|| format!("unknown --kind {kind_name}; use c2c|r2c|c2r"))?;
     let n: usize = shape.iter().product();
     let mut rng = Rng::new(42);
-    let global: Vec<C64> =
-        (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
 
     match (algo, engine) {
         ("fftu", "xla") => {
+            if kind != Kind::C2C {
+                return Err("--engine xla supports --kind c2c only".into());
+            }
+            let global: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
             let grid = resolve_grid(args, &cfg, &shape)?;
             let xla =
                 crate::runtime::XlaFftu::load(std::path::Path::new("artifacts"), &shape, &grid)
@@ -146,10 +161,19 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             if reps == 0 {
                 return Err("--reps must be >= 1".into());
             }
+            if kind == Kind::R2C && inverse {
+                return Err("r2c is forward-only; use --kind c2r for the inverse real path".into());
+            }
+            if kind != Kind::C2C {
+                realnd::validate_even_last_axis(&shape)?;
+            }
             let mut descriptor = Transform::new(&shape).direction(dir).batch(reps);
-            if inverse {
+            if inverse || kind == Kind::C2R {
+                // The inverse paths (c2c --inverse, c2r) print a
+                // 1/N-normalized transform.
                 descriptor = descriptor.normalization(Normalization::ByN);
             }
+            descriptor = descriptor.kind(kind);
             descriptor = match args.get_vec("grid")?.or(cfg.get_vec("grid")?) {
                 Some(grid) => descriptor.grid(&grid),
                 None => {
@@ -165,24 +189,57 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             // The paper's §4.1 methodology: time `reps` transforms with
             // per-rank state amortized. execute_batch runs the whole
             // batch in ONE SPMD session, Workers built once.
-            let batched: Vec<C64> = (0..reps).flat_map(|_| global.iter().copied()).collect();
-            let t0 = std::time::Instant::now();
-            let exec = planned.execute_batch(&batched)?;
-            let wall = t0.elapsed().as_secs_f64() / reps as f64;
+            let (wall, report, out_shape) = match kind {
+                Kind::C2C => {
+                    // The complex input is generated only on this path;
+                    // the real kinds draw their own (half the bytes).
+                    let global: Vec<C64> =
+                        (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+                    let batched: Vec<C64> =
+                        (0..reps).flat_map(|_| global.iter().copied()).collect();
+                    let t0 = std::time::Instant::now();
+                    let exec = planned.execute_batch(&batched)?;
+                    (t0.elapsed().as_secs_f64() / reps as f64, exec.report, shape.clone())
+                }
+                Kind::R2C => {
+                    let real: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+                    let batched: Vec<f64> =
+                        (0..reps).flat_map(|_| real.iter().copied()).collect();
+                    let t0 = std::time::Instant::now();
+                    let exec = planned.execute_r2c_batch(&batched)?;
+                    let spec_shape = descriptor.spectrum_shape();
+                    (t0.elapsed().as_secs_f64() / reps as f64, exec.report, spec_shape)
+                }
+                Kind::C2R => {
+                    // A genuine Hermitian half-spectrum (built outside
+                    // the clock) so the timed run is representative.
+                    let real: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+                    let spec = realnd::rfftn(&real, &shape);
+                    let batched: Vec<C64> =
+                        (0..reps).flat_map(|_| spec.iter().copied()).collect();
+                    let t0 = std::time::Instant::now();
+                    let exec = planned.execute_c2r_batch(&batched)?;
+                    (t0.elapsed().as_secs_f64() / reps as f64, exec.report, shape.clone())
+                }
+            };
+            // Model flops: the real kinds run the complex core on N/2.
+            let model_n = if kind == Kind::C2C { n as f64 } else { n as f64 / 2.0 };
             println!(
-                "{}: shape {shape:?} p={}{} dir={dir:?}\n\
+                "{} ({}): shape {shape:?} -> {out_shape:?} p={}{} dir={:?}\n\
                  wall/transform: {wall:.6} s  ({:.3} Gflop/s model rate)\n\
                  comm supersteps/transform: {}  sum h/transform = {} words\n\
                  plan cache: {} miss, {} hit ({reps} transforms in one planned batch)",
                 algorithm.name(),
+                kind.name(),
                 planned.procs(),
                 planned
                     .grid()
                     .map(|g| format!(" grid {g:?}"))
                     .unwrap_or_default(),
-                5.0 * n as f64 * (n as f64).log2() / wall / 1e9,
-                exec.report.comm_supersteps() / reps,
-                exec.report.total_h() / reps,
+                planned.transform().direction,
+                5.0 * model_n * model_n.log2() / wall / 1e9,
+                report.comm_supersteps() / reps,
+                report.total_h() / reps,
                 cache.misses(),
                 cache.hits(),
             );

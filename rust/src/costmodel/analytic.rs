@@ -56,6 +56,42 @@ pub fn fftu_report(shape: &[usize], p: usize) -> CostReport {
     }
 }
 
+/// Wrap any algorithm's analytic ledger for its *half-shape complex
+/// core* into a real-kind ledger: the packed core does all the
+/// communication — roughly half the volume of the c2c transform of
+/// `shape` — and the untangle/retangle pass appends one computation
+/// superstep of `wrap_flops(shape)/p` (the same formula and label the
+/// executed facade charges, so executed and analytic ledgers match
+/// exactly).
+pub fn real_wrap_report(
+    core: CostReport,
+    shape: &[usize],
+    p: usize,
+    kind: crate::api::Kind,
+) -> CostReport {
+    let label = match kind {
+        crate::api::Kind::C2R => "c2r-retangle",
+        _ => "r2c-untangle",
+    };
+    let mut report = core;
+    report.push_comp(label, crate::fft::realnd::wrap_flops(shape) / p as f64);
+    report
+}
+
+/// [`real_wrap_report`] for the forward (r2c) direction.
+pub fn r2c_wrap_report(core: CostReport, shape: &[usize], p: usize) -> CostReport {
+    real_wrap_report(core, shape, p, crate::api::Kind::R2C)
+}
+
+/// FFTU r2c (packing trick over the cyclic distribution): Eq. (2.12)
+/// instantiated on the packed half shape `[..., n_d/2]` — every flop and
+/// h term halves relative to [`fftu_report`] of the full shape — plus
+/// the untangle pass. Still exactly one communication superstep.
+pub fn fftu_r2c_report(shape: &[usize], p: usize) -> CostReport {
+    let half = crate::fft::realnd::half_shape(shape);
+    r2c_wrap_report(fftu_report(&half, p), shape, p)
+}
+
 /// Parallel-FFTW slab: local axes 2..d, one transpose, axis 1, optional
 /// transpose back.
 pub fn slab_report(shape: &[usize], p: usize, same: bool) -> Result<CostReport, FftError> {
@@ -247,6 +283,42 @@ mod tests {
             let analytic = popovici_report(&shape, &grid);
             assert_ledgers_match(&analytic, &executed, &format!("popovici {shape:?} {grid:?}"));
         }
+    }
+
+    #[test]
+    fn fftu_r2c_analytic_matches_executed() {
+        use crate::api::{plan, Algorithm, Transform};
+        let mut rng = Rng::new(6);
+        for (shape, p) in [(vec![16usize, 16], 4usize), (vec![8, 8, 8], 2)] {
+            let n: usize = shape.iter().product();
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let planned = plan(Algorithm::Fftu, &Transform::new(&shape).procs(p).r2c()).unwrap();
+            let executed = planned.execute_r2c(&x).unwrap().report;
+            let analytic = fftu_r2c_report(&shape, p);
+            assert_ledgers_match(&analytic, &executed, &format!("fftu r2c {shape:?} p={p}"));
+            // The untangle charge itself must agree to the last bit: both
+            // sides evaluate the same wrap_flops(shape)/p formula.
+            assert_eq!(
+                analytic.supersteps.last().unwrap().w_max,
+                executed.supersteps.last().unwrap().w_max,
+                "untangle charge {shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn r2c_halves_fftu_flops_and_h_volume() {
+        // The point of distributing the real transform: communication
+        // volume and FFT flops both drop by ~2x relative to running the
+        // complex algorithm on the full shape.
+        let shape = [1024usize, 1024, 1024];
+        let p = 4096;
+        let c2c = fftu_report(&shape, p);
+        let r2c = fftu_r2c_report(&shape, p);
+        assert_eq!(r2c.comm_supersteps(), 1);
+        assert_eq!(c2c.total_h(), 2 * r2c.total_h());
+        let ratio = r2c.total_w() / c2c.total_w();
+        assert!(ratio < 0.55, "flop ratio {ratio}");
     }
 
     #[test]

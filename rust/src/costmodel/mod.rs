@@ -4,5 +4,8 @@
 pub mod analytic;
 pub mod machine;
 
-pub use analytic::{fftu_report, heffte_report, pencil_report, popovici_report, slab_report};
+pub use analytic::{
+    fftu_r2c_report, fftu_report, heffte_report, pencil_report, popovici_report, r2c_wrap_report,
+    real_wrap_report, slab_report,
+};
 pub use machine::Machine;

@@ -12,6 +12,7 @@ pub mod dft;
 pub mod ndfft;
 pub mod plan;
 pub mod real;
+pub mod realnd;
 pub mod spectral;
 pub mod stockham;
 
@@ -20,4 +21,5 @@ pub use dft::{dft, dft_into, dft_nd, Direction};
 pub use ndfft::{fftn_inplace, ifftn_normalized_inplace, NdPlan};
 pub use plan::{fft_inplace, global_planner, ifft_normalized_inplace, Plan, PlanRigor, Planner};
 pub use real::{dct2, dct3, dst2, dst3, irfft, rfft};
+pub use realnd::{irfftn, rfftn};
 pub use spectral::{fft_omega, fftfreq, fftshift, ifftshift, radial_power_spectrum};

@@ -1,0 +1,380 @@
+//! Multidimensional real-input transforms (`rfftn`/`irfftn`) via the
+//! packing trick, plus the shared pack/untangle passes the *distributed*
+//! r2c/c2r paths are built from.
+//!
+//! The paper's §6 names the RFFT as the natural extension of the
+//! cyclic-to-cyclic algorithm. The construction used here generalizes
+//! the classic 1D packing trick ([`super::real::rfft`]) to d dimensions
+//! and to any distributed complex core:
+//!
+//! 1. **Pack**: adjacent last-axis pairs of the real array (shape
+//!    `n_1 x ... x n_d`, `n_d` even) become one complex element each —
+//!    in row-major memory this is a pure reinterpretation of adjacent
+//!    values, so it is local under any distribution of whole arrays.
+//! 2. **Complex core**: a full complex FFT of the packed array on the
+//!    *half shape* `n_1 x ... x n_{d-1} x n_d/2` — half the flops, and
+//!    for a distributed core half the communication volume (FFTU keeps
+//!    its single all-to-all).
+//! 3. **Untangle**: one O(N) pass exploiting conjugate symmetry
+//!    recovers the Hermitian half-spectrum of shape
+//!    `n_1 x ... x n_{d-1} x (n_d/2 + 1)` (numpy `rfftn` layout). The
+//!    conjugate partner of bin `(k', k_d)` is `(-k' mod n', h - k_d mod h)`
+//!    with `h = n_d/2` — the leading axes are negated too, which is the
+//!    only way the 1D identity generalizes.
+//!
+//! C2R is the exact adjoint: re-tangle the half-spectrum into the packed
+//! spectrum, run the inverse complex core, unpack pairs.
+//!
+//! Everything here is validated against `numpy.rfftn`/`irfftn` goldens
+//! (`rust/tests/golden.rs`) and the naive `dft_nd` oracle (unit tests).
+
+use crate::api::FftError;
+use crate::bsp::CostReport;
+
+use super::complex::C64;
+use super::ndfft::fftn_inplace;
+use super::Direction;
+
+/// The packed complex shape `[n_1, ..., n_{d-1}, n_d/2]` the complex
+/// core runs on.
+pub fn half_shape(shape: &[usize]) -> Vec<usize> {
+    let mut s = shape.to_vec();
+    let last = s.last_mut().expect("shape must have at least one axis");
+    *last /= 2;
+    s
+}
+
+/// The Hermitian half-spectrum shape `[n_1, ..., n_{d-1}, n_d/2 + 1]`
+/// (numpy `rfftn` convention: only the last axis is halved).
+pub fn spectrum_shape(shape: &[usize]) -> Vec<usize> {
+    let mut s = shape.to_vec();
+    let last = s.last_mut().expect("shape must have at least one axis");
+    *last = *last / 2 + 1;
+    s
+}
+
+/// Check the r2c/c2r structural requirement: even last axis.
+pub fn validate_even_last_axis(shape: &[usize]) -> Result<(), FftError> {
+    if shape.is_empty() {
+        return Err(FftError::BadDescriptor { reason: "shape must have at least one axis".into() });
+    }
+    let d = shape.len();
+    let n_last = shape[d - 1];
+    if n_last == 0 || n_last % 2 != 0 {
+        return Err(FftError::AxisConstraint {
+            axis: d - 1,
+            n: n_last,
+            p: 0,
+            requires: "2 | n_d (r2c/c2r pack)",
+        });
+    }
+    Ok(())
+}
+
+/// Pack adjacent last-axis pairs: `z_t = x_{2t} + i x_{2t+1}`. Row-major
+/// order makes this a traversal of adjacent memory pairs, batch-safe as
+/// long as every item's length is even.
+pub fn pack_pairs(x: &[f64]) -> Vec<C64> {
+    debug_assert_eq!(x.len() % 2, 0, "pack_pairs needs an even element count");
+    x.chunks_exact(2).map(|p| C64::new(p[0], p[1])).collect()
+}
+
+/// Inverse of [`pack_pairs`] with a fused scale: interleave the real and
+/// imaginary parts back into `2 * z.len()` reals, each multiplied by
+/// `scale`.
+pub fn unpack_pairs(z: &[C64], scale: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(2 * z.len());
+    for v in z {
+        out.push(v.re * scale);
+        out.push(v.im * scale);
+    }
+    out
+}
+
+/// Row-major offset of the component-wise negated multi-index
+/// (`k_l -> (n_l - k_l) mod n_l`) — the conjugate-symmetry partner over
+/// the leading axes.
+fn mirror_offset(mut off: usize, dims: &[usize]) -> usize {
+    let mut neg = 0usize;
+    let mut weight = 1usize;
+    for &n in dims.iter().rev() {
+        let k = off % n;
+        off /= n;
+        let m = if k == 0 { 0 } else { n - k };
+        neg += m * weight;
+        weight *= n;
+    }
+    neg
+}
+
+/// Untangle the complex FFT `z` of a packed real array (half shape
+/// `[..., h]`, row-major) into the Hermitian half-spectrum
+/// (`[..., h + 1]`): for every leading index `k'` and `k in 0..=h`,
+/// `X[k', k] = E + omega_{n_d}^k O` with the even/odd split taken
+/// against the conjugate partner `(-k', (h - k) mod h)`.
+pub fn untangle_half_spectrum(z: &[C64], shape: &[usize]) -> Vec<C64> {
+    let d = shape.len();
+    let n_last = shape[d - 1];
+    let h = n_last / 2;
+    let leading = &shape[..d - 1];
+    let outer: usize = leading.iter().product();
+    debug_assert_eq!(z.len(), outer * h);
+    // The k-dependent twiddle is identical for every leading index:
+    // build it once, not outer*(h+1) sin/cos calls.
+    let tw: Vec<C64> = (0..=h).map(|k| C64::root_of_unity(n_last, k)).collect();
+    let mut out = vec![C64::ZERO; outer * (h + 1)];
+    for o in 0..outer {
+        let no = mirror_offset(o, leading);
+        let row = &z[o * h..(o + 1) * h];
+        let mir = &z[no * h..(no + 1) * h];
+        let dst = &mut out[o * (h + 1)..(o + 1) * (h + 1)];
+        for (k, slot) in dst.iter_mut().enumerate() {
+            let zk = row[k % h];
+            let zc = mir[(h - k) % h].conj();
+            let e = (zk + zc).scale(0.5);
+            let odd = (zk - zc).scale(0.5).mul_neg_i();
+            *slot = e + tw[k] * odd;
+        }
+    }
+    out
+}
+
+/// Adjoint of [`untangle_half_spectrum`]: rebuild the packed complex
+/// spectrum (half shape `[..., h]`) from a Hermitian half-spectrum
+/// (`[..., h + 1]`), ready for the inverse complex core. Imaginary
+/// residue of a non-Hermitian input is silently discarded, exactly as
+/// `numpy.irfftn` does.
+pub fn retangle_half_spectrum(spec: &[C64], shape: &[usize]) -> Vec<C64> {
+    let d = shape.len();
+    let n_last = shape[d - 1];
+    let h = n_last / 2;
+    let leading = &shape[..d - 1];
+    let outer: usize = leading.iter().product();
+    debug_assert_eq!(spec.len(), outer * (h + 1));
+    let tw: Vec<C64> = (0..h).map(|k| C64::root_of_unity(n_last, k).conj()).collect();
+    let mut z = vec![C64::ZERO; outer * h];
+    for o in 0..outer {
+        let no = mirror_offset(o, leading);
+        let row = &spec[o * (h + 1)..(o + 1) * (h + 1)];
+        let mir = &spec[no * (h + 1)..(no + 1) * (h + 1)];
+        let dst = &mut z[o * h..(o + 1) * h];
+        for (k, slot) in dst.iter_mut().enumerate() {
+            let xk = row[k];
+            let xc = mir[h - k].conj();
+            let e = (xk + xc).scale(0.5);
+            let odd = (xk - xc).scale(0.5) * tw[k];
+            *slot = e + odd.mul_i();
+        }
+    }
+    z
+}
+
+/// Model real flops of the untangle/retangle pass: 16 per half-spectrum
+/// bin (two complex add/subs, two halvings, one twiddle multiply, one
+/// final add), counted in the same style as §2.3's `12 N/p` twiddle
+/// charge. Shared by the executed ledger and the analytic cost model so
+/// the two match exactly.
+pub fn wrap_flops(shape: &[usize]) -> f64 {
+    16.0 * spectrum_shape(shape).iter().product::<usize>() as f64
+}
+
+/// Drive any half-shape complex forward executor as an r2c transform:
+/// pack, run `core` on the packed array, untangle, and charge the
+/// untangle pass (per-rank share over `p` processors) to the ledger.
+/// Used by the FFTU/slab/pencil r2c free functions; the [`crate::api`]
+/// facade inlines the same steps around its planned complex core.
+pub fn r2c_drive<E>(
+    shape: &[usize],
+    p: usize,
+    real: &[f64],
+    core: E,
+) -> Result<(Vec<C64>, CostReport), FftError>
+where
+    E: FnOnce(&[C64]) -> Result<(Vec<C64>, CostReport), FftError>,
+{
+    validate_even_last_axis(shape)?;
+    let n: usize = shape.iter().product();
+    if real.len() != n {
+        return Err(FftError::InputLength { expected: n, got: real.len() });
+    }
+    let packed = pack_pairs(real);
+    let (z, mut report) = core(&packed)?;
+    let spec = untangle_half_spectrum(&z, shape);
+    report.push_comp("r2c-untangle", wrap_flops(shape) / p as f64);
+    Ok((spec, report))
+}
+
+/// Drive any half-shape complex *inverse* executor as a fully normalized
+/// c2r transform: retangle, run `core`, unpack. The unnormalized inverse
+/// core returns `(N/2) z`, so the `2/N` unpack scale makes this the
+/// exact inverse of the unnormalized r2c (matching [`super::real::irfft`]).
+pub fn c2r_drive<E>(
+    shape: &[usize],
+    p: usize,
+    spec: &[C64],
+    core: E,
+) -> Result<(Vec<f64>, CostReport), FftError>
+where
+    E: FnOnce(&[C64]) -> Result<(Vec<C64>, CostReport), FftError>,
+{
+    validate_even_last_axis(shape)?;
+    let n: usize = shape.iter().product();
+    let nspec: usize = spectrum_shape(shape).iter().product();
+    if spec.len() != nspec {
+        return Err(FftError::InputLength { expected: nspec, got: spec.len() });
+    }
+    let z_spec = retangle_half_spectrum(spec, shape);
+    let (z, mut report) = core(&z_spec)?;
+    report.push_comp("c2r-retangle", wrap_flops(shape) / p as f64);
+    Ok((unpack_pairs(&z, 2.0 / n as f64), report))
+}
+
+/// Sequential multidimensional real-to-complex FFT, numpy `rfftn`
+/// convention: unnormalized, Hermitian half-spectrum of shape
+/// `[n_1, ..., n_{d-1}, n_d/2 + 1]`. Requires an even last axis.
+pub fn rfftn(x: &[f64], shape: &[usize]) -> Vec<C64> {
+    assert_eq!(x.len(), shape.iter().product::<usize>(), "rfftn: input length mismatch");
+    validate_even_last_axis(shape).unwrap_or_else(|e| panic!("rfftn: {e}"));
+    let mut z = pack_pairs(x);
+    fftn_inplace(&mut z, &half_shape(shape), Direction::Forward);
+    untangle_half_spectrum(&z, shape)
+}
+
+/// Sequential inverse of [`rfftn`] with the `1/N` normalization folded
+/// in (numpy `irfftn` convention): `irfftn(rfftn(x), shape) == x`.
+pub fn irfftn(spec: &[C64], shape: &[usize]) -> Vec<f64> {
+    let nspec: usize = spectrum_shape(shape).iter().product();
+    assert_eq!(spec.len(), nspec, "irfftn: spectrum length mismatch");
+    validate_even_last_axis(shape).unwrap_or_else(|e| panic!("irfftn: {e}"));
+    let mut z = retangle_half_spectrum(spec, shape);
+    fftn_inplace(&mut z, &half_shape(shape), Direction::Inverse);
+    // Unnormalized inverse over N/2 points yields (N/2) z: 2/N restores x.
+    unpack_pairs(&z, 2.0 / shape.iter().product::<usize>() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft_nd;
+    use crate::fft::{max_abs_diff, real, rel_l2_error};
+    use crate::testing::{forall, Rng};
+
+    fn rand_real(n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| rng.f64_signed()).collect()
+    }
+
+    /// The first `n_d/2 + 1` last-axis bins of the full complex FFT of
+    /// the real-cast input — the oracle rfftn must match.
+    fn oracle_half_spectrum(x: &[f64], shape: &[usize]) -> Vec<C64> {
+        let xc: Vec<C64> = x.iter().map(|&v| C64::new(v, 0.0)).collect();
+        let full = dft_nd(&xc, shape, Direction::Forward);
+        let d = shape.len();
+        let n_last = shape[d - 1];
+        let hs = n_last / 2 + 1;
+        let outer: usize = shape[..d - 1].iter().product();
+        let mut out = Vec::with_capacity(outer * hs);
+        for o in 0..outer {
+            out.extend_from_slice(&full[o * n_last..o * n_last + hs]);
+        }
+        out
+    }
+
+    #[test]
+    fn rfftn_matches_full_complex_fft() {
+        let mut rng = Rng::new(0x2EA1);
+        for shape in [
+            vec![2usize],
+            vec![16],
+            vec![8, 12],
+            vec![4, 6, 10],
+            vec![3, 5, 4],
+            vec![1, 6],
+            vec![2, 2, 2],
+            vec![4, 3, 2, 6],
+        ] {
+            let n: usize = shape.iter().product();
+            let x = rand_real(n, &mut rng);
+            let got = rfftn(&x, &shape);
+            let want = oracle_half_spectrum(&x, &shape);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 1e-10, "shape {shape:?}: err {err}");
+        }
+    }
+
+    #[test]
+    fn rfftn_1d_agrees_with_rfft() {
+        let mut rng = Rng::new(0x2EA2);
+        for n in [2usize, 8, 60, 128] {
+            let x = rand_real(n, &mut rng);
+            let a = rfftn(&x, &[n]);
+            let b = real::rfft(&x);
+            assert!(max_abs_diff(&a, &b) < 1e-9 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn irfftn_inverts_rfftn() {
+        let mut rng = Rng::new(0x2EA3);
+        for shape in [vec![6usize], vec![8, 12], vec![4, 6, 10], vec![3, 4]] {
+            let n: usize = shape.iter().product();
+            let x = rand_real(n, &mut rng);
+            let back = irfftn(&rfftn(&x, &shape), &shape);
+            let err = x.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-10, "shape {shape:?}: err {err}");
+        }
+    }
+
+    #[test]
+    fn prop_rfftn_random_even_shapes() {
+        forall("rfftn == half of full fftn", 25, 0x2EA4, |rng| {
+            let d = rng.range(1, 3);
+            let mut shape: Vec<usize> = (0..d).map(|_| rng.range(1, 6)).collect();
+            let last = 2 * rng.range(1, 6);
+            *shape.last_mut().unwrap() = last;
+            let n: usize = shape.iter().product();
+            let x = rand_real(n, rng);
+            let got = rfftn(&x, &shape);
+            let want = oracle_half_spectrum(&x, &shape);
+            let err = rel_l2_error(&got, &want);
+            crate::prop_assert!(err < 1e-8, "shape {shape:?}: err {err}");
+            let back = irfftn(&got, &shape);
+            let rerr = x.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            crate::prop_assert!(rerr < 1e-9, "shape {shape:?} roundtrip: {rerr}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let x: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let z = pack_pairs(&x);
+        assert_eq!(z.len(), 6);
+        assert_eq!(z[1], C64::new(2.0, 3.0));
+        assert_eq!(unpack_pairs(&z, 1.0), x);
+    }
+
+    #[test]
+    fn mirror_offset_negates_every_axis() {
+        let dims = [3usize, 4];
+        // (1, 1) -> (2, 3): 1*4+1 = 5 -> 2*4+3 = 11.
+        assert_eq!(mirror_offset(5, &dims), 11);
+        // (0, 0) is self-conjugate.
+        assert_eq!(mirror_offset(0, &dims), 0);
+        // Involution.
+        for o in 0..12 {
+            assert_eq!(mirror_offset(mirror_offset(o, &dims), &dims), o);
+        }
+    }
+
+    #[test]
+    fn shapes_and_validation() {
+        assert_eq!(half_shape(&[8, 12]), vec![8, 6]);
+        assert_eq!(spectrum_shape(&[8, 12]), vec![8, 7]);
+        assert!(validate_even_last_axis(&[8, 12]).is_ok());
+        assert!(matches!(
+            validate_even_last_axis(&[8, 9]),
+            Err(FftError::AxisConstraint { axis: 1, n: 9, .. })
+        ));
+        assert!(validate_even_last_axis(&[]).is_err());
+    }
+}

@@ -38,6 +38,52 @@ pub fn fftu_global(
     Ok((outs.pop().unwrap(), report))
 }
 
+/// Real-to-complex convenience driver — the paper's §6 RFFT extension
+/// via the packing trick generalized to the cyclic distribution: pack
+/// adjacent last-axis pairs into complex (a local reinterpretation), run
+/// Algorithm 2.3 on the packed half shape `[..., n_d/2]` (still exactly
+/// ONE all-to-all, over half the volume), then one local untangling pass
+/// exploiting conjugate symmetry. `pgrid` applies to the half shape, so
+/// the per-axis rule on the last axis is `p_d^2 | n_d/2`. Returns the
+/// unnormalized Hermitian half-spectrum (`[..., n_d/2 + 1]`, numpy
+/// `rfftn` layout) plus the ledger (one comm superstep + the charged
+/// untangle pass).
+pub fn fftu_r2c_global(
+    shape: &[usize],
+    pgrid: &[usize],
+    real: &[f64],
+) -> Result<(Vec<C64>, CostReport), FftError> {
+    use crate::fft::realnd::{half_shape, r2c_drive, validate_even_last_axis};
+    validate_even_last_axis(shape)?;
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(&half_shape(shape), pgrid, &planner)?);
+    let p = plan.num_procs();
+    r2c_drive(shape, p, real, |packed| {
+        let (mut outs, report) = fftu_execute_batch(&plan, &[packed], Direction::Forward);
+        Ok((outs.pop().unwrap(), report))
+    })
+}
+
+/// Adjoint of [`fftu_r2c_global`], fully normalized: given the exact
+/// output of `fftu_r2c_global` (or `numpy.rfftn`), reconstructs the real
+/// signal — retangle (local), inverse Algorithm 2.3 on the half shape
+/// (ONE all-to-all), unpack pairs with the `2/N` scale folded in.
+pub fn fftu_c2r_global(
+    shape: &[usize],
+    pgrid: &[usize],
+    spec: &[C64],
+) -> Result<(Vec<f64>, CostReport), FftError> {
+    use crate::fft::realnd::{c2r_drive, half_shape, validate_even_last_axis};
+    validate_even_last_axis(shape)?;
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(&half_shape(shape), pgrid, &planner)?);
+    let p = plan.num_procs();
+    c2r_drive(shape, p, spec, |z_spec| {
+        let (mut outs, report) = fftu_execute_batch(&plan, &[z_spec], Direction::Inverse);
+        Ok((outs.pop().unwrap(), report))
+    })
+}
+
 /// Execute a prebuilt [`FftuPlan`] on a batch of global arrays in ONE
 /// SPMD session: per-rank [`Worker`] state (twiddle tables, packet
 /// buffers, scratch) is built once and reused for every batch item, so
@@ -167,6 +213,55 @@ mod tests {
             crate::prop_assert!(report.comm_supersteps() == 1, "not a single all-to-all");
             Ok(())
         });
+    }
+
+    #[test]
+    fn r2c_matches_sequential_rfftn() {
+        use crate::fft::realnd::rfftn;
+        let mut rng = Rng::new(0x2C);
+        for (shape, grid) in [
+            (vec![16usize], vec![2usize]),
+            (vec![8, 16], vec![2, 2]),
+            (vec![4, 6, 8], vec![2, 1, 2]),
+        ] {
+            let n: usize = shape.iter().product();
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let want = rfftn(&x, &shape);
+            let (got, report) = fftu_r2c_global(&shape, &grid, &x).unwrap();
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 1e-10, "shape {shape:?} grid {grid:?}: err {err}");
+            // The packing trick preserves the headline property.
+            assert_eq!(report.comm_supersteps(), 1, "shape {shape:?}");
+        }
+    }
+
+    #[test]
+    fn c2r_inverts_r2c_exactly() {
+        let mut rng = Rng::new(0x2D);
+        let shape = [8usize, 12];
+        let grid = [2usize, 2];
+        let x: Vec<f64> = (0..96).map(|_| rng.f64_signed()).collect();
+        let (spec, _) = fftu_r2c_global(&shape, &grid, &x).unwrap();
+        let (back, report) = fftu_c2r_global(&shape, &grid, &spec).unwrap();
+        let err = x.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10, "roundtrip err {err}");
+        assert_eq!(report.comm_supersteps(), 1);
+    }
+
+    #[test]
+    fn r2c_rejects_odd_last_axis_with_typed_error() {
+        use crate::api::FftError;
+        let x = vec![0.0; 72];
+        assert!(matches!(
+            fftu_r2c_global(&[8, 9], &[2, 1], &x),
+            Err(FftError::AxisConstraint { axis: 1, n: 9, requires: "2 | n_d (r2c/c2r pack)", .. })
+        ));
+        // Grid rules apply to the half shape: [8, 12] packs to [8, 6],
+        // and 2^2 does not divide 6.
+        assert!(matches!(
+            fftu_r2c_global(&[8, 12], &[1, 2], &[0.0; 96]),
+            Err(FftError::AxisConstraint { axis: 1, n: 6, p: 2, .. })
+        ));
     }
 
     #[test]

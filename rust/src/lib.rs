@@ -44,6 +44,32 @@
 //! # Ok::<(), fftu::FftError>(())
 //! ```
 //!
+//! Real input? Declare the kind ([`api::Kind`]): r2c packs adjacent
+//! last-axis pairs into complex, runs the complex core on the half shape
+//! `[..., n_d/2]` — roughly **halving flops and communication volume** —
+//! and untangles the Hermitian half-spectrum locally. FFTU keeps its
+//! single all-to-all; c2r is the exact adjoint:
+//!
+//! ```
+//! use fftu::api::{Algorithm, Normalization, Transform};
+//!
+//! let x: Vec<f64> = (0..128).map(|i| (0.1 * i as f64).sin()).collect();
+//! let fwd = Transform::new(&[8, 16]).procs(2).r2c().plan(Algorithm::Fftu)?;
+//! let spec = fwd.execute_r2c(&x)?;
+//! assert_eq!(spec.output.len(), 8 * (16 / 2 + 1)); // numpy rfftn layout
+//! assert_eq!(spec.report.comm_supersteps(), 1);    // still ONE all-to-all
+//!
+//! let inv = Transform::new(&[8, 16])
+//!     .procs(2)
+//!     .c2r()
+//!     .normalization(Normalization::ByN)
+//!     .plan(Algorithm::Fftu)?;
+//! let back = inv.execute_c2r(&spec.output)?;
+//! let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+//! assert!(err < 1e-10);
+//! # Ok::<(), fftu::FftError>(())
+//! ```
+//!
 //! Every fallible call returns the typed [`FftError`]; batched
 //! transforms (`Transform::batch`) run through one SPMD session with
 //! per-rank state built once. Long-lived applications that interleave
@@ -89,5 +115,8 @@ pub mod report;
 pub mod runtime;
 pub mod testing;
 
-pub use api::{Algorithm, DistFft, Execution, FftError, Grid, Normalization, PlanCache, Transform};
+pub use api::{
+    Algorithm, DistFft, Execution, FftError, Grid, Kind, Normalization, PlanCache, RealExecution,
+    Transform,
+};
 pub use fft::{C64, Direction};

@@ -15,9 +15,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::api::{plan, Algorithm, FftError, Transform};
+use crate::api::{plan, Algorithm, FftError, Kind, Normalization, Transform};
 use crate::bsp::{run_spmd, CostReport};
-use crate::fft::{C64, Direction, Planner};
+use crate::fft::{realnd, C64, Direction, Planner};
 use crate::fftu::{FftuPlan, Worker};
 use crate::testing::Rng;
 
@@ -58,17 +58,53 @@ pub fn measure_once(
     p: usize,
     pgrid: Option<&[usize]>,
 ) -> Result<(f64, CostReport), FftError> {
+    measure_once_kind(algo, Kind::C2C, shape, p, pgrid)
+}
+
+/// [`measure_once`] for any transform [`Kind`]: the real kinds time the
+/// full r2c/c2r path (pack + half-shape complex core + untangle). For
+/// C2R the timed region receives a genuine Hermitian half-spectrum
+/// (built sequentially outside the clock) so the run is representative.
+pub fn measure_once_kind(
+    algo: Algorithm,
+    kind: Kind,
+    shape: &[usize],
+    p: usize,
+    pgrid: Option<&[usize]>,
+) -> Result<(f64, CostReport), FftError> {
     let n: usize = shape.iter().product();
     let mut rng = Rng::new(0xBF);
-    let global: Vec<C64> = (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
     let descriptor = match pgrid {
         Some(g) => Transform::new(shape).grid(g),
         None => Transform::new(shape).procs(p),
     };
-    let t0 = Instant::now();
-    let planned = plan(algo, &descriptor)?;
-    let exec = planned.execute(&global)?;
-    Ok((t0.elapsed().as_secs_f64(), exec.report))
+    match kind {
+        Kind::C2C => {
+            let global: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+            let t0 = Instant::now();
+            let planned = plan(algo, &descriptor)?;
+            let exec = planned.execute(&global)?;
+            Ok((t0.elapsed().as_secs_f64(), exec.report))
+        }
+        Kind::R2C => {
+            let global: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let t0 = Instant::now();
+            let planned = plan(algo, &descriptor.r2c())?;
+            let exec = planned.execute_r2c(&global)?;
+            Ok((t0.elapsed().as_secs_f64(), exec.report))
+        }
+        Kind::C2R => {
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            realnd::validate_even_last_axis(shape)?;
+            let spec = realnd::rfftn(&x, shape);
+            let t0 = Instant::now();
+            let planned =
+                plan(algo, &descriptor.c2r().normalization(Normalization::ByN))?;
+            let exec = planned.execute_c2r(&spec)?;
+            Ok((t0.elapsed().as_secs_f64(), exec.report))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -80,6 +116,17 @@ mod tests {
         let (wall, report) = measure_fftu(&[16, 16], &[2, 2], 2).unwrap();
         assert!(wall > 0.0 && wall < 10.0);
         assert_eq!(report.comm_supersteps(), 2); // 2 reps x 1 all-to-all
+    }
+
+    #[test]
+    fn measure_once_kind_covers_real_paths() {
+        let shape = [8usize, 16];
+        for kind in [Kind::R2C, Kind::C2R] {
+            let (wall, report) =
+                measure_once_kind(Algorithm::Fftu, kind, &shape, 2, None).unwrap();
+            assert!(wall > 0.0, "{kind:?}");
+            assert_eq!(report.comm_supersteps(), 1, "{kind:?}");
+        }
     }
 
     #[test]

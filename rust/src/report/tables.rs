@@ -9,9 +9,12 @@
 //! 2. **executed** — a scaled-down shape run for real on the BSP
 //!    runtime, with wall-clock, communication supersteps, and h words.
 
-use crate::api::Algorithm;
+use crate::api::{Algorithm, Kind};
 use crate::baselines::{pencil_pmax, pfft_best_pmax, slab_pmax, OutputDist};
-use crate::costmodel::{fftu_report, heffte_report, pencil_report, popovici_report, slab_report, Machine};
+use crate::costmodel::{
+    fftu_report, heffte_report, pencil_report, popovici_report, real_wrap_report, slab_report,
+    Machine,
+};
 use crate::fftu::{choose_grid, fftu_pmax};
 
 use super::measure::{measure_fftu, measure_once};
@@ -222,9 +225,25 @@ pub fn pmax_table() -> Table {
 }
 
 /// Communication-superstep comparison at paper scale (the core claim).
-pub fn comm_steps_table(shape: &[usize], p: usize) -> Table {
+///
+/// For the real kinds the complex core runs on the packed half shape
+/// `[..., n_d/2]` and every ledger is wrapped with the untangle pass —
+/// the table shows the ~2x h-volume saving next to the unchanged
+/// superstep counts. Requires an even last axis for r2c/c2r.
+pub fn comm_steps_table(shape: &[usize], p: usize, kind: Kind) -> Table {
+    let core_shape: Vec<usize> = match kind {
+        Kind::C2C => shape.to_vec(),
+        Kind::R2C | Kind::C2R => crate::fft::realnd::half_shape(shape),
+    };
+    let core = core_shape.as_slice();
+    let wrap = |rep: Option<crate::bsp::CostReport>| -> Option<crate::bsp::CostReport> {
+        rep.map(|r| match kind {
+            Kind::C2C => r,
+            Kind::R2C | Kind::C2R => real_wrap_report(r, shape, p, kind),
+        })
+    };
     let mut t = Table::new(
-        &format!("Communication supersteps, shape {shape:?}, p = {p}"),
+        &format!("Communication supersteps, shape {shape:?}, p = {p}, kind {}", kind.name()),
         &["algorithm", "comm supersteps", "sum h (words)"],
     );
     let mut add = |name: &str, rep: Option<crate::bsp::CostReport>| {
@@ -234,16 +253,16 @@ pub fn comm_steps_table(shape: &[usize], p: usize) -> Table {
             t.row(vec![name.to_string(), "-".into(), "-".into()]);
         }
     };
-    add("FFTU (same dist)", Some(fftu_report(shape, p)));
-    add("FFTW-slab same", slab_report(shape, p, true).ok());
-    add("FFTW-slab diff", slab_report(shape, p, false).ok());
-    let r = pfft_rank_for(shape, p);
-    add("PFFT same", r.and_then(|r| pencil_report(shape, r, p, true).ok()));
-    add("PFFT diff", r.and_then(|r| pencil_report(shape, r, p, false).ok()));
-    add("heFFTe", heffte_report(shape, p).ok());
+    add("FFTU (same dist)", wrap(Some(fftu_report(core, p))));
+    add("FFTW-slab same", wrap(slab_report(core, p, true).ok()));
+    add("FFTW-slab diff", wrap(slab_report(core, p, false).ok()));
+    let r = pfft_rank_for(core, p);
+    add("PFFT same", wrap(r.and_then(|r| pencil_report(core, r, p, true).ok())));
+    add("PFFT diff", wrap(r.and_then(|r| pencil_report(core, r, p, false).ok())));
+    add("heFFTe", wrap(heffte_report(core, p).ok()));
     add(
         "Popovici d-step",
-        choose_grid(shape, p).map(|g| popovici_report(shape, &g)),
+        wrap(choose_grid(core, p).map(|g| popovici_report(core, &g))),
     );
     t
 }
@@ -282,6 +301,20 @@ mod tests {
         // And "different" saves PFFT a superstep, closing the gap.
         let pfft_diff = m.predict(&pencil_report(&shape, 2, p, false).unwrap(), p);
         assert!(pfft_diff < pfft_same);
+    }
+
+    #[test]
+    fn comm_steps_table_r2c_halves_fftu_volume() {
+        let shape = [1024usize, 1024, 1024];
+        let c2c = comm_steps_table(&shape, 4096, Kind::C2C).render();
+        let r2c = comm_steps_table(&shape, 4096, Kind::R2C).render();
+        assert!(c2c.contains("FFTU"), "{c2c}");
+        assert!(r2c.contains("kind r2c"), "{r2c}");
+        // FFTU h at p=4096: N/p - N/p^2 words for c2c, half that for r2c.
+        let n = 1usize << 30;
+        let h_c2c = n / 4096 - n / (4096 * 4096);
+        assert!(c2c.contains(&h_c2c.to_string()), "{c2c}");
+        assert!(r2c.contains(&(h_c2c / 2).to_string()), "{r2c}");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use fftu::api::{plan, Algorithm, DistFft, FftError, Normalization, PlanCache, Transform};
 use fftu::baselines::OutputDist;
+use fftu::fft::realnd::rfftn;
 use fftu::fft::{dft_nd, max_abs_diff, rel_l2_error, C64};
 use fftu::testing::Rng;
 use fftu::Direction;
@@ -17,6 +18,11 @@ use fftu::Direction;
 fn rand_global(n: usize, seed: u64) -> Vec<C64> {
     let mut rng = Rng::new(seed);
     (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+}
+
+fn rand_real(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f64_signed()).collect()
 }
 
 /// Every algorithm, with same-distribution output where that is a
@@ -137,6 +143,77 @@ fn batched_execution_transforms_each_item_and_amortizes_state() {
         // communication structure, no setup supersteps in between.
         assert_eq!(exec.report.comm_supersteps(), batch * algo.comm_supersteps(2), "{algo:?}");
     }
+}
+
+#[test]
+fn r2c_matches_the_rfftn_oracle_across_all_algorithms() {
+    for (shape, p) in [(vec![16usize, 16], 4usize), (vec![8, 8, 8], 4)] {
+        let n: usize = shape.iter().product();
+        let x = rand_real(n, 0xC0F7);
+        let want = rfftn(&x, &shape);
+        for algo in all_algorithms(shape.len()) {
+            let t = Transform::new(&shape).procs(p).r2c();
+            let planned = plan(algo, &t).unwrap_or_else(|e| panic!("{algo:?} r2c: {e}"));
+            let got = planned.execute_r2c(&x).unwrap();
+            assert_eq!(got.output.len(), t.spectrum_total());
+            let err = rel_l2_error(&got.output, &want);
+            assert!(err < 1e-10, "{algo:?} r2c on {shape:?} p={p}: err {err}");
+        }
+    }
+}
+
+#[test]
+fn c2r_roundtrips_r2c_across_all_algorithms() {
+    let shape = [8usize, 8, 8];
+    let x = rand_real(512, 0xC0F8);
+    for algo in all_algorithms(3) {
+        let fwd = plan(algo, &Transform::new(&shape).procs(4).r2c()).unwrap();
+        let spec = fwd.execute_r2c(&x).unwrap();
+        let inv = plan(
+            algo,
+            &Transform::new(&shape).procs(4).c2r().normalization(Normalization::ByN),
+        )
+        .unwrap();
+        let back = inv.execute_c2r(&spec.output).unwrap();
+        let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10, "{algo:?}: c2r∘r2c err {err}");
+    }
+}
+
+#[test]
+fn batched_r2c_transforms_each_item() {
+    let shape = [8usize, 12];
+    let n = 96;
+    let batch = 3;
+    let x = rand_real(batch * n, 0xC0F9);
+    let t = Transform::new(&shape).procs(2).r2c().batch(batch);
+    let nspec = t.spectrum_total();
+    for algo in all_algorithms(2) {
+        let planned = plan(algo, &t).unwrap();
+        let exec = planned.execute_r2c_batch(&x).unwrap();
+        assert_eq!(exec.output.len(), batch * nspec);
+        for b in 0..batch {
+            let want = rfftn(&x[b * n..(b + 1) * n], &shape);
+            let err = rel_l2_error(&exec.output[b * nspec..(b + 1) * nspec], &want);
+            assert!(err < 1e-10, "{algo:?} batch item {b}: err {err}");
+        }
+    }
+}
+
+#[test]
+fn real_kinds_share_the_plan_cache_with_distinct_keys() {
+    let cache = PlanCache::new(8);
+    let c2c = Transform::new(&[16, 16]).procs(4);
+    let r2c = Transform::new(&[16, 16]).procs(4).r2c();
+    let c2r = Transform::new(&[16, 16]).procs(4).c2r();
+    let a = cache.plan(Algorithm::Fftu, &c2c).unwrap();
+    let b = cache.plan(Algorithm::Fftu, &r2c).unwrap();
+    let c = cache.plan(Algorithm::Fftu, &c2r).unwrap();
+    // Three kinds, three plans — and each repeats as a pure cache hit.
+    assert!(!Arc::ptr_eq(&a, &b) && !Arc::ptr_eq(&b, &c) && !Arc::ptr_eq(&a, &c));
+    assert_eq!(cache.misses(), 3);
+    assert!(Arc::ptr_eq(&b, &cache.plan(Algorithm::Fftu, &r2c).unwrap()));
+    assert_eq!(cache.hits(), 1);
 }
 
 #[test]

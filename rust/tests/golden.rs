@@ -1,40 +1,139 @@
-//! Golden-vector tests: the Rust FFT engine (and the parallel FFTU
-//! algorithm on top of it) against `numpy.fft.fftn` outputs generated
-//! offline into `rust/tests/data/` — an oracle fully independent of
-//! both this crate's code and the JAX artifact path.
+//! Golden-vector tests: the Rust FFT engine (and the parallel FFTU,
+//! slab, and pencil algorithms on top of it) against `numpy.fft.fftn` /
+//! `numpy.fft.rfftn` outputs generated offline into `rust/tests/data/`
+//! by `python/tools/gen_golden.py` — an oracle fully independent of both
+//! this crate's code and the JAX artifact path.
+//!
+//! The loader reports the offending file and line on any parse failure
+//! (malformed shape, bad float, wrong field count, truncated file), so a
+//! corrupted or hand-edited golden fails with an actionable message
+//! instead of a bare `unwrap` backtrace.
 
+use fftu::api::{plan, Algorithm, Normalization, Transform};
+use fftu::fft::realnd::{irfftn, rfftn};
 use fftu::fft::{fftn_inplace, ifftn_normalized_inplace, rel_l2_error, C64};
-use fftu::fftu::{choose_grid, fftu_global};
+use fftu::fftu::{choose_grid, fftu_global, fftu_r2c_global};
 use fftu::Direction;
 
-struct Golden {
+/// Parse a golden file into its shape line and numeric rows, panicking
+/// with `path:line` context on any malformed content.
+fn load_rows(path: &str) -> (Vec<usize>, Vec<Vec<f64>>) {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    let mut lines = text.lines().enumerate();
+    let (_, first) = lines.next().unwrap_or_else(|| panic!("{path}:1: empty golden file"));
+    let shape: Vec<usize> = first
+        .split_whitespace()
+        .map(|tok| {
+            tok.parse()
+                .unwrap_or_else(|e| panic!("{path}:1: bad shape entry `{tok}`: {e}"))
+        })
+        .collect();
+    if shape.is_empty() {
+        panic!("{path}:1: shape line is empty");
+    }
+    let rows: Vec<Vec<f64>> = lines
+        .map(|(i, line)| {
+            line.split_whitespace()
+                .map(|tok| {
+                    tok.parse::<f64>().unwrap_or_else(|e| {
+                        panic!("{path}:{}: bad number `{tok}`: {e}", i + 1)
+                    })
+                })
+                .collect()
+        })
+        .collect();
+    (shape, rows)
+}
+
+/// One row, checked to hold exactly `width` fields (`line0` is the
+/// 1-based line number of the first data row).
+fn fields<'a>(
+    path: &str,
+    rows: &'a [Vec<f64>],
+    idx: usize,
+    line0: usize,
+    width: usize,
+) -> &'a [f64] {
+    let row = rows.get(idx).unwrap_or_else(|| {
+        panic!("{path}: truncated at line {}: expected more data rows", line0 + idx)
+    });
+    if row.len() != width {
+        panic!(
+            "{path}:{}: expected {width} field(s), got {}",
+            line0 + idx,
+            row.len()
+        );
+    }
+    row
+}
+
+struct ComplexGolden {
     shape: Vec<usize>,
     input: Vec<C64>,
     output: Vec<C64>,
 }
 
-fn load(name: &str) -> Golden {
+/// Complex case layout: shape line, then n `re im` input rows, then n
+/// `re im` output rows.
+fn load_complex(name: &str) -> ComplexGolden {
     let path = format!("rust/tests/data/{name}.txt");
-    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
-    let mut lines = text.lines();
-    let shape: Vec<usize> =
-        lines.next().unwrap().split_whitespace().map(|t| t.parse().unwrap()).collect();
+    let (shape, rows) = load_rows(&path);
     let n: usize = shape.iter().product();
-    let parse = |line: &str| -> C64 {
-        let mut it = line.split_whitespace();
-        C64::new(it.next().unwrap().parse().unwrap(), it.next().unwrap().parse().unwrap())
+    if rows.len() != 2 * n {
+        panic!("{path}: expected {} data rows ({n} input + {n} output), got {}", 2 * n, rows.len());
+    }
+    let parse = |idx: usize| -> C64 {
+        let row = fields(&path, &rows, idx, 2, 2);
+        C64::new(row[0], row[1])
     };
-    let vals: Vec<C64> = lines.map(parse).collect();
-    assert_eq!(vals.len(), 2 * n, "{name}: expected {n} input + {n} output rows");
-    Golden { shape, input: vals[..n].to_vec(), output: vals[n..].to_vec() }
+    ComplexGolden {
+        input: (0..n).map(parse).collect(),
+        output: (n..2 * n).map(parse).collect(),
+        shape,
+    }
+}
+
+struct RealGolden {
+    shape: Vec<usize>,
+    input: Vec<f64>,
+    output: Vec<C64>,
+}
+
+/// Real (r2c) case layout: shape line, then n single-value real input
+/// rows, then `prod(shape[..d-1]) * (shape[d-1]/2 + 1)` `re im` rows of
+/// the numpy `rfftn` half-spectrum.
+fn load_real(name: &str) -> RealGolden {
+    let path = format!("rust/tests/data/{name}.txt");
+    let (shape, rows) = load_rows(&path);
+    let n: usize = shape.iter().product();
+    let d = shape.len();
+    let nspec: usize = n / shape[d - 1] * (shape[d - 1] / 2 + 1);
+    if rows.len() != n + nspec {
+        panic!(
+            "{path}: expected {} data rows ({n} real input + {nspec} spectrum), got {}",
+            n + nspec,
+            rows.len()
+        );
+    }
+    RealGolden {
+        input: (0..n).map(|i| fields(&path, &rows, i, 2, 1)[0]).collect(),
+        output: (n..n + nspec)
+            .map(|i| {
+                let row = fields(&path, &rows, i, 2, 2);
+                C64::new(row[0], row[1])
+            })
+            .collect(),
+        shape,
+    }
 }
 
 const CASES: &[&str] = &["c1d_16", "c1d_60", "c1d_101", "c2d_8x12", "c3d_4x6x10"];
+const REAL_CASES: &[&str] = &["r1d_16", "r2d_8x12", "r3d_4x6x10"];
 
 #[test]
 fn sequential_engine_matches_numpy() {
     for name in CASES {
-        let g = load(name);
+        let g = load_complex(name);
         let mut got = g.input.clone();
         fftn_inplace(&mut got, &g.shape, Direction::Forward);
         let err = rel_l2_error(&got, &g.output);
@@ -45,7 +144,7 @@ fn sequential_engine_matches_numpy() {
 #[test]
 fn parallel_fftu_matches_numpy() {
     for name in CASES {
-        let g = load(name);
+        let g = load_complex(name);
         // Largest valid FFTU grid with p in {2, 4} if one exists;
         // otherwise p = 1 still exercises the full superstep pipeline.
         let p = [4usize, 2, 1]
@@ -63,10 +162,107 @@ fn parallel_fftu_matches_numpy() {
 #[test]
 fn inverse_recovers_numpy_input() {
     for name in CASES {
-        let g = load(name);
+        let g = load_complex(name);
         let mut back = g.output.clone();
         ifftn_normalized_inplace(&mut back, &g.shape);
         let err = rel_l2_error(&back, &g.input);
         assert!(err < 1e-12, "{name}: inverse err {err}");
     }
+}
+
+#[test]
+fn sequential_rfftn_matches_numpy() {
+    for name in REAL_CASES {
+        let g = load_real(name);
+        let got = rfftn(&g.input, &g.shape);
+        let err = rel_l2_error(&got, &g.output);
+        assert!(err < 1e-12, "{name}: rel err {err}");
+    }
+}
+
+#[test]
+fn distributed_r2c_matches_numpy_across_algorithms() {
+    for name in REAL_CASES {
+        let g = load_real(name);
+        let d = g.shape.len();
+        // FFTU + the slab and pencil baselines (where the rank allows),
+        // each at the largest processor count its planner accepts.
+        let mut algos = vec![Algorithm::Fftu];
+        if d >= 2 {
+            algos.push(Algorithm::slab());
+            algos.push(Algorithm::pencil(if d >= 3 { 2 } else { 1 }));
+        }
+        for algo in algos {
+            let (p, planned) = [4usize, 2, 1]
+                .into_iter()
+                .find_map(|p| {
+                    plan(algo, &Transform::new(&g.shape).procs(p).r2c())
+                        .ok()
+                        .map(|planned| (p, planned))
+                })
+                .unwrap_or_else(|| panic!("{name}: {algo:?} plans at no p"));
+            let got = planned.execute_r2c(&g.input).unwrap();
+            let err = rel_l2_error(&got.output, &g.output);
+            assert!(err < 1e-10, "{name} {algo:?} p={p}: rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn fftu_r2c_driver_matches_numpy_with_one_alltoall() {
+    for name in REAL_CASES {
+        let g = load_real(name);
+        let d = g.shape.len();
+        let mut half = g.shape.clone();
+        half[d - 1] /= 2;
+        let p = [4usize, 2, 1]
+            .into_iter()
+            .find(|&p| choose_grid(&half, p).is_some())
+            .unwrap();
+        let grid = choose_grid(&half, p).unwrap();
+        let (got, report) = fftu_r2c_global(&g.shape, &grid, &g.input).unwrap();
+        let err = rel_l2_error(&got, &g.output);
+        assert!(err < 1e-10, "{name} grid {grid:?}: rel err {err}");
+        assert_eq!(report.comm_supersteps(), 1, "{name}");
+    }
+}
+
+#[test]
+fn irfftn_recovers_numpy_real_input() {
+    for name in REAL_CASES {
+        let g = load_real(name);
+        // Sequentially...
+        let back = irfftn(&g.output, &g.shape);
+        let err = g.input.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-12, "{name}: irfftn err {err}");
+        // ...and through the distributed facade with ByN normalization.
+        let planned = plan(
+            Algorithm::Fftu,
+            &Transform::new(&g.shape).procs(2).c2r().normalization(Normalization::ByN),
+        )
+        .unwrap();
+        let back = planned.execute_c2r(&g.output).unwrap();
+        let err =
+            g.input.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10, "{name}: facade c2r err {err}");
+    }
+}
+
+#[test]
+fn loader_reports_file_and_line_on_parse_failure() {
+    let dir = std::env::temp_dir();
+    let path = dir.join("fftu_bad_golden.txt");
+    std::fs::write(&path, "4 4\n1.0 2.0\nnot-a-number 3.0\n").unwrap();
+    let shown = path.to_string_lossy().into_owned();
+    let err = std::panic::catch_unwind(|| load_rows(&shown)).unwrap_err();
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("fftu_bad_golden.txt:3") && msg.contains("not-a-number"),
+        "panic message lacks file/line context: {msg}"
+    );
+    let _ = std::fs::remove_file(&path);
 }

@@ -1,0 +1,259 @@
+//! Ledger-level invariant tests:
+//!
+//! - the h recorded by the *executed* BSP ledger equals the closed-form
+//!   `analytic_h` / analytic reports exactly, for randomized
+//!   shape/grid/distribution pairs (the precondition for trusting the
+//!   paper-scale extrapolations);
+//! - FFTU's per-superstep h never exceeds `N/p` — the communication
+//!   bound of the paper's Theorem 2.1 — for every tested configuration,
+//!   complex and real;
+//! - the `PlanCache` stays consistent under concurrent hammering:
+//!   no deadlock, hit/miss counts add up, and identical descriptors
+//!   resolve to pointer-identical plans from every thread.
+
+use std::sync::Arc;
+
+use fftu::api::{plan, Algorithm, Normalization, PlanCache, PlannedFft, Transform};
+use fftu::baselines::{pencil_global, slab_global, OutputDist};
+use fftu::bsp::{redistribute, run_spmd, SuperstepKind};
+use fftu::costmodel::{fftu_r2c_report, fftu_report, pencil_report, slab_report};
+use fftu::dist::{analytic_h, AxisDist, GridDist, RedistPlan};
+use fftu::fft::C64;
+use fftu::fftu::fftu_r2c_global;
+use fftu::testing::{forall, Rng};
+use fftu::{prop_assert, Direction};
+
+fn rand_complex(n: usize, rng: &mut Rng) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+}
+
+/// Per-superstep h of the communication entries of a report.
+fn comm_h(report: &fftu::bsp::CostReport) -> Vec<usize> {
+    report
+        .supersteps
+        .iter()
+        .filter(|s| s.kind == SuperstepKind::Communication)
+        .map(|s| s.h_max)
+        .collect()
+}
+
+/// A random balanced axis distribution of `n` over some divisor of `n`.
+fn rand_axis_dist(rng: &mut Rng, n: usize) -> AxisDist {
+    let p = rng.divisor_of(n);
+    match rng.below(3) {
+        0 => AxisDist::Cyclic { p },
+        1 => AxisDist::Block { p },
+        _ => {
+            let cs: Vec<usize> = (1..=p).filter(|c| p % c == 0).collect();
+            AxisDist::GroupCyclic { p, c: *rng.choose(&cs) }
+        }
+    }
+}
+
+#[test]
+fn prop_executed_redistribution_h_equals_analytic() {
+    forall("executed redistribution h == analytic_h", 15, 0x141A, |rng| {
+        let shape = [4 * rng.range(1, 3), 4 * rng.range(1, 3)];
+        // Same per-axis processor counts on both sides (a redistribution
+        // keeps p fixed), distributions otherwise free.
+        let a0 = rand_axis_dist(rng, shape[0]);
+        let a1 = rand_axis_dist(rng, shape[1]);
+        let redraw = |rng: &mut Rng, ax: AxisDist| match rng.below(3) {
+            0 => AxisDist::Cyclic { p: ax.procs() },
+            1 => AxisDist::Block { p: ax.procs() },
+            _ => ax,
+        };
+        let b0 = redraw(rng, a0);
+        let b1 = redraw(rng, a1);
+        let src = GridDist::new(&shape, &[a0, a1]).map_err(String::from)?;
+        let dst = GridDist::new(&shape, &[b0, b1]).map_err(String::from)?;
+        let plan = RedistPlan::new(&src, &dst).map_err(String::from)?;
+        let n: usize = shape.iter().product();
+        let global = rand_complex(n, rng);
+        let locals = src.scatter(&global);
+        let outcome = run_spmd(src.num_procs(), |ctx| {
+            redistribute(ctx, &plan, "redist", &locals[ctx.rank()])
+        });
+        let executed = outcome.report.supersteps[0].h_max;
+        let analytic = analytic_h(&src, &dst);
+        prop_assert!(
+            executed == analytic,
+            "{src:?} -> {dst:?}: executed h {executed} vs analytic {analytic}"
+        );
+        // And the routed data is correct, not just its volume.
+        prop_assert!(dst.gather(&outcome.outputs) == global, "redistribution corrupted data");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fftu_ledger_matches_analytic_and_respects_theorem_2_1() {
+    forall("fftu: executed h == analytic, h <= N/p", 15, 0x141B, |rng| {
+        let d = rng.range(1, 3);
+        let mut shape = Vec::new();
+        let mut grid = Vec::new();
+        for _ in 0..d {
+            let g = rng.range(1, 2);
+            shape.push(g * g * rng.range(1, 4));
+            grid.push(g);
+        }
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x = rand_complex(n, rng);
+        let planned =
+            plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid)).map_err(String::from)?;
+        let executed = planned.execute(&x)?.report;
+        let analytic = fftu_report(&shape, p);
+        prop_assert!(
+            comm_h(&executed) == comm_h(&analytic),
+            "{shape:?} grid {grid:?}: executed {:?} vs analytic {:?}",
+            comm_h(&executed),
+            comm_h(&analytic)
+        );
+        // Theorem 2.1: each of FFTU's (single) communication supersteps
+        // moves at most N/p words per processor.
+        for h in comm_h(&executed) {
+            prop_assert!(h <= n / p, "{shape:?} grid {grid:?}: h {h} > N/p = {}", n / p);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fftu_r2c_ledger_matches_analytic_with_halved_bound() {
+    forall("fftu r2c: executed h == analytic, h <= (N/2)/p", 15, 0x141C, |rng| {
+        let d = rng.range(1, 3);
+        let mut shape = Vec::new();
+        let mut grid = Vec::new();
+        for l in 0..d {
+            let g = rng.range(1, 2);
+            let mut n = g * g * rng.range(1, 4);
+            if l == d - 1 {
+                n *= 2; // even last axis; grid constraint holds on n/2
+            }
+            shape.push(n);
+            grid.push(g);
+        }
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let (_, executed) = fftu_r2c_global(&shape, &grid, &x).map_err(String::from)?;
+        let analytic = fftu_r2c_report(&shape, p);
+        prop_assert!(
+            comm_h(&executed) == comm_h(&analytic),
+            "{shape:?} grid {grid:?}: executed {:?} vs analytic {:?}",
+            comm_h(&executed),
+            comm_h(&analytic)
+        );
+        prop_assert!(
+            executed.comm_supersteps() == 1,
+            "r2c must keep the single all-to-all"
+        );
+        // The real transform's communication bound halves with the data.
+        for h in comm_h(&executed) {
+            prop_assert!(h <= n / 2 / p, "{shape:?}: h {h} > (N/2)/p = {}", n / 2 / p);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slab_and_pencil_ledgers_match_analytic() {
+    forall("slab/pencil executed h == analytic per superstep", 12, 0x141D, |rng| {
+        let d = rng.range(2, 3);
+        let shape: Vec<usize> = (0..d).map(|_| 2 * rng.range(1, 4)).collect();
+        let n: usize = shape.iter().product();
+        let x = rand_complex(n, rng);
+        let same = rng.bool();
+        let out = if same { OutputDist::Same } else { OutputDist::Different };
+        // Slab: p must divide n_1; draw from its divisors.
+        let p = rng.divisor_of(shape[0]);
+        if let Ok((_, executed)) = slab_global(&shape, p, &x, Direction::Forward, out) {
+            let analytic = slab_report(&shape, p, same).map_err(String::from)?;
+            prop_assert!(
+                comm_h(&executed) == comm_h(&analytic),
+                "slab {shape:?} p={p} same={same}: {:?} vs {:?}",
+                comm_h(&executed),
+                comm_h(&analytic)
+            );
+        }
+        // Pencil: rank r in 1..d, p free; skip configurations the
+        // planner itself rejects.
+        let r = rng.range(1, d - 1);
+        let p = rng.range(1, 4);
+        if let Ok((_, executed)) = pencil_global(&shape, r, p, &x, Direction::Forward, out) {
+            let analytic = pencil_report(&shape, r, p, same).map_err(String::from)?;
+            prop_assert!(
+                comm_h(&executed) == comm_h(&analytic),
+                "pencil {shape:?} r={r} p={p} same={same}: {:?} vs {:?}",
+                comm_h(&executed),
+                comm_h(&analytic)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_cache_concurrent_hammer() {
+    let cache = Arc::new(PlanCache::new(32));
+    let descriptors: Vec<(Algorithm, Transform)> = vec![
+        (Algorithm::Fftu, Transform::new(&[16, 16]).procs(4)),
+        (Algorithm::Fftu, Transform::new(&[16, 16]).procs(4).r2c()),
+        (Algorithm::Fftu, Transform::new(&[16, 16]).procs(4).c2r()),
+        (Algorithm::slab(), Transform::new(&[16, 16]).procs(4)),
+        (Algorithm::Popovici, Transform::new(&[16, 16]).procs(2)),
+        (
+            Algorithm::Fftu,
+            Transform::new(&[8, 8, 8]).procs(2).normalization(Normalization::Unitary),
+        ),
+    ];
+    let threads = 8usize;
+    let iters = 40usize;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let cache = Arc::clone(&cache);
+        let descriptors = descriptors.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xCACE ^ t as u64);
+            let mut got: Vec<Vec<Arc<PlannedFft>>> = vec![Vec::new(); descriptors.len()];
+            for _ in 0..iters {
+                let i = rng.below(descriptors.len());
+                let (algo, tr) = &descriptors[i];
+                // Overlapping descriptors from many threads: must never
+                // deadlock or error.
+                got[i].push(cache.plan(*algo, tr).expect("hammered plan failed"));
+            }
+            got
+        }));
+    }
+    let mut per_descriptor: Vec<Vec<Arc<PlannedFft>>> = vec![Vec::new(); descriptors.len()];
+    for h in handles {
+        for (i, v) in h.join().expect("hammer thread panicked").into_iter().enumerate() {
+            per_descriptor[i].extend(v);
+        }
+    }
+    // Hit-count consistency: every request was exactly one hit or one miss.
+    assert_eq!(cache.hits() + cache.misses(), (threads * iters) as u64);
+    assert!(cache.len() <= descriptors.len());
+    // Pointer identity: all plans handed out for one descriptor are the
+    // same allocation, regardless of which thread planned first.
+    for (i, ptrs) in per_descriptor.iter().enumerate() {
+        for pair in ptrs.windows(2) {
+            assert!(
+                Arc::ptr_eq(&pair[0], &pair[1]),
+                "descriptor {i}: non-identical plans under concurrency"
+            );
+        }
+    }
+    // Post-hammer, every descriptor is resident: re-requesting is a pure
+    // hit and returns the same plan the hammer saw.
+    for (i, (algo, tr)) in descriptors.iter().enumerate() {
+        let hits_before = cache.hits();
+        let planned = cache.plan(*algo, tr).unwrap();
+        assert_eq!(cache.hits(), hits_before + 1, "descriptor {i} not resident");
+        if let Some(seen) = per_descriptor[i].first() {
+            assert!(Arc::ptr_eq(seen, &planned), "descriptor {i} changed identity");
+        }
+    }
+}

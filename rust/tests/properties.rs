@@ -1,0 +1,304 @@
+//! Property-based suite for the unified facade: forward∘inverse ≈
+//! identity and Parseval's theorem across randomized shapes, grids,
+//! batch sizes, normalizations, and all `Algorithm` variants, for both
+//! C2C and the real R2C/C2R kinds.
+//!
+//! The offline vendor set carries no `proptest` (see
+//! `fftu::testing`), so the in-tree `forall` harness plays its role:
+//! deterministic per-case seeds, replayable failures, the same
+//! generate-and-check discipline.
+//!
+//! Generation strategy: every axis is drawn as `g^2 * m` with the
+//! per-axis grid factor `g`, so FFTU's `p_l^2 | n_l` rule holds by
+//! construction (last axis doubled for the real kinds, whose grid
+//! applies to the packed half shape). The other algorithms place
+//! processors themselves and may reject a random configuration; those
+//! cases skip that algorithm, but FFTU must always plan — a planning
+//! failure there fails the property.
+
+use fftu::api::{plan, Algorithm, Normalization, Transform};
+use fftu::fft::realnd::rfftn;
+use fftu::fft::{dft_nd, max_abs_diff, rel_l2_error, C64};
+use fftu::testing::{forall, Rng};
+use fftu::{prop_assert, Direction};
+
+/// Random (shape, per-axis grid) with `g_l^2 | n_l`; for `real` shapes
+/// the last axis is even and the constraint holds on the half shape.
+fn rand_shape_grid(rng: &mut Rng, d: usize, real: bool) -> (Vec<usize>, Vec<usize>) {
+    let mut shape = Vec::with_capacity(d);
+    let mut grid = Vec::with_capacity(d);
+    for l in 0..d {
+        let g = rng.range(1, 2);
+        let mut n = g * g * rng.range(1, 3);
+        if real && l == d - 1 {
+            n *= 2;
+        }
+        shape.push(n);
+        grid.push(g);
+    }
+    (shape, grid)
+}
+
+/// Every algorithm that can run a d-dimensional transform.
+fn candidate_algorithms(d: usize) -> Vec<Algorithm> {
+    let mut algos = vec![Algorithm::Fftu, Algorithm::Popovici];
+    if d >= 2 {
+        algos.push(Algorithm::slab());
+        algos.push(Algorithm::pencil(if d >= 3 { 2 } else { 1 }));
+        algos.push(Algorithm::Heffte);
+    }
+    algos
+}
+
+/// Complementary (forward, inverse) normalization pairs whose
+/// composition is the identity.
+const ROUNDTRIP_NORMS: [(Normalization, Normalization); 3] = [
+    (Normalization::None, Normalization::ByN),
+    (Normalization::Unitary, Normalization::Unitary),
+    (Normalization::ByN, Normalization::None),
+];
+
+fn rand_complex(n: usize, rng: &mut Rng) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+}
+
+fn rand_real(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n).map(|_| rng.f64_signed()).collect()
+}
+
+#[test]
+fn prop_forward_inverse_roundtrip_c2c() {
+    forall("forward∘inverse == identity (c2c)", 18, 0x1D01, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_shape_grid(rng, d, false);
+        let p: usize = grid.iter().product();
+        let batch = rng.range(1, 2);
+        let n: usize = shape.iter().product();
+        let x = rand_complex(batch * n, rng);
+        let (fwd_norm, inv_norm) = *rng.choose(&ROUNDTRIP_NORMS);
+        for algo in candidate_algorithms(d) {
+            let fwd = Transform::new(&shape).procs(p).normalization(fwd_norm).batch(batch);
+            let fwd = match plan(algo, &fwd) {
+                Ok(planned) => planned,
+                Err(e) => {
+                    if algo == Algorithm::Fftu {
+                        return Err(format!("fftu must plan {shape:?} p={p}: {e}"));
+                    }
+                    continue; // this algorithm cannot place p on this shape
+                }
+            };
+            let y = fwd.execute_batch(&x)?;
+            let inv = plan(
+                algo,
+                &Transform::new(&shape)
+                    .procs(p)
+                    .inverse()
+                    .normalization(inv_norm)
+                    .batch(batch),
+            )?;
+            let z = inv.execute_batch(&y.output)?;
+            let err = max_abs_diff(&z.output, &x);
+            prop_assert!(
+                err < 1e-8,
+                "{algo:?} {shape:?} p={p} batch={batch} norms {fwd_norm:?}/{inv_norm:?}: err {err}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parseval_c2c() {
+    forall("Parseval (c2c)", 18, 0x1D02, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_shape_grid(rng, d, false);
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x = rand_complex(n, rng);
+        let norm = *rng.choose(&[Normalization::None, Normalization::Unitary, Normalization::ByN]);
+        let ex: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        for algo in candidate_algorithms(d) {
+            let t = Transform::new(&shape).procs(p).normalization(norm);
+            let planned = match plan(algo, &t) {
+                Ok(planned) => planned,
+                Err(e) => {
+                    if algo == Algorithm::Fftu {
+                        return Err(format!("fftu must plan {shape:?} p={p}: {e}"));
+                    }
+                    continue;
+                }
+            };
+            let y = planned.execute(&x)?;
+            let ey: f64 = y.output.iter().map(|v| v.norm_sqr()).sum();
+            // sum |X|^2 = scale^2 * N * sum |x|^2 for any normalization.
+            let scale = norm.scale(n);
+            let want = scale * scale * n as f64 * ex;
+            prop_assert!(
+                (ey / want - 1.0).abs() < 1e-8,
+                "{algo:?} {shape:?} p={p} {norm:?}: energy {ey} vs {want}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_r2c_matches_full_complex_transform() {
+    forall("r2c == half of complex transform of real input", 18, 0x1D03, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_shape_grid(rng, d, true);
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x = rand_real(n, rng);
+        // Oracle: naive full complex DFT of the real-cast input, keeping
+        // the first n_d/2 + 1 bins of the last axis.
+        let xc: Vec<C64> = x.iter().map(|&v| C64::new(v, 0.0)).collect();
+        let full = dft_nd(&xc, &shape, Direction::Forward);
+        let n_last = shape[d - 1];
+        let hs = n_last / 2 + 1;
+        let outer = n / n_last;
+        let mut want = Vec::with_capacity(outer * hs);
+        for o in 0..outer {
+            want.extend_from_slice(&full[o * n_last..o * n_last + hs]);
+        }
+        for algo in candidate_algorithms(d) {
+            let t = Transform::new(&shape).procs(p).r2c();
+            let planned = match plan(algo, &t) {
+                Ok(planned) => planned,
+                Err(e) => {
+                    if algo == Algorithm::Fftu {
+                        return Err(format!("fftu must plan r2c {shape:?} p={p}: {e}"));
+                    }
+                    continue;
+                }
+            };
+            let got = planned.execute_r2c(&x)?;
+            let err = rel_l2_error(&got.output, &want);
+            prop_assert!(err < 1e-8, "{algo:?} r2c {shape:?} p={p}: err {err}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_r2c_c2r_roundtrip() {
+    forall("c2r∘r2c == identity", 18, 0x1D04, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_shape_grid(rng, d, true);
+        let p: usize = grid.iter().product();
+        let batch = rng.range(1, 2);
+        let n: usize = shape.iter().product();
+        let x = rand_real(batch * n, rng);
+        let (fwd_norm, inv_norm) = *rng.choose(&ROUNDTRIP_NORMS);
+        for algo in candidate_algorithms(d) {
+            let fwd = Transform::new(&shape).procs(p).r2c().normalization(fwd_norm).batch(batch);
+            let fwd = match plan(algo, &fwd) {
+                Ok(planned) => planned,
+                Err(e) => {
+                    if algo == Algorithm::Fftu {
+                        return Err(format!("fftu must plan r2c {shape:?} p={p}: {e}"));
+                    }
+                    continue;
+                }
+            };
+            let spec = fwd.execute_r2c_batch(&x)?;
+            let inv = plan(
+                algo,
+                &Transform::new(&shape)
+                    .procs(p)
+                    .c2r()
+                    .normalization(inv_norm)
+                    .batch(batch),
+            )?;
+            let back = inv.execute_c2r_batch(&spec.output)?;
+            let err =
+                x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            prop_assert!(
+                err < 1e-8,
+                "{algo:?} {shape:?} p={p} batch={batch} norms {fwd_norm:?}/{inv_norm:?}: err {err}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_r2c_parseval_with_hermitian_weights() {
+    forall("Parseval (r2c, Hermitian-weighted)", 18, 0x1D05, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_shape_grid(rng, d, true);
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x = rand_real(n, rng);
+        let planned = plan(Algorithm::Fftu, &Transform::new(&shape).procs(p).r2c())
+            .map_err(|e| format!("fftu must plan r2c {shape:?} p={p}: {e}"))?;
+        let spec = planned.execute_r2c(&x)?;
+        // Bins with 0 < k_d < n_d/2 stand in for their conjugate mirror
+        // too: weight 2. The self-conjugate planes k_d in {0, n_d/2}
+        // count once.
+        let h = shape[d - 1] / 2;
+        let mut energy = 0.0;
+        for (i, v) in spec.output.iter().enumerate() {
+            let k = i % (h + 1);
+            let w = if k == 0 || k == h { 1.0 } else { 2.0 };
+            energy += w * v.norm_sqr();
+        }
+        let ex: f64 = x.iter().map(|v| v * v).sum();
+        let want = n as f64 * ex;
+        prop_assert!(
+            (energy / want - 1.0).abs() < 1e-8,
+            "{shape:?} p={p}: energy {energy} vs {want}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fftu_single_alltoall_for_all_kinds_and_batches() {
+    forall("fftu: one all-to-all per transform, c2c and r2c", 15, 0x1D06, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_shape_grid(rng, d, true);
+        let batch = rng.range(1, 3);
+        let n: usize = shape.iter().product();
+        let c2c = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).batch(batch))
+            .map_err(String::from)?;
+        let exec = c2c.execute_batch(&rand_complex(batch * n, rng))?;
+        prop_assert!(
+            exec.report.comm_supersteps() == batch,
+            "c2c {shape:?} grid {grid:?}: {} comm steps for batch {batch}",
+            exec.report.comm_supersteps()
+        );
+        let r2c = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().batch(batch))
+            .map_err(String::from)?;
+        let exec = r2c.execute_r2c_batch(&rand_real(batch * n, rng))?;
+        prop_assert!(
+            exec.report.comm_supersteps() == batch,
+            "r2c {shape:?} grid {grid:?}: {} comm steps for batch {batch}",
+            exec.report.comm_supersteps()
+        );
+        Ok(())
+    });
+}
+
+/// The properties above randomize d in 1..=3; pin a 4D case as well so
+/// the suite demonstrably covers > 3 dimensions for both kinds.
+#[test]
+fn roundtrip_and_parseval_4d() {
+    let shape = [4usize, 2, 3, 8];
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(0x1D07);
+    let x = rand_real(n, &mut rng);
+    let want = rfftn(&x, &shape);
+    let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).procs(4).r2c()).unwrap();
+    let spec = fwd.execute_r2c(&x).unwrap();
+    assert!(rel_l2_error(&spec.output, &want) < 1e-10);
+    assert_eq!(spec.report.comm_supersteps(), 1);
+    let inv = plan(
+        Algorithm::Fftu,
+        &Transform::new(&shape).procs(4).c2r().normalization(Normalization::ByN),
+    )
+    .unwrap();
+    let back = inv.execute_c2r(&spec.output).unwrap();
+    let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+    assert!(err < 1e-10, "4d roundtrip err {err}");
+}
