@@ -1,0 +1,142 @@
+//! Engine benchmark (criterion-style, harness = false): old path vs new
+//! path for every layer the zero-allocation execution engine touched.
+//!
+//! Layers, each measured in isolation and end to end:
+//!
+//! 1. pack+twiddle: compiled strip program vs the retained odometer
+//!    reference (Alg. 3.1, same flops — the difference is pure indexing
+//!    and memory order);
+//! 2. scatter/gather: cyclic strip walk vs the generic owner_of sweep;
+//! 3. all-to-all: swap-based mailbox vs owned-buffer exchange;
+//! 4. full engine: `fftu_execute_batch_arena` (persistent workers) vs
+//!    `fftu_execute_batch_legacy` (the pre-PR engine, retained).
+//!
+//! `cli bench` wraps layer 4 into the JSON trajectory (`BENCH_pr3.json`);
+//! this binary is the drill-down view.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fftu::bsp::run_spmd;
+use fftu::fft::{C64, Planner};
+use fftu::fftu::{
+    fftu_execute_batch_arena, fftu_execute_batch_legacy, pack_twiddle, pack_twiddle_odometer,
+    ExecArena, FftuPlan, TwiddleTables,
+};
+use fftu::Direction;
+
+fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f(); // warm
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let planner = Planner::new();
+    println!("## engine benchmarks: old path vs new path\n");
+
+    // 1. pack+twiddle kernel, per-rank local volumes.
+    println!("| pack+twiddle | odometer (ms) | strips (ms) | speedup |");
+    println!("|---|---|---|---|");
+    for (shape, grid) in [
+        (vec![256usize, 256], vec![2usize, 2]),
+        (vec![64, 64, 64], vec![2, 2, 2]),
+        (vec![1 << 14, 16], vec![4, 2]),
+    ] {
+        let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner).unwrap());
+        let tables = TwiddleTables::new(&plan, &plan.dist.proc_coords(1));
+        let nl = plan.local_len();
+        let local: Vec<C64> = (0..nl).map(|i| C64::new(i as f64, 1.0)).collect();
+        let mut packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+        let reps = ((1 << 21) / nl).max(3);
+        let t_old = bench(reps, || {
+            pack_twiddle_odometer(&plan, &tables, &local, &mut packets, Direction::Forward);
+            std::hint::black_box(&packets);
+        });
+        let t_new = bench(reps, || {
+            pack_twiddle(&plan, &tables, &local, &mut packets, Direction::Forward);
+            std::hint::black_box(&packets);
+        });
+        println!(
+            "| {shape:?}/{grid:?} | {:.3} | {:.3} | {:.2}x |",
+            t_old * 1e3,
+            t_new * 1e3,
+            t_old / t_new
+        );
+    }
+
+    // 2. cyclic scatter: strip walk vs generic owner_of sweep.
+    println!("\n| scatter 256x256/[2,2] | time (ms) |");
+    println!("|---|---|");
+    let plan = Arc::new(FftuPlan::new(&[256, 256], &[2, 2], &planner).unwrap());
+    let n = plan.total();
+    let global: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -1.0)).collect();
+    let t_gen = bench(10, || {
+        std::hint::black_box(plan.dist.scatter_generic(&global));
+    });
+    let t_strip = bench(10, || {
+        std::hint::black_box(plan.dist.scatter(&global));
+    });
+    println!("| generic owner_of | {:.3} |", t_gen * 1e3);
+    println!("| strip walk | {:.3} |", t_strip * 1e3);
+
+    // 3. all-to-all: swap-based vs owned-buffer exchange (p = 4).
+    let p = 4;
+    let words = 1 << 16;
+    for (label, swap) in [("owned exchange", false), ("swap exchange", true)] {
+        let outcome = run_spmd(p, |ctx| {
+            let reps = 40;
+            let mut bufs: Vec<Vec<C64>> = (0..p).map(|_| vec![C64::ONE; words / p]).collect();
+            ctx.barrier();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                if swap {
+                    ctx.exchange_swap("bench", &mut bufs);
+                } else {
+                    let out: Vec<Vec<C64>> =
+                        (0..p).map(|_| vec![C64::ONE; words / p]).collect();
+                    let inc = ctx.exchange("bench", out);
+                    std::hint::black_box(&inc);
+                }
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        });
+        let wall = outcome.outputs.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "\n{label} p={p}, {words} words: {:.1} us ({:.2} GB/s)",
+            wall * 1e6,
+            (words * 16) as f64 / wall / 1e9
+        );
+    }
+
+    // 4. Full engine: legacy vs arena, the PR acceptance case.
+    println!("\n| full FFTU engine | legacy (ms) | arena (ms) | speedup |");
+    println!("|---|---|---|---|");
+    for (shape, grid) in [
+        (vec![256usize, 256], vec![2usize, 2]),
+        (vec![64, 64, 64], vec![2, 2, 2]),
+    ] {
+        let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner).unwrap());
+        let n = plan.total();
+        let global: Vec<C64> = (0..n).map(|i| C64::new((i % 11) as f64, 0.5)).collect();
+        let arena = ExecArena::new(plan.num_procs());
+        let reps = 5;
+        let t_old = bench(reps, || {
+            let out = fftu_execute_batch_legacy(&plan, &[&global], Direction::Forward);
+            std::hint::black_box(&out);
+        });
+        let t_new = bench(reps, || {
+            let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "| {shape:?}/{grid:?} | {:.3} | {:.3} | {:.2}x |",
+            t_old * 1e3,
+            t_new * 1e3,
+            t_old / t_new
+        );
+    }
+}

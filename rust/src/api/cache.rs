@@ -37,6 +37,32 @@ struct State {
     misses: u64,
 }
 
+/// Point-in-time [`PlanCache`] counters (see [`PlanCache::stats`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Requests answered from the cache (zero planning work).
+    pub hits: u64,
+    /// Requests that had to plan (and, racing aside, inserted).
+    pub misses: u64,
+    /// Plans currently resident.
+    pub len: usize,
+    /// Maximum resident plans before LRU eviction.
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Fraction of requests served without planning, in `[0, 1]`
+    /// (`1.0` for an untouched cache).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 /// A bounded, least-recently-used cache of [`PlannedFft`]s.
 pub struct PlanCache {
     capacity: usize,
@@ -120,6 +146,20 @@ impl PlanCache {
         self.state.lock().unwrap().misses
     }
 
+    /// One consistent snapshot of the cache counters (hits and misses
+    /// read under a single lock, so `hits + misses` equals the number of
+    /// `plan` calls that returned). `cli run --verbose` prints this for
+    /// perf debugging; services can export it to their metrics.
+    pub fn stats(&self) -> CacheStats {
+        let st = self.state.lock().unwrap();
+        CacheStats {
+            hits: st.hits,
+            misses: st.misses,
+            len: st.map.len(),
+            capacity: self.capacity,
+        }
+    }
+
     /// Drop every cached plan and reset the counters.
     pub fn clear(&self) {
         let mut st = self.state.lock().unwrap();
@@ -153,6 +193,25 @@ mod tests {
         assert_eq!(cache.hits(), 1);
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.len(), 1);
+        let stats = cache.stats();
+        assert_eq!(stats, CacheStats { hits: 1, misses: 1, len: 1, capacity: 4 });
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_snapshot_is_consistent() {
+        let cache = PlanCache::new(2);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, len: 0, capacity: 2 });
+        assert_eq!(cache.stats().hit_rate(), 1.0);
+        let t = Transform::new(&[16, 16]).procs(4);
+        for _ in 0..5 {
+            cache.plan(Algorithm::Fftu, &t).unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 5);
+        assert_eq!(s.misses, 1);
+        cache.clear();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, len: 0, capacity: 2 });
     }
 
     #[test]

@@ -48,7 +48,7 @@ pub mod error;
 pub mod plan;
 pub mod transform;
 
-pub use cache::PlanCache;
+pub use cache::{CacheStats, PlanCache};
 pub use error::FftError;
 pub use plan::{plan, Algorithm, DistFft, Execution, PlannedFft, RealExecution};
 pub use transform::{Grid, Kind, Normalization, Transform};

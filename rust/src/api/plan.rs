@@ -16,7 +16,7 @@ use crate::fft::realnd::{
     pack_pairs, retangle_half_spectrum, unpack_pairs, untangle_half_spectrum, wrap_flops,
 };
 use crate::fft::{C64, Planner};
-use crate::fftu::{choose_grid, fftu_execute_batch, fftu_pmax, FftuPlan};
+use crate::fftu::{choose_grid, fftu_execute_batch_arena, fftu_pmax, ExecArena, FftuPlan};
 
 use super::error::FftError;
 use super::transform::{Grid, Kind, Transform};
@@ -141,7 +141,11 @@ pub trait DistFft: Send + Sync {
 }
 
 enum Inner {
-    Fftu(Arc<FftuPlan>),
+    /// FFTU with its persistent [`ExecArena`]: per-rank workers (twiddle
+    /// tables, packet buffers, scratch) are built on the first execute
+    /// and live as long as the plan — a cached plan's steady-state
+    /// executes do zero per-rank allocation.
+    Fftu { plan: Arc<FftuPlan>, arena: ExecArena },
     Slab(SlabPlan),
     Pencil(PencilPlan),
     Heffte(HefftePlan),
@@ -191,7 +195,8 @@ pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError>
             let planner = Planner::new();
             let plan = Arc::new(FftuPlan::new(&t.shape, &grid, &planner)?);
             let p = plan.num_procs();
-            (Inner::Fftu(plan), Some(grid), p)
+            let arena = ExecArena::new(p);
+            (Inner::Fftu { plan, arena }, Some(grid), p)
         }
         Algorithm::Slab { out } => (Inner::Slab(SlabPlan::new(&t.shape, p, out)?), None, p),
         Algorithm::Pencil { r, out } => {
@@ -284,7 +289,7 @@ impl PlannedFft {
         let dir = self.t.direction;
         let inputs: Vec<&[C64]> = input.chunks(n).collect();
         let (mut outputs, report) = match &self.inner {
-            Inner::Fftu(plan) => fftu_execute_batch(plan, &inputs, dir),
+            Inner::Fftu { plan, arena } => fftu_execute_batch_arena(plan, arena, &inputs, dir),
             Inner::Slab(plan) => plan.execute_batch_global(&inputs, dir),
             Inner::Pencil(plan) => plan.execute_batch_global(&inputs, dir),
             Inner::Heffte(plan) => plan.execute_batch_global(&inputs, dir),

@@ -13,6 +13,7 @@
 use std::sync::Arc;
 
 use crate::api::FftError;
+use super::ScratchArena;
 use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
 use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
@@ -65,6 +66,8 @@ pub struct HefftePlan {
     stage_axis: Vec<usize>,
     redists: Vec<RedistPlan>,
     axis_plan: Vec<Arc<Plan>>,
+    /// Per-rank scratch persisted across executes (arena reuse).
+    scratch: ScratchArena,
 }
 
 impl HefftePlan {
@@ -76,7 +79,15 @@ impl HefftePlan {
         }
         let planner = Planner::new();
         let axis_plan: Vec<Arc<Plan>> = shape.iter().map(|&n| planner.plan(n)).collect();
-        Ok(HefftePlan { shape: shape.to_vec(), p, dists, stage_axis, redists, axis_plan })
+        Ok(HefftePlan {
+            shape: shape.to_vec(),
+            p,
+            dists,
+            stage_axis,
+            redists,
+            axis_plan,
+            scratch: ScratchArena::new(p),
+        })
     }
 
     pub fn num_procs(&self) -> usize {
@@ -96,17 +107,35 @@ impl HefftePlan {
     ) -> (Vec<Vec<C64>>, CostReport) {
         let dist_brick = &self.dists[0];
         let locals: Vec<Vec<Vec<C64>>> = inputs.iter().map(|g| dist_brick.scatter(g)).collect();
+        // Largest scratch any stage needs, known at plan time.
+        let max_axis = *self.shape.iter().max().unwrap();
+        let scratch_len = self
+            .dists
+            .iter()
+            .map(|d| d.local_len())
+            .fold(4 * max_axis, usize::max);
+        // One session per arena; a concurrent execute of this same plan
+        // falls back to transient scratch (see ScratchArena).
+        let arena_session = self.scratch.begin_session();
         let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
-            let max_axis = *self.shape.iter().max().unwrap();
-            let mut scratch = vec![C64::ZERO; dist_brick.local_len().max(4 * max_axis)];
+            let mut scratch_guard;
+            let mut owned_scratch;
+            let scratch: &mut [C64] = match &arena_session {
+                Some(_) => {
+                    scratch_guard = self.scratch.lease(ctx.rank(), scratch_len);
+                    scratch_guard.as_mut_slice()
+                }
+                None => {
+                    owned_scratch = vec![C64::ZERO; scratch_len];
+                    owned_scratch.as_mut_slice()
+                }
+            };
             let mut outs = Vec::with_capacity(inputs.len());
             for item in &locals {
                 let mut local = item[ctx.rank()].clone();
                 for (i, &l) in self.stage_axis.iter().enumerate() {
                     local = redistribute(ctx, &self.redists[i], "heffte-reshape", &local);
-                    if scratch.len() < local.len() {
-                        scratch.resize(local.len(), C64::ZERO);
-                    }
+                    debug_assert!(scratch.len() >= local.len(), "plan-time scratch bound wrong");
                     ctx.begin_comp("heffte-axis");
                     let lshape = self.dists[i + 1].local_shape();
                     transform_axis(&mut local, lshape, l, &self.axis_plan[l], &mut scratch, dir);

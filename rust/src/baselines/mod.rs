@@ -38,3 +38,51 @@ pub enum OutputDist {
     Same,
     Different,
 }
+
+use std::sync::{Mutex, MutexGuard};
+
+use crate::fft::C64;
+
+/// Per-rank persistent scratch, shared across the execute calls of one
+/// baseline plan — the baselines' share of the PR's arena design, so
+/// FFTU's zero-allocation steady state is compared against baselines
+/// that also stopped reallocating their scratch every call (fairness of
+/// the wall-clock comparison). Leases grow on first use and then stay.
+///
+/// Leases are held across BSP barriers, so the arena admits ONE SPMD
+/// session at a time: drivers call [`ScratchArena::begin_session`]
+/// before `run_spmd` and fall back to transient per-call scratch when
+/// another session owns the arena (two interleaved sessions holding
+/// each other's rank slots across barriers would cross-deadlock).
+pub(crate) struct ScratchArena {
+    session: Mutex<()>,
+    slots: Vec<Mutex<Vec<C64>>>,
+}
+
+impl ScratchArena {
+    pub fn new(p: usize) -> Self {
+        ScratchArena {
+            session: Mutex::new(()),
+            slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// Claim the arena for one SPMD session; `None` means a concurrent
+    /// execute owns it and the caller must use transient scratch.
+    pub fn begin_session(&self) -> Option<MutexGuard<'_, ()>> {
+        self.session.try_lock().ok()
+    }
+
+    /// Lock rank `rank`'s scratch, growing it to at least `min_len`
+    /// (zero-filled) — a no-op after the first execute. Only call while
+    /// holding the [`Self::begin_session`] guard.
+    pub fn lease(&self, rank: usize, min_len: usize) -> MutexGuard<'_, Vec<C64>> {
+        let mut guard = self.slots[rank].lock().unwrap();
+        if guard.len() < min_len {
+            let len = guard.len();
+            guard.reserve_exact(min_len - len);
+            guard.resize(min_len, C64::ZERO);
+        }
+        guard
+    }
+}

@@ -15,6 +15,7 @@
 use std::sync::Arc;
 
 use crate::api::FftError;
+use super::ScratchArena;
 use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
 use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
@@ -145,6 +146,9 @@ pub struct PencilPlan {
     redists: Vec<RedistPlan>,
     back: RedistPlan,
     axis_plan: Vec<Arc<Plan>>,
+    /// Per-rank scratch persisted across executes (arena reuse, sized
+    /// for the largest stage at plan time).
+    scratch: ScratchArena,
 }
 
 impl PencilPlan {
@@ -171,6 +175,7 @@ impl PencilPlan {
             redists,
             back,
             axis_plan,
+            scratch: ScratchArena::new(p),
         })
     }
 
@@ -203,10 +208,29 @@ impl PencilPlan {
         // Axes r..d are local in the input distribution and are
         // transformed up front; axes 0..r are covered by the stages.
         let first_axes: Vec<usize> = (self.r..d).collect();
+        // Largest scratch any stage needs, known at plan time.
+        let max_axis = *self.shape.iter().max().unwrap();
+        let scratch_len = self
+            .stages
+            .iter()
+            .map(|(dist, _)| dist.local_len())
+            .fold(self.dist_in.local_len().max(4 * max_axis), usize::max);
+        // One session per arena; a concurrent execute of this same plan
+        // falls back to transient scratch (see ScratchArena).
+        let arena_session = self.scratch.begin_session();
         let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
-            let max_axis = *self.shape.iter().max().unwrap();
-            let mut scratch =
-                vec![C64::ZERO; self.dist_in.local_len().max(4 * max_axis)];
+            let mut scratch_guard;
+            let mut owned_scratch;
+            let scratch: &mut [C64] = match &arena_session {
+                Some(_) => {
+                    scratch_guard = self.scratch.lease(ctx.rank(), scratch_len);
+                    scratch_guard.as_mut_slice()
+                }
+                None => {
+                    owned_scratch = vec![C64::ZERO; scratch_len];
+                    owned_scratch.as_mut_slice()
+                }
+            };
             let mut outs = Vec::with_capacity(inputs.len());
             for item in &locals {
                 let mut local = item[ctx.rank()].clone();
@@ -220,9 +244,7 @@ impl PencilPlan {
                 // Redistribution stages.
                 for (i, (dist, now)) in self.stages.iter().enumerate() {
                     local = redistribute(ctx, &self.redists[i], "pencil-transpose", &local);
-                    if scratch.len() < local.len() {
-                        scratch.resize(local.len(), C64::ZERO);
-                    }
+                    debug_assert!(scratch.len() >= local.len(), "plan-time scratch bound wrong");
                     ctx.begin_comp("pencil-stage-axes");
                     let lshape = dist.local_shape();
                     for &l in now {

@@ -42,6 +42,8 @@ pub struct PopoviciPlan {
     axis_plans: Vec<Arc<Plan>>,
     /// `F_{p_l}` of each round's strided transform.
     fp_plans: Vec<Arc<Plan>>,
+    /// Per-rank scratch persisted across executes (arena reuse).
+    scratch: super::ScratchArena,
 }
 
 impl PopoviciPlan {
@@ -80,6 +82,7 @@ impl PopoviciPlan {
             view_plans,
             axis_plans,
             fp_plans,
+            scratch: super::ScratchArena::new(pgrid.iter().product()),
         })
     }
 
@@ -100,10 +103,25 @@ impl PopoviciPlan {
         let d = self.shape.len();
         let p = self.num_procs();
         let locals: Vec<Vec<Vec<C64>>> = inputs.iter().map(|g| self.dist.scatter(g)).collect();
+        let max_axis = *self.shape.iter().max().unwrap();
+        let scratch_len = self.dist.local_len().max(4 * max_axis);
+        // One session per arena; a concurrent execute of this same plan
+        // falls back to transient scratch (see ScratchArena).
+        let arena_session = self.scratch.begin_session();
         let outcome = run_spmd(p, |ctx: &mut Ctx| {
             let coords = self.dist.proc_coords(ctx.rank());
-            let max_axis = *self.shape.iter().max().unwrap();
-            let mut scratch = vec![C64::ZERO; self.dist.local_len().max(4 * max_axis)];
+            let mut scratch_guard;
+            let mut owned_scratch;
+            let scratch: &mut [C64] = match &arena_session {
+                Some(_) => {
+                    scratch_guard = self.scratch.lease(ctx.rank(), scratch_len);
+                    scratch_guard.as_mut_slice()
+                }
+                None => {
+                    owned_scratch = vec![C64::ZERO; scratch_len];
+                    owned_scratch.as_mut_slice()
+                }
+            };
             let mut outs = Vec::with_capacity(inputs.len());
             for item in &locals {
                 let mut local = item[ctx.rank()].clone();

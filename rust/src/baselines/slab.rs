@@ -21,7 +21,7 @@ use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
 use crate::fft::{C64, Direction, Plan, Planner};
 
-use super::OutputDist;
+use super::{OutputDist, ScratchArena};
 
 /// Maximum processors for the slab algorithm: `min(n_1, N/n_1)` (§1.2).
 pub fn slab_pmax(shape: &[usize]) -> usize {
@@ -96,6 +96,10 @@ pub struct SlabPlan {
     plan_axis0: Arc<Plan>,
     local_in_shape: Vec<usize>,
     local_mid_shape: Vec<usize>,
+    /// Per-rank scratch persisted across executes (arena reuse — the
+    /// baselines match FFTU's no-per-call-scratch discipline so timing
+    /// comparisons stay fair).
+    scratch: ScratchArena,
 }
 
 impl SlabPlan {
@@ -121,6 +125,7 @@ impl SlabPlan {
             plan_axis0,
             local_in_shape,
             local_mid_shape,
+            scratch: ScratchArena::new(p),
         })
     }
 
@@ -146,13 +151,27 @@ impl SlabPlan {
         let locals: Vec<Vec<Vec<C64>>> =
             inputs.iter().map(|g| self.dist_in.scatter(g)).collect();
         let mid_local = self.dist_mid.local_len();
+        let scratch_len = self
+            .dist_in
+            .local_len()
+            .max(mid_local)
+            .max(4 * self.shape.iter().copied().max().unwrap());
+        // One session per arena; a concurrent execute of this same plan
+        // falls back to transient scratch (see ScratchArena).
+        let arena_session = self.scratch.begin_session();
         let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
-            let scratch_len = self
-                .dist_in
-                .local_len()
-                .max(mid_local)
-                .max(4 * self.shape.iter().copied().max().unwrap());
-            let mut scratch = vec![C64::ZERO; scratch_len];
+            let mut scratch_guard;
+            let mut owned_scratch;
+            let scratch: &mut [C64] = match &arena_session {
+                Some(_) => {
+                    scratch_guard = self.scratch.lease(ctx.rank(), scratch_len);
+                    scratch_guard.as_mut_slice()
+                }
+                None => {
+                    owned_scratch = vec![C64::ZERO; scratch_len];
+                    owned_scratch.as_mut_slice()
+                }
+            };
             let mut outs = Vec::with_capacity(inputs.len());
             for item in &locals {
                 let mut local = item[ctx.rank()].clone();

@@ -47,6 +47,14 @@ impl ProcLedger {
         Self::default()
     }
 
+    /// Pre-grow the superstep log so a known number of upcoming
+    /// `begin` calls cannot reallocate it. Steady-state loops (and the
+    /// zero-allocation regression suite) reserve the whole run up front;
+    /// the ledger then records supersteps without touching the heap.
+    pub fn reserve(&mut self, additional: usize) {
+        self.steps.reserve(additional);
+    }
+
     pub fn begin(&mut self, kind: SuperstepKind, label: &'static str) {
         self.steps.push(ProcSuperstep {
             kind,

@@ -63,45 +63,71 @@ impl<'a> Ctx<'a> {
     /// is not charged). Returns `incoming[i]` = packet from processor
     /// `i`. Synchronizes all processors (this is the communication
     /// superstep; `l` is charged once).
-    pub fn exchange(&mut self, label: &'static str, outgoing: Vec<Vec<C64>>) -> Vec<Vec<C64>> {
+    ///
+    /// Thin owned-value wrapper over [`Ctx::exchange_swap`]; steady-state
+    /// callers (e.g. [`crate::fftu::Worker`]) hold the buffer vector
+    /// across supersteps and call `exchange_swap` directly, which keeps
+    /// the hot path allocation-free.
+    pub fn exchange(&mut self, label: &'static str, mut outgoing: Vec<Vec<C64>>) -> Vec<Vec<C64>> {
+        self.exchange_swap(label, &mut outgoing);
+        outgoing
+    }
+
+    /// Allocation-free all-to-all: on entry `bufs[j]` is the packet for
+    /// processor `j`; on return `bufs[i]` is the packet *from* processor
+    /// `i`. Buffers move through the mailbox by pointer swap — the heap
+    /// allocation behind each `Vec` migrates to the receiving rank and is
+    /// recycled as that rank's next outgoing buffer, so a steady-state
+    /// exchange performs zero heap allocations.
+    ///
+    /// Lock discipline: the self packet never touches the mailbox
+    /// (`bufs[rank]` stays in place), and **empty packets skip the slot
+    /// lock entirely** — the receiver interprets an undisturbed slot as
+    /// an empty packet. The ledger's `h` is computed from packet lengths
+    /// exactly as before (empty packets contribute zero words), so cost
+    /// accounting is bit-identical to the locking-everything variant.
+    pub fn exchange_swap(&mut self, label: &'static str, bufs: &mut [Vec<C64>]) {
         let p = self.shared.p;
-        assert_eq!(outgoing.len(), p, "exchange needs one packet per processor");
+        assert_eq!(bufs.len(), p, "exchange needs one packet per processor");
         self.ledger.begin(SuperstepKind::Communication, label);
-        let out_words: usize = outgoing
+        let out_words: usize = bufs
             .iter()
             .enumerate()
-            .filter(|(j, _)| *j != self.rank)
+            .filter(|(j, v)| *j != self.rank && !v.is_empty())
             .map(|(_, v)| v.len())
             .sum();
-        // Deposit packets.
-        for (j, packet) in outgoing.into_iter().enumerate() {
+        // Deposit packets (skip self and empty slots — no lock taken).
+        for (j, packet) in bufs.iter_mut().enumerate() {
+            if j == self.rank || packet.is_empty() {
+                continue;
+            }
             let mut slot = self.shared.slots[self.rank * p + j].lock().unwrap();
             debug_assert!(slot.is_none(), "mailbox slot reused before drain");
-            *slot = Some(packet);
+            *slot = Some(std::mem::take(packet));
         }
         self.shared.barrier.wait();
-        // Collect packets addressed to us.
-        let mut incoming = Vec::with_capacity(p);
+        // Collect packets addressed to us. A slot left `None` means the
+        // sender's packet was empty (it skipped the deposit lock).
         let mut in_words = 0usize;
-        for i in 0..p {
-            let packet = self.shared.slots[i * p + self.rank]
-                .lock()
-                .unwrap()
-                .take()
-                .expect("missing packet: SPMD exchange mismatch");
-            if i != self.rank {
-                in_words += packet.len();
+        for (i, buf) in bufs.iter_mut().enumerate() {
+            if i == self.rank {
+                continue;
             }
-            incoming.push(packet);
+            match self.shared.slots[i * p + self.rank].lock().unwrap().take() {
+                Some(packet) => {
+                    in_words += packet.len();
+                    *buf = packet;
+                }
+                None => buf.clear(),
+            }
         }
         // Second barrier: nobody may start depositing the next
         // exchange's packets until every slot has been drained.
         self.shared.barrier.wait();
-        let mem_words: usize = incoming.iter().map(|v| v.len()).sum();
+        let mem_words: usize = bufs.iter().map(|v| v.len()).sum();
         self.ledger.charge_words(out_words, in_words);
         // Pack + unpack both traverse the full local volume.
         self.ledger.charge_mem_words(2 * mem_words);
-        incoming
     }
 
     /// Barrier-only synchronization (used by timing harnesses to align
@@ -216,6 +242,63 @@ mod tests {
         for out in outcome.outputs {
             assert_eq!(out.re, want_re);
         }
+    }
+
+    #[test]
+    fn exchange_swap_recycles_buffers_and_skips_empty_packets() {
+        let p = 3;
+        let outcome = run_spmd(p, |ctx| {
+            let s = ctx.rank();
+            // Rank s sends to j only when s + j is even; empty otherwise.
+            // Empty packets never take a mailbox lock, and the receiver
+            // sees them as empty buffers.
+            let mut bufs: Vec<Vec<C64>> = (0..p)
+                .map(|j| {
+                    if (s + j) % 2 == 0 {
+                        vec![C64::new(s as f64, j as f64); 2]
+                    } else {
+                        Vec::new()
+                    }
+                })
+                .collect();
+            ctx.exchange_swap("swap", &mut bufs);
+            for (i, pkt) in bufs.iter().enumerate() {
+                if (i + s) % 2 == 0 {
+                    assert_eq!(pkt.len(), 2, "rank {s} from {i}");
+                    assert_eq!(pkt[0], C64::new(i as f64, s as f64));
+                } else {
+                    assert!(pkt.is_empty(), "rank {s} from {i}");
+                }
+            }
+            s
+        });
+        // Only the 0 <-> 2 pair exchanges (2 words each way); rank 1 is
+        // idle. The ledger must charge exactly the nonempty traffic.
+        assert_eq!(outcome.report.supersteps[0].h_max, 2);
+        assert_eq!(outcome.report.supersteps[0].words_total, 4);
+    }
+
+    #[test]
+    fn exchange_swap_steady_state_reuses_capacity() {
+        // Across repeated exchanges the same buffer allocations circulate
+        // between ranks: every buffer a rank holds after round k has the
+        // capacity some rank allocated before round 1.
+        let p = 2;
+        run_spmd(p, |ctx| {
+            let mut bufs: Vec<Vec<C64>> = (0..p).map(|_| vec![C64::ONE; 8]).collect();
+            for round in 0..4 {
+                for b in bufs.iter_mut() {
+                    b.clear();
+                    b.extend(std::iter::repeat(C64::new(round as f64, 0.0)).take(8));
+                    assert_eq!(b.capacity(), 8, "buffer grew unexpectedly");
+                }
+                ctx.exchange_swap("steady", &mut bufs);
+                for b in &bufs {
+                    assert_eq!(b.len(), 8);
+                    assert_eq!(b.capacity(), 8);
+                }
+            }
+        });
     }
 
     #[test]

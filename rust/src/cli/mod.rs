@@ -34,8 +34,17 @@ COMMANDS:
                --inverse           inverse transform (1/N-normalized)
                --reps R            timed repetitions (default 3; the plan is
                                    built once and reused — plan-cache hits)
+               --verbose           print plan-cache statistics (hits/misses/
+                                   residency/hit rate) after the run
                --config FILE       key=value job file (flags override);
                                    see examples/configs/
+  bench      engine benchmark trajectory: times the retained pre-PR engine
+             (per-call workers, odometer pack, allocating exchange) against
+             the compiled strip-program/arena engine and writes the results
+             as JSON (default BENCH_pr3.json)
+               --quick             tiny shapes, few reps (CI smoke)
+               --reps R            timed repetitions per case (default 5)
+               --out FILE          output path (default BENCH_pr3.json)
   table      regenerate a paper table: `fftu table 4.1|4.2|4.3 [--executed]`
   pmax       print the E-pmax processor-ceiling comparison
   commsteps  communication supersteps per algorithm
@@ -66,6 +75,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         Some("run") => cmd_run(&args),
+        Some("bench") => cmd_bench(&args),
         Some("table") => cmd_table(&args),
         Some("pmax") => {
             println!("{}", report::pmax_table().render());
@@ -243,10 +253,120 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 cache.misses(),
                 cache.hits(),
             );
+            if args.flag("verbose") || cfg.get_bool("verbose")?.unwrap_or(false) {
+                let stats = cache.stats();
+                println!(
+                    "plan cache stats: {} hits / {} misses ({:.1}% hit rate), \
+                     {} of {} plans resident",
+                    stats.hits,
+                    stats.misses,
+                    100.0 * stats.hit_rate(),
+                    stats.len,
+                    stats.capacity,
+                );
+            }
             Ok(())
         }
         (a, e) => Err(format!("unsupported combination --algo {a} --engine {e}")),
     }
+}
+
+/// One benchmark case: legacy vs compiled engine on a c2c FFTU run.
+struct BenchCase {
+    name: &'static str,
+    shape: Vec<usize>,
+    grid: Vec<usize>,
+}
+
+/// `fftu bench` — the PR 3 benchmark trajectory. Times the retained
+/// pre-PR engine ([`crate::fftu::fftu_execute_batch_legacy`]: per-call
+/// worker construction, odometer packing, allocating exchange, generic
+/// scatter/gather) against the compiled engine
+/// ([`crate::fftu::fftu_execute_batch_arena`]: strip programs, arena
+/// workers, swap exchange, strip scatter/gather) on the same plan and
+/// input, and writes a JSON record so every future PR can extend the
+/// trajectory.
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    use crate::fftu::{fftu_execute_batch_arena, fftu_execute_batch_legacy, ExecArena};
+
+    let quick = args.flag("quick");
+    let reps = args.get_usize("reps")?.unwrap_or(if quick { 2 } else { 5 });
+    if reps == 0 {
+        return Err("--reps must be >= 1".into());
+    }
+    let out_path = args.get("out").unwrap_or("BENCH_pr3.json").to_string();
+    let cases: Vec<BenchCase> = if quick {
+        vec![BenchCase { name: "c2c_16x16_p4", shape: vec![16, 16], grid: vec![2, 2] }]
+    } else {
+        vec![
+            // The acceptance case: 256x256 c2c at p = 4.
+            BenchCase { name: "c2c_256x256_p4", shape: vec![256, 256], grid: vec![2, 2] },
+            BenchCase { name: "c2c_64x64x64_p8", shape: vec![64, 64, 64], grid: vec![2, 2, 2] },
+            BenchCase { name: "c2c_4096x16_p4", shape: vec![4096, 16], grid: vec![4, 1] },
+        ]
+    };
+
+    let planner = Planner::new();
+    let mut rng = Rng::new(0xBE7C);
+    let mut lines = Vec::new();
+    println!("| case | legacy ms | engine ms | speedup |");
+    println!("|---|---|---|---|");
+    for case in &cases {
+        let plan = Arc::new(FftuPlan::new(&case.shape, &case.grid, &planner)?);
+        let n = plan.total();
+        let global: Vec<C64> =
+            (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+        let arena = ExecArena::new(plan.num_procs());
+
+        // Warm both paths (first arena execute builds the workers), then
+        // time `reps` single-transform executes each and keep the mean.
+        let (warm_new, _) = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
+        let (warm_old, _) = fftu_execute_batch_legacy(&plan, &[&global], Direction::Forward);
+        if warm_new != warm_old {
+            return Err(format!("bench {}: engines disagree", case.name));
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let out = fftu_execute_batch_legacy(&plan, &[&global], Direction::Forward);
+            std::hint::black_box(&out);
+        }
+        let legacy_s = t0.elapsed().as_secs_f64() / reps as f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
+            std::hint::black_box(&out);
+        }
+        let engine_s = t0.elapsed().as_secs_f64() / reps as f64;
+        let speedup = legacy_s / engine_s;
+        let model_flops = 5.0 * n as f64 * (n as f64).log2();
+        println!(
+            "| {} | {:.3} | {:.3} | {:.2}x |",
+            case.name,
+            legacy_s * 1e3,
+            engine_s * 1e3,
+            speedup
+        );
+        lines.push(format!(
+            "    {{\"name\": \"{}\", \"shape\": {:?}, \"grid\": {:?}, \"kind\": \"c2c\", \
+             \"reps\": {reps}, \"legacy_s_per_transform\": {legacy_s:.9}, \
+             \"engine_s_per_transform\": {engine_s:.9}, \"speedup\": {speedup:.4}, \
+             \"engine_transforms_per_s\": {:.3}, \"model_gflops_rate\": {:.4}}}",
+            case.name,
+            case.shape,
+            case.grid,
+            1.0 / engine_s,
+            model_flops / engine_s / 1e9,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"pr\": 3,\n  \"harness\": \"fftu bench\",\n  \"quick\": {quick},\n  \
+         \"engine\": \"strip-program + ExecArena + swap exchange\",\n  \
+         \"baseline\": \"pre-PR odometer engine (retained)\",\n  \"cases\": [\n{}\n  ]\n}}\n",
+        lines.join(",\n")
+    );
+    std::fs::write(&out_path, &json).map_err(|e| format!("writing {out_path}: {e}"))?;
+    println!("\nwrote {out_path}");
+    Ok(())
 }
 
 fn cmd_table(args: &Args) -> Result<(), String> {

@@ -250,20 +250,56 @@ impl GridDist {
         ravel(&self.global_of(rank, loff), &self.shape)
     }
 
+    /// `true` when every axis is cyclic — the distribution FFTU starts
+    /// and ends in, and the one whose periodicity admits the compiled
+    /// strip walk used by [`Self::scatter`]/[`Self::gather`].
+    pub fn is_fully_cyclic(&self) -> bool {
+        self.axes.iter().all(|a| matches!(a, AxisDist::Cyclic { .. }))
+    }
+
     /// Split a global row-major array into per-rank local arrays.
+    ///
+    /// Fully cyclic distributions take the strip walk (sequential
+    /// per-rank writes, strided reads, no per-element owner arithmetic);
+    /// everything else falls back to [`Self::scatter_generic`].
     pub fn scatter(&self, global: &[C64]) -> Vec<Vec<C64>> {
         assert_eq!(global.len(), self.total(), "scatter: global length mismatch");
+        if !self.is_fully_cyclic() {
+            return self.scatter_generic(global);
+        }
         let p = self.num_procs();
         let mut locals = vec![vec![C64::ZERO; self.local_len()]; p];
-        self.for_each_global(|off, rank, loff| locals[rank][loff] = global[off]);
+        self.for_each_cyclic_strip(|row_base, rank_pre, loff_pre, pd, ld| {
+            for j in 0..pd {
+                let dst = &mut locals[rank_pre * pd + j][loff_pre * ld..(loff_pre + 1) * ld];
+                let mut src = row_base + j;
+                for v in dst {
+                    *v = global[src];
+                    src += pd;
+                }
+            }
+        });
         locals
     }
 
-    /// Reassemble the global array from per-rank local arrays.
+    /// Reassemble the global array from per-rank local arrays (strip
+    /// walk for fully cyclic distributions, generic otherwise).
     pub fn gather(&self, locals: &[Vec<C64>]) -> Vec<C64> {
         assert_eq!(locals.len(), self.num_procs(), "gather: wrong number of locals");
+        if !self.is_fully_cyclic() {
+            return self.gather_generic(locals);
+        }
         let mut global = vec![C64::ZERO; self.total()];
-        self.for_each_global(|off, rank, loff| global[off] = locals[rank][loff]);
+        self.for_each_cyclic_strip(|row_base, rank_pre, loff_pre, pd, ld| {
+            for j in 0..pd {
+                let src = &locals[rank_pre * pd + j][loff_pre * ld..(loff_pre + 1) * ld];
+                let mut dst = row_base + j;
+                for v in src {
+                    global[dst] = *v;
+                    dst += pd;
+                }
+            }
+        });
         global
     }
 
@@ -275,6 +311,50 @@ impl GridDist {
     pub fn gather_batch(&self, outputs: &[Vec<Vec<C64>>]) -> Vec<Vec<C64>> {
         assert_eq!(outputs.len(), self.num_procs(), "gather_batch: wrong number of ranks");
         let batch = outputs.first().map(|o| o.len()).unwrap_or(0);
+        if !self.is_fully_cyclic() {
+            return self.gather_batch_generic(outputs);
+        }
+        let mut results = vec![vec![C64::ZERO; self.total()]; batch];
+        self.for_each_cyclic_strip(|row_base, rank_pre, loff_pre, pd, ld| {
+            for (b, res) in results.iter_mut().enumerate() {
+                for j in 0..pd {
+                    let src = &outputs[rank_pre * pd + j][b][loff_pre * ld..(loff_pre + 1) * ld];
+                    let mut dst = row_base + j;
+                    for v in src {
+                        res[dst] = *v;
+                        dst += pd;
+                    }
+                }
+            }
+        });
+        results
+    }
+
+    /// Distribution-agnostic scatter: one `owner_of` computation per
+    /// element. Retained as the reference implementation (tests compare
+    /// the strip walk against it) and as part of the pre-PR legacy
+    /// engine the benchmark trajectory measures.
+    pub fn scatter_generic(&self, global: &[C64]) -> Vec<Vec<C64>> {
+        assert_eq!(global.len(), self.total(), "scatter: global length mismatch");
+        let p = self.num_procs();
+        let mut locals = vec![vec![C64::ZERO; self.local_len()]; p];
+        self.for_each_global(|off, rank, loff| locals[rank][loff] = global[off]);
+        locals
+    }
+
+    /// Distribution-agnostic gather (see [`Self::scatter_generic`]).
+    pub fn gather_generic(&self, locals: &[Vec<C64>]) -> Vec<C64> {
+        assert_eq!(locals.len(), self.num_procs(), "gather: wrong number of locals");
+        let mut global = vec![C64::ZERO; self.total()];
+        self.for_each_global(|off, rank, loff| global[off] = locals[rank][loff]);
+        global
+    }
+
+    /// Distribution-agnostic batched gather (see
+    /// [`Self::scatter_generic`]).
+    pub fn gather_batch_generic(&self, outputs: &[Vec<Vec<C64>>]) -> Vec<Vec<C64>> {
+        assert_eq!(outputs.len(), self.num_procs(), "gather_batch: wrong number of ranks");
+        let batch = outputs.first().map(|o| o.len()).unwrap_or(0);
         let mut results = vec![vec![C64::ZERO; self.total()]; batch];
         self.for_each_global(|off, rank, loff| {
             for (b, res) in results.iter_mut().enumerate() {
@@ -282,6 +362,40 @@ impl GridDist {
             }
         });
         results
+    }
+
+    /// Strip walk over a fully cyclic distribution: invokes `f(row_base,
+    /// rank_prefix, loff_prefix, p_d, n_d/p_d)` once per global inner
+    /// row, where `row_base` is the row's global offset and the prefixes
+    /// fold the leading axes' rank coordinates and local indices. Within
+    /// a row, global element `j + k*p_d` belongs to rank
+    /// `rank_prefix*p_d + j` at local offset `loff_prefix*(n_d/p_d) + k`
+    /// — `p_d` strips of sequential local offsets.
+    fn for_each_cyclic_strip(&self, mut f: impl FnMut(usize, usize, usize, usize, usize)) {
+        let d = self.shape.len();
+        let nd = self.shape[d - 1];
+        let pd = self.grid[d - 1];
+        let ld = self.local_shape[d - 1];
+        let rows = self.total() / nd;
+        let mut idx = vec![0usize; d.saturating_sub(1)];
+        let mut row_base = 0usize;
+        for _ in 0..rows {
+            let mut rank_pre = 0usize;
+            let mut loff_pre = 0usize;
+            for l in 0..d - 1 {
+                rank_pre = rank_pre * self.grid[l] + idx[l] % self.grid[l];
+                loff_pre = loff_pre * self.local_shape[l] + idx[l] / self.grid[l];
+            }
+            f(row_base, rank_pre, loff_pre, pd, ld);
+            row_base += nd;
+            for l in (0..d - 1).rev() {
+                idx[l] += 1;
+                if idx[l] < self.shape[l] {
+                    break;
+                }
+                idx[l] = 0;
+            }
+        }
     }
 
     /// Odometer over all global elements, calling `f(global_offset,
@@ -598,6 +712,47 @@ mod tests {
             }
             assert_eq!(dist.gather(&locals), global);
         }
+    }
+
+    #[test]
+    fn cyclic_strip_walk_matches_generic_paths() {
+        // The compiled strip scatter/gather must agree element-for-element
+        // with the distribution-agnostic owner_of sweep, across ranks,
+        // shapes, and batch sizes.
+        let mut rng = Rng::new(0x57B);
+        for (shape, grid) in [
+            (vec![12usize], vec![3usize]),
+            (vec![8, 6], vec![2, 3]),
+            (vec![4, 6, 8], vec![2, 3, 2]),
+            (vec![2, 4, 2, 6], vec![1, 2, 2, 3]),
+        ] {
+            let dist = GridDist::cyclic(&shape, &grid).unwrap();
+            assert!(dist.is_fully_cyclic());
+            let n = dist.total();
+            let global: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+            let fast = dist.scatter(&global);
+            let slow = dist.scatter_generic(&global);
+            assert_eq!(fast, slow, "scatter mismatch for {shape:?}/{grid:?}");
+            assert_eq!(dist.gather(&fast), dist.gather_generic(&slow));
+            // Batched gather: two items per rank.
+            let outputs: Vec<Vec<Vec<C64>>> = fast
+                .iter()
+                .map(|l| {
+                    let mut b = l.clone();
+                    for v in b.iter_mut() {
+                        *v = v.scale(2.0);
+                    }
+                    vec![l.clone(), b]
+                })
+                .collect();
+            let batched = dist.gather_batch(&outputs);
+            let batched_ref = dist.gather_batch_generic(&outputs);
+            assert_eq!(batched, batched_ref, "gather_batch mismatch for {shape:?}/{grid:?}");
+        }
+        // Non-cyclic distributions must keep using the generic path.
+        let block = GridDist::blocks(&[8, 6], &[4, 1]).unwrap();
+        assert!(!block.is_fully_cyclic());
     }
 
     #[test]

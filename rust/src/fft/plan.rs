@@ -136,10 +136,12 @@ impl Plan {
             Kind::FourStep { plan_a, plan_b, .. } => total
                 .max(plan_a.scratch_len(total))
                 .max(plan_b.scratch_len(total)),
-            // Bluestein needs two length-m lines per transform, but we
-            // process transforms one line at a time, so scratch is 2m plus
-            // the inner plan's own ping-pong buffer.
-            Kind::Bluestein { m, .. } => 3 * m,
+            // Bluestein needs two length-m lines per transform plus the
+            // inner plan's ping-pong buffer (processed one line at a
+            // time), and the interleaved path additionally gathers each
+            // strided line into a contiguous region of the same scratch —
+            // no per-call heap allocation anywhere.
+            Kind::Bluestein { m, .. } => 3 * m + self.n,
         }
     }
 
@@ -171,14 +173,19 @@ impl Plan {
                 run_stockham(stages, data, scratch, s, dir);
             }
             Kind::FourStep { .. } => self.four_step(data, scratch, s, dir),
-            Kind::Bluestein { .. } => {
-                // Gather each line contiguously, run chirp-z, scatter back.
-                let mut line = vec![C64::ZERO; self.n];
+            Kind::Bluestein { m, .. } => {
+                if s == 1 {
+                    return self.bluestein_line(data, scratch, dir);
+                }
+                // Gather each line contiguously into the scratch tail
+                // (past the 3m words bluestein_line uses), run chirp-z,
+                // scatter back — allocation-free.
+                let (chirp_scratch, line) = scratch[..3 * m + self.n].split_at_mut(3 * m);
                 for q in 0..s {
                     for j in 0..self.n {
                         line[j] = data[q + j * s];
                     }
-                    self.bluestein_line(&mut line, scratch, dir);
+                    self.bluestein_line(line, chirp_scratch, dir);
                     for j in 0..self.n {
                         data[q + j * s] = line[j];
                     }

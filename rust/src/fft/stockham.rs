@@ -299,7 +299,10 @@ fn stage_r8(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, m: usize, dir
 
 fn stage_generic(stage: &Stage, src: &[C64], dst: &mut [C64], s: usize, m: usize, dir: Direction) {
     let r = stage.radix;
-    let mut a = vec![C64::ZERO; r];
+    // Stack-resident gather buffer (r <= MAX_GENERIC_RADIX): the stage
+    // must stay heap-allocation-free for the steady-state execute path.
+    let mut buf = [C64::ZERO; MAX_GENERIC_RADIX];
+    let a = &mut buf[..r];
     for p in 0..m {
         let base = s * p;
         let o = s * r * p;

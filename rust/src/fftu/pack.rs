@@ -7,41 +7,271 @@
 //! multiply per loop level, ~two per element in the innermost loop —
 //! §3's "12 N/p real flops"), and deposits it at
 //! `packet_{t mod p}[t div p]` so each outgoing packet is contiguous.
+//!
+//! ## Compiled strip programs
+//!
+//! The cyclic distribution is periodic: along the innermost axis the
+//! destination rank of local element `t_d` is `t_d mod p_d` and its
+//! packet offset is `t_d div p_d`, so each inner row of `n_d / p_d`
+//! elements splits into exactly `p_d` **strips** — strided reads
+//! (stride `p_d`) that land as *sequential writes* in one destination
+//! packet. The strip geometry depends only on shapes and the grid, never
+//! on the rank, so [`super::plan::FftuPlan`] compiles it once at plan
+//! time into a [`PackProgram`]: one `(rank, offset)` prefix pair per
+//! outer row. Steady-state packing then runs strips with no per-element
+//! `div`/`mod`, no odometer in the inner loop, and no heap allocation;
+//! the per-element work is exactly the two complex multiplies of §3.
+//! [`pack_twiddle_odometer`] retains the original odometer walk as the
+//! executable Alg. 3.1 reference — the differential suite keeps the two
+//! bit-identical, and the bench harness uses it as the pre-PR engine.
 
 use crate::fft::{C64, Direction};
 
 use super::plan::FftuPlan;
 
+/// Axis-count ceiling for the stack-resident odometer state of the
+/// compiled packer (transforms beyond 16 axes fall back to the odometer
+/// reference, which supports any rank).
+pub const MAX_PACK_DIMS: usize = 16;
+
+/// One outer row of the compiled pack schedule: the receiver-rank and
+/// packet-offset prefixes accumulated over axes `0..d-1`. The full
+/// destination of strip `j in [p_d]` is rank `rank * p_d + j`, offset
+/// `off * strip_len`.
+#[derive(Clone, Copy, Debug)]
+pub struct PackRow {
+    pub rank: u32,
+    pub off: u32,
+}
+
+/// Plan-time compilation of Alg. 3.1's data movement: the strip table.
+///
+/// Rank-independent (twiddle *values* live in the per-rank
+/// [`TwiddleTables`]), so one program serves every processor of the
+/// plan. Size: one `(u32, u32)` pair per outer row, i.e.
+/// `(N/p) / (n_d/p_d)` pairs — a small fraction of the local array.
+pub struct PackProgram {
+    /// Local length of the innermost axis, `n_d / p_d`.
+    pub inner_n: usize,
+    /// Processors on the innermost axis, `p_d` (strips per row).
+    pub inner_p: usize,
+    /// Elements per strip, `n_d / p_d^2` (= `packet_shape[d-1]`).
+    pub strip_len: usize,
+    /// Per-outer-row destination prefixes, row-major over
+    /// `local_shape[..d-1]`.
+    pub rows: Vec<PackRow>,
+    /// Receive side: base corner of sender `s'`'s block in `W^{(s)}`
+    /// (row-major local offset), one entry per rank — Alg. 2.3 line 5.
+    pub unpack_base: Vec<usize>,
+    /// Row-major strides of the local array (unpack's write layout).
+    pub lstride: Vec<usize>,
+}
+
+impl PackProgram {
+    /// Compile the strip table for a validated plan geometry.
+    pub fn compile(local_shape: &[usize], pgrid: &[usize], packet_shape: &[usize]) -> Self {
+        let d = local_shape.len();
+        let inner_n = local_shape[d - 1];
+        let inner_p = pgrid[d - 1];
+        let strip_len = packet_shape[d - 1];
+        let outer_rows: usize = local_shape[..d - 1].iter().product();
+        let mut rows = Vec::with_capacity(outer_rows);
+        // Odometer over the outer axes, maintaining the rank/offset
+        // prefixes incrementally (this is plan time; clarity over speed).
+        let mut t = vec![0usize; d.saturating_sub(1)];
+        for _ in 0..outer_rows {
+            let mut rank = 0usize;
+            let mut off = 0usize;
+            for l in 0..d - 1 {
+                rank = rank * pgrid[l] + t[l] % pgrid[l];
+                off = off * packet_shape[l] + t[l] / pgrid[l];
+            }
+            rows.push(PackRow { rank: rank as u32, off: off as u32 });
+            for l in (0..d - 1).rev() {
+                t[l] += 1;
+                if t[l] < local_shape[l] {
+                    break;
+                }
+                t[l] = 0;
+            }
+        }
+        // Receive-side geometry: local strides and per-sender block bases.
+        let mut lstride = vec![1usize; d];
+        for l in (0..d.saturating_sub(1)).rev() {
+            lstride[l] = lstride[l + 1] * local_shape[l + 1];
+        }
+        let p: usize = pgrid.iter().product();
+        let mut unpack_base = Vec::with_capacity(p);
+        for rank in 0..p {
+            let mut rem = rank;
+            let mut base = 0usize;
+            for l in (0..d).rev() {
+                let coord = rem % pgrid[l];
+                rem /= pgrid[l];
+                base += coord * packet_shape[l] * lstride[l];
+            }
+            unpack_base.push(base);
+        }
+        PackProgram { inner_n, inner_p, strip_len, rows, unpack_base, lstride }
+    }
+
+    /// Memory footprint of the compiled schedule in bytes.
+    pub fn bytes(&self) -> usize {
+        self.rows.len() * std::mem::size_of::<PackRow>()
+    }
+}
+
 /// Per-rank twiddle tables: `tw[l][t] = omega_{n_l}^{t * s_l}` for
 /// `t in [n_l/p_l]`. Total memory `sum_l n_l/p_l` (Eq. 3.1), far below
-/// the `N/p` of the local array.
+/// the `N/p` of the local array. The compiled packer additionally keeps
+/// two strip-permuted copies of the innermost table (forward and
+/// conjugated), adding `2 n_d/p_d` words — the accounting stays
+/// `O(sum_l n_l/p_l)`.
 pub struct TwiddleTables {
     pub per_axis: Vec<Vec<C64>>,
+    /// Innermost-axis table permuted into strip order:
+    /// `inner_fwd[j * strip_len + k] = per_axis[d-1][j + k * p_d]` — the
+    /// factors a strip consumes, contiguous per strip.
+    pub inner_fwd: Vec<C64>,
+    /// Conjugate of [`Self::inner_fwd`] (inverse transforms), stored so
+    /// the inner loop reads its factors sequentially in both directions.
+    pub inner_inv: Vec<C64>,
 }
 
 impl TwiddleTables {
     pub fn new(plan: &FftuPlan, s_coords: &[usize]) -> Self {
-        let per_axis = plan
+        let per_axis: Vec<Vec<C64>> = plan
             .shape
             .iter()
             .zip(&plan.local_shape)
             .zip(s_coords)
             .map(|((&n, &ln), &s)| (0..ln).map(|t| C64::root_of_unity(n, t * s)).collect())
             .collect();
-        TwiddleTables { per_axis }
+        let prog = &plan.pack;
+        let inner = &per_axis[per_axis.len() - 1];
+        let mut inner_fwd = Vec::with_capacity(prog.inner_n);
+        for j in 0..prog.inner_p {
+            for k in 0..prog.strip_len {
+                inner_fwd.push(inner[j + k * prog.inner_p]);
+            }
+        }
+        let inner_inv: Vec<C64> = inner_fwd.iter().map(|w| w.conj()).collect();
+        TwiddleTables { per_axis, inner_fwd, inner_inv }
     }
 
-    /// Memory footprint in complex words (Eq. 3.1).
+    /// Memory footprint in complex words (Eq. 3.1): the per-axis tables
+    /// only — the strip permutations are bookkeeping copies of the last
+    /// axis, not additional unique factors.
     pub fn words(&self) -> usize {
         self.per_axis.iter().map(|t| t.len()).sum()
     }
 }
 
-/// Fused pack + twiddle (Alg. 3.1). Fills `packets[r]` (preallocated to
-/// `plan.packet_len()` each, one per destination rank) from `local`
-/// (row-major, shape `plan.local_shape`). `dir` selects the forward or
-/// conjugated (inverse-transform) weights.
+#[inline(always)]
+fn tw_at(tables: &TwiddleTables, l: usize, tl: usize, conj: bool) -> C64 {
+    let w = tables.per_axis[l][tl];
+    if conj {
+        w.conj()
+    } else {
+        w
+    }
+}
+
+/// Fused pack + twiddle (Alg. 3.1), compiled form. Fills `packets[r]`
+/// (preallocated to `plan.packet_len()` each, one per destination rank)
+/// from `local` (row-major, shape `plan.local_shape`). `dir` selects the
+/// forward or conjugated (inverse-transform) weights.
+///
+/// Executes the plan's [`PackProgram`]: per outer row one table lookup
+/// gives the destination prefixes, the prefix twiddle factor is updated
+/// incrementally (Eq. 3.1 tables, a handful of multiplies per *row*),
+/// and each strip is a sequential write of `strip_len` twiddled
+/// elements. Bit-identical to [`pack_twiddle_odometer`] by construction
+/// — both compose the same table entries in the same order.
 pub fn pack_twiddle(
+    plan: &FftuPlan,
+    tables: &TwiddleTables,
+    local: &[C64],
+    packets: &mut [Vec<C64>],
+    dir: Direction,
+) {
+    let d = plan.shape.len();
+    debug_assert_eq!(local.len(), plan.local_len());
+    debug_assert_eq!(packets.len(), plan.num_procs());
+    for p in packets.iter_mut() {
+        debug_assert_eq!(p.len(), plan.packet_len());
+    }
+    if d > MAX_PACK_DIMS {
+        return pack_twiddle_odometer(plan, tables, local, packets, dir);
+    }
+
+    let prog = &plan.pack;
+    let (inner_n, inner_p, strip_len) = (prog.inner_n, prog.inner_p, prog.strip_len);
+    let conj = dir == Direction::Inverse;
+    let inner_tw = if conj { &tables.inner_inv } else { &tables.inner_fwd };
+    let local_shape = &plan.local_shape;
+
+    // Outer odometer state: t[l] and the prefix products
+    // factor[l] = prod_{m <= l} tw[m][t_m] over axes 0..d-1. Stack
+    // arrays — the steady-state path performs no heap allocation.
+    let mut t = [0usize; MAX_PACK_DIMS];
+    let mut factor = [C64::ONE; MAX_PACK_DIMS];
+    for l in 0..d.saturating_sub(1) {
+        let prev = if l == 0 { C64::ONE } else { factor[l - 1] };
+        factor[l] = prev * tw_at(tables, l, 0, conj);
+    }
+
+    let mut flat = 0usize;
+    let last_row = prog.rows.len().saturating_sub(1);
+    for (ri, row) in prog.rows.iter().enumerate() {
+        let base_f = if d >= 2 { factor[d - 2] } else { C64::ONE };
+        let base_rank = row.rank as usize * inner_p;
+        let base_off = row.off as usize * strip_len;
+        let src = &local[flat..flat + inner_n];
+        if inner_p == 1 {
+            // Whole inner row is one strip: contiguous in and out.
+            let dst = &mut packets[base_rank][base_off..base_off + inner_n];
+            for ((dv, &sv), &w) in dst.iter_mut().zip(src).zip(inner_tw) {
+                *dv = sv * (base_f * w);
+            }
+        } else {
+            for j in 0..inner_p {
+                let tws = &inner_tw[j * strip_len..(j + 1) * strip_len];
+                let dst = &mut packets[base_rank + j][base_off..base_off + strip_len];
+                for (k, (dv, &w)) in dst.iter_mut().zip(tws).enumerate() {
+                    *dv = src[j + k * inner_p] * (base_f * w);
+                }
+            }
+        }
+        flat += inner_n;
+        if ri == last_row {
+            break;
+        }
+        // Advance the outer odometer and rebuild the prefix factors from
+        // the changed level downward.
+        let mut l = d as isize - 2;
+        while l >= 0 {
+            let lu = l as usize;
+            t[lu] += 1;
+            if t[lu] < local_shape[lu] {
+                break;
+            }
+            t[lu] = 0;
+            l -= 1;
+        }
+        debug_assert!(l >= 0, "odometer exhausted before the last row");
+        for m in l as usize..=d - 2 {
+            let prev = if m == 0 { C64::ONE } else { factor[m - 1] };
+            factor[m] = prev * tw_at(tables, m, t[m], conj);
+        }
+    }
+}
+
+/// The original odometer walk of Alg. 3.1, retained as the executable
+/// reference for [`pack_twiddle`] (differential tests assert the two are
+/// bit-identical) and as the packing kernel of the pre-PR legacy engine
+/// the benchmark trajectory measures against.
+pub fn pack_twiddle_odometer(
     plan: &FftuPlan,
     tables: &TwiddleTables,
     local: &[C64],
@@ -62,12 +292,6 @@ pub fn pack_twiddle(
     let pshape = &plan.pgrid;
     let packet_shape = &plan.packet_shape;
     let local_shape = &plan.local_shape;
-    let mut rank_stride = vec![1usize; d];
-    let mut off_stride = vec![1usize; d];
-    for l in (0..d.saturating_sub(1)).rev() {
-        rank_stride[l] = rank_stride[l + 1] * pshape[l + 1];
-        off_stride[l] = off_stride[l + 1] * packet_shape[l + 1];
-    }
 
     // Odometer over the local multi-index with incremental prefix state:
     //   factor[l]  = prod_{m <= l} tw[m][t_m]
@@ -78,20 +302,12 @@ pub fn pack_twiddle(
     let mut rank_part = vec![0usize; d];
     let mut off_part = vec![0usize; d];
     let conj = dir == Direction::Inverse;
-    let tw_at = |l: usize, tl: usize| -> C64 {
-        let w = tables.per_axis[l][tl];
-        if conj {
-            w.conj()
-        } else {
-            w
-        }
-    };
     // Initialize prefix state for t = (0,...,0).
     for l in 0..d {
         let prev_f = if l == 0 { C64::ONE } else { factor[l - 1] };
         let prev_r = if l == 0 { 0 } else { rank_part[l - 1] };
         let prev_o = if l == 0 { 0 } else { off_part[l - 1] };
-        factor[l] = prev_f * tw_at(l, 0);
+        factor[l] = prev_f * tw_at(tables, l, 0, conj);
         rank_part[l] = prev_r; // r_l = 0 contributes 0
         off_part[l] = prev_o;
     }
@@ -153,7 +369,7 @@ pub fn pack_twiddle(
             let prev_f = if m == 0 { C64::ONE } else { factor[m - 1] };
             let prev_r = if m == 0 { 0 } else { rank_part[m - 1] };
             let prev_o = if m == 0 { 0 } else { off_part[m - 1] };
-            factor[m] = prev_f * tw_at(m, t[m]);
+            factor[m] = prev_f * tw_at(tables, m, t[m], conj);
             rank_part[m] = prev_r * pshape[m] + t[m] % pshape[m];
             off_part[m] = prev_o * packet_shape[m] + t[m] / pshape[m];
         }
@@ -163,42 +379,41 @@ pub fn pack_twiddle(
 /// Assemble `W^{(s)}` (row-major, shape `local_shape`) from the incoming
 /// packets: the packet from sender `s'` occupies the block with axis-`l`
 /// range `[s'_l * n_l/p_l^2, (s'_l + 1) * n_l/p_l^2)` (Alg. 2.3 line 5).
+///
+/// Uses the plan's precomputed block bases and strides, with the write
+/// offset maintained incrementally by the odometer — no heap allocation
+/// and no per-run stride re-summation (transforms beyond
+/// [`MAX_PACK_DIMS`] axes take a slow allocating path).
 pub fn unpack(plan: &FftuPlan, incoming: &[Vec<C64>], w: &mut [C64]) {
     let d = plan.shape.len();
     debug_assert_eq!(w.len(), plan.local_len());
     debug_assert_eq!(incoming.len(), plan.num_procs());
+    let prog = &plan.pack;
     let packet_shape = &plan.packet_shape;
-    let local_shape = &plan.local_shape;
-    // Row-major strides of the local (W) array.
-    let mut lstride = vec![1usize; d];
-    for l in (0..d.saturating_sub(1)).rev() {
-        lstride[l] = lstride[l + 1] * local_shape[l + 1];
-    }
+    let lstride = &prog.lstride;
     let run = packet_shape[d - 1]; // contiguous run along the last axis
     let runs_per_packet = plan.packet_len() / run;
+    let mut j_stack = [0usize; MAX_PACK_DIMS];
+    let mut j_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
     for (src_rank, packet) in incoming.iter().enumerate() {
         debug_assert_eq!(packet.len(), plan.packet_len());
-        let sc = plan.dist.proc_coords(src_rank);
-        // Base corner of this sender's block in W.
-        let mut base = 0usize;
-        for l in 0..d {
-            base += sc[l] * packet_shape[l] * lstride[l];
-        }
-        // Iterate packet rows (all axes but the last), odometer style.
-        let mut j = vec![0usize; d]; // j[d-1] stays 0
+        let j: &mut [usize] =
+            if d > MAX_PACK_DIMS { &mut j_heap } else { &mut j_stack[..d] };
+        j.fill(0);
+        // Iterate packet rows (all axes but the last), odometer style,
+        // carrying the write offset with the odometer.
+        let mut woff = prog.unpack_base[src_rank];
         for r in 0..runs_per_packet {
-            let mut woff = base;
-            for l in 0..d - 1 {
-                woff += j[l] * lstride[l];
-            }
             w[woff..woff + run].copy_from_slice(&packet[r * run..(r + 1) * run]);
-            // Advance odometer over axes 0..d-1.
+            // Advance odometer over axes 0..d-1, updating woff in step.
             for l in (0..d.saturating_sub(1)).rev() {
                 j[l] += 1;
                 if j[l] < packet_shape[l] {
+                    woff += lstride[l];
                     break;
                 }
                 j[l] = 0;
+                woff -= (packet_shape[l] - 1) * lstride[l];
             }
         }
     }
@@ -272,11 +487,75 @@ mod tests {
     }
 
     #[test]
+    fn prop_compiled_strips_bit_exact_vs_odometer() {
+        // The tentpole differential: the compiled strip program and the
+        // retained odometer reference compose the same table entries in
+        // the same order, so their outputs must agree to the last bit —
+        // every shape, grid, rank, and direction, 1D through 4D.
+        forall("strip program == odometer, bit-exact", 60, 0x57A1, |rng| {
+            let d = rng.range(1, 4);
+            let mut shape = Vec::new();
+            let mut grid = Vec::new();
+            for _ in 0..d {
+                let p = rng.range(1, 3);
+                let mult = rng.range(1, 4);
+                shape.push(p * p * mult);
+                grid.push(p);
+            }
+            let planner = Planner::new();
+            let plan = FftuPlan::new(&shape, &grid, &planner)?;
+            let s_rank = rng.below(plan.num_procs());
+            let s_coords = plan.dist.proc_coords(s_rank);
+            let local: Vec<C64> = (0..plan.local_len())
+                .map(|_| C64::new(rng.f64_signed(), rng.f64_signed()))
+                .collect();
+            let tables = TwiddleTables::new(&plan, &s_coords);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let mut got = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+                pack_twiddle(&plan, &tables, &local, &mut got, dir);
+                let mut want = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+                pack_twiddle_odometer(&plan, &tables, &local, &mut want, dir);
+                for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                    for (o, (gv, wv)) in g.iter().zip(w).enumerate() {
+                        crate::prop_assert!(
+                            gv.re.to_bits() == wv.re.to_bits()
+                                && gv.im.to_bits() == wv.im.to_bits(),
+                            "shape {shape:?} grid {grid:?} rank {s_rank} {dir:?} \
+                             packet {r} offset {o}: {gv:?} != {wv:?}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_program_geometry() {
+        let planner = Planner::new();
+        let plan = FftuPlan::new(&[16, 36], &[2, 3], &planner).unwrap();
+        let prog = &plan.pack;
+        // local shape (8, 12), p_d = 3: 8 outer rows, 3 strips of 4 each.
+        assert_eq!(prog.inner_n, 12);
+        assert_eq!(prog.inner_p, 3);
+        assert_eq!(prog.strip_len, 4);
+        assert_eq!(prog.rows.len(), 8);
+        // Row t_0: rank prefix t_0 mod 2, offset prefix t_0 div 2.
+        for (t0, row) in prog.rows.iter().enumerate() {
+            assert_eq!(row.rank as usize, t0 % 2);
+            assert_eq!(row.off as usize, t0 / 2);
+        }
+    }
+
+    #[test]
     fn twiddle_table_memory_matches_eq_3_1() {
         let planner = Planner::new();
         let plan = FftuPlan::new(&[16, 36, 4], &[2, 3, 1], &planner).unwrap();
         let tables = TwiddleTables::new(&plan, &[1, 2, 0]);
         assert_eq!(tables.words(), 16 / 2 + 36 / 3 + 4);
+        // Strip permutations are copies of the innermost table only.
+        assert_eq!(tables.inner_fwd.len(), 4);
+        assert_eq!(tables.inner_inv.len(), 4);
     }
 
     #[test]

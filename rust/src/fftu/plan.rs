@@ -6,6 +6,8 @@ use crate::api::FftError;
 use crate::dist::GridDist;
 use crate::fft::{NdPlan, Plan, Planner};
 
+use super::pack::PackProgram;
+
 /// Validated configuration of Algorithm 2.3 for one (shape, grid) pair.
 ///
 /// Holds everything rank-independent: the cyclic distribution, the local
@@ -27,6 +29,10 @@ pub struct FftuPlan {
     pub nd_plan: NdPlan,
     /// `F_{p_l}` plans of superstep 2 (one per axis).
     pub axis_plans: Vec<Arc<Plan>>,
+    /// Compiled strip schedule of Alg. 3.1 (pack *and* unpack geometry):
+    /// rank-independent, built once here, executed allocation-free by
+    /// every [`super::worker::Worker`].
+    pub pack: PackProgram,
 }
 
 impl FftuPlan {
@@ -49,11 +55,82 @@ impl FftuPlan {
             shape.iter().zip(pgrid).map(|(&n, &p)| n / (p * p)).collect();
         let nd_plan = NdPlan::new(&local_shape, planner);
         let axis_plans = pgrid.iter().map(|&p| planner.plan(p)).collect();
-        Ok(FftuPlan { shape: shape.to_vec(), pgrid: pgrid.to_vec(), local_shape, packet_shape, dist, nd_plan, axis_plans })
+        let pack = PackProgram::compile(&local_shape, pgrid, &packet_shape);
+        Ok(FftuPlan {
+            shape: shape.to_vec(),
+            pgrid: pgrid.to_vec(),
+            local_shape,
+            packet_shape,
+            dist,
+            nd_plan,
+            axis_plans,
+            pack,
+        })
     }
 
     pub fn total(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    /// Copy rank `rank`'s cyclic local array straight out of the global
+    /// row-major array — the strip structure of the cyclic distribution
+    /// (destination ranks recur with period `p_l`) makes this a walk of
+    /// strided reads and sequential writes, with no per-element
+    /// `div`/`mod` and no heap allocation. Each SPMD rank extracts its
+    /// own slice in parallel, so the driver never materializes the
+    /// intermediate `Vec<Vec<C64>>` of a full scatter.
+    pub fn scatter_rank_into(&self, global: &[C64], rank: usize, out: &mut [C64]) {
+        let d = self.shape.len();
+        assert_eq!(global.len(), self.total(), "scatter: global length mismatch");
+        assert_eq!(out.len(), self.local_len(), "scatter: local length mismatch");
+        use super::pack::MAX_PACK_DIMS;
+        let mut gstride_stack = [1usize; MAX_PACK_DIMS];
+        let mut gstride_heap = if d > MAX_PACK_DIMS { vec![1usize; d] } else { Vec::new() };
+        let gstride: &mut [usize] =
+            if d > MAX_PACK_DIMS { &mut gstride_heap } else { &mut gstride_stack[..d] };
+        for l in (0..d.saturating_sub(1)).rev() {
+            gstride[l] = gstride[l + 1] * self.shape[l + 1];
+        }
+        // s coordinates of the rank (row-major over the grid).
+        let mut s_stack = [0usize; MAX_PACK_DIMS];
+        let mut s_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
+        let s: &mut [usize] = if d > MAX_PACK_DIMS { &mut s_heap } else { &mut s_stack[..d] };
+        let mut rem = rank;
+        for l in (0..d).rev() {
+            s[l] = rem % self.pgrid[l];
+            rem /= self.pgrid[l];
+        }
+        // Base global offset of local (0,...,0): sum s_l * gstride_l.
+        let mut gbase = 0usize;
+        for l in 0..d {
+            gbase += s[l] * gstride[l];
+        }
+        let inner_n = self.local_shape[d - 1];
+        let inner_p = self.pgrid[d - 1];
+        let rows = self.local_len() / inner_n;
+        let mut t_stack = [0usize; MAX_PACK_DIMS];
+        let mut t_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
+        let t: &mut [usize] = if d > MAX_PACK_DIMS { &mut t_heap } else { &mut t_stack[..d] };
+        for (row, chunk) in out.chunks_exact_mut(inner_n).enumerate() {
+            // local t_d -> global g_d = t_d * p_d + s_d: strided read.
+            for (td, v) in chunk.iter_mut().enumerate() {
+                *v = global[gbase + td * inner_p];
+            }
+            if row + 1 == rows {
+                break;
+            }
+            // Advance the outer odometer; local t_l += 1 moves the
+            // global base by p_l * gstride_l.
+            for l in (0..d - 1).rev() {
+                t[l] += 1;
+                if t[l] < self.local_shape[l] {
+                    gbase += self.pgrid[l] * gstride[l];
+                    break;
+                }
+                t[l] = 0;
+                gbase -= (self.local_shape[l] - 1) * self.pgrid[l] * gstride[l];
+            }
+        }
     }
 
     pub fn num_procs(&self) -> usize {
@@ -237,6 +314,28 @@ mod tests {
             Err(FftError::RankMismatch { shape: 2, grid: 1 })
         ));
         assert!(FftuPlan::new(&[8, 8], &[2, 2], &planner).is_ok());
+    }
+
+    #[test]
+    fn scatter_rank_into_matches_dist_scatter() {
+        use crate::fft::C64;
+        let planner = Planner::new();
+        for (shape, grid) in [
+            (vec![16usize, 36], vec![2usize, 3]),
+            (vec![8, 4, 4], vec![2, 1, 2]),
+            (vec![36], vec![3]),
+            (vec![4, 4, 4, 4], vec![2, 1, 2, 2]),
+        ] {
+            let plan = FftuPlan::new(&shape, &grid, &planner).unwrap();
+            let n = plan.total();
+            let global: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -(i as f64))).collect();
+            let want = plan.dist.scatter(&global);
+            for r in 0..plan.num_procs() {
+                let mut got = vec![C64::ZERO; plan.local_len()];
+                plan.scatter_rank_into(&global, r, &mut got);
+                assert_eq!(got, want[r], "rank {r} shape {shape:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,5 +1,16 @@
 //! Per-processor FFTU execution state and the superstep bodies of
 //! Algorithm 2.3.
+//!
+//! A [`Worker`] owns every buffer the steady-state execute path touches
+//! — outgoing/incoming packet buffers, the `W^{(s)}` working array, and
+//! the Stockham ping-pong scratch — so repeated [`Worker::execute`]
+//! calls perform **zero heap allocations**: the packet buffers
+//! circulate through the mailbox by
+//! pointer swap ([`crate::bsp::Ctx::exchange_swap`]), the compiled
+//! [`super::pack::PackProgram`] runs strips with stack-only state, and
+//! every FFT kernel works inside the preallocated scratch. The
+//! allocation-regression suite (`rust/tests/alloc.rs`) pins this down
+//! with a counting global allocator.
 
 use std::sync::Arc;
 
@@ -7,7 +18,7 @@ use crate::api::Normalization;
 use crate::bsp::Ctx;
 use crate::fft::{C64, Direction};
 
-use super::pack::{pack_twiddle, unpack, TwiddleTables};
+use super::pack::{pack_twiddle, pack_twiddle_odometer, unpack, TwiddleTables};
 use super::plan::FftuPlan;
 
 /// Per-rank state: twiddle tables (which depend on the processor
@@ -44,21 +55,19 @@ impl Worker {
 
     /// Superstep 0: local multidimensional FFT + fused twiddle/pack.
     /// After this call, `self.packets[r]` holds the outgoing packet for
-    /// rank `r` (Alg. 3.1 output).
+    /// rank `r` (Alg. 3.1 output, via the compiled strip program).
     pub fn superstep0(&mut self, local: &mut [C64], dir: Direction) {
         self.plan.nd_plan.execute(local, &mut self.scratch, dir);
         pack_twiddle(&self.plan, &self.tables, local, &mut self.packets, dir);
     }
 
-    /// Superstep 1: the single all-to-all. Consumes the packed packets,
-    /// returns with `self.w` holding `W^{(s)}`.
+    /// Superstep 1: the single all-to-all. The packet buffers are
+    /// exchanged in place (buffer swapping through the mailbox — no
+    /// allocation, no spine churn); returns with `self.w` holding
+    /// `W^{(s)}`.
     pub fn superstep1(&mut self, ctx: &mut Ctx) {
-        let outgoing = std::mem::take(&mut self.packets);
-        let incoming = ctx.exchange("fftu-alltoall", outgoing);
-        unpack(&self.plan, &incoming, &mut self.w);
-        // Reclaim the incoming buffers as next iteration's outgoing
-        // packet buffers (same shapes), keeping the hot path allocation-free.
-        self.packets = incoming;
+        ctx.exchange_swap("fftu-alltoall", &mut self.packets);
+        unpack(&self.plan, &self.packets, &mut self.w);
     }
 
     /// Superstep 2: strided `F_{p_1} (x) ... (x) F_{p_d}` transforms of
@@ -91,6 +100,26 @@ impl Worker {
         ctx.charge_flops(self.plan.flops_superstep0() + self.plan.flops_twiddle());
         self.superstep0(local, dir);
         self.superstep1(ctx); // charges words itself
+        ctx.begin_comp("fftu-superstep2");
+        ctx.charge_flops(self.plan.flops_superstep2());
+        self.superstep2(local, dir);
+    }
+
+    /// The pre-PR execute path, retained for the benchmark trajectory:
+    /// identical semantics and ledger charges, but packing walks the
+    /// original per-element odometer ([`pack_twiddle_odometer`]) and the
+    /// all-to-all moves owned buffers through [`Ctx::exchange`] (spine
+    /// reallocation per superstep), exactly as the engine behaved before
+    /// the compiled strip programs landed.
+    pub fn execute_odometer(&mut self, ctx: &mut Ctx, local: &mut [C64], dir: Direction) {
+        ctx.begin_comp("fftu-superstep0");
+        ctx.charge_flops(self.plan.flops_superstep0() + self.plan.flops_twiddle());
+        self.plan.nd_plan.execute(local, &mut self.scratch, dir);
+        pack_twiddle_odometer(&self.plan, &self.tables, local, &mut self.packets, dir);
+        let outgoing = std::mem::take(&mut self.packets);
+        let incoming = ctx.exchange("fftu-alltoall", outgoing);
+        unpack(&self.plan, &incoming, &mut self.w);
+        self.packets = incoming;
         ctx.begin_comp("fftu-superstep2");
         ctx.charge_flops(self.plan.flops_superstep2());
         self.superstep2(local, dir);

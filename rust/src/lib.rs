@@ -77,6 +77,50 @@
 //! `examples/wavepacket.rs`) drop down to [`fftu::Worker`] and keep the
 //! same [`api::Normalization`] convention.
 //!
+//! ## Performance architecture
+//!
+//! The plan/execute split is real for performance, not just correctness:
+//! planning compiles the data movement, and steady-state execution
+//! performs **zero heap allocations** (enforced by a counting
+//! `#[global_allocator]` in `rust/tests/alloc.rs`). The pieces, layer by
+//! layer:
+//!
+//! - **Compiled strip programs** ([`fftu::PackProgram`]): the cyclic
+//!   distribution is periodic — along the innermost axis, destination
+//!   ranks recur with period `p_d` — so Alg. 3.1's fused pack+twiddle
+//!   factors into `p_d` *strips* per row: strided reads that land as
+//!   sequential writes in one destination packet. The strip table is
+//!   rank-independent and compiled once at plan time; the packing inner
+//!   loop is then twiddle-multiply + sequential write, with no
+//!   per-element `div`/`mod` and no odometer. The original odometer walk
+//!   is retained ([`fftu::pack_twiddle_odometer`]) and held bit-identical
+//!   by a differential suite. The same strip walk accelerates the
+//!   cyclic scatter/gather and the unpack (precomputed block bases).
+//! - **Twiddle memory stays Eq. 3.1**: the per-rank tables hold
+//!   `sum_l n_l/p_l` factors (plus two strip-permuted copies of the
+//!   innermost table, `2 n_d/p_d` words) — far below the `N/p` local
+//!   array; prefix factors are built incrementally per *row*, two
+//!   complex multiplies per element as §3 counts.
+//! - **`ExecArena`** ([`fftu::ExecArena`]): per-rank [`fftu::Worker`]s
+//!   (twiddle tables, packet buffers, `W` array, FFT scratch) persist
+//!   across the executes of a plan — a [`PlanCache`] hit reuses not just
+//!   the schedule but the warmed buffers. Baseline plans (slab, pencil,
+//!   heFFTe, Popovici) persist per-rank scratch the same way, keeping
+//!   wall-clock comparisons fair.
+//! - **Swap-based exchange** (`Ctx::exchange_swap`): packets move
+//!   through the BSP mailbox by pointer swap — the allocation behind
+//!   each packet migrates to the receiver and returns as next
+//!   superstep's outgoing buffer. Empty packets skip the slot lock
+//!   entirely; the ledger's `h` is unchanged.
+//! - **Allocation-free kernels**: Stockham stages ping-pong inside
+//!   preallocated scratch with per-stage twiddle tables; the generic
+//!   radix gathers into a stack array; Bluestein lines run through the
+//!   plan's scratch, never a fresh `Vec`.
+//! - **Benchmark trajectory**: `fftu bench` times the retained pre-PR
+//!   engine against the compiled engine and writes `BENCH_pr3.json`
+//!   (`benches/engine.rs` is the per-layer drill-down); CI's bench-smoke
+//!   job keeps the harness compiling and uploads the JSON per commit.
+//!
 //! ## Layout
 //!
 //! The crate is organized as the paper's system plus every substrate it
@@ -116,7 +160,7 @@ pub mod runtime;
 pub mod testing;
 
 pub use api::{
-    Algorithm, DistFft, Execution, FftError, Grid, Kind, Normalization, PlanCache, RealExecution,
-    Transform,
+    Algorithm, CacheStats, DistFft, Execution, FftError, Grid, Kind, Normalization, PlanCache,
+    RealExecution, Transform,
 };
 pub use fft::{C64, Direction};

@@ -1,0 +1,185 @@
+//! Allocation-regression suite: the steady-state FFTU execute path must
+//! perform ZERO heap allocations.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; the test
+//! warms a persistent [`fftu::fftu::ExecArena`] worker (first execute
+//! builds twiddle tables, packet buffers, scratch — exactly once), then
+//! turns the counter on around the *second* execute on the same plan.
+//! Everything inside Algorithm 2.3 — superstep 0's local FFT, the
+//! compiled strip-program pack, the swap-based all-to-all (buffers
+//! migrate between ranks by pointer swap), the unpack, superstep 2's
+//! strided transforms — must touch the allocator not at all, on every
+//! rank, in both directions.
+//!
+//! Boundary of the claim: the BSP session (thread spawn/join) and the
+//! driver-side input scatter / output gather allocate by design — they
+//! hand buffers to the caller. The invariant pinned here is the per-rank
+//! transform loop, which is what a long-lived service repeats millions
+//! of times per session. The ledger is `reserve`d for the measured
+//! supersteps, matching how a steady-state loop pre-sizes its log.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use fftu::bsp::run_spmd;
+use fftu::fft::{C64, Planner};
+use fftu::fftu::{ExecArena, FftuPlan};
+use fftu::Direction;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static REALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers all allocation to `System`; only adds relaxed counter
+// bumps, which are allocation-free and reentrancy-safe.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            REALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // Deallocations are not counted: dropping a zero-capacity vec is
+        // free and the steady-state path performs none with capacity.
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// The counting state is process-global, so the tests in this binary
+/// must not overlap (the default harness runs them on multiple
+/// threads). Every test takes this lock first; a poisoned lock (a
+/// failed test) must not hide the other tests' results.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run one measured steady-state execute for a (shape, grid) pair and
+/// return the allocation count observed across all ranks.
+fn measure(shape: &[usize], grid: &[usize], dirs: &[Direction]) -> usize {
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(shape, grid, &planner).unwrap());
+    let p = plan.num_procs();
+    let arena = ExecArena::new(p);
+    let n = plan.total();
+    let global: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -(i as f64) * 0.5)).collect();
+    let dirs = dirs.to_vec();
+    run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(&plan, rank);
+        let worker = slot.as_mut().unwrap();
+        let mut local = vec![C64::ZERO; plan.local_len()];
+        plan.scatter_rank_into(&global, rank, &mut local);
+        // Warm-up: the FIRST execute on this cached plan/arena. After it,
+        // every buffer the engine needs exists.
+        for &dir in &dirs {
+            worker.execute(ctx, &mut local, dir);
+        }
+        // Steady-state loops pre-size their superstep log; 4 records per
+        // execute is a safe bound (2 comp + 1 comm + slack).
+        ctx.ledger.reserve(4 * dirs.len() + 4);
+        ctx.barrier();
+        if rank == 0 {
+            ALLOCS.store(0, Ordering::SeqCst);
+            REALLOCS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        // The measured region: the SECOND execute on the cached plan.
+        for &dir in &dirs {
+            worker.execute(ctx, &mut local, dir);
+        }
+        ctx.barrier();
+        if rank == 0 {
+            COUNTING.store(false, Ordering::SeqCst);
+        }
+        ctx.barrier();
+    });
+    ALLOCS.load(Ordering::SeqCst) + REALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_execute_is_allocation_free() {
+    let _serial = serial();
+    // 2D, the PR acceptance geometry (scaled down), forward then inverse.
+    let count =
+        measure(&[16, 16], &[2, 2], &[Direction::Forward, Direction::Inverse]);
+    assert_eq!(count, 0, "steady-state execute allocated {count} times (16x16/[2,2])");
+}
+
+#[test]
+fn steady_state_execute_is_allocation_free_3d_and_odd_radix() {
+    let _serial = serial();
+    // 3D with a unit grid axis, and odd radices on one axis (radix-3/9
+    // paths) — the kernels must stay allocation-free off the power-of-two
+    // happy path too.
+    let count = measure(&[8, 4, 18], &[2, 1, 3], &[Direction::Forward]);
+    assert_eq!(count, 0, "steady-state execute allocated {count} times (8x4x18/[2,1,3])");
+}
+
+#[test]
+fn steady_state_execute_is_allocation_free_1d() {
+    let _serial = serial();
+    let count = measure(&[64], &[8], &[Direction::Forward]);
+    assert_eq!(count, 0, "steady-state execute allocated {count} times (64/[8])");
+}
+
+#[test]
+fn first_execute_does_allocate_sanity_check() {
+    let _serial = serial();
+    // Sanity check that the counter actually observes the engine: the
+    // FIRST execute (worker construction) must allocate. This guards
+    // against the test silently measuring nothing.
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(&[16, 16], &[2, 2], &planner).unwrap());
+    let p = plan.num_procs();
+    let arena = ExecArena::new(p);
+    let n = plan.total();
+    let global: Vec<C64> = (0..n).map(|i| C64::new(i as f64, 0.0)).collect();
+    run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        ctx.barrier();
+        if rank == 0 {
+            ALLOCS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        let mut slot = arena.worker(&plan, rank); // builds the worker
+        let worker = slot.as_mut().unwrap();
+        let mut local = vec![C64::ZERO; plan.local_len()];
+        plan.scatter_rank_into(&global, rank, &mut local);
+        worker.execute(ctx, &mut local, Direction::Forward);
+        ctx.barrier();
+        if rank == 0 {
+            COUNTING.store(false, Ordering::SeqCst);
+        }
+        ctx.barrier();
+    });
+    assert!(
+        ALLOCS.load(Ordering::SeqCst) > 0,
+        "counter saw no allocations during worker construction — instrumentation broken"
+    );
+}
