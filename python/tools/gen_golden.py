@@ -26,6 +26,18 @@ REAL_CASES = [
     ("r3d_4x6x10", (4, 6, 10)),
 ]
 
+# Trig cases ("t" prefix): N real inputs followed by four blocks of N
+# real outputs — scipy.fft.dctn type 2, dctn type 3, dstn type 2, dstn
+# type 3, all norm=None (the unnormalized textbook pair:
+# type3(type2(x)) == prod(2*n_l) x). No parity constraint on any axis.
+# Drawn AFTER REAL_CASES: the shared rng stream keeps every committed
+# complex/real golden bit-identical.
+TRIG_CASES = [
+    ("t1d_16", (16,)),
+    ("t2d_8x12", (8, 12)),
+    ("t3d_4x6x10", (4, 6, 10)),
+]
+
 
 def main() -> None:
     rng = np.random.default_rng(0x601D)
@@ -51,6 +63,25 @@ def main() -> None:
                 f.write(f"{v:.17e}\n")
             for v in y:
                 f.write(f"{v.real:.17e} {v.imag:.17e}\n")
+        print(name)
+    from scipy import fft as sfft
+
+    for name, shape in TRIG_CASES:
+        n = int(np.prod(shape))
+        x = rng.standard_normal(n)
+        blocks = [
+            sfft.dctn(x.reshape(shape), type=2).reshape(-1),
+            sfft.dctn(x.reshape(shape), type=3).reshape(-1),
+            sfft.dstn(x.reshape(shape), type=2).reshape(-1),
+            sfft.dstn(x.reshape(shape), type=3).reshape(-1),
+        ]
+        with open(f"rust/tests/data/{name}.txt", "w") as f:
+            f.write(" ".join(map(str, shape)) + "\n")
+            for v in x:
+                f.write(f"{v:.17e}\n")
+            for block in blocks:
+                for v in block:
+                    f.write(f"{v:.17e}\n")
         print(name)
 
 

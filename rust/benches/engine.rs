@@ -11,8 +11,9 @@
 //! 4. full engine: `fftu_execute_batch_arena` (persistent workers) vs
 //!    `fftu_execute_batch_legacy` (the pre-PR engine, retained).
 //!
-//! `cli bench` wraps layer 4 into the JSON trajectory (`BENCH_pr3.json`);
-//! this binary is the drill-down view.
+//! `cli bench` wraps layer 4 into the JSON trajectory
+//! (`BENCH_<tag>.json`, gated against `BENCH_baseline.json` by
+//! `bench --check`); this binary is the drill-down view.
 
 use std::sync::Arc;
 use std::time::Instant;

@@ -5,9 +5,11 @@
 //!
 //! - [`Transform`] — the descriptor: shape, processor grid (explicit or
 //!   [`Grid::Auto`] via `choose_grid`), [`Direction`], [`Normalization`],
-//!   batch count, and [`Kind`] (complex c2c, or real r2c/c2r via the
+//!   batch count, and [`Kind`] (complex c2c; real r2c/c2r via the
 //!   packing trick — the complex core runs on the half shape, halving
-//!   flops and communication volume);
+//!   flops and communication volume; trig dct2/dct3/dst2/dst3 via
+//!   Makhoul permutations and quarter-wave phases around the full-shape
+//!   core);
 //! - [`Algorithm`] — FFTU or any of the four published baselines
 //!   (slab/FFTW, pencil/PFFT, heFFTe, Popovici);
 //! - [`plan`] — plan-time validation returning a reusable

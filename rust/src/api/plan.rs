@@ -15,8 +15,14 @@ use crate::bsp::CostReport;
 use crate::fft::realnd::{
     pack_pairs, retangle_half_spectrum, unpack_pairs, untangle_half_spectrum, wrap_flops,
 };
+use crate::fft::trignd::{
+    trig2_post, trig2_pre, trig2_tables, trig3_extract, trig3_pre, trig3_tables, trig_wrap_flops,
+};
 use crate::fft::{C64, Planner};
-use crate::fftu::{choose_grid, fftu_execute_batch_arena, fftu_pmax, ExecArena, FftuPlan};
+use crate::fftu::{
+    choose_grid, fftu_execute_batch_arena, fftu_execute_trig2_batch_arena,
+    fftu_execute_trig3_batch_arena, fftu_pmax, ExecArena, FftuPlan,
+};
 
 use super::error::FftError;
 use super::transform::{Grid, Kind, Transform};
@@ -138,6 +144,12 @@ pub trait DistFft: Send + Sync {
     fn execute_c2r(&self, input: &[C64]) -> Result<RealExecution, FftError>;
     /// Execute the descriptor's `batch` C2R transforms back to back.
     fn execute_c2r_batch(&self, input: &[C64]) -> Result<RealExecution, FftError>;
+    /// Execute ONE trig transform (any of DCT-II/III, DST-II/III —
+    /// whichever [`Kind`] the plan was built for): `total()` reals in,
+    /// `total()` real coefficients out.
+    fn execute_trig(&self, input: &[f64]) -> Result<RealExecution, FftError>;
+    /// Execute the descriptor's `batch` trig transforms back to back.
+    fn execute_trig_batch(&self, input: &[f64]) -> Result<RealExecution, FftError>;
 }
 
 enum Inner {
@@ -150,10 +162,16 @@ enum Inner {
     Pencil(PencilPlan),
     Heffte(HefftePlan),
     Popovici(PopoviciPlan),
-    /// R2C/C2R: the complex core planned on the packed half shape;
-    /// pack/untangle wrap around it at execute time. Works for every
-    /// algorithm, so all five get real paths for free.
-    Real(Arc<PlannedFft>),
+    /// R2C/C2R and the trig kinds: the complex core planned on the
+    /// packed half shape (real FFT) or the full shape (trig);
+    /// pack/untangle or permute/phase-combine wrap around it at execute
+    /// time. Works for every algorithm, so all five get real and trig
+    /// paths for free — and FFTU's wrappers additionally fold the
+    /// Makhoul permutation into its cyclic scatter/gather. For trig
+    /// kinds, `trig` holds the per-axis quarter-wave tables
+    /// (`sum_l n_l` words), built once here so steady-state executes
+    /// evaluate no trig functions.
+    Real { core: Arc<PlannedFft>, trig: Option<Vec<Vec<C64>>> },
 }
 
 /// A validated, reusable plan binding a [`Transform`] to an
@@ -180,13 +198,22 @@ fn resolve_cyclic_grid(t: &Transform) -> Result<Vec<usize>, FftError> {
 pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError> {
     t.validate()?;
     if t.kind != Kind::C2C {
-        // Real kinds: plan the complex core on the packed half shape
-        // (this is where the grid resolves and the per-axis divisibility
-        // rules apply — against n_d/2 on the last axis).
-        let inner = plan(algo, &t.complex_core())?;
-        let grid = inner.grid.clone();
-        let p = inner.p;
-        return Ok(Arc::new(PlannedFft { algo, t: t.clone(), grid, p, inner: Inner::Real(inner) }));
+        // Real kinds plan the complex core on the packed half shape
+        // (the grid resolves there, so the per-axis divisibility rules
+        // apply against n_d/2 on the last axis); trig kinds plan it on
+        // the full shape (the Makhoul permutation reorders, it does not
+        // pack, so the c2c grid rules carry over unchanged) and
+        // precompute their quarter-wave tables here, at plan time.
+        let core = plan(algo, &t.complex_core())?;
+        let grid = core.grid.clone();
+        let p = core.p;
+        let trig = match t.kind {
+            Kind::Dct2 | Kind::Dst2 => Some(trig2_tables(&t.shape)),
+            Kind::Dct3 | Kind::Dst3 => Some(trig3_tables(&t.shape)),
+            _ => None,
+        };
+        let inner = Inner::Real { core, trig };
+        return Ok(Arc::new(PlannedFft { algo, t: t.clone(), grid, p, inner }));
     }
     let p = t.grid.procs();
     let (inner, grid, p) = match algo {
@@ -262,6 +289,17 @@ impl PlannedFft {
         self.run_c2r(input, self.t.batch, "execute_c2r_batch")
     }
 
+    /// Execute ONE trig transform; see [`DistFft::execute_trig`].
+    pub fn execute_trig(&self, input: &[f64]) -> Result<RealExecution, FftError> {
+        self.run_trig(input, 1, "execute_trig")
+    }
+
+    /// Execute the descriptor's trig batch; see
+    /// [`DistFft::execute_trig_batch`].
+    pub fn execute_trig_batch(&self, input: &[f64]) -> Result<RealExecution, FftError> {
+        self.run_trig(input, self.t.batch, "execute_trig_batch")
+    }
+
     fn ensure_kind(&self, expected: Kind, call: &'static str) -> Result<(), FftError> {
         if self.t.kind != expected {
             return Err(FftError::KindMismatch {
@@ -273,11 +311,19 @@ impl PlannedFft {
         Ok(())
     }
 
-    /// The planned complex core of a real-kind plan.
+    /// The planned complex core of a real- or trig-kind plan.
     fn real_inner(&self) -> &Arc<PlannedFft> {
         match &self.inner {
-            Inner::Real(inner) => inner,
-            _ => unreachable!("real-kind plans always hold Inner::Real"),
+            Inner::Real { core, .. } => core,
+            _ => unreachable!("real/trig-kind plans always hold Inner::Real"),
+        }
+    }
+
+    /// The plan-time quarter-wave tables of a trig-kind plan.
+    fn trig_tables(&self) -> &[Vec<C64>] {
+        match &self.inner {
+            Inner::Real { trig: Some(tables), .. } => tables,
+            _ => unreachable!("trig-kind plans precompute their tables"),
         }
     }
 
@@ -294,7 +340,9 @@ impl PlannedFft {
             Inner::Pencil(plan) => plan.execute_batch_global(&inputs, dir),
             Inner::Heffte(plan) => plan.execute_batch_global(&inputs, dir),
             Inner::Popovici(plan) => plan.execute_batch_global(&inputs, dir),
-            Inner::Real(_) => unreachable!("real kinds dispatch through run_r2c/run_c2r"),
+            Inner::Real { .. } => {
+                unreachable!("real/trig kinds dispatch through run_r2c/run_c2r/run_trig")
+            }
         };
         let scale = self.t.normalization.scale(n);
         if scale != 1.0 {
@@ -379,6 +427,89 @@ impl PlannedFft {
         report.push_comp("c2r-retangle", batch as f64 * wrap_flops(&self.t.shape) / self.p as f64);
         Ok(RealExecution { output, report })
     }
+
+    /// Trig kinds (DCT-II/III, DST-II/III): local per-axis Makhoul
+    /// permutations and quarter-wave phase passes around the complex
+    /// core on the full shape. Through FFTU the permutation is composed
+    /// into the cyclic scatter (type 2) / gather (type 3) — no permuted
+    /// global array is materialized and the single all-to-all survives;
+    /// every other algorithm wraps its ordinary complex batch path. The
+    /// phase passes run facade-level and are charged to the ledger as
+    /// one computation superstep (`trig-wrap`), exactly mirroring the
+    /// analytic model's `trig_wrap_flops` — the two match bit-for-bit.
+    fn run_trig(
+        &self,
+        input: &[f64],
+        batch: usize,
+        call: &'static str,
+    ) -> Result<RealExecution, FftError> {
+        if !self.t.kind.is_trig() {
+            return Err(FftError::KindMismatch {
+                kind: self.t.kind.name(),
+                call,
+                expected: "dct2|dct3|dst2|dst3",
+            });
+        }
+        let n = self.t.total();
+        if input.len() != batch * n {
+            return Err(FftError::InputLength { expected: batch * n, got: input.len() });
+        }
+        let shape = &self.t.shape;
+        let scale = self.t.normalization.scale(n);
+        let inner = self.real_inner();
+        let tables = self.trig_tables();
+        let items: Vec<&[f64]> = input.chunks(n).collect();
+        let (output, mut report) = match self.t.kind {
+            Kind::Dct2 | Kind::Dst2 => {
+                let dst = self.t.kind == Kind::Dst2;
+                // Forward core, then the combine passes on each item.
+                let (core_items, report) = match &inner.inner {
+                    Inner::Fftu { plan, arena } => {
+                        fftu_execute_trig2_batch_arena(plan, arena, &items, dst)
+                    }
+                    _ => {
+                        let pre: Vec<C64> = items
+                            .iter()
+                            .flat_map(|item| trig2_pre(item, shape, dst))
+                            .collect();
+                        let exec = inner.run(&pre, batch)?;
+                        (exec.output.chunks(n).map(<[C64]>::to_vec).collect(), exec.report)
+                    }
+                };
+                let mut output = Vec::with_capacity(batch * n);
+                for mut v in core_items {
+                    output.extend(trig2_post(&mut v, shape, tables, dst, scale));
+                }
+                (output, report)
+            }
+            Kind::Dct3 | Kind::Dst3 => {
+                let dst = self.t.kind == Kind::Dst3;
+                let pre_items: Vec<Vec<C64>> =
+                    items.iter().map(|item| trig3_pre(item, shape, tables, dst)).collect();
+                match &inner.inner {
+                    Inner::Fftu { plan, arena } => {
+                        let refs: Vec<&[C64]> =
+                            pre_items.iter().map(Vec::as_slice).collect();
+                        let (outs, report) =
+                            fftu_execute_trig3_batch_arena(plan, arena, &refs, dst, scale);
+                        (outs.into_iter().flatten().collect(), report)
+                    }
+                    _ => {
+                        let pre: Vec<C64> = pre_items.into_iter().flatten().collect();
+                        let exec = inner.run(&pre, batch)?;
+                        let mut output = Vec::with_capacity(batch * n);
+                        for item in exec.output.chunks(n) {
+                            output.extend(trig3_extract(item, shape, dst, scale));
+                        }
+                        (output, exec.report)
+                    }
+                }
+            }
+            _ => unreachable!("guarded by is_trig above"),
+        };
+        report.push_comp("trig-wrap", batch as f64 * trig_wrap_flops(shape) / self.p as f64);
+        Ok(RealExecution { output, report })
+    }
 }
 
 impl DistFft for PlannedFft {
@@ -420,6 +551,14 @@ impl DistFft for PlannedFft {
 
     fn execute_c2r_batch(&self, input: &[C64]) -> Result<RealExecution, FftError> {
         PlannedFft::execute_c2r_batch(self, input)
+    }
+
+    fn execute_trig(&self, input: &[f64]) -> Result<RealExecution, FftError> {
+        PlannedFft::execute_trig(self, input)
+    }
+
+    fn execute_trig_batch(&self, input: &[f64]) -> Result<RealExecution, FftError> {
+        PlannedFft::execute_trig_batch(self, input)
     }
 }
 
@@ -544,6 +683,98 @@ mod tests {
         assert_eq!(
             c2r.execute_c2r(&[C64::ZERO; 10]).unwrap_err(),
             FftError::InputLength { expected: 8 * 5, got: 10 }
+        );
+    }
+
+    #[test]
+    fn trig_plans_execute_all_kinds_and_keep_one_alltoall() {
+        use crate::fft::trignd::{dctn2, dctn3, dstn2, dstn3};
+        let shape = [8usize, 12];
+        let n = 96;
+        let mut rng = Rng::new(0x7A11);
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let cases: [(Kind, Vec<f64>); 4] = [
+            (Kind::Dct2, dctn2(&x, &shape)),
+            (Kind::Dct3, dctn3(&x, &shape)),
+            (Kind::Dst2, dstn2(&x, &shape)),
+            (Kind::Dst3, dstn3(&x, &shape)),
+        ];
+        for (kind, want) in cases {
+            let planned =
+                plan(Algorithm::Fftu, &Transform::new(&shape).procs(4).kind(kind)).unwrap();
+            let got = planned.execute_trig(&x).unwrap();
+            let err =
+                got.output.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-9 * n as f64, "{kind:?}: err {err}");
+            assert_eq!(got.report.comm_supersteps(), 1, "{kind:?}");
+            // The same descriptor through a transposing baseline agrees.
+            let slab =
+                plan(Algorithm::slab(), &Transform::new(&shape).procs(2).kind(kind)).unwrap();
+            let got = slab.execute_trig(&x).unwrap();
+            let err =
+                got.output.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-9 * n as f64, "slab {kind:?}: err {err}");
+        }
+    }
+
+    #[test]
+    fn trig_batch_and_normalization() {
+        use crate::api::Normalization;
+        let shape = [4usize, 6];
+        let n = 24;
+        let mut rng = Rng::new(0xDD);
+        let x: Vec<f64> = (0..2 * n).map(|_| rng.f64_signed()).collect();
+        let fwd = plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape).procs(2).dct2().batch(2),
+        )
+        .unwrap();
+        let coeff = fwd.execute_trig_batch(&x).unwrap();
+        assert_eq!(coeff.report.comm_supersteps(), 2); // one all-to-all per item
+        // ByN on the inverse leaves the textbook 2^d residual:
+        // dct3(dct2(x)) = prod(2 n_l) x = 2^d N x.
+        let inv = plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape)
+                .procs(2)
+                .dct3()
+                .normalization(Normalization::ByN)
+                .batch(2),
+        )
+        .unwrap();
+        let back = inv.execute_trig_batch(&coeff.output).unwrap();
+        let two_d = 4.0; // 2^d for d = 2
+        let err = x
+            .iter()
+            .zip(&back.output)
+            .map(|(a, b)| (b / two_d - a).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-10, "batch roundtrip err {err}");
+    }
+
+    #[test]
+    fn trig_kind_mismatch_and_length_are_typed_errors() {
+        let c2c = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2)).unwrap();
+        assert_eq!(
+            c2c.execute_trig(&[0.0; 64]).unwrap_err(),
+            FftError::KindMismatch {
+                kind: "c2c",
+                call: "execute_trig",
+                expected: "dct2|dct3|dst2|dst3"
+            }
+        );
+        let dct = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).dct2()).unwrap();
+        assert_eq!(
+            dct.execute(&[C64::ZERO; 64]).unwrap_err(),
+            FftError::KindMismatch { kind: "dct2", call: "execute", expected: "c2c" }
+        );
+        assert_eq!(
+            dct.execute_r2c(&[0.0; 64]).unwrap_err(),
+            FftError::KindMismatch { kind: "dct2", call: "execute_r2c", expected: "r2c" }
+        );
+        assert_eq!(
+            dct.execute_trig(&[0.0; 10]).unwrap_err(),
+            FftError::InputLength { expected: 64, got: 10 }
         );
     }
 

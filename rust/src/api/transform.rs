@@ -29,11 +29,31 @@ use super::plan::{plan, Algorithm, PlannedFft};
 /// Real-kind plans execute through [`super::PlannedFft::execute_r2c`] /
 /// [`super::PlannedFft::execute_c2r`]; calling the complex entry points
 /// on them returns [`FftError::KindMismatch`].
+///
+/// The four trig kinds are the paper's §6 DCT/DST extensions, scipy
+/// conventions (types 2 and 3, `norm=None`):
+///
+/// - [`Kind::Dct2`] / [`Kind::Dst2`]: real in, real out, computed as a
+///   per-axis Makhoul even-odd permutation (local; for FFTU folded into
+///   the cyclic scatter) around a *forward* complex core on the full
+///   shape, plus per-axis quarter-wave combine passes. Forward-only.
+/// - [`Kind::Dct3`] / [`Kind::Dst3`]: the unnormalized inverses
+///   (`type3(type2(x)) = prod_l (2 n_l) x`) — per-axis phase passes, an
+///   *inverse* complex core, and the inverse permutation (folded into
+///   FFTU's gather). Inverse-only.
+///
+/// Trig plans execute through [`super::PlannedFft::execute_trig`] /
+/// [`super::PlannedFft::execute_trig_batch`]; FFTU keeps exactly ONE
+/// all-to-all for all four.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Kind {
     C2C,
     R2C,
     C2R,
+    Dct2,
+    Dct3,
+    Dst2,
+    Dst3,
 }
 
 impl Kind {
@@ -42,6 +62,10 @@ impl Kind {
             Kind::C2C => "c2c",
             Kind::R2C => "r2c",
             Kind::C2R => "c2r",
+            Kind::Dct2 => "dct2",
+            Kind::Dct3 => "dct3",
+            Kind::Dst2 => "dst2",
+            Kind::Dst3 => "dst3",
         }
     }
 
@@ -51,7 +75,32 @@ impl Kind {
             "c2c" => Some(Kind::C2C),
             "r2c" => Some(Kind::R2C),
             "c2r" => Some(Kind::C2R),
+            "dct2" => Some(Kind::Dct2),
+            "dct3" => Some(Kind::Dct3),
+            "dst2" => Some(Kind::Dst2),
+            "dst3" => Some(Kind::Dst3),
             _ => None,
+        }
+    }
+
+    /// The half-spectrum real-FFT kinds (packing trick): R2C and C2R.
+    pub fn is_real_fft(self) -> bool {
+        matches!(self, Kind::R2C | Kind::C2R)
+    }
+
+    /// The four trig kinds (DCT-II/III, DST-II/III).
+    pub fn is_trig(self) -> bool {
+        matches!(self, Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3)
+    }
+
+    /// Direction of the complex core a non-C2C kind runs through (also
+    /// the only valid descriptor direction for that kind): forward for
+    /// R2C and the type-2 trig kinds, inverse for C2R and type 3.
+    pub(crate) fn required_direction(self) -> Option<Direction> {
+        match self {
+            Kind::C2C => None,
+            Kind::R2C | Kind::Dct2 | Kind::Dst2 => Some(Direction::Forward),
+            Kind::C2R | Kind::Dct3 | Kind::Dst3 => Some(Direction::Inverse),
         }
     }
 }
@@ -192,15 +241,14 @@ impl Transform {
         self
     }
 
-    /// Set the transform [`Kind`]. The real kinds fix the direction
-    /// (R2C is forward-only, C2R inverse-only), overriding any earlier
+    /// Set the transform [`Kind`]. The non-C2C kinds fix the direction
+    /// (R2C/DCT-II/DST-II are forward-only, C2R/DCT-III/DST-III
+    /// inverse-only), overriding any earlier
     /// `direction`/`forward`/`inverse` call.
     pub fn kind(mut self, kind: Kind) -> Self {
         self.kind = kind;
-        match kind {
-            Kind::R2C => self.direction = Direction::Forward,
-            Kind::C2R => self.direction = Direction::Inverse,
-            Kind::C2C => {}
+        if let Some(dir) = kind.required_direction() {
+            self.direction = dir;
         }
         self
     }
@@ -215,18 +263,39 @@ impl Transform {
         self.kind(Kind::C2R)
     }
 
+    /// Shorthand for [`Transform::kind`]`(Kind::Dct2)`.
+    pub fn dct2(self) -> Self {
+        self.kind(Kind::Dct2)
+    }
+
+    /// Shorthand for [`Transform::kind`]`(Kind::Dct3)`.
+    pub fn dct3(self) -> Self {
+        self.kind(Kind::Dct3)
+    }
+
+    /// Shorthand for [`Transform::kind`]`(Kind::Dst2)`.
+    pub fn dst2(self) -> Self {
+        self.kind(Kind::Dst2)
+    }
+
+    /// Shorthand for [`Transform::kind`]`(Kind::Dst3)`.
+    pub fn dst3(self) -> Self {
+        self.kind(Kind::Dst3)
+    }
+
     /// Elements per transform in the *real* domain: the product of
     /// `shape`. For C2C this is also the complex element count.
     pub fn total(&self) -> usize {
         self.shape.iter().product()
     }
 
-    /// Shape of the spectral-domain buffer: `shape` for C2C, the
-    /// Hermitian half-spectrum `[..., n_d/2 + 1]` for R2C/C2R.
+    /// Shape of the spectral-domain buffer: the Hermitian half-spectrum
+    /// `[..., n_d/2 + 1]` for R2C/C2R, and `shape` itself for C2C and
+    /// the trig kinds (whose coefficient arrays are real and full-size).
     pub fn spectrum_shape(&self) -> Vec<usize> {
         match self.kind {
-            Kind::C2C => self.shape.clone(),
             Kind::R2C | Kind::C2R => realnd::spectrum_shape(&self.shape),
+            _ => self.shape.clone(),
         }
     }
 
@@ -235,14 +304,21 @@ impl Transform {
         self.spectrum_shape().iter().product()
     }
 
-    /// The C2C descriptor of the packed complex core a real-kind
-    /// transform runs through: half shape `[..., n_d/2]`, same grid
-    /// request and batch, unnormalized (the wrapper applies the
-    /// descriptor's normalization once, against the real total `N`).
+    /// The C2C descriptor of the complex core a non-C2C transform runs
+    /// through: the packed half shape `[..., n_d/2]` for R2C/C2R, the
+    /// full shape for the trig kinds (Makhoul permutes, it does not
+    /// pack); same grid request and batch, unnormalized (the wrapper
+    /// applies the descriptor's normalization once, against the real
+    /// total `N`).
     pub(crate) fn complex_core(&self) -> Transform {
         debug_assert!(self.kind != Kind::C2C);
+        let shape = if self.kind.is_trig() {
+            self.shape.clone()
+        } else {
+            realnd::half_shape(&self.shape)
+        };
         Transform {
-            shape: realnd::half_shape(&self.shape),
+            shape,
             grid: self.grid.clone(),
             direction: self.direction,
             normalization: Normalization::None,
@@ -263,17 +339,15 @@ impl Transform {
         if self.batch == 0 {
             return Err(FftError::BadDescriptor { reason: "batch must be >= 1".into() });
         }
-        if self.kind != Kind::C2C {
+        if self.kind.is_real_fft() {
             realnd::validate_even_last_axis(&self.shape)?;
-            let required = match self.kind {
-                Kind::R2C => Direction::Forward,
-                Kind::C2R => Direction::Inverse,
-                Kind::C2C => unreachable!(),
-            };
+        }
+        if let Some(required) = self.kind.required_direction() {
             if self.direction != required {
                 return Err(FftError::BadDescriptor {
                     reason: format!(
-                        "{} transforms are {:?}-only (got {:?}); C2R is the inverse path",
+                        "{} transforms are {:?}-only (got {:?}); the type-3/c2r kinds are \
+                         the inverse paths",
                         self.kind.name(),
                         required,
                         self.direction
@@ -372,10 +446,47 @@ mod tests {
 
     #[test]
     fn kind_names_round_trip() {
-        for kind in [Kind::C2C, Kind::R2C, Kind::C2R] {
+        for kind in [
+            Kind::C2C,
+            Kind::R2C,
+            Kind::C2R,
+            Kind::Dct2,
+            Kind::Dct3,
+            Kind::Dst2,
+            Kind::Dst3,
+        ] {
             assert_eq!(Kind::parse(kind.name()), Some(kind));
         }
         assert_eq!(Kind::parse("dct"), None);
+    }
+
+    #[test]
+    fn trig_kinds_fix_direction_and_run_on_the_full_shape() {
+        let t = Transform::new(&[8, 9]).dct2(); // odd axes are fine: no packing
+        assert_eq!(t.kind, Kind::Dct2);
+        assert_eq!(t.direction, Direction::Forward);
+        assert_eq!(t.spectrum_shape(), vec![8, 9]);
+        assert!(t.validate().is_ok());
+        let core = t.complex_core();
+        assert_eq!(core.shape, vec![8, 9]);
+        assert_eq!(core.kind, Kind::C2C);
+        assert_eq!(core.direction, Direction::Forward);
+
+        let t = Transform::new(&[8, 9]).dst3();
+        assert_eq!(t.direction, Direction::Inverse);
+        assert!(t.validate().is_ok());
+        assert_eq!(t.complex_core().direction, Direction::Inverse);
+
+        // kind() overrides an earlier direction; a later contradictory
+        // direction is rejected, exactly as for the real-FFT kinds.
+        assert!(Transform::new(&[8]).inverse().dct2().validate().is_ok());
+        assert!(Transform::new(&[8]).dct2().inverse().validate().is_err());
+        assert!(Transform::new(&[8]).dct3().forward().validate().is_err());
+        assert!(Transform::new(&[8]).dst2().inverse().validate().is_err());
+
+        assert!(Kind::Dct2.is_trig() && !Kind::Dct2.is_real_fft());
+        assert!(Kind::C2R.is_real_fft() && !Kind::C2R.is_trig());
+        assert!(!Kind::C2C.is_trig() && !Kind::C2C.is_real_fft());
     }
 
     #[test]

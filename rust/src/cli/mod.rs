@@ -28,9 +28,12 @@ COMMANDS:
                --engine native|xla local-transform engine (default native)
                --algo fftu|slab|pencil|heffte|popovici (default fftu)
                --r R               pencil decomposition rank (default min(2, d-1))
-               --kind c2c|r2c|c2r  transform kind (default c2c); r2c/c2r run
-                                   real input/output via the packing trick
-                                   (complex core on [..., n_d/2], even n_d)
+               --kind KIND         transform kind (default c2c):
+                                   c2c | r2c | c2r (packing trick, complex
+                                   core on [..., n_d/2], even n_d) |
+                                   dct2 | dct3 | dst2 | dst3 (trig kinds,
+                                   Makhoul permutation folded into the
+                                   cyclic pack, full-shape complex core)
                --inverse           inverse transform (1/N-normalized)
                --reps R            timed repetitions (default 3; the plan is
                                    built once and reused — plan-cache hits)
@@ -41,10 +44,15 @@ COMMANDS:
   bench      engine benchmark trajectory: times the retained pre-PR engine
              (per-call workers, odometer pack, allocating exchange) against
              the compiled strip-program/arena engine and writes the results
-             as JSON (default BENCH_pr3.json)
+             as JSON (default BENCH_<tag>.json for the current PR tag;
+             --out is authoritative everywhere when given)
                --quick             tiny shapes, few reps (CI smoke)
                --reps R            timed repetitions per case (default 5)
-               --out FILE          output path (default BENCH_pr3.json)
+               --out FILE          output path (default BENCH_<tag>.json)
+               --check BASELINE    bench-regression gate: compare this
+                                   run's engine-vs-legacy ratios against a
+                                   committed baseline JSON and fail if any
+                                   case regresses by more than 25%
   table      regenerate a paper table: `fftu table 4.1|4.2|4.3 [--executed]`
   pmax       print the E-pmax processor-ceiling comparison
   commsteps  communication supersteps per algorithm
@@ -85,9 +93,10 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             let shape = args.get_vec("shape")?.ok_or("--shape required")?;
             let p = args.get_usize("p")?.ok_or("--p required")?;
             let kind_name = args.get("kind").unwrap_or("c2c");
-            let kind = Kind::parse(kind_name)
-                .ok_or_else(|| format!("unknown --kind {kind_name}; use c2c|r2c|c2r"))?;
-            if kind != Kind::C2C {
+            let kind = Kind::parse(kind_name).ok_or_else(|| {
+                format!("unknown --kind {kind_name}; use c2c|r2c|c2r|dct2|dct3|dst2|dst3")
+            })?;
+            if kind.is_real_fft() {
                 realnd::validate_even_last_axis(&shape)?;
             }
             println!("{}", report::comm_steps_table(&shape, p, kind).render());
@@ -129,8 +138,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let engine = args.get("engine").or(cfg.get("engine")).unwrap_or("native");
     let algo = args.get("algo").or(cfg.get("algo")).unwrap_or("fftu");
     let kind_name = args.get("kind").or(cfg.get("kind")).unwrap_or("c2c");
-    let kind = Kind::parse(kind_name)
-        .ok_or_else(|| format!("unknown --kind {kind_name}; use c2c|r2c|c2r"))?;
+    let kind = Kind::parse(kind_name).ok_or_else(|| {
+        format!("unknown --kind {kind_name}; use c2c|r2c|c2r|dct2|dct3|dst2|dst3")
+    })?;
     let n: usize = shape.iter().product();
     let mut rng = Rng::new(42);
 
@@ -174,7 +184,14 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             if kind == Kind::R2C && inverse {
                 return Err("r2c is forward-only; use --kind c2r for the inverse real path".into());
             }
-            if kind != Kind::C2C {
+            if kind.is_trig() && inverse {
+                return Err(
+                    "trig kinds fix their own direction; use --kind dct3|dst3 for the \
+                     inverse (type-3) trig paths"
+                        .into(),
+                );
+            }
+            if kind.is_real_fft() {
                 realnd::validate_even_last_axis(&shape)?;
             }
             let mut descriptor = Transform::new(&shape).direction(dir).batch(reps);
@@ -231,9 +248,18 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                     let exec = planned.execute_c2r_batch(&batched)?;
                     (t0.elapsed().as_secs_f64() / reps as f64, exec.report, shape.clone())
                 }
+                Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
+                    let real: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+                    let batched: Vec<f64> =
+                        (0..reps).flat_map(|_| real.iter().copied()).collect();
+                    let t0 = std::time::Instant::now();
+                    let exec = planned.execute_trig_batch(&batched)?;
+                    (t0.elapsed().as_secs_f64() / reps as f64, exec.report, shape.clone())
+                }
             };
-            // Model flops: the real kinds run the complex core on N/2.
-            let model_n = if kind == Kind::C2C { n as f64 } else { n as f64 / 2.0 };
+            // Model flops: the r2c/c2r kinds run the complex core on
+            // N/2; c2c and the trig kinds run it on the full N.
+            let model_n = if kind.is_real_fft() { n as f64 / 2.0 } else { n as f64 };
             println!(
                 "{} ({}): shape {shape:?} -> {out_shape:?} p={}{} dir={:?}\n\
                  wall/transform: {wall:.6} s  ({:.3} Gflop/s model rate)\n\
@@ -278,6 +304,124 @@ struct BenchCase {
     grid: Vec<usize>,
 }
 
+/// PR tag stamped into the benchmark trajectory. Bump it per PR so the
+/// default output name (`BENCH_<tag>.json`) never collides with a
+/// committed baseline from an earlier PR; `--out` overrides it
+/// everywhere — no path in the bench writes any other name.
+const BENCH_TAG: &str = "pr4";
+
+/// The default trajectory output path, derived from [`BENCH_TAG`].
+fn bench_default_out() -> String {
+    format!("BENCH_{BENCH_TAG}.json")
+}
+
+/// Median of a timing sample (sorts in place). The recorded
+/// per-transform numbers use the median, not the mean, and the two
+/// engines' reps are interleaved, so one scheduling hiccup on a shared
+/// CI runner cannot drag an engine/legacy ratio past the `--check`
+/// tolerance.
+fn median_seconds(samples: &mut [f64]) -> f64 {
+    debug_assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("timings are finite"));
+    let mid = samples.len() / 2;
+    if samples.len() % 2 == 1 {
+        samples[mid]
+    } else {
+        (samples[mid - 1] + samples[mid]) / 2.0
+    }
+}
+
+/// One case's timings as parsed from a bench JSON (ours — the scraper
+/// understands exactly the schema [`cmd_bench`] writes, nothing more).
+struct BenchRecord {
+    name: String,
+    legacy_s: f64,
+    engine_s: f64,
+}
+
+/// Extract `"key": <number>` from one JSON case object.
+fn json_number_field(obj: &str, key: &str, path: &str) -> Result<f64, String> {
+    let tag = format!("\"{key}\":");
+    let at = obj
+        .find(&tag)
+        .ok_or_else(|| format!("{path}: bench case is missing `{key}`"))?;
+    let rest = obj[at + tag.len()..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E'))
+        .unwrap_or(rest.len());
+    rest[..end]
+        .parse::<f64>()
+        .map_err(|e| format!("{path}: bad `{key}` value `{}`: {e}", &rest[..end]))
+}
+
+/// Parse the `cases` array of a bench trajectory JSON into records.
+fn parse_bench_json(text: &str, path: &str) -> Result<Vec<BenchRecord>, String> {
+    let mut records = Vec::new();
+    // Each case object starts at `{"name": "` — split on that marker.
+    for obj in text.split("{\"name\": \"").skip(1) {
+        let name_end =
+            obj.find('"').ok_or_else(|| format!("{path}: unterminated case name"))?;
+        records.push(BenchRecord {
+            name: obj[..name_end].to_string(),
+            legacy_s: json_number_field(obj, "legacy_s_per_transform", path)?,
+            engine_s: json_number_field(obj, "engine_s_per_transform", path)?,
+        });
+    }
+    if records.is_empty() {
+        return Err(format!("{path}: no bench cases found (not a bench trajectory JSON?)"));
+    }
+    Ok(records)
+}
+
+/// The bench-regression gate behind `fftu bench --check BASELINE`.
+///
+/// Wall-clock seconds are machine-specific, so the compared quantity is
+/// each case's **engine/legacy ratio** — both run in the same process on
+/// the same input, which makes the ratio portable between the committed
+/// baseline and whatever runner CI schedules. A case regresses when its
+/// ratio grows by more than 25% over the baseline's (i.e. the compiled
+/// engine lost ground against the retained pre-PR engine).
+fn bench_check(baseline_path: &str, current: &[BenchRecord]) -> Result<(), String> {
+    const TOLERANCE: f64 = 1.25;
+    let text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| format!("reading {baseline_path}: {e}"))?;
+    let baseline = parse_bench_json(&text, baseline_path)?;
+    let mut failures = Vec::new();
+    let mut compared = 0usize;
+    for base in &baseline {
+        let Some(now) = current.iter().find(|r| r.name == base.name) else {
+            // Quick runs cover a subset of the full case list; a missing
+            // case is not a regression.
+            continue;
+        };
+        compared += 1;
+        let base_ratio = base.engine_s / base.legacy_s;
+        let now_ratio = now.engine_s / now.legacy_s;
+        if now_ratio > base_ratio * TOLERANCE {
+            failures.push(format!(
+                "{}: engine/legacy ratio {now_ratio:.3} vs baseline {base_ratio:.3} \
+                 (> {TOLERANCE}x)",
+                base.name
+            ));
+        }
+    }
+    if compared == 0 {
+        return Err(format!(
+            "--check {baseline_path}: no case names overlap with this run — \
+             baseline and run measure different things"
+        ));
+    }
+    if failures.is_empty() {
+        println!("bench check vs {baseline_path}: OK ({compared} case(s) within 25%)");
+        Ok(())
+    } else {
+        Err(format!(
+            "bench regression vs {baseline_path}:\n  {}",
+            failures.join("\n  ")
+        ))
+    }
+}
+
 /// `fftu bench` — the PR 3 benchmark trajectory. Times the retained
 /// pre-PR engine ([`crate::fftu::fftu_execute_batch_legacy`]: per-call
 /// worker construction, odometer packing, allocating exchange, generic
@@ -294,7 +438,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     if reps == 0 {
         return Err("--reps must be >= 1".into());
     }
-    let out_path = args.get("out").unwrap_or("BENCH_pr3.json").to_string();
+    // `--out` is authoritative everywhere; the default derives from the
+    // PR tag so no path in this command hardcodes an older PR's name.
+    let out_path = args.get("out").map(str::to_string).unwrap_or_else(bench_default_out);
     let cases: Vec<BenchCase> = if quick {
         vec![BenchCase { name: "c2c_16x16_p4", shape: vec![16, 16], grid: vec![2, 2] }]
     } else {
@@ -309,6 +455,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let planner = Planner::new();
     let mut rng = Rng::new(0xBE7C);
     let mut lines = Vec::new();
+    let mut records = Vec::new();
     println!("| case | legacy ms | engine ms | speedup |");
     println!("|---|---|---|---|");
     for case in &cases {
@@ -319,24 +466,27 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         let arena = ExecArena::new(plan.num_procs());
 
         // Warm both paths (first arena execute builds the workers), then
-        // time `reps` single-transform executes each and keep the mean.
+        // time `reps` single-transform executes of each, interleaved,
+        // and keep the per-engine median (see `median_seconds`).
         let (warm_new, _) = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
         let (warm_old, _) = fftu_execute_batch_legacy(&plan, &[&global], Direction::Forward);
         if warm_new != warm_old {
             return Err(format!("bench {}: engines disagree", case.name));
         }
-        let t0 = std::time::Instant::now();
+        let mut legacy_times = Vec::with_capacity(reps);
+        let mut engine_times = Vec::with_capacity(reps);
         for _ in 0..reps {
+            let t0 = std::time::Instant::now();
             let out = fftu_execute_batch_legacy(&plan, &[&global], Direction::Forward);
+            legacy_times.push(t0.elapsed().as_secs_f64());
             std::hint::black_box(&out);
-        }
-        let legacy_s = t0.elapsed().as_secs_f64() / reps as f64;
-        let t0 = std::time::Instant::now();
-        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
             let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
+            engine_times.push(t0.elapsed().as_secs_f64());
             std::hint::black_box(&out);
         }
-        let engine_s = t0.elapsed().as_secs_f64() / reps as f64;
+        let legacy_s = median_seconds(&mut legacy_times);
+        let engine_s = median_seconds(&mut engine_times);
         let speedup = legacy_s / engine_s;
         let model_flops = 5.0 * n as f64 * (n as f64).log2();
         println!(
@@ -357,15 +507,21 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             1.0 / engine_s,
             model_flops / engine_s / 1e9,
         ));
+        records.push(BenchRecord { name: case.name.to_string(), legacy_s, engine_s });
     }
     let json = format!(
-        "{{\n  \"pr\": 3,\n  \"harness\": \"fftu bench\",\n  \"quick\": {quick},\n  \
+        "{{\n  \"pr\": \"{BENCH_TAG}\",\n  \"harness\": \"fftu bench\",\n  \"quick\": {quick},\n  \
          \"engine\": \"strip-program + ExecArena + swap exchange\",\n  \
          \"baseline\": \"pre-PR odometer engine (retained)\",\n  \"cases\": [\n{}\n  ]\n}}\n",
         lines.join(",\n")
     );
     std::fs::write(&out_path, &json).map_err(|e| format!("writing {out_path}: {e}"))?;
     println!("\nwrote {out_path}");
+    // The regression gate runs after the trajectory is written, so a
+    // failing check still leaves the JSON behind for inspection.
+    if let Some(baseline) = args.get("check") {
+        bench_check(baseline, &records)?;
+    }
     Ok(())
 }
 
@@ -466,4 +622,77 @@ fn cmd_selftest() -> Result<(), String> {
     }
     println!("selftest OK");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json(engine_a: f64, engine_b: f64) -> String {
+        format!(
+            "{{\n  \"pr\": \"{BENCH_TAG}\",\n  \"cases\": [\n    \
+             {{\"name\": \"a\", \"legacy_s_per_transform\": 0.002000000, \
+             \"engine_s_per_transform\": {engine_a:.9}}},\n    \
+             {{\"name\": \"b\", \"legacy_s_per_transform\": 0.004000000, \
+             \"engine_s_per_transform\": {engine_b:.9}}}\n  ]\n}}\n"
+        )
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_scraper() {
+        let text = sample_json(0.001, 0.003);
+        let records = parse_bench_json(&text, "test.json").unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].name, "a");
+        assert!((records[0].legacy_s - 0.002).abs() < 1e-12);
+        assert!((records[0].engine_s - 0.001).abs() < 1e-12);
+        assert!((records[1].engine_s - 0.003).abs() < 1e-12);
+        assert!(parse_bench_json("{}", "empty.json").is_err());
+    }
+
+    #[test]
+    fn bench_check_compares_engine_legacy_ratios() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("fftu_bench_baseline_test.json");
+        std::fs::write(&path, sample_json(0.002, 0.004)).unwrap(); // ratios 1.0
+        let shown = path.to_string_lossy().into_owned();
+        // Within 25%: ratio 1.2 passes.
+        let ok = vec![
+            BenchRecord { name: "a".into(), legacy_s: 0.002, engine_s: 0.0024 },
+            BenchRecord { name: "b".into(), legacy_s: 0.004, engine_s: 0.0048 },
+        ];
+        assert!(bench_check(&shown, &ok).is_ok());
+        // Beyond 25%: ratio 1.5 on one case fails, naming the case.
+        let bad = vec![
+            BenchRecord { name: "a".into(), legacy_s: 0.002, engine_s: 0.003 },
+            BenchRecord { name: "b".into(), legacy_s: 0.004, engine_s: 0.0048 },
+        ];
+        let err = bench_check(&shown, &bad).unwrap_err();
+        assert!(err.contains("a:"), "{err}");
+        // A quick run covering a subset of the baseline still checks.
+        let subset =
+            vec![BenchRecord { name: "a".into(), legacy_s: 0.002, engine_s: 0.002 }];
+        assert!(bench_check(&shown, &subset).is_ok());
+        // Disjoint case names are an error, not a silent pass.
+        let disjoint =
+            vec![BenchRecord { name: "z".into(), legacy_s: 0.002, engine_s: 0.002 }];
+        assert!(bench_check(&shown, &disjoint).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bench_default_out_follows_the_pr_tag() {
+        assert_eq!(bench_default_out(), format!("BENCH_{BENCH_TAG}.json"));
+        assert!(!bench_default_out().contains("pr3"));
+    }
+
+    #[test]
+    fn median_ignores_one_outlier() {
+        let mut odd = vec![0.002, 0.5, 0.001];
+        assert!((median_seconds(&mut odd) - 0.002).abs() < 1e-12);
+        let mut even = vec![0.004, 0.002, 9.0, 0.002];
+        assert!((median_seconds(&mut even) - 0.003).abs() < 1e-12);
+        let mut one = vec![0.7];
+        assert!((median_seconds(&mut one) - 0.7).abs() < 1e-12);
+    }
 }

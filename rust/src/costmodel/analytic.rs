@@ -92,6 +92,27 @@ pub fn fftu_r2c_report(shape: &[usize], p: usize) -> CostReport {
     r2c_wrap_report(fftu_report(&half, p), shape, p)
 }
 
+/// Wrap any algorithm's analytic ledger for its *full-shape complex
+/// core* into a trig-kind (DCT/DST) ledger: the Makhoul permutations
+/// are pure index maps folded into the existing data movement (no
+/// communication, no flops charged), and the per-axis quarter-wave
+/// phase passes append one computation superstep of
+/// `trig_wrap_flops(shape)/p` — the same formula and label the executed
+/// facade charges, so executed and analytic ledgers match exactly.
+pub fn trig_wrap_report(core: CostReport, shape: &[usize], p: usize) -> CostReport {
+    let mut report = core;
+    report.push_comp("trig-wrap", crate::fft::trignd::trig_wrap_flops(shape) / p as f64);
+    report
+}
+
+/// FFTU with a trig kind (any of DCT-II/III, DST-II/III): Eq. (2.12) on
+/// the full shape — the permutation costs nothing, so flops and h match
+/// the c2c ledger — plus the phase-pass wrap. Still exactly one
+/// communication superstep, the §6 claim this PR closes.
+pub fn fftu_trig_report(shape: &[usize], p: usize) -> CostReport {
+    trig_wrap_report(fftu_report(shape, p), shape, p)
+}
+
 /// Parallel-FFTW slab: local axes 2..d, one transpose, axis 1, optional
 /// transpose back.
 pub fn slab_report(shape: &[usize], p: usize, same: bool) -> Result<CostReport, FftError> {
@@ -303,6 +324,37 @@ mod tests {
                 executed.supersteps.last().unwrap().w_max,
                 "untangle charge {shape:?}"
             );
+        }
+    }
+
+    #[test]
+    fn fftu_trig_analytic_matches_executed() {
+        use crate::api::{plan, Algorithm, Kind, Transform};
+        let mut rng = Rng::new(7);
+        for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+            for (shape, p) in [(vec![16usize, 16], 4usize), (vec![8, 4, 4], 2)] {
+                let n: usize = shape.iter().product();
+                let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+                let planned =
+                    plan(Algorithm::Fftu, &Transform::new(&shape).procs(p).kind(kind)).unwrap();
+                let executed = planned.execute_trig(&x).unwrap().report;
+                let analytic = fftu_trig_report(&shape, p);
+                assert_ledgers_match(
+                    &analytic,
+                    &executed,
+                    &format!("fftu {} {shape:?} p={p}", kind.name()),
+                );
+                // ONE communication superstep — §6 closed with the
+                // headline property intact.
+                assert_eq!(executed.comm_supersteps(), 1, "{} {shape:?}", kind.name());
+                // The wrap charge agrees to the last bit: both sides
+                // evaluate the same trig_wrap_flops(shape)/p formula.
+                assert_eq!(
+                    analytic.supersteps.last().unwrap().w_max,
+                    executed.supersteps.last().unwrap().w_max,
+                    "trig wrap charge {shape:?}"
+                );
+            }
         }
     }
 

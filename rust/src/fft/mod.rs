@@ -15,6 +15,7 @@ pub mod real;
 pub mod realnd;
 pub mod spectral;
 pub mod stockham;
+pub mod trignd;
 
 pub use complex::{max_abs_diff, rel_l2_error, C64};
 pub use dft::{dft, dft_into, dft_nd, Direction};
@@ -23,3 +24,4 @@ pub use plan::{fft_inplace, global_planner, ifft_normalized_inplace, Plan, PlanR
 pub use real::{dct2, dct3, dst2, dst3, irfft, rfft};
 pub use realnd::{irfftn, rfftn};
 pub use spectral::{fft_omega, fftfreq, fftshift, ifftshift, radial_power_spectrum};
+pub use trignd::{dctn2, dctn3, dstn2, dstn3};

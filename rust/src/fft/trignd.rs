@@ -1,0 +1,472 @@
+//! Multidimensional separable trig transforms (DCT-II/III, DST-II/III)
+//! via per-axis Makhoul even-odd permutations and quarter-wave phases
+//! around one full complex FFT — plus the shared pre/post passes the
+//! *distributed* trig paths are built from.
+//!
+//! The paper's §6 names the DCT and DST as the remaining real transforms
+//! its cyclic framework covers. The 1D building blocks live in
+//! [`super::real`]; this module generalizes them to d dimensions the
+//! same way [`super::realnd`] generalizes the packing trick, and in a
+//! form any distributed complex core can consume:
+//!
+//! **Type 2 (DCT-II / DST-II), forward core:**
+//!
+//! 1. **Permute** every axis by Makhoul's even-odd reordering
+//!    `sigma(2t) = t`, `sigma(2t+1) = n - 1 - t` (DST-II first negates
+//!    odd-parity inputs). A pure index map — under the cyclic
+//!    distribution it folds into the input scatter, costing no
+//!    communication (see `FftuPlan::scatter_rank_into_trig2`).
+//! 2. **Complex core**: one full d-dimensional forward FFT (FFTU: still
+//!    exactly ONE all-to-all).
+//! 3. **Combine**: per axis, the quarter-wave phase pass
+//!    `y_k = w_k V_k + conj(w_k) V_{(n-k) mod n}` with
+//!    `w_k = e^{-i pi k / (2n)}`. This is the *C-linear extension* of
+//!    Makhoul's `y_k = 2 Re(w_k V_k)` (the two coincide exactly on real
+//!    input, where `V_{-k} = conj(V_k)`), which is what makes the d
+//!    per-axis passes compose: each stays correct on the complex
+//!    intermediates the other axes produce. The final imaginary parts
+//!    vanish identically for real input.
+//!
+//! **Type 3 (DCT-III / DST-III), inverse core,** the exact adjoint
+//! order: per-axis phase pass `V_k = w'_k (x_k - i x_{n-k})` with
+//! `w'_k = e^{+i pi k / (2n)}` (and `x_n := 0` at `k = 0`; DST-III first
+//! reverses every axis), one full *inverse* FFT, then the inverse
+//! Makhoul permutation (folded into the output gather for FFTU —
+//! `FftuPlan::gather_rank_trig3_into`) with DST-III negating odd-parity
+//! outputs.
+//!
+//! Conventions match scipy exactly (`scipy.fft.dctn`/`dstn`, types 2
+//! and 3, `norm=None`), validated against committed scipy goldens in
+//! `rust/tests/golden.rs` and against separable application of the 1D
+//! [`super::real`] kernels in the unit tests. The unnormalized pair
+//! composes to `type3(type2(x)) = prod_l (2 n_l) * x`.
+
+use std::f64::consts::PI;
+
+use super::complex::C64;
+use super::ndfft::fftn_inplace;
+use super::Direction;
+
+/// The Makhoul read map `r = sigma^{-1}`: output position `m` of the
+/// even-odd permutation reads input position `2m` (first half) or
+/// `2n - 2m - 1` (second half, the reversed odd entries). Involution
+/// partner of `sigma(2t) = t`, `sigma(2t+1) = n - 1 - t`; also the
+/// *write* map of the inverse permutation, which is why the type-2
+/// scatter and the type-3 gather share it.
+#[inline]
+pub fn makhoul_read_index(n: usize, m: usize) -> usize {
+    if 2 * m < n {
+        2 * m
+    } else {
+        2 * n - 2 * m - 1
+    }
+}
+
+/// Row-major strides of `shape`.
+fn strides(shape: &[usize]) -> Vec<usize> {
+    let d = shape.len();
+    let mut s = vec![1usize; d];
+    for l in (0..d.saturating_sub(1)).rev() {
+        s[l] = s[l + 1] * shape[l + 1];
+    }
+    s
+}
+
+/// Per-axis quarter-wave tables for the type-2 combine passes:
+/// `w_k = e^{-i pi k / (2 n_l)}` for each axis. Shape-only data
+/// (`sum_l n_l` complex words), so distributed plans build it once at
+/// plan time and steady-state executes evaluate no trig at all —
+/// mirroring the Eq. 3.1 twiddle-table discipline of the pack engine.
+pub fn trig2_tables(shape: &[usize]) -> Vec<Vec<C64>> {
+    shape
+        .iter()
+        .map(|&n| (0..n).map(|k| C64::cis(-PI * k as f64 / (2.0 * n as f64))).collect())
+        .collect()
+}
+
+/// Conjugate counterpart of [`trig2_tables`] for the type-3 phase
+/// passes: `w'_k = e^{+i pi k / (2 n_l)}`.
+pub fn trig3_tables(shape: &[usize]) -> Vec<Vec<C64>> {
+    shape
+        .iter()
+        .map(|&n| (0..n).map(|k| C64::cis(PI * k as f64 / (2.0 * n as f64))).collect())
+        .collect()
+}
+
+/// Type-2 pre-pass: permute every axis by the Makhoul reordering and
+/// cast to complex; `negate_odd` (DST-II) first flips the sign of
+/// odd-parity inputs, which lands on the permuted entries whose *source*
+/// index has odd parity. This materialized form serves the sequential
+/// transforms and the non-cyclic baselines; FFTU reads the same map
+/// directly inside its scatter instead.
+pub fn trig2_pre(x: &[f64], shape: &[usize], negate_odd: bool) -> Vec<C64> {
+    let n: usize = shape.iter().product();
+    debug_assert_eq!(x.len(), n, "trig2_pre: input length mismatch");
+    let d = shape.len();
+    let stride = strides(shape);
+    let mut idx = vec![0usize; d];
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut src = 0usize;
+        let mut par = 0usize;
+        for l in 0..d {
+            let m = makhoul_read_index(shape[l], idx[l]);
+            src += m * stride[l];
+            par ^= m & 1;
+        }
+        let v = if negate_odd && par == 1 { -x[src] } else { x[src] };
+        out.push(C64::new(v, 0.0));
+        for l in (0..d).rev() {
+            idx[l] += 1;
+            if idx[l] < shape[l] {
+                break;
+            }
+            idx[l] = 0;
+        }
+    }
+    out
+}
+
+/// One type-2 combine pass along `axis`, in place:
+/// `y_k = w_k V_k + conj(w_k) V_{(n-k) mod n}` with `w` the axis's
+/// [`trig2_tables`] entry. Processed in mirror pairs `(a, n - a)` so
+/// both inputs are read before either is overwritten; `a = 0` (and
+/// `a = n/2` for even `n`) are self-paired.
+fn trig2_combine_axis(v: &mut [C64], shape: &[usize], axis: usize, w: &[C64]) {
+    let n = shape[axis];
+    debug_assert_eq!(w.len(), n, "trig2 table length mismatch on axis {axis}");
+    let stride: usize = shape[axis + 1..].iter().product();
+    let outer: usize = shape[..axis].iter().product();
+    let block = n * stride;
+    for o in 0..outer {
+        let base = o * block;
+        for t in 0..stride {
+            let at = |k: usize| base + k * stride + t;
+            let v0 = v[at(0)];
+            v[at(0)] = v0 + v0; // w_0 = 1, mirror of 0 is 0
+            let mut a = 1usize;
+            while 2 * a < n {
+                let b = n - a;
+                let (va, vb) = (v[at(a)], v[at(b)]);
+                v[at(a)] = w[a] * va + w[a].conj() * vb;
+                v[at(b)] = w[b] * vb + w[b].conj() * va;
+                a += 1;
+            }
+            if n % 2 == 0 && n > 1 {
+                let mid = n / 2;
+                let vm = v[at(mid)];
+                v[at(mid)] = w[mid] * vm + w[mid].conj() * vm;
+            }
+        }
+    }
+}
+
+/// Type-2 post-pass: apply the combine pass along every axis (using the
+/// precomputed [`trig2_tables`]), then extract the (exactly) real
+/// result scaled by `scale`. `reverse` (DST-II) reads the output with
+/// every axis reversed — in row-major order that is simply the reversed
+/// flat order, since `flat(rev(k)) = N - 1 - flat(k)`.
+pub fn trig2_post(
+    v: &mut [C64],
+    shape: &[usize],
+    tables: &[Vec<C64>],
+    reverse: bool,
+    scale: f64,
+) -> Vec<f64> {
+    debug_assert_eq!(v.len(), shape.iter().product::<usize>());
+    debug_assert_eq!(tables.len(), shape.len());
+    for axis in 0..shape.len() {
+        trig2_combine_axis(v, shape, axis, &tables[axis]);
+    }
+    if reverse {
+        v.iter().rev().map(|z| z.re * scale).collect()
+    } else {
+        v.iter().map(|z| z.re * scale).collect()
+    }
+}
+
+/// One type-3 phase pass along `axis`, in place:
+/// `V_k = w'_k (x_k - i x_{(n-k) mod n})` with `w'` the axis's
+/// [`trig3_tables`] entry and the mirrored term dropped at `k = 0` (the
+/// `x_n := 0` convention of [`super::real::dct3`]), so `V_0 = x_0`.
+fn trig3_phase_axis(v: &mut [C64], shape: &[usize], axis: usize, w: &[C64]) {
+    let n = shape[axis];
+    debug_assert_eq!(w.len(), n, "trig3 table length mismatch on axis {axis}");
+    let stride: usize = shape[axis + 1..].iter().product();
+    let outer: usize = shape[..axis].iter().product();
+    let block = n * stride;
+    for o in 0..outer {
+        let base = o * block;
+        for t in 0..stride {
+            let at = |k: usize| base + k * stride + t;
+            // k = 0 is unchanged: w'_0 (x_0 - i * 0) = x_0.
+            let mut a = 1usize;
+            while 2 * a < n {
+                let b = n - a;
+                let (va, vb) = (v[at(a)], v[at(b)]);
+                v[at(a)] = w[a] * (va - vb.mul_i());
+                v[at(b)] = w[b] * (vb - va.mul_i());
+                a += 1;
+            }
+            if n % 2 == 0 && n > 1 {
+                let mid = n / 2;
+                let vm = v[at(mid)];
+                v[at(mid)] = w[mid] * (vm - vm.mul_i());
+            }
+        }
+    }
+}
+
+/// Type-3 pre-pass: cast to complex (`reverse`, for DST-III, reads the
+/// input with every axis reversed) and apply the phase pass along every
+/// axis using the precomputed [`trig3_tables`]. The result feeds an
+/// *unnormalized inverse* complex core, whose missing `1/n` per axis is
+/// exactly the factor the textbook DCT-III definition needs.
+pub fn trig3_pre(x: &[f64], shape: &[usize], tables: &[Vec<C64>], reverse: bool) -> Vec<C64> {
+    let n: usize = shape.iter().product();
+    debug_assert_eq!(x.len(), n, "trig3_pre: input length mismatch");
+    debug_assert_eq!(tables.len(), shape.len());
+    let mut v: Vec<C64> = if reverse {
+        x.iter().rev().map(|&r| C64::new(r, 0.0)).collect()
+    } else {
+        x.iter().map(|&r| C64::new(r, 0.0)).collect()
+    };
+    for axis in 0..shape.len() {
+        trig3_phase_axis(&mut v, shape, axis, &tables[axis]);
+    }
+    v
+}
+
+/// Type-3 post-pass: undo the Makhoul permutation on every axis —
+/// element `m` of the inverse-FFT output lands at position
+/// [`makhoul_read_index`]`(n, m)` per axis — taking real parts scaled by
+/// `scale`; `negate_odd` (DST-III) flips the sign at odd-parity *output*
+/// positions. The materialized form for the sequential transforms and
+/// baselines; FFTU writes through the same map inside its gather.
+pub fn trig3_extract(v: &[C64], shape: &[usize], negate_odd: bool, scale: f64) -> Vec<f64> {
+    let n: usize = shape.iter().product();
+    debug_assert_eq!(v.len(), n, "trig3_extract: input length mismatch");
+    let d = shape.len();
+    let stride = strides(shape);
+    let mut idx = vec![0usize; d];
+    let mut out = vec![0.0f64; n];
+    for z in v {
+        let mut dst = 0usize;
+        let mut par = 0usize;
+        for l in 0..d {
+            let j = makhoul_read_index(shape[l], idx[l]);
+            dst += j * stride[l];
+            par ^= j & 1;
+        }
+        let val = z.re * scale;
+        out[dst] = if negate_odd && par == 1 { -val } else { val };
+        for l in (0..d).rev() {
+            idx[l] += 1;
+            if idx[l] < shape[l] {
+                break;
+            }
+            idx[l] = 0;
+        }
+    }
+    out
+}
+
+/// Model real flops of the trig pre/post wrapping around the complex
+/// core: `16 N` per combine/phase pass (one axis each of d), plus `2 N`
+/// for the permutation/extraction sweep — counted in the same style as
+/// §2.3's `12 N/p` twiddle charge. Shared by the executed facade ledger
+/// and the analytic cost model so the two match exactly.
+pub fn trig_wrap_flops(shape: &[usize]) -> f64 {
+    let n: f64 = shape.iter().map(|&x| x as f64).product();
+    (16.0 * shape.len() as f64 + 2.0) * n
+}
+
+/// Sequential multidimensional DCT-II over every axis, scipy
+/// `dctn(x, type=2)` convention (unnormalized, factor 2 per axis term).
+pub fn dctn2(x: &[f64], shape: &[usize]) -> Vec<f64> {
+    let mut v = trig2_pre(x, shape, false);
+    fftn_inplace(&mut v, shape, Direction::Forward);
+    trig2_post(&mut v, shape, &trig2_tables(shape), false, 1.0)
+}
+
+/// Sequential multidimensional DCT-III over every axis, scipy
+/// `dctn(x, type=3)` convention; `dctn3(dctn2(x)) = prod_l (2 n_l) x`.
+pub fn dctn3(x: &[f64], shape: &[usize]) -> Vec<f64> {
+    let mut v = trig3_pre(x, shape, &trig3_tables(shape), false);
+    fftn_inplace(&mut v, shape, Direction::Inverse);
+    trig3_extract(&v, shape, false, 1.0)
+}
+
+/// Sequential multidimensional DST-II over every axis, scipy
+/// `dstn(x, type=2)` convention. Per axis, DST-II is DCT-II conjugated
+/// by sign-flip and reversal: negate odd inputs, DCT-II, reverse.
+pub fn dstn2(x: &[f64], shape: &[usize]) -> Vec<f64> {
+    let mut v = trig2_pre(x, shape, true);
+    fftn_inplace(&mut v, shape, Direction::Forward);
+    trig2_post(&mut v, shape, &trig2_tables(shape), true, 1.0)
+}
+
+/// Sequential multidimensional DST-III over every axis, scipy
+/// `dstn(x, type=3)` convention; `dstn3(dstn2(x)) = prod_l (2 n_l) x`.
+pub fn dstn3(x: &[f64], shape: &[usize]) -> Vec<f64> {
+    let mut v = trig3_pre(x, shape, &trig3_tables(shape), true);
+    fftn_inplace(&mut v, shape, Direction::Inverse);
+    trig3_extract(&v, shape, true, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::real;
+    use crate::testing::{forall, Rng};
+
+    fn rand_real(n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| rng.f64_signed()).collect()
+    }
+
+    /// Apply a 1D real transform along one axis of a row-major array —
+    /// the separable reference the fused path must match.
+    fn apply_axis(x: &[f64], shape: &[usize], axis: usize, f: fn(&[f64]) -> Vec<f64>) -> Vec<f64> {
+        let n = shape[axis];
+        let stride: usize = shape[axis + 1..].iter().product();
+        let outer: usize = shape[..axis].iter().product();
+        let mut out = vec![0.0; x.len()];
+        for o in 0..outer {
+            for t in 0..stride {
+                let at = |k: usize| o * n * stride + k * stride + t;
+                let line: Vec<f64> = (0..n).map(|k| x[at(k)]).collect();
+                let y = f(&line);
+                for (k, &v) in y.iter().enumerate() {
+                    out[at(k)] = v;
+                }
+            }
+        }
+        out
+    }
+
+    fn separable(x: &[f64], shape: &[usize], f: fn(&[f64]) -> Vec<f64>) -> Vec<f64> {
+        let mut cur = x.to_vec();
+        for axis in 0..shape.len() {
+            cur = apply_axis(&cur, shape, axis, f);
+        }
+        cur
+    }
+
+    fn max_err(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    const SHAPES: &[&[usize]] = &[
+        &[1],
+        &[2],
+        &[5],
+        &[16],
+        &[60],
+        &[1, 6],
+        &[8, 12],
+        &[3, 5],
+        &[4, 6, 10],
+        &[2, 3, 4, 5],
+    ];
+
+    #[test]
+    fn trig2_matches_separable_1d_kernels() {
+        let mut rng = Rng::new(0x7C20);
+        for &shape in SHAPES {
+            let n: usize = shape.iter().product();
+            let x = rand_real(n, &mut rng);
+            let scale = n as f64;
+            let err = max_err(&dctn2(&x, shape), &separable(&x, shape, real::dct2));
+            assert!(err < 1e-9 * scale, "dctn2 {shape:?}: {err}");
+            let err = max_err(&dstn2(&x, shape), &separable(&x, shape, real::dst2));
+            assert!(err < 1e-9 * scale, "dstn2 {shape:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn trig3_matches_separable_1d_kernels() {
+        let mut rng = Rng::new(0x7C30);
+        for &shape in SHAPES {
+            let n: usize = shape.iter().product();
+            let x = rand_real(n, &mut rng);
+            let scale = n as f64;
+            let err = max_err(&dctn3(&x, shape), &separable(&x, shape, real::dct3));
+            assert!(err < 1e-9 * scale, "dctn3 {shape:?}: {err}");
+            let err = max_err(&dstn3(&x, shape), &separable(&x, shape, real::dst3));
+            assert!(err < 1e-9 * scale, "dstn3 {shape:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn type3_inverts_type2_up_to_2n_per_axis() {
+        let mut rng = Rng::new(0x7C31);
+        for &shape in SHAPES {
+            let n: usize = shape.iter().product();
+            let x = rand_real(n, &mut rng);
+            let scale: f64 = shape.iter().map(|&nl| 2.0 * nl as f64).product();
+            let back = dctn3(&dctn2(&x, shape), shape);
+            let err =
+                x.iter().zip(&back).map(|(a, b)| (b / scale - a).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-9 * n as f64, "dct {shape:?}: {err}");
+            let back = dstn3(&dstn2(&x, shape), shape);
+            let err =
+                x.iter().zip(&back).map(|(a, b)| (b / scale - a).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-9 * n as f64, "dst {shape:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn makhoul_read_index_is_the_inverse_permutation() {
+        for n in [1usize, 2, 5, 8, 9, 16] {
+            // sigma(2t) = t, sigma(2t+1) = n-1-t; r must invert it.
+            let mut seen = vec![false; n];
+            for j in 0..n {
+                let s = if j % 2 == 0 { j / 2 } else { n - 1 - j / 2 };
+                assert_eq!(makhoul_read_index(n, s), j, "n={n} j={j}");
+                assert!(!seen[s], "n={n}: sigma not a bijection");
+                seen[s] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn prop_trig_random_shapes_roundtrip() {
+        forall("trig type-3 ∘ type-2 == prod(2 n_l) id", 25, 0x7C77, |rng| {
+            let d = rng.range(1, 3);
+            let shape: Vec<usize> = (0..d).map(|_| rng.range(1, 9)).collect();
+            let n: usize = shape.iter().product();
+            let x = rand_real(n, rng);
+            let scale: f64 = shape.iter().map(|&nl| 2.0 * nl as f64).product();
+            let back = dctn3(&dctn2(&x, &shape), &shape);
+            let err =
+                x.iter().zip(&back).map(|(a, b)| (b / scale - a).abs()).fold(0.0, f64::max);
+            crate::prop_assert!(err < 1e-8 * n as f64, "dct {shape:?}: {err}");
+            let back = dstn3(&dstn2(&x, &shape), &shape);
+            let err =
+                x.iter().zip(&back).map(|(a, b)| (b / scale - a).abs()).fold(0.0, f64::max);
+            crate::prop_assert!(err < 1e-8 * n as f64, "dst {shape:?}: {err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wrap_flops_formula() {
+        assert_eq!(trig_wrap_flops(&[8]), (16.0 + 2.0) * 8.0);
+        assert_eq!(trig_wrap_flops(&[4, 6]), (32.0 + 2.0) * 24.0);
+    }
+
+    #[test]
+    fn tables_are_per_axis_conjugates() {
+        let shape = [4usize, 6];
+        let t2 = trig2_tables(&shape);
+        let t3 = trig3_tables(&shape);
+        assert_eq!(t2.len(), 2);
+        for (axis, &n) in shape.iter().enumerate() {
+            assert_eq!(t2[axis].len(), n);
+            for k in 0..n {
+                assert!((t2[axis][k].conj() - t3[axis][k]).abs() < 1e-15);
+            }
+            assert_eq!(t2[axis][0], C64::ONE);
+        }
+    }
+}

@@ -136,6 +136,133 @@ pub fn fftu_c2r_global(
     })
 }
 
+/// Trig (DCT/DST) convenience driver — the paper's §6 extension beyond
+/// the RFFT: the per-axis Makhoul even-odd permutation is composed into
+/// the cyclic scatter (type 2) or gather (type 3), the complex core is
+/// Algorithm 2.3 on the **full** shape (still exactly ONE all-to-all),
+/// and the per-axis quarter-wave phase passes run as local facade-level
+/// computation charged to the ledger. `kind` must be one of
+/// `Kind::{Dct2, Dct3, Dst2, Dst3}` (scipy types 2/3 conventions,
+/// unnormalized); returns the real coefficient array plus the ledger.
+pub fn fftu_trig_global(
+    shape: &[usize],
+    pgrid: &[usize],
+    kind: crate::api::Kind,
+    x: &[f64],
+) -> Result<(Vec<f64>, CostReport), FftError> {
+    use crate::api::Kind;
+    use crate::fft::trignd::{trig2_post, trig2_tables, trig3_pre, trig3_tables, trig_wrap_flops};
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(shape, pgrid, &planner)?);
+    let p = plan.num_procs();
+    let n = plan.total();
+    if x.len() != n {
+        return Err(FftError::InputLength { expected: n, got: x.len() });
+    }
+    let arena = ExecArena::new(p);
+    let (out, mut report) = match kind {
+        Kind::Dct2 | Kind::Dst2 => {
+            let dst = kind == Kind::Dst2;
+            let (mut vs, report) = fftu_execute_trig2_batch_arena(&plan, &arena, &[x], dst);
+            let mut v = vs.pop().unwrap();
+            (trig2_post(&mut v, shape, &trig2_tables(shape), dst, 1.0), report)
+        }
+        Kind::Dct3 | Kind::Dst3 => {
+            let dst = kind == Kind::Dst3;
+            let pre = trig3_pre(x, shape, &trig3_tables(shape), dst);
+            let (mut outs, report) =
+                fftu_execute_trig3_batch_arena(&plan, &arena, &[&pre], dst, 1.0);
+            (outs.pop().unwrap(), report)
+        }
+        other => {
+            return Err(FftError::BadDescriptor {
+                reason: format!("fftu_trig_global serves trig kinds, got {}", other.name()),
+            })
+        }
+    };
+    report.push_comp("trig-wrap", trig_wrap_flops(shape) / p as f64);
+    Ok((out, report))
+}
+
+/// Type-2 trig engine: like [`fftu_execute_batch_arena`], but each rank
+/// extracts its local slice from the global **real** input through the
+/// composed Makhoul-cyclic read map
+/// ([`FftuPlan::scatter_rank_into_trig2`]) — the permuted complex global
+/// array is never materialized, the all-to-all count is unchanged (one
+/// per item), and the steady-state per-rank path stays allocation-free.
+/// Returns the *gathered complex core outputs*; the caller applies the
+/// per-axis combine passes ([`crate::fft::trignd::trig2_post`]).
+pub fn fftu_execute_trig2_batch_arena(
+    plan: &Arc<FftuPlan>,
+    arena: &ExecArena,
+    inputs: &[&[f64]],
+    negate_odd: bool,
+) -> (Vec<Vec<C64>>, CostReport) {
+    let p = plan.num_procs();
+    debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
+    let session = arena.begin_session();
+    if session.is_none() {
+        let transient = ExecArena::new(p);
+        return fftu_execute_trig2_batch_arena(plan, &transient, inputs, negate_odd);
+    }
+    let outcome = run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(plan, rank);
+        let worker = slot.as_mut().expect("arena worker just initialized");
+        let mut outs = Vec::with_capacity(inputs.len());
+        for &global in inputs {
+            let mut local = vec![C64::ZERO; plan.local_len()];
+            plan.scatter_rank_into_trig2(global, rank, &mut local, negate_odd);
+            worker.execute(ctx, &mut local, Direction::Forward);
+            outs.push(local);
+        }
+        outs
+    });
+    (plan.dist.gather_batch(&outcome.outputs), outcome.report)
+}
+
+/// Type-3 trig engine: the inputs are the phase-prepared complex arrays
+/// ([`crate::fft::trignd::trig3_pre`]); the inverse core runs through
+/// the ordinary cyclic scatter, and each rank's output is written into
+/// the global **real** result through the inverse Makhoul permutation
+/// folded into the gather ([`FftuPlan::gather_rank_trig3_into`]) — no
+/// intermediate complex global array, one all-to-all per item.
+pub fn fftu_execute_trig3_batch_arena(
+    plan: &Arc<FftuPlan>,
+    arena: &ExecArena,
+    inputs: &[&[C64]],
+    negate_odd: bool,
+    scale: f64,
+) -> (Vec<Vec<f64>>, CostReport) {
+    let p = plan.num_procs();
+    debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
+    let session = arena.begin_session();
+    if session.is_none() {
+        let transient = ExecArena::new(p);
+        return fftu_execute_trig3_batch_arena(plan, &transient, inputs, negate_odd, scale);
+    }
+    let outcome = run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(plan, rank);
+        let worker = slot.as_mut().expect("arena worker just initialized");
+        let mut outs = Vec::with_capacity(inputs.len());
+        for &global in inputs {
+            let mut local = vec![C64::ZERO; plan.local_len()];
+            plan.scatter_rank_into(global, rank, &mut local);
+            worker.execute(ctx, &mut local, Direction::Inverse);
+            outs.push(local);
+        }
+        outs
+    });
+    let mut results = vec![vec![0.0f64; plan.total()]; inputs.len()];
+    for (rank, rank_outs) in outcome.outputs.iter().enumerate() {
+        for (item, res) in rank_outs.iter().zip(results.iter_mut()) {
+            plan.gather_rank_trig3_into(item, rank, res, negate_odd, scale);
+        }
+    }
+    (results, outcome.report)
+}
+
 /// Execute a prebuilt [`FftuPlan`] on a batch of global arrays in ONE
 /// SPMD session, with per-rank [`Worker`] state held in a transient
 /// [`ExecArena`]. Callers that repeat executes on the same plan (the
@@ -428,6 +555,71 @@ mod tests {
         let err = x.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         assert!(err < 1e-10, "roundtrip err {err}");
         assert_eq!(report.comm_supersteps(), 1);
+    }
+
+    #[test]
+    fn trig_matches_sequential_with_one_alltoall() {
+        use crate::api::Kind;
+        use crate::fft::trignd::{dctn2, dctn3, dstn2, dstn3};
+        let mut rng = Rng::new(0xDC7);
+        for (shape, grid) in [
+            (vec![16usize], vec![2usize]),
+            (vec![8, 16], vec![2, 2]),
+            (vec![9, 8], vec![3, 2]),
+            (vec![4, 6, 8], vec![2, 1, 2]),
+        ] {
+            let n: usize = shape.iter().product();
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let seq: [(Kind, Vec<f64>); 4] = [
+                (Kind::Dct2, dctn2(&x, &shape)),
+                (Kind::Dct3, dctn3(&x, &shape)),
+                (Kind::Dst2, dstn2(&x, &shape)),
+                (Kind::Dst3, dstn3(&x, &shape)),
+            ];
+            for (kind, want) in seq {
+                let (got, report) = fftu_trig_global(&shape, &grid, kind, &x).unwrap();
+                let err = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max);
+                assert!(err < 1e-9 * n as f64, "{kind:?} {shape:?} {grid:?}: err {err}");
+                // The permutation folds into pack/unpack: the headline
+                // single-all-to-all property survives all four kinds.
+                assert_eq!(report.comm_supersteps(), 1, "{kind:?} {shape:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn trig_type3_inverts_type2_distributed() {
+        use crate::api::Kind;
+        let mut rng = Rng::new(0xDC8);
+        let shape = [8usize, 12];
+        let grid = [2usize, 2];
+        let n = 96;
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let scale: f64 = shape.iter().map(|&nl| 2.0 * nl as f64).product();
+        for (fwd, inv) in [(Kind::Dct2, Kind::Dct3), (Kind::Dst2, Kind::Dst3)] {
+            let (coeff, _) = fftu_trig_global(&shape, &grid, fwd, &x).unwrap();
+            let (back, _) = fftu_trig_global(&shape, &grid, inv, &coeff).unwrap();
+            let err =
+                x.iter().zip(&back).map(|(a, b)| (b / scale - a).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-10, "{fwd:?}/{inv:?} roundtrip err {err}");
+        }
+    }
+
+    #[test]
+    fn trig_global_rejects_non_trig_kind_and_bad_length() {
+        use crate::api::Kind;
+        assert!(matches!(
+            fftu_trig_global(&[8, 8], &[2, 2], Kind::C2C, &[0.0; 64]),
+            Err(FftError::BadDescriptor { .. })
+        ));
+        assert_eq!(
+            fftu_trig_global(&[8, 8], &[2, 2], Kind::Dct2, &[0.0; 10]).unwrap_err(),
+            FftError::InputLength { expected: 64, got: 10 }
+        );
     }
 
     #[test]

@@ -133,6 +133,179 @@ impl FftuPlan {
         }
     }
 
+    /// Walk the outer rows (all axes but the last) of rank `rank`'s
+    /// cyclic local array in row-major order, handing each row's
+    /// Makhoul-mapped global base offset and source-parity prefix to
+    /// `f`. The Makhoul read map of [`crate::fft::trignd`] is evaluated
+    /// per *axis coordinate*, so composed with the cyclic layout
+    /// (`g_l = t_l p_l + s_l`) it stays a pure index map — the shared
+    /// walk behind [`Self::scatter_rank_into_trig2`] and
+    /// [`Self::gather_rank_trig3_into`], allocation-free up to
+    /// [`super::pack::MAX_PACK_DIMS`] axes (heap fallback beyond, like
+    /// the packer).
+    fn trig_outer_rows<F: FnMut(usize, bool)>(&self, rank: usize, mut f: F) {
+        use super::pack::MAX_PACK_DIMS;
+        use crate::fft::trignd::makhoul_read_index;
+        let d = self.shape.len();
+        let mut gstride_stack = [1usize; MAX_PACK_DIMS];
+        let mut gstride_heap = if d > MAX_PACK_DIMS { vec![1usize; d] } else { Vec::new() };
+        let gstride: &mut [usize] =
+            if d > MAX_PACK_DIMS { &mut gstride_heap } else { &mut gstride_stack[..d] };
+        for l in (0..d.saturating_sub(1)).rev() {
+            gstride[l] = gstride[l + 1] * self.shape[l + 1];
+        }
+        let mut s_stack = [0usize; MAX_PACK_DIMS];
+        let mut s_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
+        let s: &mut [usize] = if d > MAX_PACK_DIMS { &mut s_heap } else { &mut s_stack[..d] };
+        let mut rem = rank;
+        for l in (0..d).rev() {
+            s[l] = rem % self.pgrid[l];
+            rem /= self.pgrid[l];
+        }
+        // Outer odometer with per-level prefix state: base[l] and par[l]
+        // accumulate the mapped offset / parity over axes 0..=l, rebuilt
+        // from the changed level downward on each carry (the same
+        // incremental scheme as the strip packer's twiddle prefixes).
+        let mut t_stack = [0usize; MAX_PACK_DIMS];
+        let mut t_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
+        let t: &mut [usize] = if d > MAX_PACK_DIMS { &mut t_heap } else { &mut t_stack[..d] };
+        let mut base_stack = [0usize; MAX_PACK_DIMS];
+        let mut base_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
+        let base: &mut [usize] =
+            if d > MAX_PACK_DIMS { &mut base_heap } else { &mut base_stack[..d] };
+        let mut par_stack = [0usize; MAX_PACK_DIMS];
+        let mut par_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
+        let par: &mut [usize] = if d > MAX_PACK_DIMS { &mut par_heap } else { &mut par_stack[..d] };
+        for l in 0..d - 1 {
+            let m = makhoul_read_index(self.shape[l], s[l]); // t_l = 0 => g_l = s_l
+            base[l] = if l == 0 { 0 } else { base[l - 1] } + m * gstride[l];
+            par[l] = if l == 0 { 0 } else { par[l - 1] } + (m & 1);
+        }
+        let inner_n = self.local_shape[d - 1];
+        let rows = self.local_len() / inner_n;
+        for row in 0..rows {
+            let obase = if d >= 2 { base[d - 2] } else { 0 };
+            let opar = if d >= 2 { par[d - 2] % 2 == 1 } else { false };
+            f(obase, opar);
+            if row + 1 == rows {
+                break;
+            }
+            let mut l = d as isize - 2;
+            while l >= 0 {
+                let lu = l as usize;
+                t[lu] += 1;
+                if t[lu] < self.local_shape[lu] {
+                    break;
+                }
+                t[lu] = 0;
+                l -= 1;
+            }
+            debug_assert!(l >= 0, "trig odometer exhausted before the last row");
+            for lv in l as usize..=d - 2 {
+                let g = t[lv] * self.pgrid[lv] + s[lv];
+                let m = makhoul_read_index(self.shape[lv], g);
+                base[lv] = if lv == 0 { 0 } else { base[lv - 1] } + m * gstride[lv];
+                par[lv] = if lv == 0 { 0 } else { par[lv - 1] } + (m & 1);
+            }
+        }
+    }
+
+    /// Number of elements of the first (increasing) Makhoul arm in one
+    /// inner row of rank `rank`: the count of `t_d` with
+    /// `2 (t_d p_d + s_d) < n_d`. Beyond it the read map switches to the
+    /// reversed-odd arm `2 n_d - 2 g - 1`.
+    fn trig_inner_split(&self, s_last: usize) -> usize {
+        let d = self.shape.len();
+        let n_last = self.shape[d - 1];
+        let inner_p = self.pgrid[d - 1];
+        if 2 * s_last >= n_last {
+            0
+        } else {
+            (n_last - 2 * s_last).div_ceil(2 * inner_p).min(self.local_shape[d - 1])
+        }
+    }
+
+    /// Fill rank `rank`'s cyclic local array for a *type-2 trig*
+    /// transform straight from the global **real** input: the per-axis
+    /// Makhoul even-odd permutation (plus the DST-II odd-input sign flip
+    /// when `negate_odd`) is composed into the cyclic read map, so the
+    /// permuted complex global array is never materialized and no
+    /// communication is added — each inner row splits into two strided
+    /// arms (even sources ascending, odd sources descending), walked
+    /// with no per-element `div`/`mod` and no heap allocation.
+    pub fn scatter_rank_into_trig2(
+        &self,
+        global: &[f64],
+        rank: usize,
+        out: &mut [C64],
+        negate_odd: bool,
+    ) {
+        let d = self.shape.len();
+        assert_eq!(global.len(), self.total(), "trig2 scatter: global length mismatch");
+        assert_eq!(out.len(), self.local_len(), "trig2 scatter: local length mismatch");
+        let n_last = self.shape[d - 1];
+        let inner_n = self.local_shape[d - 1];
+        let inner_p = self.pgrid[d - 1];
+        let s_last = rank % inner_p;
+        let td_split = self.trig_inner_split(s_last);
+        let mut chunks = out.chunks_exact_mut(inner_n);
+        self.trig_outer_rows(rank, |obase, opar| {
+            let chunk = chunks.next().expect("trig2 scatter: row count mismatch");
+            let sgn_even = if negate_odd && opar { -1.0 } else { 1.0 };
+            let sgn_odd = if negate_odd { -sgn_even } else { sgn_even };
+            let mut goff = obase + 2 * s_last;
+            for v in &mut chunk[..td_split] {
+                *v = C64::new(global[goff] * sgn_even, 0.0);
+                goff += 2 * inner_p;
+            }
+            for (i, v) in chunk[td_split..].iter_mut().enumerate() {
+                let g = (td_split + i) * inner_p + s_last;
+                *v = C64::new(global[obase + 2 * n_last - 2 * g - 1] * sgn_odd, 0.0);
+            }
+        });
+    }
+
+    /// Adjoint of [`Self::scatter_rank_into_trig2`] for the *type-3*
+    /// kinds: write rank `rank`'s local inverse-core output into the
+    /// global **real** result through the inverse Makhoul permutation
+    /// (same per-axis map — it is an involution partner), scaling by
+    /// `scale` and flipping odd-parity outputs when `negate_odd`
+    /// (DST-III). Ranks own disjoint strided arms, so the driver can
+    /// call this once per rank into one output buffer; allocation-free
+    /// like the scatter.
+    pub fn gather_rank_trig3_into(
+        &self,
+        local: &[C64],
+        rank: usize,
+        out: &mut [f64],
+        negate_odd: bool,
+        scale: f64,
+    ) {
+        let d = self.shape.len();
+        assert_eq!(local.len(), self.local_len(), "trig3 gather: local length mismatch");
+        assert_eq!(out.len(), self.total(), "trig3 gather: global length mismatch");
+        let n_last = self.shape[d - 1];
+        let inner_n = self.local_shape[d - 1];
+        let inner_p = self.pgrid[d - 1];
+        let s_last = rank % inner_p;
+        let td_split = self.trig_inner_split(s_last);
+        let mut chunks = local.chunks_exact(inner_n);
+        self.trig_outer_rows(rank, |obase, opar| {
+            let chunk = chunks.next().expect("trig3 gather: row count mismatch");
+            let sgn_even = if negate_odd && opar { -scale } else { scale };
+            let sgn_odd = if negate_odd { -sgn_even } else { sgn_even };
+            let mut goff = obase + 2 * s_last;
+            for z in &chunk[..td_split] {
+                out[goff] = z.re * sgn_even;
+                goff += 2 * inner_p;
+            }
+            for (i, z) in chunk[td_split..].iter().enumerate() {
+                let g = (td_split + i) * inner_p + s_last;
+                out[obase + 2 * n_last - 2 * g - 1] = z.re * sgn_odd;
+            }
+        });
+    }
+
     pub fn num_procs(&self) -> usize {
         self.pgrid.iter().product()
     }
@@ -334,6 +507,63 @@ mod tests {
                 let mut got = vec![C64::ZERO; plan.local_len()];
                 plan.scatter_rank_into(&global, r, &mut got);
                 assert_eq!(got, want[r], "rank {r} shape {shape:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn trig2_scatter_bit_exact_vs_materialized_permutation() {
+        use crate::fft::trignd::trig2_pre;
+        use crate::fft::C64;
+        let planner = Planner::new();
+        for (shape, grid) in [
+            (vec![16usize, 36], vec![2usize, 3]),
+            (vec![9, 8], vec![3, 2]),
+            (vec![8, 4, 4], vec![2, 1, 2]),
+            (vec![36], vec![3]),
+            (vec![5], vec![1]),
+            (vec![4, 4, 4, 4], vec![2, 1, 2, 2]),
+        ] {
+            let plan = FftuPlan::new(&shape, &grid, &planner).unwrap();
+            let n = plan.total();
+            let global: Vec<f64> = (0..n).map(|i| 0.75 * i as f64 - 11.0).collect();
+            for negate_odd in [false, true] {
+                // Reference: materialize the permuted complex array, then
+                // the ordinary cyclic scatter.
+                let permuted = trig2_pre(&global, &shape, negate_odd);
+                let want = plan.dist.scatter(&permuted);
+                for r in 0..plan.num_procs() {
+                    let mut got = vec![C64::ZERO; plan.local_len()];
+                    plan.scatter_rank_into_trig2(&global, r, &mut got, negate_odd);
+                    assert_eq!(got, want[r], "rank {r} shape {shape:?} neg={negate_odd}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trig3_gather_bit_exact_vs_materialized_extraction() {
+        use crate::fft::trignd::trig3_extract;
+        use crate::fft::C64;
+        let planner = Planner::new();
+        for (shape, grid) in [
+            (vec![16usize, 36], vec![2usize, 3]),
+            (vec![9, 8], vec![3, 2]),
+            (vec![8, 4, 4], vec![2, 1, 2]),
+            (vec![36], vec![3]),
+        ] {
+            let plan = FftuPlan::new(&shape, &grid, &planner).unwrap();
+            let n = plan.total();
+            let global: Vec<C64> =
+                (0..n).map(|i| C64::new(1.0 + 0.5 * i as f64, i as f64)).collect();
+            let locals = plan.dist.scatter(&global);
+            for negate_odd in [false, true] {
+                let want = trig3_extract(&global, &shape, negate_odd, 0.25);
+                let mut got = vec![0.0f64; n];
+                for r in 0..plan.num_procs() {
+                    plan.gather_rank_trig3_into(&locals[r], r, &mut got, negate_odd, 0.25);
+                }
+                assert_eq!(got, want, "shape {shape:?} neg={negate_odd}");
             }
         }
     }

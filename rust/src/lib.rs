@@ -70,6 +70,29 @@
 //! # Ok::<(), fftu::FftError>(())
 //! ```
 //!
+//! The trig transforms of the paper's §6 — DCT-II/III and DST-II/III,
+//! scipy conventions — are kinds too: a per-axis Makhoul even-odd
+//! permutation (folded into FFTU's cyclic pack/unpack, so it costs no
+//! communication) and quarter-wave phase passes around the complex core
+//! on the **full** shape. The unnormalized type-2/type-3 pair composes
+//! to `prod_l (2 n_l)` times the identity:
+//!
+//! ```
+//! use fftu::api::{Algorithm, Kind, Transform};
+//!
+//! let x: Vec<f64> = (0..256).map(|i| (0.05 * i as f64).cos()).collect();
+//! let fwd = Transform::new(&[16, 16]).procs(4).kind(Kind::Dct2).plan(Algorithm::Fftu)?;
+//! let coeff = fwd.execute_trig(&x)?;
+//! assert_eq!(coeff.output.len(), 256);              // real coefficients, same shape
+//! assert_eq!(coeff.report.comm_supersteps(), 1);    // still ONE all-to-all
+//!
+//! let inv = Transform::new(&[16, 16]).procs(4).kind(Kind::Dct3).plan(Algorithm::Fftu)?;
+//! let back = inv.execute_trig(&coeff.output)?;
+//! let scale = (2.0 * 16.0) * (2.0 * 16.0); // prod_l (2 n_l)
+//! assert!(x.iter().zip(&back.output).all(|(a, b)| (b / scale - a).abs() < 1e-9));
+//! # Ok::<(), fftu::FftError>(())
+//! ```
+//!
 //! Every fallible call returns the typed [`FftError`]; batched
 //! transforms (`Transform::batch`) run through one SPMD session with
 //! per-rank state built once. Long-lived applications that interleave
@@ -117,9 +140,12 @@
 //!   radix gathers into a stack array; Bluestein lines run through the
 //!   plan's scratch, never a fresh `Vec`.
 //! - **Benchmark trajectory**: `fftu bench` times the retained pre-PR
-//!   engine against the compiled engine and writes `BENCH_pr3.json`
+//!   engine against the compiled engine and writes `BENCH_<tag>.json`
 //!   (`benches/engine.rs` is the per-layer drill-down); CI's bench-smoke
-//!   job keeps the harness compiling and uploads the JSON per commit.
+//!   job keeps the harness compiling, gates the run against the
+//!   committed `BENCH_baseline.json` (`bench --check` compares
+//!   engine/legacy ratios, which are machine-portable), and uploads the
+//!   JSON per commit.
 //!
 //! ## Layout
 //!

@@ -104,6 +104,14 @@ pub fn measure_once_kind(
             let exec = planned.execute_c2r(&spec)?;
             Ok((t0.elapsed().as_secs_f64(), exec.report))
         }
+        // Trig kinds: real in, real coefficients out, full-shape core.
+        Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
+            let global: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let t0 = Instant::now();
+            let planned = plan(algo, &descriptor.kind(kind))?;
+            let exec = planned.execute_trig(&global)?;
+            Ok((t0.elapsed().as_secs_f64(), exec.report))
+        }
     }
 }
 
@@ -121,7 +129,7 @@ mod tests {
     #[test]
     fn measure_once_kind_covers_real_paths() {
         let shape = [8usize, 16];
-        for kind in [Kind::R2C, Kind::C2R] {
+        for kind in [Kind::R2C, Kind::C2R, Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
             let (wall, report) =
                 measure_once_kind(Algorithm::Fftu, kind, &shape, 2, None).unwrap();
             assert!(wall > 0.0, "{kind:?}");

@@ -232,14 +232,17 @@ pub fn pmax_table() -> Table {
 /// superstep counts. Requires an even last axis for r2c/c2r.
 pub fn comm_steps_table(shape: &[usize], p: usize, kind: Kind) -> Table {
     let core_shape: Vec<usize> = match kind {
-        Kind::C2C => shape.to_vec(),
         Kind::R2C | Kind::C2R => crate::fft::realnd::half_shape(shape),
+        // C2C and the trig kinds run the complex core on the full shape
+        // (the Makhoul permutation reorders, it does not pack).
+        _ => shape.to_vec(),
     };
     let core = core_shape.as_slice();
     let wrap = |rep: Option<crate::bsp::CostReport>| -> Option<crate::bsp::CostReport> {
         rep.map(|r| match kind {
             Kind::C2C => r,
             Kind::R2C | Kind::C2R => real_wrap_report(r, shape, p, kind),
+            _ => crate::costmodel::trig_wrap_report(r, shape, p),
         })
     };
     let mut t = Table::new(

@@ -148,6 +148,58 @@ fn steady_state_execute_is_allocation_free_1d() {
 }
 
 #[test]
+fn steady_state_trig_path_is_allocation_free() {
+    let _serial = serial();
+    // The trig (DCT/DST) extension folds the Makhoul permutation into
+    // the cyclic scatter (type 2) and gather (type 3). Both composed
+    // walks, plus the forward/inverse core executes between them, must
+    // stay allocation-free in steady state — the permutation is an
+    // index map, not a buffer.
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(&[16, 36], &[2, 3], &planner).unwrap());
+    let p = plan.num_procs();
+    let arena = ExecArena::new(p);
+    let n = plan.total();
+    let real: Vec<f64> = (0..n).map(|i| 0.25 * i as f64 - 7.0).collect();
+    let spec: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -0.5 * i as f64)).collect();
+    run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(&plan, rank);
+        let worker = slot.as_mut().unwrap();
+        let mut local = vec![C64::ZERO; plan.local_len()];
+        let mut out_real = vec![0.0f64; plan.total()];
+        // Warm-up: one full type-2 and type-3 round builds every buffer.
+        plan.scatter_rank_into_trig2(&real, rank, &mut local, true);
+        worker.execute(ctx, &mut local, Direction::Forward);
+        plan.scatter_rank_into(&spec, rank, &mut local);
+        worker.execute(ctx, &mut local, Direction::Inverse);
+        plan.gather_rank_trig3_into(&local, rank, &mut out_real, true, 0.5);
+        ctx.ledger.reserve(16);
+        ctx.barrier();
+        if rank == 0 {
+            ALLOCS.store(0, Ordering::SeqCst);
+            REALLOCS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        // Measured region: the steady-state type-2 and type-3 rounds.
+        plan.scatter_rank_into_trig2(&real, rank, &mut local, true);
+        worker.execute(ctx, &mut local, Direction::Forward);
+        plan.scatter_rank_into(&spec, rank, &mut local);
+        worker.execute(ctx, &mut local, Direction::Inverse);
+        plan.gather_rank_trig3_into(&local, rank, &mut out_real, true, 0.5);
+        ctx.barrier();
+        if rank == 0 {
+            COUNTING.store(false, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        std::hint::black_box(&out_real);
+    });
+    let count = ALLOCS.load(Ordering::SeqCst) + REALLOCS.load(Ordering::SeqCst);
+    assert_eq!(count, 0, "steady-state trig path allocated {count} times (16x36/[2,3])");
+}
+
+#[test]
 fn first_execute_does_allocate_sanity_check() {
     let _serial = serial();
     // Sanity check that the counter actually observes the engine: the

@@ -9,10 +9,11 @@
 //! corrupted or hand-edited golden fails with an actionable message
 //! instead of a bare `unwrap` backtrace.
 
-use fftu::api::{plan, Algorithm, Normalization, Transform};
+use fftu::api::{plan, Algorithm, Kind, Normalization, Transform};
 use fftu::fft::realnd::{irfftn, rfftn};
+use fftu::fft::trignd::{dctn2, dctn3, dstn2, dstn3};
 use fftu::fft::{fftn_inplace, ifftn_normalized_inplace, rel_l2_error, C64};
-use fftu::fftu::{choose_grid, fftu_global, fftu_r2c_global};
+use fftu::fftu::{choose_grid, fftu_global, fftu_r2c_global, fftu_trig_global};
 use fftu::Direction;
 
 /// Parse a golden file into its shape line and numeric rows, panicking
@@ -127,8 +128,51 @@ fn load_real(name: &str) -> RealGolden {
     }
 }
 
+struct TrigGolden {
+    shape: Vec<usize>,
+    input: Vec<f64>,
+    /// scipy outputs in file order: dct2, dct3, dst2, dst3 (norm=None).
+    outputs: [(Kind, Vec<f64>); 4],
+}
+
+/// Trig case layout: shape line, then n single-value real input rows,
+/// then four blocks of n single-value rows — `scipy.fft.dctn` type 2,
+/// `dctn` type 3, `dstn` type 2, `dstn` type 3, all unnormalized.
+fn load_trig(name: &str) -> TrigGolden {
+    let path = format!("rust/tests/data/{name}.txt");
+    let (shape, rows) = load_rows(&path);
+    let n: usize = shape.iter().product();
+    if rows.len() != 5 * n {
+        panic!(
+            "{path}: expected {} data rows ({n} input + 4 x {n} outputs), got {}",
+            5 * n,
+            rows.len()
+        );
+    }
+    let column = |block: usize| -> Vec<f64> {
+        (block * n..(block + 1) * n).map(|i| fields(&path, &rows, i, 2, 1)[0]).collect()
+    };
+    TrigGolden {
+        input: column(0),
+        outputs: [
+            (Kind::Dct2, column(1)),
+            (Kind::Dct3, column(2)),
+            (Kind::Dst2, column(3)),
+            (Kind::Dst3, column(4)),
+        ],
+        shape,
+    }
+}
+
+/// Relative max error for real slices (the trig outputs are real).
+fn rel_err_f64(got: &[f64], want: &[f64]) -> f64 {
+    let scale = want.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1.0);
+    got.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max) / scale
+}
+
 const CASES: &[&str] = &["c1d_16", "c1d_60", "c1d_101", "c2d_8x12", "c3d_4x6x10"];
 const REAL_CASES: &[&str] = &["r1d_16", "r2d_8x12", "r3d_4x6x10"];
+const TRIG_CASES: &[&str] = &["t1d_16", "t2d_8x12", "t3d_4x6x10"];
 
 #[test]
 fn sequential_engine_matches_numpy() {
@@ -245,6 +289,71 @@ fn irfftn_recovers_numpy_real_input() {
         let err =
             g.input.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         assert!(err < 1e-10, "{name}: facade c2r err {err}");
+    }
+}
+
+#[test]
+fn sequential_trig_matches_scipy() {
+    for name in TRIG_CASES {
+        let g = load_trig(name);
+        for (kind, want) in &g.outputs {
+            let got = match kind {
+                Kind::Dct2 => dctn2(&g.input, &g.shape),
+                Kind::Dct3 => dctn3(&g.input, &g.shape),
+                Kind::Dst2 => dstn2(&g.input, &g.shape),
+                Kind::Dst3 => dstn3(&g.input, &g.shape),
+                other => unreachable!("non-trig kind {other:?} in trig golden"),
+            };
+            let err = rel_err_f64(&got, want);
+            assert!(err < 1e-12, "{name} {kind:?}: rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn distributed_trig_matches_scipy_across_algorithms() {
+    for name in TRIG_CASES {
+        let g = load_trig(name);
+        let d = g.shape.len();
+        let mut algos = vec![Algorithm::Fftu, Algorithm::Popovici];
+        if d >= 2 {
+            algos.push(Algorithm::slab());
+            algos.push(Algorithm::pencil(if d >= 3 { 2 } else { 1 }));
+            algos.push(Algorithm::Heffte);
+        }
+        for algo in algos {
+            for (kind, want) in &g.outputs {
+                let (p, planned) = [4usize, 2, 1]
+                    .into_iter()
+                    .find_map(|p| {
+                        plan(algo, &Transform::new(&g.shape).procs(p).kind(*kind))
+                            .ok()
+                            .map(|planned| (p, planned))
+                    })
+                    .unwrap_or_else(|| panic!("{name}: {algo:?} {kind:?} plans at no p"));
+                let got = planned.execute_trig(&g.input).unwrap();
+                let err = rel_err_f64(&got.output, want);
+                assert!(err < 1e-10, "{name} {algo:?} {kind:?} p={p}: rel err {err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fftu_trig_driver_matches_scipy_with_one_alltoall() {
+    for name in TRIG_CASES {
+        let g = load_trig(name);
+        let p = [4usize, 2, 1]
+            .into_iter()
+            .find(|&p| choose_grid(&g.shape, p).is_some())
+            .unwrap();
+        let grid = choose_grid(&g.shape, p).unwrap();
+        for (kind, want) in &g.outputs {
+            let (got, report) = fftu_trig_global(&g.shape, &grid, *kind, &g.input).unwrap();
+            let err = rel_err_f64(&got, want);
+            assert!(err < 1e-10, "{name} {kind:?} grid {grid:?}: rel err {err}");
+            assert_eq!(report.comm_supersteps(), 1, "{name} {kind:?}");
+        }
     }
 }
 

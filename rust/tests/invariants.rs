@@ -13,10 +13,10 @@
 
 use std::sync::Arc;
 
-use fftu::api::{plan, Algorithm, Normalization, PlanCache, PlannedFft, Transform};
+use fftu::api::{plan, Algorithm, Kind, Normalization, PlanCache, PlannedFft, Transform};
 use fftu::baselines::{pencil_global, slab_global, OutputDist};
 use fftu::bsp::{redistribute, run_spmd, SuperstepKind};
-use fftu::costmodel::{fftu_r2c_report, fftu_report, pencil_report, slab_report};
+use fftu::costmodel::{fftu_r2c_report, fftu_report, fftu_trig_report, pencil_report, slab_report};
 use fftu::dist::{analytic_h, AxisDist, GridDist, RedistPlan};
 use fftu::fft::C64;
 use fftu::fftu::fftu_r2c_global;
@@ -152,6 +152,48 @@ fn prop_fftu_r2c_ledger_matches_analytic_with_halved_bound() {
         // The real transform's communication bound halves with the data.
         for h in comm_h(&executed) {
             prop_assert!(h <= n / 2 / p, "{shape:?}: h {h} > (N/2)/p = {}", n / 2 / p);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fftu_trig_ledger_single_superstep_matches_analytic() {
+    forall("fftu trig: ONE comm superstep, executed h == analytic", 12, 0x141E, |rng| {
+        let d = rng.range(1, 3);
+        let mut shape = Vec::new();
+        let mut grid = Vec::new();
+        for _ in 0..d {
+            let g = rng.range(1, 2);
+            shape.push(g * g * rng.range(1, 4));
+            grid.push(g);
+        }
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let kind = *rng.choose(&[Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3]);
+        let planned = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(kind))
+            .map_err(String::from)?;
+        let executed = planned.execute_trig(&x)?.report;
+        // The §6 closure invariant: the Makhoul permutation folds into
+        // the cyclic pack/unpack, so the trig path communicates exactly
+        // once — never a second superstep for the reordering.
+        prop_assert!(
+            executed.comm_supersteps() == 1,
+            "{kind:?} {shape:?} grid {grid:?}: {} comm supersteps",
+            executed.comm_supersteps()
+        );
+        let analytic = fftu_trig_report(&shape, p);
+        prop_assert!(
+            comm_h(&executed) == comm_h(&analytic),
+            "{kind:?} {shape:?} grid {grid:?}: executed {:?} vs analytic {:?}",
+            comm_h(&executed),
+            comm_h(&analytic)
+        );
+        // Trig moves full-shape data: Theorem 2.1's N/p bound applies
+        // unhalved.
+        for h in comm_h(&executed) {
+            prop_assert!(h <= n / p, "{kind:?} {shape:?}: h {h} > N/p = {}", n / p);
         }
         Ok(())
     });

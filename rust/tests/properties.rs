@@ -16,8 +16,9 @@
 //! cases skip that algorithm, but FFTU must always plan — a planning
 //! failure there fails the property.
 
-use fftu::api::{plan, Algorithm, Normalization, Transform};
+use fftu::api::{plan, Algorithm, Kind, Normalization, Transform};
 use fftu::fft::realnd::rfftn;
+use fftu::fft::trignd::{dctn2, dctn3, dstn2, dstn3};
 use fftu::fft::{dft_nd, max_abs_diff, rel_l2_error, C64};
 use fftu::testing::{forall, Rng};
 use fftu::{prop_assert, Direction};
@@ -254,6 +255,80 @@ fn prop_r2c_parseval_with_hermitian_weights() {
 }
 
 #[test]
+fn prop_trig_type3_inverts_type2_across_algorithms() {
+    forall("type-3 ∘ type-2 == prod(2 n_l) identity", 14, 0x1D08, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_shape_grid(rng, d, false);
+        let p: usize = grid.iter().product();
+        let batch = rng.range(1, 2);
+        let n: usize = shape.iter().product();
+        let x = rand_real(batch * n, rng);
+        let scale: f64 = shape.iter().map(|&nl| 2.0 * nl as f64).product();
+        for (fwd_kind, inv_kind) in [(Kind::Dct2, Kind::Dct3), (Kind::Dst2, Kind::Dst3)] {
+            for algo in candidate_algorithms(d) {
+                let fwd = Transform::new(&shape).procs(p).kind(fwd_kind).batch(batch);
+                let fwd = match plan(algo, &fwd) {
+                    Ok(planned) => planned,
+                    Err(e) => {
+                        if algo == Algorithm::Fftu {
+                            return Err(format!(
+                                "fftu must plan {fwd_kind:?} {shape:?} p={p}: {e}"
+                            ));
+                        }
+                        continue;
+                    }
+                };
+                let coeff = fwd.execute_trig_batch(&x)?;
+                let inv =
+                    plan(algo, &Transform::new(&shape).procs(p).kind(inv_kind).batch(batch))?;
+                let back = inv.execute_trig_batch(&coeff.output)?;
+                let err = x
+                    .iter()
+                    .zip(&back.output)
+                    .map(|(a, b)| (b / scale - a).abs())
+                    .fold(0.0, f64::max);
+                prop_assert!(
+                    err < 1e-8,
+                    "{algo:?} {fwd_kind:?}/{inv_kind:?} {shape:?} p={p} batch={batch}: err {err}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trig_matches_sequential_reference() {
+    forall("distributed trig == sequential trignd", 14, 0x1D09, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_shape_grid(rng, d, false);
+        let n: usize = shape.iter().product();
+        let x = rand_real(n, rng);
+        let seq: [(Kind, Vec<f64>); 4] = [
+            (Kind::Dct2, dctn2(&x, &shape)),
+            (Kind::Dct3, dctn3(&x, &shape)),
+            (Kind::Dst2, dstn2(&x, &shape)),
+            (Kind::Dst3, dstn3(&x, &shape)),
+        ];
+        for (kind, want) in seq {
+            let planned =
+                plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(kind))
+                    .map_err(|e| format!("fftu must plan {kind:?} {shape:?}: {e}"))?;
+            let got = planned.execute_trig(&x)?;
+            let err =
+                got.output.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            prop_assert!(err < 1e-8 * n as f64, "{kind:?} {shape:?} grid {grid:?}: err {err}");
+            prop_assert!(
+                got.report.comm_supersteps() == 1,
+                "{kind:?} {shape:?}: {} comm supersteps",
+                got.report.comm_supersteps()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_fftu_single_alltoall_for_all_kinds_and_batches() {
     forall("fftu: one all-to-all per transform, c2c and r2c", 15, 0x1D06, |rng| {
         let d = rng.range(1, 3);
@@ -274,6 +349,17 @@ fn prop_fftu_single_alltoall_for_all_kinds_and_batches() {
         prop_assert!(
             exec.report.comm_supersteps() == batch,
             "r2c {shape:?} grid {grid:?}: {} comm steps for batch {batch}",
+            exec.report.comm_supersteps()
+        );
+        // The trig kinds preserve the invariant too: the Makhoul
+        // permutation rides the existing scatter/gather, adding no
+        // communication superstep.
+        let dct = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).dct2().batch(batch))
+            .map_err(String::from)?;
+        let exec = dct.execute_trig_batch(&rand_real(batch * n, rng))?;
+        prop_assert!(
+            exec.report.comm_supersteps() == batch,
+            "dct2 {shape:?} grid {grid:?}: {} comm steps for batch {batch}",
             exec.report.comm_supersteps()
         );
         Ok(())
