@@ -53,6 +53,6 @@ pub mod transform;
 pub use cache::{CacheStats, PlanCache};
 pub use error::FftError;
 pub use plan::{plan, Algorithm, DistFft, Execution, PlannedFft, RealExecution};
-pub use transform::{Grid, Kind, Normalization, Transform};
+pub use transform::{DistStrategy, Grid, Kind, Normalization, Transform};
 
 pub use crate::fft::Direction;

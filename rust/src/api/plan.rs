@@ -16,16 +16,19 @@ use crate::fft::realnd::{
     pack_pairs, retangle_half_spectrum, unpack_pairs, untangle_half_spectrum, wrap_flops,
 };
 use crate::fft::trignd::{
-    trig2_post, trig2_pre, trig2_tables, trig3_extract, trig3_pre, trig3_tables, trig_wrap_flops,
+    trig2_post, trig2_pre, trig2_tables, trig3_extract, trig3_pre, trig3_tables,
+    trig_extract_flops, trig_wrap_flops,
 };
 use crate::fft::{C64, Planner};
 use crate::fftu::{
-    choose_grid, fftu_execute_batch_arena, fftu_execute_trig2_batch_arena,
-    fftu_execute_trig3_batch_arena, fftu_pmax, ExecArena, FftuPlan,
+    choose_grid, fftu_execute_batch_arena, fftu_execute_c2r_pairwise_batch_arena,
+    fftu_execute_r2c_pairwise_batch_arena, fftu_execute_trig2_batch_arena,
+    fftu_execute_trig2_zigzag_batch_arena, fftu_execute_trig3_batch_arena,
+    fftu_execute_trig3_zigzag_batch_arena, fftu_pmax, zigzag, ExecArena, FftuPlan,
 };
 
 use super::error::FftError;
-use super::transform::{Grid, Kind, Transform};
+use super::transform::{DistStrategy, Grid, Kind, Transform};
 
 /// Which distributed-FFT algorithm executes a [`Transform`].
 ///
@@ -170,8 +173,11 @@ enum Inner {
     /// Makhoul permutation into its cyclic scatter/gather. For trig
     /// kinds, `trig` holds the per-axis quarter-wave tables
     /// (`sum_l n_l` words), built once here so steady-state executes
-    /// evaluate no trig functions.
-    Real { core: Arc<PlannedFft>, trig: Option<Vec<Vec<C64>>> },
+    /// evaluate no trig functions. Under [`DistStrategy::ZigZag`],
+    /// `r2c_tw` additionally holds the untangle/retangle twiddles the
+    /// rank-local r2c/c2r passes need (`h + 1` forward, `h` conjugated
+    /// inverse) — also plan-time, for the same reason.
+    Real { core: Arc<PlannedFft>, trig: Option<Vec<Vec<C64>>>, r2c_tw: Option<Vec<C64>> },
 }
 
 /// A validated, reusable plan binding a [`Transform`] to an
@@ -207,12 +213,48 @@ pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError>
         let core = plan(algo, &t.complex_core())?;
         let grid = core.grid.clone();
         let p = core.p;
+        if t.strategy == DistStrategy::ZigZag {
+            // The rank-local passes are implemented on FFTU's cyclic
+            // core (they reuse its pairwise-exchange/worker machinery);
+            // the baselines keep the facade-level passes.
+            if !matches!(algo, Algorithm::Fftu) {
+                return Err(FftError::Unsupported {
+                    reason: format!(
+                        "the zig-zag (rank-local) strategy is implemented for fftu only, \
+                         got {}",
+                        algo.name()
+                    ),
+                });
+            }
+            if t.kind.is_trig() {
+                // The mirror folding needs whole 2 p_l periods on every
+                // shared axis (on top of the plan's own p_l^2 | n_l).
+                let resolved = grid.as_deref().expect("fftu cores always resolve a grid");
+                zigzag::validate_zigzag_axes(&t.shape, resolved)?;
+            }
+        }
         let trig = match t.kind {
             Kind::Dct2 | Kind::Dst2 => Some(trig2_tables(&t.shape)),
             Kind::Dct3 | Kind::Dst3 => Some(trig3_tables(&t.shape)),
             _ => None,
         };
-        let inner = Inner::Real { core, trig };
+        let r2c_tw = if t.strategy == DistStrategy::ZigZag {
+            let d = t.shape.len();
+            let n_last = t.shape[d - 1];
+            let h = n_last / 2;
+            match t.kind {
+                // Same constructions as the facade's untangle/retangle,
+                // so the rank-local passes stay bit-identical to them.
+                Kind::R2C => Some((0..=h).map(|k| C64::root_of_unity(n_last, k)).collect()),
+                Kind::C2R => {
+                    Some((0..h).map(|k| C64::root_of_unity(n_last, k).conj()).collect())
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        let inner = Inner::Real { core, trig, r2c_tw };
         return Ok(Arc::new(PlannedFft { algo, t: t.clone(), grid, p, inner }));
     }
     let p = t.grid.procs();
@@ -327,6 +369,23 @@ impl PlannedFft {
         }
     }
 
+    /// The plan-time untangle/retangle twiddles of a zig-zag r2c/c2r plan.
+    fn r2c_twiddles(&self) -> &[C64] {
+        match &self.inner {
+            Inner::Real { r2c_tw: Some(tw), .. } => tw,
+            _ => unreachable!("zig-zag r2c/c2r plans precompute their twiddles"),
+        }
+    }
+
+    /// The FFTU core plan + arena of a zig-zag-strategy wrapper plan
+    /// (plan-time validation guarantees the core is FFTU).
+    fn fftu_core(core: &PlannedFft) -> (&Arc<FftuPlan>, &ExecArena) {
+        match &core.inner {
+            Inner::Fftu { plan, arena } => (plan, arena),
+            _ => unreachable!("zig-zag plans are fftu-only (validated at plan time)"),
+        }
+    }
+
     fn run(&self, input: &[C64], batch: usize) -> Result<Execution, FftError> {
         let n = self.t.total();
         if input.len() != batch * n {
@@ -377,10 +436,34 @@ impl PlannedFft {
         // Row-major + even last axis: items stay pair-aligned, so the
         // whole batch packs in one pass.
         let packed = pack_pairs(input);
-        let half = self.real_inner().run(&packed, batch)?;
         let nh = n / 2;
         let nspec = self.t.spectrum_total();
         let scale = self.t.normalization.scale(n);
+        if self.t.strategy == DistStrategy::ZigZag {
+            // Rank-local untangle: one pairwise mirror exchange after
+            // the core, untangle in-SPMD (charged there), assembled
+            // spectra back. Bit-identical to the gathered path below.
+            let (plan, arena) = Self::fftu_core(self.real_inner());
+            let items: Vec<&[C64]> = packed.chunks(nh).collect();
+            let (spectra, report) = fftu_execute_r2c_pairwise_batch_arena(
+                plan,
+                arena,
+                &self.t.shape,
+                &items,
+                self.r2c_twiddles(),
+            );
+            let mut output = Vec::with_capacity(batch * nspec);
+            for mut spec in spectra {
+                if scale != 1.0 {
+                    for v in spec.iter_mut() {
+                        *v = v.scale(scale);
+                    }
+                }
+                output.extend(spec);
+            }
+            return Ok(Execution { output, report });
+        }
+        let half = self.real_inner().run(&packed, batch)?;
         let mut output = Vec::with_capacity(batch * nspec);
         for item in half.output.chunks(nh) {
             let mut spec = untangle_half_spectrum(item, &self.t.shape);
@@ -414,14 +497,33 @@ impl PlannedFft {
         if input.len() != batch * nspec {
             return Err(FftError::InputLength { expected: batch * nspec, got: input.len() });
         }
+        // The unnormalized inverse over N/2 points yields (N/2) z;
+        // doubling makes the raw c2r the true N-scaled adjoint.
+        let scale = 2.0 * self.t.normalization.scale(n);
+        if self.t.strategy == DistStrategy::ZigZag {
+            // Rank-local retangle: spectrum shares swap with the
+            // conjugate partner before the core; retangle charged
+            // in-SPMD. Bit-identical to the gathered path below.
+            let (plan, arena) = Self::fftu_core(self.real_inner());
+            let items: Vec<&[C64]> = input.chunks(nspec).collect();
+            let (zs, report) = fftu_execute_c2r_pairwise_batch_arena(
+                plan,
+                arena,
+                &self.t.shape,
+                &items,
+                self.r2c_twiddles(),
+            );
+            let mut output = Vec::with_capacity(batch * n);
+            for z in zs {
+                output.extend(unpack_pairs(&z, scale));
+            }
+            return Ok(RealExecution { output, report });
+        }
         let mut packed = Vec::with_capacity(batch * nh);
         for item in input.chunks(nspec) {
             packed.extend(retangle_half_spectrum(item, &self.t.shape));
         }
         let half = self.real_inner().run(&packed, batch)?;
-        // The unnormalized inverse over N/2 points yields (N/2) z;
-        // doubling makes the raw c2r the true N-scaled adjoint.
-        let scale = 2.0 * self.t.normalization.scale(n);
         let output = unpack_pairs(&half.output, scale);
         let mut report = half.report;
         report.push_comp("c2r-retangle", batch as f64 * wrap_flops(&self.t.shape) / self.p as f64);
@@ -459,6 +561,28 @@ impl PlannedFft {
         let inner = self.real_inner();
         let tables = self.trig_tables();
         let items: Vec<&[f64]> = input.chunks(n).collect();
+        if self.t.strategy == DistStrategy::ZigZag {
+            // Rank-local combine/phase passes via the zig-zag cyclic
+            // distribution: one pairwise exchange per shared axis
+            // converts between the core's cyclic data and the zig-zag
+            // layout where every mirror pair is co-located; the
+            // extraction sweep stays driver-level and is charged as
+            // `trig-extract` (combine flops are charged in-SPMD).
+            // Bit-identical to the gathered path below.
+            let (plan, arena) = Self::fftu_core(inner);
+            let dst = matches!(self.t.kind, Kind::Dst2 | Kind::Dst3);
+            let (outs, mut report) = if matches!(self.t.kind, Kind::Dct2 | Kind::Dst2) {
+                fftu_execute_trig2_zigzag_batch_arena(plan, arena, &items, dst, tables, scale)
+            } else {
+                fftu_execute_trig3_zigzag_batch_arena(plan, arena, &items, dst, tables, scale)
+            };
+            let output: Vec<f64> = outs.into_iter().flatten().collect();
+            report.push_comp(
+                "trig-extract",
+                batch as f64 * trig_extract_flops(shape) / self.p as f64,
+            );
+            return Ok(RealExecution { output, report });
+        }
         let (output, mut report) = match self.t.kind {
             Kind::Dct2 | Kind::Dst2 => {
                 let dst = self.t.kind == Kind::Dst2;
@@ -775,6 +899,113 @@ mod tests {
         assert_eq!(
             dct.execute_trig(&[0.0; 10]).unwrap_err(),
             FftError::InputLength { expected: 64, got: 10 }
+        );
+    }
+
+    #[test]
+    fn zigzag_trig_is_bit_identical_to_gathered_oracle() {
+        use crate::api::DistStrategy;
+        use crate::bsp::SuperstepKind;
+        let mut rng = Rng::new(0x5A5A);
+        for (shape, grid) in [
+            (vec![18usize, 16], vec![3usize, 4]),
+            (vec![36], vec![3]),
+            (vec![18, 5, 8], vec![3, 1, 2]),
+            (vec![16, 16], vec![2, 2]), // p_l <= 2: zero pairwise exchanges
+            (vec![4, 16], vec![2, 4]),  // Q = n/(2p) = 1 on axis 0
+        ] {
+            let n: usize = shape.iter().product();
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+                let gathered =
+                    plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(kind))
+                        .unwrap();
+                let zz = plan(
+                    Algorithm::Fftu,
+                    &Transform::new(&shape).grid(&grid).kind(kind).zigzag(),
+                )
+                .unwrap();
+                assert_eq!(zz.transform().strategy, DistStrategy::ZigZag);
+                let want = gathered.execute_trig(&x).unwrap();
+                let got = zz.execute_trig(&x).unwrap();
+                // Bit-exact: the rank-local passes run the same
+                // floating-point expressions on the same values.
+                assert_eq!(got.output, want.output, "{kind:?} {shape:?} {grid:?}");
+                // Exactly ONE all-to-all; everything else pairwise/local.
+                let alltoalls = got
+                    .report
+                    .supersteps
+                    .iter()
+                    .filter(|s| s.label == "fftu-alltoall")
+                    .count();
+                assert_eq!(alltoalls, 1, "{kind:?} {shape:?}");
+                for s in &got.report.supersteps {
+                    if s.kind == SuperstepKind::Communication && s.label != "fftu-alltoall" {
+                        assert_eq!(s.label, "zigzag-exchange", "{kind:?} {shape:?}");
+                        assert!(s.h_max <= n / zz.procs() / 2, "{kind:?}: pairwise h too big");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zigzag_r2c_c2r_are_bit_identical_to_gathered_oracles() {
+        let mut rng = Rng::new(0x5A5B);
+        for (shape, grid) in [
+            (vec![8usize, 36], vec![2usize, 3]),
+            (vec![18, 8], vec![3, 2]),
+            (vec![36, 8], vec![6, 2]),
+            (vec![16], vec![2]),
+            (vec![4, 6, 8], vec![2, 1, 2]),
+        ] {
+            let n: usize = shape.iter().product();
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let gathered =
+                plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c()).unwrap();
+            let zz = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag())
+                .unwrap();
+            let want = gathered.execute_r2c(&x).unwrap();
+            let got = zz.execute_r2c(&x).unwrap();
+            assert_eq!(got.output, want.output, "r2c {shape:?} {grid:?}");
+            assert_eq!(
+                got.report.supersteps.iter().filter(|s| s.label == "fftu-alltoall").count(),
+                1,
+                "r2c {shape:?}"
+            );
+            // C2R: the adjoint, from the spectrum back to the signal.
+            let gathered_inv =
+                plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).c2r()).unwrap();
+            let zz_inv =
+                plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).c2r().zigzag())
+                    .unwrap();
+            let want_back = gathered_inv.execute_c2r(&want.output).unwrap();
+            let got_back = zz_inv.execute_c2r(&want.output).unwrap();
+            assert_eq!(got_back.output, want_back.output, "c2r {shape:?} {grid:?}");
+        }
+    }
+
+    #[test]
+    fn zigzag_plan_time_validation() {
+        // FFTU-only.
+        assert!(matches!(
+            plan(Algorithm::slab(), &Transform::new(&[12, 12]).procs(2).dct2().zigzag()),
+            Err(FftError::Unsupported { .. })
+        ));
+        // c2c has no wrapper passes to distribute.
+        assert!(plan(Algorithm::Fftu, &Transform::new(&[12, 12]).procs(2).zigzag()).is_err());
+        // Trig needs 2 p_l | n_l on shared axes: 9 = 3^2 passes the core
+        // rule p^2 | n but not the zig-zag folding.
+        assert!(matches!(
+            plan(Algorithm::Fftu, &Transform::new(&[9, 8]).grid(&[3, 2]).dct2().zigzag()),
+            Err(FftError::AxisConstraint { axis: 0, n: 9, p: 3, requires: "2 p_l | n_l (zig-zag)" })
+        ));
+        // The same shape is fine under the gathered strategy...
+        assert!(plan(Algorithm::Fftu, &Transform::new(&[9, 8]).grid(&[3, 2]).dct2()).is_ok());
+        // ...and r2c has no such constraint (the mirror exchange is a
+        // full-copy swap, no folding): half shape [9, 4] with grid [3, 2].
+        assert!(
+            plan(Algorithm::Fftu, &Transform::new(&[9, 8]).grid(&[3, 2]).r2c().zigzag()).is_ok()
         );
     }
 

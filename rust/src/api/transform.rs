@@ -105,6 +105,46 @@ impl Kind {
     }
 }
 
+/// How a non-C2C transform's combine/untangle passes are distributed.
+///
+/// The complex core is identical either way (FFTU: ONE all-to-all);
+/// the strategies differ in where the wrapper passes run:
+///
+/// - [`DistStrategy::Gathered`] (default): the quarter-wave combine
+///   (trig kinds) or conjugate-symmetry untangle (r2c/c2r) runs at
+///   facade level over the gathered array — the PR 2/PR 4 paths,
+///   retained as the bit-exact differential oracles.
+/// - [`DistStrategy::ZigZag`]: the passes run **rank-local**. The trig
+///   kinds convert the core's cyclic data to the zig-zag cyclic
+///   distribution ([`crate::dist::AxisDist::ZigZagCyclic`]) with one
+///   pairwise exchange per axis (`p_l >= 3`), which co-locates every
+///   mirror pair; r2c/c2r swap one copy with the conjugate partner
+///   `-s mod p`. FFTU-only (the baselines keep the facade passes), and
+///   the trig kinds additionally require `2 p_l | n_l` per shared axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DistStrategy {
+    Gathered,
+    ZigZag,
+}
+
+impl DistStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            DistStrategy::Gathered => "gathered",
+            DistStrategy::ZigZag => "zigzag",
+        }
+    }
+
+    /// Parse a CLI-style name (`--dist gathered|zigzag`).
+    pub fn parse(s: &str) -> Option<DistStrategy> {
+        match s {
+            "gathered" => Some(DistStrategy::Gathered),
+            "zigzag" => Some(DistStrategy::ZigZag),
+            _ => None,
+        }
+    }
+}
+
 /// Output scaling, applied uniformly for every algorithm and direction.
 ///
 /// The raw transforms (like FFTW's) are unnormalized: a forward followed
@@ -191,6 +231,10 @@ pub struct Transform {
     /// array shape and the grid applies to the packed half shape
     /// `[..., n_d/2]` the complex core runs on.
     pub kind: Kind,
+    /// Where the non-C2C wrapper passes run: facade-level over the
+    /// gathered array (default) or rank-local via the zig-zag cyclic
+    /// distribution / conjugate pairwise exchange (FFTU only).
+    pub strategy: DistStrategy,
 }
 
 impl Transform {
@@ -203,6 +247,7 @@ impl Transform {
             normalization: Normalization::None,
             batch: 1,
             kind: Kind::C2C,
+            strategy: DistStrategy::Gathered,
         }
     }
 
@@ -283,6 +328,18 @@ impl Transform {
         self.kind(Kind::Dst3)
     }
 
+    /// Set the [`DistStrategy`] of the non-C2C wrapper passes.
+    pub fn strategy(mut self, strategy: DistStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Shorthand for [`Transform::strategy`]`(DistStrategy::ZigZag)`:
+    /// rank-local combine/untangle passes (FFTU only).
+    pub fn zigzag(self) -> Self {
+        self.strategy(DistStrategy::ZigZag)
+    }
+
     /// Elements per transform in the *real* domain: the product of
     /// `shape`. For C2C this is also the complex element count.
     pub fn total(&self) -> usize {
@@ -324,6 +381,8 @@ impl Transform {
             normalization: Normalization::None,
             batch: self.batch,
             kind: Kind::C2C,
+            // The strategy shapes the wrapper passes, not the core.
+            strategy: DistStrategy::Gathered,
         }
     }
 
@@ -341,6 +400,13 @@ impl Transform {
         }
         if self.kind.is_real_fft() {
             realnd::validate_even_last_axis(&self.shape)?;
+        }
+        if self.strategy == DistStrategy::ZigZag && self.kind == Kind::C2C {
+            return Err(FftError::BadDescriptor {
+                reason: "the zig-zag strategy distributes the real/trig wrapper passes; \
+                         c2c has none — use a non-c2c kind or the gathered strategy"
+                    .into(),
+            });
         }
         if let Some(required) = self.kind.required_direction() {
             if self.direction != required {
@@ -487,6 +553,24 @@ mod tests {
         assert!(Kind::Dct2.is_trig() && !Kind::Dct2.is_real_fft());
         assert!(Kind::C2R.is_real_fft() && !Kind::C2R.is_trig());
         assert!(!Kind::C2C.is_trig() && !Kind::C2C.is_real_fft());
+    }
+
+    #[test]
+    fn strategy_defaults_parses_and_validates() {
+        let t = Transform::new(&[12, 12]);
+        assert_eq!(t.strategy, DistStrategy::Gathered);
+        // Zig-zag is a wrapper-pass strategy: meaningless for c2c.
+        assert!(Transform::new(&[12, 12]).zigzag().validate().is_err());
+        assert!(Transform::new(&[12, 12]).dct2().zigzag().validate().is_ok());
+        assert!(Transform::new(&[12, 16]).r2c().zigzag().validate().is_ok());
+        // The core descriptor never inherits the strategy (it has no
+        // wrapper passes), so core plans stay shareable.
+        let t = Transform::new(&[12, 12]).dct2().zigzag();
+        assert_eq!(t.complex_core().strategy, DistStrategy::Gathered);
+        for s in [DistStrategy::Gathered, DistStrategy::ZigZag] {
+            assert_eq!(DistStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(DistStrategy::parse("nope"), None);
     }
 
     #[test]

@@ -130,6 +130,52 @@ impl<'a> Ctx<'a> {
         self.ledger.charge_mem_words(2 * mem_words);
     }
 
+    /// Ledger-charged pairwise swap: this processor's `buf` trades
+    /// places with `partner`'s `buf` (the rank handed to *its*
+    /// `pairwise_exchange` call must be this rank — pairings are
+    /// symmetric, like the conjugate pairing `s <-> -s mod p` the
+    /// r2c untangle and the cyclic<->zig-zag conversions use).
+    ///
+    /// This is a full communication superstep: **every** processor must
+    /// call it in the same superstep (self-paired ranks pass their own
+    /// rank; their buffer is untouched and they only synchronize). Like
+    /// [`Ctx::exchange_swap`], buffers move through the mailbox by
+    /// pointer swap, so a steady-state pairwise exchange performs zero
+    /// heap allocations. The ledger charges `buf.len()` words out and
+    /// the partner's length in (0 for self-paired ranks), plus the
+    /// pack/unpack memory traffic, exactly as the all-to-all does.
+    pub fn pairwise_exchange(&mut self, label: &'static str, partner: usize, buf: &mut Vec<C64>) {
+        let p = self.shared.p;
+        assert!(partner < p, "pairwise_exchange: partner {partner} out of range for p = {p}");
+        self.ledger.begin(SuperstepKind::Communication, label);
+        if partner == self.rank {
+            // Self-paired: synchronize with the others, move nothing.
+            self.shared.barrier.wait();
+            self.shared.barrier.wait();
+            self.ledger.charge_words(0, 0);
+            self.ledger.charge_mem_words(2 * buf.len());
+            return;
+        }
+        let out_words = buf.len();
+        {
+            let mut slot = self.shared.slots[self.rank * p + partner].lock().unwrap();
+            debug_assert!(slot.is_none(), "mailbox slot reused before drain");
+            *slot = Some(std::mem::take(buf));
+        }
+        self.shared.barrier.wait();
+        let incoming = self.shared.slots[partner * p + self.rank]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("pairwise_exchange: partner deposited nothing (asymmetric pairing?)");
+        *buf = incoming;
+        // Second barrier, as in exchange_swap: nobody may deposit the
+        // next superstep's packets until every slot has been drained.
+        self.shared.barrier.wait();
+        self.ledger.charge_words(out_words, buf.len());
+        self.ledger.charge_mem_words(2 * buf.len());
+    }
+
     /// Barrier-only synchronization (used by timing harnesses to align
     /// processors before starting a measured region).
     pub fn barrier(&self) {
@@ -299,6 +345,67 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn pairwise_exchange_swaps_with_partner_and_charges_the_pair() {
+        // p = 5, partner map s <-> -s mod 5: 0 self, 1<->4, 2<->3.
+        let p = 5;
+        let outcome = run_spmd(p, |ctx| {
+            let s = ctx.rank();
+            let partner = (p - s) % p;
+            let mut buf = vec![C64::new(s as f64, 0.0); 3];
+            ctx.pairwise_exchange("pair", partner, &mut buf);
+            if partner == s {
+                assert_eq!(buf[0], C64::new(s as f64, 0.0), "self-pair must keep its buffer");
+            } else {
+                assert_eq!(buf.len(), 3);
+                assert_eq!(buf[0], C64::new(partner as f64, 0.0), "rank {s}");
+            }
+            s
+        });
+        assert_eq!(outcome.report.comm_supersteps(), 1);
+        // Each non-self rank sends and receives 3 words.
+        assert_eq!(outcome.report.supersteps[0].h_max, 3);
+        assert_eq!(outcome.report.supersteps[0].words_total, 4 * 3);
+    }
+
+    #[test]
+    fn pairwise_exchange_recycles_capacity_across_rounds() {
+        let p = 2;
+        run_spmd(p, |ctx| {
+            let s = ctx.rank();
+            let partner = 1 - s;
+            let mut buf = vec![C64::ONE; 4];
+            for round in 0..4 {
+                buf.clear();
+                buf.extend(std::iter::repeat(C64::new(round as f64, s as f64)).take(4));
+                assert_eq!(buf.capacity(), 4, "buffer grew unexpectedly");
+                ctx.pairwise_exchange("pair", partner, &mut buf);
+                assert_eq!(buf.len(), 4);
+                assert_eq!(buf.capacity(), 4);
+                assert_eq!(buf[0], C64::new(round as f64, partner as f64));
+            }
+        });
+    }
+
+    #[test]
+    fn pairwise_exchange_interleaves_with_alltoall_supersteps() {
+        // The trig pipeline mixes the all-to-all and pairwise supersteps
+        // in one session; slot discipline must hold across both.
+        let p = 3;
+        let outcome = run_spmd(p, |ctx| {
+            let s = ctx.rank();
+            let outgoing: Vec<Vec<C64>> =
+                (0..p).map(|j| vec![C64::new(s as f64, j as f64)]).collect();
+            let incoming = ctx.exchange("a2a", outgoing);
+            assert_eq!(incoming[(s + 1) % p][0].im, s as f64);
+            let partner = (p - s) % p;
+            let mut buf = vec![C64::new(10.0 + s as f64, 0.0); 2];
+            ctx.pairwise_exchange("pair", partner, &mut buf);
+            assert_eq!(buf[0].re, 10.0 + partner as f64);
+        });
+        assert_eq!(outcome.report.comm_supersteps(), 2);
     }
 
     #[test]

@@ -1,4 +1,69 @@
 //! Bulk Synchronous Parallel runtime and cost accounting (§2.1.2).
+//!
+//! The paper's algorithms are BSP programs: sequences of *supersteps*,
+//! each either local computation or communication, separated by
+//! barriers. This module is the in-process stand-in for MPI + a
+//! supercomputer: [`run_spmd`] runs one closure on `p` virtual
+//! processors (one OS thread each), [`Ctx`] provides the communication
+//! primitives, and every superstep is charged to a per-processor
+//! [`ProcLedger`] that folds into a [`CostReport`] — the *executed*
+//! ledger the analytic cost model (`crate::costmodel`) is validated
+//! against, superstep by superstep.
+//!
+//! Three communication primitives cover every algorithm in the crate:
+//!
+//! - [`Ctx::exchange`] / [`Ctx::exchange_swap`] — the bulk-synchronous
+//!   all-to-all (FFTU's single communication superstep; the baselines'
+//!   transposes). The `_swap` form moves buffers through the mailbox by
+//!   pointer swap, so steady-state exchanges allocate nothing.
+//! - [`Ctx::pairwise_exchange`] — a ledger-charged swap with one
+//!   partner rank, for symmetric pairings like the conjugate pairing
+//!   `s <-> -s mod p`: the r2c untangle's mirror exchange and the
+//!   cyclic <-> zig-zag conversions of the rank-local DCT/DST paths
+//!   (see `docs/ARCHITECTURE.md`).
+//! - [`redistribute`] — pack / all-to-all / unpack of a compiled
+//!   [`RedistPlan`], the "global transpose" building block.
+//!
+//! # Example: an SPMD program with one exchange
+//!
+//! ```
+//! use fftu::bsp::run_spmd;
+//! use fftu::fft::C64;
+//!
+//! // Every rank sends its rank number to every other rank.
+//! let outcome = run_spmd(3, |ctx| {
+//!     let s = ctx.rank();
+//!     let outgoing: Vec<Vec<C64>> =
+//!         (0..ctx.nprocs()).map(|_| vec![C64::new(s as f64, 0.0)]).collect();
+//!     let incoming = ctx.exchange("hello", outgoing);
+//!     incoming.iter().map(|pkt| pkt[0].re).sum::<f64>()
+//! });
+//! assert_eq!(outcome.outputs, vec![3.0, 3.0, 3.0]); // 0 + 1 + 2
+//! assert_eq!(outcome.report.comm_supersteps(), 1);
+//! // h-relation: each rank sent (and received) p - 1 = 2 words.
+//! assert_eq!(outcome.report.supersteps[0].h_max, 2);
+//! ```
+//!
+//! # Example: pairwise exchange between conjugate partners
+//!
+//! ```
+//! use fftu::bsp::run_spmd;
+//! use fftu::fft::C64;
+//!
+//! // Partner map s <-> -s mod p: rank 0 is self-paired, 1 <-> 2.
+//! let p = 3;
+//! let outcome = run_spmd(p, |ctx| {
+//!     let s = ctx.rank();
+//!     let partner = (p - s) % p;
+//!     let mut buf = vec![C64::new(s as f64, 0.0); 2];
+//!     ctx.pairwise_exchange("mirror", partner, &mut buf);
+//!     buf[0].re as usize
+//! });
+//! // Each rank now holds its partner's data (rank 0 kept its own).
+//! assert_eq!(outcome.outputs, vec![0, 2, 1]);
+//! // Self-paired ranks charge nothing; the pair charges 2 words each way.
+//! assert_eq!(outcome.report.supersteps[0].h_max, 2);
+//! ```
 
 pub mod ledger;
 pub mod machine;

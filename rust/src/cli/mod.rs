@@ -6,7 +6,7 @@ pub mod dist_show;
 
 use std::sync::Arc;
 
-use crate::api::{Algorithm, Kind, Normalization, PlanCache, Transform};
+use crate::api::{Algorithm, DistStrategy, Kind, Normalization, PlanCache, Transform};
 use crate::dist::{AxisDist, GridDist};
 use crate::fft::{realnd, C64, Direction, Planner};
 use crate::fftu::{choose_grid, FftuPlan};
@@ -34,6 +34,12 @@ COMMANDS:
                                    dct2 | dct3 | dst2 | dst3 (trig kinds,
                                    Makhoul permutation folded into the
                                    cyclic pack, full-shape complex core)
+               --dist STRATEGY     gathered (default) | zigzag: where the
+                                   non-c2c combine/untangle passes run.
+                                   zigzag makes them rank-local via the
+                                   zig-zag cyclic distribution and the
+                                   conjugate pairwise exchange (fftu only;
+                                   trig kinds need 2 p_l | n_l per axis)
                --inverse           inverse transform (1/N-normalized)
                --reps R            timed repetitions (default 3; the plan is
                                    built once and reused — plan-cache hits)
@@ -141,6 +147,13 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let kind = Kind::parse(kind_name).ok_or_else(|| {
         format!("unknown --kind {kind_name}; use c2c|r2c|c2r|dct2|dct3|dst2|dst3")
     })?;
+    let dist_name = args.get("dist").or(cfg.get("dist")).unwrap_or("gathered");
+    let strategy = DistStrategy::parse(dist_name)
+        .ok_or_else(|| format!("unknown --dist {dist_name}; use gathered|zigzag"))?;
+    if strategy == DistStrategy::ZigZag && kind == Kind::C2C {
+        let msg = "--dist zigzag applies to the real/trig kinds (c2c has no wrapper passes)";
+        return Err(msg.into());
+    }
     let n: usize = shape.iter().product();
     let mut rng = Rng::new(42);
 
@@ -200,7 +213,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 // 1/N-normalized transform.
                 descriptor = descriptor.normalization(Normalization::ByN);
             }
-            descriptor = descriptor.kind(kind);
+            descriptor = descriptor.kind(kind).strategy(strategy);
             descriptor = match args.get_vec("grid")?.or(cfg.get_vec("grid")?) {
                 Some(grid) => descriptor.grid(&grid),
                 None => {
@@ -308,7 +321,7 @@ struct BenchCase {
 /// default output name (`BENCH_<tag>.json`) never collides with a
 /// committed baseline from an earlier PR; `--out` overrides it
 /// everywhere — no path in the bench writes any other name.
-const BENCH_TAG: &str = "pr4";
+const BENCH_TAG: &str = "pr5";
 
 /// The default trajectory output path, derived from [`BENCH_TAG`].
 fn bench_default_out() -> String {
@@ -329,6 +342,28 @@ fn median_seconds(samples: &mut [f64]) -> f64 {
     } else {
         (samples[mid - 1] + samples[mid]) / 2.0
     }
+}
+
+/// Time `reps` interleaved single-transform executes of the two
+/// engines under comparison and return the per-engine medians — the
+/// one timing harness every bench case shares, so the interleaving and
+/// median discipline cannot drift between cases.
+fn time_pair(
+    reps: usize,
+    mut legacy: impl FnMut(),
+    mut engine: impl FnMut(),
+) -> (f64, f64) {
+    let mut legacy_times = Vec::with_capacity(reps);
+    let mut engine_times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        legacy();
+        legacy_times.push(t0.elapsed().as_secs_f64());
+        let t0 = std::time::Instant::now();
+        engine();
+        engine_times.push(t0.elapsed().as_secs_f64());
+    }
+    (median_seconds(&mut legacy_times), median_seconds(&mut engine_times))
 }
 
 /// One case's timings as parsed from a bench JSON (ours — the scraper
@@ -473,20 +508,17 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         if warm_new != warm_old {
             return Err(format!("bench {}: engines disagree", case.name));
         }
-        let mut legacy_times = Vec::with_capacity(reps);
-        let mut engine_times = Vec::with_capacity(reps);
-        for _ in 0..reps {
-            let t0 = std::time::Instant::now();
-            let out = fftu_execute_batch_legacy(&plan, &[&global], Direction::Forward);
-            legacy_times.push(t0.elapsed().as_secs_f64());
-            std::hint::black_box(&out);
-            let t0 = std::time::Instant::now();
-            let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
-            engine_times.push(t0.elapsed().as_secs_f64());
-            std::hint::black_box(&out);
-        }
-        let legacy_s = median_seconds(&mut legacy_times);
-        let engine_s = median_seconds(&mut engine_times);
+        let (legacy_s, engine_s) = time_pair(
+            reps,
+            || {
+                let out = fftu_execute_batch_legacy(&plan, &[&global], Direction::Forward);
+                std::hint::black_box(&out);
+            },
+            || {
+                let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
+                std::hint::black_box(&out);
+            },
+        );
         let speedup = legacy_s / engine_s;
         let model_flops = 5.0 * n as f64 * (n as f64).log2();
         println!(
@@ -508,6 +540,60 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             model_flops / engine_s / 1e9,
         ));
         records.push(BenchRecord { name: case.name.to_string(), legacy_s, engine_s });
+    }
+    {
+        // Zig-zag trig case: the retained facade (gathered) trig path
+        // vs the rank-local zig-zag path on the same DCT-II descriptor.
+        // Recorded with the facade in the `legacy` column, so the
+        // --check ratio gate guards the new rank-local passes exactly
+        // the way engine/legacy guards the pack engine. Small enough to
+        // run in quick (CI) mode too — that is what puts the rank-local
+        // path under the regression gate.
+        let name = "dct2_zz_108x108_p9";
+        let shape = vec![108usize, 108];
+        let grid = vec![3usize, 3];
+        let n: usize = shape.iter().product();
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let gathered =
+            crate::api::plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).dct2())?;
+        let zz = crate::api::plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape).grid(&grid).dct2().zigzag(),
+        )?;
+        let warm_g = gathered.execute_trig(&x)?;
+        let warm_z = zz.execute_trig(&x)?;
+        if warm_g.output != warm_z.output {
+            return Err(format!("bench {name}: zig-zag path disagrees with the facade oracle"));
+        }
+        let (legacy_s, engine_s) = time_pair(
+            reps,
+            || {
+                // Both plans executed successfully during the warm-up
+                // cross-check above; a failure here is a bench bug.
+                let out = gathered.execute_trig(&x).expect("gathered trig execute failed");
+                std::hint::black_box(&out);
+            },
+            || {
+                let out = zz.execute_trig(&x).expect("zig-zag trig execute failed");
+                std::hint::black_box(&out);
+            },
+        );
+        let speedup = legacy_s / engine_s;
+        // The trig model adds the quarter-wave combine + extraction
+        // sweep to the complex core's 5 N log2 N.
+        let model_flops =
+            5.0 * n as f64 * (n as f64).log2() + crate::fft::trignd::trig_wrap_flops(&shape);
+        println!("| {name} | {:.3} | {:.3} | {speedup:.2}x |", legacy_s * 1e3, engine_s * 1e3);
+        lines.push(format!(
+            "    {{\"name\": \"{name}\", \"shape\": {shape:?}, \"grid\": {grid:?}, \
+             \"kind\": \"dct2\", \"reps\": {reps}, \
+             \"legacy_s_per_transform\": {legacy_s:.9}, \
+             \"engine_s_per_transform\": {engine_s:.9}, \"speedup\": {speedup:.4}, \
+             \"engine_transforms_per_s\": {:.3}, \"model_gflops_rate\": {:.4}}}",
+            1.0 / engine_s,
+            model_flops / engine_s / 1e9,
+        ));
+        records.push(BenchRecord { name: name.to_string(), legacy_s, engine_s });
     }
     let json = format!(
         "{{\n  \"pr\": \"{BENCH_TAG}\",\n  \"harness\": \"fftu bench\",\n  \"quick\": {quick},\n  \

@@ -113,6 +113,163 @@ pub fn fftu_trig_report(shape: &[usize], p: usize) -> CostReport {
     trig_wrap_report(fftu_report(shape, p), shape, p)
 }
 
+/// A pairwise communication superstep. Unlike [`comm`] (whose
+/// `words_total = h * p` models the all-to-all, where every rank moves
+/// `h` words), self-paired ranks of a pairwise exchange send nothing,
+/// so the total volume is `senders * payload` — matching the executed
+/// ledger's sum of per-rank `words_out` exactly.
+fn pairwise_comm(
+    label: &'static str,
+    h: usize,
+    senders: usize,
+    payload: usize,
+    local_words: usize,
+) -> SuperstepCost {
+    SuperstepCost {
+        kind: SuperstepKind::Communication,
+        label,
+        w_max: 0.0,
+        h_max: h,
+        // Pack + unpack of the exchange buffer, charged on every rank
+        // (self-paired ranks hold the buffer too), as the executed
+        // `Ctx::pairwise_exchange` does.
+        mem_max: 2 * local_words,
+        words_total: senders * payload,
+    }
+}
+
+/// Axis coordinates that are NOT self-paired under `s -> -s mod q`:
+/// all but `s = 0` and (for even `q`) `s = q/2`; none at all for
+/// `q <= 2`.
+fn nonself_coords(q: usize) -> usize {
+    if q <= 2 {
+        0
+    } else {
+        q - 1 - usize::from(q % 2 == 0)
+    }
+}
+
+/// One cyclic <-> zig-zag conversion superstep on an axis with `p_axis`
+/// processors: a pairwise exchange of half the local array,
+/// `h = (N/p)/2`, between the `p / p_axis * nonself_coords(p_axis)`
+/// ranks whose axis coordinate is not self-paired.
+fn zigzag_exchange_step(local_len: usize, p: usize, p_axis: usize) -> SuperstepCost {
+    let senders = p / p_axis * nonself_coords(p_axis);
+    pairwise_comm("zigzag-exchange", local_len / 2, senders, local_len / 2, local_len / 2)
+}
+
+/// FFTU trig kinds under the **zig-zag** strategy (rank-local combine):
+/// the unchanged Eq. (2.12) core, one pairwise `zigzag-exchange` per
+/// axis with `p_l >= 3`, the combine/phase pass charged in-SPMD
+/// (`trig_combine_flops/p`), and the driver-level extraction sweep
+/// (`trig_extract_flops/p`). `type2` orders the core first (forward
+/// kinds); type 3 phases first, then converts, then runs the inverse
+/// core. Matches the executed ledger bit-for-bit (tested).
+pub fn fftu_trig_zigzag_report(shape: &[usize], pgrid: &[usize], type2: bool) -> CostReport {
+    use crate::fft::trignd::{trig_combine_flops, trig_extract_flops};
+    let p: usize = pgrid.iter().product();
+    let n_usize: usize = shape.iter().product();
+    let local = n_usize / p;
+    let core = fftu_report(shape, p).supersteps;
+    let exchange_axes = pgrid.iter().filter(|&&q| q >= 3);
+    let mut steps = Vec::new();
+    if type2 {
+        steps.extend(core);
+        for &q in exchange_axes {
+            steps.push(zigzag_exchange_step(local, p, q));
+        }
+        steps.push(comp("trig-combine", trig_combine_flops(shape) / p as f64));
+    } else {
+        steps.push(comp("trig-phase", trig_combine_flops(shape) / p as f64));
+        for &q in exchange_axes {
+            steps.push(zigzag_exchange_step(local, p, q));
+        }
+        steps.extend(core);
+    }
+    steps.push(comp("trig-extract", trig_extract_flops(shape) / p as f64));
+    CostReport { supersteps: steps }
+}
+
+/// h-relation of the conjugate mirror exchange `s <-> -s mod p`: each
+/// non-self-paired rank swaps `payload` words with its partner, so the
+/// maximum is `payload` when a non-self-paired rank exists under the
+/// additional `constraint` on its coordinates, else 0. A coordinate is
+/// self-paired iff `s_l = -s_l mod p_l`, which pins every axis with
+/// `p_l <= 2`.
+fn any_nonself_rank(pgrid: &[usize]) -> bool {
+    pgrid.iter().any(|&q| q >= 3)
+}
+
+/// Number of fully self-conjugate ranks (`-s = s mod p` on every axis):
+/// the product of per-axis self-paired coordinate counts.
+fn self_conjugate_ranks(pgrid: &[usize]) -> usize {
+    pgrid.iter().map(|&q| q - nonself_coords(q)).product()
+}
+
+/// FFTU r2c under the **zig-zag** strategy (rank-local untangle): the
+/// unchanged half-shape core, ONE pairwise `r2c-pairwise` mirror
+/// exchange of the full core output (`h = (N/2)/p`, or 0 when every
+/// rank is self-conjugate, i.e. all `p_l <= 2`), and the untangle
+/// charged in-SPMD with the same `wrap_flops(shape)/p` the facade
+/// charges. Matches the executed ledger bit-for-bit (tested).
+pub fn fftu_r2c_zigzag_report(shape: &[usize], pgrid: &[usize]) -> CostReport {
+    let half = crate::fft::realnd::half_shape(shape);
+    let p: usize = pgrid.iter().product();
+    let n_half: usize = half.iter().product();
+    let local = n_half / p;
+    let pair_h = if any_nonself_rank(pgrid) { local } else { 0 };
+    let senders = p - self_conjugate_ranks(pgrid);
+    let mut steps = fftu_report(&half, p).supersteps;
+    steps.push(pairwise_comm("r2c-pairwise", pair_h, senders, local, local));
+    steps.push(comp("r2c-untangle", crate::fft::realnd::wrap_flops(shape) / p as f64));
+    CostReport { supersteps: steps }
+}
+
+/// FFTU c2r under the **zig-zag** strategy (rank-local retangle), the
+/// adjoint ordering: the pairwise `c2r-pairwise` exchange swaps each
+/// rank's `[main | extra]` spectrum share — ranks with `s_d = 0` also
+/// carry the Nyquist bins, one per inner row — then the retangle and
+/// the unchanged inverse core. The exchanged payload is `(N/2)/p` plus
+/// the extra rows when a non-self-paired rank with `s_d = 0` exists
+/// (some *leading* axis has `p_l >= 3`); just `(N/2)/p` when only the
+/// last axis has `p_d >= 3`; 0 when every rank is self-conjugate.
+pub fn fftu_c2r_zigzag_report(shape: &[usize], pgrid: &[usize]) -> CostReport {
+    let half = crate::fft::realnd::half_shape(shape);
+    let d = half.len();
+    let p: usize = pgrid.iter().product();
+    let n_half: usize = half.iter().product();
+    let local = n_half / p;
+    let rows = local / (half[d - 1] / pgrid[d - 1]);
+    let pair_h = if any_nonself_rank(&pgrid[..d - 1]) {
+        local + rows
+    } else if pgrid[d - 1] >= 3 {
+        local
+    } else {
+        0
+    };
+    // Total volume: non-self ranks with s_d = 0 send `local + rows`
+    // (they carry the Nyquist bins), the remaining non-self ranks
+    // `local` — matching the executed per-rank `words_out` sums.
+    let sd0_nonself = p / pgrid[d - 1] - self_conjugate_ranks(&pgrid[..d - 1]);
+    let nonself_total = p - self_conjugate_ranks(pgrid);
+    let words_total = sd0_nonself * (local + rows) + (nonself_total - sd0_nonself) * local;
+    let mut steps = vec![
+        SuperstepCost {
+            kind: SuperstepKind::Communication,
+            label: "c2r-pairwise",
+            w_max: 0.0,
+            h_max: pair_h,
+            // Every rank packs and unpacks its `[main | extra]` buffer;
+            // the s_d = 0 ranks' is the larger one.
+            mem_max: 2 * (local + rows),
+            words_total,
+        },
+        comp("c2r-retangle", crate::fft::realnd::wrap_flops(shape) / p as f64),
+    ];
+    steps.extend(fftu_report(&half, p).supersteps);
+    CostReport { supersteps: steps }
+}
+
 /// Parallel-FFTW slab: local axes 2..d, one transpose, axis 1, optional
 /// transpose back.
 pub fn slab_report(shape: &[usize], p: usize, same: bool) -> Result<CostReport, FftError> {
@@ -355,6 +512,114 @@ mod tests {
                     "trig wrap charge {shape:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn fftu_zigzag_trig_analytic_matches_executed() {
+        use crate::api::{plan, Algorithm, Kind, Transform};
+        let mut rng = Rng::new(8);
+        for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+            let type2 = matches!(kind, Kind::Dct2 | Kind::Dst2);
+            for (shape, grid) in [
+                (vec![18usize, 16], vec![3usize, 4]),
+                (vec![36], vec![3]),
+                (vec![16, 16], vec![2, 2]), // all self-paired: no exchanges
+            ] {
+                let n: usize = shape.iter().product();
+                let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+                let planned = plan(
+                    Algorithm::Fftu,
+                    &Transform::new(&shape).grid(&grid).kind(kind).zigzag(),
+                )
+                .unwrap();
+                let executed = planned.execute_trig(&x).unwrap().report;
+                let analytic = fftu_trig_zigzag_report(&shape, &grid, type2);
+                // Full superstep structure: same count, kinds, labels;
+                // identical h on every communication superstep.
+                assert_eq!(
+                    analytic.supersteps.len(),
+                    executed.supersteps.len(),
+                    "{} {shape:?} {grid:?}",
+                    kind.name()
+                );
+                for (a, e) in analytic.supersteps.iter().zip(&executed.supersteps) {
+                    assert_eq!(a.kind, e.kind, "{} {shape:?}", kind.name());
+                    assert_eq!(a.label, e.label, "{} {shape:?}", kind.name());
+                    assert_eq!(a.h_max, e.h_max, "{} {shape:?} ({})", kind.name(), a.label);
+                    // Total volume too: self-paired ranks of a pairwise
+                    // exchange send nothing, and the model counts that.
+                    assert_eq!(
+                        a.words_total,
+                        e.words_total,
+                        "{} {shape:?} ({}) words_total",
+                        kind.name(),
+                        a.label
+                    );
+                }
+                // The new pass charges agree to the last bit: both sides
+                // evaluate the same model expressions.
+                for label in ["trig-combine", "trig-phase", "trig-extract"] {
+                    let aw = analytic.supersteps.iter().find(|s| s.label == label);
+                    let ew = executed.supersteps.iter().find(|s| s.label == label);
+                    assert_eq!(aw.is_some(), ew.is_some(), "{label}");
+                    if let (Some(aw), Some(ew)) = (aw, ew) {
+                        assert_eq!(aw.w_max.to_bits(), ew.w_max.to_bits(), "{label} {shape:?}");
+                    }
+                }
+                // Exactly ONE all-to-all; the rest is pairwise.
+                assert_eq!(
+                    executed.supersteps.iter().filter(|s| s.label == "fftu-alltoall").count(),
+                    1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fftu_zigzag_r2c_c2r_analytic_matches_executed() {
+        use crate::api::{plan, Algorithm, Transform};
+        let mut rng = Rng::new(9);
+        for (shape, grid) in [
+            (vec![8usize, 36], vec![2usize, 3]),  // leading + last axes share
+            (vec![18, 8], vec![3, 2]),            // only a leading axis >= 3
+            (vec![4, 36], vec![1, 3]),            // only the last axis >= 3
+            (vec![16, 16], vec![2, 2]),           // fully self-conjugate
+            (vec![16], vec![2]),
+        ] {
+            let n: usize = shape.iter().product();
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag())
+                .unwrap();
+            let executed = fwd.execute_r2c(&x).unwrap().report;
+            let analytic = fftu_r2c_zigzag_report(&shape, &grid);
+            assert_eq!(analytic.supersteps.len(), executed.supersteps.len(), "{shape:?}");
+            for (a, e) in analytic.supersteps.iter().zip(&executed.supersteps) {
+                assert_eq!(a.kind, e.kind, "r2c {shape:?}");
+                assert_eq!(a.label, e.label, "r2c {shape:?}");
+                assert_eq!(a.h_max, e.h_max, "r2c {shape:?} ({})", a.label);
+                assert_eq!(a.words_total, e.words_total, "r2c {shape:?} ({})", a.label);
+            }
+            let aw = analytic.supersteps.last().unwrap();
+            let ew = executed.supersteps.last().unwrap();
+            assert_eq!(aw.w_max.to_bits(), ew.w_max.to_bits(), "untangle charge {shape:?}");
+
+            // C2R, the adjoint ordering.
+            let spec = fwd.execute_r2c(&x).unwrap().output;
+            let inv = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).c2r().zigzag())
+                .unwrap();
+            let executed = inv.execute_c2r(&spec).unwrap().report;
+            let analytic = fftu_c2r_zigzag_report(&shape, &grid);
+            assert_eq!(analytic.supersteps.len(), executed.supersteps.len(), "{shape:?}");
+            for (a, e) in analytic.supersteps.iter().zip(&executed.supersteps) {
+                assert_eq!(a.kind, e.kind, "c2r {shape:?}");
+                assert_eq!(a.label, e.label, "c2r {shape:?}");
+                assert_eq!(a.h_max, e.h_max, "c2r {shape:?} ({})", a.label);
+                assert_eq!(a.words_total, e.words_total, "c2r {shape:?} ({})", a.label);
+            }
+            let aw = analytic.supersteps.iter().find(|s| s.label == "c2r-retangle").unwrap();
+            let ew = executed.supersteps.iter().find(|s| s.label == "c2r-retangle").unwrap();
+            assert_eq!(aw.w_max.to_bits(), ew.w_max.to_bits(), "retangle charge {shape:?}");
         }
     }
 

@@ -5,15 +5,26 @@
 //! distributions of a d-dimensional row-major array: each axis `l` of
 //! length `n_l` is assigned to `p_l` processors independently, and a
 //! processor is identified by its coordinate vector in the
-//! `p_1 x ... x p_d` grid. All three distributions the paper uses are
-//! instances of the **group-cyclic** family with cycle `c`
-//! (element `j` of an axis goes to processor `(j div (c n / p)) c + j mod c`,
-//! §2.3):
+//! `p_1 x ... x p_d` grid. All three distributions the paper's complex
+//! algorithm uses are instances of the **group-cyclic** family with
+//! cycle `c` (element `j` of an axis goes to processor
+//! `(j div (c n / p)) c + j mod c`, §2.3):
 //!
 //! - `c = p`: the cyclic distribution (`j mod p`),
 //! - `c = 1`: the block distribution (`j div (n/p)`),
 //! - `1 < c < p`: the proper group-cyclic distributions used by the
 //!   beyond-`sqrt(N)` extension.
+//!
+//! The real and trigonometric extensions (§6) add one distribution from
+//! *outside* that family: the **zig-zag cyclic** distribution
+//! ([`AxisDist::ZigZagCyclic`]), which folds the residues mod `2p` so
+//! that an axis index `j` and its mirror `(n - j) mod n` always land on
+//! the same processor. That co-location is exactly what makes the
+//! DCT/DST quarter-wave combine and the r2c conjugate-symmetry untangle
+//! *rank-local* (see `crate::fftu::zigzag`); under the plain cyclic
+//! distribution the mirror lives on processor `-s mod p` instead, and
+//! reaching it costs a pairwise exchange
+//! (`crate::bsp::Ctx::pairwise_exchange`).
 //!
 //! [`RedistPlan`] compiles the exact packet routing between any two
 //! distributions of the same array over the same processor count — the
@@ -21,6 +32,38 @@
 //! and [`analytic_h`] computes the h-relation of that routing in closed
 //! form (O(d·p) time), so the cost model can price paper-scale shapes
 //! (e.g. `2^24 x 64`) without touching any data.
+//!
+//! # Example: distributions are plain index maps
+//!
+//! Every distribution answers two questions — who owns global index `j`,
+//! and where it sits locally — and [`GridDist`] composes the answers
+//! per axis:
+//!
+//! ```
+//! use fftu::dist::{AxisDist, GridDist};
+//!
+//! // One axis of 12 elements, cyclically over 3 processors.
+//! let cyc = AxisDist::Cyclic { p: 3 };
+//! assert_eq!(cyc.owner(12, 7), 7 % 3);
+//! assert_eq!(cyc.local_index(12, 7), 7 / 3);
+//!
+//! // The zig-zag cyclic distribution co-locates mirror pairs:
+//! // j and (12 - j) % 12 always share an owner.
+//! let zz = AxisDist::ZigZagCyclic { p: 3 };
+//! for j in 0..12 {
+//!     assert_eq!(zz.owner(12, j), zz.owner(12, (12 - j) % 12));
+//! }
+//!
+//! // A 2D grid distribution splits a global array into per-rank locals
+//! // and reassembles it exactly.
+//! let dist = GridDist::cyclic(&[4, 6], &[2, 3])?;
+//! let global: Vec<fftu::C64> =
+//!     (0..24).map(|i| fftu::C64::new(i as f64, 0.0)).collect();
+//! let locals = dist.scatter(&global);
+//! assert_eq!(locals.len(), 6);            // one local array per rank
+//! assert_eq!(dist.gather(&locals), global);
+//! # Ok::<(), fftu::FftError>(())
+//! ```
 
 use crate::api::FftError;
 use crate::fft::C64;
@@ -56,6 +99,18 @@ pub enum AxisDist {
     /// `j -> (j div (c n / p)) c + j mod c` (§2.3); `c = p` is cyclic,
     /// `c = 1` is block.
     GroupCyclic { p: usize, c: usize },
+    /// The zig-zag cyclic distribution of the §6 real/trig extensions:
+    /// with `r = j mod 2p`, the owner is `r mod p` for `r <= p` and
+    /// `2p - r` beyond, so the owner sequence per period reads
+    /// `0, 1, ..., p-1, 0, p-1, ..., 1` — mirror pairs
+    /// `j <-> (n - j) mod n` always share an owner (processor `s` owns
+    /// the residues `{s, 2p - s}`, processor `0` the self-mirrored
+    /// `{0, p}`). Requires `2p | n` for `p >= 2`; for `p <= 2` it
+    /// coincides with the cyclic distribution, local order included.
+    /// Locally, element `j` sits at `2 (j div 2p) + slot` with slot 0
+    /// for the first residue arm and 1 for the second, so the two halves
+    /// of each mirror pair are *adjacent* in local memory.
+    ZigZagCyclic { p: usize },
 }
 
 impl AxisDist {
@@ -63,17 +118,25 @@ impl AxisDist {
     #[inline]
     pub fn procs(self) -> usize {
         match self {
-            AxisDist::Cyclic { p } | AxisDist::Block { p } | AxisDist::GroupCyclic { p, .. } => p,
+            AxisDist::Cyclic { p }
+            | AxisDist::Block { p }
+            | AxisDist::GroupCyclic { p, .. }
+            | AxisDist::ZigZagCyclic { p } => p,
         }
     }
 
-    /// The cycle `c` of the group-cyclic normal form.
+    /// The cycle `c` of the group-cyclic normal form. The zig-zag cyclic
+    /// distribution lies *outside* the group-cyclic family (its owner
+    /// map is not of the `(j div region) c + j mod c` form); it reports
+    /// `p` here so period-style reasoning stays conservative, and every
+    /// index computation branches on the variant instead of this value.
     #[inline]
     pub fn cycle(self) -> usize {
         match self {
             AxisDist::Cyclic { p } => p,
             AxisDist::Block { .. } => 1,
             AxisDist::GroupCyclic { c, .. } => c,
+            AxisDist::ZigZagCyclic { p } => p,
         }
     }
 
@@ -86,13 +149,22 @@ impl AxisDist {
 
     fn validate(self, axis: usize, n: usize) -> Result<(), FftError> {
         let p = self.procs();
-        let c = self.cycle();
         if n == 0 {
             return Err(FftError::AxisConstraint { axis, n, p, requires: "n_l >= 1" });
         }
         if p == 0 {
             return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l >= 1" });
         }
+        if let AxisDist::ZigZagCyclic { .. } = self {
+            // p = 1 keeps the whole axis local (any n); beyond that the
+            // period-2p folding needs whole periods.
+            if p >= 2 && n % (2 * p) != 0 {
+                let requires = "2 p_l | n_l (zig-zag)";
+                return Err(FftError::AxisConstraint { axis, n, p, requires });
+            }
+            return Ok(());
+        }
+        let c = self.cycle();
         if n % p != 0 {
             return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l | n_l" });
         }
@@ -102,9 +174,17 @@ impl AxisDist {
         Ok(())
     }
 
-    /// Owning processor coordinate of global index `j` (§2.3 formula).
+    /// Owning processor coordinate of global index `j` (§2.3 formula for
+    /// the group-cyclic family; the mirror-folding map for zig-zag).
     #[inline]
     pub fn owner(self, n: usize, j: usize) -> usize {
+        if let AxisDist::ZigZagCyclic { p } = self {
+            if p == 1 {
+                return 0;
+            }
+            let r = j % (2 * p);
+            return if r <= p { r % p } else { 2 * p - r };
+        }
         let c = self.cycle();
         (j / self.region(n)) * c + j % c
     }
@@ -112,6 +192,13 @@ impl AxisDist {
     /// Local index of global `j` on its owner.
     #[inline]
     pub fn local_index(self, n: usize, j: usize) -> usize {
+        if let AxisDist::ZigZagCyclic { p } = self {
+            if p == 1 {
+                return j;
+            }
+            let r = j % (2 * p);
+            return 2 * (j / (2 * p)) + usize::from(r >= p);
+        }
         (j % self.region(n)) / self.cycle()
     }
 
@@ -119,6 +206,20 @@ impl AxisDist {
     /// of ([`Self::owner`], [`Self::local_index`]).
     #[inline]
     pub fn global_index(self, n: usize, a: usize, t: usize) -> usize {
+        if let AxisDist::ZigZagCyclic { p } = self {
+            if p == 1 {
+                return t;
+            }
+            let (q, slot) = (t / 2, t % 2);
+            let arm = if slot == 0 {
+                a
+            } else if a == 0 {
+                p
+            } else {
+                2 * p - a
+            };
+            return 2 * p * q + arm;
+        }
         let c = self.cycle();
         (a / c) * self.region(n) + t * c + a % c
     }
@@ -156,6 +257,19 @@ impl GridDist {
             return Err(FftError::RankMismatch { shape: shape.len(), grid: pgrid.len() });
         }
         let axes: Vec<AxisDist> = pgrid.iter().map(|&p| AxisDist::Cyclic { p }).collect();
+        Self::new(shape, &axes)
+    }
+
+    /// The d-dimensional zig-zag cyclic distribution: every axis
+    /// zig-zag cyclic, so the full mirror `k_l -> (n_l - k_l) mod n_l`
+    /// of any owned multi-index (over any subset of axes) stays on the
+    /// same rank. The input/output distribution of the rank-local
+    /// DCT/DST combine passes (`crate::fftu::zigzag`).
+    pub fn zigzag(shape: &[usize], pgrid: &[usize]) -> Result<Self, FftError> {
+        if shape.len() != pgrid.len() {
+            return Err(FftError::RankMismatch { shape: shape.len(), grid: pgrid.len() });
+        }
+        let axes: Vec<AxisDist> = pgrid.iter().map(|&p| AxisDist::ZigZagCyclic { p }).collect();
         Self::new(shape, &axes)
     }
 
@@ -257,13 +371,48 @@ impl GridDist {
         self.axes.iter().all(|a| matches!(a, AxisDist::Cyclic { .. }))
     }
 
+    /// `true` when every axis is zig-zag cyclic — the distribution of
+    /// the rank-local trig combine passes, with its own two-arm strip
+    /// walk in [`Self::scatter`]/[`Self::gather`].
+    pub fn is_fully_zigzag(&self) -> bool {
+        self.axes.iter().all(|a| matches!(a, AxisDist::ZigZagCyclic { .. }))
+    }
+
     /// Split a global row-major array into per-rank local arrays.
     ///
     /// Fully cyclic distributions take the strip walk (sequential
     /// per-rank writes, strided reads, no per-element owner arithmetic);
-    /// everything else falls back to [`Self::scatter_generic`].
+    /// fully zig-zag distributions take the analogous two-arm strip walk
+    /// ([`Self::for_each_zigzag_row`]); everything else falls back to
+    /// [`Self::scatter_generic`].
     pub fn scatter(&self, global: &[C64]) -> Vec<Vec<C64>> {
         assert_eq!(global.len(), self.total(), "scatter: global length mismatch");
+        if self.is_fully_zigzag() {
+            let p = self.num_procs();
+            let mut locals = vec![vec![C64::ZERO; self.local_len()]; p];
+            let d = self.shape.len();
+            let pd = self.grid[d - 1];
+            let ld = self.local_shape[d - 1];
+            self.for_each_zigzag_row(|row_base, rank_pre, loff_pre| {
+                for s in 0..pd {
+                    let dst = &mut locals[rank_pre * pd + s][loff_pre * ld..(loff_pre + 1) * ld];
+                    if pd == 1 {
+                        dst.copy_from_slice(&global[row_base..row_base + ld]);
+                        continue;
+                    }
+                    let (a0, a1) = zigzag_arms(pd, s);
+                    let mut even = row_base + a0;
+                    let mut odd = row_base + a1;
+                    for pair in dst.chunks_exact_mut(2) {
+                        pair[0] = global[even];
+                        pair[1] = global[odd];
+                        even += 2 * pd;
+                        odd += 2 * pd;
+                    }
+                }
+            });
+            return locals;
+        }
         if !self.is_fully_cyclic() {
             return self.scatter_generic(global);
         }
@@ -283,9 +432,35 @@ impl GridDist {
     }
 
     /// Reassemble the global array from per-rank local arrays (strip
-    /// walk for fully cyclic distributions, generic otherwise).
+    /// walk for fully cyclic and fully zig-zag distributions, generic
+    /// otherwise).
     pub fn gather(&self, locals: &[Vec<C64>]) -> Vec<C64> {
         assert_eq!(locals.len(), self.num_procs(), "gather: wrong number of locals");
+        if self.is_fully_zigzag() {
+            let mut global = vec![C64::ZERO; self.total()];
+            let d = self.shape.len();
+            let pd = self.grid[d - 1];
+            let ld = self.local_shape[d - 1];
+            self.for_each_zigzag_row(|row_base, rank_pre, loff_pre| {
+                for s in 0..pd {
+                    let src = &locals[rank_pre * pd + s][loff_pre * ld..(loff_pre + 1) * ld];
+                    if pd == 1 {
+                        global[row_base..row_base + ld].copy_from_slice(src);
+                        continue;
+                    }
+                    let (a0, a1) = zigzag_arms(pd, s);
+                    let mut even = row_base + a0;
+                    let mut odd = row_base + a1;
+                    for pair in src.chunks_exact(2) {
+                        global[even] = pair[0];
+                        global[odd] = pair[1];
+                        even += 2 * pd;
+                        odd += 2 * pd;
+                    }
+                }
+            });
+            return global;
+        }
         if !self.is_fully_cyclic() {
             return self.gather_generic(locals);
         }
@@ -362,6 +537,39 @@ impl GridDist {
             }
         });
         results
+    }
+
+    /// Row walk over a fully zig-zag distribution: invokes
+    /// `f(row_base, rank_prefix, loff_prefix)` once per global inner
+    /// row, folding the leading axes' zig-zag rank coordinates and local
+    /// indices into the prefixes (the zig-zag analogue of
+    /// [`Self::for_each_cyclic_strip`]). Within a row, rank `s` reads
+    /// two arms of stride `2 p_d`: global `2 p_d q + arm` lands at local
+    /// `2q + slot` — mirror pairs adjacent in local memory.
+    fn for_each_zigzag_row(&self, mut f: impl FnMut(usize, usize, usize)) {
+        let d = self.shape.len();
+        let nd = self.shape[d - 1];
+        let rows = self.total() / nd;
+        let mut idx = vec![0usize; d.saturating_sub(1)];
+        let mut row_base = 0usize;
+        for _ in 0..rows {
+            let mut rank_pre = 0usize;
+            let mut loff_pre = 0usize;
+            for l in 0..d - 1 {
+                let ax = self.axes[l];
+                rank_pre = rank_pre * self.grid[l] + ax.owner(self.shape[l], idx[l]);
+                loff_pre = loff_pre * self.local_shape[l] + ax.local_index(self.shape[l], idx[l]);
+            }
+            f(row_base, rank_pre, loff_pre);
+            row_base += nd;
+            for l in (0..d - 1).rev() {
+                idx[l] += 1;
+                if idx[l] < self.shape[l] {
+                    break;
+                }
+                idx[l] = 0;
+            }
+        }
     }
 
     /// Strip walk over a fully cyclic distribution: invokes `f(row_base,
@@ -578,10 +786,31 @@ pub fn analytic_h(src: &GridDist, dst: &GridDist) -> usize {
     src.local_len() - min_self
 }
 
+/// The two residues mod `2p` that zig-zag rank `s` owns, in local slot
+/// order: `(s, 2p - s)` for `s >= 1` and `(0, p)` for rank 0. Shared by
+/// the strip scatter/gather here and the rank-local trig walks in
+/// `crate::fftu::zigzag`. Requires `p >= 2` (for `p = 1` the axis is
+/// simply local).
+#[inline]
+pub fn zigzag_arms(p: usize, s: usize) -> (usize, usize) {
+    debug_assert!(p >= 2 && s < p);
+    if s == 0 {
+        (0, p)
+    } else {
+        (s, 2 * p - s)
+    }
+}
+
 /// Number of axis indices owned by coordinate `pa` of `a` AND `pb` of
 /// `b`: the intersection of two (interval ∩ residue-class) sets, counted
-/// via CRT.
+/// via CRT. The zig-zag distribution is outside the group-cyclic family
+/// the CRT argument covers, so any pairing that involves it is counted
+/// directly (O(n) per axis — the zig-zag paths never price paper-scale
+/// redistributions through this function).
 fn axis_overlap(n: usize, a: AxisDist, pa: usize, b: AxisDist, pb: usize) -> usize {
+    if matches!(a, AxisDist::ZigZagCyclic { .. }) || matches!(b, AxisDist::ZigZagCyclic { .. }) {
+        return (0..n).filter(|&j| a.owner(n, j) == pa && b.owner(n, j) == pb).count();
+    }
     let (ca, la) = (a.cycle(), a.region(n));
     let (cb, lb) = (b.cycle(), b.region(n));
     let (ga, ra) = (pa / ca, pa % ca);
@@ -753,6 +982,91 @@ mod tests {
         // Non-cyclic distributions must keep using the generic path.
         let block = GridDist::blocks(&[8, 6], &[4, 1]).unwrap();
         assert!(!block.is_fully_cyclic());
+    }
+
+    #[test]
+    fn zigzag_axis_maps_are_balanced_mirror_colocating_bijections() {
+        for p in [1usize, 2, 3, 4, 5, 6, 8] {
+            for m in [1usize, 2, 3, 5] {
+                let n = if p > 1 { 2 * p * m } else { 3 * m };
+                let ax = AxisDist::ZigZagCyclic { p };
+                assert!(ax.validate(0, n).is_ok(), "n={n} p={p}");
+                let mut counts = vec![0usize; p];
+                for j in 0..n {
+                    let a = ax.owner(n, j);
+                    let t = ax.local_index(n, j);
+                    assert!(a < p, "n={n} p={p} j={j}");
+                    assert_eq!(ax.global_index(n, a, t), j, "n={n} p={p} j={j}");
+                    // The defining property: mirror pairs share an owner.
+                    assert_eq!(ax.owner(n, (n - j) % n), a, "n={n} p={p} j={j}");
+                    counts[a] += 1;
+                }
+                assert!(counts.iter().all(|&c| c == n / p), "n={n} p={p}: {counts:?}");
+            }
+        }
+        // p <= 2: zig-zag coincides with cyclic, local order included.
+        for p in [1usize, 2] {
+            let n = 2 * p * 3;
+            let zz = AxisDist::ZigZagCyclic { p };
+            let cy = AxisDist::Cyclic { p };
+            for j in 0..n {
+                assert_eq!(zz.owner(n, j), cy.owner(n, j));
+                assert_eq!(zz.local_index(n, j), cy.local_index(n, j));
+            }
+        }
+        // 2p must divide n for p >= 2.
+        assert!(matches!(
+            GridDist::zigzag(&[9], &[3]).unwrap_err(),
+            FftError::AxisConstraint { requires: "2 p_l | n_l (zig-zag)", .. }
+        ));
+    }
+
+    #[test]
+    fn zigzag_strip_walk_matches_generic_paths() {
+        let mut rng = Rng::new(0x2162);
+        for (shape, grid) in [
+            (vec![12usize], vec![3usize]),
+            (vec![24], vec![4]),
+            (vec![30], vec![5]),
+            (vec![12, 6], vec![3, 1]),
+            (vec![12, 24], vec![3, 4]),
+            (vec![6, 12, 8], vec![3, 3, 2]),
+            (vec![5, 12], vec![1, 3]),
+        ] {
+            let dist = GridDist::zigzag(&shape, &grid).unwrap();
+            assert!(dist.is_fully_zigzag() && !dist.is_fully_cyclic());
+            let n = dist.total();
+            let global: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+            let fast = dist.scatter(&global);
+            let slow = dist.scatter_generic(&global);
+            assert_eq!(fast, slow, "zigzag scatter mismatch for {shape:?}/{grid:?}");
+            assert_eq!(dist.gather(&fast), global, "zigzag gather roundtrip {shape:?}");
+            assert_eq!(dist.gather(&fast), dist.gather_generic(&slow));
+        }
+    }
+
+    #[test]
+    fn zigzag_analytic_h_matches_compiled_plans() {
+        // The cyclic <-> zig-zag redistribution is the conversion the
+        // rank-local trig paths perform via pairwise exchanges: each
+        // non-self-paired rank swaps exactly half its local array, so
+        // h = N/(2p) (and 0 when every rank is self-paired, p_l <= 2).
+        let shape = [12usize, 24];
+        let src = GridDist::cyclic(&shape, &[3, 4]).unwrap();
+        let dst = GridDist::zigzag(&shape, &[3, 4]).unwrap();
+        let plan = RedistPlan::new(&src, &dst).unwrap();
+        assert_eq!(analytic_h(&src, &dst), plan.h_relation());
+        let np = shape.iter().product::<usize>() / 12;
+        // Both axes exchange; an element moves when either axis residue
+        // is in the odd arm: 1 - (1/2)(1/2)... rank (1,1) keeps the
+        // elements even in both axes = 1/4 of its locals.
+        assert_eq!(plan.h_relation(), np - np / 4);
+        // p_l <= 2 everywhere: zig-zag IS cyclic, nothing moves.
+        let src = GridDist::cyclic(&[8, 12], &[2, 2]).unwrap();
+        let dst = GridDist::zigzag(&[8, 12], &[2, 2]).unwrap();
+        assert_eq!(analytic_h(&src, &dst), 0);
+        assert_eq!(RedistPlan::new(&src, &dst).unwrap().h_relation(), 0);
     }
 
     #[test]

@@ -271,11 +271,32 @@ pub fn trig3_extract(v: &[C64], shape: &[usize], negate_odd: bool, scale: f64) -
     out
 }
 
+/// Model real flops of the quarter-wave combine/phase passes alone:
+/// `16 N` per axis. This is the part the zig-zag paths execute
+/// *rank-locally* (charged in-SPMD as `trig-combine`/`trig-phase`,
+/// `trig_combine_flops/p` per rank); the facade paths charge it
+/// together with the extraction sweep via [`trig_wrap_flops`]. Shared
+/// by the executed ledgers and the analytic cost model so the two match
+/// bit-for-bit.
+pub fn trig_combine_flops(shape: &[usize]) -> f64 {
+    let n: f64 = shape.iter().map(|&x| x as f64).product();
+    16.0 * shape.len() as f64 * n
+}
+
+/// Model real flops of the permutation/extraction sweep alone: `2 N`.
+/// The zig-zag paths charge it as the driver-level `trig-extract` pass
+/// (`trig_extract_flops/p` per rank); see [`trig_combine_flops`].
+pub fn trig_extract_flops(shape: &[usize]) -> f64 {
+    let n: f64 = shape.iter().map(|&x| x as f64).product();
+    2.0 * n
+}
+
 /// Model real flops of the trig pre/post wrapping around the complex
 /// core: `16 N` per combine/phase pass (one axis each of d), plus `2 N`
 /// for the permutation/extraction sweep — counted in the same style as
 /// §2.3's `12 N/p` twiddle charge. Shared by the executed facade ledger
-/// and the analytic cost model so the two match exactly.
+/// and the analytic cost model so the two match exactly. Equals
+/// [`trig_combine_flops`]` + `[`trig_extract_flops`].
 pub fn trig_wrap_flops(shape: &[usize]) -> f64 {
     let n: f64 = shape.iter().map(|&x| x as f64).product();
     (16.0 * shape.len() as f64 + 2.0) * n
@@ -453,6 +474,13 @@ mod tests {
     fn wrap_flops_formula() {
         assert_eq!(trig_wrap_flops(&[8]), (16.0 + 2.0) * 8.0);
         assert_eq!(trig_wrap_flops(&[4, 6]), (32.0 + 2.0) * 24.0);
+        // The split charges of the zig-zag paths sum to the facade's.
+        for shape in [&[8usize][..], &[4, 6], &[3, 5, 7]] {
+            assert_eq!(
+                trig_combine_flops(shape) + trig_extract_flops(shape),
+                trig_wrap_flops(shape)
+            );
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod group_cyclic;
 pub mod pack;
 pub mod plan;
 pub mod worker;
+pub mod zigzag;
 
 pub use group_cyclic::{comm_supersteps_needed, cyclic_to_group_cyclic, group_cyclic_dist};
 pub use pack::{pack_twiddle, pack_twiddle_odometer, unpack, PackProgram, PackRow, TwiddleTables};
@@ -261,6 +262,254 @@ pub fn fftu_execute_trig3_batch_arena(
         }
     }
     (results, outcome.report)
+}
+
+/// Type-2 trig engine with **rank-local** combine passes (the zig-zag
+/// variant of [`fftu_execute_trig2_batch_arena`]): Makhoul-composed
+/// cyclic scatter, the unchanged single-all-to-all core, then one
+/// pairwise exchange per axis with `p_l >= 3` converts the core output
+/// to the zig-zag cyclic distribution
+/// ([`zigzag::convert_between_cyclic_and_zigzag`]), where every
+/// quarter-wave combine pass runs locally
+/// ([`zigzag::trig2_combine_local`]). Returns the finished real
+/// coefficient arrays (`dst` = DST-II: odd-input negation in the
+/// scatter, reversed write in the gather; `scale` folded into the
+/// gather). Bit-identical to the facade path, which is retained as the
+/// differential oracle.
+pub fn fftu_execute_trig2_zigzag_batch_arena(
+    plan: &Arc<FftuPlan>,
+    arena: &ExecArena,
+    inputs: &[&[f64]],
+    dst: bool,
+    tables: &[Vec<C64>],
+    scale: f64,
+) -> (Vec<Vec<f64>>, CostReport) {
+    use crate::fft::trignd::trig_combine_flops;
+    let p = plan.num_procs();
+    debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
+    let session = arena.begin_session();
+    if session.is_none() {
+        let transient = ExecArena::new(p);
+        return fftu_execute_trig2_zigzag_batch_arena(plan, &transient, inputs, dst, tables, scale);
+    }
+    let outcome = run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(plan, rank);
+        let worker = slot.as_mut().expect("arena worker just initialized");
+        let mut outs = Vec::with_capacity(inputs.len());
+        for &global in inputs {
+            let mut local = vec![C64::ZERO; plan.local_len()];
+            plan.scatter_rank_into_trig2(global, rank, &mut local, dst);
+            worker.execute(ctx, &mut local, Direction::Forward);
+            zigzag::convert_between_cyclic_and_zigzag(
+                ctx,
+                plan,
+                &worker.s_coords,
+                &mut local,
+                &mut worker.pair_buf,
+            );
+            ctx.begin_comp("trig-combine");
+            ctx.charge_flops(trig_combine_flops(&plan.shape) / p as f64);
+            zigzag::trig2_combine_local(&mut local, plan, &worker.s_coords, tables);
+            outs.push(local);
+        }
+        outs
+    });
+    let mut results = vec![vec![0.0f64; plan.total()]; inputs.len()];
+    for (rank, rank_outs) in outcome.outputs.iter().enumerate() {
+        for (item, res) in rank_outs.iter().zip(results.iter_mut()) {
+            zigzag::gather_rank_zigzag_real_into(plan, item, rank, res, dst, scale);
+        }
+    }
+    (results, outcome.report)
+}
+
+/// Type-3 trig engine with **rank-local** phase passes: the raw real
+/// coefficients scatter straight into the zig-zag distribution
+/// ([`zigzag::scatter_rank_zigzag_real`]; `dst` = DST-III reads the
+/// reversed order), the phase passes run locally on co-located mirror
+/// pairs, the pairwise exchanges convert to cyclic, and the unchanged
+/// inverse core plus the Makhoul-composed gather finish the transform.
+/// Bit-identical to the facade path.
+pub fn fftu_execute_trig3_zigzag_batch_arena(
+    plan: &Arc<FftuPlan>,
+    arena: &ExecArena,
+    inputs: &[&[f64]],
+    dst: bool,
+    tables: &[Vec<C64>],
+    scale: f64,
+) -> (Vec<Vec<f64>>, CostReport) {
+    use crate::fft::trignd::trig_combine_flops;
+    let p = plan.num_procs();
+    debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
+    let session = arena.begin_session();
+    if session.is_none() {
+        let transient = ExecArena::new(p);
+        return fftu_execute_trig3_zigzag_batch_arena(plan, &transient, inputs, dst, tables, scale);
+    }
+    let outcome = run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(plan, rank);
+        let worker = slot.as_mut().expect("arena worker just initialized");
+        let mut outs = Vec::with_capacity(inputs.len());
+        for &global in inputs {
+            let mut local = vec![C64::ZERO; plan.local_len()];
+            zigzag::scatter_rank_zigzag_real(plan, global, rank, &mut local, dst);
+            ctx.begin_comp("trig-phase");
+            ctx.charge_flops(trig_combine_flops(&plan.shape) / p as f64);
+            zigzag::trig3_phase_local(&mut local, plan, &worker.s_coords, tables);
+            zigzag::convert_between_cyclic_and_zigzag(
+                ctx,
+                plan,
+                &worker.s_coords,
+                &mut local,
+                &mut worker.pair_buf,
+            );
+            worker.execute(ctx, &mut local, Direction::Inverse);
+            outs.push(local);
+        }
+        outs
+    });
+    let mut results = vec![vec![0.0f64; plan.total()]; inputs.len()];
+    for (rank, rank_outs) in outcome.outputs.iter().enumerate() {
+        for (item, res) in rank_outs.iter().zip(results.iter_mut()) {
+            plan.gather_rank_trig3_into(item, rank, res, dst, scale);
+        }
+    }
+    (results, outcome.report)
+}
+
+/// R2C engine with a **rank-local** untangle: the complex core runs on
+/// the packed half shape exactly as before (ONE all-to-all), then each
+/// rank swaps a copy of its core output with the conjugate partner
+/// `-s mod p` in one pairwise exchange ([`zigzag::mirror_swap`],
+/// ledger label `r2c-pairwise`) and untangles its own Hermitian bins
+/// locally ([`zigzag::untangle_rank_local`], charged in-SPMD as
+/// `r2c-untangle`). `plan` is the half-shape plan; `inputs` are the
+/// packed complex arrays; `tw` the `h + 1` untangle twiddles
+/// (`omega_{n_d}^k`), prebuilt by the caller. Returns the assembled
+/// numpy-layout half-spectra, bit-identical to the facade path.
+pub fn fftu_execute_r2c_pairwise_batch_arena(
+    plan: &Arc<FftuPlan>,
+    arena: &ExecArena,
+    real_shape: &[usize],
+    inputs: &[&[C64]],
+    tw: &[C64],
+) -> (Vec<Vec<C64>>, CostReport) {
+    use crate::fft::realnd::wrap_flops;
+    let p = plan.num_procs();
+    debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
+    let session = arena.begin_session();
+    if session.is_none() {
+        let transient = ExecArena::new(p);
+        return fftu_execute_r2c_pairwise_batch_arena(plan, &transient, real_shape, inputs, tw);
+    }
+    let outcome = run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(plan, rank);
+        let worker = slot.as_mut().expect("arena worker just initialized");
+        let extra_rows = zigzag::spectrum_extra_rows(plan, &worker.s_coords);
+        let mut outs = Vec::with_capacity(inputs.len());
+        // The core output is consumed by the untangle and not returned,
+        // so one scratch buffer serves the whole batch (`main`/`extra`
+        // are moved into the result and must be fresh per item).
+        let mut local = vec![C64::ZERO; plan.local_len()];
+        for &global in inputs {
+            plan.scatter_rank_into(global, rank, &mut local);
+            worker.execute(ctx, &mut local, Direction::Forward);
+            zigzag::mirror_swap(
+                ctx,
+                &plan.pgrid,
+                &worker.s_coords,
+                "r2c-pairwise",
+                &local,
+                &mut worker.mirror_buf,
+            );
+            ctx.begin_comp("r2c-untangle");
+            ctx.charge_flops(wrap_flops(real_shape) / p as f64);
+            let mut main = vec![C64::ZERO; plan.local_len()];
+            let mut extra = vec![C64::ZERO; extra_rows];
+            zigzag::untangle_rank_local(
+                plan,
+                &worker.s_coords,
+                &local,
+                &worker.mirror_buf,
+                tw,
+                &mut main,
+                &mut extra,
+            );
+            outs.push((main, extra));
+        }
+        outs
+    });
+    let d = plan.shape.len();
+    let h = plan.shape[d - 1];
+    let nspec = plan.total() / h * (h + 1);
+    let mut results = vec![vec![C64::ZERO; nspec]; inputs.len()];
+    for (rank, rank_outs) in outcome.outputs.iter().enumerate() {
+        let s_coords = plan.dist.proc_coords(rank);
+        for ((main, extra), res) in rank_outs.iter().zip(results.iter_mut()) {
+            zigzag::gather_rank_spectrum_into(plan, &s_coords, main, extra, res);
+        }
+    }
+    (results, outcome.report)
+}
+
+/// C2R engine with a **rank-local** retangle, the exact adjoint of
+/// [`fftu_execute_r2c_pairwise_batch_arena`]: each rank extracts its
+/// `[main | extra]` share of the half-spectrum, swaps a copy with the
+/// conjugate partner (`c2r-pairwise`), rebuilds its packed spectrum
+/// locally (`c2r-retangle`), and runs the unchanged inverse core.
+/// `tw` holds the `h` conjugated twiddles. Returns the gathered packed
+/// complex outputs; the caller unpacks pairs (with its scale), exactly
+/// as the facade does.
+pub fn fftu_execute_c2r_pairwise_batch_arena(
+    plan: &Arc<FftuPlan>,
+    arena: &ExecArena,
+    real_shape: &[usize],
+    inputs: &[&[C64]],
+    tw: &[C64],
+) -> (Vec<Vec<C64>>, CostReport) {
+    use crate::fft::realnd::wrap_flops;
+    let p = plan.num_procs();
+    debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
+    let session = arena.begin_session();
+    if session.is_none() {
+        let transient = ExecArena::new(p);
+        return fftu_execute_c2r_pairwise_batch_arena(plan, &transient, real_shape, inputs, tw);
+    }
+    let outcome = run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(plan, rank);
+        let worker = slot.as_mut().expect("arena worker just initialized");
+        let mut outs = Vec::with_capacity(inputs.len());
+        for &spec in inputs {
+            zigzag::scatter_rank_spectrum(plan, &worker.s_coords, spec, &mut worker.spec_buf);
+            zigzag::mirror_swap(
+                ctx,
+                &plan.pgrid,
+                &worker.s_coords,
+                "c2r-pairwise",
+                &worker.spec_buf,
+                &mut worker.mirror_buf,
+            );
+            ctx.begin_comp("c2r-retangle");
+            ctx.charge_flops(wrap_flops(real_shape) / p as f64);
+            let mut local = vec![C64::ZERO; plan.local_len()];
+            zigzag::retangle_rank_local(
+                plan,
+                &worker.s_coords,
+                &worker.spec_buf,
+                &worker.mirror_buf,
+                tw,
+                &mut local,
+            );
+            worker.execute(ctx, &mut local, Direction::Inverse);
+            outs.push(local);
+        }
+        outs
+    });
+    (plan.dist.gather_batch(&outcome.outputs), outcome.report)
 }
 
 /// Execute a prebuilt [`FftuPlan`] on a batch of global arrays in ONE

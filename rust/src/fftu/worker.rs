@@ -32,6 +32,22 @@ pub struct Worker {
     packets: Vec<Vec<C64>>,
     w: Vec<C64>,
     scratch: Vec<C64>,
+    /// Half-volume buffer for the cyclic <-> zig-zag axis conversions
+    /// ([`crate::fftu::zigzag::convert_between_cyclic_and_zigzag`]).
+    /// Lazily sized on first trig use; thereafter its allocation
+    /// circulates between partner ranks through the pairwise exchange,
+    /// so steady-state conversions allocate nothing. Workers that only
+    /// serve c2c transforms never pay for it.
+    pub pair_buf: Vec<C64>,
+    /// Conjugate-partner buffer of the r2c/c2r mirror exchange
+    /// ([`crate::fftu::zigzag::mirror_swap`]): holds this rank's copy
+    /// going out and the partner's coming back. Lazily sized, like
+    /// [`Self::pair_buf`].
+    pub mirror_buf: Vec<C64>,
+    /// The rank's own `[main | extra]` spectrum buffer of the c2r path
+    /// ([`crate::fftu::zigzag::scatter_rank_spectrum`]); kept across the
+    /// mirror exchange because the retangle needs both sides.
+    pub spec_buf: Vec<C64>,
 }
 
 impl Worker {
@@ -50,7 +66,17 @@ impl Worker {
             need = need.max(plan.axis_plans[l].scratch_len(chunk)).max(chunk);
         }
         let scratch = vec![C64::ZERO; need];
-        Worker { plan, s_coords, tables, packets, w, scratch }
+        Worker {
+            plan,
+            s_coords,
+            tables,
+            packets,
+            w,
+            scratch,
+            pair_buf: Vec::new(),
+            mirror_buf: Vec::new(),
+            spec_buf: Vec::new(),
+        }
     }
 
     /// Superstep 0: local multidimensional FFT + fused twiddle/pack.

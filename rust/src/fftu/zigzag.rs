@@ -1,0 +1,851 @@
+//! Rank-local trig combine and r2c untangle machinery: the zig-zag
+//! cyclic distribution and the conjugate pairwise exchange, applied to
+//! FFTU's cyclic core.
+//!
+//! The paper's communication-optimality argument extends to the real
+//! and trigonometric transforms (§6) only when the per-axis mirror
+//! pairs `k_l <-> (n_l - k_l) mod n_l` can be combined without a second
+//! all-to-all. Two facts make that work on top of the unchanged
+//! cyclic-to-cyclic core (Alg. 2.3):
+//!
+//! 1. **Mirrors pair ranks `s` and `-s mod p`.** Under the cyclic
+//!    distribution, the mirror of an index owned by rank coordinate
+//!    `s_l` is owned by `(p_l - s_l) mod p_l`. So the r2c untangle —
+//!    whose conjugate partner negates *every* axis at once — needs
+//!    exactly ONE pairwise swap with the fully negated rank
+//!    ([`mirror_partner_rank`], [`crate::bsp::Ctx::pairwise_exchange`]),
+//!    after which the pass is rank-local.
+//! 2. **Cyclic -> zig-zag is a pairwise swap of odd hyperplanes.**
+//!    The zig-zag cyclic distribution
+//!    ([`crate::dist::AxisDist::ZigZagCyclic`]) owns the residues
+//!    `{s_l, 2 p_l - s_l}` mod `2 p_l` — and under the cyclic layout
+//!    those are precisely rank `s_l`'s even local hyperplanes plus the
+//!    *partner's* odd ones. Converting between the two distributions
+//!    along one axis is therefore a single pairwise exchange of half
+//!    the local array with `(p_l - s_l) mod p_l`
+//!    ([`convert_between_cyclic_and_zigzag`]); axes with `p_l <= 2` are
+//!    identical in both distributions and cost nothing. The conversion
+//!    is an involution, so the same call converts back.
+//!
+//! After conversion, every per-axis quarter-wave pass (type-2 combine
+//! [`trig2_combine_local`], type-3 phase [`trig3_phase_local`]) runs on
+//! co-located mirror pairs — adjacent elements in local memory — with
+//! the *same arithmetic expressions* as the facade-level passes in
+//! [`crate::fft::trignd`], so the rank-local paths are bit-identical to
+//! the retained gathered-spectrum oracles (differential-tested).
+//!
+//! Everything here is allocation-free in steady state: odometers use
+//! stack buffers up to [`super::pack::MAX_PACK_DIMS`] axes (heap
+//! fallback beyond, like the strip packer), and the exchange buffers
+//! persist on the [`super::Worker`].
+
+use crate::api::FftError;
+use crate::bsp::Ctx;
+use crate::dist::zigzag_arms;
+use crate::fft::C64;
+
+use super::pack::MAX_PACK_DIMS;
+use super::plan::FftuPlan;
+
+/// A `[usize]` scratch buffer: stack-backed up to [`MAX_PACK_DIMS`]
+/// entries, heap beyond — the allocation-discipline idiom the strip
+/// packer and trig walks share.
+struct IdxBuf {
+    stack: [usize; MAX_PACK_DIMS],
+    heap: Vec<usize>,
+    d: usize,
+}
+
+impl IdxBuf {
+    fn zeros(d: usize) -> Self {
+        IdxBuf {
+            stack: [0; MAX_PACK_DIMS],
+            heap: if d > MAX_PACK_DIMS { vec![0; d] } else { Vec::new() },
+            d,
+        }
+    }
+
+    fn slice(&mut self) -> &mut [usize] {
+        if self.d > MAX_PACK_DIMS {
+            &mut self.heap
+        } else {
+            &mut self.stack[..self.d]
+        }
+    }
+}
+
+/// Rank whose coordinate vector negates `s_coords` on `axis` only —
+/// the partner of one per-axis conversion exchange.
+pub fn axis_partner_rank(pgrid: &[usize], s_coords: &[usize], axis: usize) -> usize {
+    debug_assert_eq!(pgrid.len(), s_coords.len());
+    let mut rank = 0usize;
+    for l in 0..pgrid.len() {
+        let c = if l == axis { (pgrid[l] - s_coords[l]) % pgrid[l] } else { s_coords[l] };
+        rank = rank * pgrid[l] + c;
+    }
+    rank
+}
+
+/// Rank whose coordinate vector negates `s_coords` on *every* axis —
+/// the conjugate partner of the r2c/c2r mirror exchange.
+pub fn mirror_partner_rank(pgrid: &[usize], s_coords: &[usize]) -> usize {
+    debug_assert_eq!(pgrid.len(), s_coords.len());
+    let mut rank = 0usize;
+    for l in 0..pgrid.len() {
+        rank = rank * pgrid[l] + (pgrid[l] - s_coords[l]) % pgrid[l];
+    }
+    rank
+}
+
+/// Validate the zig-zag trig requirement on top of the plan's own
+/// `p_l^2 | n_l`: every shared axis needs whole `2 p_l` periods so the
+/// mirror folding is balanced (`p_l <= 1` axes are local and free).
+/// Delegates to the distribution's own constructor, so the rule (and
+/// its error) has a single source of truth in [`crate::dist`].
+pub fn validate_zigzag_axes(shape: &[usize], pgrid: &[usize]) -> Result<(), FftError> {
+    crate::dist::GridDist::zigzag(shape, pgrid).map(|_| ())
+}
+
+/// Number of axes whose conversion actually exchanges data: `p_l >= 3`
+/// (for `p_l <= 2`, `-s = s mod p_l` for every coordinate, so zig-zag
+/// and cyclic coincide and the superstep is skipped entirely). Shared
+/// by the executors and the analytic cost model.
+pub fn exchange_axis_count(pgrid: &[usize]) -> usize {
+    pgrid.iter().filter(|&&p| p >= 3).count()
+}
+
+/// Convert this rank's local array between the cyclic and the zig-zag
+/// cyclic distribution, in place — one ledger-charged pairwise exchange
+/// of the odd-`t_l` hyperplanes (half the local volume) per axis with
+/// `p_l >= 3`. Self-paired ranks (`s_l` in `{0, p_l/2}`) keep their
+/// data and only synchronize. The operation is an involution: calling
+/// it again converts back, which is why the type-2 (cyclic core output
+/// -> zig-zag combine) and type-3 (zig-zag phase -> cyclic core input)
+/// paths share it.
+pub fn convert_between_cyclic_and_zigzag(
+    ctx: &mut Ctx,
+    plan: &FftuPlan,
+    s_coords: &[usize],
+    local: &mut [C64],
+    pair_buf: &mut Vec<C64>,
+) {
+    let d = plan.shape.len();
+    if exchange_axis_count(&plan.pgrid) == 0 {
+        return;
+    }
+    let half = local.len() / 2;
+    if pair_buf.len() != half {
+        pair_buf.resize(half, C64::ZERO);
+    }
+    for axis in 0..d {
+        let p = plan.pgrid[axis];
+        if p < 3 {
+            continue;
+        }
+        let s = s_coords[axis];
+        let partner = axis_partner_rank(&plan.pgrid, s_coords, axis);
+        if (p - s) % p == s {
+            // Self-paired in this axis: residues {s, s + p} fold back
+            // onto this rank, so the layout is already zig-zag here.
+            ctx.pairwise_exchange("zigzag-exchange", partner, pair_buf);
+            continue;
+        }
+        let lsz = plan.local_shape[axis];
+        debug_assert_eq!(lsz % 2, 0, "zig-zag conversion needs 2 p_l | n_l");
+        let stride: usize = plan.local_shape[axis + 1..].iter().product();
+        let outer: usize = plan.local_shape[..axis].iter().product();
+        let block = lsz * stride;
+        let mut pos = 0usize;
+        for o in 0..outer {
+            let base = o * block;
+            let mut t = 1usize;
+            while t < lsz {
+                let from = base + t * stride;
+                pair_buf[pos..pos + stride].copy_from_slice(&local[from..from + stride]);
+                pos += stride;
+                t += 2;
+            }
+        }
+        debug_assert_eq!(pos, half);
+        ctx.pairwise_exchange("zigzag-exchange", partner, pair_buf);
+        debug_assert_eq!(pair_buf.len(), half, "partner sent a differently sized half");
+        let mut pos = 0usize;
+        for o in 0..outer {
+            let base = o * block;
+            let mut t = 1usize;
+            while t < lsz {
+                let to = base + t * stride;
+                local[to..to + stride].copy_from_slice(&pair_buf[pos..pos + stride]);
+                pos += stride;
+                t += 2;
+            }
+        }
+    }
+}
+
+/// Iterate one zig-zag axis's local mirror pairs for rank coordinate
+/// `s`: calls `f(ta, tb, ka, kb)` once per unordered pair, where
+/// `ta`/`tb` are axis-local indices and `ka`/`kb` the corresponding
+/// global indices; self-mirrored positions come as `ta == tb`. Covers
+/// every local index exactly once across the calls.
+fn for_each_zigzag_axis_pair(
+    n: usize,
+    p: usize,
+    s: usize,
+    mut f: impl FnMut(usize, usize, usize, usize),
+) {
+    if p == 1 {
+        // Local axis: local index == global index, ordinary mirror.
+        f(0, 0, 0, 0);
+        let mut a = 1usize;
+        while 2 * a < n {
+            f(a, n - a, a, n - a);
+            a += 1;
+        }
+        if n % 2 == 0 && n > 1 {
+            f(n / 2, n / 2, n / 2, n / 2);
+        }
+        return;
+    }
+    let q_count = (n / p) / 2;
+    let (a0, a1) = zigzag_arms(p, s);
+    if s == 0 {
+        // Rank 0's arms are the self-mirrored residues {0, p}: the
+        // mirror preserves the slot. Slot 0: q <-> (Q - q) mod Q.
+        f(0, 0, 0, 0);
+        let mut q = 1usize;
+        while 2 * q <= q_count {
+            let qq = q_count - q;
+            let (ka, kb) = (2 * p * q + a0, 2 * p * qq + a0);
+            if qq == q {
+                f(2 * q, 2 * q, ka, ka);
+            } else {
+                f(2 * q, 2 * qq, ka, kb);
+            }
+            q += 1;
+        }
+        // Slot 1: q <-> Q - 1 - q (processed while q <= Q - 1 - q, i.e.
+        // 2q + 1 <= Q, so the subtraction never underflows).
+        let mut q = 0usize;
+        while 2 * q + 1 <= q_count {
+            let qq = q_count - 1 - q;
+            let (ka, kb) = (2 * p * q + a1, 2 * p * qq + a1);
+            if qq == q {
+                f(2 * q + 1, 2 * q + 1, ka, ka);
+            } else {
+                f(2 * q + 1, 2 * qq + 1, ka, kb);
+            }
+            q += 1;
+        }
+    } else {
+        // Generic ranks: the mirror flips the slot, q <-> Q - 1 - q;
+        // no self-mirrored positions.
+        for q in 0..q_count {
+            let qq = q_count - 1 - q;
+            f(2 * q, 2 * qq + 1, 2 * p * q + a0, 2 * p * qq + a1);
+        }
+    }
+}
+
+/// The type-2 quarter-wave combine, rank-local under the zig-zag
+/// distribution: per axis, `y_k = w_k V_k + conj(w_k) V_{(n-k) mod n}`
+/// with both operands on this rank. Arithmetic expressions match
+/// [`crate::fft::trignd`]'s `trig2_combine_axis` exactly (including the
+/// `v0 + v0` and self-mirror forms), so the result is bit-identical to
+/// the facade-level pass on the gathered array.
+pub fn trig2_combine_local(
+    local: &mut [C64],
+    plan: &FftuPlan,
+    s_coords: &[usize],
+    tables: &[Vec<C64>],
+) {
+    let d = plan.shape.len();
+    debug_assert_eq!(tables.len(), d);
+    for axis in 0..d {
+        let lsz = plan.local_shape[axis];
+        let stride: usize = plan.local_shape[axis + 1..].iter().product();
+        let outer: usize = plan.local_shape[..axis].iter().product();
+        let block = lsz * stride;
+        let w = &tables[axis];
+        for o in 0..outer {
+            let base = o * block;
+            for tt in 0..stride {
+                for_each_zigzag_axis_pair(
+                    plan.shape[axis],
+                    plan.pgrid[axis],
+                    s_coords[axis],
+                    |ta, tb, ka, kb| {
+                        let ia = base + ta * stride + tt;
+                        if ka == 0 {
+                            let v0 = local[ia];
+                            local[ia] = v0 + v0; // w_0 = 1, mirror of 0 is 0
+                        } else if ta == tb {
+                            let vm = local[ia];
+                            local[ia] = w[ka] * vm + w[ka].conj() * vm;
+                        } else {
+                            let ib = base + tb * stride + tt;
+                            let (va, vb) = (local[ia], local[ib]);
+                            local[ia] = w[ka] * va + w[ka].conj() * vb;
+                            local[ib] = w[kb] * vb + w[kb].conj() * va;
+                        }
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// The type-3 phase pass, rank-local under the zig-zag distribution:
+/// per axis, `V_k = w'_k (x_k - i x_{(n-k) mod n})` with `V_0 = x_0`
+/// (the `x_n := 0` convention). Bit-identical to the facade-level
+/// `trig3_phase_axis` for the same reasons as the combine.
+pub fn trig3_phase_local(
+    local: &mut [C64],
+    plan: &FftuPlan,
+    s_coords: &[usize],
+    tables: &[Vec<C64>],
+) {
+    let d = plan.shape.len();
+    debug_assert_eq!(tables.len(), d);
+    for axis in 0..d {
+        let lsz = plan.local_shape[axis];
+        let stride: usize = plan.local_shape[axis + 1..].iter().product();
+        let outer: usize = plan.local_shape[..axis].iter().product();
+        let block = lsz * stride;
+        let w = &tables[axis];
+        for o in 0..outer {
+            let base = o * block;
+            for tt in 0..stride {
+                for_each_zigzag_axis_pair(
+                    plan.shape[axis],
+                    plan.pgrid[axis],
+                    s_coords[axis],
+                    |ta, tb, ka, kb| {
+                        let ia = base + ta * stride + tt;
+                        if ka == 0 {
+                            // V_0 = x_0 unchanged.
+                        } else if ta == tb {
+                            let vm = local[ia];
+                            local[ia] = w[ka] * (vm - vm.mul_i());
+                        } else {
+                            let ib = base + tb * stride + tt;
+                            let (va, vb) = (local[ia], local[ib]);
+                            local[ia] = w[ka] * (va - vb.mul_i());
+                            local[ib] = w[kb] * (vb - va.mul_i());
+                        }
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Fill rank `rank`'s *zig-zag* local array from a global real input
+/// (the type-3 input scatter): local `2q + slot` on each inner row
+/// reads the global arm `2 p_d q + arm(slot)`, leading axes through the
+/// zig-zag owner maps. `reverse` (DST-III) reads the input with every
+/// axis reversed, i.e. from the reversed flat order. Allocation-free.
+pub fn scatter_rank_zigzag_real(
+    plan: &FftuPlan,
+    global: &[f64],
+    rank: usize,
+    out: &mut [C64],
+    reverse: bool,
+) {
+    let d = plan.shape.len();
+    let n_total = plan.total();
+    assert_eq!(global.len(), n_total, "zigzag scatter: global length mismatch");
+    assert_eq!(out.len(), plan.local_len(), "zigzag scatter: local length mismatch");
+    let mut gstride_buf = IdxBuf::zeros(d);
+    let gstride = gstride_buf.slice();
+    gstride[d - 1] = 1;
+    for l in (0..d.saturating_sub(1)).rev() {
+        gstride[l] = gstride[l + 1] * plan.shape[l + 1];
+    }
+    let mut s_buf = IdxBuf::zeros(d);
+    let s = s_buf.slice();
+    let mut rem = rank;
+    for l in (0..d).rev() {
+        s[l] = rem % plan.pgrid[l];
+        rem /= plan.pgrid[l];
+    }
+    let inner_n = plan.local_shape[d - 1];
+    let inner_p = plan.pgrid[d - 1];
+    let rows = plan.local_len() / inner_n;
+    let mut t_buf = IdxBuf::zeros(d);
+    let t = t_buf.slice();
+    let read = |g: usize| -> f64 {
+        if reverse {
+            global[n_total - 1 - g]
+        } else {
+            global[g]
+        }
+    };
+    for (row, chunk) in out.chunks_exact_mut(inner_n).enumerate() {
+        // Global base offset of this row (inner index 0).
+        let mut base = 0usize;
+        for l in 0..d - 1 {
+            let ax = crate::dist::AxisDist::ZigZagCyclic { p: plan.pgrid[l] };
+            base += ax.global_index(plan.shape[l], s[l], t[l]) * gstride[l];
+        }
+        if inner_p == 1 {
+            for (td, v) in chunk.iter_mut().enumerate() {
+                *v = C64::new(read(base + td), 0.0);
+            }
+        } else {
+            let (a0, a1) = zigzag_arms(inner_p, s[d - 1]);
+            let mut even = base + a0;
+            let mut odd = base + a1;
+            for pair in chunk.chunks_exact_mut(2) {
+                pair[0] = C64::new(read(even), 0.0);
+                pair[1] = C64::new(read(odd), 0.0);
+                even += 2 * inner_p;
+                odd += 2 * inner_p;
+            }
+        }
+        if row + 1 == rows {
+            break;
+        }
+        for l in (0..d - 1).rev() {
+            t[l] += 1;
+            if t[l] < plan.local_shape[l] {
+                break;
+            }
+            t[l] = 0;
+        }
+    }
+}
+
+/// Adjoint of [`scatter_rank_zigzag_real`] for the type-2 output: write
+/// rank `rank`'s combined zig-zag local array into the global real
+/// coefficient array, taking real parts scaled by `scale`; `reverse`
+/// (DST-II) writes through the reversed flat order. Ranks own disjoint
+/// index sets, so the driver calls this once per rank into one output.
+pub fn gather_rank_zigzag_real_into(
+    plan: &FftuPlan,
+    local: &[C64],
+    rank: usize,
+    out: &mut [f64],
+    reverse: bool,
+    scale: f64,
+) {
+    let d = plan.shape.len();
+    let n_total = plan.total();
+    assert_eq!(local.len(), plan.local_len(), "zigzag gather: local length mismatch");
+    assert_eq!(out.len(), n_total, "zigzag gather: global length mismatch");
+    let mut gstride_buf = IdxBuf::zeros(d);
+    let gstride = gstride_buf.slice();
+    gstride[d - 1] = 1;
+    for l in (0..d.saturating_sub(1)).rev() {
+        gstride[l] = gstride[l + 1] * plan.shape[l + 1];
+    }
+    let mut s_buf = IdxBuf::zeros(d);
+    let s = s_buf.slice();
+    let mut rem = rank;
+    for l in (0..d).rev() {
+        s[l] = rem % plan.pgrid[l];
+        rem /= plan.pgrid[l];
+    }
+    let inner_n = plan.local_shape[d - 1];
+    let inner_p = plan.pgrid[d - 1];
+    let rows = plan.local_len() / inner_n;
+    let mut t_buf = IdxBuf::zeros(d);
+    let t = t_buf.slice();
+    for (row, chunk) in local.chunks_exact(inner_n).enumerate() {
+        let mut base = 0usize;
+        for l in 0..d - 1 {
+            let ax = crate::dist::AxisDist::ZigZagCyclic { p: plan.pgrid[l] };
+            base += ax.global_index(plan.shape[l], s[l], t[l]) * gstride[l];
+        }
+        if inner_p == 1 {
+            for (td, z) in chunk.iter().enumerate() {
+                let g = base + td;
+                let at = if reverse { n_total - 1 - g } else { g };
+                out[at] = z.re * scale;
+            }
+        } else {
+            let (a0, a1) = zigzag_arms(inner_p, s[d - 1]);
+            let mut even = base + a0;
+            let mut odd = base + a1;
+            for pair in chunk.chunks_exact(2) {
+                let (ge, go) = if reverse {
+                    (n_total - 1 - even, n_total - 1 - odd)
+                } else {
+                    (even, odd)
+                };
+                out[ge] = pair[0].re * scale;
+                out[go] = pair[1].re * scale;
+                even += 2 * inner_p;
+                odd += 2 * inner_p;
+            }
+        }
+        if row + 1 == rows {
+            break;
+        }
+        for l in (0..d - 1).rev() {
+            t[l] += 1;
+            if t[l] < plan.local_shape[l] {
+                break;
+            }
+            t[l] = 0;
+        }
+    }
+}
+
+/// Copy `payload` into `buf` and swap it with the fully negated partner
+/// rank through one ledger-charged pairwise exchange. After the call
+/// `buf` holds the partner's payload (or this rank's own, when the rank
+/// is self-conjugate). Allocation-free in steady state: `buf` keeps the
+/// capacity that circulates between the pair.
+pub fn mirror_swap(
+    ctx: &mut Ctx,
+    pgrid: &[usize],
+    s_coords: &[usize],
+    label: &'static str,
+    payload: &[C64],
+    buf: &mut Vec<C64>,
+) {
+    let partner = mirror_partner_rank(pgrid, s_coords);
+    buf.clear();
+    buf.extend_from_slice(payload);
+    ctx.pairwise_exchange(label, partner, buf);
+}
+
+/// Extra half-spectrum rows this rank produces/consumes: ranks with
+/// last-axis coordinate 0 own the Nyquist bins `k_d = h` of their
+/// leading rows (one per inner row), everyone else none.
+pub fn spectrum_extra_rows(plan: &FftuPlan, s_coords: &[usize]) -> usize {
+    let d = plan.shape.len();
+    if s_coords[d - 1] == 0 {
+        plan.local_len() / plan.local_shape[d - 1]
+    } else {
+        0
+    }
+}
+
+/// Mirror of a local multi-index under the cyclic distribution: the
+/// global mirror `(n_l - k_l) mod n_l` of `k_l = t_l p_l + s_l` lives on
+/// rank `-s` at local index `(L_l - t_l - [s_l != 0]) mod L_l`. Returns
+/// the flat local offset on the partner.
+fn mirror_local_offset(local_shape: &[usize], s_coords: &[usize], t: &[usize]) -> usize {
+    let mut off = 0usize;
+    for l in 0..local_shape.len() {
+        let lsz = local_shape[l];
+        let shift = usize::from(s_coords[l] != 0);
+        let tm = (lsz - t[l] - shift) % lsz;
+        off = off * lsz + tm;
+    }
+    off
+}
+
+/// Rank-local r2c untangle under the cyclic distribution, after the
+/// [`mirror_swap`] of the core output: `local` is this rank's complex
+/// core output `z` on the packed half shape, `mirror` the conjugate
+/// partner's. Writes the rank's Hermitian half-spectrum bins into
+/// `main` (its cyclic positions, `k_d < h`) and — on ranks with
+/// `s_d = 0` — the Nyquist bins `k_d = h` into `extra` (one per inner
+/// row). `tw[k] = omega_{n_d}^k` for `k in 0..=h`, prebuilt at plan
+/// time. Expressions match [`crate::fft::realnd::untangle_half_spectrum`]
+/// exactly, so the assembled spectrum is bit-identical to the facade's.
+pub fn untangle_rank_local(
+    plan: &FftuPlan,
+    s_coords: &[usize],
+    local: &[C64],
+    mirror: &[C64],
+    tw: &[C64],
+    main: &mut [C64],
+    extra: &mut [C64],
+) {
+    let d = plan.shape.len();
+    let h = plan.shape[d - 1];
+    debug_assert_eq!(tw.len(), h + 1, "untangle twiddle table must have h + 1 entries");
+    assert_eq!(local.len(), plan.local_len());
+    assert_eq!(mirror.len(), plan.local_len());
+    assert_eq!(main.len(), plan.local_len());
+    assert_eq!(extra.len(), spectrum_extra_rows(plan, s_coords));
+    let inner_n = plan.local_shape[d - 1];
+    let inner_p = plan.pgrid[d - 1];
+    let s_last = s_coords[d - 1];
+    let mut t_buf = IdxBuf::zeros(d);
+    let t = t_buf.slice();
+    for (loff, slot) in main.iter_mut().enumerate() {
+        let k_last = t[d - 1] * inner_p + s_last;
+        let m_off = mirror_local_offset(&plan.local_shape, s_coords, t);
+        let zk = local[loff];
+        let zc = mirror[m_off].conj();
+        let e = (zk + zc).scale(0.5);
+        let odd = (zk - zc).scale(0.5).mul_neg_i();
+        *slot = e + tw[k_last] * odd;
+        if s_last == 0 && t[d - 1] == 0 {
+            // The Nyquist bin X[k', h] reads the same operands as
+            // X[k', 0] with the tw[h] twiddle.
+            extra[loff / inner_n] = e + tw[h] * odd;
+        }
+        for l in (0..d).rev() {
+            t[l] += 1;
+            if t[l] < plan.local_shape[l] {
+                break;
+            }
+            t[l] = 0;
+        }
+    }
+}
+
+/// Driver-side assembly of the numpy-layout half-spectrum
+/// (`[..., h + 1]` rows) from one rank's [`untangle_rank_local`]
+/// output. Ranks write disjoint bins.
+pub fn gather_rank_spectrum_into(
+    plan: &FftuPlan,
+    s_coords: &[usize],
+    main: &[C64],
+    extra: &[C64],
+    out: &mut [C64],
+) {
+    let d = plan.shape.len();
+    let h = plan.shape[d - 1];
+    let inner_n = plan.local_shape[d - 1];
+    let inner_p = plan.pgrid[d - 1];
+    let s_last = s_coords[d - 1];
+    let outer = plan.total() / h;
+    assert_eq!(out.len(), outer * (h + 1), "spectrum gather: output length mismatch");
+    let rows = plan.local_len() / inner_n;
+    let mut t_buf = IdxBuf::zeros(d);
+    let t = t_buf.slice();
+    // Row-major strides of the global *leading* index space.
+    let mut gstride_buf = IdxBuf::zeros(d);
+    let gstride = gstride_buf.slice();
+    if d >= 2 {
+        gstride[d - 2] = 1;
+        for l in (0..d - 1).rev().skip(1) {
+            gstride[l] = gstride[l + 1] * plan.shape[l + 1];
+        }
+    }
+    for (row, chunk) in main.chunks_exact(inner_n).enumerate() {
+        let mut o = 0usize;
+        for l in 0..d - 1 {
+            o += (t[l] * plan.pgrid[l] + s_coords[l]) * gstride[l];
+        }
+        let row_base = o * (h + 1);
+        for (td, z) in chunk.iter().enumerate() {
+            out[row_base + td * inner_p + s_last] = *z;
+        }
+        if s_last == 0 {
+            out[row_base + h] = extra[row];
+        }
+        if row + 1 == rows {
+            break;
+        }
+        for l in (0..d - 1).rev() {
+            t[l] += 1;
+            if t[l] < plan.local_shape[l] {
+                break;
+            }
+            t[l] = 0;
+        }
+    }
+}
+
+/// C2R input scatter: fill this rank's `[main | extra]` spectrum buffer
+/// from the global numpy-layout half-spectrum — `main` holds the rank's
+/// cyclic bins `k_d < h`, `extra` (ranks with `s_d = 0`) the Nyquist
+/// bins of its leading rows. The buffer is resized once (first call)
+/// and reused thereafter.
+pub fn scatter_rank_spectrum(
+    plan: &FftuPlan,
+    s_coords: &[usize],
+    spec: &[C64],
+    buf: &mut Vec<C64>,
+) {
+    let d = plan.shape.len();
+    let h = plan.shape[d - 1];
+    let inner_n = plan.local_shape[d - 1];
+    let inner_p = plan.pgrid[d - 1];
+    let s_last = s_coords[d - 1];
+    let outer = plan.total() / h;
+    assert_eq!(spec.len(), outer * (h + 1), "spectrum scatter: input length mismatch");
+    let llen = plan.local_len();
+    let extra_rows = spectrum_extra_rows(plan, s_coords);
+    let need = llen + extra_rows;
+    if buf.len() != need {
+        buf.resize(need, C64::ZERO);
+    }
+    let rows = llen / inner_n;
+    let mut t_buf = IdxBuf::zeros(d);
+    let t = t_buf.slice();
+    let mut gstride_buf = IdxBuf::zeros(d);
+    let gstride = gstride_buf.slice();
+    if d >= 2 {
+        gstride[d - 2] = 1;
+        for l in (0..d - 1).rev().skip(1) {
+            gstride[l] = gstride[l + 1] * plan.shape[l + 1];
+        }
+    }
+    for row in 0..rows {
+        let mut o = 0usize;
+        for l in 0..d - 1 {
+            o += (t[l] * plan.pgrid[l] + s_coords[l]) * gstride[l];
+        }
+        let row_base = o * (h + 1);
+        let dst = &mut buf[row * inner_n..(row + 1) * inner_n];
+        for (td, v) in dst.iter_mut().enumerate() {
+            *v = spec[row_base + td * inner_p + s_last];
+        }
+        if s_last == 0 {
+            buf[llen + row] = spec[row_base + h];
+        }
+        if row + 1 == rows {
+            break;
+        }
+        for l in (0..d - 1).rev() {
+            t[l] += 1;
+            if t[l] < plan.local_shape[l] {
+                break;
+            }
+            t[l] = 0;
+        }
+    }
+}
+
+/// Rank-local c2r retangle after the spectrum [`mirror_swap`]: rebuild
+/// this rank's packed complex spectrum `z` (cyclic local on the half
+/// shape) from its own `[main | extra]` spectrum buffer and the
+/// conjugate partner's. `tw[k] = conj(omega_{n_d}^k)` for `k in 0..h`.
+/// Expressions match [`crate::fft::realnd::retangle_half_spectrum`]
+/// exactly.
+pub fn retangle_rank_local(
+    plan: &FftuPlan,
+    s_coords: &[usize],
+    own: &[C64],
+    mirror: &[C64],
+    tw: &[C64],
+    z: &mut [C64],
+) {
+    let d = plan.shape.len();
+    let h = plan.shape[d - 1];
+    debug_assert_eq!(tw.len(), h, "retangle twiddle table must have h entries");
+    let llen = plan.local_len();
+    let inner_n = plan.local_shape[d - 1];
+    let inner_p = plan.pgrid[d - 1];
+    let s_last = s_coords[d - 1];
+    assert_eq!(own.len(), llen + spectrum_extra_rows(plan, s_coords));
+    assert_eq!(mirror.len(), own.len(), "mirror buffer length mismatch");
+    assert_eq!(z.len(), llen);
+    let mut t_buf = IdxBuf::zeros(d);
+    let t = t_buf.slice();
+    for (loff, slot) in z.iter_mut().enumerate() {
+        let k_last = t[d - 1] * inner_p + s_last;
+        let m_off = mirror_local_offset(&plan.local_shape, s_coords, t);
+        let xk = own[loff];
+        let xc = if k_last == 0 {
+            // Mirror bin is h: the partner's extra slot of the mirrored
+            // leading row (this rank has s_d = 0 here, so its partner
+            // does too and carries extras).
+            mirror[llen + m_off / inner_n].conj()
+        } else {
+            mirror[m_off].conj()
+        };
+        let e = (xk + xc).scale(0.5);
+        let odd = (xk - xc).scale(0.5) * tw[k_last];
+        *slot = e + odd.mul_i();
+        for l in (0..d).rev() {
+            t[l] += 1;
+            if t[l] < plan.local_shape[l] {
+                break;
+            }
+            t[l] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Planner;
+
+    #[test]
+    fn partner_ranks_negate_coordinates() {
+        let pgrid = [3usize, 4];
+        // rank (1, 3) -> axis-0 partner (2, 3), axis-1 partner (1, 1),
+        // mirror partner (2, 1).
+        let s = [1usize, 3];
+        assert_eq!(axis_partner_rank(&pgrid, &s, 0), 2 * 4 + 3);
+        assert_eq!(axis_partner_rank(&pgrid, &s, 1), 4 + 1); // (1, 1)
+        assert_eq!(mirror_partner_rank(&pgrid, &s), 2 * 4 + 1);
+        // Self-conjugate coordinates: 0 and p/2 map to themselves.
+        assert_eq!(mirror_partner_rank(&[2, 4], &[1, 2]), 4 + 2); // (1, 2)
+    }
+
+    #[test]
+    fn exchange_axis_count_skips_small_factors() {
+        assert_eq!(exchange_axis_count(&[1, 2, 2]), 0);
+        assert_eq!(exchange_axis_count(&[3, 2, 4]), 2);
+    }
+
+    #[test]
+    fn validate_zigzag_axes_requires_whole_periods() {
+        assert!(validate_zigzag_axes(&[12, 5], &[3, 1]).is_ok());
+        assert!(matches!(
+            validate_zigzag_axes(&[9, 8], &[3, 2]).unwrap_err(),
+            FftError::AxisConstraint { axis: 0, n: 9, p: 3, requires: "2 p_l | n_l (zig-zag)" }
+        ));
+    }
+
+    #[test]
+    fn zigzag_real_scatter_matches_dist_scatter() {
+        use crate::dist::GridDist;
+        let planner = Planner::new();
+        for (shape, grid) in [
+            (vec![36usize], vec![3usize]),
+            (vec![12, 36], vec![2, 3]),
+            (vec![5, 18], vec![1, 3]),
+            (vec![18, 6, 8], vec![3, 1, 2]),
+        ] {
+            let plan = FftuPlan::new(&shape, &grid, &planner).unwrap();
+            let n = plan.total();
+            let global: Vec<f64> = (0..n).map(|i| 1.5 * i as f64 - 3.0).collect();
+            let zz = GridDist::zigzag(&shape, &grid).unwrap();
+            for reverse in [false, true] {
+                let as_complex: Vec<C64> = if reverse {
+                    global.iter().rev().map(|&r| C64::new(r, 0.0)).collect()
+                } else {
+                    global.iter().map(|&r| C64::new(r, 0.0)).collect()
+                };
+                let want = zz.scatter(&as_complex);
+                for rank in 0..plan.num_procs() {
+                    let mut got = vec![C64::ZERO; plan.local_len()];
+                    scatter_rank_zigzag_real(&plan, &global, rank, &mut got, reverse);
+                    assert_eq!(got, want[rank], "rank {rank} {shape:?} rev={reverse}");
+                }
+                // And the gather writes back exactly.
+                let mut round = vec![0.0f64; n];
+                for (rank, local) in want.iter().enumerate() {
+                    gather_rank_zigzag_real_into(&plan, local, rank, &mut round, reverse, 1.0);
+                }
+                assert_eq!(round, global, "{shape:?} rev={reverse}");
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_local_offset_is_the_cyclic_mirror() {
+        // For every local element of every rank, the computed offset must
+        // address the global mirror's position on the conjugate rank.
+        use crate::dist::GridDist;
+        let shape = [12usize, 8];
+        let grid = [3usize, 2];
+        let dist = GridDist::cyclic(&shape, &grid).unwrap();
+        let lshape = [4usize, 4];
+        for rank in 0..dist.num_procs() {
+            let coords = dist.proc_coords(rank);
+            let partner = mirror_partner_rank(&grid, &coords);
+            for loff in 0..dist.local_len() {
+                let t = crate::dist::unravel(loff, &lshape);
+                let m_off = mirror_local_offset(&lshape, &coords, &t);
+                let g = dist.global_of(rank, loff);
+                let mg: Vec<usize> =
+                    g.iter().zip(&shape).map(|(&k, &n)| (n - k) % n).collect();
+                assert_eq!(dist.owner_of(&mg), (partner, m_off), "rank {rank} loff {loff}");
+            }
+        }
+    }
+}

@@ -93,12 +93,45 @@
 //! # Ok::<(), fftu::FftError>(())
 //! ```
 //!
+//! The real and trig kinds can additionally run their wrapper passes
+//! **rank-locally** ([`api::DistStrategy::ZigZag`], FFTU only): the
+//! quarter-wave combine moves to the zig-zag cyclic distribution —
+//! which co-locates every mirror pair `k <-> n_l - k` — via one
+//! pairwise exchange per shared axis, and the r2c/c2r untangle swaps
+//! one copy with the conjugate partner `-s mod p`. Outputs are
+//! bit-identical to the gathered (facade) paths above, which are
+//! retained as differential oracles:
+//!
+//! ```
+//! use fftu::api::{Algorithm, Kind, Transform};
+//!
+//! let x: Vec<f64> = (0..288).map(|i| (0.05 * i as f64).cos()).collect();
+//! let gathered = Transform::new(&[18, 16]).grid(&[3, 4]).kind(Kind::Dct2)
+//!     .plan(Algorithm::Fftu)?;
+//! let zz = Transform::new(&[18, 16]).grid(&[3, 4]).kind(Kind::Dct2).zigzag()
+//!     .plan(Algorithm::Fftu)?;
+//! let (a, b) = (gathered.execute_trig(&x)?, zz.execute_trig(&x)?);
+//! assert_eq!(a.output, b.output);          // bit-identical
+//! // Still exactly ONE all-to-all; the conversions are pairwise only.
+//! let alltoalls = b.report.supersteps.iter()
+//!     .filter(|s| s.label == "fftu-alltoall").count();
+//! assert_eq!(alltoalls, 1);
+//! # Ok::<(), fftu::FftError>(())
+//! ```
+//!
 //! Every fallible call returns the typed [`FftError`]; batched
 //! transforms (`Transform::batch`) run through one SPMD session with
 //! per-rank state built once. Long-lived applications that interleave
 //! local physics with transforms (see `examples/poisson.rs`,
 //! `examples/wavepacket.rs`) drop down to [`fftu::Worker`] and keep the
 //! same [`api::Normalization`] convention.
+//!
+//! A paper-to-code map — which theorem, equation, and algorithm of the
+//! paper lives where in this crate, including the zig-zag distribution
+//! and pairwise-exchange machinery above — is maintained in
+//! `docs/ARCHITECTURE.md` at the repository root. Start there when
+//! navigating from the paper; start in [`api`] when navigating from
+//! code.
 //!
 //! ## Performance architecture
 //!
@@ -186,7 +219,7 @@ pub mod runtime;
 pub mod testing;
 
 pub use api::{
-    Algorithm, CacheStats, DistFft, Execution, FftError, Grid, Kind, Normalization, PlanCache,
-    RealExecution, Transform,
+    Algorithm, CacheStats, DistFft, DistStrategy, Execution, FftError, Grid, Kind, Normalization,
+    PlanCache, RealExecution, Transform,
 };
 pub use fft::{C64, Direction};

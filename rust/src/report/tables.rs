@@ -257,6 +257,29 @@ pub fn comm_steps_table(shape: &[usize], p: usize, kind: Kind) -> Table {
         }
     };
     add("FFTU (same dist)", wrap(Some(fftu_report(core, p))));
+    if kind != Kind::C2C {
+        // The rank-local variant: zig-zag cyclic combine (trig) or the
+        // conjugate pairwise untangle (r2c/c2r). Its report is complete
+        // (pairwise supersteps included), so it is not wrapped. Only
+        // shown when the path is actually plannable: the trig kinds
+        // additionally need `2 p_l | n_l` on every shared axis, so a
+        // "-" here means the zig-zag strategy would be rejected.
+        let zz = choose_grid(core, p)
+            .filter(|g| {
+                kind.is_real_fft()
+                    || crate::fftu::zigzag::validate_zigzag_axes(shape, g).is_ok()
+            })
+            .map(|g| match kind {
+                Kind::R2C => crate::costmodel::fftu_r2c_zigzag_report(shape, &g),
+                Kind::C2R => crate::costmodel::fftu_c2r_zigzag_report(shape, &g),
+                k => crate::costmodel::fftu_trig_zigzag_report(
+                    shape,
+                    &g,
+                    matches!(k, Kind::Dct2 | Kind::Dst2),
+                ),
+            });
+        add("FFTU zig-zag (rank-local)", zz);
+    }
     add("FFTW-slab same", wrap(slab_report(core, p, true).ok()));
     add("FFTW-slab diff", wrap(slab_report(core, p, false).ok()));
     let r = pfft_rank_for(core, p);
@@ -318,6 +341,41 @@ mod tests {
         let h_c2c = n / 4096 - n / (4096 * 4096);
         assert!(c2c.contains(&h_c2c.to_string()), "{c2c}");
         assert!(r2c.contains(&(h_c2c / 2).to_string()), "{r2c}");
+    }
+
+    #[test]
+    fn comm_steps_zigzag_row_requires_feasibility() {
+        let zz_line = |table: &str| -> String {
+            table
+                .lines()
+                .find(|l| l.contains("zig-zag"))
+                .expect("zig-zag row missing")
+                .to_string()
+        };
+        // [9, 8] at p = 6 resolves to grid [3, 2]: the gathered trig
+        // path accepts it (3^2 | 9) but the zig-zag folding does not
+        // (6 does not divide 9) — the row must show "-", matching what
+        // the planner would do with the same descriptor.
+        let t = comm_steps_table(&[9, 8], 6, Kind::Dct2).render();
+        assert!(
+            zz_line(&t).split_whitespace().any(|tok| tok == "-"),
+            "infeasible zig-zag config must render '-':\n{t}"
+        );
+        // [18, 8] at the same grid is feasible: one all-to-all plus one
+        // pairwise exchange (axis 0 only; p = 2 axes convert for free).
+        let t = comm_steps_table(&[18, 8], 6, Kind::Dct2).render();
+        let line = zz_line(&t);
+        assert!(
+            !line.split_whitespace().any(|tok| tok == "-"),
+            "feasible zig-zag config must render numbers:\n{t}"
+        );
+        // R2C always qualifies (no folding constraint on the pairwise
+        // mirror swap).
+        let t = comm_steps_table(&[9, 8], 6, Kind::R2C).render();
+        assert!(
+            !zz_line(&t).split_whitespace().any(|tok| tok == "-"),
+            "r2c zig-zag row must always be priced:\n{t}"
+        );
     }
 
     #[test]

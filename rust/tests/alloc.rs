@@ -200,6 +200,174 @@ fn steady_state_trig_path_is_allocation_free() {
 }
 
 #[test]
+fn steady_state_zigzag_trig_path_is_allocation_free() {
+    let _serial = serial();
+    // The rank-local trig paths add three steps to the per-rank loop:
+    // the cyclic<->zig-zag conversions (pairwise exchanges through
+    // persistent pair buffers), the local combine/phase passes, and the
+    // zig-zag real scatter/gather walks. All must stay allocation-free
+    // once warm — the exchange buffers circulate between partner ranks
+    // by pointer swap, exactly like the all-to-all packets.
+    use fftu::fft::trignd::{trig2_tables, trig3_tables};
+    use fftu::fftu::zigzag;
+    let planner = Planner::new();
+    let shape = [18usize, 16];
+    let grid = [3usize, 4]; // p_l = 3: the conversion really exchanges
+    let plan = Arc::new(FftuPlan::new(&shape, &grid, &planner).unwrap());
+    let p = plan.num_procs();
+    let arena = ExecArena::new(p);
+    let n = plan.total();
+    let real: Vec<f64> = (0..n).map(|i| 0.25 * i as f64 - 7.0).collect();
+    let t2 = trig2_tables(&shape);
+    let t3 = trig3_tables(&shape);
+    run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(&plan, rank);
+        let worker = slot.as_mut().unwrap();
+        let mut local = vec![C64::ZERO; plan.local_len()];
+        let mut out_real = vec![0.0f64; plan.total()];
+        let mut round = |ctx: &mut fftu::bsp::Ctx, worker: &mut fftu::fftu::Worker| {
+            // Type 2: scatter (Makhoul), core, convert, combine, gather.
+            plan.scatter_rank_into_trig2(&real, rank, &mut local, true);
+            worker.execute(ctx, &mut local, Direction::Forward);
+            zigzag::convert_between_cyclic_and_zigzag(
+                ctx,
+                &plan,
+                &worker.s_coords,
+                &mut local,
+                &mut worker.pair_buf,
+            );
+            zigzag::trig2_combine_local(&mut local, &plan, &worker.s_coords, &t2);
+            zigzag::gather_rank_zigzag_real_into(&plan, &local, rank, &mut out_real, true, 0.5);
+            // Type 3: zig-zag scatter, phase, convert, inverse core.
+            zigzag::scatter_rank_zigzag_real(&plan, &real, rank, &mut local, true);
+            zigzag::trig3_phase_local(&mut local, &plan, &worker.s_coords, &t3);
+            zigzag::convert_between_cyclic_and_zigzag(
+                ctx,
+                &plan,
+                &worker.s_coords,
+                &mut local,
+                &mut worker.pair_buf,
+            );
+            worker.execute(ctx, &mut local, Direction::Inverse);
+            plan.gather_rank_trig3_into(&local, rank, &mut out_real, true, 0.5);
+        };
+        // Warm-up builds the pair buffer (and everything else) once.
+        round(ctx, worker);
+        ctx.ledger.reserve(32);
+        ctx.barrier();
+        if rank == 0 {
+            ALLOCS.store(0, Ordering::SeqCst);
+            REALLOCS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        round(ctx, worker);
+        ctx.barrier();
+        if rank == 0 {
+            COUNTING.store(false, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        std::hint::black_box(&out_real);
+    });
+    let count = ALLOCS.load(Ordering::SeqCst) + REALLOCS.load(Ordering::SeqCst);
+    assert_eq!(count, 0, "steady-state zigzag trig path allocated {count} times (18x16/[3,4])");
+}
+
+#[test]
+fn steady_state_pairwise_r2c_c2r_path_is_allocation_free() {
+    let _serial = serial();
+    // The rank-local untangle/retangle add the mirror exchange (copy +
+    // pairwise swap through persistent buffers) and the local
+    // untangle/retangle index walks. Warm once, then zero allocations.
+    use fftu::fftu::zigzag;
+    let planner = Planner::new();
+    let real_shape = [18usize, 8];
+    let half = [18usize, 4];
+    let grid = [3usize, 2];
+    let plan = Arc::new(FftuPlan::new(&half, &grid, &planner).unwrap());
+    let p = plan.num_procs();
+    let arena = ExecArena::new(p);
+    let nh = plan.total();
+    let packed: Vec<C64> = (0..nh).map(|i| C64::new(i as f64, -0.25 * i as f64)).collect();
+    let h = half[1];
+    let nspec = nh / h * (h + 1);
+    let spec: Vec<C64> = (0..nspec).map(|i| C64::new(0.5 * i as f64, 1.0)).collect();
+    let tw_fwd: Vec<C64> = (0..=h).map(|k| C64::root_of_unity(real_shape[1], k)).collect();
+    let tw_inv: Vec<C64> =
+        (0..h).map(|k| C64::root_of_unity(real_shape[1], k).conj()).collect();
+    run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(&plan, rank);
+        let worker = slot.as_mut().unwrap();
+        let extra_rows = zigzag::spectrum_extra_rows(&plan, &worker.s_coords);
+        let mut local = vec![C64::ZERO; plan.local_len()];
+        let mut main = vec![C64::ZERO; plan.local_len()];
+        let mut extra = vec![C64::ZERO; extra_rows];
+        let mut round = |ctx: &mut fftu::bsp::Ctx, worker: &mut fftu::fftu::Worker| {
+            // R2C: core, mirror swap, rank-local untangle.
+            plan.scatter_rank_into(&packed, rank, &mut local);
+            worker.execute(ctx, &mut local, Direction::Forward);
+            zigzag::mirror_swap(
+                ctx,
+                &plan.pgrid,
+                &worker.s_coords,
+                "r2c-pairwise",
+                &local,
+                &mut worker.mirror_buf,
+            );
+            zigzag::untangle_rank_local(
+                &plan,
+                &worker.s_coords,
+                &local,
+                &worker.mirror_buf,
+                &tw_fwd,
+                &mut main,
+                &mut extra,
+            );
+            // C2R: spectrum scatter, mirror swap, rank-local retangle,
+            // inverse core.
+            zigzag::scatter_rank_spectrum(&plan, &worker.s_coords, &spec, &mut worker.spec_buf);
+            zigzag::mirror_swap(
+                ctx,
+                &plan.pgrid,
+                &worker.s_coords,
+                "c2r-pairwise",
+                &worker.spec_buf,
+                &mut worker.mirror_buf,
+            );
+            zigzag::retangle_rank_local(
+                &plan,
+                &worker.s_coords,
+                &worker.spec_buf,
+                &worker.mirror_buf,
+                &tw_inv,
+                &mut local,
+            );
+            worker.execute(ctx, &mut local, Direction::Inverse);
+        };
+        round(ctx, worker);
+        ctx.ledger.reserve(32);
+        ctx.barrier();
+        if rank == 0 {
+            ALLOCS.store(0, Ordering::SeqCst);
+            REALLOCS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        round(ctx, worker);
+        ctx.barrier();
+        if rank == 0 {
+            COUNTING.store(false, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        std::hint::black_box((&main, &extra));
+    });
+    let count = ALLOCS.load(Ordering::SeqCst) + REALLOCS.load(Ordering::SeqCst);
+    assert_eq!(count, 0, "steady-state pairwise r2c/c2r path allocated {count} times");
+}
+
+#[test]
 fn first_execute_does_allocate_sanity_check() {
     let _serial = serial();
     // Sanity check that the counter actually observes the engine: the

@@ -16,7 +16,10 @@ use std::sync::Arc;
 use fftu::api::{plan, Algorithm, Kind, Normalization, PlanCache, PlannedFft, Transform};
 use fftu::baselines::{pencil_global, slab_global, OutputDist};
 use fftu::bsp::{redistribute, run_spmd, SuperstepKind};
-use fftu::costmodel::{fftu_r2c_report, fftu_report, fftu_trig_report, pencil_report, slab_report};
+use fftu::costmodel::{
+    fftu_c2r_zigzag_report, fftu_r2c_report, fftu_r2c_zigzag_report, fftu_report,
+    fftu_trig_report, fftu_trig_zigzag_report, pencil_report, slab_report,
+};
 use fftu::dist::{analytic_h, AxisDist, GridDist, RedistPlan};
 use fftu::fft::C64;
 use fftu::fftu::fftu_r2c_global;
@@ -194,6 +197,129 @@ fn prop_fftu_trig_ledger_single_superstep_matches_analytic() {
         // unhalved.
         for h in comm_h(&executed) {
             prop_assert!(h <= n / p, "{kind:?} {shape:?}: h {h} > N/p = {}", n / p);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fftu_zigzag_trig_ledger_matches_analytic_exactly() {
+    forall("fftu zigzag trig: executed == analytic, ONE all-to-all, h <= N/p", 10, 0x141F, |rng| {
+        // Axis rule for the zig-zag trig paths: p_l^2 | n_l AND
+        // 2 p_l | n_l; n_l = 2 g^2 m satisfies both for p_l = g.
+        let d = rng.range(1, 2);
+        let mut shape = Vec::new();
+        let mut grid = Vec::new();
+        for _ in 0..d {
+            let g = rng.range(1, 3);
+            shape.push(2 * g * g * rng.range(1, 3));
+            grid.push(g);
+        }
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let kind = *rng.choose(&[Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3]);
+        let type2 = matches!(kind, Kind::Dct2 | Kind::Dst2);
+        let planned =
+            plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(kind).zigzag())
+                .map_err(String::from)?;
+        let executed = planned.execute_trig(&x)?.report;
+        let analytic = fftu_trig_zigzag_report(&shape, &grid, type2);
+        // The executed ledger must equal the analytic report exactly:
+        // same superstep sequence, same h on every communication entry.
+        prop_assert!(
+            analytic.supersteps.len() == executed.supersteps.len(),
+            "{kind:?} {shape:?} {grid:?}: {} vs {} supersteps",
+            executed.supersteps.len(),
+            analytic.supersteps.len()
+        );
+        for (a, e) in analytic.supersteps.iter().zip(&executed.supersteps) {
+            prop_assert!(a.kind == e.kind && a.label == e.label, "{kind:?} {shape:?}: order");
+            prop_assert!(
+                a.h_max == e.h_max,
+                "{kind:?} {shape:?} {}: h {} vs {}",
+                a.label,
+                e.h_max,
+                a.h_max
+            );
+        }
+        // Exactly ONE all-to-all; every other communication superstep is
+        // a pairwise exchange of at most half the local array.
+        let alltoalls =
+            executed.supersteps.iter().filter(|s| s.label == "fftu-alltoall").count();
+        prop_assert!(alltoalls == 1, "{kind:?} {shape:?}: {alltoalls} all-to-alls");
+        for s in &executed.supersteps {
+            if s.kind == SuperstepKind::Communication {
+                prop_assert!(s.h_max <= n / p, "{kind:?} {shape:?}: h {} > N/p", s.h_max);
+                if s.label != "fftu-alltoall" {
+                    prop_assert!(
+                        s.label == "zigzag-exchange" && s.h_max <= n / p / 2,
+                        "{kind:?} {shape:?}: pairwise {} h {}",
+                        s.label,
+                        s.h_max
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fftu_zigzag_r2c_c2r_ledger_matches_analytic_exactly() {
+    forall("fftu zigzag r2c/c2r: executed == analytic, h <= (N/2)/p + rows", 10, 0x1420, |rng| {
+        // The half shape must satisfy p_l^2 | n_l/p... i.e. p_l^2 | h_l;
+        // the last real axis doubles its half.
+        let d = rng.range(1, 2);
+        let mut shape = Vec::new();
+        let mut grid = Vec::new();
+        for l in 0..d {
+            let g = rng.range(1, 3);
+            let mut n = g * g * rng.range(1, 3);
+            if l == d - 1 {
+                n *= 2;
+            }
+            shape.push(n);
+            grid.push(g);
+        }
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+        let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag())
+            .map_err(String::from)?;
+        let executed = fwd.execute_r2c(&x)?.report;
+        let analytic = fftu_r2c_zigzag_report(&shape, &grid);
+        prop_assert!(
+            comm_h(&executed) == comm_h(&analytic),
+            "r2c {shape:?} {grid:?}: {:?} vs {:?}",
+            comm_h(&executed),
+            comm_h(&analytic)
+        );
+        let alltoalls =
+            executed.supersteps.iter().filter(|s| s.label == "fftu-alltoall").count();
+        prop_assert!(alltoalls == 1, "r2c {shape:?}: {alltoalls} all-to-alls");
+        // Theorem 2.1-style bound: every communication superstep stays
+        // within the halved volume (the pairwise swap moves exactly the
+        // local array).
+        for h in comm_h(&executed) {
+            prop_assert!(h <= n / 2 / p, "r2c {shape:?}: h {h} > (N/2)/p");
+        }
+        // C2R: the pairwise payload may add the Nyquist rows.
+        let spec = fwd.execute_r2c(&x)?.output;
+        let inv = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).c2r().zigzag())
+            .map_err(String::from)?;
+        let executed = inv.execute_c2r(&spec)?.report;
+        let analytic = fftu_c2r_zigzag_report(&shape, &grid);
+        prop_assert!(
+            comm_h(&executed) == comm_h(&analytic),
+            "c2r {shape:?} {grid:?}: {:?} vs {:?}",
+            comm_h(&executed),
+            comm_h(&analytic)
+        );
+        let half_local = n / 2 / p;
+        let rows = half_local / (shape[d - 1] / 2 / grid[d - 1]).max(1);
+        for h in comm_h(&executed) {
+            prop_assert!(h <= half_local + rows, "c2r {shape:?}: h {h} too large");
         }
         Ok(())
     });

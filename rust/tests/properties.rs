@@ -366,6 +366,95 @@ fn prop_fftu_single_alltoall_for_all_kinds_and_batches() {
     });
 }
 
+#[test]
+fn prop_zigzag_trig_round_trips_and_matches_sequential() {
+    forall("zigzag trig: type3 ∘ type2 == prod(2 n_l) id, == sequential", 10, 0x1D0A, |rng| {
+        // Zig-zag trig axes need p_l^2 | n_l AND 2 p_l | n_l; n_l =
+        // 2 g^2 m satisfies both with p_l = g (and exercises p_l = 3,
+        // where the conversion really exchanges).
+        let d = rng.range(1, 2);
+        let mut shape = Vec::with_capacity(d);
+        let mut grid = Vec::with_capacity(d);
+        for _ in 0..d {
+            let g = rng.range(1, 3);
+            shape.push(2 * g * g * rng.range(1, 3));
+            grid.push(g);
+        }
+        let n: usize = shape.iter().product();
+        let x = rand_real(n, rng);
+        let scale: f64 = shape.iter().map(|&nl| 2.0 * nl as f64).product();
+        for (fwd_kind, inv_kind, seq) in [
+            (Kind::Dct2, Kind::Dct3, dctn2(&x, &shape)),
+            (Kind::Dst2, Kind::Dst3, dstn2(&x, &shape)),
+        ] {
+            let fwd = plan(
+                Algorithm::Fftu,
+                &Transform::new(&shape).grid(&grid).kind(fwd_kind).zigzag(),
+            )
+            .map_err(String::from)?;
+            let coeff = fwd.execute_trig(&x)?;
+            let err =
+                coeff.output.iter().zip(&seq).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            prop_assert!(
+                err < 1e-8 * n as f64,
+                "{fwd_kind:?} {shape:?} {grid:?} vs sequential: {err}"
+            );
+            let inv = plan(
+                Algorithm::Fftu,
+                &Transform::new(&shape).grid(&grid).kind(inv_kind).zigzag(),
+            )
+            .map_err(String::from)?;
+            let back = inv.execute_trig(&coeff.output)?;
+            let err = x
+                .iter()
+                .zip(&back.output)
+                .map(|(a, b)| (b / scale - a).abs())
+                .fold(0.0, f64::max);
+            prop_assert!(err < 1e-9 * n as f64, "{fwd_kind:?} {shape:?} roundtrip: {err}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zigzag_r2c_c2r_round_trips() {
+    forall("zigzag r2c/c2r: irfftn ∘ rfftn == id, rank-local passes", 10, 0x1D0B, |rng| {
+        let d = rng.range(1, 2);
+        let mut shape = Vec::with_capacity(d);
+        let mut grid = Vec::with_capacity(d);
+        for l in 0..d {
+            let g = rng.range(1, 3);
+            let mut n = g * g * rng.range(1, 3);
+            if l == d - 1 {
+                n *= 2;
+            }
+            shape.push(n);
+            grid.push(g);
+        }
+        let n: usize = shape.iter().product();
+        let x = rand_real(n, rng);
+        let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag())
+            .map_err(String::from)?;
+        let spec = fwd.execute_r2c(&x)?;
+        let want = rfftn(&x, &shape);
+        let err = rel_l2_error(&spec.output, &want);
+        prop_assert!(err < 1e-9, "zigzag r2c {shape:?} {grid:?} vs rfftn: {err}");
+        let inv = plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape)
+                .grid(&grid)
+                .c2r()
+                .normalization(Normalization::ByN)
+                .zigzag(),
+        )
+        .map_err(String::from)?;
+        let back = inv.execute_c2r(&spec.output)?;
+        let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        prop_assert!(err < 1e-9, "zigzag c2r {shape:?} {grid:?} roundtrip: {err}");
+        Ok(())
+    });
+}
+
 /// The properties above randomize d in 1..=3; pin a 4D case as well so
 /// the suite demonstrably covers > 3 dimensions for both kinds.
 #[test]
