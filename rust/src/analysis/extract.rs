@@ -1,0 +1,137 @@
+//! Plan -> schedule extraction: narrate, per rank, the exact superstep
+//! events each executor will emit, reading only plan metadata (packet
+//! lengths, compiled redistribution send matrices, partner maps). The
+//! event orders below mirror the executor bodies in `fftu/mod.rs`,
+//! `fftu/zigzag.rs`, and `baselines/*` one-for-one; the flow lint then
+//! checks them against the analytic cost model, so a drift between an
+//! executor and its extraction shows up as a lint violation in the
+//! `analysis` test sweep.
+//!
+//! Everything here is `O(d · p)` per rank (the redistribution helpers
+//! read precompiled placement lengths, never payload).
+
+use crate::baselines::{HefftePlan, OutputDist, PencilPlan, PopoviciPlan, SlabPlan};
+use crate::dist::RedistPlan;
+use crate::fftu::{zigzag, FftuPlan};
+
+use super::RecordingCtx;
+
+/// Alg. 2.3 / 3.1 core: superstep 0 (local FFTs + twiddle), the single
+/// all-to-all, superstep 2 (strided FFTs). The send count to *every*
+/// rank — self included, matching the packet layout — is the plan's
+/// packet length; the lints and the exchange both skip the self entry
+/// when charging.
+pub fn fftu_core(rec: &mut RecordingCtx, plan: &FftuPlan) {
+    let p = plan.num_procs();
+    rec.begin_comp("fftu-superstep0");
+    rec.exchange("fftu-alltoall", vec![plan.packet_len(); p]);
+    rec.begin_comp("fftu-superstep2");
+}
+
+/// Zig-zag <-> cyclic conversion (`convert_between_cyclic_and_zigzag`):
+/// no events at all when no axis has `p_l >= 3`; otherwise one pairwise
+/// exchange per such axis in increasing axis order, each moving half the
+/// local array — or 0 words for a rank that is its own partner on that
+/// axis (it still synchronizes).
+pub fn zigzag_convert(rec: &mut RecordingCtx, plan: &FftuPlan) {
+    if zigzag::exchange_axis_count(&plan.pgrid) == 0 {
+        return;
+    }
+    let s_coords = plan.dist.proc_coords(rec.rank());
+    let half = plan.local_len() / 2;
+    for (axis, &q) in plan.pgrid.iter().enumerate() {
+        if q < 3 {
+            continue;
+        }
+        let partner = zigzag::axis_partner_rank(&plan.pgrid, &s_coords, axis);
+        let words = if partner == rec.rank() { 0 } else { half };
+        rec.pairwise_exchange("zigzag-exchange", partner, words);
+    }
+}
+
+/// Conjugate mirror swap (`zigzag::mirror_swap`): the r2c path swaps the
+/// whole local core output with the mirror rank; the c2r path also
+/// carries the Nyquist/DC extra rows (`with_extra_rows`). Self-conjugate
+/// ranks synchronize only.
+pub fn mirror_swap(
+    rec: &mut RecordingCtx,
+    plan: &FftuPlan,
+    label: &'static str,
+    with_extra_rows: bool,
+) {
+    let s_coords = plan.dist.proc_coords(rec.rank());
+    let partner = zigzag::mirror_partner_rank(&plan.pgrid, &s_coords);
+    let mut payload = plan.local_len();
+    if with_extra_rows {
+        payload += zigzag::spectrum_extra_rows(plan, &s_coords);
+    }
+    let words = if partner == rec.rank() { 0 } else { payload };
+    rec.pairwise_exchange(label, partner, words);
+}
+
+/// One compiled redistribution as a collective: this rank's exact
+/// per-destination word counts come straight off the compiled placement
+/// tables ([`RedistPlan::send_counts`]).
+pub fn redist(rec: &mut RecordingCtx, label: &'static str, plan: &RedistPlan) {
+    let counts = plan.send_counts(rec.rank());
+    rec.exchange(label, counts);
+}
+
+/// Slab pipeline: local axes, the global transpose, axis 0, and (same-
+/// distribution output only) the transpose back.
+pub fn slab(rec: &mut RecordingCtx, plan: &SlabPlan) {
+    rec.begin_comp("slab-local-axes");
+    redist(rec, "slab-transpose", plan.transpose_plan());
+    rec.begin_comp("slab-axis0");
+    if plan.output_dist() == OutputDist::Same {
+        redist(rec, "slab-transpose-back", plan.back_plan());
+    }
+}
+
+/// PFFT-style r-dimensional decomposition: initial local axes, then one
+/// (transpose, stage-axes) pair per redistribution stage, then the
+/// optional transpose back.
+pub fn pencil(rec: &mut RecordingCtx, plan: &PencilPlan) {
+    rec.begin_comp("pencil-local-axes");
+    for stage in plan.redist_plans() {
+        redist(rec, "pencil-transpose", stage);
+        rec.begin_comp("pencil-stage-axes");
+    }
+    if plan.output_dist() == OutputDist::Same {
+        redist(rec, "pencil-transpose-back", plan.back_plan());
+    }
+}
+
+/// heFFTe brick-to-brick pipeline: one (reshape, axis transform) pair
+/// per stage, then the reshape back out to bricks.
+pub fn heffte(rec: &mut RecordingCtx, plan: &HefftePlan) {
+    let redists = plan.redist_plans();
+    let stages = plan.stage_axes().len();
+    for stage in &redists[..stages] {
+        redist(rec, "heffte-reshape", stage);
+        rec.begin_comp("heffte-axis");
+    }
+    redist(rec, "heffte-reshape-out", &redists[stages]);
+}
+
+/// Popovici-style cyclic d-step pipeline: per axis, a local-FFT
+/// superstep, an all-to-all along that axis' grid row (packets only to
+/// the `p_l` ranks sharing all other coordinates), and a strided-FFT
+/// superstep.
+pub fn popovici(rec: &mut RecordingCtx, plan: &PopoviciPlan) {
+    let dist = plan.input_dist();
+    let p = dist.num_procs();
+    let coords = dist.proc_coords(rec.rank());
+    for (l, &p_l) in plan.pgrid().iter().enumerate() {
+        rec.begin_comp("popovici-local-fft");
+        let mut counts = vec![0usize; p];
+        let packet = plan.axis_packet_len(l);
+        for k in 0..p_l {
+            let mut tc = coords.clone();
+            tc[l] = k;
+            counts[dist.proc_rank(&tc)] = packet;
+        }
+        rec.exchange("popovici-alltoall", counts);
+        rec.begin_comp("popovici-strided-fft");
+    }
+}

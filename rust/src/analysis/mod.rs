@@ -1,0 +1,770 @@
+//! Static BSP protocol verifier: data-independent communication
+//! schedules extracted from compiled plans, checked by a lint suite.
+//!
+//! The paper's headline guarantees — ONE all-to-all communication
+//! superstep (Alg. 3.1), start-and-end in the same distribution, and
+//! `h <= N/p` (Thm 2.1) — were previously enforced only dynamically, by
+//! executing plans and comparing ledgers. This module turns them into
+//! *static* properties: every compiled plan yields a per-rank sequence
+//! of typed superstep [`Event`]s (a [`Schedule`]) recorded through a
+//! [`RecordingCtx`] that mirrors [`crate::bsp::Ctx`]'s call surface but
+//! touches no payload — extraction is `O(d · p)` per rank, like
+//! [`crate::dist::analytic_h`]. The schedule is then checked by
+//! [`verify`] against five lints (MPI-style collective matching and
+//! friends, [`Lint`]) and against the analytic cost model
+//! ([`crate::costmodel`]) superstep-for-superstep.
+//!
+//! Surfaces: [`crate::api::PlannedFft::analyze`] on the facade,
+//! `cli analyze` for any (algorithm, kind, dist, grid), and the
+//! `rust/tests/analysis.rs` sweep plus seeded-mutation tests proving
+//! each lint fires. The dynamic checkers the schedule cannot cover live
+//! in [`interleave`] (exhaustive in-repo interleaving exploration of the
+//! mailbox protocol) and the `cfg(loom)` models in `bsp/machine.rs`.
+
+pub mod extract;
+pub mod interleave;
+
+use std::fmt::Write as _;
+
+use crate::bsp::{CostReport, SuperstepKind};
+
+/// Session label of the FFTU execution arena
+/// ([`crate::fftu::ExecArena`]).
+pub const EXEC_ARENA: &str = "fftu-exec-arena";
+
+/// Session label of the baselines' scratch arena
+/// (`crate::baselines::ScratchArena`).
+pub const SCRATCH_ARENA: &str = "baseline-scratch-arena";
+
+/// One typed superstep event in a rank's data-independent schedule.
+///
+/// `Compute`/`AllToAll`/`Pairwise` mirror the three ways executors talk
+/// to [`crate::bsp::Ctx`] (`begin_comp`, `exchange`/`exchange_swap`,
+/// `pairwise_exchange`); `Barrier` models a bare synchronization; the
+/// `Session*` markers model arena leases ([`crate::fftu::ExecArena`] /
+/// the baselines' scratch arena), which the session-safety lint checks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Computation superstep.
+    Compute { label: &'static str },
+    /// Collective all-to-all: `send_counts[t]` is the exact number of
+    /// words this rank routes to rank `t` (the self entry is carried for
+    /// completeness; the exchange never charges it and neither do the
+    /// lints).
+    AllToAll { label: &'static str, send_counts: Vec<usize> },
+    /// Pairwise exchange with `partner`; `words` is what this rank
+    /// sends (0 for a self-paired rank, which synchronizes only).
+    Pairwise { label: &'static str, partner: usize, words: usize },
+    /// Barrier-only synchronization superstep.
+    Barrier { label: &'static str },
+    /// This rank's driver leased the named arena.
+    SessionBegin { arena: &'static str },
+    /// The lease on the named arena was released.
+    SessionEnd { arena: &'static str },
+}
+
+impl Event {
+    /// The event's ledger label (arena name for the session markers).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Event::Compute { label }
+            | Event::AllToAll { label, .. }
+            | Event::Pairwise { label, .. }
+            | Event::Barrier { label } => label,
+            Event::SessionBegin { arena } | Event::SessionEnd { arena } => arena,
+        }
+    }
+
+    /// Short kind tag used in rendered tables and lint messages.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Event::Compute { .. } => "compute",
+            Event::AllToAll { .. } => "all-to-all",
+            Event::Pairwise { .. } => "pairwise",
+            Event::Barrier { .. } => "barrier",
+            Event::SessionBegin { .. } => "session+",
+            Event::SessionEnd { .. } => "session-",
+        }
+    }
+
+    /// True for the two communication event kinds.
+    pub fn is_comm(&self) -> bool {
+        matches!(self, Event::AllToAll { .. } | Event::Pairwise { .. })
+    }
+
+    /// Collective-matching equivalence: same kind and same label. The
+    /// payload details (send counts, partner) are *allowed* to differ
+    /// across ranks — that is what the flow and symmetry lints check.
+    fn same_shape(&self, other: &Event) -> bool {
+        std::mem::discriminant(self) == std::mem::discriminant(other)
+            && self.label() == other.label()
+    }
+
+    /// One-line rendering for the per-rank tables.
+    fn describe(&self) -> String {
+        match self {
+            Event::Compute { label } => format!("C({label})"),
+            Event::AllToAll { label, send_counts } => {
+                let out: usize = send_counts.iter().sum::<usize>();
+                format!("A2A({label} out={out})")
+            }
+            Event::Pairwise { label, partner, words } => {
+                format!("PW({label} <->{partner} words={words})")
+            }
+            Event::Barrier { label } => format!("B({label})"),
+            Event::SessionBegin { arena } => format!("S+({arena})"),
+            Event::SessionEnd { arena } => format!("S-({arena})"),
+        }
+    }
+}
+
+/// A per-rank event-sequence schedule: `ranks[s]` is the exact sequence
+/// of supersteps rank `s` will execute, in order. Extracted from plan
+/// metadata only — no payload exists when it is built.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Per-rank event sequences; mutable on purpose so the
+    /// seeded-mutation tests can break a recorded schedule and prove the
+    /// lints fire.
+    pub ranks: Vec<Vec<Event>>,
+}
+
+impl Schedule {
+    /// Record a schedule by running `body` once per rank with a
+    /// [`RecordingCtx`] — the schedule analogue of
+    /// [`crate::bsp::run_spmd`], except nothing executes: `body` only
+    /// narrates the events the real SPMD program would emit.
+    pub fn record(p: usize, mut body: impl FnMut(&mut RecordingCtx)) -> Schedule {
+        let mut ranks = Vec::with_capacity(p);
+        for rank in 0..p {
+            let mut rec = RecordingCtx { rank, p, events: Vec::new() };
+            body(&mut rec);
+            ranks.push(rec.events);
+        }
+        Schedule { ranks }
+    }
+
+    /// Processor count the schedule was recorded for.
+    pub fn nprocs(&self) -> usize {
+        self.ranks.len()
+    }
+}
+
+/// The recording counterpart of [`crate::bsp::Ctx`]: the same call
+/// shape (`begin_comp`, `exchange`, `pairwise_exchange`, `barrier`) plus
+/// arena-session markers, but calls append typed [`Event`]s instead of
+/// moving data. Extraction code reads plan metadata (packet lengths,
+/// compiled redistribution send matrices, partner maps) and narrates.
+#[derive(Debug)]
+pub struct RecordingCtx {
+    rank: usize,
+    p: usize,
+    events: Vec<Event>,
+}
+
+impl RecordingCtx {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.p
+    }
+
+    /// Record a computation superstep (mirrors `Ctx::begin_comp`).
+    pub fn begin_comp(&mut self, label: &'static str) {
+        self.events.push(Event::Compute { label });
+    }
+
+    /// Record a collective all-to-all with this rank's exact per-
+    /// destination word counts (mirrors `Ctx::exchange_swap`).
+    pub fn exchange(&mut self, label: &'static str, send_counts: Vec<usize>) {
+        assert_eq!(
+            send_counts.len(),
+            self.p,
+            "send_counts must have one entry per rank"
+        );
+        self.events.push(Event::AllToAll { label, send_counts });
+    }
+
+    /// Record a pairwise exchange (mirrors `Ctx::pairwise_exchange`).
+    pub fn pairwise_exchange(&mut self, label: &'static str, partner: usize, words: usize) {
+        self.events.push(Event::Pairwise { label, partner, words });
+    }
+
+    /// Record a bare barrier (mirrors `Ctx::barrier`).
+    pub fn barrier(&mut self, label: &'static str) {
+        self.events.push(Event::Barrier { label });
+    }
+
+    /// Record the driver leasing the named arena.
+    pub fn session_begin(&mut self, arena: &'static str) {
+        self.events.push(Event::SessionBegin { arena });
+    }
+
+    /// Record the driver releasing the named arena.
+    pub fn session_end(&mut self, arena: &'static str) {
+        self.events.push(Event::SessionEnd { arena });
+    }
+}
+
+/// The five schedule lints, in the order [`verify`] runs them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lint {
+    /// All ranks emit the same event-kind/label sequence, so no rank can
+    /// stall on a mismatched collective or barrier (MPI collective
+    /// matching).
+    CollectiveMatching,
+    /// Every pairwise superstep's partner map is an involution, and
+    /// self-paired ranks synchronize only (send 0 words).
+    PairwiseSymmetry,
+    /// Per communication superstep: words sent == words received within
+    /// each pair, the superstep structure matches the analytic ledger
+    /// label-for-label, and the h-relation equals `analytic_h` exactly
+    /// (Thm 2.1 becomes a machine-checked equality).
+    FlowConservation,
+    /// FFTU-family schedules contain exactly ONE collective all-to-all
+    /// (Alg. 3.1); zig-zag conversion swaps and mirror swaps are
+    /// pairwise, never collective. Baselines must match their documented
+    /// collective count and use no pairwise steps.
+    SingleAllToAll,
+    /// No schedule re-enters a leased arena, leaves a lease open, or
+    /// communicates outside a session (the `ExecArena` try-lock
+    /// discipline, statically).
+    SessionSafety,
+}
+
+impl Lint {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lint::CollectiveMatching => "collective-matching",
+            Lint::PairwiseSymmetry => "pairwise-symmetry",
+            Lint::FlowConservation => "flow-conservation",
+            Lint::SingleAllToAll => "single-all-to-all",
+            Lint::SessionSafety => "session-safety",
+        }
+    }
+
+    /// All lints, in [`verify`] order.
+    pub fn all() -> [Lint; 5] {
+        [
+            Lint::CollectiveMatching,
+            Lint::PairwiseSymmetry,
+            Lint::FlowConservation,
+            Lint::SingleAllToAll,
+            Lint::SessionSafety,
+        ]
+    }
+}
+
+/// One lint's verdict: passing means no recorded violations.
+#[derive(Clone, Debug)]
+pub struct LintOutcome {
+    pub lint: Lint,
+    pub violations: Vec<String>,
+}
+
+impl LintOutcome {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// What the verifier may assume about the plan that produced a
+/// schedule, derived from its [`crate::api::Algorithm`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Expectations {
+    /// FFTU family: exactly one collective, labeled `fftu-alltoall`;
+    /// pairwise steps allowed (zig-zag conversions, mirror swaps).
+    pub single_alltoall: bool,
+    /// Expected collective count (1 for FFTU; the documented
+    /// `Algorithm::comm_supersteps` count for the baselines).
+    pub collectives: usize,
+}
+
+/// Run the full lint suite over a schedule. `analytic` is the matching
+/// cost-model ledger ([`crate::costmodel`]) the flow lint compares
+/// against. Pure function of its inputs, so the seeded-mutation tests
+/// can mutate a recorded schedule and re-verify.
+pub fn verify(
+    schedule: &Schedule,
+    analytic: &CostReport,
+    exp: &Expectations,
+) -> Vec<LintOutcome> {
+    vec![
+        lint_collective_matching(schedule),
+        lint_pairwise_symmetry(schedule),
+        lint_flow_conservation(schedule, analytic),
+        lint_single_alltoall(schedule, exp),
+        lint_session_safety(schedule),
+    ]
+}
+
+/// Lint (a): every rank's event-kind/label sequence is identical.
+fn lint_collective_matching(schedule: &Schedule) -> LintOutcome {
+    let mut violations = Vec::new();
+    let p = schedule.nprocs();
+    if p > 0 {
+        let reference = &schedule.ranks[0];
+        for (rank, events) in schedule.ranks.iter().enumerate().skip(1) {
+            if events.len() != reference.len() {
+                violations.push(format!(
+                    "rank {rank} emits {} events, rank 0 emits {} — a rank would stall \
+                     on a missing superstep",
+                    events.len(),
+                    reference.len()
+                ));
+                continue;
+            }
+            for (i, (e, r)) in events.iter().zip(reference).enumerate() {
+                if !e.same_shape(r) {
+                    violations.push(format!(
+                        "superstep {i}: rank {rank} emits {} '{}' where rank 0 emits {} '{}'",
+                        e.kind_name(),
+                        e.label(),
+                        r.kind_name(),
+                        r.label()
+                    ));
+                    break;
+                }
+            }
+        }
+        // Malformed collectives: a send-counts row must cover every rank.
+        for (rank, events) in schedule.ranks.iter().enumerate() {
+            for (i, e) in events.iter().enumerate() {
+                if let Event::AllToAll { label, send_counts } = e {
+                    if send_counts.len() != p {
+                        violations.push(format!(
+                            "superstep {i}: rank {rank}'s '{label}' send counts cover \
+                             {} ranks, machine has {p}",
+                            send_counts.len()
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    LintOutcome { lint: Lint::CollectiveMatching, violations }
+}
+
+/// The partner map of pairwise superstep position `i`, if every rank
+/// has a pairwise event there with an in-range partner.
+fn partner_map(schedule: &Schedule, i: usize) -> Option<Vec<usize>> {
+    let p = schedule.nprocs();
+    let mut partners = Vec::with_capacity(p);
+    for events in &schedule.ranks {
+        match events.get(i) {
+            Some(Event::Pairwise { partner, .. }) if *partner < p => partners.push(*partner),
+            _ => return None,
+        }
+    }
+    Some(partners)
+}
+
+/// Lint (b): pairwise partner maps are involutions; self-pairs
+/// synchronize only.
+fn lint_pairwise_symmetry(schedule: &Schedule) -> LintOutcome {
+    let mut violations = Vec::new();
+    let p = schedule.nprocs();
+    if p > 0 {
+        for (i, e) in schedule.ranks[0].iter().enumerate() {
+            if !matches!(e, Event::Pairwise { .. }) {
+                continue;
+            }
+            // Per-rank partner validity first (partner_map needs it).
+            let mut well_formed = true;
+            for (rank, events) in schedule.ranks.iter().enumerate() {
+                if let Some(Event::Pairwise { label, partner, words }) = events.get(i) {
+                    if *partner >= p {
+                        violations.push(format!(
+                            "superstep {i} '{label}': rank {rank} pairs with rank \
+                             {partner}, machine has {p}"
+                        ));
+                        well_formed = false;
+                    } else if *partner == rank && *words != 0 {
+                        violations.push(format!(
+                            "superstep {i} '{label}': self-paired rank {rank} must \
+                             synchronize only, sends {words} words"
+                        ));
+                    }
+                } else {
+                    // Shape mismatch — the collective lint reports it.
+                    well_formed = false;
+                }
+            }
+            if !well_formed {
+                continue;
+            }
+            let partners =
+                partner_map(schedule, i).expect("well-formed pairwise superstep has a map");
+            for (s, &t) in partners.iter().enumerate() {
+                if partners[t] != s {
+                    violations.push(format!(
+                        "superstep {i}: partner map is not an involution — rank {s} -> \
+                         {t}, but rank {t} -> {} (rank {s} would block forever)",
+                        partners[t]
+                    ));
+                }
+            }
+        }
+    }
+    LintOutcome { lint: Lint::PairwiseSymmetry, violations }
+}
+
+/// Lint (c): flow conservation against the analytic ledger.
+///
+/// The superstep structure (kind + label, barriers and session markers
+/// aside) must match the analytic report one-for-one; each pair of a
+/// pairwise exchange must send as many words as it receives; and every
+/// communication superstep's h-relation must equal the analytic h
+/// *exactly* — the static schedule carries the exact send matrix, so
+/// Thm 2.1's bound is checked as an equality, not an inequality. Total
+/// volume is also matched for pairwise supersteps, where the analytic
+/// model records the exact sum (for the collectives it records the
+/// `h * p` all-to-all convention, so only h is compared there).
+fn lint_flow_conservation(schedule: &Schedule, analytic: &CostReport) -> LintOutcome {
+    let mut violations = Vec::new();
+    let p = schedule.nprocs();
+    if p == 0 {
+        return LintOutcome { lint: Lint::FlowConservation, violations };
+    }
+    // Structural match against the analytic ledger (rank 0's view; the
+    // collective lint guarantees every rank agrees).
+    let visible: Vec<&Event> = schedule.ranks[0]
+        .iter()
+        .filter(|e| !matches!(e, Event::SessionBegin { .. } | Event::SessionEnd { .. } | Event::Barrier { .. }))
+        .collect();
+    if visible.len() != analytic.supersteps.len() {
+        violations.push(format!(
+            "schedule has {} supersteps, analytic ledger has {}",
+            visible.len(),
+            analytic.supersteps.len()
+        ));
+    }
+    for (j, (e, a)) in visible.iter().zip(&analytic.supersteps).enumerate() {
+        let a_kind = match a.kind {
+            SuperstepKind::Computation => "compute",
+            SuperstepKind::Communication => "comm",
+        };
+        let matches_kind = match a.kind {
+            SuperstepKind::Computation => matches!(e, Event::Compute { .. }),
+            SuperstepKind::Communication => e.is_comm(),
+        };
+        if !matches_kind || e.label() != a.label {
+            violations.push(format!(
+                "superstep {j}: schedule has {} '{}', analytic ledger has {a_kind} '{}'",
+                e.kind_name(),
+                e.label(),
+                a.label
+            ));
+        }
+    }
+    // Per-communication-superstep balance and h equality. Walk rank 0's
+    // comm positions alongside the analytic comm supersteps.
+    let comm_positions: Vec<usize> = schedule.ranks[0]
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.is_comm())
+        .map(|(i, _)| i)
+        .collect();
+    let analytic_comms: Vec<_> = analytic
+        .supersteps
+        .iter()
+        .filter(|s| s.kind == SuperstepKind::Communication)
+        .collect();
+    if comm_positions.len() != analytic_comms.len() {
+        violations.push(format!(
+            "schedule has {} communication supersteps, analytic ledger has {}",
+            comm_positions.len(),
+            analytic_comms.len()
+        ));
+        return LintOutcome { lint: Lint::FlowConservation, violations };
+    }
+    for (&i, a) in comm_positions.iter().zip(&analytic_comms) {
+        let mut out = vec![0usize; p];
+        let mut inn = vec![0usize; p];
+        let mut well_formed = true;
+        match &schedule.ranks[0][i] {
+            Event::AllToAll { .. } => {
+                // Gather the full send matrix; in[t] follows from out rows.
+                for (s, events) in schedule.ranks.iter().enumerate() {
+                    match events.get(i) {
+                        Some(Event::AllToAll { send_counts, .. })
+                            if send_counts.len() == p =>
+                        {
+                            for (t, &w) in send_counts.iter().enumerate() {
+                                if t != s {
+                                    out[s] += w;
+                                    inn[t] += w;
+                                }
+                            }
+                        }
+                        _ => well_formed = false,
+                    }
+                }
+            }
+            Event::Pairwise { .. } => {
+                let Some(partners) = partner_map(schedule, i) else {
+                    // Malformed partners — symmetry lint reports.
+                    continue;
+                };
+                let words: Vec<usize> = schedule
+                    .ranks
+                    .iter()
+                    .map(|events| match &events[i] {
+                        Event::Pairwise { words, .. } => *words,
+                        _ => unreachable!("partner_map checked the event kind"),
+                    })
+                    .collect();
+                for (s, &t) in partners.iter().enumerate() {
+                    if t == s {
+                        continue;
+                    }
+                    out[s] = words[s];
+                    inn[s] = words[t];
+                    if words[s] != words[t] {
+                        violations.push(format!(
+                            "superstep {i} '{}': rank {s} sends {} words but its \
+                             partner {t} sends {} back — pair flow is unbalanced",
+                            a.label, words[s], words[t]
+                        ));
+                    }
+                }
+                let total: usize = out.iter().sum();
+                if total != a.words_total {
+                    violations.push(format!(
+                        "superstep {i} '{}': schedule moves {total} words total, \
+                         analytic ledger says {}",
+                        a.label, a.words_total
+                    ));
+                }
+            }
+            _ => unreachable!("comm_positions only holds comm events"),
+        }
+        if !well_formed {
+            // Shape/count problems are the other lints' findings.
+            continue;
+        }
+        let sent: usize = out.iter().sum();
+        let received: usize = inn.iter().sum();
+        if sent != received {
+            violations.push(format!(
+                "superstep {i} '{}': {sent} words sent != {received} words received",
+                a.label
+            ));
+        }
+        let h = out
+            .iter()
+            .zip(&inn)
+            .map(|(&o, &r)| o.max(r))
+            .max()
+            .unwrap_or(0);
+        if h != a.h_max {
+            violations.push(format!(
+                "superstep {i} '{}': schedule h-relation {h} != analytic h {}",
+                a.label, a.h_max
+            ));
+        }
+    }
+    LintOutcome { lint: Lint::FlowConservation, violations }
+}
+
+/// Lint (d): the single-all-to-all invariant (FFTU) / the documented
+/// collective count (baselines).
+fn lint_single_alltoall(schedule: &Schedule, exp: &Expectations) -> LintOutcome {
+    let mut violations = Vec::new();
+    for (rank, events) in schedule.ranks.iter().enumerate() {
+        let collectives: Vec<&Event> =
+            events.iter().filter(|e| matches!(e, Event::AllToAll { .. })).collect();
+        let pairwise = events.iter().filter(|e| matches!(e, Event::Pairwise { .. })).count();
+        if exp.single_alltoall {
+            if collectives.len() != 1 {
+                violations.push(format!(
+                    "rank {rank}: FFTU path must contain exactly ONE all-to-all \
+                     (Alg. 3.1), found {}",
+                    collectives.len()
+                ));
+            }
+            for e in &collectives {
+                if e.label() != "fftu-alltoall" {
+                    violations.push(format!(
+                        "rank {rank}: collective '{}' is not the FFTU all-to-all — \
+                         conversion/mirror swaps must be pairwise",
+                        e.label()
+                    ));
+                }
+            }
+        } else {
+            if collectives.len() != exp.collectives {
+                violations.push(format!(
+                    "rank {rank}: expected {} collective supersteps, found {}",
+                    exp.collectives,
+                    collectives.len()
+                ));
+            }
+            if pairwise != 0 {
+                violations.push(format!(
+                    "rank {rank}: {pairwise} pairwise supersteps in a baseline \
+                     schedule (only the FFTU family uses pairwise exchanges)"
+                ));
+            }
+        }
+    }
+    LintOutcome { lint: Lint::SingleAllToAll, violations }
+}
+
+/// Lint (e): arena session safety.
+fn lint_session_safety(schedule: &Schedule) -> LintOutcome {
+    let mut violations = Vec::new();
+    for (rank, events) in schedule.ranks.iter().enumerate() {
+        let mut open: Vec<&'static str> = Vec::new();
+        for (i, e) in events.iter().enumerate() {
+            match e {
+                Event::SessionBegin { arena } => {
+                    if open.contains(arena) {
+                        violations.push(format!(
+                            "rank {rank}, superstep {i}: schedule re-enters the leased \
+                             arena '{arena}' — interleaved sessions cross-deadlock on \
+                             the worker locks"
+                        ));
+                    } else {
+                        open.push(arena);
+                    }
+                }
+                Event::SessionEnd { arena } => match open.iter().rposition(|a| a == arena) {
+                    Some(pos) => {
+                        open.remove(pos);
+                    }
+                    None => violations.push(format!(
+                        "rank {rank}, superstep {i}: releases arena '{arena}' without \
+                         holding a lease"
+                    )),
+                },
+                e if e.is_comm() => {
+                    if open.is_empty() {
+                        violations.push(format!(
+                            "rank {rank}, superstep {i}: {} '{}' outside any arena \
+                             session",
+                            e.kind_name(),
+                            e.label()
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some(arena) = open.first() {
+            violations.push(format!(
+                "rank {rank}: arena '{arena}' is still leased when the schedule ends"
+            ));
+        }
+    }
+    LintOutcome { lint: Lint::SessionSafety, violations }
+}
+
+/// The result of [`crate::api::PlannedFft::analyze`]: the extracted
+/// schedule, the analytic ledger it was checked against, and every
+/// lint's verdict.
+#[derive(Clone, Debug)]
+pub struct ScheduleReport {
+    pub algorithm: &'static str,
+    pub kind: &'static str,
+    pub strategy: &'static str,
+    pub shape: Vec<usize>,
+    pub grid: Option<Vec<usize>>,
+    pub procs: usize,
+    pub expectations: Expectations,
+    pub schedule: Schedule,
+    pub analytic: CostReport,
+    pub lints: Vec<LintOutcome>,
+}
+
+impl ScheduleReport {
+    /// True when every lint passed.
+    pub fn passed(&self) -> bool {
+        self.lints.iter().all(LintOutcome::passed)
+    }
+
+    /// Re-run the lint suite over the (possibly mutated) schedule —
+    /// what the seeded-mutation tests call after breaking an invariant.
+    pub fn reverify(&mut self) {
+        self.lints = verify(&self.schedule, &self.analytic, &self.expectations);
+    }
+
+    /// Human-readable rendering: the superstep table, per-rank schedule
+    /// lines, and the lint verdicts.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let dims = |v: &[usize]| {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x")
+        };
+        let _ = write!(
+            s,
+            "schedule: algorithm={} kind={} dist={} shape={} p={}",
+            self.algorithm,
+            self.kind,
+            self.strategy,
+            dims(&self.shape),
+            self.procs
+        );
+        if let Some(grid) = &self.grid {
+            let _ = write!(s, " grid={}", dims(grid));
+        }
+        s.push('\n');
+        if let Some(reference) = self.schedule.ranks.first() {
+            s.push_str("superstep structure (all ranks, by collective matching):\n");
+            for (i, e) in reference.iter().enumerate() {
+                let _ = write!(s, "  {i:>3}  {:<10} {}", e.kind_name(), e.label());
+                if e.is_comm() {
+                    let (h, total) = self.comm_stats(i);
+                    let _ = write!(s, "  h={h} total={total}");
+                }
+                s.push('\n');
+            }
+            s.push_str("per-rank schedule:\n");
+            for (rank, events) in self.schedule.ranks.iter().enumerate() {
+                let line: Vec<String> = events.iter().map(Event::describe).collect();
+                let _ = writeln!(s, "  rank {rank:>3}: {}", line.join(" "));
+            }
+        }
+        s.push_str("lints:\n");
+        for outcome in &self.lints {
+            let verdict = if outcome.passed() { "ok" } else { "VIOLATION" };
+            let _ = writeln!(s, "  {:<20} {verdict}", outcome.lint.name());
+            for v in &outcome.violations {
+                let _ = writeln!(s, "    - {v}");
+            }
+        }
+        let _ = writeln!(s, "verdict: {}", if self.passed() { "PASS" } else { "FAIL" });
+        s
+    }
+
+    /// (h, total words) of the communication superstep at event index
+    /// `i`, computed from the schedule's exact send matrix.
+    fn comm_stats(&self, i: usize) -> (usize, usize) {
+        let p = self.schedule.nprocs();
+        let mut out = vec![0usize; p];
+        let mut inn = vec![0usize; p];
+        for (s, events) in self.schedule.ranks.iter().enumerate() {
+            match events.get(i) {
+                Some(Event::AllToAll { send_counts, .. }) => {
+                    for (t, &w) in send_counts.iter().enumerate() {
+                        if t != s && t < p {
+                            out[s] += w;
+                            inn[t] += w;
+                        }
+                    }
+                }
+                Some(Event::Pairwise { partner, words, .. }) => {
+                    if *partner != s && *partner < p {
+                        out[s] += words;
+                        inn[*partner] += words;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let h = out.iter().zip(&inn).map(|(&o, &r)| o.max(r)).max().unwrap_or(0);
+        (h, out.iter().sum())
+    }
+}

@@ -69,6 +69,14 @@ pub struct PlanCache {
     state: Mutex<State>,
 }
 
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanCache")
+            .field("capacity", &self.capacity)
+            .finish_non_exhaustive()
+    }
+}
+
 impl PlanCache {
     /// A cache holding at most `capacity` plans (at least 1).
     pub fn new(capacity: usize) -> Self {

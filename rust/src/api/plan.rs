@@ -10,8 +10,10 @@
 
 use std::sync::Arc;
 
+use crate::analysis::{self, extract, RecordingCtx, Schedule, ScheduleReport};
 use crate::baselines::{HefftePlan, OutputDist, PencilPlan, PopoviciPlan, SlabPlan};
 use crate::bsp::CostReport;
+use crate::costmodel;
 use crate::fft::realnd::{
     pack_pairs, retangle_half_spectrum, unpack_pairs, untangle_half_spectrum, wrap_flops,
 };
@@ -189,6 +191,16 @@ pub struct PlannedFft {
     grid: Option<Vec<usize>>,
     p: usize,
     inner: Inner,
+}
+
+impl std::fmt::Debug for PlannedFft {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlannedFft")
+            .field("algo", &self.algo)
+            .field("shape", &self.t.shape)
+            .field("procs", &self.p)
+            .finish_non_exhaustive()
+    }
 }
 
 /// Resolve the per-axis cyclic grid for the cyclic-family algorithms.
@@ -384,6 +396,171 @@ impl PlannedFft {
             Inner::Fftu { plan, arena } => (plan, arena),
             _ => unreachable!("zig-zag plans are fftu-only (validated at plan time)"),
         }
+    }
+
+    /// Statically verify this plan's communication protocol: extract
+    /// the data-independent per-rank schedule of ONE batch item (no
+    /// payload is touched — extraction is `O(d * p)` per rank, like
+    /// [`crate::dist::analytic_h`]), build the matching analytic cost
+    /// ledger, and run the [`crate::analysis`] lint suite over both.
+    ///
+    /// The returned [`ScheduleReport`] carries the schedule, the
+    /// analytic ledger, and every lint verdict;
+    /// [`ScheduleReport::passed`] is the overall answer and
+    /// [`ScheduleReport::render`] the human-readable table the
+    /// `cli analyze` command prints. For a batch plan the executed
+    /// ledger repeats the core events per item; the schedule (like the
+    /// analytic model) describes one item.
+    pub fn analyze(&self) -> Result<ScheduleReport, FftError> {
+        let schedule = Schedule::record(self.p, |rec| self.record_events(rec));
+        let analytic = self.analytic_report()?;
+        let expectations = self.expectations();
+        let lints = analysis::verify(&schedule, &analytic, &expectations);
+        Ok(ScheduleReport {
+            algorithm: self.algo.name(),
+            kind: self.t.kind.name(),
+            strategy: self.t.strategy.name(),
+            shape: self.t.shape.clone(),
+            grid: self.grid.clone(),
+            procs: self.p,
+            expectations,
+            schedule,
+            analytic,
+            lints,
+        })
+    }
+
+    /// What the verifier may assume from the algorithm choice: FFTU's
+    /// single all-to-all (Alg. 3.1), or the baseline's documented
+    /// collective count (§1.2) with no pairwise steps.
+    fn expectations(&self) -> analysis::Expectations {
+        let d = self.t.shape.len();
+        analysis::Expectations {
+            single_alltoall: matches!(self.algo, Algorithm::Fftu),
+            collectives: self.algo.comm_supersteps(d),
+        }
+    }
+
+    /// Narrate one rank's superstep events for ONE batch item, mirroring
+    /// the executor dispatch in `run`/`run_r2c`/`run_c2r`/`run_trig`
+    /// one-for-one (compute/comm labels in executed-ledger order, arena
+    /// sessions included).
+    fn record_events(&self, rec: &mut RecordingCtx) {
+        match &self.inner {
+            Inner::Fftu { plan, .. } => {
+                rec.session_begin(analysis::EXEC_ARENA);
+                extract::fftu_core(rec, plan);
+                rec.session_end(analysis::EXEC_ARENA);
+            }
+            Inner::Slab(plan) => {
+                rec.session_begin(analysis::SCRATCH_ARENA);
+                extract::slab(rec, plan);
+                rec.session_end(analysis::SCRATCH_ARENA);
+            }
+            Inner::Pencil(plan) => {
+                rec.session_begin(analysis::SCRATCH_ARENA);
+                extract::pencil(rec, plan);
+                rec.session_end(analysis::SCRATCH_ARENA);
+            }
+            Inner::Heffte(plan) => {
+                rec.session_begin(analysis::SCRATCH_ARENA);
+                extract::heffte(rec, plan);
+                rec.session_end(analysis::SCRATCH_ARENA);
+            }
+            Inner::Popovici(plan) => {
+                rec.session_begin(analysis::SCRATCH_ARENA);
+                extract::popovici(rec, plan);
+                rec.session_end(analysis::SCRATCH_ARENA);
+            }
+            Inner::Real { core, .. } => {
+                if self.t.strategy == DistStrategy::ZigZag {
+                    let (plan, _) = Self::fftu_core(core);
+                    rec.session_begin(analysis::EXEC_ARENA);
+                    match self.t.kind {
+                        Kind::R2C => {
+                            extract::fftu_core(rec, plan);
+                            extract::mirror_swap(rec, plan, "r2c-pairwise", false);
+                            rec.begin_comp("r2c-untangle");
+                        }
+                        Kind::C2R => {
+                            extract::mirror_swap(rec, plan, "c2r-pairwise", true);
+                            rec.begin_comp("c2r-retangle");
+                            extract::fftu_core(rec, plan);
+                        }
+                        Kind::Dct2 | Kind::Dst2 => {
+                            extract::fftu_core(rec, plan);
+                            extract::zigzag_convert(rec, plan);
+                            rec.begin_comp("trig-combine");
+                        }
+                        Kind::Dct3 | Kind::Dst3 => {
+                            rec.begin_comp("trig-phase");
+                            extract::zigzag_convert(rec, plan);
+                            extract::fftu_core(rec, plan);
+                        }
+                        Kind::C2C => unreachable!("c2c never wraps Inner::Real"),
+                    }
+                    rec.session_end(analysis::EXEC_ARENA);
+                    if self.t.kind.is_trig() {
+                        // The facade-level extraction sweep, charged
+                        // after the SPMD run returns.
+                        rec.begin_comp("trig-extract");
+                    }
+                    return;
+                }
+                // Gathered strategy: the complex core does all the
+                // communication; the wrap pass is charged facade-level
+                // after it (executed-ledger order).
+                core.record_events(rec);
+                match self.t.kind {
+                    Kind::R2C => rec.begin_comp("r2c-untangle"),
+                    Kind::C2R => rec.begin_comp("c2r-retangle"),
+                    _ => rec.begin_comp("trig-wrap"),
+                }
+            }
+        }
+    }
+
+    /// The analytic cost ledger matching [`Self::record_events`]'s
+    /// schedule superstep-for-superstep — the flow-conservation oracle.
+    fn analytic_report(&self) -> Result<CostReport, FftError> {
+        let shape = &self.t.shape;
+        if self.t.kind == Kind::C2C {
+            return match self.algo {
+                Algorithm::Fftu => Ok(costmodel::fftu_report(shape, self.p)),
+                Algorithm::Slab { out } => {
+                    costmodel::slab_report(shape, self.p, out == OutputDist::Same)
+                }
+                Algorithm::Pencil { r, out } => {
+                    costmodel::pencil_report(shape, r, self.p, out == OutputDist::Same)
+                }
+                Algorithm::Heffte => costmodel::heffte_report(shape, self.p),
+                Algorithm::Popovici => {
+                    let grid = self.grid.as_deref().expect("popovici resolves a grid");
+                    Ok(costmodel::popovici_report(shape, grid))
+                }
+            };
+        }
+        if self.t.strategy == DistStrategy::ZigZag {
+            let grid = self.grid.as_deref().expect("zig-zag plans resolve a grid");
+            return Ok(match self.t.kind {
+                Kind::R2C => costmodel::fftu_r2c_zigzag_report(shape, grid),
+                Kind::C2R => costmodel::fftu_c2r_zigzag_report(shape, grid),
+                Kind::Dct2 | Kind::Dst2 => {
+                    costmodel::fftu_trig_zigzag_report(shape, grid, true)
+                }
+                Kind::Dct3 | Kind::Dst3 => {
+                    costmodel::fftu_trig_zigzag_report(shape, grid, false)
+                }
+                Kind::C2C => unreachable!("handled above"),
+            });
+        }
+        let core = self.real_inner().analytic_report()?;
+        Ok(match self.t.kind {
+            Kind::R2C | Kind::C2R => {
+                costmodel::real_wrap_report(core, shape, self.p, self.t.kind)
+            }
+            _ => costmodel::trig_wrap_report(core, shape, self.p),
+        })
     }
 
     fn run(&self, input: &[C64], batch: usize) -> Result<Execution, FftError> {

@@ -70,6 +70,16 @@ pub struct HefftePlan {
     scratch: ScratchArena,
 }
 
+impl std::fmt::Debug for HefftePlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HefftePlan")
+            .field("shape", &self.shape)
+            .field("p", &self.p)
+            .field("stages", &self.stage_axis.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl HefftePlan {
     pub fn new(shape: &[usize], p: usize) -> Result<Self, FftError> {
         let (dists, stage_axis) = heffte_schedule(shape, p)?;
@@ -97,6 +107,19 @@ impl HefftePlan {
     /// The brick distribution the input and output live in.
     pub fn input_dist(&self) -> &GridDist {
         &self.dists[0]
+    }
+
+    /// The compiled reshapes in execution order: one per FFT stage plus
+    /// the final brick reshape out (the static verifier reads their send
+    /// matrices; no payload is touched).
+    pub fn redist_plans(&self) -> &[RedistPlan] {
+        &self.redists
+    }
+
+    /// The axis transformed after each of the first
+    /// `redist_plans().len() - 1` reshapes.
+    pub fn stage_axes(&self) -> &[usize] {
+        &self.stage_axis
     }
 
     /// Execute on whole (global) arrays; the report covers the batch.

@@ -60,7 +60,7 @@ pub(crate) struct ScratchArena {
 }
 
 impl ScratchArena {
-    pub fn new(p: usize) -> Self {
+    pub(crate) fn new(p: usize) -> Self {
         ScratchArena {
             session: Mutex::new(()),
             slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
@@ -69,14 +69,14 @@ impl ScratchArena {
 
     /// Claim the arena for one SPMD session; `None` means a concurrent
     /// execute owns it and the caller must use transient scratch.
-    pub fn begin_session(&self) -> Option<MutexGuard<'_, ()>> {
+    pub(crate) fn begin_session(&self) -> Option<MutexGuard<'_, ()>> {
         self.session.try_lock().ok()
     }
 
     /// Lock rank `rank`'s scratch, growing it to at least `min_len`
     /// (zero-filled) — a no-op after the first execute. Only call while
     /// holding the [`Self::begin_session`] guard.
-    pub fn lease(&self, rank: usize, min_len: usize) -> MutexGuard<'_, Vec<C64>> {
+    pub(crate) fn lease(&self, rank: usize, min_len: usize) -> MutexGuard<'_, Vec<C64>> {
         let mut guard = self.slots[rank].lock().unwrap();
         if guard.len() < min_len {
             let len = guard.len();

@@ -151,6 +151,17 @@ pub struct PencilPlan {
     scratch: ScratchArena,
 }
 
+impl std::fmt::Debug for PencilPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PencilPlan")
+            .field("shape", &self.shape)
+            .field("r", &self.r)
+            .field("p", &self.p)
+            .field("out", &self.out)
+            .finish_non_exhaustive()
+    }
+}
+
 impl PencilPlan {
     pub fn new(shape: &[usize], r: usize, p: usize, out: OutputDist) -> Result<Self, FftError> {
         let (dist_in, stages) = pencil_schedule(shape, r, p)?;
@@ -185,6 +196,23 @@ impl PencilPlan {
 
     pub fn input_dist(&self) -> &GridDist {
         &self.dist_in
+    }
+
+    /// The compiled per-stage transposes, in execution order (the static
+    /// verifier reads their send matrices; no payload is touched).
+    pub fn redist_plans(&self) -> &[RedistPlan] {
+        &self.redists
+    }
+
+    /// The compiled transpose back to the input distribution (executed
+    /// only with [`OutputDist::Same`]).
+    pub fn back_plan(&self) -> &RedistPlan {
+        &self.back
+    }
+
+    /// Whether the plan transposes back to the input distribution.
+    pub fn output_dist(&self) -> OutputDist {
+        self.out
     }
 
     fn final_dist(&self) -> &GridDist {

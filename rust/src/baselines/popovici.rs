@@ -46,6 +46,15 @@ pub struct PopoviciPlan {
     scratch: super::ScratchArena,
 }
 
+impl std::fmt::Debug for PopoviciPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PopoviciPlan")
+            .field("shape", &self.shape)
+            .field("pgrid", &self.pgrid)
+            .finish_non_exhaustive()
+    }
+}
+
 impl PopoviciPlan {
     pub fn new(shape: &[usize], pgrid: &[usize]) -> Result<Self, FftError> {
         let d = shape.len();
@@ -92,6 +101,20 @@ impl PopoviciPlan {
 
     pub fn input_dist(&self) -> &GridDist {
         &self.dist
+    }
+
+    /// The per-axis processor grid.
+    pub fn pgrid(&self) -> &[usize] {
+        &self.pgrid
+    }
+
+    /// Packet size of round `l`'s all-to-all: every rank sends this many
+    /// words to each of the `p_l` ranks in its axis-`l` grid row (the
+    /// self-packet included, which the exchange skips when charging).
+    /// The static verifier reads this at plan time; no payload is
+    /// touched.
+    pub fn axis_packet_len(&self, l: usize) -> usize {
+        self.view_plans[l].packet_len()
     }
 
     /// Execute on whole (global) arrays; the report covers the batch.

@@ -102,6 +102,16 @@ pub struct SlabPlan {
     scratch: ScratchArena,
 }
 
+impl std::fmt::Debug for SlabPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SlabPlan")
+            .field("shape", &self.shape)
+            .field("p", &self.p)
+            .field("out", &self.out)
+            .finish_non_exhaustive()
+    }
+}
+
 impl SlabPlan {
     pub fn new(shape: &[usize], p: usize, out: OutputDist) -> Result<Self, FftError> {
         let d = shape.len();
@@ -137,6 +147,23 @@ impl SlabPlan {
     /// output) lives in.
     pub fn input_dist(&self) -> &GridDist {
         &self.dist_in
+    }
+
+    /// The compiled slab -> mid transpose (the static verifier reads its
+    /// send matrix; no payload is touched).
+    pub fn transpose_plan(&self) -> &RedistPlan {
+        &self.transpose
+    }
+
+    /// The compiled mid -> slab transpose back (executed only with
+    /// [`OutputDist::Same`]).
+    pub fn back_plan(&self) -> &RedistPlan {
+        &self.back
+    }
+
+    /// Whether the plan transposes back to the input distribution.
+    pub fn output_dist(&self) -> OutputDist {
+        self.out
     }
 
     /// Execute the planned pipeline on whole (global) arrays: scatter,

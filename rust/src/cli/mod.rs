@@ -59,6 +59,19 @@ COMMANDS:
                                    run's engine-vs-legacy ratios against a
                                    committed baseline JSON and fail if any
                                    case regresses by more than 25%
+  analyze    static BSP protocol verification: extract the data-
+             independent per-rank communication schedule of a compiled
+             plan (no payload is touched) and run the lint suite —
+             collective matching, pairwise-partner symmetry, flow
+             conservation against the analytic cost model, the single-
+             all-to-all invariant (Alg. 3.1), and arena session safety.
+             Prints the superstep table, per-rank schedules, and every
+             lint verdict; exits nonzero on any violation.
+               --shape/--grid/--p/--algo/--kind/--dist/--r as for `run`
+               --all               sweep every supported (algorithm,
+                                   kind, dist) combination on small
+                                   shapes and fail if any lint fires
+                                   (the CI smoke gate)
   table      regenerate a paper table: `fftu table 4.1|4.2|4.3 [--executed]`
   pmax       print the E-pmax processor-ceiling comparison
   commsteps  communication supersteps per algorithm
@@ -89,6 +102,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         Some("run") => cmd_run(&args),
+        Some("analyze") => cmd_analyze(&args),
         Some("bench") => cmd_bench(&args),
         Some("table") => cmd_table(&args),
         Some("pmax") => {
@@ -310,6 +324,146 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     }
 }
 
+/// `fftu analyze` — the static BSP protocol verifier's CLI surface.
+///
+/// Plans the requested (algorithm, kind, dist, grid) combination exactly
+/// like `fftu run` would, then extracts the data-independent schedule
+/// and prints [`crate::analysis::ScheduleReport::render`]: the
+/// superstep structure, per-rank schedule lines, and every lint
+/// verdict. Exits nonzero on any lint violation, so scripts and CI can
+/// gate on it. `--all` sweeps every supported combination instead.
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    if args.flag("all") {
+        return analyze_sweep();
+    }
+    let shape = args.get_vec("shape")?.unwrap_or_else(|| vec![16, 16]);
+    let algo_name = args.get("algo").unwrap_or("fftu");
+    let mut algorithm = Algorithm::parse(algo_name)
+        .ok_or_else(|| format!("unknown --algo {algo_name}; try `fftu help`"))?;
+    if let Algorithm::Pencil { out, .. } = algorithm {
+        let r = args
+            .get_usize("r")?
+            .unwrap_or_else(|| 2.min(shape.len().saturating_sub(1)).max(1));
+        algorithm = Algorithm::Pencil { r, out };
+    }
+    let kind_name = args.get("kind").unwrap_or("c2c");
+    let kind = Kind::parse(kind_name).ok_or_else(|| {
+        format!("unknown --kind {kind_name}; use c2c|r2c|c2r|dct2|dct3|dst2|dst3")
+    })?;
+    let dist_name = args.get("dist").unwrap_or("gathered");
+    let strategy = DistStrategy::parse(dist_name)
+        .ok_or_else(|| format!("unknown --dist {dist_name}; use gathered|zigzag"))?;
+    if strategy == DistStrategy::ZigZag && kind == Kind::C2C {
+        return Err("--dist zigzag applies to the real/trig kinds (c2c has no wrapper passes)".into());
+    }
+    if kind.is_real_fft() {
+        realnd::validate_even_last_axis(&shape)?;
+    }
+    let mut descriptor = Transform::new(&shape).kind(kind).strategy(strategy);
+    descriptor = match args.get_vec("grid")? {
+        Some(grid) => descriptor.grid(&grid),
+        None => descriptor.procs(args.get_usize("p")?.unwrap_or(4)),
+    };
+    let planned = crate::api::plan(algorithm, &descriptor)?;
+    let report = planned.analyze()?;
+    print!("{}", report.render());
+    if report.passed() {
+        Ok(())
+    } else {
+        Err("schedule verification failed (see lint violations above)".into())
+    }
+}
+
+/// `fftu analyze --all`: verify every supported (algorithm, kind, dist)
+/// combination on small shapes chosen to satisfy each path's
+/// divisibility rules. One line per combination; any lint violation
+/// prints its full report and fails the command — the CI smoke gate.
+fn analyze_sweep() -> Result<(), String> {
+    let kinds = [
+        Kind::C2C,
+        Kind::R2C,
+        Kind::C2R,
+        Kind::Dct2,
+        Kind::Dct3,
+        Kind::Dst2,
+        Kind::Dst3,
+    ];
+    // Gathered strategy: every algorithm x every kind. Shapes satisfy
+    // the cyclic family's p_l^2 | n_l (on the packed half shape for
+    // r2c/c2r) and keep the baselines' decompositions valid.
+    let gathered: [(Algorithm, Vec<usize>, usize); 5] = [
+        (Algorithm::Fftu, vec![16, 16], 4),
+        (Algorithm::slab(), vec![16, 16], 4),
+        (Algorithm::pencil(2), vec![8, 8, 8], 4),
+        (Algorithm::Heffte, vec![8, 8, 8], 4),
+        (Algorithm::Popovici, vec![16, 16], 4),
+    ];
+    let mut failures = Vec::new();
+    let mut cases = 0usize;
+    let mut check = |algorithm: Algorithm, t: &Transform, failures: &mut Vec<String>| {
+        cases += 1;
+        let tag = format!(
+            "{} {} {} shape {:?}",
+            algorithm.name(),
+            t.kind.name(),
+            t.strategy.name(),
+            t.shape
+        );
+        let outcome = crate::api::plan(algorithm, t)
+            .map_err(|e| format!("planning failed: {e}"))
+            .and_then(|planned| {
+                planned.analyze().map_err(|e| format!("analysis failed: {e}"))
+            });
+        match outcome {
+            Ok(report) if report.passed() => {
+                let comms = report
+                    .schedule
+                    .ranks
+                    .first()
+                    .map(|events| events.iter().filter(|e| e.is_comm()).count())
+                    .unwrap_or(0);
+                println!("  ok   {tag} (p={}, {comms} comm supersteps)", report.procs);
+            }
+            Ok(report) => {
+                println!("  FAIL {tag}");
+                print!("{}", report.render());
+                failures.push(tag);
+            }
+            Err(e) => {
+                println!("  FAIL {tag}: {e}");
+                failures.push(tag);
+            }
+        }
+    };
+    println!("analyze --all: sweeping every supported (algorithm, kind, dist) combination");
+    for (algorithm, shape, p) in &gathered {
+        for kind in kinds {
+            let t = Transform::new(shape).kind(kind).procs(*p);
+            check(*algorithm, &t, &mut failures);
+        }
+    }
+    // Zig-zag strategy: fftu-only, non-c2c. r2c/c2r resolve their grid
+    // on the half shape; the trig kinds additionally need 2 p_l | n_l.
+    for kind in [Kind::R2C, Kind::C2R] {
+        let t = Transform::new(&[18, 8]).grid(&[3, 2]).kind(kind).zigzag();
+        check(Algorithm::Fftu, &t, &mut failures);
+    }
+    for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+        let t = Transform::new(&[18, 16]).grid(&[3, 4]).kind(kind).zigzag();
+        check(Algorithm::Fftu, &t, &mut failures);
+    }
+    if failures.is_empty() {
+        println!("analyze --all: {cases} combinations, all lints pass");
+        Ok(())
+    } else {
+        Err(format!(
+            "analyze --all: {} of {cases} combinations failed:\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        ))
+    }
+}
+
 /// One benchmark case: legacy vs compiled engine on a c2c FFTU run.
 struct BenchCase {
     name: &'static str,
@@ -321,7 +475,7 @@ struct BenchCase {
 /// default output name (`BENCH_<tag>.json`) never collides with a
 /// committed baseline from an earlier PR; `--out` overrides it
 /// everywhere — no path in the bench writes any other name.
-const BENCH_TAG: &str = "pr5";
+const BENCH_TAG: &str = "pr6";
 
 /// The default trajectory output path, derived from [`BENCH_TAG`].
 fn bench_default_out() -> String {

@@ -641,6 +641,15 @@ pub struct RedistPlan {
     h: usize,
 }
 
+impl std::fmt::Debug for RedistPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RedistPlan")
+            .field("procs", &self.src.num_procs())
+            .field("h", &self.h)
+            .finish_non_exhaustive()
+    }
+}
+
 impl RedistPlan {
     pub fn new(src: &GridDist, dst: &GridDist) -> Result<Self, FftError> {
         if src.shape() != dst.shape() {
@@ -708,6 +717,22 @@ impl RedistPlan {
     /// max(words sent, words received), self-packets excluded.
     pub fn h_relation(&self) -> usize {
         self.h
+    }
+
+    /// Exact packet size of the route `s -> t`, in words. This is the
+    /// static analyzer's source of truth: the placements are compiled at
+    /// plan time, so the full send matrix is available without touching
+    /// any payload (cf. [`analytic_h`], which reduces the same
+    /// information to its max).
+    pub fn packet_words(&self, s: usize, t: usize) -> usize {
+        self.placements[t][s].len()
+    }
+
+    /// Row `s` of the send matrix: how many words rank `s` contributes
+    /// to every destination rank (the self-packet included — the BSP
+    /// exchange skips it when charging, as does the verifier).
+    pub fn send_counts(&self, s: usize) -> Vec<usize> {
+        (0..self.src.num_procs()).map(|t| self.packet_words(s, t)).collect()
     }
 
     /// Split rank `s`'s local array into one outgoing packet per

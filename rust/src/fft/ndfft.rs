@@ -19,6 +19,14 @@ pub struct NdPlan {
     total: usize,
 }
 
+impl std::fmt::Debug for NdPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NdPlan")
+            .field("shape", &self.shape)
+            .finish_non_exhaustive()
+    }
+}
+
 impl NdPlan {
     pub fn new(shape: &[usize], planner: &Planner) -> Self {
         assert!(!shape.is_empty(), "shape must have at least one dimension");

@@ -64,6 +64,12 @@ pub struct Plan {
     kind: Kind,
 }
 
+impl std::fmt::Debug for Plan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Plan").field("n", &self.n).finish_non_exhaustive()
+    }
+}
+
 impl Plan {
     /// Build a plan for length `n` with default rigor.
     pub fn new(n: usize) -> Self {
@@ -420,6 +426,12 @@ fn measure_best_order(n: usize, default: Vec<usize>) -> Vec<usize> {
 #[derive(Default)]
 pub struct Planner {
     plans: Mutex<HashMap<usize, Arc<Plan>>>,
+}
+
+impl std::fmt::Debug for Planner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Planner").finish_non_exhaustive()
+    }
 }
 
 impl Planner {

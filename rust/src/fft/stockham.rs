@@ -76,6 +76,15 @@ pub struct Stage {
     pub dft_w: Vec<C64>,
 }
 
+impl std::fmt::Debug for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Stage")
+            .field("radix", &self.radix)
+            .field("sub_len", &self.sub_len)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Stage {
     pub fn new(sub_len: usize, radix: usize) -> Self {
         let m = sub_len / radix;

@@ -41,6 +41,14 @@ pub struct ExecArena {
     workers: Vec<Mutex<Option<Worker>>>,
 }
 
+impl std::fmt::Debug for ExecArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecArena")
+            .field("procs", &self.workers.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl ExecArena {
     /// An empty arena for a plan executing on `p` ranks.
     pub fn new(p: usize) -> Self {

@@ -67,6 +67,17 @@ pub struct PackProgram {
     pub lstride: Vec<usize>,
 }
 
+impl std::fmt::Debug for PackProgram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PackProgram")
+            .field("inner_n", &self.inner_n)
+            .field("inner_p", &self.inner_p)
+            .field("strip_len", &self.strip_len)
+            .field("rows", &self.rows.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl PackProgram {
     /// Compile the strip table for a validated plan geometry.
     pub fn compile(local_shape: &[usize], pgrid: &[usize], packet_shape: &[usize]) -> Self {
@@ -136,6 +147,14 @@ pub struct TwiddleTables {
     /// Conjugate of [`Self::inner_fwd`] (inverse transforms), stored so
     /// the inner loop reads its factors sequentially in both directions.
     pub inner_inv: Vec<C64>,
+}
+
+impl std::fmt::Debug for TwiddleTables {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TwiddleTables")
+            .field("axes", &self.per_axis.len())
+            .finish_non_exhaustive()
+    }
 }
 
 impl TwiddleTables {

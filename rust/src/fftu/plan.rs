@@ -35,6 +35,15 @@ pub struct FftuPlan {
     pub pack: PackProgram,
 }
 
+impl std::fmt::Debug for FftuPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FftuPlan")
+            .field("shape", &self.shape)
+            .field("pgrid", &self.pgrid)
+            .finish_non_exhaustive()
+    }
+}
+
 impl FftuPlan {
     /// Build a plan, checking the paper's constraint `p_l^2 | n_l`.
     pub fn new(shape: &[usize], pgrid: &[usize], planner: &Planner) -> Result<Self, FftError> {

@@ -12,6 +12,12 @@
 //! allocation-regression suite (`rust/tests/alloc.rs`) pins this down
 //! with a counting global allocator.
 
+// One of the three allocation-audited hot modules (see clippy.toml):
+// the superstep bodies below must not call the allocation-prone methods
+// the config disallows; the plan-time constructor carries a justified
+// `#[allow]`.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use std::sync::Arc;
 
 use crate::api::Normalization;
@@ -50,7 +56,20 @@ pub struct Worker {
     pub spec_buf: Vec<C64>,
 }
 
+impl std::fmt::Debug for Worker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Worker")
+            .field("s_coords", &self.s_coords)
+            .field("shape", &self.plan.shape)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Worker {
+    // Plan-time construction: the packet buffers, working array, and
+    // scratch allocated here are exactly the ones the steady-state
+    // supersteps reuse forever after.
+    #[allow(clippy::disallowed_macros)]
     pub fn new(plan: Arc<FftuPlan>, rank: usize) -> Self {
         let s_coords = plan.dist.proc_coords(rank);
         let tables = TwiddleTables::new(&plan, &s_coords);

@@ -39,6 +39,12 @@
 //! fallback beyond, like the strip packer), and the exchange buffers
 //! persist on the [`super::Worker`].
 
+// One of the three allocation-audited hot modules (see clippy.toml):
+// per-superstep bodies must not call the disallowed allocation-prone
+// methods; the lazy first-use buffer sizings carry justified
+// `#[allow]`s.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use crate::api::FftError;
 use crate::bsp::Ctx;
 use crate::dist::zigzag_arms;
@@ -57,6 +63,9 @@ struct IdxBuf {
 }
 
 impl IdxBuf {
+    // The heap fallback only fires for d > MAX_PACK_DIMS transforms,
+    // where a d-word allocation is noise next to the O(N/p) work.
+    #[allow(clippy::disallowed_macros)]
     fn zeros(d: usize) -> Self {
         IdxBuf {
             stack: [0; MAX_PACK_DIMS],
@@ -135,6 +144,9 @@ pub fn convert_between_cyclic_and_zigzag(
     }
     let half = local.len() / 2;
     if pair_buf.len() != half {
+        // First-use sizing of the worker's persistent pair buffer; a
+        // no-op on every later call (steady state allocates nothing).
+        #[allow(clippy::disallowed_methods)]
         pair_buf.resize(half, C64::ZERO);
     }
     for axis in 0..d {
@@ -667,6 +679,9 @@ pub fn scatter_rank_spectrum(
     let extra_rows = spectrum_extra_rows(plan, s_coords);
     let need = llen + extra_rows;
     if buf.len() != need {
+        // First-use sizing of the worker's persistent spectrum buffer;
+        // a no-op on every later call.
+        #[allow(clippy::disallowed_methods)]
         buf.resize(need, C64::ZERO);
     }
     let rows = llen / inner_n;
@@ -758,6 +773,9 @@ pub fn retangle_rank_local(
 }
 
 #[cfg(test)]
+// Test fixtures allocate freely; the allocation audit targets the
+// conversion/swap bodies above.
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
     use crate::fft::Planner;

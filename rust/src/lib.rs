@@ -119,6 +119,26 @@
 //! # Ok::<(), fftu::FftError>(())
 //! ```
 //!
+//! Every plan can also be **statically verified** before anything runs:
+//! [`api::PlannedFft::analyze`] extracts the plan's data-independent
+//! per-rank communication schedule (no payload is touched) and checks
+//! it against the [`analysis`] lint suite — collective matching,
+//! pairwise partner symmetry, flow conservation against the analytic
+//! cost model, the single-all-to-all invariant, and arena session
+//! safety. The `fftu analyze` CLI command prints the per-rank schedule
+//! table and lint verdicts for any (algorithm, kind, dist, grid); `fftu
+//! analyze --all` sweeps every supported combination and exits nonzero
+//! on any violation:
+//!
+//! ```
+//! use fftu::api::{Algorithm, Transform};
+//!
+//! let plan = Transform::new(&[16, 16]).procs(4).plan(Algorithm::Fftu)?;
+//! let report = plan.analyze()?;
+//! assert!(report.passed()); // all five lints, before any execute
+//! # Ok::<(), fftu::FftError>(())
+//! ```
+//!
 //! Every fallible call returns the typed [`FftError`]; batched
 //! transforms (`Transform::batch`) run through one SPMD session with
 //! per-rank state built once. Long-lived applications that interleave
@@ -201,11 +221,26 @@
 //!   the same plan/execute split as FFTU.
 //! - [`costmodel`] — BSP (g, l, r) machine model used to regenerate the
 //!   paper's tables at full Snellius scale.
+//! - [`analysis`] — the static BSP protocol verifier: schedule
+//!   extraction, the five-lint suite, and the exhaustive mailbox
+//!   interleaving checker (the `cfg(loom)` models in `bsp::machine`
+//!   and the CI sanitizer jobs are its dynamic companions).
 //! - [`runtime`] — PJRT engine loading AOT-compiled JAX/Pallas artifacts
 //!   (HLO text) for the local transforms (behind the `xla-pjrt` feature).
 //! - [`report`], [`cli`], [`testing`] — table rendering, the launcher,
 //!   and the in-tree property-testing mini-framework.
 
+// Steady-state hot paths must not allocate; the ban is configured in
+// `clippy.toml` (disallowed-methods/macros) and would apply crate-wide,
+// so it is allowed here and re-denied file-locally in the hot modules
+// (`fftu/worker.rs`, `fftu/zigzag.rs`, `bsp/machine.rs`).
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+// Every public type should debug-print (reports and schedules end up in
+// assertion messages), and `pub` should mean reachable.
+#![warn(missing_debug_implementations)]
+#![warn(unreachable_pub)]
+
+pub mod analysis;
 pub mod api;
 pub mod baselines;
 pub mod bsp;
@@ -218,6 +253,7 @@ pub mod report;
 pub mod runtime;
 pub mod testing;
 
+pub use analysis::{Lint, LintOutcome, ScheduleReport};
 pub use api::{
     Algorithm, CacheStats, DistFft, DistStrategy, Execution, FftError, Grid, Kind, Normalization,
     PlanCache, RealExecution, Transform,

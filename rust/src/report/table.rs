@@ -7,6 +7,15 @@ pub struct Table {
     pub rows: Vec<Vec<String>>,
 }
 
+impl std::fmt::Debug for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Table")
+            .field("title", &self.title)
+            .field("rows", &self.rows.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl Table {
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {

@@ -20,9 +20,24 @@ pub struct XlaModule {
     n_outputs: usize,
 }
 
+impl std::fmt::Debug for XlaModule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaModule")
+            .field("name", &self.name)
+            .field("n_outputs", &self.n_outputs)
+            .finish_non_exhaustive()
+    }
+}
+
 /// Shared PJRT CPU client. One per process; executables keep it alive.
 pub struct XlaEngine {
     client: xla::PjRtClient,
+}
+
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine").finish_non_exhaustive()
+    }
 }
 
 impl XlaEngine {

@@ -30,6 +30,15 @@ pub struct XlaFftu {
     ss2_inv: XlaModule,
 }
 
+impl std::fmt::Debug for XlaFftu {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaFftu")
+            .field("shape", &self.plan.shape)
+            .field("pgrid", &self.plan.pgrid)
+            .finish_non_exhaustive()
+    }
+}
+
 impl XlaFftu {
     /// Load the four modules (ss0/ss2 x fwd/inv) for a configuration.
     pub fn load(artifacts: &Path, shape: &[usize], pgrid: &[usize]) -> Result<Self> {

@@ -1,0 +1,435 @@
+//! Static BSP protocol verifier suite.
+//!
+//! Two halves, matching the verifier's contract:
+//!
+//! 1. **Sweep** — every supported (algorithm, kind, distribution)
+//!    combination yields a schedule that passes the full lint suite
+//!    (the same case list `cli analyze --all` runs in CI).
+//! 2. **Seeded mutations** — each lint is proven *live*: a recorded
+//!    schedule is broken in exactly the way the lint guards against,
+//!    re-verified, and the expected lint (and only that expectation)
+//!    must fire. A lint that cannot fail verifies nothing.
+//!
+//! Plus the pairwise-exchange edge cases: self-paired ranks charge 0
+//! words, `p_l <= 2` zig-zag conversion degenerates to cyclic (no
+//! exchange supersteps at all), and no pairwise superstep ever inflates
+//! h past `N / (2p)` — half the Thm 2.1 all-to-all budget.
+
+use fftu::analysis::{self, Event, Lint, ScheduleReport};
+use fftu::bsp::{run_spmd, Ctx, SuperstepKind};
+use fftu::fftu::zigzag;
+use fftu::{Algorithm, C64, Kind, Transform};
+
+/// Plan + analyze, panicking with the rendered report on any failure —
+/// the report names the violated lint and the offending superstep.
+fn analyze(algorithm: Algorithm, t: &Transform) -> ScheduleReport {
+    let planned = t.plan(algorithm).expect("planning failed");
+    planned.analyze().expect("analysis failed")
+}
+
+fn assert_clean(algorithm: Algorithm, t: &Transform) {
+    let report = analyze(algorithm, t);
+    assert!(report.passed(), "lint violations:\n{}", report.render());
+}
+
+const ALL_KINDS: [Kind; 7] = [
+    Kind::C2C,
+    Kind::R2C,
+    Kind::C2R,
+    Kind::Dct2,
+    Kind::Dct3,
+    Kind::Dst2,
+    Kind::Dst3,
+];
+
+// ---------------------------------------------------------------------
+// The sweep: every (algorithm, kind, dist) combination lints clean.
+// ---------------------------------------------------------------------
+
+#[test]
+fn sweep_gathered_every_algorithm_and_kind() {
+    // Shapes satisfy the cyclic family's p_l^2 | n_l (on the packed half
+    // shape for r2c/c2r) and keep the baseline decompositions valid.
+    let cases: [(Algorithm, Vec<usize>, usize); 5] = [
+        (Algorithm::Fftu, vec![16, 16], 4),
+        (Algorithm::slab(), vec![16, 16], 4),
+        (Algorithm::pencil(2), vec![8, 8, 8], 4),
+        (Algorithm::Heffte, vec![8, 8, 8], 4),
+        (Algorithm::Popovici, vec![16, 16], 4),
+    ];
+    for (algorithm, shape, p) in &cases {
+        for kind in ALL_KINDS {
+            let t = Transform::new(shape).kind(kind).procs(*p);
+            assert_clean(*algorithm, &t);
+        }
+    }
+}
+
+#[test]
+fn sweep_zigzag_real_and_trig_kinds() {
+    // Zig-zag is fftu-only and non-c2c. r2c/c2r resolve the grid on the
+    // packed half shape; the trig kinds additionally need 2 p_l | n_l.
+    for kind in [Kind::R2C, Kind::C2R] {
+        let t = Transform::new(&[18, 8]).grid(&[3, 2]).kind(kind).zigzag();
+        assert_clean(Algorithm::Fftu, &t);
+    }
+    for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+        let t = Transform::new(&[18, 16]).grid(&[3, 4]).kind(kind).zigzag();
+        assert_clean(Algorithm::Fftu, &t);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seeded mutations: every lint must fire on the defect it guards.
+// ---------------------------------------------------------------------
+
+/// The FFTU c2c schedule the collective/flow/session mutations start
+/// from: [session+, compute, all-to-all, compute, session-] per rank.
+fn fftu_report() -> ScheduleReport {
+    let report = analyze(Algorithm::Fftu, &Transform::new(&[16, 16]).procs(4));
+    assert!(report.passed(), "seed schedule must be clean:\n{}", report.render());
+    report
+}
+
+/// A zig-zag trig schedule — the one with pairwise conversion
+/// supersteps the symmetry mutations need.
+fn trig_report() -> ScheduleReport {
+    let t = Transform::new(&[18, 16]).grid(&[3, 4]).kind(Kind::Dct2).zigzag();
+    let report = analyze(Algorithm::Fftu, &t);
+    assert!(report.passed(), "seed schedule must be clean:\n{}", report.render());
+    report
+}
+
+fn violations(report: &ScheduleReport, lint: Lint) -> &[String] {
+    &report
+        .lints
+        .iter()
+        .find(|o| o.lint == lint)
+        .expect("verify always reports every lint")
+        .violations
+}
+
+/// Event index of rank 0's first event matching `pred`.
+fn position(report: &ScheduleReport, pred: impl Fn(&Event) -> bool) -> usize {
+    report.schedule.ranks[0]
+        .iter()
+        .position(pred)
+        .expect("seed schedule lacks the expected event")
+}
+
+#[test]
+fn mutation_mismatched_label_fires_collective_matching() {
+    let mut report = fftu_report();
+    let i = position(&report, |e| matches!(e, Event::Compute { .. }));
+    report.schedule.ranks[1][i] = Event::Compute { label: "mutated-superstep" };
+    report.reverify();
+    assert!(!violations(&report, Lint::CollectiveMatching).is_empty());
+    assert!(!report.passed());
+}
+
+#[test]
+fn mutation_dropped_superstep_fires_collective_matching() {
+    let mut report = fftu_report();
+    let i = position(&report, Event::is_comm);
+    // Rank 2 skips the all-to-all: every other rank would stall.
+    report.schedule.ranks[2].remove(i);
+    report.reverify();
+    assert!(!violations(&report, Lint::CollectiveMatching).is_empty());
+}
+
+#[test]
+fn mutation_broken_involution_fires_pairwise_symmetry() {
+    let mut report = trig_report();
+    let i = position(&report, |e| matches!(e, Event::Pairwise { .. }));
+    // Rank 0 now points at a rank that does not point back.
+    let hijacked = match &report.schedule.ranks[1][i] {
+        Event::Pairwise { partner, .. } => *partner,
+        _ => unreachable!("collective matching held on the seed"),
+    };
+    if let Event::Pairwise { partner, .. } = &mut report.schedule.ranks[0][i] {
+        *partner = hijacked;
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::PairwiseSymmetry)
+            .iter()
+            .any(|v| v.contains("involution")),
+        "expected an involution violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_chatty_self_pair_fires_pairwise_symmetry() {
+    let mut report = trig_report();
+    // Rank 0 (coords all zero) is self-paired on every conversion axis;
+    // make it claim to send words to itself.
+    let i = position(&report, |e| matches!(e, Event::Pairwise { partner: 0, .. }));
+    if let Event::Pairwise { words, .. } = &mut report.schedule.ranks[0][i] {
+        *words = 7;
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::PairwiseSymmetry)
+            .iter()
+            .any(|v| v.contains("synchronize only")),
+        "expected a self-pair violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_inflated_send_count_fires_flow_conservation() {
+    let mut report = fftu_report();
+    let i = position(&report, |e| matches!(e, Event::AllToAll { .. }));
+    if let Event::AllToAll { send_counts, .. } = &mut report.schedule.ranks[0][i] {
+        send_counts[1] += 1; // h now exceeds the analytic ledger's h
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::FlowConservation)
+            .iter()
+            .any(|v| v.contains("h-relation")),
+        "expected an h-equality violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_unbalanced_pair_fires_flow_conservation() {
+    let mut report = trig_report();
+    let i = position(&report, |e| matches!(e, Event::Pairwise { .. }));
+    // One side of a real (non-self) pair sends an extra word its
+    // partner does not.
+    let talker = report
+        .schedule
+        .ranks
+        .iter()
+        .enumerate()
+        .position(|(rank, events)| {
+            matches!(events.get(i), Some(Event::Pairwise { partner, words, .. })
+                if *words > 0 && *partner != rank)
+        })
+        .expect("trig schedule has non-self pairs");
+    if let Event::Pairwise { words, .. } = &mut report.schedule.ranks[talker][i] {
+        *words += 1;
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::FlowConservation)
+            .iter()
+            .any(|v| v.contains("unbalanced")),
+        "expected a pair-flow violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_second_alltoall_fires_single_alltoall() {
+    let mut report = fftu_report();
+    let i = position(&report, |e| matches!(e, Event::AllToAll { .. }));
+    let p = report.schedule.nprocs();
+    // Inserted in EVERY rank, so collective matching still holds and the
+    // single-all-to-all lint is what convicts.
+    for events in &mut report.schedule.ranks {
+        events.insert(i, Event::AllToAll { label: "fftu-alltoall", send_counts: vec![0; p] });
+    }
+    report.reverify();
+    assert!(violations(&report, Lint::CollectiveMatching).is_empty());
+    assert!(
+        violations(&report, Lint::SingleAllToAll)
+            .iter()
+            .any(|v| v.contains("exactly ONE")),
+        "expected a single-all-to-all violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_foreign_collective_label_fires_single_alltoall() {
+    let mut report = fftu_report();
+    let i = position(&report, |e| matches!(e, Event::AllToAll { .. }));
+    for events in &mut report.schedule.ranks {
+        if let Event::AllToAll { label, .. } = &mut events[i] {
+            *label = "smuggled-transpose";
+        }
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SingleAllToAll)
+            .iter()
+            .any(|v| v.contains("smuggled-transpose")),
+        "expected a mislabeled-collective violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_reentered_arena_fires_session_safety() {
+    let mut report = fftu_report();
+    let i = position(&report, |e| matches!(e, Event::SessionBegin { .. }));
+    for events in &mut report.schedule.ranks {
+        events.insert(i + 1, Event::SessionBegin { arena: analysis::EXEC_ARENA });
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SessionSafety)
+            .iter()
+            .any(|v| v.contains("re-enters")),
+        "expected a re-entry violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_unclosed_lease_fires_session_safety() {
+    let mut report = fftu_report();
+    let i = position(&report, |e| matches!(e, Event::SessionEnd { .. }));
+    for events in &mut report.schedule.ranks {
+        events.remove(i);
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SessionSafety)
+            .iter()
+            .any(|v| v.contains("still leased")),
+        "expected an unclosed-lease violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_comm_outside_session_fires_session_safety() {
+    let mut report = fftu_report();
+    let i = position(&report, |e| matches!(e, Event::SessionBegin { .. }));
+    for events in &mut report.schedule.ranks {
+        events.remove(i); // the all-to-all now runs outside any lease
+    }
+    report.reverify();
+    let found = violations(&report, Lint::SessionSafety);
+    assert!(
+        found.iter().any(|v| v.contains("outside any arena session")),
+        "expected an outside-session violation:\n{}",
+        report.render()
+    );
+    assert!(
+        found.iter().any(|v| v.contains("without holding a lease")),
+        "the orphaned session-end must also be reported:\n{}",
+        report.render()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Pairwise-exchange edge cases.
+// ---------------------------------------------------------------------
+
+#[test]
+fn self_paired_rank_charges_zero_words() {
+    // Partner map [0, 2, 1]: rank 0 is self-paired, ranks 1 and 2 swap
+    // 5 words each. The ledger must charge the self-pair nothing, so
+    // the superstep totals 10 words, not 15.
+    let partner = [0usize, 2, 1];
+    let outcome = run_spmd(3, |ctx: &mut Ctx| {
+        let mut buf = vec![C64::ZERO; 5];
+        ctx.pairwise_exchange("edge-self-pair", partner[ctx.rank()], &mut buf);
+        buf.len()
+    });
+    let step = &outcome.report.supersteps[0];
+    assert_eq!(step.kind, SuperstepKind::Communication);
+    assert_eq!(step.h_max, 5, "the real pair moves 5 words each way");
+    assert_eq!(step.words_total, 10, "the self-paired rank must charge 0 words");
+    // The self-paired rank keeps its buffer; the pair trades theirs.
+    assert_eq!(outcome.outputs, vec![5, 5, 5]);
+}
+
+#[test]
+fn all_self_paired_superstep_is_synchronization_only() {
+    let outcome = run_spmd(2, |ctx: &mut Ctx| {
+        let mut buf = vec![C64::ZERO; 8];
+        ctx.pairwise_exchange("edge-all-self", ctx.rank(), &mut buf);
+    });
+    let step = &outcome.report.supersteps[0];
+    assert_eq!(step.h_max, 0);
+    assert_eq!(step.words_total, 0);
+}
+
+#[test]
+fn zigzag_degenerates_to_cyclic_for_p_at_most_2() {
+    // -s = s mod p_l for every coordinate when p_l <= 2, so zig-zag and
+    // cyclic coincide and the conversion superstep must vanish.
+    assert_eq!(zigzag::exchange_axis_count(&[2, 2]), 0);
+    assert_eq!(zigzag::exchange_axis_count(&[1, 2]), 0);
+    assert_eq!(zigzag::exchange_axis_count(&[3, 2]), 1);
+
+    let t = Transform::new(&[8, 8]).grid(&[2, 2]).kind(Kind::Dct2).zigzag();
+    let report = analyze(Algorithm::Fftu, &t);
+    assert!(report.passed(), "{}", report.render());
+    let conversions = report.schedule.ranks[0]
+        .iter()
+        .filter(|e| matches!(e, Event::Pairwise { .. }))
+        .count();
+    assert_eq!(
+        conversions, 0,
+        "p_l <= 2 on every axis: the schedule must contain no pairwise \
+         conversion supersteps\n{}",
+        report.render()
+    );
+    // Degenerate zig-zag keeps FFTU's headline structure: one all-to-all.
+    let collectives = report.schedule.ranks[0]
+        .iter()
+        .filter(|e| matches!(e, Event::AllToAll { .. }))
+        .count();
+    assert_eq!(collectives, 1);
+}
+
+#[test]
+fn pairwise_supersteps_never_inflate_h_past_half_alltoall_budget() {
+    // Thm 2.1 charges the all-to-all h <= N/p. Conversion swaps move
+    // half the local array and the r2c mirror swap moves the
+    // half-spectrum local array, so both stay within N/(2p); the c2r
+    // mirror additionally carries the Nyquist/DC extra rows, which keeps
+    // it under the full all-to-all budget N/p but can exceed the half
+    // budget. Checked on the schedule's exact word counts AND on the
+    // analytic ledger (the flow lint already proved the two agree).
+    let cases: [(Vec<usize>, Vec<usize>, Kind, bool); 3] = [
+        (vec![18, 16], vec![3, 4], Kind::Dct2, true),
+        (vec![18, 8], vec![3, 2], Kind::R2C, true),
+        (vec![18, 8], vec![3, 2], Kind::C2R, false),
+    ];
+    for (shape, grid, kind, half_budget) in &cases {
+        let n: usize = shape.iter().product();
+        let p: usize = grid.iter().product();
+        let bound = if *half_budget { n / (2 * p) } else { n / p };
+        let budget = if *half_budget { "N/(2p)" } else { "N/p" };
+        let t = Transform::new(shape).grid(grid).kind(*kind).zigzag();
+        let report = analyze(Algorithm::Fftu, &t);
+        assert!(report.passed(), "{}", report.render());
+        // Schedule side: the largest word count any rank sends in any
+        // pairwise superstep.
+        let mut saw_pairwise = false;
+        for events in &report.schedule.ranks {
+            for e in events {
+                if let Event::Pairwise { label, words, .. } = e {
+                    saw_pairwise = true;
+                    assert!(
+                        *words <= bound,
+                        "{kind:?} {shape:?}: pairwise '{label}' sends {words} words, \
+                         ledger bound {budget} = {bound}"
+                    );
+                }
+            }
+        }
+        assert!(saw_pairwise, "every zig-zag case here has a pairwise superstep");
+        // Analytic side: the ledger agrees.
+        for step in &report.analytic.supersteps {
+            if step.kind == SuperstepKind::Communication && step.label != "fftu-alltoall" {
+                assert!(
+                    step.h_max <= bound,
+                    "{kind:?} {shape:?}: analytic '{}' h = {} exceeds {budget} = {bound}",
+                    step.label,
+                    step.h_max
+                );
+            }
+        }
+    }
+}
