@@ -58,4 +58,51 @@ fn main() {
     let exec = t0.elapsed().as_secs_f64() / reps as f64;
     let rate = 5.0 * n as f64 * (n as f64).log2() / exec / 1e9;
     println!("\n128^3 fftn: setup {setup:.4} s, exec {exec:.4} s ({rate:.2} Gflop/s model rate)");
+
+    distributed_autotuner();
+}
+
+/// The distributed analogue of the FFTW-flags anecdote: the autotuning
+/// planner's Estimate mode (analytic pricing only) against Measure mode
+/// (warm trial executes of the analytic shortlist), with the scored
+/// candidate table for the drill-down. Setup cost buys confidence in
+/// the pick — same trade, one level up the stack.
+fn distributed_autotuner() {
+    use fftu::costmodel::Machine;
+    use fftu::{plan_auto, PlannerMode, Transform};
+
+    println!("\n## E-plan (distributed): Algorithm::Auto Estimate vs Measure\n");
+    println!("| shape | p | mode | setup (s) | pick |");
+    println!("|---|---|---|---|---|");
+    let machine = Machine::planner_default();
+    for (shape, p) in [(vec![64usize, 64], 4usize), (vec![32, 32, 32], 8)] {
+        let t = Transform::new(&shape).procs(p);
+        for (name, mode) in [
+            ("Estimate", PlannerMode::Estimate),
+            ("Measure(3)", PlannerMode::Measure { top_k: 3 }),
+        ] {
+            let t0 = Instant::now();
+            let planned = plan_auto(&t, &machine, mode).expect("auto plans");
+            let setup = t0.elapsed().as_secs_f64();
+            let chosen = planned.chosen().expect("auto plans expose their pick");
+            println!(
+                "| {shape:?} | {p} | {name} | {setup:.4} | {} grid {:?} |",
+                chosen.algorithm().name(),
+                chosen.grid().unwrap_or(&[]),
+            );
+        }
+        let planned = plan_auto(&t, &machine, PlannerMode::Estimate).expect("auto plans");
+        let table = planned.planner_table().expect("auto plans carry their table");
+        println!("\ncandidates for {shape:?} p={p} (cheapest predicted first):");
+        for cand in table {
+            println!(
+                "  {:<10} grid {:<12} {:<10} predicted {:.3e} s",
+                cand.algorithm.name(),
+                cand.grid.as_ref().map(|g| format!("{g:?}")).unwrap_or_else(|| "-".into()),
+                cand.strategy.name(),
+                cand.predicted_s,
+            );
+        }
+        println!();
+    }
 }

@@ -51,12 +51,13 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
-    /// Fraction of requests served without planning, in `[0, 1]`
-    /// (`1.0` for an untouched cache).
+    /// Fraction of requests served without planning, in `[0, 1]`.
+    /// An untouched cache has served nothing, so its rate is `0.0` —
+    /// not `0/0` (which `cli run --verbose` would print as `NaN%`).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
-            1.0
+            0.0
         } else {
             self.hits as f64 / total as f64
         }
@@ -210,7 +211,7 @@ mod tests {
     fn stats_snapshot_is_consistent() {
         let cache = PlanCache::new(2);
         assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, len: 0, capacity: 2 });
-        assert_eq!(cache.stats().hit_rate(), 1.0);
+        assert_eq!(cache.stats().hit_rate(), 0.0);
         let t = Transform::new(&[16, 16]).procs(4);
         for _ in 0..5 {
             cache.plan(Algorithm::Fftu, &t).unwrap();
@@ -220,6 +221,15 @@ mod tests {
         assert_eq!(s.misses, 1);
         cache.clear();
         assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, len: 0, capacity: 2 });
+    }
+
+    #[test]
+    fn fresh_cache_hit_rate_is_zero_and_finite() {
+        // Regression: 0 hits / 0 misses must not read as a perfect (or
+        // NaN) hit rate — nothing has been served yet.
+        let rate = PlanCache::new(4).stats().hit_rate();
+        assert!(rate.is_finite());
+        assert_eq!(rate, 0.0);
     }
 
     #[test]

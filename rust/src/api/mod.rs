@@ -10,8 +10,12 @@
 //!   flops and communication volume; trig dct2/dct3/dst2/dst3 via
 //!   Makhoul permutations and quarter-wave phases around the full-shape
 //!   core);
-//! - [`Algorithm`] — FFTU or any of the four published baselines
-//!   (slab/FFTW, pencil/PFFT, heFFTe, Popovici);
+//! - [`Algorithm`] — FFTU, any of the four published baselines
+//!   (slab/FFTW, pencil/PFFT, heFFTe, Popovici), or [`Algorithm::Auto`]
+//!   — the autotuning [`planner`], which prices every feasible
+//!   (algorithm, grid, strategy) candidate against a
+//!   [`crate::costmodel::Machine`] and plans the cheapest
+//!   ([`Transform::auto`] is the one-call spelling);
 //! - [`plan`] — plan-time validation returning a reusable
 //!   [`PlannedFft`] (all algorithms implement [`DistFft`]);
 //! - [`FftError`] — the typed error every fallible call returns;
@@ -48,11 +52,13 @@
 pub mod cache;
 pub mod error;
 pub mod plan;
+pub mod planner;
 pub mod transform;
 
 pub use cache::{CacheStats, PlanCache};
 pub use error::FftError;
 pub use plan::{plan, Algorithm, DistFft, Execution, PlannedFft, RealExecution};
+pub use planner::{plan_auto, PlannerMode, ScoredCandidate};
 pub use transform::{DistStrategy, Grid, Kind, Normalization, Transform};
 
 pub use crate::fft::Direction;

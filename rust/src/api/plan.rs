@@ -49,6 +49,13 @@ pub enum Algorithm {
     Heffte,
     /// Popovici et al. cyclic d-step (§1.2).
     Popovici,
+    /// The autotuning planner: enumerate every feasible (algorithm,
+    /// grid, strategy) candidate, price each with the analytic cost
+    /// model against a [`crate::costmodel::Machine`], and plan the
+    /// cheapest (the FFTW `Estimate` idiom; see
+    /// [`super::planner`]). The winner is reachable through
+    /// [`PlannedFft::chosen`].
+    Auto,
 }
 
 impl Algorithm {
@@ -69,6 +76,7 @@ impl Algorithm {
             Algorithm::Pencil { .. } => "pencil",
             Algorithm::Heffte => "heffte",
             Algorithm::Popovici => "popovici",
+            Algorithm::Auto => "auto",
         }
     }
 
@@ -81,6 +89,7 @@ impl Algorithm {
             "pencil" => Some(Algorithm::pencil(2)),
             "heffte" => Some(Algorithm::Heffte),
             "popovici" => Some(Algorithm::Popovici),
+            "auto" => Some(Algorithm::Auto),
             _ => None,
         }
     }
@@ -101,6 +110,12 @@ impl Algorithm {
             }
             Algorithm::Heffte => d + 1,
             Algorithm::Popovici => d,
+            // Before planning, Auto's count is whatever the planner
+            // picks; the worst candidate's d + 1 (heFFTe) is the only
+            // descriptor-independent bound. A planned Auto reports its
+            // real count through `PlannedFft::chosen`, and `analyze`
+            // verifies against the chosen algorithm, not this bound.
+            Algorithm::Auto => d + 1,
         }
     }
 }
@@ -180,6 +195,12 @@ enum Inner {
     /// rank-local r2c/c2r passes need (`h + 1` forward, `h` conjugated
     /// inverse) — also plan-time, for the same reason.
     Real { core: Arc<PlannedFft>, trig: Option<Vec<Vec<C64>>>, r2c_tw: Option<Vec<C64>> },
+    /// [`Algorithm::Auto`]: the autotuning planner's winner, a complete
+    /// plan for the same descriptor semantics with the concrete
+    /// (algorithm, grid, strategy) substituted. Every execute and the
+    /// verifier delegate to it wholesale; the scored candidate table is
+    /// kept for reporting (`cli run --algo auto --verbose`).
+    Auto { chosen: Arc<PlannedFft>, table: Vec<super::planner::ScoredCandidate> },
 }
 
 /// A validated, reusable plan binding a [`Transform`] to an
@@ -215,6 +236,16 @@ fn resolve_cyclic_grid(t: &Transform) -> Result<Vec<usize>, FftError> {
 /// Validate `t` and build a reusable plan for `algo`.
 pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError> {
     t.validate()?;
+    if algo == Algorithm::Auto {
+        // The planner owns the whole descriptor (it enumerates grids
+        // AND strategies), so Auto is resolved before the real-kind
+        // recursion below — the winner it returns is a complete plan.
+        return super::planner::plan_auto(
+            t,
+            &costmodel::Machine::planner_default(),
+            super::planner::PlannerMode::Estimate,
+        );
+    }
     if t.kind != Kind::C2C {
         // Real kinds plan the complex core on the packed half shape
         // (the grid resolves there, so the per-axis divisibility rules
@@ -290,6 +321,7 @@ pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError>
             let p = plan.num_procs();
             (Inner::Popovici(plan), Some(grid), p)
         }
+        Algorithm::Auto => unreachable!("Auto is resolved by the planner above"),
     };
     Ok(Arc::new(PlannedFft { algo, t: t.clone(), grid, p, inner }))
 }
@@ -309,6 +341,45 @@ impl PlannedFft {
 
     pub fn grid(&self) -> Option<&[usize]> {
         self.grid.as_deref()
+    }
+
+    /// For an [`Algorithm::Auto`] plan: the concrete plan the
+    /// autotuning planner selected (its `algorithm()`, `grid()` and
+    /// `transform().strategy` are the winning candidate). `None` for
+    /// explicitly requested algorithms.
+    pub fn chosen(&self) -> Option<&Arc<PlannedFft>> {
+        match &self.inner {
+            Inner::Auto { chosen, .. } => Some(chosen),
+            _ => None,
+        }
+    }
+
+    /// For an [`Algorithm::Auto`] plan: every candidate the planner
+    /// priced, sorted cheapest-predicted first. `None` for explicitly
+    /// requested algorithms.
+    pub fn planner_table(&self) -> Option<&[super::planner::ScoredCandidate]> {
+        match &self.inner {
+            Inner::Auto { table, .. } => Some(table),
+            _ => None,
+        }
+    }
+
+    /// Wrap the planner's winner under the `Auto` descriptor so the
+    /// [`super::PlanCache`] keys repeat requests on what the caller
+    /// asked for (`Algorithm::Auto` + the original descriptor), not on
+    /// what the planner resolved it to.
+    pub(super) fn new_auto(
+        t: Transform,
+        chosen: Arc<PlannedFft>,
+        table: Vec<super::planner::ScoredCandidate>,
+    ) -> PlannedFft {
+        PlannedFft {
+            algo: Algorithm::Auto,
+            grid: chosen.grid.clone(),
+            p: chosen.p,
+            inner: Inner::Auto { chosen, table },
+            t,
+        }
     }
 
     /// Execute ONE C2C transform; see [`DistFft::execute`].
@@ -412,6 +483,11 @@ impl PlannedFft {
     /// ledger repeats the core events per item; the schedule (like the
     /// analytic model) describes one item.
     pub fn analyze(&self) -> Result<ScheduleReport, FftError> {
+        if let Inner::Auto { chosen, .. } = &self.inner {
+            // Verify the schedule that will actually execute: the
+            // winner's, under the winner's algorithm expectations.
+            return chosen.analyze();
+        }
         let schedule = Schedule::record(self.p, |rec| self.record_events(rec));
         let analytic = self.analytic_report()?;
         let expectations = self.expectations();
@@ -517,6 +593,9 @@ impl PlannedFft {
                     _ => rec.begin_comp("trig-wrap"),
                 }
             }
+            Inner::Auto { .. } => {
+                unreachable!("analyze delegates to the chosen plan before recording")
+            }
         }
     }
 
@@ -537,6 +616,9 @@ impl PlannedFft {
                 Algorithm::Popovici => {
                     let grid = self.grid.as_deref().expect("popovici resolves a grid");
                     Ok(costmodel::popovici_report(shape, grid))
+                }
+                Algorithm::Auto => {
+                    unreachable!("analyze delegates to the chosen plan before pricing")
                 }
             };
         }
@@ -564,6 +646,12 @@ impl PlannedFft {
     }
 
     fn run(&self, input: &[C64], batch: usize) -> Result<Execution, FftError> {
+        if let Inner::Auto { chosen, .. } = &self.inner {
+            // The winner is a complete plan for the same semantics
+            // (kind, batch, normalization included): delegate wholesale
+            // so scaling is applied exactly once.
+            return chosen.run(input, batch);
+        }
         let n = self.t.total();
         if input.len() != batch * n {
             return Err(FftError::InputLength { expected: batch * n, got: input.len() });
@@ -579,6 +667,7 @@ impl PlannedFft {
             Inner::Real { .. } => {
                 unreachable!("real/trig kinds dispatch through run_r2c/run_c2r/run_trig")
             }
+            Inner::Auto { .. } => unreachable!("delegated to the chosen plan above"),
         };
         let scale = self.t.normalization.scale(n);
         if scale != 1.0 {
@@ -606,6 +695,9 @@ impl PlannedFft {
         call: &'static str,
     ) -> Result<Execution, FftError> {
         self.ensure_kind(Kind::R2C, call)?;
+        if let Inner::Auto { chosen, .. } = &self.inner {
+            return chosen.run_r2c(input, batch, call);
+        }
         let n = self.t.total();
         if input.len() != batch * n {
             return Err(FftError::InputLength { expected: batch * n, got: input.len() });
@@ -668,6 +760,9 @@ impl PlannedFft {
         call: &'static str,
     ) -> Result<RealExecution, FftError> {
         self.ensure_kind(Kind::C2R, call)?;
+        if let Inner::Auto { chosen, .. } = &self.inner {
+            return chosen.run_c2r(input, batch, call);
+        }
         let n = self.t.total();
         let nh = n / 2;
         let nspec = self.t.spectrum_total();
@@ -728,6 +823,9 @@ impl PlannedFft {
                 call,
                 expected: "dct2|dct3|dst2|dst3",
             });
+        }
+        if let Inner::Auto { chosen, .. } = &self.inner {
+            return chosen.run_trig(input, batch, call);
         }
         let n = self.t.total();
         if input.len() != batch * n {
@@ -1199,9 +1297,33 @@ mod tests {
 
     #[test]
     fn parse_round_trips_names() {
-        for name in ["fftu", "slab", "pencil", "heffte", "popovici"] {
+        for name in ["fftu", "slab", "pencil", "heffte", "popovici", "auto"] {
             assert_eq!(Algorithm::parse(name).unwrap().name(), name);
         }
         assert!(Algorithm::parse("nope").is_none());
+    }
+
+    #[test]
+    fn auto_plans_delegate_execution_to_the_chosen_candidate() {
+        let t = Transform::new(&[16, 16]).procs(4);
+        let auto = plan(Algorithm::Auto, &t).unwrap();
+        assert_eq!(auto.algorithm(), Algorithm::Auto);
+        let chosen = auto.chosen().expect("auto plans expose their winner");
+        assert_ne!(chosen.algorithm(), Algorithm::Auto);
+        let table = auto.planner_table().expect("auto plans keep the scored table");
+        assert!(!table.is_empty());
+        // The table is sorted cheapest-predicted first.
+        for pair in table.windows(2) {
+            assert!(pair[0].predicted_s <= pair[1].predicted_s);
+        }
+        // Execution delegates to the winner and matches the oracle.
+        let x = rand(256, 0xA7);
+        let want = dft_nd(&x, &[16, 16], Direction::Forward);
+        let got = auto.execute(&x).unwrap();
+        assert!(rel_l2_error(&got.output, &want) < 1e-9);
+        // Explicit plans never expose a winner or a table.
+        let explicit = plan(Algorithm::Fftu, &t).unwrap();
+        assert!(explicit.chosen().is_none());
+        assert!(explicit.planner_table().is_none());
     }
 }

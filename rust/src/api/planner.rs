@@ -1,0 +1,422 @@
+//! The autotuning planner behind [`Algorithm::Auto`].
+//!
+//! §2 of the paper prices every algorithm in closed form, and
+//! `costmodel` already evaluates those prices in `O(d * p)` without
+//! touching data. This module turns that validation artifact into the
+//! production scheduler, following FFTW's `Estimate`/`Measure` planning
+//! idiom:
+//!
+//! - **Enumerate** every feasible candidate for the descriptor: FFTU
+//!   over *every* admissible cyclic grid (`p_l^2 | n_l`, not just
+//!   [`crate::fftu::choose_grid`]'s tie-break) under both the gathered
+//!   and (for the real/trig kinds) zig-zag strategies, Popovici over
+//!   the same grids, and the transpose baselines slab / pencil (every
+//!   `1 <= r < d`) / heFFTe.
+//! - **Price** each candidate's analytic [`crate::bsp::CostReport`]
+//!   with [`Machine::predict`] (Eq. 2.12 extended with the §4.2 memory
+//!   and startup terms). Candidates whose reports are infeasible for
+//!   the shape, or whose predicted time is not finite, are dropped —
+//!   a NaN must never win a `<` comparison.
+//! - **Select** the minimum predicted time ([`PlannerMode::Estimate`]),
+//!   or refine the analytic top-k with timed *warm* trial executes —
+//!   plan once, run twice, keep the second run's time — and take the
+//!   measured minimum ([`PlannerMode::Measure`]).
+//!
+//! The winner is planned through the ordinary [`plan`] entry point with
+//! an explicit (algorithm, grid, strategy) descriptor, so an `Auto`
+//! pick round-trips bit-identically against requesting the same
+//! candidate by hand. The analytic model's feasibility is additionally
+//! validated by planning itself: if the cheapest candidate fails to
+//! plan, the next one is tried, so `Auto` never commits to an
+//! infeasible schedule.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::baselines::OutputDist;
+use crate::bsp::CostReport;
+use crate::costmodel::{self, Machine};
+use crate::fft::realnd::{half_shape, rfftn};
+use crate::fft::C64;
+use crate::fftu::{enumerate_grids, zigzag};
+use crate::testing::Rng;
+
+use super::error::FftError;
+use super::plan::{plan, Algorithm, PlannedFft};
+use super::transform::{DistStrategy, Grid, Kind, Transform};
+
+/// Planning rigor — FFTW's `Estimate`/`Measure` split.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannerMode {
+    /// Analytic only: price every feasible candidate with the cost
+    /// model and commit to the minimum predicted time. No trial
+    /// executes; planning stays `O(candidates * d * p)` on top of the
+    /// winner's own plan construction.
+    Estimate,
+    /// Analytic shortlist plus timed warm trial executes of the
+    /// `top_k` cheapest-predicted candidates (plan once, run twice,
+    /// keep the second run's wall time); the measured minimum wins.
+    /// `top_k` is clamped to at least 1 and at most the candidate
+    /// count.
+    Measure {
+        /// How many analytic front-runners get a trial execute.
+        top_k: usize,
+    },
+}
+
+/// One priced planner candidate (a row of `cli run --algo auto
+/// --verbose`'s table).
+#[derive(Clone, Debug)]
+pub struct ScoredCandidate {
+    /// The concrete algorithm (never [`Algorithm::Auto`]).
+    pub algorithm: Algorithm,
+    /// Resolved per-axis cyclic grid for the cyclic family (on the
+    /// packed half shape for r2c/c2r); `None` for the transpose
+    /// baselines, which take only a processor count.
+    pub grid: Option<Vec<usize>>,
+    /// Wrapper-pass strategy (always `Gathered` for c2c).
+    pub strategy: DistStrategy,
+    /// Machine-predicted seconds per transform.
+    pub predicted_s: f64,
+    /// Warm trial-execute seconds ([`PlannerMode::Measure`] top-k
+    /// candidates only).
+    pub measured_s: Option<f64>,
+}
+
+impl ScoredCandidate {
+    /// The explicit descriptor that requests exactly this candidate:
+    /// the caller's descriptor with the candidate's grid pinned
+    /// (`Grid::Explicit`) and its strategy substituted. Planning it
+    /// through [`plan`] is bit-identical to what `Auto` executes.
+    pub fn descriptor(&self, t: &Transform) -> Transform {
+        let mut tc = t.clone();
+        if let Some(g) = &self.grid {
+            tc.grid = Grid::Explicit(g.clone());
+        }
+        if t.kind != Kind::C2C {
+            tc.strategy = self.strategy;
+        }
+        tc
+    }
+}
+
+/// Price one candidate's analytic ledger, mirroring
+/// `PlannedFft::analytic_report` without constructing any plan. A
+/// `Result::Err` is the cost model's own infeasibility verdict (e.g.
+/// slab cannot split this shape over `p`).
+fn price(
+    t: &Transform,
+    algorithm: Algorithm,
+    grid: Option<&[usize]>,
+    strategy: DistStrategy,
+    p: usize,
+) -> Result<CostReport, FftError> {
+    fn c2c_price(
+        algorithm: Algorithm,
+        shape: &[usize],
+        grid: Option<&[usize]>,
+        p: usize,
+    ) -> Result<CostReport, FftError> {
+        match algorithm {
+            Algorithm::Fftu => Ok(costmodel::fftu_report(shape, p)),
+            Algorithm::Slab { out } => {
+                costmodel::slab_report(shape, p, out == OutputDist::Same)
+            }
+            Algorithm::Pencil { r, out } => {
+                costmodel::pencil_report(shape, r, p, out == OutputDist::Same)
+            }
+            Algorithm::Heffte => costmodel::heffte_report(shape, p),
+            Algorithm::Popovici => Ok(costmodel::popovici_report(
+                shape,
+                grid.expect("cyclic candidates carry a grid"),
+            )),
+            Algorithm::Auto => unreachable!("Auto never prices itself as a candidate"),
+        }
+    }
+    let shape: &[usize] = &t.shape;
+    if t.kind == Kind::C2C {
+        return c2c_price(algorithm, shape, grid, p);
+    }
+    if strategy == DistStrategy::ZigZag {
+        let g = grid.expect("zig-zag candidates are fftu, hence cyclic");
+        return Ok(match t.kind {
+            Kind::R2C => costmodel::fftu_r2c_zigzag_report(shape, g),
+            Kind::C2R => costmodel::fftu_c2r_zigzag_report(shape, g),
+            Kind::Dct2 | Kind::Dst2 => costmodel::fftu_trig_zigzag_report(shape, g, true),
+            Kind::Dct3 | Kind::Dst3 => costmodel::fftu_trig_zigzag_report(shape, g, false),
+            Kind::C2C => unreachable!("handled above"),
+        });
+    }
+    // Gathered wrappers: the complex core runs on the packed half shape
+    // (real FFT) or the full shape (trig), and the wrap pass is priced
+    // on top — the same two-layer structure the executor charges.
+    let core_shape: Vec<usize> =
+        if t.kind.is_real_fft() { half_shape(shape) } else { shape.to_vec() };
+    let core = c2c_price(algorithm, &core_shape, grid, p)?;
+    Ok(match t.kind {
+        Kind::R2C | Kind::C2R => costmodel::real_wrap_report(core, shape, p, t.kind),
+        _ => costmodel::trig_wrap_report(core, shape, p),
+    })
+}
+
+/// Enumerate every (algorithm, grid, strategy) candidate the descriptor
+/// admits, before pricing. Deterministic order: FFTU grids
+/// ([`choose_grid`](crate::fftu::choose_grid)'s pick first) under
+/// gathered then zig-zag, Popovici over the same grids, then slab,
+/// pencil (`r` ascending), heFFTe — a stable sort on equal predicted
+/// costs therefore prefers the same plan an explicit request would get.
+fn candidates(t: &Transform) -> Vec<(Algorithm, Option<Vec<usize>>, DistStrategy)> {
+    let p = t.grid.procs();
+    let d = t.shape.len();
+    // The cyclic grid lives on the shape the core actually transforms.
+    let core_shape: Vec<usize> =
+        if t.kind.is_real_fft() { half_shape(&t.shape) } else { t.shape.clone() };
+    let grids: Vec<Vec<usize>> = match &t.grid {
+        Grid::Explicit(g) => {
+            // Respect a pinned grid, if the cyclic family can use it.
+            let valid = g.len() == d
+                && g.iter().zip(&core_shape).all(|(&q, &n)| q >= 1 && n % (q * q) == 0);
+            if valid { vec![g.clone()] } else { Vec::new() }
+        }
+        Grid::Auto { .. } => enumerate_grids(&core_shape, p),
+    };
+    // c2c has no wrapper passes, so no zig-zag variant; a descriptor
+    // that explicitly asked for zig-zag restricts the search to it.
+    let strategies: &[DistStrategy] = if t.kind == Kind::C2C {
+        &[DistStrategy::Gathered]
+    } else if t.strategy == DistStrategy::ZigZag {
+        &[DistStrategy::ZigZag]
+    } else {
+        &[DistStrategy::Gathered, DistStrategy::ZigZag]
+    };
+    let mut out = Vec::new();
+    for &strategy in strategies {
+        for g in &grids {
+            if strategy == DistStrategy::ZigZag
+                && t.kind.is_trig()
+                && zigzag::validate_zigzag_axes(&t.shape, g).is_err()
+            {
+                continue;
+            }
+            out.push((Algorithm::Fftu, Some(g.clone()), strategy));
+        }
+    }
+    for g in &grids {
+        out.push((Algorithm::Popovici, Some(g.clone()), DistStrategy::Gathered));
+    }
+    if t.strategy != DistStrategy::ZigZag {
+        // The transpose baselines only implement the gathered wrappers.
+        out.push((Algorithm::slab(), None, DistStrategy::Gathered));
+        for r in 1..d {
+            out.push((Algorithm::pencil(r), None, DistStrategy::Gathered));
+        }
+        out.push((Algorithm::Heffte, None, DistStrategy::Gathered));
+    }
+    out
+}
+
+/// Time one warm execute of an already-constructed plan: inputs are
+/// prepared outside the clock, the first execute builds the per-rank
+/// workers and is discarded, the second is timed — FFTW's `Measure`
+/// discipline (plan once, run twice, keep the second).
+fn warm_trial_seconds(planned: &PlannedFft) -> Result<f64, FftError> {
+    let t = planned.transform();
+    let n = t.total();
+    let mut rng = Rng::new(0xA070_7E57);
+    match t.kind {
+        Kind::C2C => {
+            let x: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+            planned.execute(&x)?;
+            let t0 = Instant::now();
+            planned.execute(&x)?;
+            Ok(t0.elapsed().as_secs_f64())
+        }
+        Kind::R2C => {
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            planned.execute_r2c(&x)?;
+            let t0 = Instant::now();
+            planned.execute_r2c(&x)?;
+            Ok(t0.elapsed().as_secs_f64())
+        }
+        Kind::C2R => {
+            // A valid Hermitian half-spectrum, built outside the clock.
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let spec = rfftn(&x, &t.shape);
+            planned.execute_c2r(&spec)?;
+            let t0 = Instant::now();
+            planned.execute_c2r(&spec)?;
+            Ok(t0.elapsed().as_secs_f64())
+        }
+        Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            planned.execute_trig(&x)?;
+            let t0 = Instant::now();
+            planned.execute_trig(&x)?;
+            Ok(t0.elapsed().as_secs_f64())
+        }
+    }
+}
+
+/// Plan `t` by exhaustive candidate pricing against `machine` (see the
+/// module docs). This is what [`plan`] dispatches [`Algorithm::Auto`]
+/// to, with [`Machine::planner_default`] and
+/// [`PlannerMode::Estimate`]; call it directly to override either.
+///
+/// The returned plan carries [`Algorithm::Auto`] and the caller's
+/// descriptor (so [`super::PlanCache`] keys repeat `auto` requests
+/// identically), delegates every execute to the winner, and exposes
+/// the decision through [`PlannedFft::chosen`] and
+/// [`PlannedFft::planner_table`].
+pub fn plan_auto(
+    t: &Transform,
+    machine: &Machine,
+    mode: PlannerMode,
+) -> Result<Arc<PlannedFft>, FftError> {
+    t.validate()?;
+    let p = t.grid.procs();
+    let mut scored: Vec<ScoredCandidate> = candidates(t)
+        .into_iter()
+        .filter_map(|(algorithm, grid, strategy)| {
+            let report = price(t, algorithm, grid.as_deref(), strategy, p).ok()?;
+            let predicted_s = machine.predict(&report, p);
+            // A non-finite price (e.g. a degenerate hand-rolled gap
+            // curve) must not be allowed to "win" every comparison.
+            if !predicted_s.is_finite() {
+                return None;
+            }
+            Some(ScoredCandidate { algorithm, grid, strategy, predicted_s, measured_s: None })
+        })
+        .collect();
+    if scored.is_empty() {
+        return Err(FftError::Unsupported {
+            reason: format!(
+                "no feasible (algorithm, grid, strategy) candidate for shape {:?} on p = {p}",
+                t.shape
+            ),
+        });
+    }
+    // Stable: equal predictions keep the enumeration preference order.
+    scored.sort_by(|a, b| {
+        a.predicted_s.partial_cmp(&b.predicted_s).expect("finite by construction")
+    });
+
+    if let PlannerMode::Measure { top_k } = mode {
+        let k = top_k.clamp(1, scored.len());
+        let mut best: Option<(f64, usize, Arc<PlannedFft>)> = None;
+        for i in 0..k {
+            let Ok(planned) = plan(scored[i].algorithm, &scored[i].descriptor(t)) else {
+                continue;
+            };
+            let Ok(secs) = warm_trial_seconds(&planned) else { continue };
+            scored[i].measured_s = Some(secs);
+            if best.as_ref().map(|(b, _, _)| secs < *b).unwrap_or(true) {
+                best = Some((secs, i, planned));
+            }
+        }
+        if let Some((_, _, chosen)) = best {
+            return Ok(Arc::new(PlannedFft::new_auto(t.clone(), chosen, scored)));
+        }
+        // Every shortlisted candidate failed to plan or run; fall
+        // through to the analytic order below.
+    }
+
+    // Cheapest predicted candidate that actually plans wins — planning
+    // is the authoritative feasibility check, so a cost-model row that
+    // overstates what an algorithm supports cannot make Auto fail.
+    let mut last_err = None;
+    for i in 0..scored.len() {
+        let (algorithm, descriptor) = (scored[i].algorithm, scored[i].descriptor(t));
+        match plan(algorithm, &descriptor) {
+            Ok(chosen) => return Ok(Arc::new(PlannedFft::new_auto(t.clone(), chosen, scored))),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.expect("scored is non-empty"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::GapCurve;
+
+    #[test]
+    fn candidates_cover_grids_strategies_and_baselines() {
+        // c2c [64, 64] p=4: 3 fftu grids + 3 popovici + slab + pencil
+        // r=1 + heffte, gathered only.
+        let t = Transform::new(&[64, 64]).procs(4);
+        let cands = candidates(&t);
+        assert_eq!(cands.len(), 3 + 3 + 1 + 1 + 1);
+        assert!(cands.iter().all(|(_, _, s)| *s == DistStrategy::Gathered));
+        // The first candidate is FFTU on choose_grid's pick.
+        assert_eq!(cands[0].0, Algorithm::Fftu);
+        assert_eq!(cands[0].1.as_deref(), Some(&[2usize, 2][..]));
+        // dct2 adds the zig-zag variants of the fftu grids.
+        let t = Transform::new(&[64, 64]).procs(4).dct2();
+        let zz = candidates(&t)
+            .iter()
+            .filter(|(_, _, s)| *s == DistStrategy::ZigZag)
+            .count();
+        assert_eq!(zz, 3);
+        // An explicitly zig-zag descriptor restricts the search.
+        let t = Transform::new(&[64, 64]).procs(4).dct2().zigzag();
+        assert!(candidates(&t)
+            .iter()
+            .all(|(a, _, s)| *a == Algorithm::Fftu && *s == DistStrategy::ZigZag));
+    }
+
+    #[test]
+    fn pricing_rejects_infeasible_candidates_not_the_whole_plan() {
+        // [15, 15] with p = 3: no cyclic grid exists (3^2 does not
+        // divide 15), but slab splits 15 rows over 3 ranks fine.
+        let t = Transform::new(&[15, 15]).procs(3);
+        let auto = plan_auto(&t, &Machine::planner_default(), PlannerMode::Estimate).unwrap();
+        let chosen = auto.chosen().unwrap();
+        assert!(!matches!(chosen.algorithm(), Algorithm::Fftu | Algorithm::Popovici));
+    }
+
+    #[test]
+    fn extreme_machines_flip_the_choice() {
+        let t = Transform::new(&[64, 64]).procs(4);
+        // All communication free: only flops count, and FFTU's twiddle
+        // superstep makes it strictly costlier than a transpose
+        // baseline — the flop-minimal candidate wins.
+        let free_comm = Machine {
+            name: "free-comm",
+            g_mem: 0.0,
+            g_net: GapCurve::Const(0.0),
+            l_sync: 0.0,
+            t_msg: 0.0,
+            ..Machine::snellius_like()
+        };
+        let auto = plan_auto(&t, &free_comm, PlannerMode::Estimate).unwrap();
+        assert_ne!(auto.chosen().unwrap().algorithm(), Algorithm::Fftu);
+        // A ruinously expensive network: the h-minimal candidate —
+        // FFTU's single all-to-all of h = (N/p)(1 - 1/p) — wins.
+        let wan = Machine {
+            name: "wan",
+            g_net: GapCurve::Const(1.0),
+            ..Machine::snellius_like()
+        };
+        let auto = plan_auto(&t, &wan, PlannerMode::Estimate).unwrap();
+        assert_eq!(auto.chosen().unwrap().algorithm(), Algorithm::Fftu);
+    }
+
+    #[test]
+    fn measure_mode_times_the_shortlist() {
+        let t = Transform::new(&[16, 16]).procs(4);
+        let auto =
+            plan_auto(&t, &Machine::planner_default(), PlannerMode::Measure { top_k: 3 })
+                .unwrap();
+        let table = auto.planner_table().unwrap();
+        let measured = table.iter().filter(|c| c.measured_s.is_some()).count();
+        assert!((1..=3).contains(&measured), "measured {measured} of top 3");
+        // The winner is one of the measured candidates.
+        let chosen = auto.chosen().unwrap();
+        assert!(table.iter().any(|c| {
+            c.measured_s.is_some()
+                && c.algorithm == chosen.algorithm()
+                && c.grid.as_deref() == chosen.grid()
+        }));
+    }
+}

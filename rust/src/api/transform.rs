@@ -446,6 +446,18 @@ impl Transform {
     pub fn plan(&self, algo: Algorithm) -> Result<Arc<PlannedFft>, FftError> {
         plan(algo, self)
     }
+
+    /// Plan this descriptor with the autotuning planner — shorthand for
+    /// [`Self::plan`]`(`[`Algorithm::Auto`]`)`. Every feasible
+    /// (algorithm, grid, strategy) candidate is priced against the
+    /// default [`crate::costmodel::Machine`] and the cheapest is
+    /// planned; the decision is exposed through
+    /// [`PlannedFft::chosen`]. Use [`super::planner::plan_auto`] to
+    /// override the machine or request measured (trial-execute)
+    /// planning.
+    pub fn auto(&self) -> Result<Arc<PlannedFft>, FftError> {
+        plan(Algorithm::Auto, self)
+    }
 }
 
 #[cfg(test)]

@@ -22,6 +22,7 @@
 
 use std::time::Instant;
 
+use crate::api::FftError;
 use crate::bsp::{CostReport, SuperstepKind};
 use crate::fft::{fftn_inplace, C64, Direction};
 
@@ -31,31 +32,85 @@ pub enum GapCurve {
     /// Constant g (first-principles mode).
     Const(f64),
     /// Piecewise (log p)-linear interpolation through fitted points
-    /// `(p, g)`; clamped at the ends.
+    /// `(p, g)`; clamped at the ends. Build through [`GapCurve::fitted`]
+    /// to get the point list validated; a hand-rolled variant with
+    /// degenerate points still prices totally (no NaN, no panic), it
+    /// just clamps instead of interpolating across the bad segment.
     Fitted(Vec<(usize, f64)>),
 }
 
 impl GapCurve {
+    /// Validated fitted-curve constructor: the planner compares
+    /// predicted times with `<`, and a single NaN gap would make a
+    /// broken candidate "win" every comparison (`NaN < x` is always
+    /// false). So the points are checked once, here: non-empty, every
+    /// `p >= 1`, strictly increasing `p` (duplicate or non-monotone
+    /// points are what made the old `at` divide by
+    /// `ln(p1) - ln(p0) = 0`), and finite non-negative `g`.
+    pub fn fitted(points: Vec<(usize, f64)>) -> Result<GapCurve, FftError> {
+        if points.is_empty() {
+            return Err(FftError::BadDescriptor {
+                reason: "gap curve needs at least one fitted (p, g) point".into(),
+            });
+        }
+        for (i, &(p, g)) in points.iter().enumerate() {
+            if p == 0 {
+                return Err(FftError::BadDescriptor {
+                    reason: "gap curve points need p >= 1 (ln 0 has no interpolant)".into(),
+                });
+            }
+            if !g.is_finite() || g < 0.0 {
+                return Err(FftError::BadDescriptor {
+                    reason: format!("gap curve point (p = {p}) has a non-finite or negative g"),
+                });
+            }
+            if i > 0 && points[i - 1].0 >= p {
+                return Err(FftError::BadDescriptor {
+                    reason: format!(
+                        "gap curve points must have strictly increasing p, got {} then {}",
+                        points[i - 1].0,
+                        p
+                    ),
+                });
+            }
+        }
+        Ok(GapCurve::Fitted(points))
+    }
+
+    /// Effective gap at `p`. Total: curves that `fitted` would reject
+    /// (empty, duplicate/non-monotone p, a p = 0 point) clamp to the
+    /// nearest usable value instead of returning NaN or panicking.
     pub fn at(&self, p: usize) -> f64 {
         match self {
             GapCurve::Const(g) => *g,
             GapCurve::Fitted(points) => {
-                assert!(!points.is_empty());
-                if p <= points[0].0 {
-                    return points[0].1;
+                let Some(&(p_first, g_first)) = points.first() else {
+                    // Degenerate hand-rolled curve: a free network is
+                    // the least surprising total answer.
+                    return 0.0;
+                };
+                if p <= p_first {
+                    return g_first;
                 }
-                if p >= points[points.len() - 1].0 {
-                    return points[points.len() - 1].1;
+                let &(p_last, g_last) = points.last().expect("non-empty checked above");
+                if p >= p_last {
+                    return g_last;
                 }
                 for w in points.windows(2) {
                     let ((p0, g0), (p1, g1)) = (w[0], w[1]);
                     if p >= p0 && p <= p1 {
+                        if p1 <= p0 || p0 == 0 {
+                            // Duplicate/non-monotone segment or ln(0):
+                            // no slope to interpolate on — clamp left.
+                            return g0;
+                        }
                         let x = ((p as f64).ln() - (p0 as f64).ln())
                             / ((p1 as f64).ln() - (p0 as f64).ln());
                         return g0 + x * (g1 - g0);
                     }
                 }
-                unreachable!()
+                // Non-monotone lists can skip every window; clamp right.
+                g_last
             }
         }
     }
@@ -103,7 +158,11 @@ impl Machine {
 
     /// Snellius machine with `g_net(p)` fitted from a paper FFTU column
     /// (rows of `(p, seconds)`), given the FFT shape of that table.
-    /// Rows with p = 1 are skipped (no network term to fit).
+    /// Rows with p = 1 are skipped (no network term to fit). The rows
+    /// are sorted and de-duplicated before the curve is built through
+    /// [`GapCurve::fitted`]; if no row yields a usable point the
+    /// first-principles constant gap is kept instead of committing an
+    /// empty (formerly panicking) curve.
     pub fn fitted_snellius(shape: &[usize], fftu_rows: &[(usize, f64)]) -> Machine {
         let base = Machine::snellius_like();
         let n: f64 = shape.iter().map(|&x| x as f64).product();
@@ -121,7 +180,23 @@ impl Machine {
                 points.push((p, resid / h));
             }
         }
-        Machine { name: "snellius-fitted", g_net: GapCurve::Fitted(points), ..base }
+        points.sort_unstable_by_key(|&(p, _)| p);
+        points.dedup_by_key(|&mut (p, _)| p);
+        let g_net = GapCurve::fitted(points).unwrap_or_else(|_| base.g_net.clone());
+        Machine { name: "snellius-fitted", g_net, ..base }
+    }
+
+    /// The autotuning planner's default pricing machine: `g_net(p)`
+    /// fitted from the paper's Table 4.1 FFTU column on the
+    /// `1024^3` shape — the same machine `report::tables` prints its
+    /// headline comparison with, so `Transform::auto()` and the report
+    /// tables rank candidates identically out of the box.
+    pub fn planner_default() -> Machine {
+        let rows: Vec<(usize, f64)> = crate::report::paper::TABLE_4_1
+            .iter()
+            .filter_map(|r| r.1.map(|t| (r.0, t)))
+            .collect();
+        Machine::fitted_snellius(&[1024, 1024, 1024], &rows)
     }
 
     /// Measure this host (used for the executed-scale sanity columns).
@@ -219,6 +294,42 @@ mod tests {
         assert_eq!(c.at(16), 3.0e-7);
         let mid = c.at(4);
         assert!(mid > 1.0e-7 && mid < 3.0e-7, "{mid}");
+    }
+
+    #[test]
+    fn fitted_constructor_rejects_degenerate_point_lists() {
+        assert!(GapCurve::fitted(vec![]).is_err(), "empty");
+        assert!(GapCurve::fitted(vec![(0, 1.0e-7)]).is_err(), "p = 0");
+        assert!(GapCurve::fitted(vec![(2, 1.0e-7), (2, 3.0e-7)]).is_err(), "duplicate p");
+        assert!(GapCurve::fitted(vec![(8, 1.0e-7), (2, 3.0e-7)]).is_err(), "non-monotone p");
+        assert!(GapCurve::fitted(vec![(2, f64::NAN)]).is_err(), "NaN g");
+        assert!(GapCurve::fitted(vec![(2, -1.0e-7)]).is_err(), "negative g");
+        let ok = GapCurve::fitted(vec![(2, 1.0e-7), (8, 3.0e-7)]).unwrap();
+        assert!((ok.at(2) - 1.0e-7).abs() < 1e-20);
+    }
+
+    #[test]
+    fn gap_curve_at_is_total_on_degenerate_curves() {
+        // Regression: each of these made the old `at` return NaN (the
+        // ln-interpolation divided by zero / took ln 0) or panic, and a
+        // NaN price silently wins every planner comparison.
+        let zero_p = GapCurve::Fitted(vec![(0, 1.0e-7), (8, 3.0e-7)]);
+        assert!(zero_p.at(4).is_finite(), "p = 0 point produced NaN");
+        let empty = GapCurve::Fitted(vec![]);
+        assert!(empty.at(4).is_finite(), "empty curve panicked");
+        let non_monotone = GapCurve::Fitted(vec![(2, 1.0), (16, 2.0), (4, 3.0)]);
+        for p in [1usize, 3, 8, 32] {
+            assert!(non_monotone.at(p).is_finite(), "p = {p}");
+        }
+    }
+
+    #[test]
+    fn planner_default_machine_prices_finitely() {
+        let m = Machine::planner_default();
+        for p in [1usize, 2, 4, 64, 4096, 100_000] {
+            let rep = super::super::analytic::fftu_report(&[64, 64], 4);
+            assert!(m.predict(&rep, p).is_finite(), "p = {p}");
+        }
     }
 
     #[test]

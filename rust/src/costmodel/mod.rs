@@ -9,4 +9,4 @@ pub use analytic::{
     fftu_trig_report, fftu_trig_zigzag_report, heffte_report, pencil_report, popovici_report,
     r2c_wrap_report, real_wrap_report, slab_report, trig_wrap_report,
 };
-pub use machine::Machine;
+pub use machine::{GapCurve, Machine};

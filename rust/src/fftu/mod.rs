@@ -13,7 +13,7 @@ pub mod zigzag;
 
 pub use group_cyclic::{comm_supersteps_needed, cyclic_to_group_cyclic, group_cyclic_dist};
 pub use pack::{pack_twiddle, pack_twiddle_odometer, unpack, PackProgram, PackRow, TwiddleTables};
-pub use plan::{axis_pmax, choose_grid, fftu_pmax, FftuPlan};
+pub use plan::{axis_pmax, choose_grid, enumerate_grids, fftu_pmax, FftuPlan};
 pub use worker::Worker;
 
 use std::sync::{Arc, Mutex, MutexGuard};

@@ -419,6 +419,49 @@ pub fn choose_grid(shape: &[usize], p: usize) -> Option<Vec<usize>> {
     Some(grid)
 }
 
+/// Every processor grid the cyclic family admits for this shape: all
+/// per-axis splits with `prod p_l = p` and `p_l^2 | n_l` (§2.3). The
+/// list is exhaustive, deterministic, and ordered with
+/// [`choose_grid`]'s pick first (when one exists) followed by the
+/// remaining grids lexicographically — so a stable sort on equal
+/// predicted costs keeps the autotuning planner's tie-break identical
+/// to an explicit `Grid::Auto` request. Empty when `p` exceeds
+/// [`fftu_pmax`] or its prime factors do not fit any axis.
+pub fn enumerate_grids(shape: &[usize], p: usize) -> Vec<Vec<usize>> {
+    fn rec(
+        shape: &[usize],
+        axis: usize,
+        rem: usize,
+        cur: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if axis == shape.len() {
+            if rem == 1 {
+                out.push(cur.clone());
+            }
+            return;
+        }
+        let mut q = 1usize;
+        while q <= rem {
+            if rem % q == 0 && shape[axis] % (q * q) == 0 {
+                cur.push(q);
+                rec(shape, axis + 1, rem / q, cur, out);
+                cur.pop();
+            }
+            q += 1;
+        }
+    }
+    let mut out = Vec::new();
+    rec(shape, 0, p, &mut Vec::with_capacity(shape.len()), &mut out);
+    if let Some(default) = choose_grid(shape, p) {
+        if let Some(pos) = out.iter().position(|g| *g == default) {
+            out.remove(pos);
+        }
+        out.insert(0, default);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -481,6 +524,32 @@ mod tests {
         // Larger-n_l preference on an equal-headroom tie that scan order
         // alone would resolve differently.
         assert_eq!(choose_grid(&[4, 16, 16], 2).unwrap(), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn enumerate_grids_is_exhaustive_and_leads_with_the_default() {
+        // [64, 64] at p = 4: q in {1, 2} per axis (4^2 = 16 | 64 too),
+        // so {[1,4], [2,2], [4,1]} — with choose_grid's [2,2] first.
+        let grids = enumerate_grids(&[64, 64], 4);
+        assert_eq!(grids[0], choose_grid(&[64, 64], 4).unwrap());
+        let mut sorted = grids.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![vec![1, 4], vec![2, 2], vec![4, 1]]);
+        // Every grid is valid and complete.
+        for g in &grids {
+            assert_eq!(g.iter().product::<usize>(), 4);
+            for (l, &q) in g.iter().enumerate() {
+                assert_eq!(64 % (q * q), 0, "{g:?} axis {l}");
+            }
+        }
+        // Infeasible p: empty, matching choose_grid's None.
+        assert!(enumerate_grids(&[16, 16], 17).is_empty());
+        assert!(enumerate_grids(&[15, 15], 3).is_empty());
+        assert!(choose_grid(&[15, 15], 3).is_none());
+        // p = 1 has exactly the trivial grid.
+        assert_eq!(enumerate_grids(&[8, 8], 1), vec![vec![1, 1]]);
+        // Mixed-room shape: only axis 0 can hold a factor of 3.
+        assert_eq!(enumerate_grids(&[18, 8], 6), vec![vec![3, 2]]);
     }
 
     #[test]

@@ -12,17 +12,22 @@
 //! ## Quickstart
 //!
 //! Everything goes through the [`api`] facade: describe the transform
-//! with a [`Transform`], pick an [`Algorithm`], `plan`, `execute`.
-//! Plans validate once, are immutable, and amortize across repeated and
-//! batched transforms (cache them with [`PlanCache`]):
+//! with a [`Transform`], let the autotuning planner pick the algorithm
+//! ([`Transform::auto`] — or pin one with an explicit [`Algorithm`]),
+//! `execute`. Plans validate once, are immutable, and amortize across
+//! repeated and batched transforms (cache them with [`PlanCache`]):
 //!
 //! ```
 //! use fftu::api::{Algorithm, Normalization, Transform};
 //! use fftu::fft::{max_abs_diff, C64};
 //!
-//! // A 16x16 array on 4 processors, grid chosen automatically.
+//! // A 16x16 array on 4 processors: the planner prices every feasible
+//! // (algorithm, grid, strategy) candidate on the fitted cost model
+//! // and plans the cheapest — FFTU on this shape.
 //! let x: Vec<C64> = (0..256).map(|i| C64::new(1.0 + i as f64, 0.5)).collect();
-//! let fwd = Transform::new(&[16, 16]).procs(4).plan(Algorithm::Fftu)?;
+//! let fwd = Transform::new(&[16, 16]).procs(4).auto()?;
+//! let chosen = fwd.chosen().expect("auto plans expose their pick");
+//! assert_eq!(chosen.algorithm(), Algorithm::Fftu);
 //! let y = fwd.execute(&x)?;
 //! // FFTU's headline property: exactly ONE communication superstep.
 //! assert_eq!(y.report.comm_supersteps(), 1);
@@ -255,7 +260,7 @@ pub mod testing;
 
 pub use analysis::{Lint, LintOutcome, ScheduleReport};
 pub use api::{
-    Algorithm, CacheStats, DistFft, DistStrategy, Execution, FftError, Grid, Kind, Normalization,
-    PlanCache, RealExecution, Transform,
+    plan_auto, Algorithm, CacheStats, DistFft, DistStrategy, Execution, FftError, Grid, Kind,
+    Normalization, PlanCache, PlannerMode, RealExecution, ScoredCandidate, Transform,
 };
 pub use fft::{C64, Direction};

@@ -7,15 +7,24 @@
 //! strong-scaling *time* columns of the paper tables come from the
 //! calibrated cost model over the exact executed ledgers (DESIGN.md §6).
 //!
-//! Both helpers sit on the [`crate::api`] facade: `measure_fftu` times
-//! the steady state (plan built once, workers persistent, `reps`
-//! transforms), `measure_once` times one cold execution of any
-//! [`Algorithm`] including its planning cost.
+//! The helpers sit on the [`crate::api`] facade and are explicit about
+//! what the clock covers:
+//!
+//! - [`measure_fftu`] times the steady state (plan built once, workers
+//!   persistent, `reps` transforms);
+//! - [`measure_cold`] / [`measure_cold_kind`] time one **cold**
+//!   execution — planning, scatter, and gather included (sanity rows);
+//! - [`measure_warm`] / [`measure_warm_kind`] time one **warm**
+//!   execution — plan once outside the clock, run once discarded (the
+//!   per-rank workers get built), time the second run. This is the FFTW
+//!   `Measure` discipline and what the autotuning planner's trial
+//!   executes calibrate against; a cold number would let plan
+//!   construction pollute the comparison.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::api::{plan, Algorithm, FftError, Kind, Normalization, Transform};
+use crate::api::{plan, Algorithm, FftError, Kind, Normalization, PlannedFft, Transform};
 use crate::bsp::{run_spmd, CostReport};
 use crate::fft::{realnd, C64, Direction, Planner};
 use crate::fftu::{FftuPlan, Worker};
@@ -49,22 +58,138 @@ pub fn measure_fftu(
     Ok((wall, outcome.report))
 }
 
-/// One-shot wall-clock + ledger for any algorithm through the unified
-/// facade (includes planning, scatter, and gather — used for sanity
-/// rows, not headline numbers; `measure_fftu` is the precise path).
+/// The kind-specific descriptor + inputs both the cold and warm paths
+/// share; inputs are always prepared outside any clock.
+fn build_descriptor(
+    kind: Kind,
+    shape: &[usize],
+    p: usize,
+    pgrid: Option<&[usize]>,
+) -> Result<Transform, FftError> {
+    let descriptor = match pgrid {
+        Some(g) => Transform::new(shape).grid(g),
+        None => Transform::new(shape).procs(p),
+    };
+    Ok(match kind {
+        Kind::C2C => descriptor,
+        Kind::R2C => descriptor.r2c(),
+        Kind::C2R => {
+            realnd::validate_even_last_axis(shape)?;
+            descriptor.c2r().normalization(Normalization::ByN)
+        }
+        Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => descriptor.kind(kind),
+    })
+}
+
+/// Execute one transform of the descriptor's kind and return its
+/// ledger; the caller decides what the surrounding clock covers.
+fn execute_once(
+    planned: &PlannedFft,
+    kind: Kind,
+    shape: &[usize],
+    rng: &mut Rng,
+) -> Result<CostReport, FftError> {
+    let n: usize = shape.iter().product();
+    match kind {
+        Kind::C2C => {
+            let global: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+            Ok(planned.execute(&global)?.report)
+        }
+        Kind::R2C => {
+            let global: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            Ok(planned.execute_r2c(&global)?.report)
+        }
+        Kind::C2R => {
+            // The timed region receives a genuine Hermitian
+            // half-spectrum (built sequentially, outside the clock) so
+            // the run is representative.
+            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            let spec = realnd::rfftn(&x, shape);
+            Ok(planned.execute_c2r(&spec)?.report)
+        }
+        Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
+            let global: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
+            Ok(planned.execute_trig(&global)?.report)
+        }
+    }
+}
+
+/// One-shot **cold** wall-clock + ledger for any algorithm through the
+/// unified facade: the clock covers planning, scatter, execution, and
+/// gather. Used for the sanity rows, not headline numbers
+/// ([`measure_fftu`] is the precise steady-state path).
+pub fn measure_cold(
+    algo: Algorithm,
+    shape: &[usize],
+    p: usize,
+    pgrid: Option<&[usize]>,
+) -> Result<(f64, CostReport), FftError> {
+    measure_cold_kind(algo, Kind::C2C, shape, p, pgrid)
+}
+
+/// [`measure_cold`] for any transform [`Kind`].
+pub fn measure_cold_kind(
+    algo: Algorithm,
+    kind: Kind,
+    shape: &[usize],
+    p: usize,
+    pgrid: Option<&[usize]>,
+) -> Result<(f64, CostReport), FftError> {
+    let descriptor = build_descriptor(kind, shape, p, pgrid)?;
+    let mut rng = Rng::new(0xBF);
+    let t0 = Instant::now();
+    let planned = plan(algo, &descriptor)?;
+    let report = execute_once(&planned, kind, shape, &mut rng)?;
+    Ok((t0.elapsed().as_secs_f64(), report))
+}
+
+/// One-shot **warm** wall-clock + ledger: plan outside the clock, run
+/// once discarded (building the persistent per-rank workers), then time
+/// the second run — FFTW's `Measure` idiom. The returned ledger is the
+/// timed run's only.
+pub fn measure_warm(
+    algo: Algorithm,
+    shape: &[usize],
+    p: usize,
+    pgrid: Option<&[usize]>,
+) -> Result<(f64, CostReport), FftError> {
+    measure_warm_kind(algo, Kind::C2C, shape, p, pgrid)
+}
+
+/// [`measure_warm`] for any transform [`Kind`].
+pub fn measure_warm_kind(
+    algo: Algorithm,
+    kind: Kind,
+    shape: &[usize],
+    p: usize,
+    pgrid: Option<&[usize]>,
+) -> Result<(f64, CostReport), FftError> {
+    let descriptor = build_descriptor(kind, shape, p, pgrid)?;
+    let mut rng = Rng::new(0xBF);
+    let planned = plan(algo, &descriptor)?;
+    let _ = execute_once(&planned, kind, shape, &mut rng)?;
+    let t0 = Instant::now();
+    let report = execute_once(&planned, kind, shape, &mut rng)?;
+    Ok((t0.elapsed().as_secs_f64(), report))
+}
+
+/// Renamed to [`measure_cold`]: the old name did not say the clock
+/// includes plan construction.
+#[deprecated(note = "renamed to `measure_cold`; use `measure_warm` for plan-excluded timing")]
 pub fn measure_once(
     algo: Algorithm,
     shape: &[usize],
     p: usize,
     pgrid: Option<&[usize]>,
 ) -> Result<(f64, CostReport), FftError> {
-    measure_once_kind(algo, Kind::C2C, shape, p, pgrid)
+    measure_cold(algo, shape, p, pgrid)
 }
 
-/// [`measure_once`] for any transform [`Kind`]: the real kinds time the
-/// full r2c/c2r path (pack + half-shape complex core + untangle). For
-/// C2R the timed region receives a genuine Hermitian half-spectrum
-/// (built sequentially outside the clock) so the run is representative.
+/// Renamed to [`measure_cold_kind`]; see [`measure_once`].
+#[deprecated(
+    note = "renamed to `measure_cold_kind`; use `measure_warm_kind` for plan-excluded timing"
+)]
 pub fn measure_once_kind(
     algo: Algorithm,
     kind: Kind,
@@ -72,47 +197,7 @@ pub fn measure_once_kind(
     p: usize,
     pgrid: Option<&[usize]>,
 ) -> Result<(f64, CostReport), FftError> {
-    let n: usize = shape.iter().product();
-    let mut rng = Rng::new(0xBF);
-    let descriptor = match pgrid {
-        Some(g) => Transform::new(shape).grid(g),
-        None => Transform::new(shape).procs(p),
-    };
-    match kind {
-        Kind::C2C => {
-            let global: Vec<C64> =
-                (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
-            let t0 = Instant::now();
-            let planned = plan(algo, &descriptor)?;
-            let exec = planned.execute(&global)?;
-            Ok((t0.elapsed().as_secs_f64(), exec.report))
-        }
-        Kind::R2C => {
-            let global: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
-            let t0 = Instant::now();
-            let planned = plan(algo, &descriptor.r2c())?;
-            let exec = planned.execute_r2c(&global)?;
-            Ok((t0.elapsed().as_secs_f64(), exec.report))
-        }
-        Kind::C2R => {
-            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
-            realnd::validate_even_last_axis(shape)?;
-            let spec = realnd::rfftn(&x, shape);
-            let t0 = Instant::now();
-            let planned =
-                plan(algo, &descriptor.c2r().normalization(Normalization::ByN))?;
-            let exec = planned.execute_c2r(&spec)?;
-            Ok((t0.elapsed().as_secs_f64(), exec.report))
-        }
-        // Trig kinds: real in, real coefficients out, full-shape core.
-        Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
-            let global: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
-            let t0 = Instant::now();
-            let planned = plan(algo, &descriptor.kind(kind))?;
-            let exec = planned.execute_trig(&global)?;
-            Ok((t0.elapsed().as_secs_f64(), exec.report))
-        }
-    }
+    measure_cold_kind(algo, kind, shape, p, pgrid)
 }
 
 #[cfg(test)]
@@ -127,18 +212,49 @@ mod tests {
     }
 
     #[test]
-    fn measure_once_kind_covers_real_paths() {
+    fn measure_cold_kind_covers_real_paths() {
         let shape = [8usize, 16];
         for kind in [Kind::R2C, Kind::C2R, Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
             let (wall, report) =
-                measure_once_kind(Algorithm::Fftu, kind, &shape, 2, None).unwrap();
+                measure_cold_kind(Algorithm::Fftu, kind, &shape, 2, None).unwrap();
             assert!(wall > 0.0, "{kind:?}");
             assert_eq!(report.comm_supersteps(), 1, "{kind:?}");
         }
     }
 
     #[test]
-    fn measure_once_all_algorithms() {
+    fn measure_warm_kind_times_one_run_only() {
+        let shape = [8usize, 16];
+        for kind in
+            [Kind::C2C, Kind::R2C, Kind::C2R, Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3]
+        {
+            let (wall, report) =
+                measure_warm_kind(Algorithm::Fftu, kind, &shape, 2, None).unwrap();
+            assert!(wall > 0.0, "{kind:?}");
+            // The ledger is the timed (second) run's alone: exactly one
+            // all-to-all, not the warm-up's two.
+            assert_eq!(report.comm_supersteps(), 1, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn warm_excludes_plan_time_cold_includes_it() {
+        // Regression for the cold-timing bias: planning compiles
+        // redistributions and twiddle tables, so a cold measurement is
+        // strictly slower in expectation. Retry to tolerate scheduler
+        // noise on the single-core test bed — failing means warm never
+        // beat cold, i.e. both clocks still cover planning.
+        let shape = [64usize, 64];
+        let ok = (0..5).any(|_| {
+            let cold = measure_cold(Algorithm::Fftu, &shape, 4, None).unwrap().0;
+            let warm = measure_warm(Algorithm::Fftu, &shape, 4, None).unwrap().0;
+            warm < cold
+        });
+        assert!(ok, "warm measurement never beat cold across 5 attempts");
+    }
+
+    #[test]
+    fn measure_cold_all_algorithms() {
         let shape = [8usize, 8, 8];
         for algo in [
             Algorithm::Fftu,
@@ -147,8 +263,18 @@ mod tests {
             Algorithm::Heffte,
             Algorithm::Popovici,
         ] {
-            let (wall, _) = measure_once(algo, &shape, 4, None).unwrap();
+            let (wall, _) = measure_cold(algo, &shape, 4, None).unwrap();
             assert!(wall > 0.0, "{algo:?}");
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_aliases_still_measure() {
+        let (wall, _) = measure_once(Algorithm::Fftu, &[8, 8], 2, None).unwrap();
+        assert!(wall > 0.0);
+        let (wall, _) =
+            measure_once_kind(Algorithm::Fftu, Kind::Dct2, &[8, 8], 2, None).unwrap();
+        assert!(wall > 0.0);
     }
 }

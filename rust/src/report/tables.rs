@@ -17,7 +17,7 @@ use crate::costmodel::{
 };
 use crate::fftu::{choose_grid, fftu_pmax};
 
-use super::measure::{measure_fftu, measure_once};
+use super::measure::{measure_cold, measure_fftu};
 use super::paper::{PaperRow, SEQ_FFTW_1024_3, SEQ_FFTW_2_24X64, SEQ_FFTW_64_5, TABLE_4_1, TABLE_4_2, TABLE_4_3};
 
 /// Machine fitted from a table's own FFTU column (see
@@ -175,14 +175,14 @@ pub fn table_executed(title: &str, shape: &[usize], plist: &[usize], reps: usize
             }
             None => (None, 0, 0),
         };
-        let slab = measure_once(Algorithm::slab(), shape, p, None).ok().map(|x| x.0);
+        let slab = measure_cold(Algorithm::slab(), shape, p, None).ok().map(|x| x.0);
         let d = shape.len();
         let r = if d >= 3 { 2 } else { 1 };
-        let pencil = measure_once(Algorithm::Pencil { r, out: OutputDist::Different }, shape, p, None)
+        let pencil = measure_cold(Algorithm::Pencil { r, out: OutputDist::Different }, shape, p, None)
             .ok()
             .map(|x| x.0);
-        let heffte = measure_once(Algorithm::Heffte, shape, p, None).ok().map(|x| x.0);
-        let popovici = measure_once(Algorithm::Popovici, shape, p, None).ok().map(|x| x.0);
+        let heffte = measure_cold(Algorithm::Heffte, shape, p, None).ok().map(|x| x.0);
+        let popovici = measure_cold(Algorithm::Popovici, shape, p, None).ok().map(|x| x.0);
         t.row(vec![
             p.to_string(),
             fmt_secs(fftu_wall),

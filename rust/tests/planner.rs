@@ -1,0 +1,174 @@
+//! Autotuning-planner properties (PR 7).
+//!
+//! `Algorithm::Auto` prices every feasible (algorithm, grid, strategy)
+//! candidate on the analytic cost model and plans the cheapest. These
+//! tests pin the properties the planner must keep:
+//!
+//! - it never selects an infeasible candidate — shapes where the cyclic
+//!   family has no valid grid still plan (through a baseline) and match
+//!   the naive DFT oracle;
+//! - its pick round-trips bit-identically against an explicit request
+//!   of the same (algorithm, grid, strategy);
+//! - the choice responds to the machine: free communication steers to
+//!   the flop-minimal candidate, an expensive network to the h-minimal
+//!   one (FFTU's single all-to-all — the paper's headline);
+//! - repeated `auto` requests are plan-cache hits (pointer-identical);
+//! - `Measure` mode times a warm shortlist and commits to the measured
+//!   minimum;
+//! - every planner-chosen schedule passes the static lint suite.
+
+use std::sync::Arc;
+
+use fftu::api::plan;
+use fftu::costmodel::{GapCurve, Machine};
+use fftu::fft::{dft_nd, max_abs_diff, C64, Direction};
+use fftu::testing::Rng;
+use fftu::{plan_auto, Algorithm, Kind, PlanCache, PlannerMode, Transform};
+
+fn random_complex(n: usize, seed: u64) -> Vec<C64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+}
+
+#[test]
+fn auto_never_selects_an_infeasible_candidate() {
+    // [15, 15] at p = 3 has no cyclic grid at all (3^2 divides neither
+    // axis), so FFTU and Popovici are infeasible; Auto must fall back
+    // to a baseline rather than fail or pick an unplannable row.
+    let sweep: [(Vec<usize>, usize); 4] = [
+        (vec![15, 15], 3),
+        (vec![16, 16], 4),
+        (vec![8, 8, 8], 4),
+        (vec![12, 18], 6),
+    ];
+    for (shape, p) in &sweep {
+        let t = Transform::new(shape).procs(*p);
+        let planned = t.auto().unwrap_or_else(|e| panic!("auto {shape:?} p={p}: {e}"));
+        assert_eq!(planned.algorithm(), Algorithm::Auto);
+        let chosen = planned.chosen().expect("auto plans expose their pick");
+        assert_ne!(chosen.algorithm(), Algorithm::Auto, "{shape:?} p={p}");
+        let n: usize = shape.iter().product();
+        let x = random_complex(n, 0xA0 + *p as u64);
+        let y = planned.execute(&x).unwrap().output;
+        let want = dft_nd(&x, shape, Direction::Forward);
+        assert!(
+            max_abs_diff(&y, &want) < 1e-9 * n as f64,
+            "{shape:?} p={p} via {}",
+            chosen.algorithm().name()
+        );
+    }
+    // The infeasible case really did go through a baseline.
+    let fallback = Transform::new(&[15, 15]).procs(3).auto().unwrap();
+    let chosen = fallback.chosen().unwrap();
+    assert!(
+        !matches!(chosen.algorithm(), Algorithm::Fftu | Algorithm::Popovici),
+        "no cyclic grid exists for [15, 15] at p = 3, yet Auto chose {}",
+        chosen.algorithm().name()
+    );
+}
+
+#[test]
+fn auto_round_trips_bit_identically_with_the_explicit_request() {
+    let t = Transform::new(&[16, 16]).procs(4);
+    let auto = t.auto().unwrap();
+    let chosen = auto.chosen().unwrap();
+    // Request exactly what the planner picked, through the front door.
+    let explicit = plan(chosen.algorithm(), chosen.transform()).unwrap();
+    let x = random_complex(256, 0xB0);
+    let via_auto = auto.execute(&x).unwrap().output;
+    let via_explicit = explicit.execute(&x).unwrap().output;
+    // Bit-identical, not approximately equal: Auto delegates to a plan
+    // built by the same deterministic constructor.
+    assert_eq!(via_auto, via_explicit);
+    assert_eq!(explicit.grid(), chosen.grid());
+    assert_eq!(explicit.procs(), chosen.procs());
+}
+
+#[test]
+fn machine_extremes_steer_the_choice() {
+    let t = Transform::new(&[64, 64]).procs(4);
+    let base = Machine::planner_default();
+    // Free communication: only w_max / r_flops survives in Eq. (2.12),
+    // so the flop-minimal candidate wins — NOT FFTU, whose fused
+    // twiddle multiplications add ~12 N / p real flops to the core's
+    // 5 N log2 N.
+    let free_comm = Machine {
+        g_mem: 0.0,
+        g_net: GapCurve::Const(0.0),
+        l_sync: 0.0,
+        t_msg: 0.0,
+        ..base.clone()
+    };
+    let flop_minimal = plan_auto(&t, &free_comm, PlannerMode::Estimate).unwrap();
+    assert_ne!(flop_minimal.chosen().unwrap().algorithm(), Algorithm::Fftu);
+    // A network charging a full second per word dwarfs every other
+    // term, so the h-minimal candidate wins: FFTU's single all-to-all
+    // moves the fewest words — the paper's thesis as a planner test.
+    let wan = Machine { g_net: GapCurve::Const(1.0), ..base };
+    let h_minimal = plan_auto(&t, &wan, PlannerMode::Estimate).unwrap();
+    assert_eq!(h_minimal.chosen().unwrap().algorithm(), Algorithm::Fftu);
+}
+
+#[test]
+fn auto_is_a_plan_cache_hit_on_the_second_request() {
+    let cache = PlanCache::new(8);
+    let t = Transform::new(&[16, 16]).procs(4);
+    let first = cache.plan(Algorithm::Auto, &t).unwrap();
+    let second = cache.plan(Algorithm::Auto, &t).unwrap();
+    // The candidate sweep priced once; the repeat is the same Arc.
+    assert!(Arc::ptr_eq(&first, &second));
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.hits, 1);
+}
+
+#[test]
+fn measure_mode_times_a_warm_shortlist_and_commits_to_the_minimum() {
+    let t = Transform::new(&[16, 16]).procs(4);
+    let machine = Machine::planner_default();
+    let planned = plan_auto(&t, &machine, PlannerMode::Measure { top_k: 2 }).unwrap();
+    let table = planned.planner_table().unwrap();
+    let measured: Vec<&fftu::ScoredCandidate> =
+        table.iter().filter(|c| c.measured_s.is_some()).collect();
+    assert!(
+        (1..=2).contains(&measured.len()),
+        "Measure {{ top_k: 2 }} timed {} candidates",
+        measured.len()
+    );
+    // The winner is the measured minimum, not merely the predicted one.
+    let best = measured
+        .iter()
+        .min_by(|a, b| a.measured_s.partial_cmp(&b.measured_s).unwrap())
+        .unwrap();
+    let chosen = planned.chosen().unwrap();
+    assert_eq!(best.algorithm, chosen.algorithm());
+    // Execution still matches the oracle after the trial runs.
+    let x = random_complex(256, 0xC0);
+    let y = planned.execute(&x).unwrap().output;
+    let want = dft_nd(&x, &[16, 16], Direction::Forward);
+    assert!(max_abs_diff(&y, &want) < 1e-9);
+}
+
+#[test]
+fn every_planner_chosen_schedule_passes_the_lint_suite() {
+    let kinds = [
+        Kind::C2C,
+        Kind::R2C,
+        Kind::C2R,
+        Kind::Dct2,
+        Kind::Dct3,
+        Kind::Dst2,
+        Kind::Dst3,
+    ];
+    for kind in kinds {
+        let t = Transform::new(&[16, 16]).kind(kind).procs(4);
+        let planned = t.auto().unwrap_or_else(|e| panic!("auto {kind:?}: {e}"));
+        let report = planned.analyze().unwrap_or_else(|e| panic!("analyze {kind:?}: {e}"));
+        assert!(
+            report.passed(),
+            "planner-chosen {} plan fails lints for {kind:?}:\n{}",
+            planned.chosen().unwrap().algorithm().name(),
+            report.render()
+        );
+    }
+}
