@@ -130,7 +130,8 @@ fn main() {
             std::hint::black_box(&out);
         });
         let t_new = bench(reps, || {
-            let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
+            let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward)
+                .expect("fault-free bench session");
             std::hint::black_box(&out);
         });
         println!(

@@ -13,9 +13,15 @@
 //!   barrier, round `r + 1`'s deposit can clobber an uncollected round-`r`
 //!   packet),
 //! - a collect always finds a packet, and from the right round,
-//! - the machine never deadlocks (some process can always step), and
+//! - the machine never deadlocks (some process can always step),
 //! - the session try-lock admits at most one holder and never blocks
-//!   (losers fall back, they don't wait).
+//!   (losers fall back, they don't wait), and
+//! - a [`Op::Panic`] aborts the session through the cancellable
+//!   barrier: every parked waiter is released and unwinds, every later
+//!   barrier arrival unwinds immediately, and no interleaving of the
+//!   fault strands a peer (the deadlock the pre-abort `std::sync::Barrier`
+//!   runtime exhibited — kept reproducible here by modeling the panic as
+//!   a truncated program instead).
 //!
 //! The search memoizes visited states, so equivalent interleavings are
 //! explored once and the whole space of a few processes with a few ops
@@ -39,6 +45,12 @@ pub enum Op {
     TrySession,
     /// Release the session lock if this process holds it.
     EndSession,
+    /// Panic: abort the session (the cancellable-barrier discipline).
+    /// This process unwinds; every process parked at the barrier is
+    /// released and unwinds; every later barrier arrival unwinds
+    /// immediately instead of waiting for a rendezvous that can no
+    /// longer complete.
+    Panic,
 }
 
 /// A safety violation, with the interleaving (sequence of process ids
@@ -60,6 +72,9 @@ pub struct ExploreStats {
     pub fallbacks: usize,
     /// Terminal states in which every `TrySession` succeeded.
     pub all_acquired: usize,
+    /// Terminal states reached through a session abort ([`Op::Panic`]):
+    /// every process still terminated — abort releases, never strands.
+    pub aborts: usize,
 }
 
 #[derive(Clone, PartialEq, Eq, Hash)]
@@ -77,6 +92,9 @@ struct State {
     collect_round: Vec<u32>,
     session_holder: Option<usize>,
     fell_back: bool,
+    /// The cancellable barrier's abort flag: set by [`Op::Panic`],
+    /// permanent for the rest of the session.
+    aborted: bool,
 }
 
 /// Explore every interleaving of `programs` (one op sequence per
@@ -91,6 +109,7 @@ pub fn explore(programs: &[Vec<Op>]) -> Result<ExploreStats, Violation> {
         collect_round: vec![0; p * p],
         session_holder: None,
         fell_back: false,
+        aborted: false,
     };
     let mut stats = ExploreStats::default();
     let mut trail = Vec::new();
@@ -125,6 +144,9 @@ fn dfs(
             } else {
                 stats.all_acquired += 1;
             }
+            if state.aborted {
+                stats.aborts += 1;
+            }
             return Ok(());
         }
         return Err(Violation {
@@ -136,7 +158,7 @@ fn dfs(
         let mut next = state.clone();
         trail.push(i);
         let op = programs[i][next.pc[i]];
-        let fault = step(&mut next, i, op, programs.len());
+        let fault = step(&mut next, i, op, programs);
         if let Some(reason) = fault {
             let v = Violation { interleaving: trail.clone(), reason };
             trail.pop();
@@ -148,8 +170,16 @@ fn dfs(
     Ok(())
 }
 
+/// Unwind process `j` out of an aborted session: it abandons its
+/// remaining program (mirrors `abort_unwind` in `bsp/machine.rs`).
+fn unwind(state: &mut State, j: usize, programs: &[Vec<Op>]) {
+    state.arrived[j] = false;
+    state.pc[j] = programs[j].len();
+}
+
 /// Apply `op` for process `i`; returns a violation reason on fault.
-fn step(state: &mut State, i: usize, op: Op, p: usize) -> Option<String> {
+fn step(state: &mut State, i: usize, op: Op, programs: &[Vec<Op>]) -> Option<String> {
+    let p = programs.len();
     match op {
         Op::Deposit { to } => {
             let slot = i * p + to;
@@ -187,6 +217,12 @@ fn step(state: &mut State, i: usize, op: Op, p: usize) -> Option<String> {
             state.pc[i] += 1;
         }
         Op::Barrier => {
+            if state.aborted {
+                // The cancellable barrier returns `Err(Aborted)`
+                // immediately; the arrival unwinds instead of waiting.
+                unwind(state, i, programs);
+                return None;
+            }
             state.arrived[i] = true;
             if state.arrived.iter().all(|&a| a) {
                 for j in 0..state.pc.len() {
@@ -208,6 +244,17 @@ fn step(state: &mut State, i: usize, op: Op, p: usize) -> Option<String> {
                 state.session_holder = None;
             }
             state.pc[i] += 1;
+        }
+        Op::Panic => {
+            // Abort + notify_all: the panicking process unwinds, and so
+            // does every process currently parked at the barrier.
+            state.aborted = true;
+            unwind(state, i, programs);
+            for j in 0..p {
+                if state.arrived[j] {
+                    unwind(state, j, programs);
+                }
+            }
         }
     }
     None
@@ -322,5 +369,76 @@ mod tests {
         let programs = vec![vec![Op::Barrier, Op::Barrier], vec![Op::Barrier]];
         let v = explore(&programs).expect_err("stranded barrier must be detected");
         assert!(v.reason.contains("deadlock"), "{}", v.reason);
+    }
+
+    /// A mid-exchange panic under the cancellable barrier: every
+    /// interleaving terminates (abort releases the waiters), and every
+    /// abort path is actually reached.
+    #[test]
+    fn panic_aborts_without_stranding_any_peer() {
+        for p in [2usize, 3] {
+            let programs: Vec<Vec<Op>> = (0..p)
+                .map(|i| {
+                    let mut ops = Vec::new();
+                    for t in (0..p).filter(|&t| t != i) {
+                        ops.push(Op::Deposit { to: t });
+                    }
+                    if i == p - 1 {
+                        // The last rank dies between deposit and the
+                        // rendezvous — the worst spot for its peers.
+                        ops.push(Op::Panic);
+                        return ops;
+                    }
+                    ops.push(Op::Barrier);
+                    for f in (0..p).filter(|&f| f != i) {
+                        ops.push(Op::Collect { from: f });
+                    }
+                    ops.push(Op::Barrier);
+                    ops
+                })
+                .collect();
+            let stats = explore(&programs)
+                .expect("a panic under the cancellable barrier must never deadlock");
+            assert!(stats.terminal_states > 0, "p={p}");
+            assert_eq!(stats.aborts, stats.terminal_states, "p={p}: every run aborts");
+        }
+    }
+
+    /// The same fault under the pre-abort runtime (a bare
+    /// `std::sync::Barrier`, modeled by the panicking rank simply never
+    /// arriving) strands its peers — the deadlock this PR removes, kept
+    /// reproducible to prove the abort semantics are load-bearing.
+    #[test]
+    fn panic_without_abort_semantics_is_the_old_deadlock() {
+        let programs = vec![
+            vec![Op::Deposit { to: 1 }, Op::Barrier, Op::Collect { from: 1 }, Op::Barrier],
+            vec![Op::Deposit { to: 0 }], // dies; no abort, no arrival
+        ];
+        let v = explore(&programs).expect_err("bare-barrier panic must deadlock");
+        assert!(v.reason.contains("deadlock"), "{}", v.reason);
+    }
+
+    /// A panic landing after the rendezvous: collectors that already
+    /// passed the barrier finish their collects normally; everyone still
+    /// terminates and the second barrier releases via the abort.
+    #[test]
+    fn panic_after_rendezvous_lets_collectors_finish() {
+        let p = 2;
+        let programs: Vec<Vec<Op>> = (0..p)
+            .map(|i| {
+                if i == 1 {
+                    vec![Op::Deposit { to: 0 }, Op::Barrier, Op::Panic]
+                } else {
+                    vec![
+                        Op::Deposit { to: 1 },
+                        Op::Barrier,
+                        Op::Collect { from: 1 },
+                        Op::Barrier,
+                    ]
+                }
+            })
+            .collect();
+        let stats = explore(&programs).expect("post-rendezvous panic must never deadlock");
+        assert_eq!(stats.aborts, stats.terminal_states);
     }
 }

@@ -10,8 +10,15 @@
 
 use std::fmt;
 
-/// Why a distributed-FFT operation was rejected.
+use crate::bsp::{BspFailure, FailureCause};
+
+/// Why a distributed-FFT operation was rejected (or, for the
+/// `RankFailure` / `Timeout` variants, why an execution died).
+///
+/// `#[non_exhaustive]`: downstream matches need a wildcard arm, so new
+/// failure variants stop being semver breaks.
 #[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
 pub enum FftError {
     /// A shape and a processor grid (or cycle vector) have different
     /// numbers of axes.
@@ -38,6 +45,13 @@ pub enum FftError {
     /// A valid request this build cannot serve (e.g. the XLA engine
     /// without the `xla-pjrt` feature).
     Unsupported { reason: String },
+    /// A BSP session died: one or more ranks panicked or detected a
+    /// protocol violation. `rank` and `superstep` locate the
+    /// first-detected failure; `detail` renders every recorded one.
+    RankFailure { rank: usize, superstep: &'static str, detail: String },
+    /// A BSP session exceeded its superstep deadline (a rank stalled or
+    /// deadlocked); `superstep` is where the waiting rank gave up.
+    Timeout { superstep: &'static str, detail: String },
 }
 
 impl fmt::Display for FftError {
@@ -66,11 +80,44 @@ impl fmt::Display for FftError {
             }
             FftError::BadDescriptor { reason } => write!(f, "bad transform descriptor: {reason}"),
             FftError::Unsupported { reason } => write!(f, "unsupported: {reason}"),
+            FftError::RankFailure { rank, superstep, detail } => {
+                write!(f, "BSP session failed (first at rank {rank}, superstep '{superstep}'): {detail}")
+            }
+            FftError::Timeout { superstep, detail } => {
+                write!(f, "BSP session timed out at superstep '{superstep}': {detail}")
+            }
         }
     }
 }
 
 impl std::error::Error for FftError {}
+
+/// Typed lift of a BSP session failure into the API error: a deadline
+/// timeout anywhere in the registry becomes [`FftError::Timeout`],
+/// anything else [`FftError::RankFailure`]; `detail` preserves every
+/// recorded rank/superstep/cause.
+impl From<BspFailure> for FftError {
+    fn from(failure: BspFailure) -> FftError {
+        let first = first_of(&failure);
+        let detail = failure.to_string();
+        if failure.timed_out() {
+            FftError::Timeout { superstep: first.1, detail }
+        } else {
+            FftError::RankFailure { rank: first.0, superstep: first.1, detail }
+        }
+    }
+}
+
+fn first_of(failure: &BspFailure) -> (usize, &'static str) {
+    // Prefer the first timeout record when one exists (it names the
+    // superstep that actually stalled); otherwise the first failure.
+    let f = failure
+        .failures
+        .iter()
+        .find(|f| f.cause == FailureCause::Timeout)
+        .unwrap_or_else(|| failure.first());
+    (f.rank, f.superstep)
+}
 
 /// Lets `?` lift an [`FftError`] into the `Result<_, String>` layers
 /// (CLI, property-test closures) without boilerplate.
@@ -91,6 +138,34 @@ mod tests {
         assert!(s.contains("axis 1") && s.contains("p_l^2 | n_l"), "{s}");
         let e = FftError::TooManyProcs { algo: "slab", p: 64, pmax: 8 };
         assert!(e.to_string().contains("p_max = 8"), "{e}");
+    }
+
+    #[test]
+    fn bsp_failure_lifts_to_typed_variants() {
+        use crate::bsp::RankFailure;
+        let panic = BspFailure {
+            failures: vec![RankFailure {
+                rank: 2,
+                superstep: "fftu-alltoall",
+                cause: FailureCause::Panic("boom".into()),
+            }],
+        };
+        let e = FftError::from(panic);
+        assert!(
+            matches!(e, FftError::RankFailure { rank: 2, superstep: "fftu-alltoall", .. }),
+            "{e}"
+        );
+        let stall = BspFailure {
+            failures: vec![
+                RankFailure {
+                    rank: 0,
+                    superstep: "slab-transpose",
+                    cause: FailureCause::Timeout,
+                },
+            ],
+        };
+        let e = FftError::from(stall);
+        assert!(matches!(e, FftError::Timeout { superstep: "slab-transpose", .. }), "{e}");
     }
 
     #[test]

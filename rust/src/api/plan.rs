@@ -199,8 +199,14 @@ enum Inner {
     /// plan for the same descriptor semantics with the concrete
     /// (algorithm, grid, strategy) substituted. Every execute and the
     /// verifier delegate to it wholesale; the scored candidate table is
-    /// kept for reporting (`cli run --algo auto --verbose`).
-    Auto { chosen: Arc<PlannedFft>, table: Vec<super::planner::ScoredCandidate> },
+    /// kept for reporting (`cli run --algo auto --verbose`), and
+    /// `chosen_idx` (the winner's row in that table) lets a failed
+    /// session fail over to the next-cheapest candidate.
+    Auto {
+        chosen: Arc<PlannedFft>,
+        table: Vec<super::planner::ScoredCandidate>,
+        chosen_idx: usize,
+    },
 }
 
 /// A validated, reusable plan binding a [`Transform`] to an
@@ -372,14 +378,61 @@ impl PlannedFft {
         t: Transform,
         chosen: Arc<PlannedFft>,
         table: Vec<super::planner::ScoredCandidate>,
+        chosen_idx: usize,
     ) -> PlannedFft {
         PlannedFft {
             algo: Algorithm::Auto,
             grid: chosen.grid.clone(),
             p: chosen.p,
-            inner: Inner::Auto { chosen, table },
+            inner: Inner::Auto { chosen, table, chosen_idx },
             t,
         }
+    }
+
+    /// Set the BSP session options (superstep deadline, fault
+    /// injection) used by subsequent executes of this plan. Reaches
+    /// through real/trig wrappers and Auto delegation to the arena
+    /// that actually runs the SPMD sessions.
+    pub fn set_exec_options(&self, opts: crate::bsp::SpmdOptions) {
+        match &self.inner {
+            Inner::Fftu { arena, .. } => arena.set_exec_options(opts),
+            Inner::Slab(plan) => plan.set_exec_options(opts),
+            Inner::Pencil(plan) => plan.set_exec_options(opts),
+            Inner::Heffte(plan) => plan.set_exec_options(opts),
+            Inner::Popovici(plan) => plan.set_exec_options(opts),
+            Inner::Real { core, .. } => core.set_exec_options(opts),
+            Inner::Auto { chosen, .. } => chosen.set_exec_options(opts),
+        }
+    }
+
+    /// Whether `e` is a runtime BSP session failure (as opposed to a
+    /// plan-time or input-validation error) — the class the Auto
+    /// failover below covers.
+    fn is_session_failure(e: &FftError) -> bool {
+        matches!(e, FftError::RankFailure { .. } | FftError::Timeout { .. })
+    }
+
+    /// One-shot failover for an [`Algorithm::Auto`] plan: after the
+    /// chosen candidate's session fails, plan the next-cheapest
+    /// candidate that still plans and run it ONCE (it starts from a
+    /// fresh arena and default session options, so an injected fault
+    /// bound to the failed plan does not follow it). If no alternative
+    /// exists or the alternative also fails, the ORIGINAL error
+    /// surfaces — failover is best-effort, never a loop.
+    fn auto_failover<T>(
+        &self,
+        chosen_idx: usize,
+        table: &[super::planner::ScoredCandidate],
+        original: FftError,
+        exec: impl Fn(&PlannedFft) -> Result<T, FftError>,
+    ) -> Result<T, FftError> {
+        for cand in &table[chosen_idx + 1..] {
+            let Ok(alt) = plan(cand.algorithm, &cand.descriptor(&self.t)) else {
+                continue;
+            };
+            return exec(&alt).map_err(|_| original);
+        }
+        Err(original)
     }
 
     /// Execute ONE C2C transform; see [`DistFft::execute`].
@@ -646,11 +699,17 @@ impl PlannedFft {
     }
 
     fn run(&self, input: &[C64], batch: usize) -> Result<Execution, FftError> {
-        if let Inner::Auto { chosen, .. } = &self.inner {
+        if let Inner::Auto { chosen, table, chosen_idx } = &self.inner {
             // The winner is a complete plan for the same semantics
             // (kind, batch, normalization included): delegate wholesale
-            // so scaling is applied exactly once.
-            return chosen.run(input, batch);
+            // so scaling is applied exactly once. A session failure
+            // fails over once to the next-cheapest candidate.
+            return match chosen.run(input, batch) {
+                Err(e) if Self::is_session_failure(&e) => {
+                    self.auto_failover(*chosen_idx, table, e, |alt| alt.run(input, batch))
+                }
+                other => other,
+            };
         }
         let n = self.t.total();
         if input.len() != batch * n {
@@ -659,11 +718,11 @@ impl PlannedFft {
         let dir = self.t.direction;
         let inputs: Vec<&[C64]> = input.chunks(n).collect();
         let (mut outputs, report) = match &self.inner {
-            Inner::Fftu { plan, arena } => fftu_execute_batch_arena(plan, arena, &inputs, dir),
-            Inner::Slab(plan) => plan.execute_batch_global(&inputs, dir),
-            Inner::Pencil(plan) => plan.execute_batch_global(&inputs, dir),
-            Inner::Heffte(plan) => plan.execute_batch_global(&inputs, dir),
-            Inner::Popovici(plan) => plan.execute_batch_global(&inputs, dir),
+            Inner::Fftu { plan, arena } => fftu_execute_batch_arena(plan, arena, &inputs, dir)?,
+            Inner::Slab(plan) => plan.try_execute_batch_global(&inputs, dir)?,
+            Inner::Pencil(plan) => plan.try_execute_batch_global(&inputs, dir)?,
+            Inner::Heffte(plan) => plan.try_execute_batch_global(&inputs, dir)?,
+            Inner::Popovici(plan) => plan.try_execute_batch_global(&inputs, dir)?,
             Inner::Real { .. } => {
                 unreachable!("real/trig kinds dispatch through run_r2c/run_c2r/run_trig")
             }
@@ -695,8 +754,16 @@ impl PlannedFft {
         call: &'static str,
     ) -> Result<Execution, FftError> {
         self.ensure_kind(Kind::R2C, call)?;
-        if let Inner::Auto { chosen, .. } = &self.inner {
-            return chosen.run_r2c(input, batch, call);
+        if let Inner::Auto { chosen, table, chosen_idx } = &self.inner {
+            return match chosen.run_r2c(input, batch, call) {
+                Err(e) if Self::is_session_failure(&e) => self.auto_failover(
+                    *chosen_idx,
+                    table,
+                    e,
+                    |alt| alt.run_r2c(input, batch, call),
+                ),
+                other => other,
+            };
         }
         let n = self.t.total();
         if input.len() != batch * n {
@@ -720,7 +787,7 @@ impl PlannedFft {
                 &self.t.shape,
                 &items,
                 self.r2c_twiddles(),
-            );
+            )?;
             let mut output = Vec::with_capacity(batch * nspec);
             for mut spec in spectra {
                 if scale != 1.0 {
@@ -760,8 +827,16 @@ impl PlannedFft {
         call: &'static str,
     ) -> Result<RealExecution, FftError> {
         self.ensure_kind(Kind::C2R, call)?;
-        if let Inner::Auto { chosen, .. } = &self.inner {
-            return chosen.run_c2r(input, batch, call);
+        if let Inner::Auto { chosen, table, chosen_idx } = &self.inner {
+            return match chosen.run_c2r(input, batch, call) {
+                Err(e) if Self::is_session_failure(&e) => self.auto_failover(
+                    *chosen_idx,
+                    table,
+                    e,
+                    |alt| alt.run_c2r(input, batch, call),
+                ),
+                other => other,
+            };
         }
         let n = self.t.total();
         let nh = n / 2;
@@ -784,7 +859,7 @@ impl PlannedFft {
                 &self.t.shape,
                 &items,
                 self.r2c_twiddles(),
-            );
+            )?;
             let mut output = Vec::with_capacity(batch * n);
             for z in zs {
                 output.extend(unpack_pairs(&z, scale));
@@ -824,8 +899,16 @@ impl PlannedFft {
                 expected: "dct2|dct3|dst2|dst3",
             });
         }
-        if let Inner::Auto { chosen, .. } = &self.inner {
-            return chosen.run_trig(input, batch, call);
+        if let Inner::Auto { chosen, table, chosen_idx } = &self.inner {
+            return match chosen.run_trig(input, batch, call) {
+                Err(e) if Self::is_session_failure(&e) => self.auto_failover(
+                    *chosen_idx,
+                    table,
+                    e,
+                    |alt| alt.run_trig(input, batch, call),
+                ),
+                other => other,
+            };
         }
         let n = self.t.total();
         if input.len() != batch * n {
@@ -847,9 +930,9 @@ impl PlannedFft {
             let (plan, arena) = Self::fftu_core(inner);
             let dst = matches!(self.t.kind, Kind::Dst2 | Kind::Dst3);
             let (outs, mut report) = if matches!(self.t.kind, Kind::Dct2 | Kind::Dst2) {
-                fftu_execute_trig2_zigzag_batch_arena(plan, arena, &items, dst, tables, scale)
+                fftu_execute_trig2_zigzag_batch_arena(plan, arena, &items, dst, tables, scale)?
             } else {
-                fftu_execute_trig3_zigzag_batch_arena(plan, arena, &items, dst, tables, scale)
+                fftu_execute_trig3_zigzag_batch_arena(plan, arena, &items, dst, tables, scale)?
             };
             let output: Vec<f64> = outs.into_iter().flatten().collect();
             report.push_comp(
@@ -864,7 +947,7 @@ impl PlannedFft {
                 // Forward core, then the combine passes on each item.
                 let (core_items, report) = match &inner.inner {
                     Inner::Fftu { plan, arena } => {
-                        fftu_execute_trig2_batch_arena(plan, arena, &items, dst)
+                        fftu_execute_trig2_batch_arena(plan, arena, &items, dst)?
                     }
                     _ => {
                         let pre: Vec<C64> = items
@@ -890,7 +973,7 @@ impl PlannedFft {
                         let refs: Vec<&[C64]> =
                             pre_items.iter().map(Vec::as_slice).collect();
                         let (outs, report) =
-                            fftu_execute_trig3_batch_arena(plan, arena, &refs, dst, scale);
+                            fftu_execute_trig3_batch_arena(plan, arena, &refs, dst, scale)?;
                         (outs.into_iter().flatten().collect(), report)
                     }
                     _ => {

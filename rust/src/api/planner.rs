@@ -314,8 +314,8 @@ pub fn plan_auto(
                 best = Some((secs, i, planned));
             }
         }
-        if let Some((_, _, chosen)) = best {
-            return Ok(Arc::new(PlannedFft::new_auto(t.clone(), chosen, scored)));
+        if let Some((_, idx, chosen)) = best {
+            return Ok(Arc::new(PlannedFft::new_auto(t.clone(), chosen, scored, idx)));
         }
         // Every shortlisted candidate failed to plan or run; fall
         // through to the analytic order below.
@@ -328,7 +328,9 @@ pub fn plan_auto(
     for i in 0..scored.len() {
         let (algorithm, descriptor) = (scored[i].algorithm, scored[i].descriptor(t));
         match plan(algorithm, &descriptor) {
-            Ok(chosen) => return Ok(Arc::new(PlannedFft::new_auto(t.clone(), chosen, scored))),
+            Ok(chosen) => {
+                return Ok(Arc::new(PlannedFft::new_auto(t.clone(), chosen, scored, i)))
+            }
             Err(e) => last_err = Some(e),
         }
     }

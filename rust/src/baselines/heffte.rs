@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use crate::api::FftError;
 use super::ScratchArena;
-use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
+use crate::bsp::{redistribute, try_run_spmd_with, CostReport, Ctx};
 use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
 use crate::fft::{C64, Direction, Plan, Planner};
@@ -122,12 +122,33 @@ impl HefftePlan {
         &self.stage_axis
     }
 
+    /// Set the BSP session options (superstep deadline, fault
+    /// injection) used by subsequent executes of this plan.
+    pub fn set_exec_options(&self, opts: crate::bsp::SpmdOptions) {
+        self.scratch.set_exec_options(opts);
+    }
+
     /// Execute on whole (global) arrays; the report covers the batch.
+    /// Panics on a BSP session failure — use
+    /// [`Self::try_execute_batch_global`] for typed recovery.
     pub fn execute_batch_global(
         &self,
         inputs: &[&[C64]],
         dir: Direction,
     ) -> (Vec<Vec<C64>>, CostReport) {
+        self.try_execute_batch_global(inputs, dir)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Execute on whole (global) arrays, surfacing BSP session failures
+    /// (injected faults, protocol violations, timeouts) as typed
+    /// errors. An abnormal exit poisons the scratch arena; the next
+    /// execute rebuilds it transparently.
+    pub fn try_execute_batch_global(
+        &self,
+        inputs: &[&[C64]],
+        dir: Direction,
+    ) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
         let dist_brick = &self.dists[0];
         let locals: Vec<Vec<Vec<C64>>> = inputs.iter().map(|g| dist_brick.scatter(g)).collect();
         // Largest scratch any stage needs, known at plan time.
@@ -140,7 +161,7 @@ impl HefftePlan {
         // One session per arena; a concurrent execute of this same plan
         // falls back to transient scratch (see ScratchArena).
         let arena_session = self.scratch.begin_session();
-        let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
+        let outcome = try_run_spmd_with(self.p, self.scratch.exec_options(), |ctx: &mut Ctx| {
             let mut scratch_guard;
             let mut owned_scratch;
             let scratch: &mut [C64] = match &arena_session {
@@ -174,8 +195,12 @@ impl HefftePlan {
                 ));
             }
             outs
-        });
-        (dist_brick.gather_batch(&outcome.outputs), outcome.report)
+        })
+        .map_err(|failure| {
+            self.scratch.poison();
+            FftError::from(failure)
+        })?;
+        Ok((dist_brick.gather_batch(&outcome.outputs), outcome.report))
     }
 }
 

@@ -39,8 +39,10 @@ pub enum OutputDist {
     Different,
 }
 
-use std::sync::{Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
+use crate::bsp::SpmdOptions;
 use crate::fft::C64;
 
 /// Per-rank persistent scratch, shared across the execute calls of one
@@ -57,6 +59,12 @@ use crate::fft::C64;
 pub(crate) struct ScratchArena {
     session: Mutex<()>,
     slots: Vec<Mutex<Vec<C64>>>,
+    /// Set after an abnormal session exit; the next `begin_session`
+    /// wipes the leases (they regrow lazily) and clears the flag.
+    poisoned: AtomicBool,
+    /// Session options (deadline, fault injection) for every execute
+    /// through this plan's arena.
+    exec_opts: Mutex<SpmdOptions>,
 }
 
 impl ScratchArena {
@@ -64,20 +72,51 @@ impl ScratchArena {
         ScratchArena {
             session: Mutex::new(()),
             slots: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            poisoned: AtomicBool::new(false),
+            exec_opts: Mutex::new(SpmdOptions::default()),
         }
     }
 
     /// Claim the arena for one SPMD session; `None` means a concurrent
-    /// execute owns it and the caller must use transient scratch.
+    /// execute owns it and the caller must use transient scratch. A
+    /// previous abnormal exit's scratch is wiped here (it regrows on the
+    /// next lease), so recovery is transparent.
     pub(crate) fn begin_session(&self) -> Option<MutexGuard<'_, ()>> {
-        self.session.try_lock().ok()
+        let guard = match self.session.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => return None,
+        };
+        if self.poisoned.swap(false, Ordering::AcqRel) {
+            for slot in &self.slots {
+                slot.lock().unwrap_or_else(PoisonError::into_inner).clear();
+            }
+        }
+        Some(guard)
+    }
+
+    /// Mark the arena unreliable after an abnormal session exit.
+    pub(crate) fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    /// Set the session options used by subsequent executes.
+    pub(crate) fn set_exec_options(&self, opts: SpmdOptions) {
+        *self.exec_opts.lock().unwrap_or_else(PoisonError::into_inner) = opts;
+    }
+
+    /// The session options subsequent executes will run under.
+    pub(crate) fn exec_options(&self) -> SpmdOptions {
+        self.exec_opts.lock().unwrap_or_else(PoisonError::into_inner).clone()
     }
 
     /// Lock rank `rank`'s scratch, growing it to at least `min_len`
     /// (zero-filled) — a no-op after the first execute. Only call while
-    /// holding the [`Self::begin_session`] guard.
+    /// holding the [`Self::begin_session`] guard. Poison-tolerant: a
+    /// panicking rank poisons its slot mutex, but `begin_session` has
+    /// already cleared the contents.
     pub(crate) fn lease(&self, rank: usize, min_len: usize) -> MutexGuard<'_, Vec<C64>> {
-        let mut guard = self.slots[rank].lock().unwrap();
+        let mut guard = self.slots[rank].lock().unwrap_or_else(PoisonError::into_inner);
         if guard.len() < min_len {
             let len = guard.len();
             guard.reserve_exact(min_len - len);

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use crate::api::FftError;
 use super::ScratchArena;
-use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
+use crate::bsp::{redistribute, try_run_spmd_with, CostReport, Ctx};
 use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
 use crate::fft::{C64, Direction, Plan, Planner};
@@ -224,12 +224,33 @@ impl PencilPlan {
         }
     }
 
+    /// Set the BSP session options (superstep deadline, fault
+    /// injection) used by subsequent executes of this plan.
+    pub fn set_exec_options(&self, opts: crate::bsp::SpmdOptions) {
+        self.scratch.set_exec_options(opts);
+    }
+
     /// Execute on whole (global) arrays; the report covers the batch.
+    /// Panics on a BSP session failure — use
+    /// [`Self::try_execute_batch_global`] for typed recovery.
     pub fn execute_batch_global(
         &self,
         inputs: &[&[C64]],
         dir: Direction,
     ) -> (Vec<Vec<C64>>, CostReport) {
+        self.try_execute_batch_global(inputs, dir)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Execute on whole (global) arrays, surfacing BSP session failures
+    /// (injected faults, protocol violations, timeouts) as typed
+    /// errors. An abnormal exit poisons the scratch arena; the next
+    /// execute rebuilds it transparently.
+    pub fn try_execute_batch_global(
+        &self,
+        inputs: &[&[C64]],
+        dir: Direction,
+    ) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
         let d = self.shape.len();
         let locals: Vec<Vec<Vec<C64>>> =
             inputs.iter().map(|g| self.dist_in.scatter(g)).collect();
@@ -246,7 +267,7 @@ impl PencilPlan {
         // One session per arena; a concurrent execute of this same plan
         // falls back to transient scratch (see ScratchArena).
         let arena_session = self.scratch.begin_session();
-        let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
+        let outcome = try_run_spmd_with(self.p, self.scratch.exec_options(), |ctx: &mut Ctx| {
             let mut scratch_guard;
             let mut owned_scratch;
             let scratch: &mut [C64] = match &arena_session {
@@ -288,8 +309,12 @@ impl PencilPlan {
                 });
             }
             outs
-        });
-        (self.final_dist().gather_batch(&outcome.outputs), outcome.report)
+        })
+        .map_err(|failure| {
+            self.scratch.poison();
+            FftError::from(failure)
+        })?;
+        Ok((self.final_dist().gather_batch(&outcome.outputs), outcome.report))
     }
 }
 

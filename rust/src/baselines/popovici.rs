@@ -18,7 +18,7 @@
 use std::sync::Arc;
 
 use crate::api::FftError;
-use crate::bsp::{run_spmd, CostReport, Ctx};
+use crate::bsp::{try_run_spmd_with, CostReport, Ctx};
 use crate::dist::GridDist;
 use crate::fft::ndfft::transform_axis;
 use crate::fft::{C64, Direction, Plan, Planner};
@@ -117,12 +117,30 @@ impl PopoviciPlan {
         self.view_plans[l].packet_len()
     }
 
+    /// Session options (superstep deadline, fault injection) for every
+    /// subsequent execute of this plan.
+    pub fn set_exec_options(&self, opts: crate::bsp::SpmdOptions) {
+        self.scratch.set_exec_options(opts);
+    }
+
     /// Execute on whole (global) arrays; the report covers the batch.
+    /// Panicking wrapper over [`PopoviciPlan::try_execute_batch_global`].
     pub fn execute_batch_global(
         &self,
         inputs: &[&[C64]],
         dir: Direction,
     ) -> (Vec<Vec<C64>>, CostReport) {
+        self.try_execute_batch_global(inputs, dir).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible execute: BSP session failures surface as
+    /// [`FftError::RankFailure`] / [`FftError::Timeout`] and poison the
+    /// scratch arena (rebuilt transparently on the next execute).
+    pub fn try_execute_batch_global(
+        &self,
+        inputs: &[&[C64]],
+        dir: Direction,
+    ) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
         let d = self.shape.len();
         let p = self.num_procs();
         let locals: Vec<Vec<Vec<C64>>> = inputs.iter().map(|g| self.dist.scatter(g)).collect();
@@ -131,7 +149,7 @@ impl PopoviciPlan {
         // One session per arena; a concurrent execute of this same plan
         // falls back to transient scratch (see ScratchArena).
         let arena_session = self.scratch.begin_session();
-        let outcome = run_spmd(p, |ctx: &mut Ctx| {
+        let outcome = try_run_spmd_with(p, self.scratch.exec_options(), |ctx: &mut Ctx| {
             let coords = self.dist.proc_coords(ctx.rank());
             let mut scratch_guard;
             let mut owned_scratch;
@@ -206,8 +224,12 @@ impl PopoviciPlan {
                 outs.push(local);
             }
             outs
-        });
-        (self.dist.gather_batch(&outcome.outputs), outcome.report)
+        })
+        .map_err(|failure| {
+            self.scratch.poison();
+            FftError::from(failure)
+        })?;
+        Ok((self.dist.gather_batch(&outcome.outputs), outcome.report))
     }
 }
 

@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::api::FftError;
-use crate::bsp::{redistribute, run_spmd, CostReport, Ctx};
+use crate::bsp::{redistribute, try_run_spmd_with, CostReport, Ctx};
 use crate::dist::{GridDist, RedistPlan};
 use crate::fft::ndfft::transform_axis;
 use crate::fft::{C64, Direction, Plan, Planner};
@@ -166,14 +166,33 @@ impl SlabPlan {
         self.out
     }
 
+    /// Session options (superstep deadline, fault injection) for every
+    /// subsequent execute of this plan.
+    pub fn set_exec_options(&self, opts: crate::bsp::SpmdOptions) {
+        self.scratch.set_exec_options(opts);
+    }
+
     /// Execute the planned pipeline on whole (global) arrays: scatter,
     /// run the BSP program once per batch item with persistent scratch,
-    /// gather. The report covers the entire batch.
+    /// gather. The report covers the entire batch. Panicking wrapper
+    /// over [`SlabPlan::try_execute_batch_global`].
     pub fn execute_batch_global(
         &self,
         inputs: &[&[C64]],
         dir: Direction,
     ) -> (Vec<Vec<C64>>, CostReport) {
+        self.try_execute_batch_global(inputs, dir).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible execute: a rank panic, protocol violation, or superstep
+    /// timeout in the BSP session surfaces as
+    /// [`FftError::RankFailure`] / [`FftError::Timeout`]; the scratch
+    /// arena is poisoned and transparently rebuilt on the next execute.
+    pub fn try_execute_batch_global(
+        &self,
+        inputs: &[&[C64]],
+        dir: Direction,
+    ) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
         let d = self.shape.len();
         let locals: Vec<Vec<Vec<C64>>> =
             inputs.iter().map(|g| self.dist_in.scatter(g)).collect();
@@ -186,7 +205,7 @@ impl SlabPlan {
         // One session per arena; a concurrent execute of this same plan
         // falls back to transient scratch (see ScratchArena).
         let arena_session = self.scratch.begin_session();
-        let outcome = run_spmd(self.p, |ctx: &mut Ctx| {
+        let outcome = try_run_spmd_with(self.p, self.scratch.exec_options(), |ctx: &mut Ctx| {
             let mut scratch_guard;
             let mut owned_scratch;
             let scratch: &mut [C64] = match &arena_session {
@@ -220,12 +239,16 @@ impl SlabPlan {
                 });
             }
             outs
-        });
+        })
+        .map_err(|failure| {
+            self.scratch.poison();
+            FftError::from(failure)
+        })?;
         let final_dist = match self.out {
             OutputDist::Different => &self.dist_mid,
             OutputDist::Same => &self.dist_in,
         };
-        (final_dist.gather_batch(&outcome.outputs), outcome.report)
+        Ok((final_dist.gather_batch(&outcome.outputs), outcome.report))
     }
 }
 

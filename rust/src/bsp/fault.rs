@@ -1,0 +1,227 @@
+//! Deterministic fault injection for the BSP runtime.
+//!
+//! A [`FaultPlan`] scripts failures against specific `(rank, communication
+//! superstep)` coordinates: panic a rank, delay it past the session
+//! deadline, or drop / truncate / corrupt the packet it sends to one
+//! peer. The plan is attached to a session through
+//! [`SpmdOptions`](crate::bsp::SpmdOptions) (or to a cached plan through
+//! `PlannedFft::set_exec_options`, or from the command line via
+//! `fftu run --inject <spec>`); the default is `None`, so fault-free
+//! execution pays only one pointer test per communication superstep.
+//!
+//! Every scripted fault is *detected* by the always-on checks in
+//! `exchange_swap` / `pairwise_exchange` (packet counts validated against
+//! the compiled schedule, occupied-slot invariant, symmetric pairwise
+//! lengths) or by the cancellable barrier (panic → abort, delay →
+//! deadline timeout), so an injected fault always surfaces as a typed
+//! [`BspFailure`](crate::bsp::BspFailure) — never a hang, never silently
+//! corrupted output.
+//!
+//! # Example: scripted panic surfaces as a typed failure
+//!
+//! ```
+//! use fftu::bsp::{try_run_spmd_with, FailureCause, FaultKind, FaultPlan, SpmdOptions};
+//! use fftu::fft::C64;
+//!
+//! // Panic processor 1 at its first communication superstep.
+//! let faults = FaultPlan::new().with(1, 0, FaultKind::Panic);
+//! let err = try_run_spmd_with(2, SpmdOptions::default().inject(faults), |ctx| {
+//!     let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE]; 2];
+//!     // Peers wake from the aborted barrier instead of deadlocking.
+//!     ctx.exchange_swap("doctest-exchange", &mut bufs);
+//! })
+//! .unwrap_err();
+//! assert_eq!(err.first().rank, 1);
+//! assert_eq!(err.first().superstep, "doctest-exchange");
+//! assert!(matches!(err.first().cause, FailureCause::Panic(_)));
+//! ```
+
+use std::time::Duration;
+
+/// One kind of scripted fault, applied at a `(rank, superstep)` site.
+#[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum FaultKind {
+    /// The rank panics at the start of the superstep (models a crashed
+    /// process). Peers are released by the session abort.
+    Panic,
+    /// The rank sleeps before communicating (models a straggler or a
+    /// stalled NIC). With a session deadline shorter than the delay,
+    /// peers time out at the barrier instead of waiting forever.
+    Delay(Duration),
+    /// The packet addressed to processor `to` is silently discarded
+    /// (models a lost message). Detected by the receiver's compiled
+    /// packet-count expectation.
+    DropPacket {
+        to: usize,
+    },
+    /// The packet addressed to `to` is cut down to `keep` words (models
+    /// a short read). Detected by the receiver's length check.
+    TruncatePacket {
+        to: usize,
+        keep: usize,
+    },
+    /// A duplicate spurious packet is forced into the mailbox slot for
+    /// `to` (models misrouted / replayed delivery). Detected by the
+    /// occupied-slot invariant at the sender, or by the receiver's
+    /// count expectation when the slot happened to be empty.
+    CorruptPacket {
+        to: usize,
+    },
+}
+
+/// A scripted fault at one `(rank, communication superstep)` site.
+///
+/// `comm_step` counts communication supersteps per rank from 0 in
+/// session order (every `exchange_swap` / `pairwise_exchange` call is
+/// one step; barrier-only syncs do not count).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fault {
+    pub rank: usize,
+    pub comm_step: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of scripted faults for one BSP session.
+///
+/// Plans are tiny (a handful of faults); lookup is a linear scan, and a
+/// session with no plan attached performs no lookup at all.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing).
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Builder: add `kind` at `(rank, comm_step)`.
+    pub fn with(mut self, rank: usize, comm_step: usize, kind: FaultKind) -> Self {
+        self.faults.push(Fault { rank, comm_step, kind });
+        self
+    }
+
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The scripted faults, in insertion order.
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Faults scheduled for `(rank, comm_step)`.
+    pub(crate) fn faults_for(
+        &self,
+        rank: usize,
+        comm_step: usize,
+    ) -> impl Iterator<Item = &FaultKind> {
+        self.faults
+            .iter()
+            .filter(move |f| f.rank == rank && f.comm_step == comm_step)
+            .map(|f| &f.kind)
+    }
+
+    /// Parse a command-line fault spec: comma-separated clauses of the
+    /// form `kind@rank:step[:to[:keep]]`.
+    ///
+    /// - `panic@R:S` — panic rank `R` at communication superstep `S`
+    /// - `delay@R:S:MS` — rank `R` sleeps `MS` milliseconds at step `S`
+    /// - `drop@R:S:TO` — drop the packet `R` sends to `TO` at step `S`
+    /// - `trunc@R:S:TO:KEEP` — truncate that packet to `KEEP` words
+    /// - `corrupt@R:S:TO` — force a duplicate packet into `TO`'s slot
+    ///
+    /// ```
+    /// use fftu::bsp::{FaultKind, FaultPlan};
+    /// let plan = FaultPlan::parse("panic@1:0,drop@0:1:2").unwrap();
+    /// assert_eq!(plan.faults().len(), 2);
+    /// assert_eq!(plan.faults()[1].kind, FaultKind::DropPacket { to: 2 });
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind_str, site) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("fault clause '{clause}': expected kind@rank:step..."))?;
+            let fields: Vec<usize> = site
+                .split(':')
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| format!("fault clause '{clause}': bad number '{v}'"))
+                })
+                .collect::<Result<_, _>>()?;
+            let arity_err = |want: &str| {
+                format!("fault clause '{clause}': '{kind_str}' needs {want}")
+            };
+            let kind = match (kind_str, fields.len()) {
+                ("panic", 2) => FaultKind::Panic,
+                ("delay", 3) => FaultKind::Delay(Duration::from_millis(fields[2] as u64)),
+                ("drop", 3) => FaultKind::DropPacket { to: fields[2] },
+                ("trunc", 4) => FaultKind::TruncatePacket { to: fields[2], keep: fields[3] },
+                ("corrupt", 3) => FaultKind::CorruptPacket { to: fields[2] },
+                ("panic", _) => return Err(arity_err("rank:step")),
+                ("delay", _) => return Err(arity_err("rank:step:millis")),
+                ("drop", _) | ("corrupt", _) => return Err(arity_err("rank:step:to")),
+                ("trunc", _) => return Err(arity_err("rank:step:to:keep")),
+                _ => {
+                    return Err(format!(
+                        "fault clause '{clause}': unknown kind '{kind_str}' \
+                         (expected panic|delay|drop|trunc|corrupt)"
+                    ))
+                }
+            };
+            plan = plan.with(fields[0], fields[1], kind);
+        }
+        if plan.is_empty() {
+            return Err("empty fault spec".into());
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_every_kind() {
+        let plan =
+            FaultPlan::parse("panic@1:0, delay@0:2:150, drop@2:1:0, trunc@1:1:0:3, corrupt@0:0:1")
+                .unwrap();
+        assert_eq!(
+            plan.faults(),
+            &[
+                Fault { rank: 1, comm_step: 0, kind: FaultKind::Panic },
+                Fault {
+                    rank: 0,
+                    comm_step: 2,
+                    kind: FaultKind::Delay(Duration::from_millis(150))
+                },
+                Fault { rank: 2, comm_step: 1, kind: FaultKind::DropPacket { to: 0 } },
+                Fault { rank: 1, comm_step: 1, kind: FaultKind::TruncatePacket { to: 0, keep: 3 } },
+                Fault { rank: 0, comm_step: 0, kind: FaultKind::CorruptPacket { to: 1 } },
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in ["", "panic", "panic@", "panic@1", "panic@x:0", "drop@1:0", "explode@1:0"] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn lookup_matches_site_exactly() {
+        let plan = FaultPlan::new()
+            .with(1, 0, FaultKind::Panic)
+            .with(1, 2, FaultKind::DropPacket { to: 0 });
+        assert_eq!(plan.faults_for(1, 0).count(), 1);
+        assert_eq!(plan.faults_for(1, 1).count(), 0);
+        assert_eq!(plan.faults_for(0, 0).count(), 0);
+        assert_eq!(plan.faults_for(1, 2).count(), 1);
+    }
+}

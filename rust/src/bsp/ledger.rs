@@ -83,6 +83,13 @@ impl ProcLedger {
     pub fn charge_mem_words(&mut self, words: usize) {
         self.cur().mem_words += words;
     }
+
+    /// Label of the superstep currently being recorded — used by the
+    /// failure path to attribute a panic to the superstep it happened
+    /// in (a panic before any superstep reports the placeholder).
+    pub fn current_label(&self) -> &'static str {
+        self.steps.last().map(|s| s.label).unwrap_or("<no superstep>")
+    }
 }
 
 /// Aggregated superstep cost: maxima over processors.

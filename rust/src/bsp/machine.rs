@@ -13,78 +13,316 @@
 //! measured on this runtime; paper-scale p is extrapolated through
 //! [`crate::costmodel`] from the exact ledgers recorded here.
 //!
+//! # Failure model
+//!
+//! Sessions are *abortable*: the barrier is a cancellable rendezvous
+//! (count + generation + abort flag over a condvar). Any rank that
+//! panics, detects a protocol violation, or times out waiting for its
+//! peers flips the session to aborted; every current and future waiter
+//! then wakes with `SessionAborted` instead of blocking forever, unwinds
+//! (draining its mailbox row on the way out), and the session as a whole
+//! returns a typed [`BspFailure`] from [`try_run_spmd`] /
+//! [`try_run_spmd_with`] naming every genuinely failing rank, the
+//! superstep label, and the cause ([`FailureCause`]). [`run_spmd`] is
+//! the panicking wrapper. Deterministic fault injection for testing this
+//! machinery lives in [`crate::bsp::fault`]; always-on cheap detection
+//! (packet counts against the compiled schedule, the occupied-slot
+//! invariant, symmetric pairwise lengths) turns injected — or real —
+//! protocol corruption into aborts.
+//!
 //! Under `--cfg loom` the private `sync` shim swaps the standard-library
 //! synchronization primitives for [loom](https://docs.rs/loom)'s
 //! model-checked versions, and the `loom_model` tests at the bottom of
 //! this file explore EVERY interleaving of the mailbox pointer-swap
-//! protocol and the arena session try-lock (CI's `loom` job). The
-//! dependency-free companion checker lives in
-//! [`crate::analysis::interleave`].
+//! protocol, the arena session try-lock, and the cancellable barrier's
+//! abort path (CI's `loom` job). The dependency-free companion checker
+//! lives in [`crate::analysis::interleave`].
 
 // This file is one of the three allocation-audited hot modules (see
 // clippy.toml): the steady-state paths (`exchange_swap`,
 // `pairwise_exchange`) must stay free of allocation-prone calls; the
-// session-setup and test code that legitimately allocates carries
-// explicit `#[allow]`s with justifications.
+// session-setup, failure-path, and test code that legitimately
+// allocates carries explicit `#[allow]`s with justifications.
 #![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
 
-use sync::{Barrier, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Duration;
 
+use sync::{Condvar, Mutex};
+
+use super::fault::{FaultKind, FaultPlan};
 use super::ledger::{CostReport, ProcLedger, SuperstepKind};
 use crate::fft::C64;
 
 /// Synchronization primitives behind the runtime: the standard library
-/// by default, loom's model-checked doubles under `--cfg loom` (loom
-/// ships no `Barrier`, so the loom side carries a condvar-based one
-/// with the same `new`/`wait` surface).
+/// by default, loom's model-checked doubles under `--cfg loom`. The
+/// cancellable barrier below is hand-rolled over these (one
+/// implementation for both worlds; the deadline arm is std-only because
+/// loom models logical time, not wall-clock time).
 mod sync {
     #[cfg(not(loom))]
-    pub(crate) use std::sync::{Barrier, Mutex};
+    pub(crate) use std::sync::{Condvar, Mutex};
 
     #[cfg(loom)]
-    pub(crate) use loom::sync::Mutex;
+    pub(crate) use loom::sync::{Condvar, Mutex};
+}
 
-    #[cfg(loom)]
-    pub(crate) struct Barrier {
-        state: loom::sync::Mutex<BarrierState>,
-        cvar: loom::sync::Condvar,
-        n: usize,
-    }
+/// Lock a mutex, riding through poisoning: a panicking rank may unwind
+/// while holding a mailbox-slot or registry lock, and the surviving
+/// ranks (and the post-session drain) must still be able to inspect the
+/// contents — an `Option<Vec<C64>>` is structurally valid regardless of
+/// where the holder died.
+#[cfg(not(loom))]
+fn lock_robust<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
-    #[cfg(loom)]
-    struct BarrierState {
-        count: usize,
-        generation: usize,
-    }
+#[cfg(loom)]
+fn lock_robust<T>(m: &Mutex<T>) -> loom::sync::MutexGuard<'_, T> {
+    m.lock().unwrap()
+}
 
-    #[cfg(loom)]
-    impl Barrier {
-        pub(crate) fn new(n: usize) -> Self {
-            Barrier {
-                state: loom::sync::Mutex::new(BarrierState { count: 0, generation: 0 }),
-                cvar: loom::sync::Condvar::new(),
-                n,
-            }
+/// Why a barrier wait returned without the rendezvous completing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum BarrierWaitError {
+    /// The session was aborted (by this or another rank).
+    Aborted,
+    /// This waiter exceeded the superstep deadline.
+    TimedOut,
+}
+
+struct BarrierState {
+    count: usize,
+    generation: usize,
+    aborted: bool,
+}
+
+/// A cancellable rendezvous barrier: `std::sync::Barrier` semantics plus
+/// an `abort` switch. Once aborted, every current waiter is released
+/// with `Err(Aborted)` and every future `wait` returns `Err(Aborted)`
+/// immediately — the session is dead and stays dead (no reset), which is
+/// exactly what lets a panicking rank's peers unwind instead of
+/// deadlocking.
+pub(crate) struct CancellableBarrier {
+    state: Mutex<BarrierState>,
+    cvar: Condvar,
+    n: usize,
+}
+
+impl CancellableBarrier {
+    pub(crate) fn new(n: usize) -> Self {
+        CancellableBarrier {
+            state: Mutex::new(BarrierState { count: 0, generation: 0, aborted: false }),
+            cvar: Condvar::new(),
+            n,
         }
+    }
 
-        /// Same semantics as `std::sync::Barrier::wait` (minus the
-        /// leader token, which the runtime never uses): the `n`-th
-        /// arrival resets the count and wakes every waiter; earlier
-        /// arrivals sleep until the generation advances.
-        pub(crate) fn wait(&self) {
-            let mut st = self.state.lock().unwrap();
-            let generation = st.generation;
-            st.count += 1;
-            if st.count == self.n {
-                st.count = 0;
-                st.generation += 1;
-                self.cvar.notify_all();
-            } else {
-                while st.generation == generation {
-                    st = self.cvar.wait(st).unwrap();
+    /// Flip the session to aborted and wake every waiter. Idempotent.
+    pub(crate) fn abort(&self) {
+        let mut st = lock_robust(&self.state);
+        st.aborted = true;
+        drop(st);
+        self.cvar.notify_all();
+    }
+
+    /// Wait for all `n` participants (or abort/timeout). `deadline`
+    /// bounds *this* wait; `None` waits forever. The deadline arm is
+    /// compiled out under loom (loom has no wall clock); loom models
+    /// exercise the abort path, the timeout path is a std-only refinement
+    /// of it.
+    pub(crate) fn wait(&self, deadline: Option<Duration>) -> Result<(), BarrierWaitError> {
+        let mut st = lock_robust(&self.state);
+        if st.aborted {
+            return Err(BarrierWaitError::Aborted);
+        }
+        let generation = st.generation;
+        st.count += 1;
+        if st.count == self.n {
+            st.count = 0;
+            st.generation += 1;
+            drop(st);
+            self.cvar.notify_all();
+            return Ok(());
+        }
+        #[cfg(not(loom))]
+        {
+            match deadline {
+                None => loop {
+                    st = self.cvar.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+                    if st.aborted {
+                        return Err(BarrierWaitError::Aborted);
+                    }
+                    if st.generation != generation {
+                        return Ok(());
+                    }
+                },
+                Some(d) => {
+                    let start = std::time::Instant::now();
+                    loop {
+                        let left = d.saturating_sub(start.elapsed());
+                        if left.is_zero() {
+                            // Abandoning the rendezvous corrupts the
+                            // count, but the caller aborts the session
+                            // immediately, so the barrier is dead anyway.
+                            return Err(BarrierWaitError::TimedOut);
+                        }
+                        let (g, _timeout) = self
+                            .cvar
+                            .wait_timeout(st, left)
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                        st = g;
+                        if st.aborted {
+                            return Err(BarrierWaitError::Aborted);
+                        }
+                        if st.generation != generation {
+                            return Ok(());
+                        }
+                    }
                 }
             }
         }
+        #[cfg(loom)]
+        {
+            let _ = deadline;
+            loop {
+                st = self.cvar.wait(st).unwrap();
+                if st.aborted {
+                    return Err(BarrierWaitError::Aborted);
+                }
+                if st.generation != generation {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// Panic payload used to unwind a rank out of an aborted session. The
+/// catcher in `try_run_spmd_with` recognizes it and does NOT record it
+/// as a failure: the rank is a victim of the abort, not its cause.
+struct SessionAborted;
+
+/// Unwind out of an aborted session.
+fn abort_unwind() -> ! {
+    std::panic::panic_any(SessionAborted)
+}
+
+/// Why a rank failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum FailureCause {
+    /// The rank's closure panicked (message captured when stringy).
+    Panic(String),
+    /// The rank detected a protocol violation (bad packet count,
+    /// occupied mailbox slot, asymmetric pairing, ...).
+    Violation(String),
+    /// The rank exceeded the superstep deadline waiting for its peers.
+    Timeout,
+}
+
+impl std::fmt::Display for FailureCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FailureCause::Panic(msg) => write!(f, "panicked: {msg}"),
+            FailureCause::Violation(msg) => write!(f, "protocol violation: {msg}"),
+            FailureCause::Timeout => write!(f, "timed out waiting for peers"),
+        }
+    }
+}
+
+/// One rank's failure record: who, where, why.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RankFailure {
+    pub rank: usize,
+    /// Label of the superstep (or barrier sync) the rank failed in.
+    pub superstep: &'static str,
+    pub cause: FailureCause,
+}
+
+impl std::fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BSP processor {} at superstep '{}' {}", self.rank, self.superstep, self.cause)
+    }
+}
+
+/// A failed SPMD session: every rank that *genuinely* failed (panicked,
+/// detected a violation, or timed out), in detection order. Ranks that
+/// merely woke from the aborted barrier are victims and are not listed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BspFailure {
+    pub failures: Vec<RankFailure>,
+}
+
+impl BspFailure {
+    /// The first-detected failure (the registry is in detection order).
+    pub fn first(&self) -> &RankFailure {
+        &self.failures[0]
+    }
+
+    /// Whether any recorded failure is a deadline timeout.
+    pub fn timed_out(&self) -> bool {
+        self.failures.iter().any(|f| f.cause == FailureCause::Timeout)
+    }
+}
+
+impl std::fmt::Display for BspFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, failure) in self.failures.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "{failure}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for BspFailure {}
+
+/// Default per-wait superstep deadline: generous enough that no
+/// legitimate superstep at test/bench scale comes near it, small enough
+/// that an accidental deadlock surfaces as a typed failure instead of a
+/// wedged process.
+pub const DEFAULT_SUPERSTEP_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Session knobs for [`try_run_spmd_with`]: the per-barrier-wait
+/// deadline and an optional scripted [`FaultPlan`]. The default
+/// (generous deadline, no faults) is what every production path uses;
+/// the fault plane costs one `Option` test per communication superstep
+/// when disarmed.
+#[derive(Clone, Debug)]
+pub struct SpmdOptions {
+    /// Upper bound on any single barrier wait; `None` waits forever.
+    pub deadline: Option<Duration>,
+    /// Scripted faults (testing / chaos engineering only).
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for SpmdOptions {
+    fn default() -> Self {
+        SpmdOptions { deadline: Some(DEFAULT_SUPERSTEP_DEADLINE), faults: None }
+    }
+}
+
+impl SpmdOptions {
+    /// Builder: set the per-wait superstep deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder: wait forever at barriers (pre-PR-8 behavior).
+    pub fn without_deadline(mut self) -> Self {
+        self.deadline = None;
+        self
+    }
+
+    /// Builder: attach a scripted fault plan.
+    pub fn inject(mut self, faults: FaultPlan) -> Self {
+        self.faults = Some(Arc::new(faults));
+        self
     }
 }
 
@@ -93,13 +331,53 @@ struct Shared {
     p: usize,
     /// Mailbox slot (sender, receiver) -> packet in flight.
     slots: Vec<Mutex<Option<Vec<C64>>>>,
-    barrier: Barrier,
+    barrier: CancellableBarrier,
+    /// Failure registry, in detection order.
+    failures: Mutex<Vec<RankFailure>>,
+    deadline: Option<Duration>,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+impl Shared {
+    // Cold failure path; the push is once-per-failed-session, not
+    // steady state.
+    #[allow(clippy::disallowed_methods)]
+    fn record_failure(&self, rank: usize, superstep: &'static str, cause: FailureCause) {
+        lock_robust(&self.failures).push(RankFailure { rank, superstep, cause });
+    }
+}
+
+/// Receive-count expectation for one all-to-all, compiled from the
+/// schedule (the same per-pair counts the `analysis` module's
+/// FlowConservation lint verifies statically).
+enum Expect<'e> {
+    /// No compiled expectation (legacy paths).
+    None,
+    /// Every non-self packet has exactly this many words (FFTU's
+    /// Eq. 2.12 uniform packets).
+    Uniform(usize),
+    /// `counts[i]` words expected from sender `i`.
+    PerSender(&'e [usize]),
+}
+
+impl Expect<'_> {
+    #[inline]
+    fn of(&self, i: usize) -> Option<usize> {
+        match self {
+            Expect::None => None,
+            Expect::Uniform(w) => Some(*w),
+            Expect::PerSender(counts) => Some(counts[i]),
+        }
+    }
 }
 
 /// Per-processor execution context handed to the SPMD closure.
 pub struct Ctx<'a> {
     rank: usize,
     shared: &'a Shared,
+    /// Communication supersteps completed by this rank (fault-plan
+    /// coordinates are `(rank, comm_step)`).
+    comm_step: usize,
     pub ledger: ProcLedger,
 }
 
@@ -128,6 +406,114 @@ impl<'a> Ctx<'a> {
         self.ledger.charge_flops(flops);
     }
 
+    /// Record a failure for this rank, abort the session, and unwind.
+    /// Cold path: runs at most once per session.
+    #[allow(clippy::disallowed_methods)]
+    fn fail(&self, superstep: &'static str, cause: FailureCause) -> ! {
+        self.shared.record_failure(self.rank, superstep, cause);
+        self.shared.barrier.abort();
+        abort_unwind()
+    }
+
+    /// Wait at the cancellable barrier under the session deadline. On
+    /// abort, unwind silently (another rank recorded the cause); on
+    /// timeout, record a `Timeout` failure for this rank (the stalled
+    /// peer is elsewhere — possibly not even at a barrier — so the
+    /// detecting rank reports) and abort.
+    fn sync_wait(&self, superstep: &'static str) {
+        match self.shared.barrier.wait(self.shared.deadline) {
+            Ok(()) => {}
+            Err(BarrierWaitError::Aborted) => abort_unwind(),
+            Err(BarrierWaitError::TimedOut) => self.fail(superstep, FailureCause::Timeout),
+        }
+    }
+
+    /// Apply this rank's scripted pre-deposit faults for communication
+    /// superstep `step` (panic, delay, drop/truncate an outgoing
+    /// packet). Returns whether the packet to `pair_to` (pairwise mode)
+    /// should be dropped. Cold unless a fault plan is armed.
+    #[allow(clippy::disallowed_methods)]
+    fn apply_pre_faults(
+        &self,
+        label: &'static str,
+        step: usize,
+        bufs: &mut [Vec<C64>],
+        pair_to: Option<usize>,
+    ) -> bool {
+        let Some(plan) = self.shared.faults.as_deref() else { return false };
+        let mut drop_pair = false;
+        for kind in plan.faults_for(self.rank, step) {
+            match kind {
+                FaultKind::Panic => {
+                    panic!(
+                        "injected fault: processor {} panics at communication superstep {} ('{}')",
+                        self.rank, step, label
+                    )
+                }
+                FaultKind::Delay(d) => std::thread::sleep(*d),
+                FaultKind::DropPacket { to } => match pair_to {
+                    Some(partner) if *to == partner => drop_pair = true,
+                    Some(_) => {}
+                    None => {
+                        if let Some(b) = bufs.get_mut(*to) {
+                            b.clear();
+                        }
+                    }
+                },
+                FaultKind::TruncatePacket { to, keep } => match pair_to {
+                    Some(partner) if *to == partner => bufs[0].truncate(*keep),
+                    Some(_) => {}
+                    None => {
+                        if let Some(b) = bufs.get_mut(*to) {
+                            b.truncate(*keep);
+                        }
+                    }
+                },
+                FaultKind::CorruptPacket { .. } => {} // post-deposit (below)
+                #[allow(unreachable_patterns)] // FaultKind is non_exhaustive
+                _ => {}
+            }
+        }
+        drop_pair
+    }
+
+    /// Apply scripted corrupt faults: force a duplicate packet into the
+    /// mailbox slot for `to`. If the slot is occupied (the normal case
+    /// — the legitimate packet is there) the occupied-slot invariant
+    /// fires right here at the sender; if it was empty, the spurious
+    /// packet is caught by the receiver's count expectation.
+    #[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+    fn apply_corrupt_faults(&self, label: &'static str, step: usize) {
+        let Some(plan) = self.shared.faults.as_deref() else { return };
+        let p = self.shared.p;
+        for kind in plan.faults_for(self.rank, step) {
+            if let FaultKind::CorruptPacket { to } = kind {
+                if *to == self.rank || *to >= p {
+                    continue;
+                }
+                let occupied = {
+                    let mut slot = lock_robust(&self.shared.slots[self.rank * p + to]);
+                    if slot.is_some() {
+                        true
+                    } else {
+                        *slot = Some(vec![C64::ZERO]);
+                        false
+                    }
+                };
+                if occupied {
+                    self.fail(
+                        label,
+                        FailureCause::Violation(format!(
+                            "duplicate deposit into occupied mailbox slot ({} -> {}) \
+                             (corrupted packet)",
+                            self.rank, to
+                        )),
+                    );
+                }
+            }
+        }
+    }
+
     /// Bulk-synchronous all-to-all: `outgoing[j]` is the packet for
     /// processor `j` (may be empty; `outgoing[rank]` is a local move and
     /// is not charged). Returns `incoming[i]` = packet from processor
@@ -140,6 +526,22 @@ impl<'a> Ctx<'a> {
     /// the hot path allocation-free.
     pub fn exchange(&mut self, label: &'static str, mut outgoing: Vec<Vec<C64>>) -> Vec<Vec<C64>> {
         self.exchange_swap(label, &mut outgoing);
+        outgoing
+    }
+
+    /// [`Ctx::exchange`] with compiled receive-count expectations:
+    /// `expected_in[i]` is the number of words sender `i` must deliver
+    /// (0 = no packet). A missing, short, or oversized packet aborts the
+    /// session with a typed violation instead of flowing downstream.
+    /// Used by [`crate::bsp::redistribute`], whose `RedistPlan` knows
+    /// every pair's packet size at plan time.
+    pub fn exchange_checked(
+        &mut self,
+        label: &'static str,
+        mut outgoing: Vec<Vec<C64>>,
+        expected_in: &[usize],
+    ) -> Vec<Vec<C64>> {
+        self.exchange_swap_inner(label, &mut outgoing, Expect::PerSender(expected_in));
         outgoing
     }
 
@@ -157,9 +559,31 @@ impl<'a> Ctx<'a> {
     /// exactly as before (empty packets contribute zero words), so cost
     /// accounting is bit-identical to the locking-everything variant.
     pub fn exchange_swap(&mut self, label: &'static str, bufs: &mut [Vec<C64>]) {
+        self.exchange_swap_inner(label, bufs, Expect::None);
+    }
+
+    /// [`Ctx::exchange_swap`] with a uniform receive-count expectation:
+    /// every non-self packet must carry exactly `words` words (FFTU's
+    /// Eq. 2.12 packets — the compiled `packet_len` of the plan). A
+    /// missing or mis-sized packet aborts the session.
+    pub fn exchange_swap_uniform(
+        &mut self,
+        label: &'static str,
+        bufs: &mut [Vec<C64>],
+        words: usize,
+    ) {
+        self.exchange_swap_inner(label, bufs, Expect::Uniform(words));
+    }
+
+    fn exchange_swap_inner(&mut self, label: &'static str, bufs: &mut [Vec<C64>], expect: Expect) {
         let p = self.shared.p;
         assert_eq!(bufs.len(), p, "exchange needs one packet per processor");
         self.ledger.begin(SuperstepKind::Communication, label);
+        let step = self.comm_step;
+        self.comm_step += 1;
+        if self.shared.faults.is_some() {
+            self.apply_pre_faults(label, step, bufs, None);
+        }
         let out_words: usize = bufs
             .iter()
             .enumerate()
@@ -167,23 +591,62 @@ impl<'a> Ctx<'a> {
             .map(|(_, v)| v.len())
             .sum();
         // Deposit packets (skip self and empty slots — no lock taken).
-        for (j, packet) in bufs.iter_mut().enumerate() {
-            if j == self.rank || packet.is_empty() {
+        // The occupied-slot check is always on (promoted from a
+        // debug_assert): a dirty slot means the previous superstep's
+        // drain discipline was violated, and continuing would silently
+        // cross packets between supersteps.
+        for j in 0..p {
+            if j == self.rank || bufs[j].is_empty() {
                 continue;
             }
-            let mut slot = self.shared.slots[self.rank * p + j].lock().unwrap();
-            debug_assert!(slot.is_none(), "mailbox slot reused before drain");
-            *slot = Some(std::mem::take(packet));
+            let occupied = {
+                let mut slot = lock_robust(&self.shared.slots[self.rank * p + j]);
+                if slot.is_some() {
+                    true
+                } else {
+                    *slot = Some(std::mem::take(&mut bufs[j]));
+                    false
+                }
+            };
+            if occupied {
+                self.fail(
+                    label,
+                    FailureCause::Violation(format!(
+                        "mailbox slot ({} -> {j}) reused before drain",
+                        self.rank
+                    )),
+                );
+            }
         }
-        self.shared.barrier.wait();
+        if self.shared.faults.is_some() {
+            self.apply_corrupt_faults(label, step);
+        }
+        self.sync_wait(label);
         // Collect packets addressed to us. A slot left `None` means the
-        // sender's packet was empty (it skipped the deposit lock).
+        // sender's packet was empty (it skipped the deposit lock) —
+        // unless the compiled schedule says it should not have been.
         let mut in_words = 0usize;
         for (i, buf) in bufs.iter_mut().enumerate() {
             if i == self.rank {
                 continue;
             }
-            match self.shared.slots[i * p + self.rank].lock().unwrap().take() {
+            let got = lock_robust(&self.shared.slots[i * p + self.rank]).take();
+            let got_words = got.as_ref().map_or(0, Vec::len);
+            if let Some(want) = expect.of(i) {
+                if got_words != want {
+                    self.shared.record_failure(
+                        self.rank,
+                        label,
+                        FailureCause::Violation(format!(
+                            "expected {want}-word packet from processor {i}, got {got_words} \
+                             (dropped, truncated, or spurious)"
+                        )),
+                    );
+                    self.shared.barrier.abort();
+                    abort_unwind();
+                }
+            }
+            match got {
                 Some(packet) => {
                     in_words += packet.len();
                     *buf = packet;
@@ -193,7 +656,7 @@ impl<'a> Ctx<'a> {
         }
         // Second barrier: nobody may start depositing the next
         // exchange's packets until every slot has been drained.
-        self.shared.barrier.wait();
+        self.sync_wait(label);
         let mem_words: usize = bufs.iter().map(|v| v.len()).sum();
         self.ledger.charge_words(out_words, in_words);
         // Pack + unpack both traverse the full local volume.
@@ -214,42 +677,94 @@ impl<'a> Ctx<'a> {
     /// heap allocations. The ledger charges `buf.len()` words out and
     /// the partner's length in (0 for self-paired ranks), plus the
     /// pack/unpack memory traffic, exactly as the all-to-all does.
+    ///
+    /// Always-on detection: a missing partner packet (asymmetric pairing
+    /// or a dropped delivery) and an asymmetric packet length (pairwise
+    /// swaps are length-symmetric — the FlowConservation invariant the
+    /// static verifier checks) abort the session with a typed violation
+    /// instead of panicking into a peer deadlock.
     pub fn pairwise_exchange(&mut self, label: &'static str, partner: usize, buf: &mut Vec<C64>) {
         let p = self.shared.p;
         assert!(partner < p, "pairwise_exchange: partner {partner} out of range for p = {p}");
         self.ledger.begin(SuperstepKind::Communication, label);
+        let step = self.comm_step;
+        self.comm_step += 1;
+        let drop_deposit = if self.shared.faults.is_some() {
+            self.apply_pre_faults(label, step, std::slice::from_mut(buf), Some(partner))
+        } else {
+            false
+        };
         if partner == self.rank {
             // Self-paired: synchronize with the others, move nothing.
-            self.shared.barrier.wait();
-            self.shared.barrier.wait();
+            self.sync_wait(label);
+            self.sync_wait(label);
             self.ledger.charge_words(0, 0);
             self.ledger.charge_mem_words(2 * buf.len());
             return;
         }
         let out_words = buf.len();
-        {
-            let mut slot = self.shared.slots[self.rank * p + partner].lock().unwrap();
-            debug_assert!(slot.is_none(), "mailbox slot reused before drain");
-            *slot = Some(std::mem::take(buf));
+        if !drop_deposit {
+            let occupied = {
+                let mut slot = lock_robust(&self.shared.slots[self.rank * p + partner]);
+                if slot.is_some() {
+                    true
+                } else {
+                    *slot = Some(std::mem::take(buf));
+                    false
+                }
+            };
+            if occupied {
+                self.fail(
+                    label,
+                    FailureCause::Violation(format!(
+                        "mailbox slot ({} -> {partner}) reused before drain",
+                        self.rank
+                    )),
+                );
+            }
         }
-        self.shared.barrier.wait();
-        let incoming = self.shared.slots[partner * p + self.rank]
-            .lock()
-            .unwrap()
-            .take()
-            .expect("pairwise_exchange: partner deposited nothing (asymmetric pairing?)");
+        if self.shared.faults.is_some() {
+            self.apply_corrupt_faults(label, step);
+        }
+        self.sync_wait(label);
+        let incoming = lock_robust(&self.shared.slots[partner * p + self.rank]).take();
+        let Some(incoming) = incoming else {
+            self.fail(
+                label,
+                FailureCause::Violation(format!(
+                    "partner {partner} deposited nothing (asymmetric pairing or dropped packet)"
+                )),
+            );
+        };
+        if incoming.len() != out_words {
+            self.fail(
+                label,
+                FailureCause::Violation(format!(
+                    "pairwise packet from partner {partner} has {} words, expected {out_words} \
+                     (pairwise swaps are length-symmetric)",
+                    incoming.len()
+                )),
+            );
+        }
         *buf = incoming;
         // Second barrier, as in exchange_swap: nobody may deposit the
         // next superstep's packets until every slot has been drained.
-        self.shared.barrier.wait();
+        self.sync_wait(label);
         self.ledger.charge_words(out_words, buf.len());
         self.ledger.charge_mem_words(2 * buf.len());
     }
 
     /// Barrier-only synchronization (used by timing harnesses to align
-    /// processors before starting a measured region).
+    /// processors before starting a measured region). Routed through the
+    /// cancellable barrier under the session deadline, so a stalled
+    /// measurement rank times out with a typed failure instead of
+    /// wedging `measure_warm` — previously this was a bare
+    /// `Barrier::wait` with no abort or deadline. Not a ledger
+    /// superstep: alignment syncs are a measurement aid, not part of the
+    /// BSP cost (failures here are attributed to the label
+    /// `"barrier-sync"`).
     pub fn barrier(&self) {
-        self.shared.barrier.wait();
+        self.sync_wait("barrier-sync");
     }
 }
 
@@ -277,15 +792,53 @@ impl<T> std::fmt::Debug for SpmdOutcome<T> {
     }
 }
 
+/// Stringify a caught panic payload.
+fn payload_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .map(|s| s.as_str())
+        .or_else(|| payload.downcast_ref::<&str>().copied())
+        .unwrap_or("<non-string panic>")
+        .to_string()
+}
+
 /// Run `f` on `p` virtual processors and gather outputs by rank.
 ///
-/// Panics in any processor propagate (with rank context) after all
-/// threads are joined, so a failing assertion inside an algorithm shows
-/// up as a test failure rather than a deadlock.
-// Session setup, not the steady state: the mailbox slots, result slots,
-// and join handles are built once per SPMD run, before any superstep.
-#[allow(clippy::disallowed_methods)]
+/// Panicking wrapper over [`try_run_spmd`]: a failed session panics with
+/// **every** failed rank and its superstep label (the registry is in
+/// detection order, so the first-listed rank is the actual first
+/// fault, not merely the lowest-numbered joining thread).
 pub fn run_spmd<T, F>(p: usize, f: F) -> SpmdOutcome<T>
+where
+    T: Send,
+    F: Fn(&mut Ctx) -> T + Sync,
+{
+    match try_run_spmd(p, f) {
+        Ok(outcome) => outcome,
+        Err(failure) => panic!("{failure}"),
+    }
+}
+
+/// [`try_run_spmd_with`] under [`SpmdOptions::default`] (generous
+/// deadline, no fault injection).
+pub fn try_run_spmd<T, F>(p: usize, f: F) -> Result<SpmdOutcome<T>, BspFailure>
+where
+    T: Send,
+    F: Fn(&mut Ctx) -> T + Sync,
+{
+    try_run_spmd_with(p, SpmdOptions::default(), f)
+}
+
+/// Run `f` on `p` virtual processors; a panic, protocol violation, or
+/// deadline timeout in any rank aborts the whole session and surfaces as
+/// a typed [`BspFailure`] (failing ranks, superstep labels, causes) —
+/// peers are woken from the cancellable barrier and unwound, never
+/// deadlocked, and each unwinding rank drains its mailbox row.
+// Session setup, not the steady state: the mailbox slots, result slots,
+// and failure registry are built once per SPMD run, before any
+// superstep.
+#[allow(clippy::disallowed_methods)]
+pub fn try_run_spmd_with<T, F>(p: usize, opts: SpmdOptions, f: F) -> Result<SpmdOutcome<T>, BspFailure>
 where
     T: Send,
     F: Fn(&mut Ctx) -> T + Sync,
@@ -294,31 +847,47 @@ where
     let shared = Shared {
         p,
         slots: (0..p * p).map(|_| Mutex::new(None)).collect(),
-        barrier: Barrier::new(p),
+        barrier: CancellableBarrier::new(p),
+        failures: Mutex::new(Vec::new()),
+        deadline: opts.deadline,
+        faults: opts.faults,
     };
     let mut results: Vec<Option<(T, ProcLedger)>> = (0..p).map(|_| None).collect();
     std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(p);
         for (rank, slot) in results.iter_mut().enumerate() {
             let shared = &shared;
             let f = &f;
-            handles.push(scope.spawn(move || {
-                let mut ctx = Ctx { rank, shared, ledger: ProcLedger::new() };
-                let out = f(&mut ctx);
-                *slot = Some((out, ctx.ledger));
-            }));
-        }
-        for (rank, h) in handles.into_iter().enumerate() {
-            if let Err(e) = h.join() {
-                let msg = e
-                    .downcast_ref::<String>()
-                    .map(|s| s.as_str())
-                    .or_else(|| e.downcast_ref::<&str>().copied())
-                    .unwrap_or("<non-string panic>");
-                panic!("BSP processor {rank} panicked: {msg}");
-            }
+            scope.spawn(move || {
+                let mut ctx = Ctx { rank, shared, comm_step: 0, ledger: ProcLedger::new() };
+                match catch_unwind(AssertUnwindSafe(|| f(&mut ctx))) {
+                    Ok(out) => *slot = Some((out, ctx.ledger)),
+                    Err(payload) => {
+                        if payload.downcast_ref::<SessionAborted>().is_none() {
+                            // A genuine panic in the closure (assertion,
+                            // injected fault, arithmetic, ...): record it
+                            // before aborting so the registry is never
+                            // empty when peers wake.
+                            shared.record_failure(
+                                rank,
+                                ctx.ledger.current_label(),
+                                FailureCause::Panic(payload_message(payload.as_ref())),
+                            );
+                            shared.barrier.abort();
+                        }
+                        // Drain this rank's mailbox row so the aborted
+                        // session ends with an empty mailbox.
+                        for j in 0..p {
+                            let _ = lock_robust(&shared.slots[rank * p + j]).take();
+                        }
+                    }
+                }
+            });
         }
     });
+    let failures = std::mem::take(&mut *lock_robust(&shared.failures));
+    if !failures.is_empty() {
+        return Err(BspFailure { failures });
+    }
     let mut outputs = Vec::with_capacity(p);
     let mut ledgers = Vec::with_capacity(p);
     for r in results {
@@ -326,17 +895,18 @@ where
         outputs.push(out);
         ledgers.push(ledger);
     }
-    SpmdOutcome { outputs, report: CostReport::from_procs(&ledgers) }
+    Ok(SpmdOutcome { outputs, report: CostReport::from_procs(&ledgers) })
 }
 
-/// Loom model checking of the two protocols the static lints cannot
-/// see inside: the mailbox pointer-swap handshake and the arena session
-/// try-lock. `loom::model` runs each closure under EVERY permitted
-/// thread interleaving (CI's `loom` job: `RUSTFLAGS="--cfg loom"
-/// cargo test --lib loom_`). The models mirror `exchange_swap` /
-/// `pairwise_exchange` at p = 2 — deposit under the slot lock, barrier,
-/// take under the slot lock, barrier — and the `ScratchArena` /
-/// `ExecArena` try-lock fallback.
+/// Loom model checking of the protocols the static lints cannot see
+/// inside: the mailbox pointer-swap handshake, the arena session
+/// try-lock, and the cancellable barrier's abort path. `loom::model`
+/// runs each closure under EVERY permitted thread interleaving (CI's
+/// `loom` job: `RUSTFLAGS="--cfg loom" cargo test --lib loom_`). The
+/// models mirror `exchange_swap` / `pairwise_exchange` at p = 2 —
+/// deposit under the slot lock, barrier, take under the slot lock,
+/// barrier — the `ScratchArena` / `ExecArena` try-lock fallback, and
+/// the abort handshake a panicking rank performs.
 #[cfg(all(loom, test))]
 // Model-checking fixtures, not the steady state: loom explores the
 // interleavings of tiny allocated packets.
@@ -346,18 +916,21 @@ mod loom_model {
     use loom::sync::Arc;
     use loom::thread;
 
-    use super::sync::{Barrier, Mutex};
+    use super::sync::Mutex;
+    use super::{BarrierWaitError, CancellableBarrier};
 
     /// The two-barrier mailbox swap at p = 2: every interleaving must
     /// deliver exactly the partner's packet, never observe an occupied
-    /// slot at deposit time, and leave both slots drained.
+    /// slot at deposit time, and leave both slots drained. (Barrier
+    /// waits go through the cancellable barrier exactly as the runtime's
+    /// do; no abort occurs, so every wait must return `Ok`.)
     #[test]
     fn loom_mailbox_swap_is_race_free() {
         loom::model(|| {
             let p = 2usize;
             let slots: Arc<Vec<Mutex<Option<Vec<usize>>>>> =
                 Arc::new((0..p * p).map(|_| Mutex::new(None)).collect());
-            let barrier = Arc::new(Barrier::new(p));
+            let barrier = Arc::new(CancellableBarrier::new(p));
             let handles: Vec<_> = (0..p)
                 .map(|rank| {
                     let slots = Arc::clone(&slots);
@@ -372,7 +945,7 @@ mod loom_model {
                             assert!(slot.is_none(), "slot reused before drain");
                             *slot = Some(vec![rank]);
                         }
-                        barrier.wait();
+                        barrier.wait(None).unwrap();
                         // Collect: the partner's packet must be there.
                         let packet = slots[partner * p + rank]
                             .lock()
@@ -380,7 +953,7 @@ mod loom_model {
                             .take()
                             .expect("partner deposited nothing");
                         assert_eq!(packet, vec![partner]);
-                        barrier.wait();
+                        barrier.wait(None).unwrap();
                         // Next round's deposit into the same slot — only
                         // sound because of the second barrier above.
                         {
@@ -388,20 +961,42 @@ mod loom_model {
                             assert!(slot.is_none(), "round 1 slot not drained");
                             *slot = Some(vec![10 + rank]);
                         }
-                        barrier.wait();
+                        barrier.wait(None).unwrap();
                         let packet = slots[partner * p + rank]
                             .lock()
                             .unwrap()
                             .take()
                             .expect("round 1 packet missing");
                         assert_eq!(packet, vec![10 + partner]);
-                        barrier.wait();
+                        barrier.wait(None).unwrap();
                     })
                 })
                 .collect();
             for h in handles {
                 h.join().unwrap();
             }
+        });
+    }
+
+    /// The cancellable barrier's abort path: one rank aborts (as the
+    /// unwind handler of a panicking rank does) while the other is at —
+    /// or heading to — the barrier. Every interleaving must release the
+    /// waiter with `Err(Aborted)`; no interleaving may leave it parked
+    /// (the deadlock the old `std::sync::Barrier` suffered) or let the
+    /// rendezvous spuriously complete.
+    #[test]
+    fn loom_cancellable_barrier_abort_releases_waiters() {
+        loom::model(|| {
+            let barrier = Arc::new(CancellableBarrier::new(2));
+            let waiter = {
+                let barrier = Arc::clone(&barrier);
+                thread::spawn(move || barrier.wait(None))
+            };
+            // The "panicking" rank never arrives; it aborts instead.
+            barrier.abort();
+            assert_eq!(waiter.join().unwrap(), Err(BarrierWaitError::Aborted));
+            // The session stays dead: late arrivals bail immediately.
+            assert_eq!(barrier.wait(None), Err(BarrierWaitError::Aborted));
         });
     }
 
@@ -638,16 +1233,182 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "BSP processor")]
+    #[should_panic(expected = "BSP processor 1")]
     fn panics_propagate_with_rank() {
+        // Before the cancellable barrier, rank 0 reaching an exchange
+        // here would deadlock forever (std::sync::Barrier has no abort);
+        // now the abort releases it and the panic carries rank 1's
+        // failure. Rank 0 deliberately enters the exchange to prove it.
         run_spmd(2, |ctx| {
             if ctx.rank() == 1 {
                 panic!("boom");
             }
-            // Other rank must not deadlock on the barrier: panic unwinding
-            // poisons the barrier? std Barrier has no poisoning; rank 0
-            // would block forever if it reached an exchange. Keep rank 0
-            // exchange-free so the test terminates.
+            let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE]; 2];
+            ctx.exchange_swap("post-panic", &mut bufs);
         });
+    }
+
+    #[test]
+    fn abort_wakes_waiters_and_reports_the_failing_rank() {
+        let err = try_run_spmd(3, |ctx| {
+            if ctx.rank() == 2 {
+                ctx.begin_comp("doomed");
+                panic!("kaput");
+            }
+            // Ranks 0 and 1 are parked at the exchange barrier when the
+            // abort lands; they must wake and unwind, not deadlock.
+            let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE]; 3];
+            ctx.exchange_swap("survivors", &mut bufs);
+        })
+        .unwrap_err();
+        assert_eq!(err.failures.len(), 1, "victims must not be recorded: {err}");
+        assert_eq!(err.first().rank, 2);
+        assert_eq!(err.first().superstep, "doomed");
+        assert!(matches!(err.first().cause, FailureCause::Panic(ref m) if m == "kaput"));
+    }
+
+    #[test]
+    fn all_failed_ranks_are_reported() {
+        // Two independent panics: both must land in the registry (the
+        // old join loop re-panicked on the lowest rank in join order,
+        // hiding the other).
+        let err = try_run_spmd(4, |ctx| {
+            if ctx.rank() == 1 || ctx.rank() == 3 {
+                panic!("rank {} down", ctx.rank());
+            }
+            let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE]; 4];
+            ctx.exchange_swap("peers", &mut bufs);
+        })
+        .unwrap_err();
+        let mut ranks: Vec<usize> = err.failures.iter().map(|f| f.rank).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, vec![1, 3]);
+        let msg = err.to_string();
+        assert!(msg.contains("BSP processor 1") && msg.contains("BSP processor 3"), "{msg}");
+    }
+
+    #[test]
+    fn superstep_deadline_converts_stall_into_timeout() {
+        let opts = SpmdOptions::default().with_deadline(Duration::from_millis(50));
+        let err = try_run_spmd_with(2, opts, |ctx| {
+            if ctx.rank() == 1 {
+                // Stalled rank: never panics, just arrives very late.
+                std::thread::sleep(Duration::from_millis(400));
+            }
+            ctx.barrier();
+        })
+        .unwrap_err();
+        assert!(err.timed_out(), "{err}");
+        assert_eq!(err.first().rank, 0, "the waiting rank detects the stall");
+        assert_eq!(err.first().superstep, "barrier-sync");
+    }
+
+    #[test]
+    fn injected_panic_fault_aborts_with_typed_failure() {
+        let faults = FaultPlan::new().with(0, 1, FaultKind::Panic);
+        let err = try_run_spmd_with(2, SpmdOptions::default().inject(faults), |ctx| {
+            for _ in 0..3 {
+                let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE; 2]; 2];
+                ctx.exchange_swap("rounds", &mut bufs);
+            }
+        })
+        .unwrap_err();
+        assert_eq!(err.first().rank, 0);
+        assert_eq!(err.first().superstep, "rounds");
+        assert!(matches!(err.first().cause, FailureCause::Panic(_)));
+    }
+
+    #[test]
+    fn injected_delay_fault_times_out_the_peers() {
+        let faults = FaultPlan::new().with(1, 0, FaultKind::Delay(Duration::from_millis(400)));
+        let opts = SpmdOptions::default().with_deadline(Duration::from_millis(60)).inject(faults);
+        let err = try_run_spmd_with(2, opts, |ctx| {
+            let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE]; 2];
+            ctx.exchange_swap("delayed", &mut bufs);
+        })
+        .unwrap_err();
+        assert!(err.timed_out(), "{err}");
+        assert_eq!(err.first().rank, 0, "the healthy rank reports the timeout");
+        assert_eq!(err.first().superstep, "delayed");
+    }
+
+    #[test]
+    fn dropped_packet_is_caught_by_count_expectation() {
+        let faults = FaultPlan::new().with(1, 0, FaultKind::DropPacket { to: 0 });
+        let err = try_run_spmd_with(2, SpmdOptions::default().inject(faults), |ctx| {
+            let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE; 3]; 2];
+            ctx.exchange_swap_uniform("checked", &mut bufs, 3);
+        })
+        .unwrap_err();
+        assert_eq!(err.first().rank, 0, "the receiver detects the drop");
+        assert!(
+            matches!(err.first().cause, FailureCause::Violation(ref m) if m.contains("expected 3-word")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn truncated_packet_is_caught_by_count_expectation() {
+        let faults = FaultPlan::new().with(1, 0, FaultKind::TruncatePacket { to: 0, keep: 1 });
+        let err = try_run_spmd_with(2, SpmdOptions::default().inject(faults), |ctx| {
+            let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE; 3]; 2];
+            ctx.exchange_swap_uniform("checked", &mut bufs, 3);
+        })
+        .unwrap_err();
+        assert_eq!(err.first().rank, 0);
+        assert!(
+            matches!(err.first().cause, FailureCause::Violation(ref m) if m.contains("got 1")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn corrupt_packet_trips_the_occupied_slot_invariant() {
+        let faults = FaultPlan::new().with(1, 0, FaultKind::CorruptPacket { to: 0 });
+        let err = try_run_spmd_with(2, SpmdOptions::default().inject(faults), |ctx| {
+            let mut bufs: Vec<Vec<C64>> = vec![vec![C64::ONE; 2]; 2];
+            ctx.exchange_swap_uniform("checked", &mut bufs, 2);
+        })
+        .unwrap_err();
+        assert_eq!(err.first().rank, 1, "the corrupting rank trips its own deposit invariant");
+        assert!(
+            matches!(err.first().cause, FailureCause::Violation(ref m) if m.contains("occupied")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn asymmetric_pairwise_pairing_aborts_instead_of_deadlocking() {
+        // Rank 1 wrongly self-pairs, so rank 0's partner slot stays
+        // empty: previously an `expect` panic that deadlocked rank 1 at
+        // the second barrier; now a typed violation for the session.
+        let err = try_run_spmd(2, |ctx| {
+            let partner = 1; // rank 0 pairs with 1; rank 1 wrongly self-pairs
+            let mut buf = vec![C64::ONE; 2];
+            ctx.pairwise_exchange("mispair", partner, &mut buf);
+        })
+        .unwrap_err();
+        assert_eq!(err.first().rank, 0);
+        assert!(
+            matches!(err.first().cause, FailureCause::Violation(ref m) if m.contains("deposited nothing")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn armed_but_unmatched_fault_plan_leaves_execution_untouched() {
+        // Fault plane armed with a site no superstep reaches: results
+        // and ledger must be identical to a fault-free run.
+        let faults = FaultPlan::new().with(0, 99, FaultKind::Panic);
+        let outcome = try_run_spmd_with(2, SpmdOptions::default().inject(faults), |ctx| {
+            let s = ctx.rank();
+            let outgoing: Vec<Vec<C64>> = (0..2).map(|j| vec![C64::new(s as f64, j as f64)]).collect();
+            let incoming = ctx.exchange("clean", outgoing);
+            incoming[1 - s][0]
+        })
+        .unwrap();
+        assert_eq!(outcome.outputs[0], C64::new(1.0, 0.0));
+        assert_eq!(outcome.outputs[1], C64::new(0.0, 1.0));
+        assert_eq!(outcome.report.comm_supersteps(), 1);
     }
 }

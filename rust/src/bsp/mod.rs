@@ -65,11 +65,16 @@
 //! assert_eq!(outcome.report.supersteps[0].h_max, 2);
 //! ```
 
+pub mod fault;
 pub mod ledger;
 pub mod machine;
 
+pub use fault::{Fault, FaultKind, FaultPlan};
 pub use ledger::{CostReport, ProcLedger, SuperstepCost, SuperstepKind};
-pub use machine::{run_spmd, Ctx, SpmdOutcome};
+pub use machine::{
+    run_spmd, try_run_spmd, try_run_spmd_with, BspFailure, Ctx, FailureCause, RankFailure,
+    SpmdOptions, SpmdOutcome,
+};
 
 use crate::dist::RedistPlan;
 use crate::fft::C64;
@@ -77,10 +82,18 @@ use crate::fft::C64;
 /// Execute a compiled [`RedistPlan`] on the BSP machine: pack, one
 /// all-to-all exchange, unpack. This is the building block every baseline
 /// pipeline uses for its "global transpose" steps.
+///
+/// The receive side is validated against the plan's compiled send matrix
+/// ([`RedistPlan::packet_words`] — the same counts the static verifier's
+/// FlowConservation lint checks): a dropped, truncated, or spurious
+/// packet aborts the session with a typed violation instead of producing
+/// silently garbled output.
 pub fn redistribute(ctx: &mut Ctx, plan: &RedistPlan, label: &'static str, local: &[C64]) -> Vec<C64> {
     let s = ctx.rank();
     let outgoing = plan.pack(s, local);
-    let incoming = ctx.exchange(label, outgoing);
+    let expected_in: Vec<usize> =
+        (0..ctx.nprocs()).map(|i| plan.packet_words(i, s)).collect();
+    let incoming = ctx.exchange_checked(label, outgoing, &expected_in);
     plan.unpack(s, &incoming)
 }
 

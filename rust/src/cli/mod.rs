@@ -48,6 +48,17 @@ COMMANDS:
                                    conjugate pairwise exchange (fftu only;
                                    trig kinds need 2 p_l | n_l per axis)
                --inverse           inverse transform (1/N-normalized)
+               --inject SPEC       deterministic fault injection into the
+                                   BSP session (native engine), e.g.
+                                   panic@1:0 | delay@1:0:250 |
+                                   drop@0:1:2 | trunc@0:1:2:1 |
+                                   corrupt@0:1:2, comma-separated
+                                   (rank R at communication superstep S,
+                                   targeting rank TO); the session aborts
+                                   with a typed error instead of hanging
+               --deadline-ms MS    superstep deadline override (default
+                                   120000; a stalled rank turns into a
+                                   typed timeout error)
                --reps R            timed repetitions (default 3; the plan is
                                    built once and reused — plan-cache hits)
                --verbose           print plan-cache statistics (hits/misses/
@@ -246,6 +257,23 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             };
             let cache = PlanCache::new(8);
             let planned = cache.plan(algorithm, &descriptor)?;
+            // Fault injection / deadline override: threaded to every
+            // SPMD session this plan runs, so a scripted fault exercises
+            // the abort-and-report path end to end from the CLI.
+            let inject = args.get("inject").or(cfg.get("inject"));
+            let deadline_ms = args.get_usize("deadline-ms")?.or(cfg.get_usize("deadline-ms")?);
+            if inject.is_some() || deadline_ms.is_some() {
+                let mut opts = crate::bsp::SpmdOptions::default();
+                if let Some(ms) = deadline_ms {
+                    opts = opts.with_deadline(std::time::Duration::from_millis(ms as u64));
+                }
+                if let Some(spec) = inject {
+                    let faults = crate::bsp::FaultPlan::parse(spec)
+                        .map_err(|e| format!("--inject: {e}"))?;
+                    opts = opts.inject(faults);
+                }
+                planned.set_exec_options(opts);
+            }
             // Resolving again is a pure cache hit — proof for the log
             // line that repeated requests do no planning work. (For
             // --algo auto this is the point of caching the winner under
@@ -705,7 +733,8 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         // Warm both paths (first arena execute builds the workers), then
         // time `reps` single-transform executes of each, interleaved,
         // and keep the per-engine median (see `median_seconds`).
-        let (warm_new, _) = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
+        let (warm_new, _) = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward)
+            .map_err(|e| format!("bench {}: {e}", case.name))?;
         let (warm_old, _) = fftu_execute_batch_legacy(&plan, &[&global], Direction::Forward);
         if warm_new != warm_old {
             return Err(format!("bench {}: engines disagree", case.name));
@@ -717,7 +746,8 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                 std::hint::black_box(&out);
             },
             || {
-                let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward);
+                let out = fftu_execute_batch_arena(&plan, &arena, &[&global], Direction::Forward)
+                    .expect("fault-free bench session");
                 std::hint::black_box(&out);
             },
         );

@@ -16,10 +16,11 @@ pub use pack::{pack_twiddle, pack_twiddle_odometer, unpack, PackProgram, PackRow
 pub use plan::{axis_pmax, choose_grid, enumerate_grids, fftu_pmax, FftuPlan};
 pub use worker::Worker;
 
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::api::FftError;
-use crate::bsp::{run_spmd, CostReport};
+use crate::bsp::{run_spmd, try_run_spmd_with, CostReport, SpmdOptions};
 use crate::fft::{C64, Direction, Planner};
 
 /// Persistent per-rank execution state for one [`FftuPlan`]: each rank's
@@ -39,6 +40,15 @@ pub struct ExecArena {
     /// try-locks this; a loser runs on a transient arena instead.
     session: Mutex<()>,
     workers: Vec<Mutex<Option<Worker>>>,
+    /// Set when an SPMD session on this arena exited abnormally (panic,
+    /// violation, timeout): worker state may be half-updated and must
+    /// not leak into the next execute. The next [`ExecArena::begin_session`]
+    /// wipes the workers (they rebuild lazily) and clears the flag.
+    poisoned: AtomicBool,
+    /// Session options (superstep deadline, fault injection) applied to
+    /// every execute through this arena. Default: generous deadline, no
+    /// faults.
+    exec_opts: Mutex<SpmdOptions>,
 }
 
 impl std::fmt::Debug for ExecArena {
@@ -55,21 +65,65 @@ impl ExecArena {
         ExecArena {
             session: Mutex::new(()),
             workers: (0..p).map(|_| Mutex::new(None)).collect(),
+            poisoned: AtomicBool::new(false),
+            exec_opts: Mutex::new(SpmdOptions::default()),
         }
     }
 
     /// Claim the arena for one SPMD session, or `None` when another
     /// session currently owns it (the caller then falls back to
     /// transient per-call workers — the pre-PR behavior — instead of
-    /// risking crossed mutex/barrier deadlock).
+    /// risking crossed mutex/barrier deadlock). If the previous session
+    /// on this arena died abnormally, the half-updated worker state is
+    /// wiped here (workers rebuild lazily on first use), so recovery is
+    /// transparent to the caller.
     pub fn begin_session(&self) -> Option<MutexGuard<'_, ()>> {
-        self.session.try_lock().ok()
+        // A panicking SPMD rank poisons its worker mutex (and, in
+        // principle, the session mutex); the arena outlives the failure,
+        // so ride through poison everywhere.
+        let guard = match self.session.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => return None,
+        };
+        if self.poisoned.swap(false, Ordering::AcqRel) {
+            for slot in &self.workers {
+                *slot.lock().unwrap_or_else(PoisonError::into_inner) = None;
+            }
+        }
+        Some(guard)
+    }
+
+    /// Mark the arena's worker state as unreliable after an abnormal
+    /// session exit; the next [`ExecArena::begin_session`] rebuilds it.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    /// Whether the arena is currently poisoned (test/diagnostic hook).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Set the session options (superstep deadline, fault injection)
+    /// used by every subsequent execute through this arena.
+    pub fn set_exec_options(&self, opts: SpmdOptions) {
+        *self.exec_opts.lock().unwrap_or_else(PoisonError::into_inner) = opts;
+    }
+
+    /// The session options subsequent executes will run under.
+    pub fn exec_options(&self) -> SpmdOptions {
+        self.exec_opts.lock().unwrap_or_else(PoisonError::into_inner).clone()
     }
 
     /// Lock rank `rank`'s worker slot, building the worker on first use.
     /// The guard derefs to `Some(worker)` after this call.
     pub fn worker(&self, plan: &Arc<FftuPlan>, rank: usize) -> MutexGuard<'_, Option<Worker>> {
-        let mut slot = self.workers[rank].lock().unwrap();
+        // Poison-tolerant: a previous session's panic while holding this
+        // guard poisons the mutex permanently (MSRV predates
+        // `Mutex::clear_poison`), but `begin_session` has already wiped
+        // the slot, so the contents are trustworthy.
+        let mut slot = self.workers[rank].lock().unwrap_or_else(PoisonError::into_inner);
         if slot.is_none() {
             *slot = Some(Worker::new(plan.clone(), rank));
         }
@@ -95,7 +149,7 @@ pub fn fftu_global(
 ) -> Result<(Vec<C64>, CostReport), FftError> {
     let planner = Planner::new();
     let plan = Arc::new(FftuPlan::new(shape, pgrid, &planner)?);
-    let (mut outs, report) = fftu_execute_batch(&plan, &[global], dir);
+    let (mut outs, report) = fftu_execute_batch(&plan, &[global], dir)?;
     Ok((outs.pop().unwrap(), report))
 }
 
@@ -120,7 +174,7 @@ pub fn fftu_r2c_global(
     let plan = Arc::new(FftuPlan::new(&half_shape(shape), pgrid, &planner)?);
     let p = plan.num_procs();
     r2c_drive(shape, p, real, |packed| {
-        let (mut outs, report) = fftu_execute_batch(&plan, &[packed], Direction::Forward);
+        let (mut outs, report) = fftu_execute_batch(&plan, &[packed], Direction::Forward)?;
         Ok((outs.pop().unwrap(), report))
     })
 }
@@ -140,7 +194,7 @@ pub fn fftu_c2r_global(
     let plan = Arc::new(FftuPlan::new(&half_shape(shape), pgrid, &planner)?);
     let p = plan.num_procs();
     c2r_drive(shape, p, spec, |z_spec| {
-        let (mut outs, report) = fftu_execute_batch(&plan, &[z_spec], Direction::Inverse);
+        let (mut outs, report) = fftu_execute_batch(&plan, &[z_spec], Direction::Inverse)?;
         Ok((outs.pop().unwrap(), report))
     })
 }
@@ -172,7 +226,7 @@ pub fn fftu_trig_global(
     let (out, mut report) = match kind {
         Kind::Dct2 | Kind::Dst2 => {
             let dst = kind == Kind::Dst2;
-            let (mut vs, report) = fftu_execute_trig2_batch_arena(&plan, &arena, &[x], dst);
+            let (mut vs, report) = fftu_execute_trig2_batch_arena(&plan, &arena, &[x], dst)?;
             let mut v = vs.pop().unwrap();
             (trig2_post(&mut v, shape, &trig2_tables(shape), dst, 1.0), report)
         }
@@ -180,7 +234,7 @@ pub fn fftu_trig_global(
             let dst = kind == Kind::Dst3;
             let pre = trig3_pre(x, shape, &trig3_tables(shape), dst);
             let (mut outs, report) =
-                fftu_execute_trig3_batch_arena(&plan, &arena, &[&pre], dst, 1.0);
+                fftu_execute_trig3_batch_arena(&plan, &arena, &[&pre], dst, 1.0)?;
             (outs.pop().unwrap(), report)
         }
         other => {
@@ -206,15 +260,16 @@ pub fn fftu_execute_trig2_batch_arena(
     arena: &ExecArena,
     inputs: &[&[f64]],
     negate_odd: bool,
-) -> (Vec<Vec<C64>>, CostReport) {
+) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
     if session.is_none() {
         let transient = ExecArena::new(p);
+        transient.set_exec_options(arena.exec_options());
         return fftu_execute_trig2_batch_arena(plan, &transient, inputs, negate_odd);
     }
-    let outcome = run_spmd(p, |ctx| {
+    let outcome = try_run_spmd_with(p, arena.exec_options(), |ctx| {
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
@@ -226,8 +281,12 @@ pub fn fftu_execute_trig2_batch_arena(
             outs.push(local);
         }
         outs
-    });
-    (plan.dist.gather_batch(&outcome.outputs), outcome.report)
+    })
+    .map_err(|failure| {
+        arena.poison();
+        FftError::from(failure)
+    })?;
+    Ok((plan.dist.gather_batch(&outcome.outputs), outcome.report))
 }
 
 /// Type-3 trig engine: the inputs are the phase-prepared complex arrays
@@ -242,15 +301,16 @@ pub fn fftu_execute_trig3_batch_arena(
     inputs: &[&[C64]],
     negate_odd: bool,
     scale: f64,
-) -> (Vec<Vec<f64>>, CostReport) {
+) -> Result<(Vec<Vec<f64>>, CostReport), FftError> {
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
     if session.is_none() {
         let transient = ExecArena::new(p);
+        transient.set_exec_options(arena.exec_options());
         return fftu_execute_trig3_batch_arena(plan, &transient, inputs, negate_odd, scale);
     }
-    let outcome = run_spmd(p, |ctx| {
+    let outcome = try_run_spmd_with(p, arena.exec_options(), |ctx| {
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
@@ -262,14 +322,18 @@ pub fn fftu_execute_trig3_batch_arena(
             outs.push(local);
         }
         outs
-    });
+    })
+    .map_err(|failure| {
+        arena.poison();
+        FftError::from(failure)
+    })?;
     let mut results = vec![vec![0.0f64; plan.total()]; inputs.len()];
     for (rank, rank_outs) in outcome.outputs.iter().enumerate() {
         for (item, res) in rank_outs.iter().zip(results.iter_mut()) {
             plan.gather_rank_trig3_into(item, rank, res, negate_odd, scale);
         }
     }
-    (results, outcome.report)
+    Ok((results, outcome.report))
 }
 
 /// Type-2 trig engine with **rank-local** combine passes (the zig-zag
@@ -291,16 +355,17 @@ pub fn fftu_execute_trig2_zigzag_batch_arena(
     dst: bool,
     tables: &[Vec<C64>],
     scale: f64,
-) -> (Vec<Vec<f64>>, CostReport) {
+) -> Result<(Vec<Vec<f64>>, CostReport), FftError> {
     use crate::fft::trignd::trig_combine_flops;
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
     if session.is_none() {
         let transient = ExecArena::new(p);
+        transient.set_exec_options(arena.exec_options());
         return fftu_execute_trig2_zigzag_batch_arena(plan, &transient, inputs, dst, tables, scale);
     }
-    let outcome = run_spmd(p, |ctx| {
+    let outcome = try_run_spmd_with(p, arena.exec_options(), |ctx| {
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
@@ -322,14 +387,18 @@ pub fn fftu_execute_trig2_zigzag_batch_arena(
             outs.push(local);
         }
         outs
-    });
+    })
+    .map_err(|failure| {
+        arena.poison();
+        FftError::from(failure)
+    })?;
     let mut results = vec![vec![0.0f64; plan.total()]; inputs.len()];
     for (rank, rank_outs) in outcome.outputs.iter().enumerate() {
         for (item, res) in rank_outs.iter().zip(results.iter_mut()) {
             zigzag::gather_rank_zigzag_real_into(plan, item, rank, res, dst, scale);
         }
     }
-    (results, outcome.report)
+    Ok((results, outcome.report))
 }
 
 /// Type-3 trig engine with **rank-local** phase passes: the raw real
@@ -346,16 +415,17 @@ pub fn fftu_execute_trig3_zigzag_batch_arena(
     dst: bool,
     tables: &[Vec<C64>],
     scale: f64,
-) -> (Vec<Vec<f64>>, CostReport) {
+) -> Result<(Vec<Vec<f64>>, CostReport), FftError> {
     use crate::fft::trignd::trig_combine_flops;
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
     if session.is_none() {
         let transient = ExecArena::new(p);
+        transient.set_exec_options(arena.exec_options());
         return fftu_execute_trig3_zigzag_batch_arena(plan, &transient, inputs, dst, tables, scale);
     }
-    let outcome = run_spmd(p, |ctx| {
+    let outcome = try_run_spmd_with(p, arena.exec_options(), |ctx| {
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
@@ -377,14 +447,18 @@ pub fn fftu_execute_trig3_zigzag_batch_arena(
             outs.push(local);
         }
         outs
-    });
+    })
+    .map_err(|failure| {
+        arena.poison();
+        FftError::from(failure)
+    })?;
     let mut results = vec![vec![0.0f64; plan.total()]; inputs.len()];
     for (rank, rank_outs) in outcome.outputs.iter().enumerate() {
         for (item, res) in rank_outs.iter().zip(results.iter_mut()) {
             plan.gather_rank_trig3_into(item, rank, res, dst, scale);
         }
     }
-    (results, outcome.report)
+    Ok((results, outcome.report))
 }
 
 /// R2C engine with a **rank-local** untangle: the complex core runs on
@@ -403,16 +477,17 @@ pub fn fftu_execute_r2c_pairwise_batch_arena(
     real_shape: &[usize],
     inputs: &[&[C64]],
     tw: &[C64],
-) -> (Vec<Vec<C64>>, CostReport) {
+) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
     use crate::fft::realnd::wrap_flops;
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
     if session.is_none() {
         let transient = ExecArena::new(p);
+        transient.set_exec_options(arena.exec_options());
         return fftu_execute_r2c_pairwise_batch_arena(plan, &transient, real_shape, inputs, tw);
     }
-    let outcome = run_spmd(p, |ctx| {
+    let outcome = try_run_spmd_with(p, arena.exec_options(), |ctx| {
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
@@ -449,7 +524,11 @@ pub fn fftu_execute_r2c_pairwise_batch_arena(
             outs.push((main, extra));
         }
         outs
-    });
+    })
+    .map_err(|failure| {
+        arena.poison();
+        FftError::from(failure)
+    })?;
     let d = plan.shape.len();
     let h = plan.shape[d - 1];
     let nspec = plan.total() / h * (h + 1);
@@ -460,7 +539,7 @@ pub fn fftu_execute_r2c_pairwise_batch_arena(
             zigzag::gather_rank_spectrum_into(plan, &s_coords, main, extra, res);
         }
     }
-    (results, outcome.report)
+    Ok((results, outcome.report))
 }
 
 /// C2R engine with a **rank-local** retangle, the exact adjoint of
@@ -477,16 +556,17 @@ pub fn fftu_execute_c2r_pairwise_batch_arena(
     real_shape: &[usize],
     inputs: &[&[C64]],
     tw: &[C64],
-) -> (Vec<Vec<C64>>, CostReport) {
+) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
     use crate::fft::realnd::wrap_flops;
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
     if session.is_none() {
         let transient = ExecArena::new(p);
+        transient.set_exec_options(arena.exec_options());
         return fftu_execute_c2r_pairwise_batch_arena(plan, &transient, real_shape, inputs, tw);
     }
-    let outcome = run_spmd(p, |ctx| {
+    let outcome = try_run_spmd_with(p, arena.exec_options(), |ctx| {
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
@@ -516,8 +596,12 @@ pub fn fftu_execute_c2r_pairwise_batch_arena(
             outs.push(local);
         }
         outs
-    });
-    (plan.dist.gather_batch(&outcome.outputs), outcome.report)
+    })
+    .map_err(|failure| {
+        arena.poison();
+        FftError::from(failure)
+    })?;
+    Ok((plan.dist.gather_batch(&outcome.outputs), outcome.report))
 }
 
 /// Execute a prebuilt [`FftuPlan`] on a batch of global arrays in ONE
@@ -530,7 +614,7 @@ pub fn fftu_execute_batch(
     plan: &Arc<FftuPlan>,
     inputs: &[&[C64]],
     dir: Direction,
-) -> (Vec<Vec<C64>>, CostReport) {
+) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
     let arena = ExecArena::new(plan.num_procs());
     fftu_execute_batch_arena(plan, &arena, inputs, dir)
 }
@@ -550,7 +634,7 @@ pub fn fftu_execute_batch_arena(
     arena: &ExecArena,
     inputs: &[&[C64]],
     dir: Direction,
-) -> (Vec<Vec<C64>>, CostReport) {
+) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     // One SPMD session per arena at a time: a concurrent execute of the
@@ -559,9 +643,10 @@ pub fn fftu_execute_batch_arena(
     let session = arena.begin_session();
     if session.is_none() {
         let transient = ExecArena::new(p);
+        transient.set_exec_options(arena.exec_options());
         return fftu_execute_batch_arena(plan, &transient, inputs, dir);
     }
-    let outcome = run_spmd(p, |ctx| {
+    let outcome = try_run_spmd_with(p, arena.exec_options(), |ctx| {
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
@@ -573,8 +658,12 @@ pub fn fftu_execute_batch_arena(
             outs.push(local);
         }
         outs
-    });
-    (plan.dist.gather_batch(&outcome.outputs), outcome.report)
+    })
+    .map_err(|failure| {
+        arena.poison();
+        FftError::from(failure)
+    })?;
+    Ok((plan.dist.gather_batch(&outcome.outputs), outcome.report))
 }
 
 /// The pre-PR engine, retained verbatim for the benchmark trajectory
@@ -726,7 +815,7 @@ mod tests {
             let n: usize = shape.iter().product();
             let x = rand_global(n, &mut rng);
             for dir in [Direction::Forward, Direction::Inverse] {
-                let (new_out, new_rep) = fftu_execute_batch(&plan, &[&x], dir);
+                let (new_out, new_rep) = fftu_execute_batch(&plan, &[&x], dir).unwrap();
                 let (old_out, old_rep) = fftu_execute_batch_legacy(&plan, &[&x], dir);
                 assert_eq!(new_out, old_out, "shape {shape:?} grid {grid:?} {dir:?}");
                 assert_eq!(new_rep.comm_supersteps(), old_rep.comm_supersteps());
@@ -743,18 +832,48 @@ mod tests {
         let arena = ExecArena::new(plan.num_procs());
         let mut rng = Rng::new(0xA4E);
         let x = rand_global(256, &mut rng);
-        let (first, _) = fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward);
+        let (first, _) =
+            fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward).unwrap();
         // Second execute on the same arena: workers already built, same
         // result (buffers fully overwritten, no state bleed).
-        let (second, rep) = fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward);
+        let (second, rep) =
+            fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward).unwrap();
         assert_eq!(first, second);
         assert_eq!(rep.comm_supersteps(), 1);
         // And a different input through the warm arena is still correct.
         let y = rand_global(256, &mut rng);
         let mut want = y.clone();
         fftn_inplace(&mut want, &[16, 16], Direction::Forward);
-        let (got, _) = fftu_execute_batch_arena(&plan, &arena, &[&y], Direction::Forward);
+        let (got, _) = fftu_execute_batch_arena(&plan, &arena, &[&y], Direction::Forward).unwrap();
         assert!(rel_l2_error(&got[0], &want) < 1e-9);
+    }
+
+    #[test]
+    fn poisoned_arena_recovers_with_bit_identical_output() {
+        use crate::bsp::{FaultKind, FaultPlan};
+        let planner = Planner::new();
+        let plan = Arc::new(FftuPlan::new(&[16, 16], &[2, 2], &planner).unwrap());
+        let arena = ExecArena::new(plan.num_procs());
+        let mut rng = Rng::new(0xB0B);
+        let x = rand_global(256, &mut rng);
+        // Warm the arena, then kill a session mid-flight with an
+        // injected panic at the all-to-all.
+        let (want, _) = fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward).unwrap();
+        arena.set_exec_options(
+            SpmdOptions::default().inject(FaultPlan::new().with(1, 0, FaultKind::Panic)),
+        );
+        let err = fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward).unwrap_err();
+        assert!(matches!(err, FftError::RankFailure { .. }), "{err}");
+        assert!(arena.is_poisoned());
+        // Disarm and execute again: the arena rebuilds its workers and
+        // the output is bit-identical to the pre-fault run (== a fresh
+        // plan's output, by `arena_reuses_workers_across_executes`).
+        arena.set_exec_options(SpmdOptions::default());
+        let (got, rep) =
+            fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward).unwrap();
+        assert!(!arena.is_poisoned());
+        assert_eq!(got, want, "recovered arena output must be bit-identical");
+        assert_eq!(rep.comm_supersteps(), 1);
     }
 
     #[test]
@@ -767,13 +886,14 @@ mod tests {
         let arena = ExecArena::new(plan.num_procs());
         let mut rng = Rng::new(0xCC);
         let x = rand_global(64, &mut rng);
-        let (want, _) = fftu_execute_batch(&plan, &[&x], Direction::Forward);
+        let (want, _) = fftu_execute_batch(&plan, &[&x], Direction::Forward).unwrap();
         std::thread::scope(|s| {
             for _ in 0..3 {
                 s.spawn(|| {
                     for _ in 0..5 {
                         let (out, _) =
-                            fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward);
+                            fftu_execute_batch_arena(&plan, &arena, &[&x], Direction::Forward)
+                                .unwrap();
                         assert_eq!(out, want);
                     }
                 });

@@ -111,7 +111,11 @@ impl Worker {
     /// allocation, no spine churn); returns with `self.w` holding
     /// `W^{(s)}`.
     pub fn superstep1(&mut self, ctx: &mut Ctx) {
-        ctx.exchange_swap("fftu-alltoall", &mut self.packets);
+        // Every FFTU packet has exactly `packet_len` words (Eq. 2.12);
+        // the exchange validates received counts against that compiled
+        // expectation, so a dropped or truncated packet aborts the
+        // session instead of unpacking garbage.
+        ctx.exchange_swap_uniform("fftu-alltoall", &mut self.packets, self.plan.packet_len());
         unpack(&self.plan, &self.packets, &mut self.w);
     }
 

@@ -368,6 +368,58 @@ fn steady_state_pairwise_r2c_c2r_path_is_allocation_free() {
 }
 
 #[test]
+fn steady_state_execute_with_armed_fault_plan_is_allocation_free() {
+    let _serial = serial();
+    // Fault-tolerance must be free when nothing fails: a session with a
+    // superstep deadline AND an armed-but-unmatched fault plan (site
+    // (0, 999) never fires) must keep the steady-state loop at zero
+    // allocations. The per-superstep fault lookup is a linear scan over
+    // the plan's preallocated table, and the deadline rides the condvar
+    // wait — no buffers, no boxing.
+    use fftu::bsp::{try_run_spmd_with, Ctx, FaultKind, FaultPlan, SpmdOptions};
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(&[16, 16], &[2, 2], &planner).unwrap());
+    let p = plan.num_procs();
+    let arena = ExecArena::new(p);
+    let n = plan.total();
+    let global: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -0.5 * i as f64)).collect();
+    let opts = SpmdOptions::default()
+        .with_deadline(std::time::Duration::from_secs(120))
+        .inject(FaultPlan::new().with(0, 999, FaultKind::Panic));
+    try_run_spmd_with(p, opts, |ctx: &mut Ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(&plan, rank);
+        let worker = slot.as_mut().unwrap();
+        let mut local = vec![C64::ZERO; plan.local_len()];
+        plan.scatter_rank_into(&global, rank, &mut local);
+        // Warm-up: the first forward/inverse round builds every buffer.
+        worker.execute(ctx, &mut local, Direction::Forward);
+        worker.execute(ctx, &mut local, Direction::Inverse);
+        ctx.ledger.reserve(12);
+        ctx.barrier();
+        if rank == 0 {
+            ALLOCS.store(0, Ordering::SeqCst);
+            REALLOCS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        worker.execute(ctx, &mut local, Direction::Forward);
+        worker.execute(ctx, &mut local, Direction::Inverse);
+        ctx.barrier();
+        if rank == 0 {
+            COUNTING.store(false, Ordering::SeqCst);
+        }
+        ctx.barrier();
+    })
+    .expect("unmatched fault plan must not fire");
+    let count = ALLOCS.load(Ordering::SeqCst) + REALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        count, 0,
+        "steady-state execute with armed fault plan allocated {count} times (16x16/[2,2])"
+    );
+}
+
+#[test]
 fn first_execute_does_allocate_sanity_check() {
     let _serial = serial();
     // Sanity check that the counter actually observes the engine: the

@@ -1,0 +1,287 @@
+//! Fault-matrix integration suite: deterministic fault injection across
+//! (fault kind × communication superstep × algorithm), asserting that
+//! every scripted fault terminates promptly with a *typed* error —
+//! never a hang, never garbage output — and that a poisoned plan
+//! recovers transparently (bit-identically) on its next execute.
+//!
+//! The matrix covers FFTU gathered (p ∈ {2, 3, 4}), FFTU zig-zag r2c
+//! (faults at both communication supersteps), and the slab baseline,
+//! plus the `Algorithm::Auto` single-retry failover and the raw BSP
+//! session's multi-rank failure report.
+//!
+//! CI runs this binary under a hard `timeout`: a hang here is a failure
+//! of the cancellable-barrier design, not a flaky test.
+
+use std::time::Duration;
+
+use fftu::api::{plan, Algorithm, FftError, PlanCache, PlannedFft, Transform};
+use fftu::bsp::{try_run_spmd_with, FaultKind, FaultPlan, SpmdOptions};
+use fftu::fft::{dft_nd, rel_l2_error, C64};
+use fftu::testing::Rng;
+use fftu::Direction;
+
+fn complex_input(n: usize, seed: u64) -> Vec<C64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+}
+
+fn real_input(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f64_signed()).collect()
+}
+
+fn is_session_error(e: &FftError) -> bool {
+    matches!(e, FftError::RankFailure { .. } | FftError::Timeout { .. })
+}
+
+/// Bit-level equality (stricter than `==`, which conflates -0.0 / +0.0):
+/// "recovered" means the rebuilt arena reproduces the fault-free run
+/// exactly, not merely within tolerance.
+fn assert_bits_eq(got: &[C64], want: &[C64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.re.to_bits() == w.re.to_bits() && g.im.to_bits() == w.im.to_bits(),
+            "{what}: element {i} differs after recovery: {g:?} vs {w:?}"
+        );
+    }
+}
+
+/// Arm `faults` on a planned transform, assert the injected session
+/// terminates with a typed error, then disarm and assert the next
+/// execute — through the poisoned-and-rebuilt arena — is bit-identical
+/// to the fault-free oracle.
+fn assert_faults_then_recovers(
+    planned: &PlannedFft,
+    x: &[C64],
+    want: &[C64],
+    faults: FaultPlan,
+    what: &str,
+) {
+    planned.set_exec_options(SpmdOptions::default().inject(faults));
+    let err = planned.execute(x).expect_err(what);
+    assert!(is_session_error(&err), "{what}: expected RankFailure/Timeout, got {err:?}");
+    planned.set_exec_options(SpmdOptions::default());
+    let got = planned.execute(x).unwrap_or_else(|e| panic!("{what}: recovery failed: {e}"));
+    assert_bits_eq(&got.output, want, what);
+}
+
+/// Every fault kind, against FFTU gathered at p ∈ {2, 3, 4}. The
+/// injected communication superstep is FFTU's single all-to-all
+/// (comm step 0); the victim is the highest rank, the target packet is
+/// the one addressed to rank 0.
+#[test]
+fn fftu_gathered_fault_matrix() {
+    for (shape, grid) in [
+        (vec![8usize, 8], vec![2usize, 1]), // p = 2
+        (vec![18, 8], vec![3, 1]),          // p = 3
+        (vec![8, 8], vec![2, 2]),           // p = 4
+    ] {
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let planned = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid)).unwrap();
+        let x = complex_input(n, 0xFA17 + p as u64);
+        let want = planned.execute(&x).unwrap().output;
+        let victim = p - 1;
+        for (kind, name) in [
+            (FaultKind::Panic, "panic"),
+            (FaultKind::DropPacket { to: 0 }, "drop"),
+            (FaultKind::TruncatePacket { to: 0, keep: 1 }, "truncate"),
+            (FaultKind::CorruptPacket { to: 0 }, "corrupt"),
+        ] {
+            let what = format!("fftu {shape:?}/{grid:?} {name}@{victim}:0");
+            let faults = FaultPlan::new().with(victim, 0, kind);
+            assert_faults_then_recovers(&planned, &x, &want, faults, &what);
+        }
+    }
+}
+
+/// A scripted panic is attributed to the panicking rank, with the
+/// communication superstep's label.
+#[test]
+fn panic_report_names_the_victim_rank_and_superstep() {
+    let planned = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).grid(&[2, 2])).unwrap();
+    let x = complex_input(64, 0x7A9);
+    planned
+        .set_exec_options(SpmdOptions::default().inject(FaultPlan::new().with(
+            2,
+            0,
+            FaultKind::Panic,
+        )));
+    match planned.execute(&x).expect_err("injected panic") {
+        FftError::RankFailure { rank, superstep, .. } => {
+            assert_eq!(rank, 2);
+            assert_eq!(superstep, "fftu-alltoall");
+        }
+        other => panic!("expected RankFailure, got {other:?}"),
+    }
+}
+
+/// A delayed rank trips the configured superstep deadline: the waiting
+/// peers detect the stall, report `Timeout`, and the session unwinds —
+/// it does not hang for the duration of the delay's owner forever.
+#[test]
+fn delayed_rank_trips_the_deadline() {
+    let planned = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).grid(&[2, 1])).unwrap();
+    let x = complex_input(64, 0xDE1A);
+    let want = planned.execute(&x).unwrap().output;
+    let faults = FaultPlan::new().with(1, 0, FaultKind::Delay(Duration::from_millis(400)));
+    planned.set_exec_options(
+        SpmdOptions::default().with_deadline(Duration::from_millis(40)).inject(faults),
+    );
+    let err = planned.execute(&x).expect_err("deadline must fire");
+    assert!(matches!(err, FftError::Timeout { .. }), "expected Timeout, got {err:?}");
+    planned.set_exec_options(SpmdOptions::default());
+    let got = planned.execute(&x).expect("recovery after timeout").output;
+    assert_bits_eq(&got, &want, "timeout recovery");
+}
+
+/// A delay well under the deadline is harmless: the session completes
+/// and the output is bit-identical to the undelayed run (faults that
+/// don't violate the protocol must not corrupt anything).
+#[test]
+fn sub_deadline_delay_is_harmless() {
+    let planned = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).grid(&[2, 1])).unwrap();
+    let x = complex_input(64, 0x510);
+    let want = planned.execute(&x).unwrap().output;
+    let faults = FaultPlan::new().with(0, 0, FaultKind::Delay(Duration::from_millis(20)));
+    planned.set_exec_options(
+        SpmdOptions::default().with_deadline(Duration::from_secs(30)).inject(faults),
+    );
+    let got = planned.execute(&x).expect("sub-deadline delay").output;
+    assert_bits_eq(&got, &want, "sub-deadline delay");
+}
+
+/// Zig-zag r2c has two communication supersteps per item — the core
+/// all-to-all (comm step 0) and the mirror pairwise exchange (comm
+/// step 1). Faults at either must terminate with a typed error, and
+/// the plan must recover bit-identically. `[4, 36] / [1, 3]` shares
+/// only the last axis, so ranks 1 and 2 are genuine mirror partners
+/// (rank 0 is self-conjugate) and the pairwise superstep moves data.
+#[test]
+fn zigzag_r2c_faults_at_each_superstep() {
+    let t = Transform::new(&[4, 36]).grid(&[1, 3]).r2c().zigzag();
+    let planned = plan(Algorithm::Fftu, &t).unwrap();
+    let x = real_input(144, 0x52C);
+    let want = planned.execute_r2c(&x).unwrap().output;
+    for step in [0usize, 1] {
+        let faults = FaultPlan::new().with(1, step, FaultKind::Panic);
+        planned.set_exec_options(SpmdOptions::default().inject(faults));
+        let err = planned.execute_r2c(&x).expect_err("injected panic");
+        assert!(
+            matches!(err, FftError::RankFailure { rank: 1, .. }),
+            "zig-zag r2c panic@1:{step}: got {err:?}"
+        );
+        planned.set_exec_options(SpmdOptions::default());
+        let got = planned.execute_r2c(&x).expect("recovery").output;
+        assert_bits_eq(&got, &want, &format!("zig-zag r2c recovery after panic@1:{step}"));
+    }
+    // A dropped packet at the core all-to-all is caught by the uniform
+    // receive-count expectation on the receiving rank.
+    let faults = FaultPlan::new().with(2, 0, FaultKind::DropPacket { to: 0 });
+    planned.set_exec_options(SpmdOptions::default().inject(faults));
+    let err = planned.execute_r2c(&x).expect_err("dropped packet");
+    assert!(is_session_error(&err), "zig-zag r2c drop@2:0: got {err:?}");
+    planned.set_exec_options(SpmdOptions::default());
+    let got = planned.execute_r2c(&x).expect("recovery").output;
+    assert_bits_eq(&got, &want, "zig-zag r2c recovery after drop");
+}
+
+/// The slab baseline's two transposes (comm steps 0 and 1) are guarded
+/// by the redistribution plan's per-sender packet-word expectations:
+/// a dropped packet at either step aborts with a typed violation, and
+/// the scratch arena recovers.
+#[test]
+fn slab_baseline_faults_at_each_superstep() {
+    let planned = plan(Algorithm::slab(), &Transform::new(&[8, 8]).procs(2)).unwrap();
+    let x = complex_input(64, 0x51AB);
+    let want = planned.execute(&x).unwrap().output;
+    for step in [0usize, 1] {
+        for (kind, name) in
+            [(FaultKind::Panic, "panic"), (FaultKind::DropPacket { to: 0 }, "drop")]
+        {
+            let what = format!("slab {name}@1:{step}");
+            let faults = FaultPlan::new().with(1, step, kind);
+            assert_faults_then_recovers(&planned, &x, &want, faults, &what);
+        }
+    }
+}
+
+/// A poisoned *cached* plan is indistinguishable from a fresh plan on
+/// its next execute: the cache hands back the same `Arc`, the arena
+/// rebuilds lazily, and the output is bit-identical.
+#[test]
+fn poisoned_cached_plan_matches_fresh_plan_bit_for_bit() {
+    let cache = PlanCache::new(8);
+    let t = Transform::new(&[8, 8]).grid(&[2, 2]);
+    let cached = cache.plan(Algorithm::Fftu, &t).unwrap();
+    let x = complex_input(64, 0xCAC8);
+    cached.set_exec_options(SpmdOptions::default().inject(FaultPlan::new().with(
+        3,
+        0,
+        FaultKind::Panic,
+    )));
+    let err = cached.execute(&x).expect_err("injected panic");
+    assert!(is_session_error(&err), "{err:?}");
+    cached.set_exec_options(SpmdOptions::default());
+    // Re-planning through the cache returns the same (now-recovered) Arc.
+    let again = cache.plan(Algorithm::Fftu, &t).unwrap();
+    let got = again.execute(&x).expect("poisoned cached plan must recover").output;
+    let fresh = plan(Algorithm::Fftu, &t).unwrap().execute(&x).unwrap().output;
+    assert_bits_eq(&got, &fresh, "cached-vs-fresh after poisoning");
+}
+
+/// `Algorithm::Auto` retries once on a session failure: with a fault
+/// armed on the chosen winner, the planner's next-cheapest candidate is
+/// planned fresh (fault-free) and the execute still succeeds.
+#[test]
+fn auto_plan_fails_over_to_next_candidate() {
+    let t = Transform::new(&[16, 16]).procs(4);
+    let auto_plan = plan(Algorithm::Auto, &t).unwrap();
+    let x = complex_input(256, 0xA070);
+    let want = dft_nd(&x, &[16, 16], Direction::Forward);
+    auto_plan.set_exec_options(
+        SpmdOptions::default().inject(FaultPlan::new().with(0, 0, FaultKind::Panic)),
+    );
+    let out = auto_plan.execute(&x).expect("auto failover must succeed").output;
+    assert!(
+        rel_l2_error(&out, &want) < 1e-10,
+        "failover output disagrees with the DFT oracle: {}",
+        rel_l2_error(&out, &want)
+    );
+}
+
+/// The raw session report collects EVERY genuinely failed rank — not
+/// just the first — each labelled with the superstep it died in, while
+/// abort-unwound bystanders are excluded.
+#[test]
+fn all_panicking_ranks_are_reported() {
+    let p = 4;
+    let faults =
+        FaultPlan::new().with(0, 0, FaultKind::Panic).with(2, 0, FaultKind::Panic);
+    let err = try_run_spmd_with(p, SpmdOptions::default().inject(faults), |ctx| {
+        let mut bufs: Vec<Vec<C64>> = (0..p).map(|_| vec![C64::ZERO; 4]).collect();
+        ctx.exchange_swap("matrix-a2a", &mut bufs);
+    })
+    .expect_err("two scripted panics");
+    let mut ranks: Vec<usize> = err.failures.iter().map(|f| f.rank).collect();
+    ranks.sort_unstable();
+    assert_eq!(ranks, vec![0, 2], "exactly the panicking ranks, no bystanders");
+    for f in &err.failures {
+        assert_eq!(f.superstep, "matrix-a2a", "failures carry the superstep label");
+    }
+}
+
+/// The CLI `--inject` grammar drives the same plane end to end: a
+/// parsed spec behaves exactly like a programmatic `FaultPlan`.
+#[test]
+fn parsed_fault_spec_fires() {
+    let planned = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).grid(&[2, 1])).unwrap();
+    let x = complex_input(64, 0x9A25);
+    let want = planned.execute(&x).unwrap().output;
+    let parsed = FaultPlan::parse("panic@1:0").expect("valid spec");
+    assert_faults_then_recovers(&planned, &x, &want, parsed, "parsed panic@1:0");
+    for bad in ["panic@1", "explode@0:0", "drop@0:0", "delay@0:0", "trunc@0:0:1"] {
+        assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} must be rejected");
+    }
+}
