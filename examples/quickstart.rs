@@ -36,7 +36,7 @@ fn main() {
     let plan = cache.plan(Algorithm::Fftu, &forward).unwrap();
     println!("planned: grid {:?} on {} procs", plan.grid().unwrap(), plan.procs());
 
-    let y = plan.execute(&x).unwrap();
+    let y = plan.execute(&x).unwrap().complex();
     println!(
         "forward done: {} communication superstep(s), h = {} words/proc",
         y.report.comm_supersteps(),
@@ -51,7 +51,7 @@ fn main() {
     // Inverse: the SAME program with conjugated weights; the 1/N scaling
     // comes from the descriptor, not from caller-side arithmetic.
     let inverse = forward.clone().inverse().normalization(Normalization::ByN);
-    let z = cache.plan(Algorithm::Fftu, &inverse).unwrap().execute(&y.output).unwrap();
+    let z = cache.plan(Algorithm::Fftu, &inverse).unwrap().execute(&y.output).unwrap().complex();
     println!("roundtrip max |x - ifft(fft(x))| = {:.3e}", max_abs_diff(&z.output, &x));
 
     // Rerun the forward transform: pure cache hit, zero planning work.

@@ -60,7 +60,7 @@ fn main() {
         let xb: Vec<C64> = (0..reps).flat_map(|_| x.clone()).collect();
         let batched = cache.plan(algo, &tb).unwrap();
         let t0 = Instant::now();
-        std::hint::black_box(batched.execute_batch(&xb).unwrap());
+        std::hint::black_box(batched.execute(&xb).unwrap());
         let per_item = t0.elapsed().as_secs_f64() / reps as f64;
 
         println!(

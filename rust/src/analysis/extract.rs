@@ -11,10 +11,11 @@
 //! read precompiled placement lengths, never payload).
 
 use crate::baselines::{HefftePlan, OutputDist, PencilPlan, PopoviciPlan, SlabPlan};
+use crate::bsp::CostReport;
 use crate::dist::RedistPlan;
 use crate::fftu::{zigzag, FftuPlan};
 
-use super::RecordingCtx;
+use super::{Event, RecordingCtx, Schedule};
 
 /// Alg. 2.3 / 3.1 core: superstep 0 (local FFTs + twiddle), the single
 /// all-to-all, superstep 2 (strided FFTs). The send count to *every*
@@ -134,4 +135,154 @@ pub fn popovici(rec: &mut RecordingCtx, plan: &PopoviciPlan) {
         rec.exchange("popovici-alltoall", counts);
         rec.begin_comp("popovici-strided-fft");
     }
+}
+
+// ---------------------------------------------------------------------
+// Pipelined batch schedules.
+// ---------------------------------------------------------------------
+
+/// True for the events that survive into an executed/analytic ledger
+/// (everything but barriers and arena-session markers).
+fn is_visible(e: &Event) -> bool {
+    !matches!(
+        e,
+        Event::Barrier { .. } | Event::SessionBegin { .. } | Event::SessionEnd { .. }
+    )
+}
+
+/// Clone a run of one-item events into the pipelined stream, recording
+/// each event's one-item visible index (`base + offset`) in `order`.
+fn emit(out: &mut Vec<Event>, order: &mut Vec<usize>, run: &[Event], base: usize) {
+    for (k, e) in run.iter().enumerate() {
+        out.push(e.clone());
+        order.push(base + k);
+    }
+}
+
+/// Build the depth-2 software-pipelined batch schedule from a recorded
+/// single-item schedule, mirroring the batch drivers in `fftu/mod.rs`:
+/// while entry `i`'s packets are in flight between `exchange_start` and
+/// `exchange_finish`, entry `i + 1` runs the compute prefix the driver
+/// overlaps with the flight window — the leading `flight_prefix`
+/// in-session supersteps (superstep 0 for most kinds, only the trig
+/// phase pass for DCT3/DST3 zig-zag, nothing for zig-zag c2r, whose
+/// flight window only scatters the next spectrum). Everything between
+/// that prefix and the entry's own `exchange_start` — pairwise
+/// conversion/mirror swaps included — runs after the previous entry's
+/// finish, exactly as the drivers sequence it: pairwise exchanges can
+/// never overlap an in-flight all-to-all (the mailbox slots are
+/// occupied).
+///
+/// Returns the pipelined schedule plus the *visible-superstep order*:
+/// for each non-barrier, non-session event of the normalized pipelined
+/// schedule (start/finish pairs fused at the finish), the index of the
+/// corresponding superstep in the one-item visible sequence.
+/// [`pipeline_analytic`] replays a per-item analytic ledger in that
+/// order — the exact order the executed ledger charges under
+/// pipelining, since the all-to-all is charged at the finish.
+///
+/// `None` when the schedule does not have the FFTU shape this
+/// transform understands: exactly one arena session containing exactly
+/// one collective all-to-all, nothing before the session, a
+/// compute-only facade tail after it, and no communication inside the
+/// flight prefix. (The batch drivers fall back to the sequential loop
+/// for exactly the same shapes.)
+pub fn pipeline(
+    one: &Schedule,
+    batch: usize,
+    flight_prefix: usize,
+) -> Option<(Schedule, Vec<usize>)> {
+    if batch <= 1 {
+        let visible = one
+            .ranks
+            .first()
+            .map(|events| events.iter().filter(|e| is_visible(e)).count())
+            .unwrap_or(0);
+        return Some((one.clone(), (0..visible).collect()));
+    }
+    let mut ranks = Vec::with_capacity(one.nprocs());
+    let mut order = Vec::new();
+    for (rank, events) in one.ranks.iter().enumerate() {
+        let (pipelined, rank_order) = pipeline_rank(events, batch, flight_prefix)?;
+        if rank == 0 {
+            order = rank_order;
+        }
+        ranks.push(pipelined);
+    }
+    Some((Schedule { ranks }, order))
+}
+
+/// One rank's share of [`pipeline`].
+fn pipeline_rank(
+    events: &[Event],
+    batch: usize,
+    flight_prefix: usize,
+) -> Option<(Vec<Event>, Vec<usize>)> {
+    let (first, rest) = events.split_first()?;
+    let arena = match first {
+        Event::SessionBegin { arena } => *arena,
+        _ => return None,
+    };
+    let end = rest.iter().position(|e| matches!(e, Event::SessionEnd { .. }))?;
+    let body = &rest[..end];
+    let tail = &rest[end + 1..];
+    if body.iter().any(|e| matches!(e, Event::Barrier { .. }))
+        || tail.iter().any(|e| !matches!(e, Event::Compute { .. }))
+    {
+        return None;
+    }
+    let m = body.iter().position(|e| matches!(e, Event::AllToAll { .. }))?;
+    if body[m + 1..].iter().any(|e| matches!(e, Event::AllToAll { .. })) {
+        return None; // per-entry single all-to-all is a precondition
+    }
+    let (label, send_counts) = match &body[m] {
+        Event::AllToAll { label, send_counts } => (*label, send_counts.clone()),
+        _ => unreachable!("position matched an all-to-all"),
+    };
+    let pre = &body[..m];
+    let post = &body[m + 1..];
+    if flight_prefix > pre.len() {
+        return None;
+    }
+    let (pre_a, pre_b) = pre.split_at(flight_prefix);
+    if pre_a.iter().any(Event::is_comm) {
+        return None; // the flight window must stay compute-only
+    }
+
+    // One-item visible indices: body events are 0..body.len() (sessions
+    // are outside, barriers were rejected above), tail follows.
+    let mut out = Vec::new();
+    let mut order = Vec::new();
+    out.push(Event::SessionBegin { arena });
+    emit(&mut out, &mut order, pre_a, 0);
+    emit(&mut out, &mut order, pre_b, flight_prefix);
+    out.push(Event::ExchangeStart { label, send_counts: send_counts.clone() });
+    for i in 0..batch {
+        if i + 1 < batch {
+            emit(&mut out, &mut order, pre_a, 0);
+        }
+        out.push(Event::ExchangeFinish { label });
+        order.push(m); // the fused collective is charged at the finish
+        emit(&mut out, &mut order, post, m + 1);
+        if i + 1 < batch {
+            emit(&mut out, &mut order, pre_b, flight_prefix);
+            out.push(Event::ExchangeStart { label, send_counts: send_counts.clone() });
+        }
+    }
+    out.push(Event::SessionEnd { arena });
+    for _ in 0..batch {
+        emit(&mut out, &mut order, tail, body.len());
+    }
+    Some((out, order))
+}
+
+/// Replay a per-item analytic ledger in pipelined-executed order (the
+/// visible-superstep order [`pipeline`] returns): superstep `j` of the
+/// result is a copy of `one.supersteps[order[j]]`. Per-entry costs are
+/// untouched — pipelining reorders supersteps, it never changes what
+/// any of them charges, which is why Thm 2.1's per-entry `h <= N/p`
+/// carries over to pipelined batches unchanged.
+pub fn pipeline_analytic(one: &CostReport, order: &[usize]) -> CostReport {
+    let supersteps = order.iter().map(|&j| one.supersteps[j].clone()).collect();
+    CostReport { supersteps }
 }

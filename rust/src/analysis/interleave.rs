@@ -281,6 +281,44 @@ pub fn two_barrier_exchange(p: usize, rounds: usize) -> Vec<Vec<Op>> {
         .collect()
 }
 
+/// The depth-2 split-phase pipelined batch exchange, as the mailbox
+/// sees it (mirrors the `exchange_start`/`exchange_finish` sequencing
+/// of the pipelined batch drivers in `fftu/mod.rs`): entry 0's
+/// `exchange_start` deposits up front; each loop iteration packs the
+/// next entry into the alternate buffer set (local work, invisible
+/// here), finishes the in-flight entry (rendezvous barrier, collect,
+/// drain barrier), and only *then* starts the next one. The drain
+/// barrier before the next deposit is exactly what makes double
+/// buffering safe with single-buffered mailbox slots — one entry in
+/// flight at a time.
+pub fn split_phase_pipeline(p: usize, entries: usize) -> Vec<Vec<Op>> {
+    (0..p)
+        .map(|i| {
+            let mut ops = Vec::new();
+            let deposit_all = |ops: &mut Vec<Op>| {
+                for t in (0..p).filter(|&t| t != i) {
+                    ops.push(Op::Deposit { to: t });
+                }
+            };
+            // exchange_start(0): entry 0's packets enter the mailbox.
+            deposit_all(&mut ops);
+            for e in 0..entries {
+                // exchange_finish(e): rendezvous, drain, drain barrier.
+                ops.push(Op::Barrier);
+                for f in (0..p).filter(|&f| f != i) {
+                    ops.push(Op::Collect { from: f });
+                }
+                ops.push(Op::Barrier);
+                // exchange_start(e + 1): only after the drain barrier.
+                if e + 1 < entries {
+                    deposit_all(&mut ops);
+                }
+            }
+            ops
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +330,45 @@ mod tests {
                 .expect("the executed protocol must pass every interleaving");
             assert_eq!(stats.terminal_states, 1, "p={p}: one clean terminal state");
         }
+    }
+
+    /// The pipelined split-phase protocol: per-entry deposits are
+    /// deferred to after the previous entry's drain barrier, so every
+    /// interleaving is race-free even though two entries' buffers are
+    /// live at once.
+    #[test]
+    fn pipelined_split_phase_protocol_is_race_free() {
+        for (p, entries) in [(2, 3), (3, 2)] {
+            let stats = explore(&split_phase_pipeline(p, entries))
+                .expect("the pipelined protocol must pass every interleaving");
+            assert_eq!(stats.terminal_states, 1, "p={p}: one clean terminal state");
+        }
+    }
+
+    /// Starting entry `e + 1`'s exchange before finishing entry `e`
+    /// (overlapping two exchanges in the mailbox — exactly what the
+    /// static split-phase lint forbids): the second deposit clobbers the
+    /// uncollected first packet. The checker must find it, proving the
+    /// drain-barrier placement in the pipelined drivers is load-bearing.
+    #[test]
+    fn eager_start_before_finish_is_caught() {
+        let p = 2;
+        let faulty: Vec<Vec<Op>> = (0..p)
+            .map(|i| {
+                vec![
+                    Op::Deposit { to: 1 - i }, // exchange_start(0)
+                    Op::Deposit { to: 1 - i }, // exchange_start(1) — too early
+                    Op::Barrier,
+                    Op::Collect { from: 1 - i },
+                    Op::Barrier,
+                    Op::Barrier,
+                    Op::Collect { from: 1 - i },
+                    Op::Barrier,
+                ]
+            })
+            .collect();
+        let v = explore(&faulty).expect_err("eager start must be detected");
+        assert!(v.reason.contains("uncollected"), "{}", v.reason);
     }
 
     /// Drop the second barrier (the one between collect and the next

@@ -10,8 +10,9 @@
 //! [`RecordingCtx`] that mirrors [`crate::bsp::Ctx`]'s call surface but
 //! touches no payload — extraction is `O(d · p)` per rank, like
 //! [`crate::dist::analytic_h`]. The schedule is then checked by
-//! [`verify`] against five lints (MPI-style collective matching and
-//! friends, [`Lint`]) and against the analytic cost model
+//! [`verify`] against six lints (MPI-style collective matching and
+//! friends, plus the split-phase pairing discipline of the pipelined
+//! batch drivers, [`Lint`]) and against the analytic cost model
 //! ([`crate::costmodel`]) superstep-for-superstep.
 //!
 //! Surfaces: [`crate::api::PlannedFft::analyze`] on the facade,
@@ -55,6 +56,15 @@ pub enum Event {
     /// Pairwise exchange with `partner`; `words` is what this rank
     /// sends (0 for a self-paired rank, which synchronizes only).
     Pairwise { label: &'static str, partner: usize, words: usize },
+    /// Split-phase all-to-all, start half (`Ctx::exchange_start`): the
+    /// packets are deposited into the mailbox now, but the communication
+    /// superstep is *charged* at the matching [`Event::ExchangeFinish`],
+    /// where [`verify`]'s normalization places the fused collective.
+    ExchangeStart { label: &'static str, send_counts: Vec<usize> },
+    /// Split-phase all-to-all, finish half (`Ctx::exchange_finish`):
+    /// barrier, collect, charge. Pairs with the in-flight
+    /// [`Event::ExchangeStart`] of the same label.
+    ExchangeFinish { label: &'static str },
     /// Barrier-only synchronization superstep.
     Barrier { label: &'static str },
     /// This rank's driver leased the named arena.
@@ -70,6 +80,8 @@ impl Event {
             Event::Compute { label }
             | Event::AllToAll { label, .. }
             | Event::Pairwise { label, .. }
+            | Event::ExchangeStart { label, .. }
+            | Event::ExchangeFinish { label }
             | Event::Barrier { label } => label,
             Event::SessionBegin { arena } | Event::SessionEnd { arena } => arena,
         }
@@ -81,15 +93,23 @@ impl Event {
             Event::Compute { .. } => "compute",
             Event::AllToAll { .. } => "all-to-all",
             Event::Pairwise { .. } => "pairwise",
+            Event::ExchangeStart { .. } => "a2a-start",
+            Event::ExchangeFinish { .. } => "a2a-finish",
             Event::Barrier { .. } => "barrier",
             Event::SessionBegin { .. } => "session+",
             Event::SessionEnd { .. } => "session-",
         }
     }
 
-    /// True for the two communication event kinds.
+    /// True for the event kinds that move payload between ranks. The
+    /// split-phase *start* counts (it deposits the packets); the finish
+    /// does not — after normalization the fused collective sits at the
+    /// finish position instead.
     pub fn is_comm(&self) -> bool {
-        matches!(self, Event::AllToAll { .. } | Event::Pairwise { .. })
+        matches!(
+            self,
+            Event::AllToAll { .. } | Event::Pairwise { .. } | Event::ExchangeStart { .. }
+        )
     }
 
     /// Collective-matching equivalence: same kind and same label. The
@@ -111,6 +131,11 @@ impl Event {
             Event::Pairwise { label, partner, words } => {
                 format!("PW({label} <->{partner} words={words})")
             }
+            Event::ExchangeStart { label, send_counts } => {
+                let out: usize = send_counts.iter().sum::<usize>();
+                format!("A2A+({label} out={out})")
+            }
+            Event::ExchangeFinish { label } => format!("A2A-({label})"),
             Event::Barrier { label } => format!("B({label})"),
             Event::SessionBegin { arena } => format!("S+({arena})"),
             Event::SessionEnd { arena } => format!("S-({arena})"),
@@ -187,6 +212,24 @@ impl RecordingCtx {
         self.events.push(Event::AllToAll { label, send_counts });
     }
 
+    /// Record the start half of a split-phase all-to-all (mirrors
+    /// `Ctx::exchange_start`): the packets enter the mailbox here, the
+    /// superstep is charged at the matching finish.
+    pub fn exchange_start(&mut self, label: &'static str, send_counts: Vec<usize>) {
+        assert_eq!(
+            send_counts.len(),
+            self.p,
+            "send_counts must have one entry per rank"
+        );
+        self.events.push(Event::ExchangeStart { label, send_counts });
+    }
+
+    /// Record the finish half of a split-phase all-to-all (mirrors
+    /// `Ctx::exchange_finish`).
+    pub fn exchange_finish(&mut self, label: &'static str) {
+        self.events.push(Event::ExchangeFinish { label });
+    }
+
     /// Record a pairwise exchange (mirrors `Ctx::pairwise_exchange`).
     pub fn pairwise_exchange(&mut self, label: &'static str, partner: usize, words: usize) {
         self.events.push(Event::Pairwise { label, partner, words });
@@ -208,7 +251,7 @@ impl RecordingCtx {
     }
 }
 
-/// The five schedule lints, in the order [`verify`] runs them.
+/// The six schedule lints, in the order [`verify`] runs them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Lint {
     /// All ranks emit the same event-kind/label sequence, so no rank can
@@ -232,6 +275,14 @@ pub enum Lint {
     /// communicates outside a session (the `ExecArena` try-lock
     /// discipline, statically).
     SessionSafety,
+    /// Every split-phase `exchange_start` is finished exactly once
+    /// before its packet buffers can be reused: at most one exchange in
+    /// flight per rank, every finish matches the in-flight start's
+    /// label, no orphan finishes, nothing left in flight at schedule
+    /// end, and no other communication superstep overlaps a flight
+    /// window (the mailbox slots stay occupied until the finish drains
+    /// them).
+    SplitPhase,
 }
 
 impl Lint {
@@ -242,17 +293,19 @@ impl Lint {
             Lint::FlowConservation => "flow-conservation",
             Lint::SingleAllToAll => "single-all-to-all",
             Lint::SessionSafety => "session-safety",
+            Lint::SplitPhase => "split-phase",
         }
     }
 
     /// All lints, in [`verify`] order.
-    pub fn all() -> [Lint; 5] {
+    pub fn all() -> [Lint; 6] {
         [
             Lint::CollectiveMatching,
             Lint::PairwiseSymmetry,
             Lint::FlowConservation,
             Lint::SingleAllToAll,
             Lint::SessionSafety,
+            Lint::SplitPhase,
         ]
     }
 }
@@ -280,6 +333,12 @@ pub struct Expectations {
     /// Expected collective count (1 for FFTU; the documented
     /// `Algorithm::comm_supersteps` count for the baselines).
     pub collectives: usize,
+    /// Modeled batch entries: 1 for the per-item schedules
+    /// `PlannedFft::analyze` extracts, `b` for the pipelined batch
+    /// schedules of `analyze_pipelined(b)`. The single-all-to-all
+    /// invariant is *per entry*: a clean pipelined schedule carries
+    /// exactly `b` collectives, every one labeled `fftu-alltoall`.
+    pub batch: usize,
 }
 
 /// Run the full lint suite over a schedule. `analytic` is the matching
@@ -291,13 +350,54 @@ pub fn verify(
     analytic: &CostReport,
     exp: &Expectations,
 ) -> Vec<LintOutcome> {
+    // Split-phase pairing is checked on the raw schedule; the five
+    // positional lints then run on the normalized schedule, where every
+    // start/finish pair has been fused into one `AllToAll` at the
+    // finish position — the superstep the executed ledger charges.
+    // Schedules without split-phase events normalize to themselves.
+    let normalized = normalize_split_phase(schedule);
     vec![
-        lint_collective_matching(schedule),
-        lint_pairwise_symmetry(schedule),
-        lint_flow_conservation(schedule, analytic),
-        lint_single_alltoall(schedule, exp),
-        lint_session_safety(schedule),
+        lint_collective_matching(&normalized),
+        lint_pairwise_symmetry(&normalized),
+        lint_flow_conservation(&normalized, analytic),
+        lint_single_alltoall(&normalized, exp),
+        lint_session_safety(&normalized),
+        lint_split_phase(schedule),
     ]
+}
+
+/// Fuse every split-phase start/finish pair into a single
+/// [`Event::AllToAll`] at the *finish* position (where the ledger
+/// charges the communication superstep), carrying the start's send
+/// counts. Orphan halves are dropped here — [`Lint::SplitPhase`]
+/// convicts them on the raw schedule; dropping keeps the positional
+/// lints from double-reporting the same defect.
+fn normalize_split_phase(schedule: &Schedule) -> Schedule {
+    let ranks = schedule
+        .ranks
+        .iter()
+        .map(|events| {
+            let mut out = Vec::with_capacity(events.len());
+            let mut pending: Option<(&'static str, Vec<usize>)> = None;
+            for e in events {
+                match e {
+                    Event::ExchangeStart { label, send_counts } => {
+                        pending = Some((*label, send_counts.clone()));
+                    }
+                    Event::ExchangeFinish { label } => {
+                        if let Some((started, send_counts)) = pending.take() {
+                            if started == *label {
+                                out.push(Event::AllToAll { label: started, send_counts });
+                            }
+                        }
+                    }
+                    other => out.push(other.clone()),
+                }
+            }
+            out
+        })
+        .collect();
+    Schedule { ranks }
 }
 
 /// Lint (a): every rank's event-kind/label sequence is identical.
@@ -577,13 +677,22 @@ fn lint_single_alltoall(schedule: &Schedule, exp: &Expectations) -> LintOutcome 
         let collectives: Vec<&Event> =
             events.iter().filter(|e| matches!(e, Event::AllToAll { .. })).collect();
         let pairwise = events.iter().filter(|e| matches!(e, Event::Pairwise { .. })).count();
+        let per_entry = exp.batch.max(1);
         if exp.single_alltoall {
-            if collectives.len() != 1 {
-                violations.push(format!(
-                    "rank {rank}: FFTU path must contain exactly ONE all-to-all \
-                     (Alg. 3.1), found {}",
-                    collectives.len()
-                ));
+            if collectives.len() != per_entry {
+                violations.push(if per_entry == 1 {
+                    format!(
+                        "rank {rank}: FFTU path must contain exactly ONE all-to-all \
+                         (Alg. 3.1), found {}",
+                        collectives.len()
+                    )
+                } else {
+                    format!(
+                        "rank {rank}: pipelined FFTU batch must contain exactly ONE \
+                         all-to-all per entry (Alg. 3.1) = {per_entry}, found {}",
+                        collectives.len()
+                    )
+                });
             }
             for e in &collectives {
                 if e.label() != "fftu-alltoall" {
@@ -595,10 +704,10 @@ fn lint_single_alltoall(schedule: &Schedule, exp: &Expectations) -> LintOutcome 
                 }
             }
         } else {
-            if collectives.len() != exp.collectives {
+            if collectives.len() != exp.collectives * per_entry {
                 violations.push(format!(
                     "rank {rank}: expected {} collective supersteps, found {}",
-                    exp.collectives,
+                    exp.collectives * per_entry,
                     collectives.len()
                 ));
             }
@@ -660,6 +769,64 @@ fn lint_session_safety(schedule: &Schedule) -> LintOutcome {
         }
     }
     LintOutcome { lint: Lint::SessionSafety, violations }
+}
+
+/// Lint (f): split-phase exchange discipline, checked on the raw
+/// schedule (before [`verify`] fuses start/finish pairs). The packet
+/// buffers an `exchange_start` deposited stay leased to the mailbox
+/// until the matching `exchange_finish` drains every slot, so reusing
+/// them — a second start, or any blocking communication — before the
+/// finish is a protocol violation even when no data race is observable
+/// on a given run.
+fn lint_split_phase(schedule: &Schedule) -> LintOutcome {
+    let mut violations = Vec::new();
+    for (rank, events) in schedule.ranks.iter().enumerate() {
+        let mut pending: Option<(&'static str, usize)> = None;
+        for (i, e) in events.iter().enumerate() {
+            match e {
+                Event::ExchangeStart { label, .. } => {
+                    if let Some((in_flight, j)) = pending {
+                        violations.push(format!(
+                            "rank {rank}, superstep {i}: exchange_start '{label}' while \
+                             '{in_flight}' (superstep {j}) is still in flight — the \
+                             mailbox slots would be reused before the finish drains them"
+                        ));
+                    }
+                    pending = Some((*label, i));
+                }
+                Event::ExchangeFinish { label } => match pending.take() {
+                    None => violations.push(format!(
+                        "rank {rank}, superstep {i}: exchange_finish '{label}' without \
+                         a matching exchange_start"
+                    )),
+                    Some((in_flight, j)) if in_flight != *label => violations.push(format!(
+                        "rank {rank}, superstep {i}: exchange_finish '{label}' does not \
+                         match the in-flight start '{in_flight}' (superstep {j})"
+                    )),
+                    Some(_) => {}
+                },
+                Event::AllToAll { .. } | Event::Pairwise { .. } => {
+                    if let Some((in_flight, j)) = pending {
+                        violations.push(format!(
+                            "rank {rank}, superstep {i}: {} '{}' overlaps the in-flight \
+                             exchange '{in_flight}' (superstep {j}) — blocking \
+                             communication would collide with the occupied mailbox slots",
+                            e.kind_name(),
+                            e.label()
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some((in_flight, j)) = pending {
+            violations.push(format!(
+                "rank {rank}: exchange_start '{in_flight}' (superstep {j}) is never \
+                 finished — its packets are stranded in the mailbox"
+            ));
+        }
+    }
+    LintOutcome { lint: Lint::SplitPhase, violations }
 }
 
 /// The result of [`crate::api::PlannedFft::analyze`]: the extracted
@@ -747,7 +914,10 @@ impl ScheduleReport {
         let mut inn = vec![0usize; p];
         for (s, events) in self.schedule.ranks.iter().enumerate() {
             match events.get(i) {
-                Some(Event::AllToAll { send_counts, .. }) => {
+                Some(
+                    Event::AllToAll { send_counts, .. }
+                    | Event::ExchangeStart { send_counts, .. },
+                ) => {
                     for (t, &w) in send_counts.iter().enumerate() {
                         if t != s && t < p {
                             out[s] += w;

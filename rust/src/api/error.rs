@@ -35,9 +35,10 @@ pub enum FftError {
     DistMismatch { reason: &'static str },
     /// An input buffer does not match the descriptor's element count.
     InputLength { expected: usize, got: usize },
-    /// An execute entry point was called on a plan of a different
-    /// [`crate::api::Kind`] (e.g. `execute` on an r2c plan, whose real
-    /// input goes through `execute_r2c`).
+    /// An execute entry point was fed a buffer domain the plan's
+    /// [`crate::api::Kind`] cannot take (e.g. a `BatchIo::Complex`
+    /// buffer into an r2c plan, which wants `BatchIo::Real` input);
+    /// `expected` lists the kinds that COULD take the buffer.
     KindMismatch { kind: &'static str, call: &'static str, expected: &'static str },
     /// The transform descriptor itself is malformed (empty shape, zero
     /// batch, bad decomposition rank, ...).

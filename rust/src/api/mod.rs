@@ -57,7 +57,7 @@ pub mod transform;
 
 pub use cache::{CacheStats, PlanCache};
 pub use error::FftError;
-pub use plan::{plan, Algorithm, DistFft, Execution, PlannedFft, RealExecution};
+pub use plan::{plan, Algorithm, BatchIo, BatchOut, DistFft, Execution, PlannedFft, RealExecution};
 pub use planner::{plan_auto, PlannerMode, ScoredCandidate};
 pub use transform::{DistStrategy, Grid, Kind, Normalization, Transform};
 

@@ -128,12 +128,134 @@ pub struct Execution {
     pub report: CostReport,
 }
 
-/// Result of a complex-to-real execution ([`PlannedFft::execute_c2r`]):
-/// real output array(s), back to back for a batch, plus the ledger.
+/// Result of an execution with real output ([`Kind::C2R`] and the trig
+/// kinds): real output array(s), back to back for a batch, plus the
+/// ledger.
 #[derive(Debug)]
 pub struct RealExecution {
     pub output: Vec<f64>,
     pub report: CostReport,
+}
+
+/// Typed input buffer for the unified [`DistFft::execute`] front door:
+/// one enum over the two input domains, validated against the plan's
+/// [`Kind`] at execute time. `Complex` feeds [`Kind::C2C`] (time-domain
+/// samples) and [`Kind::C2R`] (the Hermitian half-spectrum); `Real`
+/// feeds [`Kind::R2C`] and every trig kind. `From` impls cover slices
+/// and `&Vec`, so concrete-plan callers just write `plan.execute(&x)`.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchIo<'a> {
+    /// Complex samples: C2C input, or a C2R plan's packed half-spectrum
+    /// (`spectrum_total()` bins per item).
+    Complex(&'a [C64]),
+    /// Real samples: R2C input, or any trig kind's input (`total()`
+    /// reals per item).
+    Real(&'a [f64]),
+}
+
+impl BatchIo<'_> {
+    /// The kinds this buffer domain can feed — the `expected` field of
+    /// the typed mismatch error.
+    fn expected_kinds(&self) -> &'static str {
+        match self {
+            BatchIo::Complex(_) => "c2c|c2r",
+            BatchIo::Real(_) => "r2c|dct2|dct3|dst2|dst3",
+        }
+    }
+}
+
+impl<'a> From<&'a [C64]> for BatchIo<'a> {
+    fn from(buf: &'a [C64]) -> Self {
+        BatchIo::Complex(buf)
+    }
+}
+
+impl<'a> From<&'a Vec<C64>> for BatchIo<'a> {
+    fn from(buf: &'a Vec<C64>) -> Self {
+        BatchIo::Complex(buf)
+    }
+}
+
+impl<'a> From<&'a [f64]> for BatchIo<'a> {
+    fn from(buf: &'a [f64]) -> Self {
+        BatchIo::Real(buf)
+    }
+}
+
+impl<'a> From<&'a Vec<f64>> for BatchIo<'a> {
+    fn from(buf: &'a Vec<f64>) -> Self {
+        BatchIo::Real(buf)
+    }
+}
+
+impl<'a, const N: usize> From<&'a [C64; N]> for BatchIo<'a> {
+    fn from(buf: &'a [C64; N]) -> Self {
+        BatchIo::Complex(buf)
+    }
+}
+
+impl<'a, const N: usize> From<&'a [f64; N]> for BatchIo<'a> {
+    fn from(buf: &'a [f64; N]) -> Self {
+        BatchIo::Real(buf)
+    }
+}
+
+/// Result of the unified [`DistFft::execute`]: the output lands in the
+/// domain the plan's [`Kind`] produces — `Complex` for C2C and R2C
+/// (half-spectrum out), `Real` for C2R and the trig kinds. The variant
+/// is fully determined by the kind, so unwrapping with [`Self::complex`]
+/// / [`Self::real`] next to the `plan(...)` call can never panic.
+#[derive(Debug)]
+pub enum BatchOut {
+    /// Complex output: a C2C transform, or an R2C half-spectrum.
+    Complex(Execution),
+    /// Real output: a C2R inverse, or trig coefficients.
+    Real(RealExecution),
+}
+
+impl BatchOut {
+    /// The BSP cost ledger of the run, whichever domain it produced.
+    pub fn report(&self) -> &CostReport {
+        match self {
+            BatchOut::Complex(exec) => &exec.report,
+            BatchOut::Real(exec) => &exec.report,
+        }
+    }
+
+    /// Consume the result, keeping only the ledger — for callers that
+    /// time or audit a run without reading the output.
+    pub fn into_report(self) -> CostReport {
+        match self {
+            BatchOut::Complex(exec) => exec.report,
+            BatchOut::Real(exec) => exec.report,
+        }
+    }
+
+    /// Unwrap the complex-domain result (C2C / R2C plans).
+    ///
+    /// # Panics
+    /// If the plan's kind produces real output (C2R / trig).
+    pub fn complex(self) -> Execution {
+        match self {
+            BatchOut::Complex(exec) => exec,
+            BatchOut::Real(_) => {
+                panic!("complex output requested from a real-output (c2r/trig) execution")
+            }
+        }
+    }
+
+    /// Unwrap the real-domain result (C2R / trig plans).
+    ///
+    /// # Panics
+    /// If the plan's kind produces complex output (C2C / R2C).
+    pub fn real(self) -> RealExecution {
+        match self {
+            BatchOut::Real(exec) => exec,
+            BatchOut::Complex(_) => {
+                panic!("real output requested from a complex-output (c2c/r2c) execution")
+            }
+        }
+    }
 }
 
 /// The unified plan/execute interface every algorithm implements (via
@@ -148,27 +270,47 @@ pub trait DistFft: Send + Sync {
     fn procs(&self) -> usize;
     /// The resolved per-axis cyclic grid (FFTU/Popovici), if any.
     fn grid(&self) -> Option<&[usize]>;
-    /// Execute ONE C2C transform (`shape.product()` elements, regardless
-    /// of the descriptor's batch count).
-    fn execute(&self, input: &[C64]) -> Result<Execution, FftError>;
-    /// Execute the descriptor's `batch` C2C transforms from one
-    /// contiguous buffer, amortizing per-rank state across the batch.
+    /// The unified batch front door: execute the descriptor's `batch`
+    /// transforms (whatever the plan's [`Kind`]) from one contiguous
+    /// typed buffer, amortizing per-rank state across the batch — and,
+    /// for FFTU batches of two or more, software-pipelining entry
+    /// `i + 1`'s pack/superstep-0 compute under entry `i`'s in-flight
+    /// all-to-all (see `docs/ARCHITECTURE.md`, "Pipelined batching").
+    ///
+    /// The input domain is checked against the kind: `Complex` feeds
+    /// C2C/C2R, `Real` feeds R2C/trig; anything else is a typed
+    /// [`FftError::KindMismatch`]. Concrete [`PlannedFft`] callers get
+    /// `impl Into<BatchIo>` sugar (`plan.execute(&x)`); through
+    /// `dyn DistFft`, wrap explicitly (`BatchIo::Complex(&x)`).
+    fn execute(&self, io: BatchIo<'_>) -> Result<BatchOut, FftError>;
+    /// One-sample convenience wrapper over [`Self::execute`]: run ONE
+    /// transform (one item's worth of input) regardless of the
+    /// descriptor's batch count.
+    fn execute_one(&self, io: BatchIo<'_>) -> Result<BatchOut, FftError>;
+    /// Execute the descriptor's `batch` C2C transforms.
+    #[deprecated(since = "0.3.0", note = "use `execute(&x)` — the unified `BatchIo` front door")]
     fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError>;
     /// Execute ONE R2C transform: `total()` reals in, `spectrum_total()`
     /// Hermitian half-spectrum bins out.
+    #[deprecated(since = "0.3.0", note = "use `execute_one(&x).complex()`")]
     fn execute_r2c(&self, input: &[f64]) -> Result<Execution, FftError>;
     /// Execute the descriptor's `batch` R2C transforms back to back.
+    #[deprecated(since = "0.3.0", note = "use `execute(&x).complex()`")]
     fn execute_r2c_batch(&self, input: &[f64]) -> Result<Execution, FftError>;
     /// Execute ONE C2R transform: `spectrum_total()` half-spectrum bins
     /// in, `total()` reals out.
+    #[deprecated(since = "0.3.0", note = "use `execute_one(&x).real()`")]
     fn execute_c2r(&self, input: &[C64]) -> Result<RealExecution, FftError>;
     /// Execute the descriptor's `batch` C2R transforms back to back.
+    #[deprecated(since = "0.3.0", note = "use `execute(&x).real()`")]
     fn execute_c2r_batch(&self, input: &[C64]) -> Result<RealExecution, FftError>;
     /// Execute ONE trig transform (any of DCT-II/III, DST-II/III —
     /// whichever [`Kind`] the plan was built for): `total()` reals in,
     /// `total()` real coefficients out.
+    #[deprecated(since = "0.3.0", note = "use `execute_one(&x).real()`")]
     fn execute_trig(&self, input: &[f64]) -> Result<RealExecution, FftError>;
     /// Execute the descriptor's `batch` trig transforms back to back.
+    #[deprecated(since = "0.3.0", note = "use `execute(&x).real()`")]
     fn execute_trig_batch(&self, input: &[f64]) -> Result<RealExecution, FftError>;
 }
 
@@ -390,10 +532,12 @@ impl PlannedFft {
     }
 
     /// Set the BSP session options (superstep deadline, fault
-    /// injection) used by subsequent executes of this plan. Reaches
-    /// through real/trig wrappers and Auto delegation to the arena
-    /// that actually runs the SPMD sessions.
-    pub fn set_exec_options(&self, opts: crate::bsp::SpmdOptions) {
+    /// injection, batch pipeline depth) used by subsequent executes of
+    /// this plan — build them with
+    /// [`ExecOptions::builder`](crate::bsp::ExecOptions::builder).
+    /// Reaches through real/trig wrappers and Auto delegation to the
+    /// arena that actually runs the SPMD sessions.
+    pub fn set_exec_options(&self, opts: crate::bsp::ExecOptions) {
         match &self.inner {
             Inner::Fftu { arena, .. } => arena.set_exec_options(opts),
             Inner::Slab(plan) => plan.set_exec_options(opts),
@@ -435,47 +579,93 @@ impl PlannedFft {
         Err(original)
     }
 
-    /// Execute ONE C2C transform; see [`DistFft::execute`].
-    pub fn execute(&self, input: &[C64]) -> Result<Execution, FftError> {
-        self.ensure_kind(Kind::C2C, "execute")?;
-        self.run(input, 1)
+    /// The unified batch front door; see [`DistFft::execute`]. The
+    /// `impl Into` sugar accepts `&[C64]`/`&[f64]` slices, `&Vec`s, and
+    /// array refs directly, as well as an explicit [`BatchIo`].
+    pub fn execute<'a>(&self, io: impl Into<BatchIo<'a>>) -> Result<BatchOut, FftError> {
+        self.execute_io(io.into(), self.t.batch, "execute")
+    }
+
+    /// One-sample convenience wrapper; see [`DistFft::execute_one`].
+    pub fn execute_one<'a>(&self, io: impl Into<BatchIo<'a>>) -> Result<BatchOut, FftError> {
+        self.execute_io(io.into(), 1, "execute_one")
+    }
+
+    /// Kind-checked dispatch behind [`Self::execute`] /
+    /// [`Self::execute_one`] and the deprecated kind-specific delegates:
+    /// route the typed buffer to the executor the plan's kind needs, or
+    /// reject the domain mismatch with a typed error.
+    fn execute_io(
+        &self,
+        io: BatchIo<'_>,
+        batch: usize,
+        call: &'static str,
+    ) -> Result<BatchOut, FftError> {
+        match (io, self.t.kind) {
+            (BatchIo::Complex(x), Kind::C2C) => self.run(x, batch).map(BatchOut::Complex),
+            (BatchIo::Complex(x), Kind::C2R) => {
+                self.run_c2r(x, batch, call).map(BatchOut::Real)
+            }
+            (BatchIo::Real(x), Kind::R2C) => self.run_r2c(x, batch, call).map(BatchOut::Complex),
+            (BatchIo::Real(x), kind) if kind.is_trig() => {
+                self.run_trig(x, batch, call).map(BatchOut::Real)
+            }
+            (io, kind) => Err(FftError::KindMismatch {
+                kind: kind.name(),
+                call,
+                expected: io.expected_kinds(),
+            }),
+        }
     }
 
     /// Execute the descriptor's C2C batch; see [`DistFft::execute_batch`].
+    #[deprecated(since = "0.3.0", note = "use `execute(&x)` — the unified `BatchIo` front door")]
     pub fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError> {
         self.ensure_kind(Kind::C2C, "execute_batch")?;
-        self.run(input, self.t.batch)
+        Ok(self.execute_io(BatchIo::Complex(input), self.t.batch, "execute_batch")?.complex())
     }
 
     /// Execute ONE R2C transform; see [`DistFft::execute_r2c`].
+    #[deprecated(since = "0.3.0", note = "use `execute_one(&x).complex()`")]
     pub fn execute_r2c(&self, input: &[f64]) -> Result<Execution, FftError> {
-        self.run_r2c(input, 1, "execute_r2c")
+        self.ensure_kind(Kind::R2C, "execute_r2c")?;
+        Ok(self.execute_io(BatchIo::Real(input), 1, "execute_r2c")?.complex())
     }
 
     /// Execute the descriptor's R2C batch; see [`DistFft::execute_r2c_batch`].
+    #[deprecated(since = "0.3.0", note = "use `execute(&x).complex()`")]
     pub fn execute_r2c_batch(&self, input: &[f64]) -> Result<Execution, FftError> {
-        self.run_r2c(input, self.t.batch, "execute_r2c_batch")
+        self.ensure_kind(Kind::R2C, "execute_r2c_batch")?;
+        Ok(self.execute_io(BatchIo::Real(input), self.t.batch, "execute_r2c_batch")?.complex())
     }
 
     /// Execute ONE C2R transform; see [`DistFft::execute_c2r`].
+    #[deprecated(since = "0.3.0", note = "use `execute_one(&x).real()`")]
     pub fn execute_c2r(&self, input: &[C64]) -> Result<RealExecution, FftError> {
-        self.run_c2r(input, 1, "execute_c2r")
+        self.ensure_kind(Kind::C2R, "execute_c2r")?;
+        Ok(self.execute_io(BatchIo::Complex(input), 1, "execute_c2r")?.real())
     }
 
     /// Execute the descriptor's C2R batch; see [`DistFft::execute_c2r_batch`].
+    #[deprecated(since = "0.3.0", note = "use `execute(&x).real()`")]
     pub fn execute_c2r_batch(&self, input: &[C64]) -> Result<RealExecution, FftError> {
-        self.run_c2r(input, self.t.batch, "execute_c2r_batch")
+        self.ensure_kind(Kind::C2R, "execute_c2r_batch")?;
+        Ok(self.execute_io(BatchIo::Complex(input), self.t.batch, "execute_c2r_batch")?.real())
     }
 
     /// Execute ONE trig transform; see [`DistFft::execute_trig`].
+    #[deprecated(since = "0.3.0", note = "use `execute_one(&x).real()`")]
     pub fn execute_trig(&self, input: &[f64]) -> Result<RealExecution, FftError> {
-        self.run_trig(input, 1, "execute_trig")
+        self.ensure_trig("execute_trig")?;
+        Ok(self.execute_io(BatchIo::Real(input), 1, "execute_trig")?.real())
     }
 
     /// Execute the descriptor's trig batch; see
     /// [`DistFft::execute_trig_batch`].
+    #[deprecated(since = "0.3.0", note = "use `execute(&x).real()`")]
     pub fn execute_trig_batch(&self, input: &[f64]) -> Result<RealExecution, FftError> {
-        self.run_trig(input, self.t.batch, "execute_trig_batch")
+        self.ensure_trig("execute_trig_batch")?;
+        Ok(self.execute_io(BatchIo::Real(input), self.t.batch, "execute_trig_batch")?.real())
     }
 
     fn ensure_kind(&self, expected: Kind, call: &'static str) -> Result<(), FftError> {
@@ -484,6 +674,18 @@ impl PlannedFft {
                 kind: self.t.kind.name(),
                 call,
                 expected: expected.name(),
+            });
+        }
+        Ok(())
+    }
+
+    /// [`Self::ensure_kind`] over the four trig kinds at once.
+    fn ensure_trig(&self, call: &'static str) -> Result<(), FftError> {
+        if !self.t.kind.is_trig() {
+            return Err(FftError::KindMismatch {
+                kind: self.t.kind.name(),
+                call,
+                expected: "dct2|dct3|dst2|dst3",
             });
         }
         Ok(())
@@ -559,6 +761,79 @@ impl PlannedFft {
         })
     }
 
+    /// Statically verify the **software-pipelined batch** schedule of
+    /// this plan: the depth-2 split-phase schedule the batch executors
+    /// run for `batch` entries (entry `i + 1` packs and runs its
+    /// flight-window compute while entry `i`'s packets are in flight
+    /// between `exchange_start` and `exchange_finish`), checked by the
+    /// full lint suite — including [`crate::analysis::Lint::SplitPhase`]
+    /// pairing — against the per-item analytic ledger replayed in
+    /// pipelined-executed order.
+    ///
+    /// Pipelining reorders supersteps but never changes what any entry
+    /// charges, so the flow-conservation lint still proves
+    /// `h == analytic_h` for every all-to-all, and the
+    /// single-all-to-all invariant holds *per entry*: exactly `batch`
+    /// collectives, every one labeled `fftu-alltoall`.
+    ///
+    /// Plans whose executors never pipeline (the baselines) and batches
+    /// of fewer than two entries fall back to the per-item
+    /// [`Self::analyze`].
+    pub fn analyze_pipelined(&self, batch: usize) -> Result<ScheduleReport, FftError> {
+        if let Inner::Auto { chosen, .. } = &self.inner {
+            return chosen.analyze_pipelined(batch);
+        }
+        if batch < 2 || !matches!(self.inner, Inner::Fftu { .. } | Inner::Real { .. }) {
+            return self.analyze();
+        }
+        let one = Schedule::record(self.p, |rec| self.record_events(rec));
+        let Some((schedule, order)) =
+            extract::pipeline(&one, batch, self.pipeline_flight_prefix())
+        else {
+            // Shapes the transform cannot pipeline execute sequentially.
+            return self.analyze();
+        };
+        let one_report = self.analytic_report()?;
+        if order.iter().any(|&j| j >= one_report.supersteps.len()) {
+            // Structural drift between schedule and analytic ledger: the
+            // per-item lint run reports it without an out-of-range replay.
+            return self.analyze();
+        }
+        let analytic = extract::pipeline_analytic(&one_report, &order);
+        let mut expectations = self.expectations();
+        expectations.batch = batch;
+        let lints = analysis::verify(&schedule, &analytic, &expectations);
+        Ok(ScheduleReport {
+            algorithm: self.algo.name(),
+            kind: self.t.kind.name(),
+            strategy: self.t.strategy.name(),
+            shape: self.t.shape.clone(),
+            grid: self.grid.clone(),
+            procs: self.p,
+            expectations,
+            schedule,
+            analytic,
+            lints,
+        })
+    }
+
+    /// How many leading in-session supersteps the pipelined batch
+    /// drivers overlap with an in-flight exchange: superstep 0 for most
+    /// kinds, only the trig phase pass for DCT3/DST3 zig-zag (the
+    /// zig-zag conversion is pairwise and must wait for the finish), and
+    /// nothing for zig-zag c2r, whose flight window only scatters the
+    /// next entry's spectrum.
+    fn pipeline_flight_prefix(&self) -> usize {
+        if self.t.strategy == DistStrategy::ZigZag {
+            match self.t.kind {
+                Kind::C2R => 0,
+                _ => 1,
+            }
+        } else {
+            1
+        }
+    }
+
     /// What the verifier may assume from the algorithm choice: FFTU's
     /// single all-to-all (Alg. 3.1), or the baseline's documented
     /// collective count (§1.2) with no pairwise steps.
@@ -567,6 +842,7 @@ impl PlannedFft {
         analysis::Expectations {
             single_alltoall: matches!(self.algo, Algorithm::Fftu),
             collectives: self.algo.comm_supersteps(d),
+            batch: 1,
         }
     }
 
@@ -1011,34 +1287,45 @@ impl DistFft for PlannedFft {
         PlannedFft::grid(self)
     }
 
-    fn execute(&self, input: &[C64]) -> Result<Execution, FftError> {
-        PlannedFft::execute(self, input)
+    fn execute(&self, io: BatchIo<'_>) -> Result<BatchOut, FftError> {
+        self.execute_io(io, self.t.batch, "execute")
     }
 
+    fn execute_one(&self, io: BatchIo<'_>) -> Result<BatchOut, FftError> {
+        self.execute_io(io, 1, "execute_one")
+    }
+
+    #[allow(deprecated)]
     fn execute_batch(&self, input: &[C64]) -> Result<Execution, FftError> {
         PlannedFft::execute_batch(self, input)
     }
 
+    #[allow(deprecated)]
     fn execute_r2c(&self, input: &[f64]) -> Result<Execution, FftError> {
         PlannedFft::execute_r2c(self, input)
     }
 
+    #[allow(deprecated)]
     fn execute_r2c_batch(&self, input: &[f64]) -> Result<Execution, FftError> {
         PlannedFft::execute_r2c_batch(self, input)
     }
 
+    #[allow(deprecated)]
     fn execute_c2r(&self, input: &[C64]) -> Result<RealExecution, FftError> {
         PlannedFft::execute_c2r(self, input)
     }
 
+    #[allow(deprecated)]
     fn execute_c2r_batch(&self, input: &[C64]) -> Result<RealExecution, FftError> {
         PlannedFft::execute_c2r_batch(self, input)
     }
 
+    #[allow(deprecated)]
     fn execute_trig(&self, input: &[f64]) -> Result<RealExecution, FftError> {
         PlannedFft::execute_trig(self, input)
     }
 
+    #[allow(deprecated)]
     fn execute_trig_batch(&self, input: &[f64]) -> Result<RealExecution, FftError> {
         PlannedFft::execute_trig_batch(self, input)
     }
@@ -1071,7 +1358,8 @@ mod tests {
         let planned: Arc<dyn DistFft> = plan(Algorithm::Fftu, &t).unwrap();
         let x = rand(64, 0xAB);
         let want = dft_nd(&x, &[8, 8], Direction::Forward);
-        let got = planned.execute(&x).unwrap();
+        // Through `dyn DistFft` the typed buffer is wrapped explicitly.
+        let got = planned.execute(BatchIo::Complex(&x)).unwrap().complex();
         assert!(rel_l2_error(&got.output, &want) < 1e-9);
         assert_eq!(got.report.comm_supersteps(), 1);
     }
@@ -1085,9 +1373,15 @@ mod tests {
             FftError::InputLength { expected: 64, got: 10 }
         );
         let batched = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).batch(3)).unwrap();
+        // `execute` runs the descriptor's whole batch: 3 items expected.
         assert_eq!(
-            batched.execute_batch(&[C64::ZERO; 64]).unwrap_err(),
+            batched.execute(&[C64::ZERO; 64]).unwrap_err(),
             FftError::InputLength { expected: 192, got: 64 }
+        );
+        // `execute_one` runs one item regardless of the descriptor batch.
+        assert_eq!(
+            batched.execute_one(&[C64::ZERO; 10]).unwrap_err(),
+            FftError::InputLength { expected: 64, got: 10 }
         );
     }
 
@@ -1114,7 +1408,7 @@ mod tests {
         let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
         let want = rfftn(&x, &shape);
         let planned = plan(Algorithm::Fftu, &Transform::new(&shape).procs(4).r2c()).unwrap();
-        let got = planned.execute_r2c(&x).unwrap();
+        let got = planned.execute(&x).unwrap().complex();
         assert_eq!(got.output.len(), 8 * 9);
         assert!(rel_l2_error(&got.output, &want) < 1e-10);
         assert_eq!(got.report.comm_supersteps(), 1);
@@ -1128,24 +1422,63 @@ mod tests {
         let mut rng = Rng::new(0xAD);
         let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
         let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).procs(2).r2c()).unwrap();
-        let spec = fwd.execute_r2c(&x).unwrap();
+        let spec = fwd.execute(&x).unwrap().complex();
         let inv = plan(
             Algorithm::Fftu,
             &Transform::new(&shape).procs(2).c2r().normalization(Normalization::ByN),
         )
         .unwrap();
-        let back = inv.execute_c2r(&spec.output).unwrap();
+        let back = inv.execute(&spec.output).unwrap().real();
         let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         assert!(err < 1e-10, "roundtrip err {err}");
     }
 
     #[test]
     fn kind_mismatch_is_a_typed_error() {
+        // An R2C plan wants real input: a complex buffer is rejected
+        // with the kinds that COULD take it.
         let r2c = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).r2c()).unwrap();
         assert_eq!(
             r2c.execute(&[C64::ZERO; 64]).unwrap_err(),
-            FftError::KindMismatch { kind: "r2c", call: "execute", expected: "c2c" }
+            FftError::KindMismatch { kind: "r2c", call: "execute", expected: "c2c|c2r" }
         );
+        // A C2C plan wants complex input: a real buffer is rejected.
+        let c2c = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2)).unwrap();
+        assert_eq!(
+            c2c.execute(&[0.0; 64]).unwrap_err(),
+            FftError::KindMismatch {
+                kind: "c2c",
+                call: "execute",
+                expected: "r2c|dct2|dct3|dst2|dst3"
+            }
+        );
+        assert_eq!(
+            c2c.execute_one(&[0.0; 64]).unwrap_err(),
+            FftError::KindMismatch {
+                kind: "c2c",
+                call: "execute_one",
+                expected: "r2c|dct2|dct3|dst2|dst3"
+            }
+        );
+        // Real-kind input lengths are checked against the real/spectrum
+        // totals.
+        assert_eq!(
+            r2c.execute(&[0.0; 10]).unwrap_err(),
+            FftError::InputLength { expected: 64, got: 10 }
+        );
+        let c2r = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).c2r()).unwrap();
+        assert_eq!(
+            c2r.execute(&[C64::ZERO; 10]).unwrap_err(),
+            FftError::InputLength { expected: 8 * 5, got: 10 }
+        );
+    }
+
+    /// The pre-0.3 kind-specific entry points still work as thin
+    /// delegates onto the unified front door, with their original typed
+    /// errors intact.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_entry_points_still_delegate() {
         let c2c = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2)).unwrap();
         assert_eq!(
             c2c.execute_r2c(&[0.0; 64]).unwrap_err(),
@@ -1155,16 +1488,25 @@ mod tests {
             c2c.execute_c2r(&[C64::ZERO; 64]).unwrap_err(),
             FftError::KindMismatch { kind: "c2c", call: "execute_c2r", expected: "c2r" }
         );
-        // Real-kind input lengths are checked against the real/spectrum
-        // totals.
         assert_eq!(
-            r2c.execute_r2c(&[0.0; 10]).unwrap_err(),
-            FftError::InputLength { expected: 64, got: 10 }
+            c2c.execute_trig(&[0.0; 64]).unwrap_err(),
+            FftError::KindMismatch {
+                kind: "c2c",
+                call: "execute_trig",
+                expected: "dct2|dct3|dst2|dst3"
+            }
         );
-        let c2r = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).c2r()).unwrap();
+        // And on matching kinds they return the same bits as the
+        // unified surface.
+        let x = rand(64, 0xBEEF);
+        let via_new = c2c.execute(&x).unwrap().complex();
+        let via_old = c2c.execute_batch(&x).unwrap();
+        assert_eq!(via_new.output, via_old.output);
+        let r2c = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).r2c()).unwrap();
+        let xr: Vec<f64> = x.iter().map(|v| v.re).collect();
         assert_eq!(
-            c2r.execute_c2r(&[C64::ZERO; 10]).unwrap_err(),
-            FftError::InputLength { expected: 8 * 5, got: 10 }
+            r2c.execute_r2c(&xr).unwrap().output,
+            r2c.execute(&xr).unwrap().complex().output
         );
     }
 
@@ -1184,7 +1526,7 @@ mod tests {
         for (kind, want) in cases {
             let planned =
                 plan(Algorithm::Fftu, &Transform::new(&shape).procs(4).kind(kind)).unwrap();
-            let got = planned.execute_trig(&x).unwrap();
+            let got = planned.execute(&x).unwrap().real();
             let err =
                 got.output.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
             assert!(err < 1e-9 * n as f64, "{kind:?}: err {err}");
@@ -1192,7 +1534,7 @@ mod tests {
             // The same descriptor through a transposing baseline agrees.
             let slab =
                 plan(Algorithm::slab(), &Transform::new(&shape).procs(2).kind(kind)).unwrap();
-            let got = slab.execute_trig(&x).unwrap();
+            let got = slab.execute(&x).unwrap().real();
             let err =
                 got.output.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
             assert!(err < 1e-9 * n as f64, "slab {kind:?}: err {err}");
@@ -1211,7 +1553,7 @@ mod tests {
             &Transform::new(&shape).procs(2).dct2().batch(2),
         )
         .unwrap();
-        let coeff = fwd.execute_trig_batch(&x).unwrap();
+        let coeff = fwd.execute(&x).unwrap().real();
         assert_eq!(coeff.report.comm_supersteps(), 2); // one all-to-all per item
         // ByN on the inverse leaves the textbook 2^d residual:
         // dct3(dct2(x)) = prod(2 n_l) x = 2^d N x.
@@ -1224,7 +1566,7 @@ mod tests {
                 .batch(2),
         )
         .unwrap();
-        let back = inv.execute_trig_batch(&coeff.output).unwrap();
+        let back = inv.execute(&coeff.output).unwrap().real();
         let two_d = 4.0; // 2^d for d = 2
         let err = x
             .iter()
@@ -1236,26 +1578,14 @@ mod tests {
 
     #[test]
     fn trig_kind_mismatch_and_length_are_typed_errors() {
-        let c2c = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2)).unwrap();
-        assert_eq!(
-            c2c.execute_trig(&[0.0; 64]).unwrap_err(),
-            FftError::KindMismatch {
-                kind: "c2c",
-                call: "execute_trig",
-                expected: "dct2|dct3|dst2|dst3"
-            }
-        );
         let dct = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).procs(2).dct2()).unwrap();
+        // A trig plan wants real input: complex buffers are rejected.
         assert_eq!(
             dct.execute(&[C64::ZERO; 64]).unwrap_err(),
-            FftError::KindMismatch { kind: "dct2", call: "execute", expected: "c2c" }
+            FftError::KindMismatch { kind: "dct2", call: "execute", expected: "c2c|c2r" }
         );
         assert_eq!(
-            dct.execute_r2c(&[0.0; 64]).unwrap_err(),
-            FftError::KindMismatch { kind: "dct2", call: "execute_r2c", expected: "r2c" }
-        );
-        assert_eq!(
-            dct.execute_trig(&[0.0; 10]).unwrap_err(),
+            dct.execute(&[0.0; 10]).unwrap_err(),
             FftError::InputLength { expected: 64, got: 10 }
         );
     }
@@ -1284,8 +1614,8 @@ mod tests {
                 )
                 .unwrap();
                 assert_eq!(zz.transform().strategy, DistStrategy::ZigZag);
-                let want = gathered.execute_trig(&x).unwrap();
-                let got = zz.execute_trig(&x).unwrap();
+                let want = gathered.execute(&x).unwrap().real();
+                let got = zz.execute(&x).unwrap().real();
                 // Bit-exact: the rank-local passes run the same
                 // floating-point expressions on the same values.
                 assert_eq!(got.output, want.output, "{kind:?} {shape:?} {grid:?}");
@@ -1323,8 +1653,8 @@ mod tests {
                 plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c()).unwrap();
             let zz = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag())
                 .unwrap();
-            let want = gathered.execute_r2c(&x).unwrap();
-            let got = zz.execute_r2c(&x).unwrap();
+            let want = gathered.execute(&x).unwrap().complex();
+            let got = zz.execute(&x).unwrap().complex();
             assert_eq!(got.output, want.output, "r2c {shape:?} {grid:?}");
             assert_eq!(
                 got.report.supersteps.iter().filter(|s| s.label == "fftu-alltoall").count(),
@@ -1337,8 +1667,8 @@ mod tests {
             let zz_inv =
                 plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).c2r().zigzag())
                     .unwrap();
-            let want_back = gathered_inv.execute_c2r(&want.output).unwrap();
-            let got_back = zz_inv.execute_c2r(&want.output).unwrap();
+            let want_back = gathered_inv.execute(&want.output).unwrap().real();
+            let got_back = zz_inv.execute(&want.output).unwrap().real();
             assert_eq!(got_back.output, want_back.output, "c2r {shape:?} {grid:?}");
         }
     }
@@ -1402,7 +1732,7 @@ mod tests {
         // Execution delegates to the winner and matches the oracle.
         let x = rand(256, 0xA7);
         let want = dft_nd(&x, &[16, 16], Direction::Forward);
-        let got = auto.execute(&x).unwrap();
+        let got = auto.execute(&x).unwrap().complex();
         assert!(rel_l2_error(&got.output, &want) < 1e-9);
         // Explicit plans never expose a winner or a table.
         let explicit = plan(Algorithm::Fftu, &t).unwrap();

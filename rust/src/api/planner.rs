@@ -227,32 +227,25 @@ fn warm_trial_seconds(planned: &PlannedFft) -> Result<f64, FftError> {
         Kind::C2C => {
             let x: Vec<C64> =
                 (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
-            planned.execute(&x)?;
+            planned.execute_one(&x)?;
             let t0 = Instant::now();
-            planned.execute(&x)?;
+            planned.execute_one(&x)?;
             Ok(t0.elapsed().as_secs_f64())
         }
-        Kind::R2C => {
+        Kind::R2C | Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
             let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
-            planned.execute_r2c(&x)?;
+            planned.execute_one(&x)?;
             let t0 = Instant::now();
-            planned.execute_r2c(&x)?;
+            planned.execute_one(&x)?;
             Ok(t0.elapsed().as_secs_f64())
         }
         Kind::C2R => {
             // A valid Hermitian half-spectrum, built outside the clock.
             let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
             let spec = rfftn(&x, &t.shape);
-            planned.execute_c2r(&spec)?;
+            planned.execute_one(&spec)?;
             let t0 = Instant::now();
-            planned.execute_c2r(&spec)?;
-            Ok(t0.elapsed().as_secs_f64())
-        }
-        Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
-            let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
-            planned.execute_trig(&x)?;
-            let t0 = Instant::now();
-            planned.execute_trig(&x)?;
+            planned.execute_one(&spec)?;
             Ok(t0.elapsed().as_secs_f64())
         }
     }

@@ -26,9 +26,11 @@ use super::plan::{plan, Algorithm, PlannedFft};
 ///   of R2C. Inverse-only; with [`Normalization::ByN`] it is the exact
 ///   inverse of an unnormalized R2C.
 ///
-/// Real-kind plans execute through [`super::PlannedFft::execute_r2c`] /
-/// [`super::PlannedFft::execute_c2r`]; calling the complex entry points
-/// on them returns [`FftError::KindMismatch`].
+/// Real-kind plans execute through the unified
+/// [`super::PlannedFft::execute`] front door with a
+/// [`super::BatchIo::Real`] input (R2C) or [`super::BatchIo::Complex`]
+/// half-spectrum (C2R); feeding the wrong domain returns
+/// [`FftError::KindMismatch`].
 ///
 /// The four trig kinds are the paper's §6 DCT/DST extensions, scipy
 /// conventions (types 2 and 3, `norm=None`):
@@ -42,9 +44,9 @@ use super::plan::{plan, Algorithm, PlannedFft};
 ///   *inverse* complex core, and the inverse permutation (folded into
 ///   FFTU's gather). Inverse-only.
 ///
-/// Trig plans execute through [`super::PlannedFft::execute_trig`] /
-/// [`super::PlannedFft::execute_trig_batch`]; FFTU keeps exactly ONE
-/// all-to-all for all four.
+/// Trig plans execute through the same front door with a
+/// [`super::BatchIo::Real`] input; FFTU keeps exactly ONE all-to-all
+/// for all four.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Kind {
     C2C,
@@ -223,7 +225,7 @@ pub struct Transform {
     pub direction: Direction,
     /// Output scaling.
     pub normalization: Normalization,
-    /// Number of independent transforms per [`super::DistFft::execute_batch`]
+    /// Number of independent transforms per [`super::DistFft::execute`]
     /// call; the input buffer holds `batch` arrays back to back.
     pub batch: usize,
     /// Input/output domain: complex-to-complex (default), real-to-complex,

@@ -287,26 +287,56 @@ impl std::error::Error for BspFailure {}
 /// wedged process.
 pub const DEFAULT_SUPERSTEP_DEADLINE: Duration = Duration::from_secs(120);
 
+/// Default batch pipeline depth: depth-2 software pipelining (entry
+/// `i + 1`'s superstep-0 compute overlaps entry `i`'s in-flight
+/// all-to-all packets). Depth 1 is the strictly-sequential oracle.
+pub const DEFAULT_PIPELINE_DEPTH: usize = 2;
+
 /// Session knobs for [`try_run_spmd_with`]: the per-barrier-wait
-/// deadline and an optional scripted [`FaultPlan`]. The default
-/// (generous deadline, no faults) is what every production path uses;
-/// the fault plane costs one `Option` test per communication superstep
-/// when disarmed.
+/// deadline, an optional scripted [`FaultPlan`], and the batch pipeline
+/// depth. The default (generous deadline, no faults, depth-2 pipeline)
+/// is what every production path uses; the fault plane costs one
+/// `Option` test per communication superstep when disarmed.
+///
+/// Construct via [`ExecOptions::builder`]:
+///
+/// ```
+/// use fftu::bsp::ExecOptions;
+/// let opts = ExecOptions::builder().deadline_ms(5_000).pipeline(1).build();
+/// assert_eq!(opts.pipeline, 1);
+/// ```
 #[derive(Clone, Debug)]
-pub struct SpmdOptions {
+pub struct ExecOptions {
     /// Upper bound on any single barrier wait; `None` waits forever.
     pub deadline: Option<Duration>,
     /// Scripted faults (testing / chaos engineering only).
     pub faults: Option<Arc<FaultPlan>>,
+    /// Batch pipeline depth: 1 = strictly sequential (the differential
+    /// oracle), >= 2 = depth-2 split-phase pipelining (the engine keeps
+    /// at most two entries in flight regardless of larger values).
+    pub pipeline: usize,
 }
 
-impl Default for SpmdOptions {
+/// The pre-PR-9 name for [`ExecOptions`], kept for the BSP-layer call
+/// sites that predate the unified builder.
+pub type SpmdOptions = ExecOptions;
+
+impl Default for ExecOptions {
     fn default() -> Self {
-        SpmdOptions { deadline: Some(DEFAULT_SUPERSTEP_DEADLINE), faults: None }
+        ExecOptions {
+            deadline: Some(DEFAULT_SUPERSTEP_DEADLINE),
+            faults: None,
+            pipeline: DEFAULT_PIPELINE_DEPTH,
+        }
     }
 }
 
-impl SpmdOptions {
+impl ExecOptions {
+    /// Start a builder from the defaults.
+    pub fn builder() -> ExecOptionsBuilder {
+        ExecOptionsBuilder { opts: ExecOptions::default() }
+    }
+
     /// Builder: set the per-wait superstep deadline.
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
@@ -324,6 +354,57 @@ impl SpmdOptions {
         self.faults = Some(Arc::new(faults));
         self
     }
+
+    /// Builder: set the batch pipeline depth (clamped to >= 1).
+    pub fn with_pipeline(mut self, depth: usize) -> Self {
+        self.pipeline = depth.max(1);
+        self
+    }
+}
+
+/// Fluent builder for [`ExecOptions`] — the one surface for the
+/// deadline, fault-injection, and pipeline-depth knobs.
+#[derive(Clone, Debug)]
+pub struct ExecOptionsBuilder {
+    opts: ExecOptions,
+}
+
+impl ExecOptionsBuilder {
+    /// Per-wait superstep deadline in milliseconds.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.opts.deadline = Some(Duration::from_millis(ms));
+        self
+    }
+
+    /// Per-wait superstep deadline as a [`Duration`].
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.opts.deadline = Some(deadline);
+        self
+    }
+
+    /// Wait forever at barriers.
+    pub fn no_deadline(mut self) -> Self {
+        self.opts.deadline = None;
+        self
+    }
+
+    /// Attach a scripted fault plan.
+    pub fn faults(mut self, faults: FaultPlan) -> Self {
+        self.opts.faults = Some(Arc::new(faults));
+        self
+    }
+
+    /// Batch pipeline depth: 1 = strictly sequential oracle, 2 (the
+    /// default) = split-phase depth-2 pipelining. Clamped to >= 1.
+    pub fn pipeline(mut self, depth: usize) -> Self {
+        self.opts.pipeline = depth.max(1);
+        self
+    }
+
+    /// Finish the builder.
+    pub fn build(self) -> ExecOptions {
+        self.opts
+    }
 }
 
 /// Shared state for one SPMD run.
@@ -336,6 +417,7 @@ struct Shared {
     failures: Mutex<Vec<RankFailure>>,
     deadline: Option<Duration>,
     faults: Option<Arc<FaultPlan>>,
+    pipeline: usize,
 }
 
 impl Shared {
@@ -371,6 +453,15 @@ impl Expect<'_> {
     }
 }
 
+/// A split-phase exchange started by [`Ctx::exchange_start`] whose
+/// packets are in flight until the matching [`Ctx::exchange_finish`].
+struct PendingExchange {
+    label: &'static str,
+    /// Words deposited at start time (the `h_out` half of the ledger
+    /// charge, computed before the buffers were taken by the mailbox).
+    out_words: usize,
+}
+
 /// Per-processor execution context handed to the SPMD closure.
 pub struct Ctx<'a> {
     rank: usize,
@@ -378,6 +469,8 @@ pub struct Ctx<'a> {
     /// Communication supersteps completed by this rank (fault-plan
     /// coordinates are `(rank, comm_step)`).
     comm_step: usize,
+    /// In-flight split-phase exchange, if any (at most one).
+    pending: Option<PendingExchange>,
     pub ledger: ProcLedger,
 }
 
@@ -392,6 +485,21 @@ impl<'a> Ctx<'a> {
     #[inline]
     pub fn nprocs(&self) -> usize {
         self.shared.p
+    }
+
+    /// Batch pipeline depth requested for this session (1 = strictly
+    /// sequential oracle; >= 2 enables the depth-2 split-phase pipeline
+    /// in the batch drivers).
+    #[inline]
+    pub fn pipeline_depth(&self) -> usize {
+        self.shared.pipeline
+    }
+
+    /// Whether a split-phase exchange is currently in flight on this
+    /// rank (started but not yet finished).
+    #[inline]
+    pub fn exchange_in_flight(&self) -> bool {
+        self.pending.is_some()
     }
 
     /// Begin a computation superstep (cost-accounting only; computation
@@ -432,7 +540,7 @@ impl<'a> Ctx<'a> {
     /// superstep `step` (panic, delay, drop/truncate an outgoing
     /// packet). Returns whether the packet to `pair_to` (pairwise mode)
     /// should be dropped. Cold unless a fault plan is armed.
-    #[allow(clippy::disallowed_methods)]
+    #[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
     fn apply_pre_faults(
         &self,
         label: &'static str,
@@ -444,12 +552,20 @@ impl<'a> Ctx<'a> {
         let mut drop_pair = false;
         for kind in plan.faults_for(self.rank, step) {
             match kind {
-                FaultKind::Panic => {
-                    panic!(
+                // Recorded explicitly (not a plain `panic!`) so the
+                // failure is attributed to the *exchange* label even
+                // when the fault fires inside `exchange_start`, where
+                // the ledger's current superstep is still the
+                // overlapped computation. The message carries the comm
+                // step, which for pipelined batches is the in-flight
+                // entry's exchange index.
+                FaultKind::Panic => self.fail(
+                    label,
+                    FailureCause::Panic(format!(
                         "injected fault: processor {} panics at communication superstep {} ('{}')",
                         self.rank, step, label
-                    )
-                }
+                    )),
+                ),
                 FaultKind::Delay(d) => std::thread::sleep(*d),
                 FaultKind::DropPacket { to } => match pair_to {
                     Some(partner) if *to == partner => drop_pair = true,
@@ -575,10 +691,31 @@ impl<'a> Ctx<'a> {
         self.exchange_swap_inner(label, bufs, Expect::Uniform(words));
     }
 
-    fn exchange_swap_inner(&mut self, label: &'static str, bufs: &mut [Vec<C64>], expect: Expect) {
+    /// Split-phase all-to-all, phase 1: deposit this rank's packets into
+    /// the mailbox and return immediately — **without** waiting at the
+    /// superstep barrier. The packets are "in flight" until the matching
+    /// [`Ctx::exchange_finish`]; between the two calls this rank may run
+    /// arbitrary *local* computation (the pipelined batch drivers run
+    /// the next entry's superstep-0 FFTs here), but no other
+    /// communication superstep may start while an exchange is in flight
+    /// (the mailbox slots are single-entry).
+    ///
+    /// Fault injection (pre-deposit panic/delay/drop/truncate and
+    /// post-deposit corruption) fires here, at start time, because this
+    /// is when the packets physically move; the receive-side length
+    /// checks that *detect* those faults fire at `finish`. Ledger
+    /// accounting is deferred entirely to `finish`, so a
+    /// start-immediately-finish pair is bit-identical to the blocking
+    /// [`Ctx::exchange_swap_uniform`] — which is in fact implemented as
+    /// exactly that pair.
+    pub fn exchange_start(&mut self, label: &'static str, bufs: &mut [Vec<C64>]) {
         let p = self.shared.p;
         assert_eq!(bufs.len(), p, "exchange needs one packet per processor");
-        self.ledger.begin(SuperstepKind::Communication, label);
+        assert!(
+            self.pending.is_none(),
+            "exchange_start('{label}') while a split-phase exchange is already in flight \
+             (missing exchange_finish)"
+        );
         let step = self.comm_step;
         self.comm_step += 1;
         if self.shared.faults.is_some() {
@@ -621,6 +758,31 @@ impl<'a> Ctx<'a> {
         if self.shared.faults.is_some() {
             self.apply_corrupt_faults(label, step);
         }
+        self.pending = Some(PendingExchange { label, out_words });
+    }
+
+    /// Split-phase all-to-all, phase 2: wait at the superstep barrier,
+    /// collect the packets addressed to this rank into `bufs`, and
+    /// charge the ledger. Every non-self packet must carry exactly
+    /// `words` words (the plan's compiled `packet_len`), as in
+    /// [`Ctx::exchange_swap_uniform`]. Must be preceded by a matching
+    /// [`Ctx::exchange_start`] on the same `bufs`.
+    pub fn exchange_finish(&mut self, bufs: &mut [Vec<C64>], words: usize) {
+        self.exchange_finish_inner(bufs, Expect::Uniform(words));
+    }
+
+    fn exchange_finish_inner(&mut self, bufs: &mut [Vec<C64>], expect: Expect) {
+        let p = self.shared.p;
+        let pending = self
+            .pending
+            .take()
+            .expect("exchange_finish without a matching exchange_start");
+        let label = pending.label;
+        // The communication superstep opens on the ledger here — after
+        // any overlapped computation superstep has closed its charges —
+        // so the per-superstep ledger stream is identical to the
+        // blocking exchange's.
+        self.ledger.begin(SuperstepKind::Communication, label);
         self.sync_wait(label);
         // Collect packets addressed to us. A slot left `None` means the
         // sender's packet was empty (it skipped the deposit lock) —
@@ -658,9 +820,18 @@ impl<'a> Ctx<'a> {
         // exchange's packets until every slot has been drained.
         self.sync_wait(label);
         let mem_words: usize = bufs.iter().map(|v| v.len()).sum();
-        self.ledger.charge_words(out_words, in_words);
+        self.ledger.charge_words(pending.out_words, in_words);
         // Pack + unpack both traverse the full local volume.
         self.ledger.charge_mem_words(2 * mem_words);
+    }
+
+    /// Blocking all-to-all = split-phase start immediately followed by
+    /// finish. Implementing it this way (rather than as a parallel code
+    /// path) is what makes the pipelined engine's ledger charges
+    /// bit-identical to the sequential oracle's *by construction*.
+    fn exchange_swap_inner(&mut self, label: &'static str, bufs: &mut [Vec<C64>], expect: Expect) {
+        self.exchange_start(label, bufs);
+        self.exchange_finish_inner(bufs, expect);
     }
 
     /// Ledger-charged pairwise swap: this processor's `buf` trades
@@ -851,6 +1022,7 @@ where
         failures: Mutex::new(Vec::new()),
         deadline: opts.deadline,
         faults: opts.faults,
+        pipeline: opts.pipeline.max(1),
     };
     let mut results: Vec<Option<(T, ProcLedger)>> = (0..p).map(|_| None).collect();
     std::thread::scope(|scope| {
@@ -858,7 +1030,13 @@ where
             let shared = &shared;
             let f = &f;
             scope.spawn(move || {
-                let mut ctx = Ctx { rank, shared, comm_step: 0, ledger: ProcLedger::new() };
+                let mut ctx = Ctx {
+                    rank,
+                    shared,
+                    comm_step: 0,
+                    pending: None,
+                    ledger: ProcLedger::new(),
+                };
                 match catch_unwind(AssertUnwindSafe(|| f(&mut ctx))) {
                     Ok(out) => *slot = Some((out, ctx.ledger)),
                     Err(payload) => {

@@ -72,8 +72,8 @@ pub mod machine;
 pub use fault::{Fault, FaultKind, FaultPlan};
 pub use ledger::{CostReport, ProcLedger, SuperstepCost, SuperstepKind};
 pub use machine::{
-    run_spmd, try_run_spmd, try_run_spmd_with, BspFailure, Ctx, FailureCause, RankFailure,
-    SpmdOptions, SpmdOutcome,
+    run_spmd, try_run_spmd, try_run_spmd_with, BspFailure, Ctx, ExecOptions, ExecOptionsBuilder,
+    FailureCause, RankFailure, SpmdOptions, SpmdOutcome, DEFAULT_PIPELINE_DEPTH,
 };
 
 use crate::dist::RedistPlan;

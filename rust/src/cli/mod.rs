@@ -59,6 +59,11 @@ COMMANDS:
                --deadline-ms MS    superstep deadline override (default
                                    120000; a stalled rank turns into a
                                    typed timeout error)
+               --pipeline D        batch pipeline depth (default 2):
+                                   2 overlaps entry i's all-to-all with
+                                   entry i+1's superstep-0 compute via the
+                                   split-phase exchange; 1 forces the
+                                   strictly-sequential oracle
                --reps R            timed repetitions (default 3; the plan is
                                    built once and reused — plan-cache hits)
                --verbose           print plan-cache statistics (hits/misses/
@@ -257,22 +262,28 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             };
             let cache = PlanCache::new(8);
             let planned = cache.plan(algorithm, &descriptor)?;
-            // Fault injection / deadline override: threaded to every
-            // SPMD session this plan runs, so a scripted fault exercises
-            // the abort-and-report path end to end from the CLI.
+            // Fault injection / deadline / pipeline-depth override:
+            // threaded to every SPMD session this plan runs, so a
+            // scripted fault exercises the abort-and-report path end to
+            // end from the CLI, and `--pipeline 1` forces the
+            // strictly-sequential batch oracle.
             let inject = args.get("inject").or(cfg.get("inject"));
             let deadline_ms = args.get_usize("deadline-ms")?.or(cfg.get_usize("deadline-ms")?);
-            if inject.is_some() || deadline_ms.is_some() {
-                let mut opts = crate::bsp::SpmdOptions::default();
+            let pipeline = args.get_usize("pipeline")?.or(cfg.get_usize("pipeline")?);
+            if inject.is_some() || deadline_ms.is_some() || pipeline.is_some() {
+                let mut opts = crate::bsp::ExecOptions::builder();
                 if let Some(ms) = deadline_ms {
-                    opts = opts.with_deadline(std::time::Duration::from_millis(ms as u64));
+                    opts = opts.deadline_ms(ms as u64);
                 }
                 if let Some(spec) = inject {
                     let faults = crate::bsp::FaultPlan::parse(spec)
                         .map_err(|e| format!("--inject: {e}"))?;
-                    opts = opts.inject(faults);
+                    opts = opts.faults(faults);
                 }
-                planned.set_exec_options(opts);
+                if let Some(depth) = pipeline {
+                    opts = opts.pipeline(depth);
+                }
+                planned.set_exec_options(opts.build());
             }
             // Resolving again is a pure cache hit — proof for the log
             // line that repeated requests do no planning work. (For
@@ -288,8 +299,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 );
             }
             // The paper's §4.1 methodology: time `reps` transforms with
-            // per-rank state amortized. execute_batch runs the whole
-            // batch in ONE SPMD session, Workers built once.
+            // per-rank state amortized. The unified `execute` runs the
+            // whole batch in ONE SPMD session, Workers built once, and
+            // (for FFTU batches of two or more) software-pipelines the
+            // all-to-alls against the next entry's superstep-0 compute.
             let (wall, report, out_shape) = match kind {
                 Kind::C2C => {
                     // The complex input is generated only on this path;
@@ -299,17 +312,17 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                     let batched: Vec<C64> =
                         (0..reps).flat_map(|_| global.iter().copied()).collect();
                     let t0 = std::time::Instant::now();
-                    let exec = planned.execute_batch(&batched)?;
-                    (t0.elapsed().as_secs_f64() / reps as f64, exec.report, shape.clone())
+                    let report = planned.execute(&batched)?.into_report();
+                    (t0.elapsed().as_secs_f64() / reps as f64, report, shape.clone())
                 }
                 Kind::R2C => {
                     let real: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
                     let batched: Vec<f64> =
                         (0..reps).flat_map(|_| real.iter().copied()).collect();
                     let t0 = std::time::Instant::now();
-                    let exec = planned.execute_r2c_batch(&batched)?;
+                    let report = planned.execute(&batched)?.into_report();
                     let spec_shape = descriptor.spectrum_shape();
-                    (t0.elapsed().as_secs_f64() / reps as f64, exec.report, spec_shape)
+                    (t0.elapsed().as_secs_f64() / reps as f64, report, spec_shape)
                 }
                 Kind::C2R => {
                     // A genuine Hermitian half-spectrum (built outside
@@ -319,16 +332,16 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                     let batched: Vec<C64> =
                         (0..reps).flat_map(|_| spec.iter().copied()).collect();
                     let t0 = std::time::Instant::now();
-                    let exec = planned.execute_c2r_batch(&batched)?;
-                    (t0.elapsed().as_secs_f64() / reps as f64, exec.report, shape.clone())
+                    let report = planned.execute(&batched)?.into_report();
+                    (t0.elapsed().as_secs_f64() / reps as f64, report, shape.clone())
                 }
                 Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
                     let real: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
                     let batched: Vec<f64> =
                         (0..reps).flat_map(|_| real.iter().copied()).collect();
                     let t0 = std::time::Instant::now();
-                    let exec = planned.execute_trig_batch(&batched)?;
-                    (t0.elapsed().as_secs_f64() / reps as f64, exec.report, shape.clone())
+                    let report = planned.execute(&batched)?.into_report();
+                    (t0.elapsed().as_secs_f64() / reps as f64, report, shape.clone())
                 }
             };
             // Model flops: the r2c/c2r kinds run the complex core on
@@ -434,7 +447,12 @@ fn cmd_analyze(args: &Args) -> Result<(), String> {
         None => descriptor.procs(args.get_usize("p")?.unwrap_or(4)),
     };
     let planned = crate::api::plan(algorithm, &descriptor)?;
-    let report = planned.analyze()?;
+    // --batch N (N >= 2) verifies the depth-2 software-pipelined batch
+    // schedule instead of the per-item one.
+    let report = match args.get_usize("batch")?.filter(|&b| b >= 2) {
+        Some(b) => planned.analyze_pipelined(b)?,
+        None => planned.analyze()?,
+    };
     print!("{}", report.render());
     if report.passed() {
         Ok(())
@@ -469,19 +487,27 @@ fn analyze_sweep() -> Result<(), String> {
     ];
     let mut failures = Vec::new();
     let mut cases = 0usize;
-    let mut check = |algorithm: Algorithm, t: &Transform, failures: &mut Vec<String>| {
+    let mut check = |algorithm: Algorithm, t: &Transform, batch: usize, failures: &mut Vec<String>| {
         cases += 1;
-        let tag = format!(
+        let mut tag = format!(
             "{} {} {} shape {:?}",
             algorithm.name(),
             t.kind.name(),
             t.strategy.name(),
             t.shape
         );
+        if batch >= 2 {
+            tag.push_str(&format!(" pipelined b={batch}"));
+        }
         let outcome = crate::api::plan(algorithm, t)
             .map_err(|e| format!("planning failed: {e}"))
             .and_then(|planned| {
-                planned.analyze().map_err(|e| format!("analysis failed: {e}"))
+                let report = if batch >= 2 {
+                    planned.analyze_pipelined(batch)
+                } else {
+                    planned.analyze()
+                };
+                report.map_err(|e| format!("analysis failed: {e}"))
             });
         match outcome {
             Ok(report) if report.passed() => {
@@ -508,7 +534,7 @@ fn analyze_sweep() -> Result<(), String> {
     for (algorithm, shape, p) in &gathered {
         for kind in kinds {
             let t = Transform::new(shape).kind(kind).procs(*p);
-            check(*algorithm, &t, &mut failures);
+            check(*algorithm, &t, 1, &mut failures);
         }
     }
     // The autotuning planner: whatever Auto picks must verify too. The
@@ -516,17 +542,34 @@ fn analyze_sweep() -> Result<(), String> {
     // puts its output under the same lint gate for every kind.
     for kind in kinds {
         let t = Transform::new(&[16, 16]).kind(kind).procs(4);
-        check(Algorithm::Auto, &t, &mut failures);
+        check(Algorithm::Auto, &t, 1, &mut failures);
     }
     // Zig-zag strategy: fftu-only, non-c2c. r2c/c2r resolve their grid
     // on the half shape; the trig kinds additionally need 2 p_l | n_l.
     for kind in [Kind::R2C, Kind::C2R] {
         let t = Transform::new(&[18, 8]).grid(&[3, 2]).kind(kind).zigzag();
-        check(Algorithm::Fftu, &t, &mut failures);
+        check(Algorithm::Fftu, &t, 1, &mut failures);
     }
     for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
         let t = Transform::new(&[18, 16]).grid(&[3, 4]).kind(kind).zigzag();
-        check(Algorithm::Fftu, &t, &mut failures);
+        check(Algorithm::Fftu, &t, 1, &mut failures);
+    }
+    // Pipelined batch schedules: every FFTU-family case again, as the
+    // depth-2 split-phase schedule a 4-entry batch executes. The lint
+    // suite gains the split-phase pairing lint here, and the per-entry
+    // single-all-to-all and h == analytic_h equalities must survive the
+    // reorder.
+    for kind in kinds {
+        let t = Transform::new(&[16, 16]).kind(kind).procs(4);
+        check(Algorithm::Fftu, &t, 4, &mut failures);
+    }
+    for kind in [Kind::R2C, Kind::C2R] {
+        let t = Transform::new(&[18, 8]).grid(&[3, 2]).kind(kind).zigzag();
+        check(Algorithm::Fftu, &t, 4, &mut failures);
+    }
+    for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+        let t = Transform::new(&[18, 16]).grid(&[3, 4]).kind(kind).zigzag();
+        check(Algorithm::Fftu, &t, 4, &mut failures);
     }
     if failures.is_empty() {
         println!("analyze --all: {cases} combinations, all lints pass");
@@ -551,7 +594,7 @@ struct BenchCase {
 /// default output name (`BENCH_<tag>.json`) never collides with a
 /// committed baseline from an earlier PR; `--out` overrides it
 /// everywhere — no path in the bench writes any other name.
-const BENCH_TAG: &str = "pr7";
+const BENCH_TAG: &str = "pr9";
 
 /// The default trajectory output path, derived from [`BENCH_TAG`].
 fn bench_default_out() -> String {
@@ -792,8 +835,8 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             Algorithm::Fftu,
             &Transform::new(&shape).grid(&grid).dct2().zigzag(),
         )?;
-        let warm_g = gathered.execute_trig(&x)?;
-        let warm_z = zz.execute_trig(&x)?;
+        let warm_g = gathered.execute(&x)?.real();
+        let warm_z = zz.execute(&x)?.real();
         if warm_g.output != warm_z.output {
             return Err(format!("bench {name}: zig-zag path disagrees with the facade oracle"));
         }
@@ -802,11 +845,11 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             || {
                 // Both plans executed successfully during the warm-up
                 // cross-check above; a failure here is a bench bug.
-                let out = gathered.execute_trig(&x).expect("gathered trig execute failed");
+                let out = gathered.execute(&x).expect("gathered trig execute failed");
                 std::hint::black_box(&out);
             },
             || {
-                let out = zz.execute_trig(&x).expect("zig-zag trig execute failed");
+                let out = zz.execute(&x).expect("zig-zag trig execute failed");
                 std::hint::black_box(&out);
             },
         );
@@ -917,6 +960,71 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             chosen.grid().unwrap_or(&[]),
             legacy_s / engine_s,
             chosen.algorithm().name(),
+        ));
+        records.push(BenchRecord { name: name.to_string(), legacy_s, engine_s });
+    }
+    {
+        // Pipelined-batch case: the depth-2 split-phase engine (engine
+        // column) against the strictly-sequential schedule selected by
+        // `pipeline(1)` (legacy column), on the same plan and the same
+        // batch-8 input through the unified `execute` front door. Both
+        // toggles are bit-identical (cross-checked during warm-up and
+        // in rust/tests/pipeline.rs), so the ratio isolates the pure
+        // overlap of entry i's all-to-all with entry i+1's superstep 0.
+        // Runs in quick (CI) mode — that is what keeps the pipelined
+        // schedule under the regression gate.
+        let name = "batch_pipeline_64x64x16_p4";
+        let shape = vec![64usize, 64, 16];
+        let grid = vec![2usize, 2, 1];
+        let batch = 8usize;
+        let n: usize = shape.iter().product();
+        let planned = crate::api::plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape).grid(&grid).batch(batch),
+        )?;
+        let xb: Vec<C64> =
+            (0..batch * n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
+        let seq_opts = crate::bsp::ExecOptions::builder().pipeline(1).build();
+        let pip_opts = crate::bsp::ExecOptions::default();
+        planned.set_exec_options(seq_opts.clone());
+        let warm_seq = planned.execute(&xb)?.complex();
+        planned.set_exec_options(pip_opts.clone());
+        let warm_pip = planned.execute(&xb)?.complex();
+        if warm_pip.output != warm_seq.output {
+            return Err(format!(
+                "bench {name}: pipelined engine disagrees with the sequential oracle"
+            ));
+        }
+        let (legacy_s, engine_s) = time_pair(
+            reps,
+            || {
+                // Both toggles executed successfully during the warm-up
+                // cross-check above; a failure here is a bench bug.
+                planned.set_exec_options(seq_opts.clone());
+                let out = planned.execute(&xb).expect("sequential batch execute failed");
+                std::hint::black_box(&out);
+            },
+            || {
+                planned.set_exec_options(pip_opts.clone());
+                let out = planned.execute(&xb).expect("pipelined batch execute failed");
+                std::hint::black_box(&out);
+            },
+        );
+        planned.set_exec_options(crate::bsp::ExecOptions::default());
+        // `time_pair` measured whole-batch sessions; record per-transform
+        // seconds so the columns stay comparable across the trajectory.
+        let (legacy_s, engine_s) = (legacy_s / batch as f64, engine_s / batch as f64);
+        let speedup = legacy_s / engine_s;
+        let model_flops = 5.0 * n as f64 * (n as f64).log2();
+        println!("| {name} | {:.3} | {:.3} | {speedup:.2}x |", legacy_s * 1e3, engine_s * 1e3);
+        lines.push(format!(
+            "    {{\"name\": \"{name}\", \"shape\": {shape:?}, \"grid\": {grid:?}, \
+             \"kind\": \"c2c\", \"batch\": {batch}, \"reps\": {reps}, \
+             \"legacy_s_per_transform\": {legacy_s:.9}, \
+             \"engine_s_per_transform\": {engine_s:.9}, \"speedup\": {speedup:.4}, \
+             \"engine_transforms_per_s\": {:.3}, \"model_gflops_rate\": {:.4}}}",
+            1.0 / engine_s,
+            model_flops / engine_s / 1e9,
         ));
         records.push(BenchRecord { name: name.to_string(), legacy_s, engine_s });
     }

@@ -471,7 +471,7 @@ mod tests {
             let n: usize = shape.iter().product();
             let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
             let planned = plan(Algorithm::Fftu, &Transform::new(&shape).procs(p).r2c()).unwrap();
-            let executed = planned.execute_r2c(&x).unwrap().report;
+            let executed = planned.execute(&x).unwrap().into_report();
             let analytic = fftu_r2c_report(&shape, p);
             assert_ledgers_match(&analytic, &executed, &format!("fftu r2c {shape:?} p={p}"));
             // The untangle charge itself must agree to the last bit: both
@@ -494,7 +494,7 @@ mod tests {
                 let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
                 let planned =
                     plan(Algorithm::Fftu, &Transform::new(&shape).procs(p).kind(kind)).unwrap();
-                let executed = planned.execute_trig(&x).unwrap().report;
+                let executed = planned.execute(&x).unwrap().into_report();
                 let analytic = fftu_trig_report(&shape, p);
                 assert_ledgers_match(
                     &analytic,
@@ -533,7 +533,7 @@ mod tests {
                     &Transform::new(&shape).grid(&grid).kind(kind).zigzag(),
                 )
                 .unwrap();
-                let executed = planned.execute_trig(&x).unwrap().report;
+                let executed = planned.execute(&x).unwrap().into_report();
                 let analytic = fftu_trig_zigzag_report(&shape, &grid, type2);
                 // Full superstep structure: same count, kinds, labels;
                 // identical h on every communication superstep.
@@ -591,7 +591,7 @@ mod tests {
             let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
             let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag())
                 .unwrap();
-            let executed = fwd.execute_r2c(&x).unwrap().report;
+            let executed = fwd.execute(&x).unwrap().into_report();
             let analytic = fftu_r2c_zigzag_report(&shape, &grid);
             assert_eq!(analytic.supersteps.len(), executed.supersteps.len(), "{shape:?}");
             for (a, e) in analytic.supersteps.iter().zip(&executed.supersteps) {
@@ -605,10 +605,10 @@ mod tests {
             assert_eq!(aw.w_max.to_bits(), ew.w_max.to_bits(), "untangle charge {shape:?}");
 
             // C2R, the adjoint ordering.
-            let spec = fwd.execute_r2c(&x).unwrap().output;
+            let spec = fwd.execute(&x).unwrap().complex().output;
             let inv = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).c2r().zigzag())
                 .unwrap();
-            let executed = inv.execute_c2r(&spec).unwrap().report;
+            let executed = inv.execute(&spec).unwrap().into_report();
             let analytic = fftu_c2r_zigzag_report(&shape, &grid);
             assert_eq!(analytic.supersteps.len(), executed.supersteps.len(), "{shape:?}");
             for (a, e) in analytic.supersteps.iter().zip(&executed.supersteps) {

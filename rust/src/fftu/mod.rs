@@ -273,12 +273,37 @@ pub fn fftu_execute_trig2_batch_arena(
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
-        let mut outs = Vec::with_capacity(inputs.len());
-        for &global in inputs {
-            let mut local = vec![C64::ZERO; plan.local_len()];
-            plan.scatter_rank_into_trig2(global, rank, &mut local, negate_odd);
-            worker.execute(ctx, &mut local, Direction::Forward);
-            outs.push(local);
+        let b = inputs.len();
+        let mut outs = Vec::with_capacity(b);
+        if ctx.pipeline_depth() >= 2 && b >= 2 {
+            // Depth-2 pipeline, as in `fftu_execute_batch_arena`: the
+            // Makhoul-composed scatter and superstep 0 of entry i+1
+            // overlap entry i's in-flight packets.
+            worker.ensure_pipeline_buffers();
+            let mut first = vec![C64::ZERO; plan.local_len()];
+            plan.scatter_rank_into_trig2(inputs[0], rank, &mut first, negate_odd);
+            worker.pipelined_superstep0(ctx, &mut first, Direction::Forward, 0);
+            outs.push(first);
+            worker.exchange_start_set(ctx, 0);
+            for i in 0..b {
+                if i + 1 < b {
+                    let mut next = vec![C64::ZERO; plan.local_len()];
+                    plan.scatter_rank_into_trig2(inputs[i + 1], rank, &mut next, negate_odd);
+                    worker.pipelined_superstep0(ctx, &mut next, Direction::Forward, i + 1);
+                    outs.push(next);
+                }
+                worker.pipelined_finish_superstep2(ctx, &mut outs[i], Direction::Forward, i);
+                if i + 1 < b {
+                    worker.exchange_start_set(ctx, i + 1);
+                }
+            }
+        } else {
+            for &global in inputs {
+                let mut local = vec![C64::ZERO; plan.local_len()];
+                plan.scatter_rank_into_trig2(global, rank, &mut local, negate_odd);
+                worker.execute(ctx, &mut local, Direction::Forward);
+                outs.push(local);
+            }
         }
         outs
     })
@@ -314,12 +339,35 @@ pub fn fftu_execute_trig3_batch_arena(
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
-        let mut outs = Vec::with_capacity(inputs.len());
-        for &global in inputs {
-            let mut local = vec![C64::ZERO; plan.local_len()];
-            plan.scatter_rank_into(global, rank, &mut local);
-            worker.execute(ctx, &mut local, Direction::Inverse);
-            outs.push(local);
+        let b = inputs.len();
+        let mut outs = Vec::with_capacity(b);
+        if ctx.pipeline_depth() >= 2 && b >= 2 {
+            // Depth-2 pipeline over the phase-prepared inverse cores.
+            worker.ensure_pipeline_buffers();
+            let mut first = vec![C64::ZERO; plan.local_len()];
+            plan.scatter_rank_into(inputs[0], rank, &mut first);
+            worker.pipelined_superstep0(ctx, &mut first, Direction::Inverse, 0);
+            outs.push(first);
+            worker.exchange_start_set(ctx, 0);
+            for i in 0..b {
+                if i + 1 < b {
+                    let mut next = vec![C64::ZERO; plan.local_len()];
+                    plan.scatter_rank_into(inputs[i + 1], rank, &mut next);
+                    worker.pipelined_superstep0(ctx, &mut next, Direction::Inverse, i + 1);
+                    outs.push(next);
+                }
+                worker.pipelined_finish_superstep2(ctx, &mut outs[i], Direction::Inverse, i);
+                if i + 1 < b {
+                    worker.exchange_start_set(ctx, i + 1);
+                }
+            }
+        } else {
+            for &global in inputs {
+                let mut local = vec![C64::ZERO; plan.local_len()];
+                plan.scatter_rank_into(global, rank, &mut local);
+                worker.execute(ctx, &mut local, Direction::Inverse);
+                outs.push(local);
+            }
         }
         outs
     })
@@ -369,22 +417,61 @@ pub fn fftu_execute_trig2_zigzag_batch_arena(
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
-        let mut outs = Vec::with_capacity(inputs.len());
-        for &global in inputs {
-            let mut local = vec![C64::ZERO; plan.local_len()];
-            plan.scatter_rank_into_trig2(global, rank, &mut local, dst);
-            worker.execute(ctx, &mut local, Direction::Forward);
-            zigzag::convert_between_cyclic_and_zigzag(
-                ctx,
-                plan,
-                &worker.s_coords,
-                &mut local,
-                &mut worker.pair_buf,
-            );
-            ctx.begin_comp("trig-combine");
-            ctx.charge_flops(trig_combine_flops(&plan.shape) / p as f64);
-            zigzag::trig2_combine_local(&mut local, plan, &worker.s_coords, tables);
-            outs.push(local);
+        let b = inputs.len();
+        let mut outs = Vec::with_capacity(b);
+        if ctx.pipeline_depth() >= 2 && b >= 2 {
+            // Depth-2 pipeline. Entry i's zig-zag conversion (pairwise
+            // exchanges) and combine run after its core finishes and
+            // BEFORE entry i+1's exchange_start, so only local compute
+            // overlaps the in-flight packets and the communication
+            // superstep order (a2a_i, pairwise_i, a2a_{i+1}, ...) is
+            // exactly the sequential arm's — fault-plan coordinates are
+            // unchanged.
+            worker.ensure_pipeline_buffers();
+            let mut first = vec![C64::ZERO; plan.local_len()];
+            plan.scatter_rank_into_trig2(inputs[0], rank, &mut first, dst);
+            worker.pipelined_superstep0(ctx, &mut first, Direction::Forward, 0);
+            outs.push(first);
+            worker.exchange_start_set(ctx, 0);
+            for i in 0..b {
+                if i + 1 < b {
+                    let mut next = vec![C64::ZERO; plan.local_len()];
+                    plan.scatter_rank_into_trig2(inputs[i + 1], rank, &mut next, dst);
+                    worker.pipelined_superstep0(ctx, &mut next, Direction::Forward, i + 1);
+                    outs.push(next);
+                }
+                worker.pipelined_finish_superstep2(ctx, &mut outs[i], Direction::Forward, i);
+                zigzag::convert_between_cyclic_and_zigzag(
+                    ctx,
+                    plan,
+                    &worker.s_coords,
+                    &mut outs[i],
+                    &mut worker.pair_buf,
+                );
+                ctx.begin_comp("trig-combine");
+                ctx.charge_flops(trig_combine_flops(&plan.shape) / p as f64);
+                zigzag::trig2_combine_local(&mut outs[i], plan, &worker.s_coords, tables);
+                if i + 1 < b {
+                    worker.exchange_start_set(ctx, i + 1);
+                }
+            }
+        } else {
+            for &global in inputs {
+                let mut local = vec![C64::ZERO; plan.local_len()];
+                plan.scatter_rank_into_trig2(global, rank, &mut local, dst);
+                worker.execute(ctx, &mut local, Direction::Forward);
+                zigzag::convert_between_cyclic_and_zigzag(
+                    ctx,
+                    plan,
+                    &worker.s_coords,
+                    &mut local,
+                    &mut worker.pair_buf,
+                );
+                ctx.begin_comp("trig-combine");
+                ctx.charge_flops(trig_combine_flops(&plan.shape) / p as f64);
+                zigzag::trig2_combine_local(&mut local, plan, &worker.s_coords, tables);
+                outs.push(local);
+            }
         }
         outs
     })
@@ -429,22 +516,72 @@ pub fn fftu_execute_trig3_zigzag_batch_arena(
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
-        let mut outs = Vec::with_capacity(inputs.len());
-        for &global in inputs {
-            let mut local = vec![C64::ZERO; plan.local_len()];
-            zigzag::scatter_rank_zigzag_real(plan, global, rank, &mut local, dst);
+        let b = inputs.len();
+        let mut outs = Vec::with_capacity(b);
+        if ctx.pipeline_depth() >= 2 && b >= 2 {
+            // Depth-2 pipeline. The type-3 pre-core wrappers include
+            // communication (the zig-zag -> cyclic pairwise convert), so
+            // only the *local* part of entry i+1 — zig-zag scatter and
+            // the rank-local phase pass — overlaps entry i's in-flight
+            // packets; convert + superstep 0 + the next exchange_start
+            // run after entry i's finish, preserving the sequential
+            // communication order (pairwise_i, a2a_i, pairwise_{i+1},
+            // a2a_{i+1}, ...).
+            worker.ensure_pipeline_buffers();
+            let mut first = vec![C64::ZERO; plan.local_len()];
+            zigzag::scatter_rank_zigzag_real(plan, inputs[0], rank, &mut first, dst);
             ctx.begin_comp("trig-phase");
             ctx.charge_flops(trig_combine_flops(&plan.shape) / p as f64);
-            zigzag::trig3_phase_local(&mut local, plan, &worker.s_coords, tables);
+            zigzag::trig3_phase_local(&mut first, plan, &worker.s_coords, tables);
             zigzag::convert_between_cyclic_and_zigzag(
                 ctx,
                 plan,
                 &worker.s_coords,
-                &mut local,
+                &mut first,
                 &mut worker.pair_buf,
             );
-            worker.execute(ctx, &mut local, Direction::Inverse);
-            outs.push(local);
+            worker.pipelined_superstep0(ctx, &mut first, Direction::Inverse, 0);
+            outs.push(first);
+            worker.exchange_start_set(ctx, 0);
+            for i in 0..b {
+                if i + 1 < b {
+                    let mut next = vec![C64::ZERO; plan.local_len()];
+                    zigzag::scatter_rank_zigzag_real(plan, inputs[i + 1], rank, &mut next, dst);
+                    ctx.begin_comp("trig-phase");
+                    ctx.charge_flops(trig_combine_flops(&plan.shape) / p as f64);
+                    zigzag::trig3_phase_local(&mut next, plan, &worker.s_coords, tables);
+                    outs.push(next);
+                }
+                worker.pipelined_finish_superstep2(ctx, &mut outs[i], Direction::Inverse, i);
+                if i + 1 < b {
+                    zigzag::convert_between_cyclic_and_zigzag(
+                        ctx,
+                        plan,
+                        &worker.s_coords,
+                        &mut outs[i + 1],
+                        &mut worker.pair_buf,
+                    );
+                    worker.pipelined_superstep0(ctx, &mut outs[i + 1], Direction::Inverse, i + 1);
+                    worker.exchange_start_set(ctx, i + 1);
+                }
+            }
+        } else {
+            for &global in inputs {
+                let mut local = vec![C64::ZERO; plan.local_len()];
+                zigzag::scatter_rank_zigzag_real(plan, global, rank, &mut local, dst);
+                ctx.begin_comp("trig-phase");
+                ctx.charge_flops(trig_combine_flops(&plan.shape) / p as f64);
+                zigzag::trig3_phase_local(&mut local, plan, &worker.s_coords, tables);
+                zigzag::convert_between_cyclic_and_zigzag(
+                    ctx,
+                    plan,
+                    &worker.s_coords,
+                    &mut local,
+                    &mut worker.pair_buf,
+                );
+                worker.execute(ctx, &mut local, Direction::Inverse);
+                outs.push(local);
+            }
         }
         outs
     })
@@ -492,36 +629,89 @@ pub fn fftu_execute_r2c_pairwise_batch_arena(
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
         let extra_rows = zigzag::spectrum_extra_rows(plan, &worker.s_coords);
-        let mut outs = Vec::with_capacity(inputs.len());
-        // The core output is consumed by the untangle and not returned,
-        // so one scratch buffer serves the whole batch (`main`/`extra`
-        // are moved into the result and must be fresh per item).
-        let mut local = vec![C64::ZERO; plan.local_len()];
-        for &global in inputs {
-            plan.scatter_rank_into(global, rank, &mut local);
-            worker.execute(ctx, &mut local, Direction::Forward);
-            zigzag::mirror_swap(
-                ctx,
-                &plan.pgrid,
-                &worker.s_coords,
-                "r2c-pairwise",
-                &local,
-                &mut worker.mirror_buf,
-            );
-            ctx.begin_comp("r2c-untangle");
-            ctx.charge_flops(wrap_flops(real_shape) / p as f64);
-            let mut main = vec![C64::ZERO; plan.local_len()];
-            let mut extra = vec![C64::ZERO; extra_rows];
-            zigzag::untangle_rank_local(
-                plan,
-                &worker.s_coords,
-                &local,
-                &worker.mirror_buf,
-                tw,
-                &mut main,
-                &mut extra,
-            );
-            outs.push((main, extra));
+        let b = inputs.len();
+        let mut outs = Vec::with_capacity(b);
+        if ctx.pipeline_depth() >= 2 && b >= 2 {
+            // Depth-2 pipeline. The core output is consumed by the
+            // untangle and not returned, so two ping-pong scratch
+            // buffers serve the whole batch: entry i+1 scatters and runs
+            // superstep 0 in one while entry i's superstep-2/mirror/
+            // untangle tail still reads the other. The mirror swap
+            // (pairwise) runs after entry i's finish and before entry
+            // i+1's exchange_start, so the communication order matches
+            // the sequential arm (a2a_i, mirror_i, a2a_{i+1}, ...).
+            worker.ensure_pipeline_buffers();
+            let mut ping = vec![C64::ZERO; plan.local_len()];
+            let mut pong = vec![C64::ZERO; plan.local_len()];
+            plan.scatter_rank_into(inputs[0], rank, &mut ping);
+            worker.pipelined_superstep0(ctx, &mut ping, Direction::Forward, 0);
+            worker.exchange_start_set(ctx, 0);
+            for i in 0..b {
+                if i + 1 < b {
+                    let next = if (i + 1) % 2 == 0 { &mut ping } else { &mut pong };
+                    plan.scatter_rank_into(inputs[i + 1], rank, next);
+                    worker.pipelined_superstep0(ctx, next, Direction::Forward, i + 1);
+                }
+                let cur = if i % 2 == 0 { &mut ping } else { &mut pong };
+                worker.pipelined_finish_superstep2(ctx, cur, Direction::Forward, i);
+                zigzag::mirror_swap(
+                    ctx,
+                    &plan.pgrid,
+                    &worker.s_coords,
+                    "r2c-pairwise",
+                    cur,
+                    &mut worker.mirror_buf,
+                );
+                ctx.begin_comp("r2c-untangle");
+                ctx.charge_flops(wrap_flops(real_shape) / p as f64);
+                let mut main = vec![C64::ZERO; plan.local_len()];
+                let mut extra = vec![C64::ZERO; extra_rows];
+                zigzag::untangle_rank_local(
+                    plan,
+                    &worker.s_coords,
+                    cur,
+                    &worker.mirror_buf,
+                    tw,
+                    &mut main,
+                    &mut extra,
+                );
+                outs.push((main, extra));
+                if i + 1 < b {
+                    worker.exchange_start_set(ctx, i + 1);
+                }
+            }
+        } else {
+            // The core output is consumed by the untangle and not
+            // returned, so one scratch buffer serves the whole batch
+            // (`main`/`extra` are moved into the result and must be
+            // fresh per item).
+            let mut local = vec![C64::ZERO; plan.local_len()];
+            for &global in inputs {
+                plan.scatter_rank_into(global, rank, &mut local);
+                worker.execute(ctx, &mut local, Direction::Forward);
+                zigzag::mirror_swap(
+                    ctx,
+                    &plan.pgrid,
+                    &worker.s_coords,
+                    "r2c-pairwise",
+                    &local,
+                    &mut worker.mirror_buf,
+                );
+                ctx.begin_comp("r2c-untangle");
+                ctx.charge_flops(wrap_flops(real_shape) / p as f64);
+                let mut main = vec![C64::ZERO; plan.local_len()];
+                let mut extra = vec![C64::ZERO; extra_rows];
+                zigzag::untangle_rank_local(
+                    plan,
+                    &worker.s_coords,
+                    &local,
+                    &worker.mirror_buf,
+                    tw,
+                    &mut main,
+                    &mut extra,
+                );
+                outs.push((main, extra));
+            }
         }
         outs
     })
@@ -570,9 +760,20 @@ pub fn fftu_execute_c2r_pairwise_batch_arena(
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
-        let mut outs = Vec::with_capacity(inputs.len());
-        for &spec in inputs {
-            zigzag::scatter_rank_spectrum(plan, &worker.s_coords, spec, &mut worker.spec_buf);
+        let b = inputs.len();
+        let mut outs = Vec::with_capacity(b);
+        if ctx.pipeline_depth() >= 2 && b >= 2 {
+            // Depth-2 pipeline. The c2r pre-core wrappers include
+            // communication (the conjugate mirror swap), so only the
+            // *local* spectrum extraction of entry i+1 overlaps entry
+            // i's in-flight packets (the worker's `spec_buf` is free by
+            // then — entry i's retangle consumed it before its
+            // exchange_start); mirror + retangle + superstep 0 + the
+            // next start run after entry i's finish, preserving the
+            // sequential communication order (mirror_i, a2a_i,
+            // mirror_{i+1}, a2a_{i+1}, ...).
+            worker.ensure_pipeline_buffers();
+            zigzag::scatter_rank_spectrum(plan, &worker.s_coords, inputs[0], &mut worker.spec_buf);
             zigzag::mirror_swap(
                 ctx,
                 &plan.pgrid,
@@ -583,17 +784,78 @@ pub fn fftu_execute_c2r_pairwise_batch_arena(
             );
             ctx.begin_comp("c2r-retangle");
             ctx.charge_flops(wrap_flops(real_shape) / p as f64);
-            let mut local = vec![C64::ZERO; plan.local_len()];
+            let mut first = vec![C64::ZERO; plan.local_len()];
             zigzag::retangle_rank_local(
                 plan,
                 &worker.s_coords,
                 &worker.spec_buf,
                 &worker.mirror_buf,
                 tw,
-                &mut local,
+                &mut first,
             );
-            worker.execute(ctx, &mut local, Direction::Inverse);
-            outs.push(local);
+            worker.pipelined_superstep0(ctx, &mut first, Direction::Inverse, 0);
+            outs.push(first);
+            worker.exchange_start_set(ctx, 0);
+            for i in 0..b {
+                if i + 1 < b {
+                    zigzag::scatter_rank_spectrum(
+                        plan,
+                        &worker.s_coords,
+                        inputs[i + 1],
+                        &mut worker.spec_buf,
+                    );
+                }
+                worker.pipelined_finish_superstep2(ctx, &mut outs[i], Direction::Inverse, i);
+                if i + 1 < b {
+                    zigzag::mirror_swap(
+                        ctx,
+                        &plan.pgrid,
+                        &worker.s_coords,
+                        "c2r-pairwise",
+                        &worker.spec_buf,
+                        &mut worker.mirror_buf,
+                    );
+                    ctx.begin_comp("c2r-retangle");
+                    ctx.charge_flops(wrap_flops(real_shape) / p as f64);
+                    let mut next = vec![C64::ZERO; plan.local_len()];
+                    zigzag::retangle_rank_local(
+                        plan,
+                        &worker.s_coords,
+                        &worker.spec_buf,
+                        &worker.mirror_buf,
+                        tw,
+                        &mut next,
+                    );
+                    worker.pipelined_superstep0(ctx, &mut next, Direction::Inverse, i + 1);
+                    outs.push(next);
+                    worker.exchange_start_set(ctx, i + 1);
+                }
+            }
+        } else {
+            for &spec in inputs {
+                zigzag::scatter_rank_spectrum(plan, &worker.s_coords, spec, &mut worker.spec_buf);
+                zigzag::mirror_swap(
+                    ctx,
+                    &plan.pgrid,
+                    &worker.s_coords,
+                    "c2r-pairwise",
+                    &worker.spec_buf,
+                    &mut worker.mirror_buf,
+                );
+                ctx.begin_comp("c2r-retangle");
+                ctx.charge_flops(wrap_flops(real_shape) / p as f64);
+                let mut local = vec![C64::ZERO; plan.local_len()];
+                zigzag::retangle_rank_local(
+                    plan,
+                    &worker.s_coords,
+                    &worker.spec_buf,
+                    &worker.mirror_buf,
+                    tw,
+                    &mut local,
+                );
+                worker.execute(ctx, &mut local, Direction::Inverse);
+                outs.push(local);
+            }
         }
         outs
     })
@@ -629,6 +891,12 @@ pub fn fftu_execute_batch(
 /// superstep 2 — touches the heap not at all (`rust/tests/alloc.rs`
 /// enforces this with a counting allocator). The report covers the whole
 /// batch (`batch` communication supersteps).
+///
+/// Batches of two or more entries run software-pipelined at depth 2 by
+/// default (entry `i`'s packets fly through the split-phase all-to-all
+/// while entry `i + 1` runs superstep 0 into the worker's alternate
+/// packet set), bit-identical to the strictly-sequential oracle
+/// selected by `ExecOptions::builder().pipeline(1)`.
 pub fn fftu_execute_batch_arena(
     plan: &Arc<FftuPlan>,
     arena: &ExecArena,
@@ -650,12 +918,40 @@ pub fn fftu_execute_batch_arena(
         let rank = ctx.rank();
         let mut slot = arena.worker(plan, rank);
         let worker = slot.as_mut().expect("arena worker just initialized");
-        let mut outs = Vec::with_capacity(inputs.len());
-        for &global in inputs {
-            let mut local = vec![C64::ZERO; plan.local_len()];
-            plan.scatter_rank_into(global, rank, &mut local);
-            worker.execute(ctx, &mut local, dir);
-            outs.push(local);
+        let b = inputs.len();
+        let mut outs = Vec::with_capacity(b);
+        if ctx.pipeline_depth() >= 2 && b >= 2 {
+            // Depth-2 software pipeline: entry i's packets fly through
+            // the split-phase all-to-all while entry i+1 scatters, runs
+            // its local FFTs, and packs into the alternate packet set.
+            // Per-entry floating-point work and ledger charges are
+            // bit-identical to the sequential arm below — only the
+            // inter-entry interleaving changes.
+            worker.ensure_pipeline_buffers();
+            let mut first = vec![C64::ZERO; plan.local_len()];
+            plan.scatter_rank_into(inputs[0], rank, &mut first);
+            worker.pipelined_superstep0(ctx, &mut first, dir, 0);
+            outs.push(first);
+            worker.exchange_start_set(ctx, 0);
+            for i in 0..b {
+                if i + 1 < b {
+                    let mut next = vec![C64::ZERO; plan.local_len()];
+                    plan.scatter_rank_into(inputs[i + 1], rank, &mut next);
+                    worker.pipelined_superstep0(ctx, &mut next, dir, i + 1);
+                    outs.push(next);
+                }
+                worker.pipelined_finish_superstep2(ctx, &mut outs[i], dir, i);
+                if i + 1 < b {
+                    worker.exchange_start_set(ctx, i + 1);
+                }
+            }
+        } else {
+            for &global in inputs {
+                let mut local = vec![C64::ZERO; plan.local_len()];
+                plan.scatter_rank_into(global, rank, &mut local);
+                worker.execute(ctx, &mut local, dir);
+                outs.push(local);
+            }
         }
         outs
     })

@@ -36,6 +36,13 @@ pub struct Worker {
     pub s_coords: Vec<usize>,
     pub tables: TwiddleTables,
     packets: Vec<Vec<C64>>,
+    /// Second packet-buffer set for the depth-2 pipelined batch drivers:
+    /// while one set's packets are in flight through the split-phase
+    /// exchange (its `Vec`s taken by the mailbox), the next entry's
+    /// superstep 0 packs into the other. Lazily sized by
+    /// [`Worker::ensure_pipeline_buffers`]; sequential-only workers
+    /// never pay for it.
+    packets_alt: Vec<Vec<C64>>,
     w: Vec<C64>,
     scratch: Vec<C64>,
     /// Half-volume buffer for the cyclic <-> zig-zag axis conversions
@@ -90,11 +97,25 @@ impl Worker {
             s_coords,
             tables,
             packets,
+            packets_alt: Vec::new(),
             w,
             scratch,
             pair_buf: Vec::new(),
             mirror_buf: Vec::new(),
             spec_buf: Vec::new(),
+        }
+    }
+
+    /// Size the second packet-buffer set for pipelined execution. Called
+    /// by the batch drivers before entering the depth-2 pipeline; the
+    /// first call allocates (warm-up), subsequent calls see full-length
+    /// buffers and do nothing, so the steady state stays allocation-free.
+    // Lazily-reached plan-time construction, like `Worker::new`.
+    #[allow(clippy::disallowed_macros)]
+    pub fn ensure_pipeline_buffers(&mut self) {
+        if self.packets_alt.len() != self.plan.num_procs() {
+            self.packets_alt =
+                vec![vec![C64::ZERO; self.plan.packet_len()]; self.plan.num_procs()];
         }
     }
 
@@ -117,6 +138,41 @@ impl Worker {
         // session instead of unpacking garbage.
         ctx.exchange_swap_uniform("fftu-alltoall", &mut self.packets, self.plan.packet_len());
         unpack(&self.plan, &self.packets, &mut self.w);
+    }
+
+    /// Superstep 0 into an explicit packet set (`set % 2`; 0 is the
+    /// primary set the blocking path uses): local multidimensional FFT +
+    /// fused twiddle/pack, exactly as [`Worker::superstep0`]. The
+    /// pipelined batch drivers alternate sets so entry `i + 1` packs
+    /// while entry `i`'s packets are still in flight. Set 1 must have
+    /// been sized by [`Worker::ensure_pipeline_buffers`].
+    pub fn superstep0_set(&mut self, local: &mut [C64], dir: Direction, set: usize) {
+        self.plan.nd_plan.execute(local, &mut self.scratch, dir);
+        let packets = if set % 2 == 0 { &mut self.packets } else { &mut self.packets_alt };
+        pack_twiddle(&self.plan, &self.tables, local, packets, dir);
+    }
+
+    /// Split-phase half of [`Worker::superstep1`]: deposit packet set
+    /// `set % 2` into the mailbox and return without waiting
+    /// ([`Ctx::exchange_start`]). Until the matching
+    /// [`Worker::exchange_finish_set`], this rank may only run local
+    /// computation (e.g. the next entry's [`Worker::superstep0_set`]
+    /// into the *other* set).
+    pub fn exchange_start_set(&mut self, ctx: &mut Ctx, set: usize) {
+        let packets = if set % 2 == 0 { &mut self.packets } else { &mut self.packets_alt };
+        ctx.exchange_start("fftu-alltoall", packets);
+    }
+
+    /// Finish the in-flight all-to-all on packet set `set % 2`
+    /// ([`Ctx::exchange_finish`]: barrier, collect with the compiled
+    /// uniform `packet_len` expectation, ledger charges) and unpack
+    /// `W^{(s)}` — together with `exchange_start_set`, exactly the work
+    /// of [`Worker::superstep1`].
+    pub fn exchange_finish_set(&mut self, ctx: &mut Ctx, set: usize) {
+        let words = self.plan.packet_len();
+        let packets = if set % 2 == 0 { &mut self.packets } else { &mut self.packets_alt };
+        ctx.exchange_finish(packets, words);
+        unpack(&self.plan, packets, &mut self.w);
     }
 
     /// Superstep 2: strided `F_{p_1} (x) ... (x) F_{p_d}` transforms of
@@ -152,6 +208,37 @@ impl Worker {
         ctx.begin_comp("fftu-superstep2");
         ctx.charge_flops(self.plan.flops_superstep2());
         self.superstep2(local, dir);
+    }
+
+    /// Pipelined-engine slice of [`Worker::execute`]: open the
+    /// superstep-0 computation on the ledger (same label and flop
+    /// charges as the blocking path) and pack into set `set % 2`.
+    pub fn pipelined_superstep0(
+        &mut self,
+        ctx: &mut Ctx,
+        local: &mut [C64],
+        dir: Direction,
+        set: usize,
+    ) {
+        ctx.begin_comp("fftu-superstep0");
+        ctx.charge_flops(self.plan.flops_superstep0() + self.plan.flops_twiddle());
+        self.superstep0_set(local, dir, set);
+    }
+
+    /// Pipelined-engine tail of [`Worker::execute`]: finish set
+    /// `set % 2`'s in-flight all-to-all, then run superstep 2 into
+    /// `out`, with the blocking path's exact ledger charges.
+    pub fn pipelined_finish_superstep2(
+        &mut self,
+        ctx: &mut Ctx,
+        out: &mut [C64],
+        dir: Direction,
+        set: usize,
+    ) {
+        self.exchange_finish_set(ctx, set);
+        ctx.begin_comp("fftu-superstep2");
+        ctx.charge_flops(self.plan.flops_superstep2());
+        self.superstep2(out, dir);
     }
 
     /// The pre-PR execute path, retained for the benchmark trajectory:

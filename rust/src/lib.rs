@@ -28,7 +28,7 @@
 //! let fwd = Transform::new(&[16, 16]).procs(4).auto()?;
 //! let chosen = fwd.chosen().expect("auto plans expose their pick");
 //! assert_eq!(chosen.algorithm(), Algorithm::Fftu);
-//! let y = fwd.execute(&x)?;
+//! let y = fwd.execute(&x)?.complex();
 //! // FFTU's headline property: exactly ONE communication superstep.
 //! assert_eq!(y.report.comm_supersteps(), 1);
 //!
@@ -39,13 +39,13 @@
 //!     .inverse()
 //!     .normalization(Normalization::ByN)
 //!     .plan(Algorithm::Fftu)?;
-//! let z = inv.execute(&y.output)?;
+//! let z = inv.execute(&y.output)?.complex();
 //! assert!(max_abs_diff(&z.output, &x) < 1e-9);
 //!
 //! // Swap the algorithm, keep the descriptor: Popovici's d-step pays d
 //! // all-to-alls for the same transform.
 //! let pop = Transform::new(&[16, 16]).procs(4).plan(Algorithm::Popovici)?;
-//! assert_eq!(pop.execute(&x)?.report.comm_supersteps(), 2);
+//! assert_eq!(pop.execute(&x)?.report().comm_supersteps(), 2);
 //! # Ok::<(), fftu::FftError>(())
 //! ```
 //!
@@ -60,7 +60,9 @@
 //!
 //! let x: Vec<f64> = (0..128).map(|i| (0.1 * i as f64).sin()).collect();
 //! let fwd = Transform::new(&[8, 16]).procs(2).r2c().plan(Algorithm::Fftu)?;
-//! let spec = fwd.execute_r2c(&x)?;
+//! // One front door for every kind: the typed buffer (here real
+//! // samples) is routed by the plan's Kind; r2c yields complex bins.
+//! let spec = fwd.execute(&x)?.complex();
 //! assert_eq!(spec.output.len(), 8 * (16 / 2 + 1)); // numpy rfftn layout
 //! assert_eq!(spec.report.comm_supersteps(), 1);    // still ONE all-to-all
 //!
@@ -69,7 +71,7 @@
 //!     .c2r()
 //!     .normalization(Normalization::ByN)
 //!     .plan(Algorithm::Fftu)?;
-//! let back = inv.execute_c2r(&spec.output)?;
+//! let back = inv.execute(&spec.output)?.real();
 //! let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
 //! assert!(err < 1e-10);
 //! # Ok::<(), fftu::FftError>(())
@@ -87,12 +89,12 @@
 //!
 //! let x: Vec<f64> = (0..256).map(|i| (0.05 * i as f64).cos()).collect();
 //! let fwd = Transform::new(&[16, 16]).procs(4).kind(Kind::Dct2).plan(Algorithm::Fftu)?;
-//! let coeff = fwd.execute_trig(&x)?;
+//! let coeff = fwd.execute(&x)?.real();
 //! assert_eq!(coeff.output.len(), 256);              // real coefficients, same shape
 //! assert_eq!(coeff.report.comm_supersteps(), 1);    // still ONE all-to-all
 //!
 //! let inv = Transform::new(&[16, 16]).procs(4).kind(Kind::Dct3).plan(Algorithm::Fftu)?;
-//! let back = inv.execute_trig(&coeff.output)?;
+//! let back = inv.execute(&coeff.output)?.real();
 //! let scale = (2.0 * 16.0) * (2.0 * 16.0); // prod_l (2 n_l)
 //! assert!(x.iter().zip(&back.output).all(|(a, b)| (b / scale - a).abs() < 1e-9));
 //! # Ok::<(), fftu::FftError>(())
@@ -115,7 +117,7 @@
 //!     .plan(Algorithm::Fftu)?;
 //! let zz = Transform::new(&[18, 16]).grid(&[3, 4]).kind(Kind::Dct2).zigzag()
 //!     .plan(Algorithm::Fftu)?;
-//! let (a, b) = (gathered.execute_trig(&x)?, zz.execute_trig(&x)?);
+//! let (a, b) = (gathered.execute(&x)?.real(), zz.execute(&x)?.real());
 //! assert_eq!(a.output, b.output);          // bit-identical
 //! // Still exactly ONE all-to-all; the conversions are pairwise only.
 //! let alltoalls = b.report.supersteps.iter()
@@ -129,18 +131,23 @@
 //! per-rank communication schedule (no payload is touched) and checks
 //! it against the [`analysis`] lint suite — collective matching,
 //! pairwise partner symmetry, flow conservation against the analytic
-//! cost model, the single-all-to-all invariant, and arena session
-//! safety. The `fftu analyze` CLI command prints the per-rank schedule
+//! cost model, the single-all-to-all invariant, arena session safety,
+//! and the split-phase pairing discipline of the pipelined batch
+//! drivers. The `fftu analyze` CLI command prints the per-rank schedule
 //! table and lint verdicts for any (algorithm, kind, dist, grid); `fftu
-//! analyze --all` sweeps every supported combination and exits nonzero
-//! on any violation:
+//! analyze --all` sweeps every supported combination — pipelined batch
+//! schedules included — and exits nonzero on any violation:
 //!
 //! ```
 //! use fftu::api::{Algorithm, Transform};
 //!
 //! let plan = Transform::new(&[16, 16]).procs(4).plan(Algorithm::Fftu)?;
 //! let report = plan.analyze()?;
-//! assert!(report.passed()); // all five lints, before any execute
+//! assert!(report.passed()); // all six lints, before any execute
+//! // The depth-2 software-pipelined schedule a 4-entry batch will run
+//! // (entry i's all-to-all in flight under entry i+1's superstep 0)
+//! // is verifiable the same way.
+//! assert!(plan.analyze_pipelined(4)?.passed());
 //! # Ok::<(), fftu::FftError>(())
 //! ```
 //!
@@ -260,7 +267,8 @@ pub mod testing;
 
 pub use analysis::{Lint, LintOutcome, ScheduleReport};
 pub use api::{
-    plan_auto, Algorithm, CacheStats, DistFft, DistStrategy, Execution, FftError, Grid, Kind,
-    Normalization, PlanCache, PlannerMode, RealExecution, ScoredCandidate, Transform,
+    plan_auto, Algorithm, BatchIo, BatchOut, CacheStats, DistFft, DistStrategy, Execution,
+    FftError, Grid, Kind, Normalization, PlanCache, PlannerMode, RealExecution, ScoredCandidate,
+    Transform,
 };
 pub use fft::{C64, Direction};

@@ -94,11 +94,11 @@ fn execute_once(
         Kind::C2C => {
             let global: Vec<C64> =
                 (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect();
-            Ok(planned.execute(&global)?.report)
+            Ok(planned.execute_one(&global)?.into_report())
         }
-        Kind::R2C => {
+        Kind::R2C | Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
             let global: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
-            Ok(planned.execute_r2c(&global)?.report)
+            Ok(planned.execute_one(&global)?.into_report())
         }
         Kind::C2R => {
             // The timed region receives a genuine Hermitian
@@ -106,11 +106,7 @@ fn execute_once(
             // the run is representative.
             let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
             let spec = realnd::rfftn(&x, shape);
-            Ok(planned.execute_c2r(&spec)?.report)
-        }
-        Kind::Dct2 | Kind::Dct3 | Kind::Dst2 | Kind::Dst3 => {
-            let global: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
-            Ok(planned.execute_trig(&global)?.report)
+            Ok(planned.execute_one(&spec)?.into_report())
         }
     }
 }
@@ -172,32 +168,6 @@ pub fn measure_warm_kind(
     let t0 = Instant::now();
     let report = execute_once(&planned, kind, shape, &mut rng)?;
     Ok((t0.elapsed().as_secs_f64(), report))
-}
-
-/// Renamed to [`measure_cold`]: the old name did not say the clock
-/// includes plan construction.
-#[deprecated(note = "renamed to `measure_cold`; use `measure_warm` for plan-excluded timing")]
-pub fn measure_once(
-    algo: Algorithm,
-    shape: &[usize],
-    p: usize,
-    pgrid: Option<&[usize]>,
-) -> Result<(f64, CostReport), FftError> {
-    measure_cold(algo, shape, p, pgrid)
-}
-
-/// Renamed to [`measure_cold_kind`]; see [`measure_once`].
-#[deprecated(
-    note = "renamed to `measure_cold_kind`; use `measure_warm_kind` for plan-excluded timing"
-)]
-pub fn measure_once_kind(
-    algo: Algorithm,
-    kind: Kind,
-    shape: &[usize],
-    p: usize,
-    pgrid: Option<&[usize]>,
-) -> Result<(f64, CostReport), FftError> {
-    measure_cold_kind(algo, kind, shape, p, pgrid)
 }
 
 #[cfg(test)]
@@ -268,13 +238,4 @@ mod tests {
         }
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_aliases_still_measure() {
-        let (wall, _) = measure_once(Algorithm::Fftu, &[8, 8], 2, None).unwrap();
-        assert!(wall > 0.0);
-        let (wall, _) =
-            measure_once_kind(Algorithm::Fftu, Kind::Dct2, &[8, 8], 2, None).unwrap();
-        assert!(wall > 0.0);
-    }
 }

@@ -10,7 +10,5 @@ pub mod tables;
 pub use measure::{
     measure_cold, measure_cold_kind, measure_fftu, measure_warm, measure_warm_kind,
 };
-#[allow(deprecated)]
-pub use measure::{measure_once, measure_once_kind};
 pub use table::{fmt_secs, fmt_speedup, Table};
 pub use tables::{comm_steps_table, pmax_table, table_4_1_model, table_4_2_model, table_4_3_model, table_executed};

@@ -376,16 +376,17 @@ fn steady_state_execute_with_armed_fault_plan_is_allocation_free() {
     // allocations. The per-superstep fault lookup is a linear scan over
     // the plan's preallocated table, and the deadline rides the condvar
     // wait — no buffers, no boxing.
-    use fftu::bsp::{try_run_spmd_with, Ctx, FaultKind, FaultPlan, SpmdOptions};
+    use fftu::bsp::{try_run_spmd_with, Ctx, ExecOptions, FaultKind, FaultPlan};
     let planner = Planner::new();
     let plan = Arc::new(FftuPlan::new(&[16, 16], &[2, 2], &planner).unwrap());
     let p = plan.num_procs();
     let arena = ExecArena::new(p);
     let n = plan.total();
     let global: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -0.5 * i as f64)).collect();
-    let opts = SpmdOptions::default()
-        .with_deadline(std::time::Duration::from_secs(120))
-        .inject(FaultPlan::new().with(0, 999, FaultKind::Panic));
+    let opts = ExecOptions::builder()
+        .deadline(std::time::Duration::from_secs(120))
+        .faults(FaultPlan::new().with(0, 999, FaultKind::Panic))
+        .build();
     try_run_spmd_with(p, opts, |ctx: &mut Ctx| {
         let rank = ctx.rank();
         let mut slot = arena.worker(&plan, rank);
@@ -417,6 +418,79 @@ fn steady_state_execute_with_armed_fault_plan_is_allocation_free() {
         count, 0,
         "steady-state execute with armed fault plan allocated {count} times (16x16/[2,2])"
     );
+}
+
+#[test]
+fn steady_state_pipelined_batch_is_allocation_free() {
+    let _serial = serial();
+    // The depth-2 pipelined batch engine adds the alternate packet set
+    // and the split-phase all-to-all to the per-rank loop: superstep 0
+    // packs entry i+1 into one set while entry i's packets are in
+    // flight through the other. Once the warm-up round has sized both
+    // sets (`ensure_pipeline_buffers` + first batch), a full pipelined
+    // round must touch the allocator not at all on any rank — the
+    // in-flight buffers circulate by pointer swap exactly like the
+    // blocking exchange's.
+    let planner = Planner::new();
+    let plan = Arc::new(FftuPlan::new(&[16, 16], &[2, 2], &planner).unwrap());
+    let p = plan.num_procs();
+    let arena = ExecArena::new(p);
+    let n = plan.total();
+    let b = 4usize;
+    let globals: Vec<Vec<C64>> = (0..b)
+        .map(|e| (0..n).map(|i| C64::new((i + e) as f64, -0.5 * i as f64)).collect())
+        .collect();
+    run_spmd(p, |ctx| {
+        let rank = ctx.rank();
+        let mut slot = arena.worker(&plan, rank);
+        let worker = slot.as_mut().unwrap();
+        worker.ensure_pipeline_buffers();
+        let mut locals: Vec<Vec<C64>> =
+            (0..b).map(|_| vec![C64::ZERO; plan.local_len()]).collect();
+        let mut round =
+            |ctx: &mut fftu::bsp::Ctx, worker: &mut fftu::fftu::Worker, locals: &mut [Vec<C64>]| {
+                for (e, local) in locals.iter_mut().enumerate() {
+                    plan.scatter_rank_into(&globals[e], rank, local);
+                }
+                worker.pipelined_superstep0(ctx, &mut locals[0], Direction::Forward, 0);
+                worker.exchange_start_set(ctx, 0);
+                for i in 0..b {
+                    if i + 1 < b {
+                        worker.pipelined_superstep0(
+                            ctx,
+                            &mut locals[i + 1],
+                            Direction::Forward,
+                            i + 1,
+                        );
+                    }
+                    worker.pipelined_finish_superstep2(ctx, &mut locals[i], Direction::Forward, i);
+                    if i + 1 < b {
+                        worker.exchange_start_set(ctx, i + 1);
+                    }
+                }
+            };
+        // Warm-up: first pipelined batch builds every buffer once.
+        round(ctx, worker, &mut locals);
+        // Three ledger records per entry (2 comp + 1 comm) plus slack.
+        ctx.ledger.reserve(4 * b + 4);
+        ctx.barrier();
+        if rank == 0 {
+            ALLOCS.store(0, Ordering::SeqCst);
+            REALLOCS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        // Measured region: the steady-state pipelined batch round.
+        round(ctx, worker, &mut locals);
+        ctx.barrier();
+        if rank == 0 {
+            COUNTING.store(false, Ordering::SeqCst);
+        }
+        ctx.barrier();
+        std::hint::black_box(&locals);
+    });
+    let count = ALLOCS.load(Ordering::SeqCst) + REALLOCS.load(Ordering::SeqCst);
+    assert_eq!(count, 0, "steady-state pipelined batch allocated {count} times (16x16/[2,2] b=4)");
 }
 
 #[test]

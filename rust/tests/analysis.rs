@@ -320,6 +320,166 @@ fn mutation_comm_outside_session_fires_session_safety() {
 }
 
 // ---------------------------------------------------------------------
+// Pipelined batch schedules: the sweep and the split-phase mutations.
+// ---------------------------------------------------------------------
+
+#[test]
+fn sweep_pipelined_batch_schedules_every_fftu_kind() {
+    // Gathered: every kind through the FFTU core. The raw schedule must
+    // carry one split-phase start/finish pair per batch entry, and the
+    // full lint suite (split-phase pairing included) must pass against
+    // the analytic ledger replayed in pipelined-executed order.
+    let batch = 4;
+    for kind in ALL_KINDS {
+        let t = Transform::new(&[16, 16]).kind(kind).procs(4);
+        let planned = t.plan(Algorithm::Fftu).expect("planning failed");
+        let report = planned.analyze_pipelined(batch).expect("analysis failed");
+        assert!(report.passed(), "{kind:?}: lint violations:\n{}", report.render());
+        let starts = report.schedule.ranks[0]
+            .iter()
+            .filter(|e| matches!(e, Event::ExchangeStart { .. }))
+            .count();
+        let finishes = report.schedule.ranks[0]
+            .iter()
+            .filter(|e| matches!(e, Event::ExchangeFinish { .. }))
+            .count();
+        assert_eq!((starts, finishes), (batch, batch), "{kind:?}");
+        // Per-entry invariants survive the reorder: one charged
+        // all-to-all per entry in the pipelined analytic ledger.
+        assert_eq!(report.analytic.comm_supersteps(), batch, "{kind:?}");
+    }
+    // Zig-zag: the pairwise conversion/mirror supersteps must never
+    // overlap a flight window (the split-phase lint would fire).
+    for kind in [Kind::R2C, Kind::C2R] {
+        let t = Transform::new(&[18, 8]).grid(&[3, 2]).kind(kind).zigzag();
+        let planned = t.plan(Algorithm::Fftu).expect("planning failed");
+        let report = planned.analyze_pipelined(3).expect("analysis failed");
+        assert!(report.passed(), "{kind:?}: lint violations:\n{}", report.render());
+    }
+    for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+        let t = Transform::new(&[18, 16]).grid(&[3, 4]).kind(kind).zigzag();
+        let planned = t.plan(Algorithm::Fftu).expect("planning failed");
+        let report = planned.analyze_pipelined(3).expect("analysis failed");
+        assert!(report.passed(), "{kind:?}: lint violations:\n{}", report.render());
+    }
+}
+
+/// The pipelined c2c batch report the split-phase mutations start from:
+/// depth-2 pipeline over 3 entries, raw schedule carrying 3 start/finish
+/// pairs per rank.
+fn pipelined_report() -> ScheduleReport {
+    let planned = Transform::new(&[16, 16])
+        .procs(4)
+        .plan(Algorithm::Fftu)
+        .expect("planning failed");
+    let report = planned.analyze_pipelined(3).expect("analysis failed");
+    assert!(report.passed(), "seed schedule must be clean:\n{}", report.render());
+    report
+}
+
+#[test]
+fn mutation_dropped_finish_fires_split_phase() {
+    let mut report = pipelined_report();
+    let i = position(&report, |e| matches!(e, Event::ExchangeFinish { .. }));
+    // Every rank skips the first finish: the next start reuses the
+    // packet buffers while entry 0's packets still sit in the mailbox.
+    for events in &mut report.schedule.ranks {
+        events.remove(i);
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SplitPhase)
+            .iter()
+            .any(|v| v.contains("still in flight")),
+        "expected an in-flight reuse violation:\n{}",
+        report.render()
+    );
+    assert!(!report.passed());
+}
+
+#[test]
+fn mutation_orphan_finish_fires_split_phase() {
+    let mut report = pipelined_report();
+    let i = position(&report, |e| matches!(e, Event::ExchangeStart { .. }));
+    // Every rank drops the first start: its finish has nothing to pair
+    // with.
+    for events in &mut report.schedule.ranks {
+        events.remove(i);
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SplitPhase)
+            .iter()
+            .any(|v| v.contains("without a matching exchange_start")),
+        "expected an orphan-finish violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_double_start_fires_split_phase() {
+    let mut report = pipelined_report();
+    let i = position(&report, |e| matches!(e, Event::ExchangeStart { .. }));
+    let p = report.schedule.nprocs();
+    for events in &mut report.schedule.ranks {
+        events.insert(
+            i,
+            Event::ExchangeStart { label: "fftu-alltoall", send_counts: vec![0; p] },
+        );
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SplitPhase)
+            .iter()
+            .any(|v| v.contains("reused before the finish drains")),
+        "expected a double-start violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_never_finished_start_fires_split_phase() {
+    let mut report = pipelined_report();
+    // Drop the LAST finish on every rank: the final start stays in
+    // flight when the schedule ends — stranded packets.
+    for events in &mut report.schedule.ranks {
+        let i = events
+            .iter()
+            .rposition(|e| matches!(e, Event::ExchangeFinish { .. }))
+            .expect("pipelined seed has finishes");
+        events.remove(i);
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SplitPhase)
+            .iter()
+            .any(|v| v.contains("never finished")),
+        "expected a stranded-packets violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_blocking_comm_during_flight_fires_split_phase() {
+    let mut report = pipelined_report();
+    let i = position(&report, |e| matches!(e, Event::ExchangeStart { .. }));
+    // A pairwise exchange lands inside the flight window on every rank
+    // (self-paired, zero words — harmless to every other lint's pair
+    // math, but the mailbox slots are occupied).
+    for (rank, events) in report.schedule.ranks.iter_mut().enumerate() {
+        events.insert(i + 1, Event::Pairwise { label: "smuggled-swap", partner: rank, words: 0 });
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SplitPhase)
+            .iter()
+            .any(|v| v.contains("overlaps the in-flight")),
+        "expected an overlapping-communication violation:\n{}",
+        report.render()
+    );
+}
+
+// ---------------------------------------------------------------------
 // Pairwise-exchange edge cases.
 // ---------------------------------------------------------------------
 

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use fftu::api::{plan, Algorithm, DistFft, FftError, Normalization, PlanCache, Transform};
+use fftu::api::{plan, Algorithm, BatchIo, DistFft, FftError, Normalization, PlanCache, Transform};
 use fftu::baselines::OutputDist;
 use fftu::fft::realnd::rfftn;
 use fftu::fft::{dft_nd, max_abs_diff, rel_l2_error, C64};
@@ -47,7 +47,7 @@ fn every_algorithm_matches_the_naive_dft_oracle() {
         for algo in all_algorithms(shape.len()) {
             let t = Transform::new(&shape).procs(p);
             let planned = plan(algo, &t).unwrap_or_else(|e| panic!("{algo:?}: {e}"));
-            let got = planned.execute(&x).unwrap();
+            let got = planned.execute(&x).unwrap().complex();
             let err = rel_l2_error(&got.output, &want);
             assert!(err < 1e-8, "{algo:?} on {shape:?} p={p}: err {err}");
         }
@@ -61,13 +61,13 @@ fn every_algorithm_roundtrips_under_by_n_normalization() {
     let x = rand_global(n, 0xC0F1);
     for algo in all_algorithms(3) {
         let fwd = plan(algo, &Transform::new(&shape).procs(4)).unwrap();
-        let y = fwd.execute(&x).unwrap();
+        let y = fwd.execute(&x).unwrap().complex();
         let inv = plan(
             algo,
             &Transform::new(&shape).procs(4).inverse().normalization(Normalization::ByN),
         )
         .unwrap();
-        let z = inv.execute(&y.output).unwrap();
+        let z = inv.execute(&y.output).unwrap().complex();
         let err = max_abs_diff(&z.output, &x);
         assert!(err < 1e-9, "{algo:?}: roundtrip err {err}");
     }
@@ -91,7 +91,7 @@ fn unitary_normalization_roundtrips_symmetrically() {
                 .normalization(Normalization::Unitary),
         )
         .unwrap();
-        let z = inv.execute(&fwd.execute(&x).unwrap().output).unwrap();
+        let z = inv.execute(&fwd.execute(&x).unwrap().complex().output).unwrap().complex();
         assert!(max_abs_diff(&z.output, &x) < 1e-9, "{algo:?}");
     }
 }
@@ -114,7 +114,7 @@ fn comm_superstep_counts_match_the_documented_formulas() {
         Algorithm::Popovici,
     ] {
         let planned = plan(algo, &Transform::new(&shape).procs(4)).unwrap();
-        let exec = planned.execute(&x).unwrap();
+        let exec = planned.execute(&x).unwrap().complex();
         assert_eq!(
             exec.report.comm_supersteps(),
             algo.comm_supersteps(d),
@@ -132,7 +132,7 @@ fn batched_execution_transforms_each_item_and_amortizes_state() {
     for algo in all_algorithms(2) {
         let t = Transform::new(&shape).procs(4).batch(batch);
         let planned = plan(algo, &t).unwrap();
-        let exec = planned.execute_batch(&x).unwrap();
+        let exec = planned.execute(&x).unwrap().complex();
         assert_eq!(exec.output.len(), batch * n);
         for b in 0..batch {
             let want = dft_nd(&x[b * n..(b + 1) * n], &shape, Direction::Forward);
@@ -154,7 +154,7 @@ fn r2c_matches_the_rfftn_oracle_across_all_algorithms() {
         for algo in all_algorithms(shape.len()) {
             let t = Transform::new(&shape).procs(p).r2c();
             let planned = plan(algo, &t).unwrap_or_else(|e| panic!("{algo:?} r2c: {e}"));
-            let got = planned.execute_r2c(&x).unwrap();
+            let got = planned.execute(&x).unwrap().complex();
             assert_eq!(got.output.len(), t.spectrum_total());
             let err = rel_l2_error(&got.output, &want);
             assert!(err < 1e-10, "{algo:?} r2c on {shape:?} p={p}: err {err}");
@@ -168,13 +168,13 @@ fn c2r_roundtrips_r2c_across_all_algorithms() {
     let x = rand_real(512, 0xC0F8);
     for algo in all_algorithms(3) {
         let fwd = plan(algo, &Transform::new(&shape).procs(4).r2c()).unwrap();
-        let spec = fwd.execute_r2c(&x).unwrap();
+        let spec = fwd.execute(&x).unwrap().complex();
         let inv = plan(
             algo,
             &Transform::new(&shape).procs(4).c2r().normalization(Normalization::ByN),
         )
         .unwrap();
-        let back = inv.execute_c2r(&spec.output).unwrap();
+        let back = inv.execute(&spec.output).unwrap().real();
         let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         assert!(err < 1e-10, "{algo:?}: c2r∘r2c err {err}");
     }
@@ -190,7 +190,7 @@ fn batched_r2c_transforms_each_item() {
     let nspec = t.spectrum_total();
     for algo in all_algorithms(2) {
         let planned = plan(algo, &t).unwrap();
-        let exec = planned.execute_r2c_batch(&x).unwrap();
+        let exec = planned.execute(&x).unwrap().complex();
         assert_eq!(exec.output.len(), batch * nspec);
         for b in 0..batch {
             let want = rfftn(&x[b * n..(b + 1) * n], &shape);
@@ -225,7 +225,7 @@ fn facade_is_usable_through_the_trait_object() {
         .map(|a| -> Arc<dyn DistFft> { plan(a, &Transform::new(&[16, 16]).procs(4)).unwrap() })
         .collect();
     for p in &plans {
-        let got = p.execute(&x).unwrap();
+        let got = p.execute(BatchIo::Complex(&x)).unwrap().complex();
         assert!(
             rel_l2_error(&got.output, &want) < 1e-8,
             "{:?} via dyn DistFft",

@@ -15,7 +15,7 @@
 use std::time::Duration;
 
 use fftu::api::{plan, Algorithm, FftError, PlanCache, PlannedFft, Transform};
-use fftu::bsp::{try_run_spmd_with, FaultKind, FaultPlan, SpmdOptions};
+use fftu::bsp::{try_run_spmd_with, ExecOptions, FaultKind, FaultPlan};
 use fftu::fft::{dft_nd, rel_l2_error, C64};
 use fftu::testing::Rng;
 use fftu::Direction;
@@ -58,11 +58,12 @@ fn assert_faults_then_recovers(
     faults: FaultPlan,
     what: &str,
 ) {
-    planned.set_exec_options(SpmdOptions::default().inject(faults));
+    planned.set_exec_options(ExecOptions::builder().faults(faults).build());
     let err = planned.execute(x).expect_err(what);
     assert!(is_session_error(&err), "{what}: expected RankFailure/Timeout, got {err:?}");
-    planned.set_exec_options(SpmdOptions::default());
-    let got = planned.execute(x).unwrap_or_else(|e| panic!("{what}: recovery failed: {e}"));
+    planned.set_exec_options(ExecOptions::default());
+    let got =
+        planned.execute(x).unwrap_or_else(|e| panic!("{what}: recovery failed: {e}")).complex();
     assert_bits_eq(&got.output, want, what);
 }
 
@@ -81,7 +82,7 @@ fn fftu_gathered_fault_matrix() {
         let n: usize = shape.iter().product();
         let planned = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid)).unwrap();
         let x = complex_input(n, 0xFA17 + p as u64);
-        let want = planned.execute(&x).unwrap().output;
+        let want = planned.execute(&x).unwrap().complex().output;
         let victim = p - 1;
         for (kind, name) in [
             (FaultKind::Panic, "panic"),
@@ -102,12 +103,9 @@ fn fftu_gathered_fault_matrix() {
 fn panic_report_names_the_victim_rank_and_superstep() {
     let planned = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).grid(&[2, 2])).unwrap();
     let x = complex_input(64, 0x7A9);
-    planned
-        .set_exec_options(SpmdOptions::default().inject(FaultPlan::new().with(
-            2,
-            0,
-            FaultKind::Panic,
-        )));
+    planned.set_exec_options(
+        ExecOptions::builder().faults(FaultPlan::new().with(2, 0, FaultKind::Panic)).build(),
+    );
     match planned.execute(&x).expect_err("injected panic") {
         FftError::RankFailure { rank, superstep, .. } => {
             assert_eq!(rank, 2);
@@ -124,15 +122,15 @@ fn panic_report_names_the_victim_rank_and_superstep() {
 fn delayed_rank_trips_the_deadline() {
     let planned = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).grid(&[2, 1])).unwrap();
     let x = complex_input(64, 0xDE1A);
-    let want = planned.execute(&x).unwrap().output;
+    let want = planned.execute(&x).unwrap().complex().output;
     let faults = FaultPlan::new().with(1, 0, FaultKind::Delay(Duration::from_millis(400)));
     planned.set_exec_options(
-        SpmdOptions::default().with_deadline(Duration::from_millis(40)).inject(faults),
+        ExecOptions::builder().deadline(Duration::from_millis(40)).faults(faults).build(),
     );
     let err = planned.execute(&x).expect_err("deadline must fire");
     assert!(matches!(err, FftError::Timeout { .. }), "expected Timeout, got {err:?}");
-    planned.set_exec_options(SpmdOptions::default());
-    let got = planned.execute(&x).expect("recovery after timeout").output;
+    planned.set_exec_options(ExecOptions::default());
+    let got = planned.execute(&x).expect("recovery after timeout").complex().output;
     assert_bits_eq(&got, &want, "timeout recovery");
 }
 
@@ -143,12 +141,12 @@ fn delayed_rank_trips_the_deadline() {
 fn sub_deadline_delay_is_harmless() {
     let planned = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).grid(&[2, 1])).unwrap();
     let x = complex_input(64, 0x510);
-    let want = planned.execute(&x).unwrap().output;
+    let want = planned.execute(&x).unwrap().complex().output;
     let faults = FaultPlan::new().with(0, 0, FaultKind::Delay(Duration::from_millis(20)));
     planned.set_exec_options(
-        SpmdOptions::default().with_deadline(Duration::from_secs(30)).inject(faults),
+        ExecOptions::builder().deadline(Duration::from_secs(30)).faults(faults).build(),
     );
-    let got = planned.execute(&x).expect("sub-deadline delay").output;
+    let got = planned.execute(&x).expect("sub-deadline delay").complex().output;
     assert_bits_eq(&got, &want, "sub-deadline delay");
 }
 
@@ -163,27 +161,27 @@ fn zigzag_r2c_faults_at_each_superstep() {
     let t = Transform::new(&[4, 36]).grid(&[1, 3]).r2c().zigzag();
     let planned = plan(Algorithm::Fftu, &t).unwrap();
     let x = real_input(144, 0x52C);
-    let want = planned.execute_r2c(&x).unwrap().output;
+    let want = planned.execute(&x).unwrap().complex().output;
     for step in [0usize, 1] {
         let faults = FaultPlan::new().with(1, step, FaultKind::Panic);
-        planned.set_exec_options(SpmdOptions::default().inject(faults));
-        let err = planned.execute_r2c(&x).expect_err("injected panic");
+        planned.set_exec_options(ExecOptions::builder().faults(faults).build());
+        let err = planned.execute(&x).expect_err("injected panic");
         assert!(
             matches!(err, FftError::RankFailure { rank: 1, .. }),
             "zig-zag r2c panic@1:{step}: got {err:?}"
         );
-        planned.set_exec_options(SpmdOptions::default());
-        let got = planned.execute_r2c(&x).expect("recovery").output;
+        planned.set_exec_options(ExecOptions::default());
+        let got = planned.execute(&x).expect("recovery").complex().output;
         assert_bits_eq(&got, &want, &format!("zig-zag r2c recovery after panic@1:{step}"));
     }
     // A dropped packet at the core all-to-all is caught by the uniform
     // receive-count expectation on the receiving rank.
     let faults = FaultPlan::new().with(2, 0, FaultKind::DropPacket { to: 0 });
-    planned.set_exec_options(SpmdOptions::default().inject(faults));
-    let err = planned.execute_r2c(&x).expect_err("dropped packet");
+    planned.set_exec_options(ExecOptions::builder().faults(faults).build());
+    let err = planned.execute(&x).expect_err("dropped packet");
     assert!(is_session_error(&err), "zig-zag r2c drop@2:0: got {err:?}");
-    planned.set_exec_options(SpmdOptions::default());
-    let got = planned.execute_r2c(&x).expect("recovery").output;
+    planned.set_exec_options(ExecOptions::default());
+    let got = planned.execute(&x).expect("recovery").complex().output;
     assert_bits_eq(&got, &want, "zig-zag r2c recovery after drop");
 }
 
@@ -195,7 +193,7 @@ fn zigzag_r2c_faults_at_each_superstep() {
 fn slab_baseline_faults_at_each_superstep() {
     let planned = plan(Algorithm::slab(), &Transform::new(&[8, 8]).procs(2)).unwrap();
     let x = complex_input(64, 0x51AB);
-    let want = planned.execute(&x).unwrap().output;
+    let want = planned.execute(&x).unwrap().complex().output;
     for step in [0usize, 1] {
         for (kind, name) in
             [(FaultKind::Panic, "panic"), (FaultKind::DropPacket { to: 0 }, "drop")]
@@ -216,18 +214,16 @@ fn poisoned_cached_plan_matches_fresh_plan_bit_for_bit() {
     let t = Transform::new(&[8, 8]).grid(&[2, 2]);
     let cached = cache.plan(Algorithm::Fftu, &t).unwrap();
     let x = complex_input(64, 0xCAC8);
-    cached.set_exec_options(SpmdOptions::default().inject(FaultPlan::new().with(
-        3,
-        0,
-        FaultKind::Panic,
-    )));
+    cached.set_exec_options(
+        ExecOptions::builder().faults(FaultPlan::new().with(3, 0, FaultKind::Panic)).build(),
+    );
     let err = cached.execute(&x).expect_err("injected panic");
     assert!(is_session_error(&err), "{err:?}");
-    cached.set_exec_options(SpmdOptions::default());
+    cached.set_exec_options(ExecOptions::default());
     // Re-planning through the cache returns the same (now-recovered) Arc.
     let again = cache.plan(Algorithm::Fftu, &t).unwrap();
-    let got = again.execute(&x).expect("poisoned cached plan must recover").output;
-    let fresh = plan(Algorithm::Fftu, &t).unwrap().execute(&x).unwrap().output;
+    let got = again.execute(&x).expect("poisoned cached plan must recover").complex().output;
+    let fresh = plan(Algorithm::Fftu, &t).unwrap().execute(&x).unwrap().complex().output;
     assert_bits_eq(&got, &fresh, "cached-vs-fresh after poisoning");
 }
 
@@ -241,9 +237,9 @@ fn auto_plan_fails_over_to_next_candidate() {
     let x = complex_input(256, 0xA070);
     let want = dft_nd(&x, &[16, 16], Direction::Forward);
     auto_plan.set_exec_options(
-        SpmdOptions::default().inject(FaultPlan::new().with(0, 0, FaultKind::Panic)),
+        ExecOptions::builder().faults(FaultPlan::new().with(0, 0, FaultKind::Panic)).build(),
     );
-    let out = auto_plan.execute(&x).expect("auto failover must succeed").output;
+    let out = auto_plan.execute(&x).expect("auto failover must succeed").complex().output;
     assert!(
         rel_l2_error(&out, &want) < 1e-10,
         "failover output disagrees with the DFT oracle: {}",
@@ -259,7 +255,7 @@ fn all_panicking_ranks_are_reported() {
     let p = 4;
     let faults =
         FaultPlan::new().with(0, 0, FaultKind::Panic).with(2, 0, FaultKind::Panic);
-    let err = try_run_spmd_with(p, SpmdOptions::default().inject(faults), |ctx| {
+    let err = try_run_spmd_with(p, ExecOptions::builder().faults(faults).build(), |ctx| {
         let mut bufs: Vec<Vec<C64>> = (0..p).map(|_| vec![C64::ZERO; 4]).collect();
         ctx.exchange_swap("matrix-a2a", &mut bufs);
     })
@@ -278,10 +274,57 @@ fn all_panicking_ranks_are_reported() {
 fn parsed_fault_spec_fires() {
     let planned = plan(Algorithm::Fftu, &Transform::new(&[8, 8]).grid(&[2, 1])).unwrap();
     let x = complex_input(64, 0x9A25);
-    let want = planned.execute(&x).unwrap().output;
+    let want = planned.execute(&x).unwrap().complex().output;
     let parsed = FaultPlan::parse("panic@1:0").expect("valid spec");
     assert_faults_then_recovers(&planned, &x, &want, parsed, "parsed panic@1:0");
     for bad in ["panic@1", "explode@0:0", "drop@0:0", "delay@0:0", "trunc@0:0:1"] {
         assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} must be rejected");
+    }
+}
+
+
+/// Pipelined batches address faults by communication-step number: comm
+/// step `i` is entry `i`'s all-to-all, which under the depth-2 pipeline
+/// is *in flight* while entry `i + 1` runs its superstep 0. A fault
+/// injected at an interior entry must surface as a typed `RankFailure`
+/// carrying the victim rank, the exchange's superstep label, and the
+/// in-flight entry's comm step in the detail — and the poisoned arena
+/// must recover bit-identically on the next (pipelined) execute.
+#[test]
+fn pipelined_batch_fault_hits_the_in_flight_entry_and_recovers() {
+    let batch = 6usize;
+    let t = Transform::new(&[8, 8]).grid(&[2, 2]).batch(batch);
+    let planned = plan(Algorithm::Fftu, &t).unwrap();
+    let x = complex_input(batch * 64, 0x1F17);
+    let want = planned.execute(&x).unwrap().complex().output;
+    for (kind, name) in [
+        (FaultKind::Panic, "panic"),
+        (FaultKind::TruncatePacket { to: 0, keep: 1 }, "truncate"),
+    ] {
+        // Entry 2 of 6: its packets fly while entry 3 packs.
+        let faults = FaultPlan::new().with(3, 2, kind);
+        planned.set_exec_options(ExecOptions::builder().faults(faults).build());
+        let err = planned.execute(&x).expect_err("in-flight fault must fire");
+        match &err {
+            FftError::RankFailure { rank, superstep, detail } => {
+                assert_eq!(*superstep, "fftu-alltoall", "{name}: superstep label");
+                if name == "panic" {
+                    // The panic is attributed to the injecting rank and
+                    // names the in-flight entry's exchange index.
+                    assert_eq!(*rank, 3, "{name}: victim rank");
+                    assert!(
+                        detail.contains("communication superstep 2"),
+                        "{name}: detail must name the in-flight entry: {detail}"
+                    );
+                }
+            }
+            other => panic!("{name}: expected RankFailure, got {other:?}"),
+        }
+        planned.set_exec_options(ExecOptions::default());
+        let got = planned
+            .execute(&x)
+            .unwrap_or_else(|e| panic!("{name}: pipelined recovery failed: {e}"))
+            .complex();
+        assert_bits_eq(&got.output, &want, &format!("pipelined recovery after {name}@3:2"));
     }
 }

@@ -245,7 +245,7 @@ fn distributed_r2c_matches_numpy_across_algorithms() {
                         .map(|planned| (p, planned))
                 })
                 .unwrap_or_else(|| panic!("{name}: {algo:?} plans at no p"));
-            let got = planned.execute_r2c(&g.input).unwrap();
+            let got = planned.execute(&g.input).unwrap().complex();
             let err = rel_l2_error(&got.output, &g.output);
             assert!(err < 1e-10, "{name} {algo:?} p={p}: rel err {err}");
         }
@@ -285,7 +285,7 @@ fn irfftn_recovers_numpy_real_input() {
             &Transform::new(&g.shape).procs(2).c2r().normalization(Normalization::ByN),
         )
         .unwrap();
-        let back = planned.execute_c2r(&g.output).unwrap();
+        let back = planned.execute(&g.output).unwrap().real();
         let err =
             g.input.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         assert!(err < 1e-10, "{name}: facade c2r err {err}");
@@ -331,7 +331,7 @@ fn distributed_trig_matches_scipy_across_algorithms() {
                             .map(|planned| (p, planned))
                     })
                     .unwrap_or_else(|| panic!("{name}: {algo:?} {kind:?} plans at no p"));
-                let got = planned.execute_trig(&g.input).unwrap();
+                let got = planned.execute(&g.input).unwrap().real();
                 let err = rel_err_f64(&got.output, want);
                 assert!(err < 1e-10, "{name} {algo:?} {kind:?} p={p}: rel err {err}");
             }

@@ -92,7 +92,8 @@ fn regrid_between_forward_and_inverse() {
         .plan(Algorithm::Fftu)
         .unwrap()
         .execute(&x)
-        .unwrap();
+        .unwrap()
+        .complex();
     let z = Transform::new(&shape)
         .grid(&[2, 4])
         .inverse()
@@ -100,7 +101,8 @@ fn regrid_between_forward_and_inverse() {
         .plan(Algorithm::Fftu)
         .unwrap()
         .execute(&y.output)
-        .unwrap();
+        .unwrap()
+        .complex();
     assert!(max_abs_diff(&z.output, &x) < 1e-9);
 }
 

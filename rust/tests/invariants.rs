@@ -105,7 +105,7 @@ fn prop_fftu_ledger_matches_analytic_and_respects_theorem_2_1() {
         let x = rand_complex(n, rng);
         let planned =
             plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid)).map_err(String::from)?;
-        let executed = planned.execute(&x)?.report;
+        let executed = planned.execute(&x)?.into_report();
         let analytic = fftu_report(&shape, p);
         prop_assert!(
             comm_h(&executed) == comm_h(&analytic),
@@ -177,7 +177,7 @@ fn prop_fftu_trig_ledger_single_superstep_matches_analytic() {
         let kind = *rng.choose(&[Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3]);
         let planned = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(kind))
             .map_err(String::from)?;
-        let executed = planned.execute_trig(&x)?.report;
+        let executed = planned.execute(&x)?.into_report();
         // The §6 closure invariant: the Makhoul permutation folds into
         // the cyclic pack/unpack, so the trig path communicates exactly
         // once — never a second superstep for the reordering.
@@ -223,7 +223,7 @@ fn prop_fftu_zigzag_trig_ledger_matches_analytic_exactly() {
         let planned =
             plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(kind).zigzag())
                 .map_err(String::from)?;
-        let executed = planned.execute_trig(&x)?.report;
+        let executed = planned.execute(&x)?.into_report();
         let analytic = fftu_trig_zigzag_report(&shape, &grid, type2);
         // The executed ledger must equal the analytic report exactly:
         // same superstep sequence, same h on every communication entry.
@@ -287,7 +287,7 @@ fn prop_fftu_zigzag_r2c_c2r_ledger_matches_analytic_exactly() {
         let x: Vec<f64> = (0..n).map(|_| rng.f64_signed()).collect();
         let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag())
             .map_err(String::from)?;
-        let executed = fwd.execute_r2c(&x)?.report;
+        let executed = fwd.execute(&x)?.into_report();
         let analytic = fftu_r2c_zigzag_report(&shape, &grid);
         prop_assert!(
             comm_h(&executed) == comm_h(&analytic),
@@ -305,10 +305,10 @@ fn prop_fftu_zigzag_r2c_c2r_ledger_matches_analytic_exactly() {
             prop_assert!(h <= n / 2 / p, "r2c {shape:?}: h {h} > (N/2)/p");
         }
         // C2R: the pairwise payload may add the Nyquist rows.
-        let spec = fwd.execute_r2c(&x)?.output;
+        let spec = fwd.execute(&x)?.complex().output;
         let inv = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).c2r().zigzag())
             .map_err(String::from)?;
-        let executed = inv.execute_c2r(&spec)?.report;
+        let executed = inv.execute(&spec)?.into_report();
         let analytic = fftu_c2r_zigzag_report(&shape, &grid);
         prop_assert!(
             comm_h(&executed) == comm_h(&analytic),

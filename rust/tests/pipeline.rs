@@ -1,0 +1,218 @@
+//! Differential suite for the depth-2 pipelined batch engine: for every
+//! kind (c2c, r2c, c2r, dct2/dct3/dst2/dst3), gathered and zig-zag,
+//! shapes from 1D to 4D, and batch sizes up to 8, the pipelined run
+//! (`ExecOptions` default, depth 2) must be **bit-identical** to the
+//! strictly-sequential oracle selected by
+//! `ExecOptions::builder().pipeline(1)` — same output bits, same
+//! communication ledger (labels and per-superstep h, in order).
+//!
+//! This is the executable form of the engine's contract: split-phase
+//! overlapping of entry i's all-to-all with entry i+1's superstep 0
+//! changes wall-clock structure only, never a floating-point operation
+//! and never a ledger charge.
+
+use fftu::api::{plan, Algorithm, BatchIo, Kind, PlannedFft, Transform};
+use fftu::bsp::{ExecOptions, SuperstepKind};
+use fftu::fft::C64;
+use fftu::testing::Rng;
+
+fn rand_complex(n: usize, seed: u64) -> Vec<C64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| C64::new(rng.f64_signed(), rng.f64_signed())).collect()
+}
+
+fn rand_real(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f64_signed()).collect()
+}
+
+/// Communication ledger projection: (label, h) per comm superstep, in
+/// order. Both engines finish entries in batch order, so the sequences
+/// must match element-wise, not merely as multisets.
+fn comm_ledger(report: &fftu::bsp::CostReport) -> Vec<(&'static str, usize)> {
+    report
+        .supersteps
+        .iter()
+        .filter(|s| s.kind == SuperstepKind::Communication)
+        .map(|s| (s.label, s.h_max))
+        .collect()
+}
+
+fn assert_bits_c(got: &[C64], want: &[C64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.re.to_bits() == w.re.to_bits() && g.im.to_bits() == w.im.to_bits(),
+            "{what}: element {i}: pipelined {g:?} vs sequential {w:?}"
+        );
+    }
+}
+
+fn assert_bits_f(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}: element {i}: pipelined {g} vs sequential {w}"
+        );
+    }
+}
+
+/// Run `planned` on `io` twice — once under the strictly-sequential
+/// oracle (`pipeline(1)`), once under the default depth-2 pipeline —
+/// and assert bit-identical outputs and communication ledgers.
+fn assert_pipelined_matches_sequential(planned: &PlannedFft, io: BatchIo<'_>, what: &str) {
+    let run = |opts: ExecOptions| {
+        planned.set_exec_options(opts);
+        planned.execute(io)
+    };
+    let seq = run(ExecOptions::builder().pipeline(1).build()).unwrap_or_else(|e| {
+        panic!("{what}: sequential oracle failed: {e}");
+    });
+    let pip = run(ExecOptions::default()).unwrap_or_else(|e| {
+        panic!("{what}: pipelined run failed: {e}");
+    });
+    planned.set_exec_options(ExecOptions::default());
+    assert_eq!(
+        comm_ledger(pip.report()),
+        comm_ledger(seq.report()),
+        "{what}: pipelined communication ledger diverged from the sequential oracle"
+    );
+    match (pip, seq) {
+        (fftu::api::BatchOut::Complex(p), fftu::api::BatchOut::Complex(s)) => {
+            assert_bits_c(&p.output, &s.output, what)
+        }
+        (fftu::api::BatchOut::Real(p), fftu::api::BatchOut::Real(s)) => {
+            assert_bits_f(&p.output, &s.output, what)
+        }
+        _ => panic!("{what}: the two runs returned different output domains"),
+    }
+}
+
+/// C2C, gathered, 1D through 4D, batch sizes 2/3/8 (8 exercises > 4
+/// pipeline wrap-arounds of the two packet sets).
+#[test]
+fn pipelined_c2c_matches_sequential_bit_exact_1d_to_4d() {
+    for (shape, grid) in [
+        (vec![64usize], vec![8usize]),
+        (vec![8, 8], vec![2, 2]),
+        (vec![8, 4, 18], vec![2, 1, 3]),
+        (vec![4, 4, 2, 8], vec![2, 1, 1, 2]),
+    ] {
+        let n: usize = shape.iter().product();
+        for batch in [2usize, 3, 8] {
+            let t = Transform::new(&shape).grid(&grid).batch(batch);
+            let planned = plan(Algorithm::Fftu, &t).unwrap();
+            let x = rand_complex(batch * n, 0xD1F0 ^ ((batch as u64) << 8) ^ n as u64);
+            let what = format!("c2c {shape:?}/{grid:?} batch {batch}");
+            assert_pipelined_matches_sequential(&planned, BatchIo::Complex(&x), &what);
+        }
+    }
+}
+
+/// R2C and C2R, gathered: the real front door and its inverse; the c2r
+/// batch input is the r2c batch output (a genuine Hermitian spectrum).
+#[test]
+fn pipelined_r2c_c2r_match_sequential_bit_exact() {
+    for (shape, p) in [(vec![8usize, 8], 4usize), (vec![8, 4, 18], 4), (vec![4, 2, 3, 8], 4)] {
+        let n: usize = shape.iter().product();
+        for batch in [2usize, 8] {
+            let fwd_t = Transform::new(&shape).procs(p).r2c().batch(batch);
+            let fwd = plan(Algorithm::Fftu, &fwd_t).unwrap();
+            let x = rand_real(batch * n, 0xD1F1 ^ n as u64);
+            let what = format!("r2c {shape:?} p={p} batch {batch}");
+            assert_pipelined_matches_sequential(&fwd, BatchIo::Real(&x), &what);
+            let spec = fwd.execute(&x).unwrap().complex().output;
+            let inv =
+                plan(Algorithm::Fftu, &Transform::new(&shape).procs(p).c2r().batch(batch))
+                    .unwrap();
+            let what = format!("c2r {shape:?} p={p} batch {batch}");
+            assert_pipelined_matches_sequential(&inv, BatchIo::Complex(&spec), &what);
+        }
+    }
+}
+
+/// All four trig kinds, gathered.
+#[test]
+fn pipelined_trig_matches_sequential_bit_exact() {
+    let shape = [8usize, 8];
+    let n: usize = shape.iter().product();
+    for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+        for batch in [2usize, 8] {
+            let t = Transform::new(&shape).procs(4).kind(kind).batch(batch);
+            let planned = plan(Algorithm::Fftu, &t).unwrap();
+            let x = rand_real(batch * n, 0xD1F2 ^ batch as u64);
+            let what = format!("{kind:?} {shape:?} batch {batch}");
+            assert_pipelined_matches_sequential(&planned, BatchIo::Real(&x), &what);
+        }
+    }
+}
+
+/// Zig-zag (rank-local) trig: the drivers with the extra pairwise
+/// exchange per entry; p_l = 3 axes make the conversion really move.
+#[test]
+fn pipelined_zigzag_trig_matches_sequential_bit_exact() {
+    let shape = [18usize, 16];
+    let grid = [3usize, 4];
+    let n: usize = shape.iter().product();
+    for kind in [Kind::Dct2, Kind::Dct3, Kind::Dst2, Kind::Dst3] {
+        for batch in [2usize, 8] {
+            let t = Transform::new(&shape).grid(&grid).kind(kind).zigzag().batch(batch);
+            let planned = plan(Algorithm::Fftu, &t).unwrap();
+            let x = rand_real(batch * n, 0xD1F3 ^ batch as u64);
+            let what = format!("zigzag {kind:?} {shape:?} batch {batch}");
+            assert_pipelined_matches_sequential(&planned, BatchIo::Real(&x), &what);
+        }
+    }
+}
+
+/// Zig-zag r2c/c2r: two communication supersteps per entry on the r2c
+/// side; the c2r driver's mirror exchange precedes its all-to-all, so
+/// its flight prefix degenerates — both toggles must still agree.
+#[test]
+fn pipelined_zigzag_r2c_c2r_match_sequential_bit_exact() {
+    let shape = [4usize, 36];
+    let grid = [1usize, 3];
+    let n: usize = shape.iter().product();
+    for batch in [2usize, 8] {
+        let fwd =
+            plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag().batch(batch))
+                .unwrap();
+        let x = rand_real(batch * n, 0xD1F4 ^ batch as u64);
+        let what = format!("zigzag r2c {shape:?} batch {batch}");
+        assert_pipelined_matches_sequential(&fwd, BatchIo::Real(&x), &what);
+        let spec = fwd.execute(&x).unwrap().complex().output;
+        let inv =
+            plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).c2r().zigzag().batch(batch))
+                .unwrap();
+        let what = format!("zigzag c2r {shape:?} batch {batch}");
+        assert_pipelined_matches_sequential(&inv, BatchIo::Complex(&spec), &what);
+    }
+}
+
+/// The pipeline toggle is per-plan state: flipping it back and forth on
+/// one plan keeps every run agreeing with the first, and a depth larger
+/// than 2 is clamped to the engine's depth-2 schedule (same bits, same
+/// ledger).
+#[test]
+fn pipeline_depth_toggle_is_stable_and_clamped() {
+    let shape = [8usize, 8];
+    let n = 64usize;
+    let batch = 4usize;
+    let planned =
+        plan(Algorithm::Fftu, &Transform::new(&shape).grid(&[2, 2]).batch(batch)).unwrap();
+    let x = rand_complex(batch * n, 0xD1F5);
+    planned.set_exec_options(ExecOptions::builder().pipeline(1).build());
+    let want = planned.execute(&x).unwrap().complex();
+    for depth in [2usize, 3, 16] {
+        planned.set_exec_options(ExecOptions::builder().pipeline(depth).build());
+        let got = planned.execute(&x).unwrap().complex();
+        assert_bits_c(&got.output, &want.output, &format!("depth {depth}"));
+        assert_eq!(
+            comm_ledger(&got.report),
+            comm_ledger(&want.report),
+            "depth {depth}: ledger"
+        );
+    }
+    planned.set_exec_options(ExecOptions::default());
+}

@@ -49,7 +49,7 @@ fn auto_never_selects_an_infeasible_candidate() {
         assert_ne!(chosen.algorithm(), Algorithm::Auto, "{shape:?} p={p}");
         let n: usize = shape.iter().product();
         let x = random_complex(n, 0xA0 + *p as u64);
-        let y = planned.execute(&x).unwrap().output;
+        let y = planned.execute(&x).unwrap().complex().output;
         let want = dft_nd(&x, shape, Direction::Forward);
         assert!(
             max_abs_diff(&y, &want) < 1e-9 * n as f64,
@@ -75,8 +75,8 @@ fn auto_round_trips_bit_identically_with_the_explicit_request() {
     // Request exactly what the planner picked, through the front door.
     let explicit = plan(chosen.algorithm(), chosen.transform()).unwrap();
     let x = random_complex(256, 0xB0);
-    let via_auto = auto.execute(&x).unwrap().output;
-    let via_explicit = explicit.execute(&x).unwrap().output;
+    let via_auto = auto.execute(&x).unwrap().complex().output;
+    let via_explicit = explicit.execute(&x).unwrap().complex().output;
     // Bit-identical, not approximately equal: Auto delegates to a plan
     // built by the same deterministic constructor.
     assert_eq!(via_auto, via_explicit);
@@ -144,7 +144,7 @@ fn measure_mode_times_a_warm_shortlist_and_commits_to_the_minimum() {
     assert_eq!(best.algorithm, chosen.algorithm());
     // Execution still matches the oracle after the trial runs.
     let x = random_complex(256, 0xC0);
-    let y = planned.execute(&x).unwrap().output;
+    let y = planned.execute(&x).unwrap().complex().output;
     let want = dft_nd(&x, &[16, 16], Direction::Forward);
     assert!(max_abs_diff(&y, &want) < 1e-9);
 }

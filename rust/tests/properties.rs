@@ -88,7 +88,7 @@ fn prop_forward_inverse_roundtrip_c2c() {
                     continue; // this algorithm cannot place p on this shape
                 }
             };
-            let y = fwd.execute_batch(&x)?;
+            let y = fwd.execute(&x)?.complex();
             let inv = plan(
                 algo,
                 &Transform::new(&shape)
@@ -97,7 +97,7 @@ fn prop_forward_inverse_roundtrip_c2c() {
                     .normalization(inv_norm)
                     .batch(batch),
             )?;
-            let z = inv.execute_batch(&y.output)?;
+            let z = inv.execute(&y.output)?.complex();
             let err = max_abs_diff(&z.output, &x);
             prop_assert!(
                 err < 1e-8,
@@ -129,7 +129,7 @@ fn prop_parseval_c2c() {
                     continue;
                 }
             };
-            let y = planned.execute(&x)?;
+            let y = planned.execute(&x)?.complex();
             let ey: f64 = y.output.iter().map(|v| v.norm_sqr()).sum();
             // sum |X|^2 = scale^2 * N * sum |x|^2 for any normalization.
             let scale = norm.scale(n);
@@ -173,7 +173,7 @@ fn prop_r2c_matches_full_complex_transform() {
                     continue;
                 }
             };
-            let got = planned.execute_r2c(&x)?;
+            let got = planned.execute(&x)?.complex();
             let err = rel_l2_error(&got.output, &want);
             prop_assert!(err < 1e-8, "{algo:?} r2c {shape:?} p={p}: err {err}");
         }
@@ -202,7 +202,7 @@ fn prop_r2c_c2r_roundtrip() {
                     continue;
                 }
             };
-            let spec = fwd.execute_r2c_batch(&x)?;
+            let spec = fwd.execute(&x)?.complex();
             let inv = plan(
                 algo,
                 &Transform::new(&shape)
@@ -211,7 +211,7 @@ fn prop_r2c_c2r_roundtrip() {
                     .normalization(inv_norm)
                     .batch(batch),
             )?;
-            let back = inv.execute_c2r_batch(&spec.output)?;
+            let back = inv.execute(&spec.output)?.real();
             let err =
                 x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
             prop_assert!(
@@ -233,7 +233,7 @@ fn prop_r2c_parseval_with_hermitian_weights() {
         let x = rand_real(n, rng);
         let planned = plan(Algorithm::Fftu, &Transform::new(&shape).procs(p).r2c())
             .map_err(|e| format!("fftu must plan r2c {shape:?} p={p}: {e}"))?;
-        let spec = planned.execute_r2c(&x)?;
+        let spec = planned.execute(&x)?.complex();
         // Bins with 0 < k_d < n_d/2 stand in for their conjugate mirror
         // too: weight 2. The self-conjugate planes k_d in {0, n_d/2}
         // count once.
@@ -278,10 +278,10 @@ fn prop_trig_type3_inverts_type2_across_algorithms() {
                         continue;
                     }
                 };
-                let coeff = fwd.execute_trig_batch(&x)?;
+                let coeff = fwd.execute(&x)?.real();
                 let inv =
                     plan(algo, &Transform::new(&shape).procs(p).kind(inv_kind).batch(batch))?;
-                let back = inv.execute_trig_batch(&coeff.output)?;
+                let back = inv.execute(&coeff.output)?.real();
                 let err = x
                     .iter()
                     .zip(&back.output)
@@ -314,7 +314,7 @@ fn prop_trig_matches_sequential_reference() {
             let planned =
                 plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(kind))
                     .map_err(|e| format!("fftu must plan {kind:?} {shape:?}: {e}"))?;
-            let got = planned.execute_trig(&x)?;
+            let got = planned.execute(&x)?.real();
             let err =
                 got.output.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
             prop_assert!(err < 1e-8 * n as f64, "{kind:?} {shape:?} grid {grid:?}: err {err}");
@@ -337,7 +337,7 @@ fn prop_fftu_single_alltoall_for_all_kinds_and_batches() {
         let n: usize = shape.iter().product();
         let c2c = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).batch(batch))
             .map_err(String::from)?;
-        let exec = c2c.execute_batch(&rand_complex(batch * n, rng))?;
+        let exec = c2c.execute(&rand_complex(batch * n, rng))?.complex();
         prop_assert!(
             exec.report.comm_supersteps() == batch,
             "c2c {shape:?} grid {grid:?}: {} comm steps for batch {batch}",
@@ -345,7 +345,7 @@ fn prop_fftu_single_alltoall_for_all_kinds_and_batches() {
         );
         let r2c = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().batch(batch))
             .map_err(String::from)?;
-        let exec = r2c.execute_r2c_batch(&rand_real(batch * n, rng))?;
+        let exec = r2c.execute(&rand_real(batch * n, rng))?.complex();
         prop_assert!(
             exec.report.comm_supersteps() == batch,
             "r2c {shape:?} grid {grid:?}: {} comm steps for batch {batch}",
@@ -356,7 +356,7 @@ fn prop_fftu_single_alltoall_for_all_kinds_and_batches() {
         // communication superstep.
         let dct = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).dct2().batch(batch))
             .map_err(String::from)?;
-        let exec = dct.execute_trig_batch(&rand_real(batch * n, rng))?;
+        let exec = dct.execute(&rand_real(batch * n, rng))?.real();
         prop_assert!(
             exec.report.comm_supersteps() == batch,
             "dct2 {shape:?} grid {grid:?}: {} comm steps for batch {batch}",
@@ -392,7 +392,7 @@ fn prop_zigzag_trig_round_trips_and_matches_sequential() {
                 &Transform::new(&shape).grid(&grid).kind(fwd_kind).zigzag(),
             )
             .map_err(String::from)?;
-            let coeff = fwd.execute_trig(&x)?;
+            let coeff = fwd.execute(&x)?.real();
             let err =
                 coeff.output.iter().zip(&seq).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
             prop_assert!(
@@ -404,7 +404,7 @@ fn prop_zigzag_trig_round_trips_and_matches_sequential() {
                 &Transform::new(&shape).grid(&grid).kind(inv_kind).zigzag(),
             )
             .map_err(String::from)?;
-            let back = inv.execute_trig(&coeff.output)?;
+            let back = inv.execute(&coeff.output)?.real();
             let err = x
                 .iter()
                 .zip(&back.output)
@@ -435,7 +435,7 @@ fn prop_zigzag_r2c_c2r_round_trips() {
         let x = rand_real(n, rng);
         let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c().zigzag())
             .map_err(String::from)?;
-        let spec = fwd.execute_r2c(&x)?;
+        let spec = fwd.execute(&x)?.complex();
         let want = rfftn(&x, &shape);
         let err = rel_l2_error(&spec.output, &want);
         prop_assert!(err < 1e-9, "zigzag r2c {shape:?} {grid:?} vs rfftn: {err}");
@@ -448,7 +448,7 @@ fn prop_zigzag_r2c_c2r_round_trips() {
                 .zigzag(),
         )
         .map_err(String::from)?;
-        let back = inv.execute_c2r(&spec.output)?;
+        let back = inv.execute(&spec.output)?.real();
         let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         prop_assert!(err < 1e-9, "zigzag c2r {shape:?} {grid:?} roundtrip: {err}");
         Ok(())
@@ -465,7 +465,7 @@ fn roundtrip_and_parseval_4d() {
     let x = rand_real(n, &mut rng);
     let want = rfftn(&x, &shape);
     let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).procs(4).r2c()).unwrap();
-    let spec = fwd.execute_r2c(&x).unwrap();
+    let spec = fwd.execute(&x).unwrap().complex();
     assert!(rel_l2_error(&spec.output, &want) < 1e-10);
     assert_eq!(spec.report.comm_supersteps(), 1);
     let inv = plan(
@@ -473,7 +473,7 @@ fn roundtrip_and_parseval_4d() {
         &Transform::new(&shape).procs(4).c2r().normalization(Normalization::ByN),
     )
     .unwrap();
-    let back = inv.execute_c2r(&spec.output).unwrap();
+    let back = inv.execute(&spec.output).unwrap().real();
     let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
     assert!(err < 1e-10, "4d roundtrip err {err}");
 }
