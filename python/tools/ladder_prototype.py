@@ -1,0 +1,373 @@
+"""Design prototype for the beyond-sqrt(N) group-cyclic ladder (PR 10).
+
+Validates the k-superstep FFTU generalization (paper section 2.3) against a
+brute-force DFT oracle before the Rust implementation: per-stage
+redistribution pattern, twiddle tables, strided F_m compute, and the final
+output placement map.
+
+Conventions match the Rust crate: forward sign = -1
+(root_of_unity(n, k) = exp(-2j*pi*k/n)), cyclic input distribution
+(rank s holds x[t*p + s]).
+
+Run: python3 python/tools/ladder_prototype.py
+"""
+
+import math
+from functools import reduce
+
+import numpy as np
+
+
+def w(n, k, sign):
+    return np.exp(sign * 2j * np.pi * (k % n) / n)
+
+
+def dft(x, sign):
+    n = len(x)
+    return [sum(x[j] * w(n, j * k, sign) for j in range(n)) for k in range(n)]
+
+
+def ladder_factors(p, m_cap):
+    """Greedy factorization p = m_1 * m_2 * ... with each m_j = gcd of the
+    remainder and m_cap (the per-rank batch size n/p). Returns None when the
+    ladder is infeasible (remainder shares no factor with the batch size)."""
+    if p == 1:
+        return []
+    factors = []
+    rem = p
+    while rem > 1:
+        m = math.gcd(rem, m_cap)
+        if m == 1:
+            return None
+        factors.append(m)
+        rem //= m
+    return factors
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: recursive reference for the across-rank F_c, batch B per rank.
+# Rank a (in-group) holds v[a][0..B); the c-point DFT over ranks is needed
+# for every batch slot b. Returns, per rank, a list of (b, q, value):
+# "this rank ends holding V[b, q]" in slot order.
+# ---------------------------------------------------------------------------
+
+def across_recursive(v, c, B, sign):
+    if c == 1:
+        return [[(b, 0, v[0][b]) for b in range(B)]]
+    m = math.gcd(c, B)
+    assert m > 1, "infeasible ladder"
+    cp = c // m
+    nb = B // m
+    # Stage: redistribute within stride-cp teams, m-point DFT, twiddle.
+    mid = [[None] * B for _ in range(c)]
+    for s2 in range(cp):
+        for u in range(m):
+            for bb in range(nb):
+                b = bb * m + u
+                col = [v[s1 * cp + s2][b] for s1 in range(m)]
+                wq = dft(col, sign)
+                for q1 in range(m):
+                    mid[u * cp + s2][q1 * nb + bb] = wq[q1] * w(c, s2 * q1, sign)
+    # Recurse on each group of cp consecutive ranks.
+    result = [None] * c
+    for u in range(m):
+        sub = [mid[u * cp + s2] for s2 in range(cp)]
+        subres = across_recursive(sub, cp, B, sign)
+        for s2 in range(cp):
+            entries = []
+            for (b2, q2, val) in subres[s2]:
+                q1, bb = divmod(b2, nb)
+                entries.append((bb * m + u, q1 + m * q2, val))
+            result[u * cp + s2] = entries
+    return result
+
+
+def ladder_fft_1d_recursive(x, p, sign):
+    n = len(x)
+    M = n // p
+    # Superstep 0: local F_M on cyclic data + stage-0 twiddle w_n^{s*r}.
+    z = []
+    for s in range(p):
+        ys = dft([x[t * p + s] for t in range(M)], sign)
+        z.append([ys[r] * w(n, s * r, sign) for r in range(M)])
+    placed = across_recursive(z, p, M, sign)
+    out = np.zeros(n, dtype=complex)
+    owner = np.zeros(n, dtype=int)
+    for a in range(p):
+        for (b, q, val) in placed[a]:
+            out[q * M + b] = val
+            owner[q * M + b] = a
+    return out, owner, placed
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: flat superstep form, multidimensional, with explicit pack tables.
+# This is the shape the Rust plan compiler mirrors:
+#   - per-axis slot space stays [M_l] throughout; flat local layout is
+#     row-major over axes (the worker's `w` layout);
+#   - stage j: per-axis factor m_{l,j} (1 once the axis ladder is done);
+#   - team of rank s on axis l: ranks with coord s_l in {s1*cp_l + (s_l mod
+#     cp_l)}; packets are tensor products of per-axis slot selections;
+#   - post-unpack axis-l slot layout: slot' = s1 * (M_l/m_l) + bb where the
+#     pre-exchange slot was b = bb*m_l + u_l (u_l = own residue);
+#   - compute: per-axis F_{m_l} at axis-stride M_l/m_l, then elementwise
+#     stage twiddle w_{c_l}^{s2_l * q1_l} (product over axes).
+# ---------------------------------------------------------------------------
+
+class Stage:
+    def __init__(self, axes_m, axes_c):
+        self.axes_m = axes_m  # per-axis factor this stage (1 = inactive)
+        self.axes_c = axes_c  # per-axis group size BEFORE this stage
+
+
+def build_stages(shape, pgrid):
+    d = len(shape)
+    factors = []
+    for l in range(d):
+        M = shape[l] // pgrid[l]
+        f = ladder_factors(pgrid[l], M)
+        assert f is not None, f"axis {l} infeasible"
+        factors.append(f)
+    k = max((len(f) for f in factors), default=0)
+    stages = []
+    cyc = list(pgrid)
+    for j in range(k):
+        ms = [factors[l][j] if j < len(factors[l]) else 1 for l in range(d)]
+        stages.append(Stage(ms, list(cyc)))
+        cyc = [c // m for c, m in zip(cyc, ms)]
+    assert all(c == 1 for c in cyc)
+    return stages
+
+
+def ravel(idx, shape):
+    out = 0
+    for i, n in zip(idx, shape):
+        out = out * n + i
+    return out
+
+
+def unravel(flat, shape):
+    idx = []
+    for n in reversed(shape):
+        idx.append(flat % n)
+        flat //= n
+    return list(reversed(idx))
+
+
+def ladder_fft_nd_flat(x, shape, pgrid, sign, verbose=False):
+    d = len(shape)
+    p = reduce(lambda a, b: a * b, pgrid, 1)
+    n = reduce(lambda a, b: a * b, shape, 1)
+    Ms = [shape[l] // pgrid[l] for l in range(d)]
+    local_len = reduce(lambda a, b: a * b, Ms, 1)
+    stages = build_stages(shape, pgrid)
+
+    # Scatter (cyclic per axis): rank S holds slot T -> global (T_l*p_l+S_l).
+    loc = []
+    for a in range(p):
+        S = unravel(a, pgrid)
+        vals = np.zeros(local_len, dtype=complex)
+        for t in range(local_len):
+            T = unravel(t, Ms)
+            g = ravel([T[l] * pgrid[l] + S[l] for l in range(d)], shape)
+            vals[t] = x[g]
+        loc.append(vals)
+
+    # Superstep 0: local nd-FFT + stage-0 twiddle prod_l w_{n_l}^{t_l s_l}.
+    for a in range(p):
+        S = unravel(a, pgrid)
+        arr = loc[a].reshape(Ms)
+        for l in range(d):
+            arr = np.apply_along_axis(lambda v: np.array(dft(list(v), sign)), l, arr)
+        flat = arr.reshape(-1)
+        for t in range(local_len):
+            T = unravel(t, Ms)
+            tw = reduce(
+                lambda acc, l: acc * w(shape[l], T[l] * S[l], sign), range(d), 1.0 + 0j
+            )
+            flat[t] *= tw
+        loc[a] = flat
+
+    stage_h = []
+    for (j, st) in enumerate(stages):
+        mprod = reduce(lambda a, b: a * b, st.axes_m, 1)
+        nbs = [Ms[l] // st.axes_m[l] for l in range(d)]
+        new = [np.zeros(local_len, dtype=complex) for _ in range(p)]
+        sent = [0] * p
+        for a in range(p):
+            S = unravel(a, pgrid)
+            # Per-axis in-group coordinate and team decomposition.
+            # Axis group size c_l; this rank's in-group coord a_l; with
+            # c_l = m_l * cp_l: a_l = u_l * cp_l + s2_l.
+            for t in range(local_len):
+                T = unravel(t, Ms)
+                # Destination rank: per-axis team member u'_l = T_l mod m_l.
+                dst_coords = []
+                slot_coords = []
+                for l in range(d):
+                    m, c = st.axes_m[l], st.axes_c[l]
+                    cp = c // m
+                    a_l = S[l] % c  # in-group coordinate
+                    base_l = S[l] - a_l  # group base in rank space
+                    s2 = a_l % cp
+                    bb, up = divmod(T[l], m)  # slot b = bb*m + u'
+                    dst_coords.append(base_l + up * cp + s2)
+                    # Post-unpack slot on receiving rank: s1*(M/m)+bb where
+                    # s1 = sender's u_l = a_l // cp.
+                    s1 = a_l // cp
+                    slot_coords.append(s1 * nbs[l] + bb)
+                dst = ravel(dst_coords, pgrid)
+                new[dst][ravel(slot_coords, Ms)] = loc[a][t]
+                if dst != a:
+                    sent[a] += 1
+        assert all(s == local_len - local_len // mprod for s in sent)
+        stage_h.append(sent[0])
+        # Compute: per-axis strided F_{m_l}, then stage twiddle. Explicit
+        # index loops (the Rust worker's execute_interleaved layout): the
+        # m points of one DFT sit at axis-l slots {s1*nb + bb : s1 in [m]}.
+        for a in range(p):
+            S = unravel(a, pgrid)
+            flat = new[a]
+            for l in range(d):
+                m = st.axes_m[l]
+                if m == 1:
+                    continue
+                nb = nbs[l]
+                for t in range(local_len):
+                    T = unravel(t, Ms)
+                    if T[l] >= nb:  # only visit each line once (s1 == 0)
+                        continue
+                    idxs = []
+                    for s1 in range(m):
+                        Tl = list(T)
+                        Tl[l] = s1 * nb + T[l]
+                        idxs.append(ravel(Tl, Ms))
+                    line = dft([flat[i] for i in idxs], sign)
+                    for s1 in range(m):
+                        flat[idxs[s1]] = line[s1]
+            for t in range(local_len):
+                T = unravel(t, Ms)
+                tw = 1.0 + 0j
+                for l in range(d):
+                    m, c = st.axes_m[l], st.axes_c[l]
+                    if m == 1:
+                        continue
+                    cp = c // m
+                    s2 = (S[l] % c) % cp
+                    q1 = T[l] // nbs[l]
+                    tw *= w(c, s2 * q1, sign)
+                flat[t] *= tw
+            loc[a] = flat
+
+    # Output placement: recover (b, q) per slot by unwinding the stages.
+    # Walk stages backward per axis: slot' = s1*nb + bb came from
+    # b = bb*m + u where u is the rank's own residue path. Forward, per
+    # axis: after the last stage, slot index encodes (q1_k, (q1_{k-1}, (...,
+    # b_orig))). Reconstruct per rank/slot the original batch index b and
+    # accumulated output index q, then X[ravel_l(q_l*M_l + b_l ...)] --
+    # global output coordinate on axis l is q_l * M_l + r_l.
+    out = np.zeros(n, dtype=complex)
+    owner = np.zeros(n, dtype=int)
+    for a in range(p):
+        S = unravel(a, pgrid)
+        for t in range(local_len):
+            T = unravel(t, Ms)
+            gcoord = []
+            for l in range(d):
+                b, q = slot_to_bq(T[l], S[l], l, stages, Ms[l], pgrid[l])
+                gcoord.append(q * Ms[l] + b)
+            g = ravel(gcoord, shape)
+            out[g] = loc[a][t]
+            owner[g] = a
+    return out, owner, stage_h
+
+
+def slot_to_bq(slot, s_l, l, stages, M, p_l):
+    """Invert the per-axis slot bookkeeping: given the final slot index and
+    the rank's axis coordinate, return (original batch index b, output
+    index q) for that axis."""
+    # Recompute the rank's residue path u_j and the slot decomposition.
+    # Forward through stages: slot_j entering stage j decomposes as
+    # b_j = bb*m + u'(dest); on THIS rank (as receiver) the final slot after
+    # stage j is s1*nb + bb, and its q1 (post-DFT) replaces s1 in place.
+    # Walking backward from the final slot: slot = q1*nb + bb.
+    ms = [st.axes_m[l] for st in stages]
+    cs = [st.axes_c[l] for st in stages]
+    # u_j for this rank: at stage j the rank's in-group coord a_j = s_l mod
+    # c_j; receiving ranks have a_j = u_j * cp_j + s2_j, and the data this
+    # rank HOLDS after stage j has original residue u_j = a_j // cp_j.
+    q = 0
+    qmul = 1
+    # Backward: later stages contribute higher q digits (q = q1 + m*q2).
+    bs = []  # per-stage bb extraction order (earliest stage outermost)
+    for j in reversed(range(len(ms))):
+        m = ms[j]
+        if m == 1:
+            continue
+        c = cs[j]
+        cp = c // m
+        nb = M // m
+        q1, bb = divmod(slot, nb)
+        # q = q1 + m * q_rest  (q_rest accumulated so far)
+        q = q1 + m * q
+        a_j = s_l % c
+        u_j = a_j // cp
+        slot = bb * m + u_j
+    return slot, q
+
+
+def oracle_nd(x, shape, sign):
+    arr = np.array(x, dtype=complex).reshape(shape)
+    for l in range(len(shape)):
+        arr = np.apply_along_axis(lambda v: np.array(dft(list(v), sign)), l, arr)
+    return arr.reshape(-1)
+
+
+def check(shape, pgrid, sign=-1, tol=1e-9):
+    n = reduce(lambda a, b: a * b, shape, 1)
+    rng = np.random.default_rng(ravel(list(shape) + list(pgrid), [97] * (2 * len(shape))))
+    x = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+    want = oracle_nd(x, shape, sign)
+    got, owner, stage_h = ladder_fft_nd_flat(x, shape, pgrid, sign)
+    err = np.max(np.abs(got - want)) / max(1.0, np.max(np.abs(want)))
+    k = len(build_stages(shape, pgrid))
+    p = reduce(lambda a, b: a * b, pgrid, 1)
+    status = "ok" if err < tol else "FAIL"
+    print(f"shape={shape} pgrid={pgrid} k={k} stage_h={stage_h} relerr={err:.2e} {status}")
+    assert err < tol, (shape, pgrid, err)
+    # h bound: every stage moves < n/p words per rank (Thm 2.1 generalized).
+    assert all(h <= n // p for h in stage_h)
+    return owner
+
+
+def main():
+    # 1D recursive reference sanity.
+    for (n, p) in [(16, 4), (64, 16), (64, 32), (32, 8), (256, 64)]:
+        x = np.arange(n) * (0.5 - 0.3j) + 1.0
+        want = oracle_nd(x, (n,), -1)
+        got, _, _ = ladder_fft_1d_recursive(x, p, -1)
+        err = np.max(np.abs(got - want)) / np.max(np.abs(want))
+        print(f"recursive 1D n={n} p={p} relerr={err:.2e}")
+        assert err < 1e-9
+
+    # Flat multidim form, forward + inverse, k = 1..5.
+    check((16,), (4,))        # k=1 (the existing engine's regime)
+    check((64,), (16,))       # k=2
+    check((64,), (32,))       # k=5 (M=2)
+    check((4096,), (128,))    # k=2, the bench case
+    check((256,), (64,))      # k=3
+    check((4, 4, 4), (2, 2, 2))   # 3D k=1 sanity
+    check((16, 16), (8, 8))   # 2D beyond-sqrt per axis
+    check((16, 8), (8, 4))    # mixed ladder lengths
+    check((8, 16, 4), (4, 8, 2))  # 3D, unequal per-axis ladders
+    check((36,), (6,))        # non-power-of-two, k=1 regime via ladder path
+    check((27,), (9,))        # radix-3: M=3, 9 = 3*3, k=2
+    check((64,), (16,), sign=+1)  # inverse direction
+    check((16, 16), (8, 8), sign=+1)
+    assert ladder_factors(12, 3) is None  # 12 = 3*4, 4 shares no factor with 3
+    assert ladder_factors(8, 6) == [2, 2, 2]  # greedy on ragged radices
+    print("all checks passed")
+
+
+if __name__ == "__main__":
+    main()

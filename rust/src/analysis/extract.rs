@@ -22,11 +22,33 @@ use super::{Event, RecordingCtx, Schedule};
 /// rank — self included, matching the packet layout — is the plan's
 /// packet length; the lints and the exchange both skip the self entry
 /// when charging.
+///
+/// Beyond sqrt(N) the plan carries the group-cyclic ladder instead:
+/// after the unchanged superstep 0, each of the `k` stages exchanges
+/// `stage.words`-word packets within its team (the `prod_l m_l` ranks
+/// sharing this rank's group-cyclic cosets — send counts are zero
+/// outside the team) and then runs the per-axis `F_{m_l}` butterflies
+/// plus the stage twiddle as one computation superstep. Mirrors
+/// `Worker::execute_ladder` one-for-one.
 pub fn fftu_core(rec: &mut RecordingCtx, plan: &FftuPlan) {
     let p = plan.num_procs();
     rec.begin_comp("fftu-superstep0");
-    rec.exchange("fftu-alltoall", vec![plan.packet_len(); p]);
-    rec.begin_comp("fftu-superstep2");
+    match &plan.ladder {
+        None => {
+            rec.exchange("fftu-alltoall", vec![plan.packet_len(); p]);
+            rec.begin_comp("fftu-superstep2");
+        }
+        Some(lad) => {
+            for (j, stage) in lad.stages.iter().enumerate() {
+                let mut counts = vec![0usize; p];
+                for &r in plan.ladder_team_ranks(rec.rank(), j).iter() {
+                    counts[r as usize] = stage.words;
+                }
+                rec.exchange(stage.comm_label, counts);
+                rec.begin_comp(stage.fft_label);
+            }
+        }
+    }
 }
 
 /// Zig-zag <-> cyclic conversion (`convert_between_cyclic_and_zigzag`):

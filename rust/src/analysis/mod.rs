@@ -327,12 +327,23 @@ impl LintOutcome {
 /// schedule, derived from its [`crate::api::Algorithm`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Expectations {
-    /// FFTU family: exactly one collective, labeled `fftu-alltoall`;
+    /// FFTU family: exactly the plan's communication-superstep count of
+    /// collectives, correctly labeled (see [`Self::ladder_stages`]);
     /// pairwise steps allowed (zig-zag conversions, mirror swaps).
     pub single_alltoall: bool,
-    /// Expected collective count (1 for FFTU; the documented
-    /// `Algorithm::comm_supersteps` count for the baselines).
+    /// Expected collective count (the plan's `comm_stages` for FFTU —
+    /// 1 up to sqrt(N); the documented `Algorithm::comm_supersteps`
+    /// count for the baselines).
     pub collectives: usize,
+    /// FFTU family only: communication supersteps per entry. `1` selects
+    /// the classic single-all-to-all invariant (label `fftu-alltoall`);
+    /// `k > 1` selects the beyond-sqrt(N) group-cyclic ladder — exactly
+    /// `k` collectives per entry, labeled `fftu-ladder-0` through
+    /// `fftu-ladder-{k-1}` **in stage order** (the shrinking-cycle
+    /// sequence is positional, so a swapped, repeated, or dropped stage
+    /// is a violation even when the count happens to survive). Ignored
+    /// when `single_alltoall` is false.
+    pub ladder_stages: usize,
     /// Modeled batch entries: 1 for the per-item schedules
     /// `PlannedFft::analyze` extracts, `b` for the pipelined batch
     /// schedules of `analyze_pipelined(b)`. The single-all-to-all
@@ -679,28 +690,53 @@ fn lint_single_alltoall(schedule: &Schedule, exp: &Expectations) -> LintOutcome 
         let pairwise = events.iter().filter(|e| matches!(e, Event::Pairwise { .. })).count();
         let per_entry = exp.batch.max(1);
         if exp.single_alltoall {
-            if collectives.len() != per_entry {
-                violations.push(if per_entry == 1 {
+            let k = exp.ladder_stages.max(1);
+            if collectives.len() != k * per_entry {
+                violations.push(if k == 1 && per_entry == 1 {
                     format!(
                         "rank {rank}: FFTU path must contain exactly ONE all-to-all \
                          (Alg. 3.1), found {}",
                         collectives.len()
                     )
-                } else {
+                } else if k == 1 {
                     format!(
                         "rank {rank}: pipelined FFTU batch must contain exactly ONE \
                          all-to-all per entry (Alg. 3.1) = {per_entry}, found {}",
                         collectives.len()
                     )
+                } else {
+                    format!(
+                        "rank {rank}: beyond-sqrt(N) FFTU must contain exactly \
+                         comm_supersteps_needed = {k} ladder exchanges per entry \
+                         ({} total), found {}",
+                        k * per_entry,
+                        collectives.len()
+                    )
                 });
             }
-            for e in &collectives {
-                if e.label() != "fftu-alltoall" {
-                    violations.push(format!(
-                        "rank {rank}: collective '{}' is not the FFTU all-to-all — \
-                         conversion/mirror swaps must be pairwise",
-                        e.label()
-                    ));
+            for (i, e) in collectives.iter().enumerate() {
+                if k == 1 {
+                    if e.label() != "fftu-alltoall" {
+                        violations.push(format!(
+                            "rank {rank}: collective '{}' is not the FFTU all-to-all — \
+                             conversion/mirror swaps must be pairwise",
+                            e.label()
+                        ));
+                    }
+                } else {
+                    // Stage order is part of the invariant: the cycle
+                    // sequence c -> c/m only telescopes if the stages
+                    // run 0, 1, ..., k-1 in every entry.
+                    let stage = i % k;
+                    let want = crate::fftu::LADDER_COMM_LABELS[stage];
+                    if e.label() != want {
+                        violations.push(format!(
+                            "rank {rank}: collective {i} is '{}', expected ladder \
+                             stage {stage} ('{want}') — stages must run in shrinking-\
+                             cycle order",
+                            e.label()
+                        ));
+                    }
                 }
             }
         } else {

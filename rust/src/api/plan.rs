@@ -23,10 +23,11 @@ use crate::fft::trignd::{
 };
 use crate::fft::{C64, Planner};
 use crate::fftu::{
-    choose_grid, fftu_execute_batch_arena, fftu_execute_c2r_pairwise_batch_arena,
-    fftu_execute_r2c_pairwise_batch_arena, fftu_execute_trig2_batch_arena,
-    fftu_execute_trig2_zigzag_batch_arena, fftu_execute_trig3_batch_arena,
-    fftu_execute_trig3_zigzag_batch_arena, fftu_pmax, zigzag, ExecArena, FftuPlan,
+    choose_grid, choose_grid_any, fftu_execute_batch_arena,
+    fftu_execute_c2r_pairwise_batch_arena, fftu_execute_r2c_pairwise_batch_arena,
+    fftu_execute_trig2_batch_arena, fftu_execute_trig2_zigzag_batch_arena,
+    fftu_execute_trig3_batch_arena, fftu_execute_trig3_zigzag_batch_arena, fftu_pmax, zigzag,
+    ExecArena, FftuPlan,
 };
 
 use super::error::FftError;
@@ -372,11 +373,25 @@ impl std::fmt::Debug for PlannedFft {
     }
 }
 
-/// Resolve the per-axis cyclic grid for the cyclic-family algorithms.
+/// Resolve the per-axis cyclic grid for the cyclic-family algorithms
+/// that require the single-all-to-all rule `p_l^2 | n_l` (Popovici).
 fn resolve_cyclic_grid(t: &Transform) -> Result<Vec<usize>, FftError> {
     match &t.grid {
         Grid::Explicit(g) => Ok(g.clone()),
         Grid::Auto { p } => choose_grid(&t.shape, *p)
+            .ok_or(FftError::NoValidGrid { p: *p, pmax: fftu_pmax(&t.shape) }),
+    }
+}
+
+/// Resolve the per-axis grid for FFTU, which additionally accepts
+/// beyond-sqrt(N) grids via the group-cyclic ladder: `Auto { p }` first
+/// tries the single-all-to-all grids, then any ladder-feasible
+/// factorization ([`choose_grid_any`]). The `pmax` in the error remains
+/// the single-all-to-all ceiling — the documented Alg. 3.1 bound.
+fn resolve_fftu_grid(t: &Transform) -> Result<Vec<usize>, FftError> {
+    match &t.grid {
+        Grid::Explicit(g) => Ok(g.clone()),
+        Grid::Auto { p } => choose_grid_any(&t.shape, *p)
             .ok_or(FftError::NoValidGrid { p: *p, pmax: fftu_pmax(&t.shape) }),
     }
 }
@@ -417,6 +432,24 @@ pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError>
                     ),
                 });
             }
+            if let Inner::Fftu { plan, .. } = &core.inner {
+                // The rank-local combine passes assume the cyclic output
+                // placement of the single all-to-all; a beyond-sqrt(N)
+                // core compiles the group-cyclic ladder instead, whose
+                // output placement they cannot consume. Reject at plan
+                // time with the same error kind the engines raise.
+                if plan.is_ladder() {
+                    return Err(FftError::Unsupported {
+                        reason: format!(
+                            "the zig-zag (rank-local) strategy requires the \
+                             single-all-to-all core (p_l^2 | n_l); this grid needs \
+                             the k = {} group-cyclic ladder — use \
+                             DistStrategy::Gathered",
+                            plan.comm_stages()
+                        ),
+                    });
+                }
+            }
             if t.kind.is_trig() {
                 // The mirror folding needs whole 2 p_l periods on every
                 // shared axis (on top of the plan's own p_l^2 | n_l).
@@ -451,7 +484,7 @@ pub fn plan(algo: Algorithm, t: &Transform) -> Result<Arc<PlannedFft>, FftError>
     let p = t.grid.procs();
     let (inner, grid, p) = match algo {
         Algorithm::Fftu => {
-            let grid = resolve_cyclic_grid(t)?;
+            let grid = resolve_fftu_grid(t)?;
             let planner = Planner::new();
             let plan = Arc::new(FftuPlan::new(&t.shape, &grid, &planner)?);
             let p = plan.num_procs();
@@ -835,14 +868,26 @@ impl PlannedFft {
     }
 
     /// What the verifier may assume from the algorithm choice: FFTU's
-    /// single all-to-all (Alg. 3.1), or the baseline's documented
-    /// collective count (§1.2) with no pairwise steps.
+    /// single all-to-all (Alg. 3.1) — or, beyond sqrt(N), exactly the
+    /// plan's `comm_stages()` group-cyclic ladder exchanges in stage
+    /// order — or the baseline's documented collective count (§1.2)
+    /// with no pairwise steps.
     fn expectations(&self) -> analysis::Expectations {
         let d = self.t.shape.len();
+        let is_fftu = matches!(self.algo, Algorithm::Fftu);
+        let ladder_stages = match &self.inner {
+            Inner::Fftu { plan, .. } => plan.comm_stages(),
+            Inner::Real { core, .. } => match &core.inner {
+                Inner::Fftu { plan, .. } => plan.comm_stages(),
+                _ => 1,
+            },
+            _ => 1,
+        };
         analysis::Expectations {
-            single_alltoall: matches!(self.algo, Algorithm::Fftu),
-            collectives: self.algo.comm_supersteps(d),
+            single_alltoall: is_fftu,
+            collectives: if is_fftu { ladder_stages } else { self.algo.comm_supersteps(d) },
             batch: 1,
+            ladder_stages,
         }
     }
 
@@ -934,7 +979,16 @@ impl PlannedFft {
         let shape = &self.t.shape;
         if self.t.kind == Kind::C2C {
             return match self.algo {
-                Algorithm::Fftu => Ok(costmodel::fftu_report(shape, self.p)),
+                Algorithm::Fftu => {
+                    if let Inner::Fftu { plan, .. } = &self.inner {
+                        if plan.is_ladder() {
+                            let grid =
+                                self.grid.as_deref().expect("fftu plans resolve a grid");
+                            return Ok(costmodel::fftu_ladder_report(shape, grid));
+                        }
+                    }
+                    Ok(costmodel::fftu_report(shape, self.p))
+                }
                 Algorithm::Slab { out } => {
                     costmodel::slab_report(shape, self.p, out == OutputDist::Same)
                 }

@@ -38,7 +38,7 @@ use crate::bsp::CostReport;
 use crate::costmodel::{self, Machine};
 use crate::fft::realnd::{half_shape, rfftn};
 use crate::fft::C64;
-use crate::fftu::{enumerate_grids, zigzag};
+use crate::fftu::{enumerate_grids, enumerate_grids_any, grid_feasible, zigzag};
 use crate::testing::Rng;
 
 use super::error::FftError;
@@ -118,7 +118,16 @@ fn price(
         p: usize,
     ) -> Result<CostReport, FftError> {
         match algorithm {
-            Algorithm::Fftu => Ok(costmodel::fftu_report(shape, p)),
+            Algorithm::Fftu => {
+                let g = grid.expect("fftu candidates carry a grid");
+                // Beyond-sqrt(N) grids price the k-superstep ladder
+                // ledger; single-all-to-all grids keep Eq. (2.12).
+                if g.iter().zip(shape).all(|(&q, &n)| n % (q * q) == 0) {
+                    Ok(costmodel::fftu_report(shape, p))
+                } else {
+                    Ok(costmodel::fftu_ladder_report(shape, g))
+                }
+            }
             Algorithm::Slab { out } => {
                 costmodel::slab_report(shape, p, out == OutputDist::Same)
             }
@@ -171,14 +180,25 @@ fn candidates(t: &Transform) -> Vec<(Algorithm, Option<Vec<usize>>, DistStrategy
     // The cyclic grid lives on the shape the core actually transforms.
     let core_shape: Vec<usize> =
         if t.kind.is_real_fft() { half_shape(&t.shape) } else { t.shape.clone() };
-    let grids: Vec<Vec<usize>> = match &t.grid {
+    // Single-all-to-all grids (`p_l^2 | n_l`) serve every cyclic-family
+    // candidate; the wider ladder-feasible set (beyond sqrt(N)) serves
+    // FFTU gathered only — the zig-zag combine passes and Popovici's
+    // d-step schedule both assume the cyclic output placement.
+    let is_single =
+        |g: &[usize]| g.iter().zip(&core_shape).all(|(&q, &n)| q >= 1 && n % (q * q) == 0);
+    let (grids, single_grids): (Vec<Vec<usize>>, Vec<Vec<usize>>) = match &t.grid {
         Grid::Explicit(g) => {
             // Respect a pinned grid, if the cyclic family can use it.
-            let valid = g.len() == d
-                && g.iter().zip(&core_shape).all(|(&q, &n)| q >= 1 && n % (q * q) == 0);
-            if valid { vec![g.clone()] } else { Vec::new() }
+            let any_valid = g.len() == d && grid_feasible(&core_shape, g);
+            let single_valid = g.len() == d && is_single(g);
+            (
+                if any_valid { vec![g.clone()] } else { Vec::new() },
+                if single_valid { vec![g.clone()] } else { Vec::new() },
+            )
         }
-        Grid::Auto { .. } => enumerate_grids(&core_shape, p),
+        Grid::Auto { .. } => {
+            (enumerate_grids_any(&core_shape, p), enumerate_grids(&core_shape, p))
+        }
     };
     // c2c has no wrapper passes, so no zig-zag variant; a descriptor
     // that explicitly asked for zig-zag restricts the search to it.
@@ -191,7 +211,8 @@ fn candidates(t: &Transform) -> Vec<(Algorithm, Option<Vec<usize>>, DistStrategy
     };
     let mut out = Vec::new();
     for &strategy in strategies {
-        for g in &grids {
+        let pool = if strategy == DistStrategy::ZigZag { &single_grids } else { &grids };
+        for g in pool {
             if strategy == DistStrategy::ZigZag
                 && t.kind.is_trig()
                 && zigzag::validate_zigzag_axes(&t.shape, g).is_err()
@@ -201,7 +222,7 @@ fn candidates(t: &Transform) -> Vec<(Algorithm, Option<Vec<usize>>, DistStrategy
             out.push((Algorithm::Fftu, Some(g.clone()), strategy));
         }
     }
-    for g in &grids {
+    for g in &single_grids {
         out.push((Algorithm::Popovici, Some(g.clone()), DistStrategy::Gathered));
     }
     if t.strategy != DistStrategy::ZigZag {

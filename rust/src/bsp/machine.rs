@@ -678,6 +678,22 @@ impl<'a> Ctx<'a> {
         self.exchange_swap_inner(label, bufs, Expect::None);
     }
 
+    /// [`Ctx::exchange_swap`] with compiled per-sender receive counts:
+    /// the allocation-free sibling of [`Ctx::exchange_checked`].
+    /// `expected_in[i]` is the number of words sender `i` must deliver
+    /// (0 = no packet). The group-cyclic ladder uses this — each ladder
+    /// stage exchanges only within a rank's team, so most slots are
+    /// empty by design and a uniform expectation cannot express the
+    /// schedule.
+    pub fn exchange_swap_checked(
+        &mut self,
+        label: &'static str,
+        bufs: &mut [Vec<C64>],
+        expected_in: &[usize],
+    ) {
+        self.exchange_swap_inner(label, bufs, Expect::PerSender(expected_in));
+    }
+
     /// [`Ctx::exchange_swap`] with a uniform receive-count expectation:
     /// every non-self packet must carry exactly `words` words (FFTU's
     /// Eq. 2.12 packets — the compiled `packet_len` of the plan). A

@@ -56,6 +56,44 @@ pub fn fftu_report(shape: &[usize], p: usize) -> CostReport {
     }
 }
 
+/// FFTU beyond sqrt(N) (§3, the group-cyclic ladder): superstep 0 is
+/// unchanged from Eq. (2.12), then `k = max_l len(factors_l)` exchange
+/// supersteps, stage `j` moving `h_j = (N/p)(1 - 1/mprod_j)` words per
+/// processor (only stage-`j` teams of `mprod_j = prod_l m_{l,j}` ranks
+/// exchange) followed by the per-axis `F_{m_l}` butterflies plus one
+/// stage-twiddle multiply: `5 (N/p) log2(mprod_j) + 6 N/p`. The
+/// butterfly terms telescope to Eq. (2.12)'s `5 (N/p) log2 p`. Stage
+/// structure is recomputed from [`ladder_factors`] — the exact rule
+/// [`crate::fftu::FftuPlan::new`] compiles — so the analytic ledger
+/// stays cheap at paper scale (no output maps are built) yet matches
+/// the executed ledger superstep for superstep.
+///
+/// Panics if the grid is ladder-infeasible (callers gate on
+/// [`crate::fftu::grid_feasible`] / plan first).
+pub fn fftu_ladder_report(shape: &[usize], pgrid: &[usize]) -> CostReport {
+    use crate::fftu::{ladder_factors, LADDER_COMM_LABELS, LADDER_FFT_LABELS};
+    let p: usize = pgrid.iter().product();
+    let n: f64 = shape.iter().map(|&x| x as f64).product();
+    let np = n / p as f64;
+    let factors: Vec<Vec<usize>> = shape
+        .iter()
+        .zip(pgrid)
+        .map(|(&nl, &pl)| {
+            ladder_factors(pl, nl / pl).expect("ladder-infeasible grid in analytic report")
+        })
+        .collect();
+    let k = factors.iter().map(Vec::len).max().unwrap_or(0);
+    let mut supersteps = Vec::with_capacity(1 + 2 * k);
+    supersteps.push(comp("fftu-superstep0", 5.0 * np * log2(np) + 12.0 * np));
+    for j in 0..k {
+        let mprod: usize = factors.iter().map(|f| f.get(j).copied().unwrap_or(1)).product();
+        let h = (np - np / mprod as f64).round() as usize;
+        supersteps.push(comm(LADDER_COMM_LABELS[j], h, p, np as usize));
+        supersteps.push(comp(LADDER_FFT_LABELS[j], 5.0 * np * log2(mprod as f64) + 6.0 * np));
+    }
+    CostReport { supersteps }
+}
+
 /// Wrap any algorithm's analytic ledger for its *half-shape complex
 /// core* into a real-kind ledger: the packed core does all the
 /// communication — roughly half the volume of the c2c transform of

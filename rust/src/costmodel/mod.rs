@@ -5,8 +5,8 @@ pub mod analytic;
 pub mod machine;
 
 pub use analytic::{
-    fftu_c2r_zigzag_report, fftu_r2c_report, fftu_r2c_zigzag_report, fftu_report,
-    fftu_trig_report, fftu_trig_zigzag_report, heffte_report, pencil_report, popovici_report,
-    r2c_wrap_report, real_wrap_report, slab_report, trig_wrap_report,
+    fftu_c2r_zigzag_report, fftu_ladder_report, fftu_r2c_report, fftu_r2c_zigzag_report,
+    fftu_report, fftu_trig_report, fftu_trig_zigzag_report, heffte_report, pencil_report,
+    popovici_report, r2c_wrap_report, real_wrap_report, slab_report, trig_wrap_report,
 };
 pub use machine::{GapCurve, Machine};

@@ -66,6 +66,40 @@ pub fn comm_supersteps_needed(n: usize, p: usize) -> usize {
     ((p as f64).ln() / np.ln()).ceil() as usize
 }
 
+/// Per-superstep group-splitting factors for one axis of the ladder:
+/// `p_l` is peeled off greedily, each stage removing the largest factor
+/// `m_j = gcd(remaining, M_l)` that the local axis length `M_l = n_l/p_l`
+/// can absorb (a stage's `m`-point DFTs need `m | M_l` so each rank can
+/// host `M_l/m` complete butterfly lines). Returns the factor sequence
+/// `[m_1, m_2, ...]` with `∏ m_j = p_l`, or `None` when the greedy walk
+/// stalls (`gcd` hits 1 before the remainder does — e.g. `p = 12`,
+/// `M = 3`: after peeling 3 the leftover 4 shares no factor with 3).
+/// `p = 1` needs no stages and returns `Some(vec![])`.
+pub fn ladder_factors(p: usize, m_cap: usize) -> Option<Vec<usize>> {
+    assert!(p >= 1 && m_cap >= 1);
+    let mut rem = p;
+    let mut factors = Vec::with_capacity(8);
+    while rem > 1 {
+        let m = gcd(rem, m_cap);
+        if m == 1 {
+            return None;
+        }
+        factors.push(m);
+        rem /= m;
+    }
+    Some(factors)
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,6 +143,29 @@ mod tests {
         assert_eq!(comm_supersteps_needed(64, 32), 5);
         assert_eq!(comm_supersteps_needed(1 << 20, 1 << 10), 1);
         assert_eq!(comm_supersteps_needed(1 << 20, 1 << 12), 2);
+    }
+
+    #[test]
+    fn ladder_factor_sequences() {
+        // Within the sqrt(N) regime one stage suffices: m_1 = p.
+        assert_eq!(ladder_factors(4, 4), Some(vec![4]));
+        assert_eq!(ladder_factors(1, 7), Some(vec![]));
+        // Beyond sqrt(N): n = 64, p = 16 -> M = 4 -> [4, 4] (k = 2).
+        assert_eq!(ladder_factors(16, 4), Some(vec![4, 4]));
+        // n = 64, p = 32 -> M = 2 -> five halvings, matching
+        // comm_supersteps_needed(64, 32) = 5.
+        assert_eq!(ladder_factors(32, 2), Some(vec![2; 5]));
+        // Mixed radix: p = 8, M = 6 -> gcd walk gives [2, 2, 2].
+        assert_eq!(ladder_factors(8, 6), Some(vec![2, 2, 2]));
+        // Infeasible: p = 12, M = 3 peels 3 then stalls on gcd(4,3)=1.
+        assert_eq!(ladder_factors(12, 3), None);
+        // Greedy length never undershoots the analytic superstep count
+        // on feasible power-of-two cases.
+        for (n, p) in [(64usize, 16usize), (64, 32), (256, 64), (4096, 128)] {
+            let f = ladder_factors(p, n / p).unwrap();
+            assert_eq!(f.iter().product::<usize>(), p);
+            assert_eq!(f.len(), comm_supersteps_needed(n, p), "n={n} p={p}");
+        }
     }
 
     #[test]

@@ -4,6 +4,16 @@
 //! distribution with exactly **one** all-to-all communication superstep,
 //! starting and ending in the same distribution, for any `p_l^2 | n_l`
 //! processor grid (up to `sqrt(N)` processors in total).
+//!
+//! Beyond `sqrt(N)` (§3: some axis has `p_l^2 ∤ n_l`), the same plan
+//! type compiles the **group-cyclic ladder** instead: `k =`
+//! [`comm_supersteps_needed`] exchange supersteps walk the distribution
+//! from cyclic through group-cyclic with shrinking cycle
+//! `c: p_l -> p_l/m_1 -> ... -> 1`, each stage exchanging only within
+//! its `prod_l m_l`-rank teams. The gathered c2c/r2c/c2r/trig engines
+//! execute ladder plans transparently; the zig-zag/pairwise rank-local
+//! variants are single-all-to-all only and reject them with a typed
+//! [`FftError::Unsupported`].
 
 pub mod group_cyclic;
 pub mod pack;
@@ -11,9 +21,18 @@ pub mod plan;
 pub mod worker;
 pub mod zigzag;
 
-pub use group_cyclic::{comm_supersteps_needed, cyclic_to_group_cyclic, group_cyclic_dist};
-pub use pack::{pack_twiddle, pack_twiddle_odometer, unpack, PackProgram, PackRow, TwiddleTables};
-pub use plan::{axis_pmax, choose_grid, enumerate_grids, fftu_pmax, FftuPlan};
+pub use group_cyclic::{
+    comm_supersteps_needed, cyclic_to_group_cyclic, group_cyclic_dist, ladder_factors,
+};
+pub use pack::{
+    pack_indexed, pack_twiddle, pack_twiddle_odometer, unpack, unpack_indexed, PackProgram,
+    PackRow, TwiddleTables,
+};
+pub use plan::{
+    axis_feasible, axis_pmax, choose_grid, choose_grid_any, enumerate_grids, enumerate_grids_any,
+    fftu_pmax, grid_feasible, FftuPlan, LadderProgram, LadderStage, LADDER_COMM_LABELS,
+    LADDER_FFT_LABELS, MAX_LADDER_STAGES,
+};
 pub use worker::Worker;
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -275,10 +294,11 @@ pub fn fftu_execute_trig2_batch_arena(
         let worker = slot.as_mut().expect("arena worker just initialized");
         let b = inputs.len();
         let mut outs = Vec::with_capacity(b);
-        if ctx.pipeline_depth() >= 2 && b >= 2 {
+        if ctx.pipeline_depth() >= 2 && b >= 2 && !plan.is_ladder() {
             // Depth-2 pipeline, as in `fftu_execute_batch_arena`: the
             // Makhoul-composed scatter and superstep 0 of entry i+1
-            // overlap entry i's in-flight packets.
+            // overlap entry i's in-flight packets. (Ladder plans run the
+            // sequential arm — see `fftu_execute_batch_arena`.)
             worker.ensure_pipeline_buffers();
             let mut first = vec![C64::ZERO; plan.local_len()];
             plan.scatter_rank_into_trig2(inputs[0], rank, &mut first, negate_odd);
@@ -311,7 +331,7 @@ pub fn fftu_execute_trig2_batch_arena(
         arena.poison();
         FftError::from(failure)
     })?;
-    Ok((plan.dist.gather_batch(&outcome.outputs), outcome.report))
+    Ok((gather_batch_any(plan, &outcome.outputs), outcome.report))
 }
 
 /// Type-3 trig engine: the inputs are the phase-prepared complex arrays
@@ -341,8 +361,10 @@ pub fn fftu_execute_trig3_batch_arena(
         let worker = slot.as_mut().expect("arena worker just initialized");
         let b = inputs.len();
         let mut outs = Vec::with_capacity(b);
-        if ctx.pipeline_depth() >= 2 && b >= 2 {
+        if ctx.pipeline_depth() >= 2 && b >= 2 && !plan.is_ladder() {
             // Depth-2 pipeline over the phase-prepared inverse cores.
+            // (Ladder plans run the sequential arm — see
+            // `fftu_execute_batch_arena`.)
             worker.ensure_pipeline_buffers();
             let mut first = vec![C64::ZERO; plan.local_len()];
             plan.scatter_rank_into(inputs[0], rank, &mut first);
@@ -375,6 +397,18 @@ pub fn fftu_execute_trig3_batch_arena(
         arena.poison();
         FftError::from(failure)
     })?;
+    if plan.is_ladder() {
+        // The Makhoul-folded trig3 gather assumes the cyclic output
+        // placement; ladder outputs land in the group-cyclic telescoped
+        // placement, so gather the complex core through the plan's map
+        // and extract the real result from the global array instead.
+        let gathered = gather_batch_any(plan, &outcome.outputs);
+        let results: Vec<Vec<f64>> = gathered
+            .iter()
+            .map(|g| crate::fft::trignd::trig3_extract(g, &plan.shape, negate_odd, scale))
+            .collect();
+        return Ok((results, outcome.report));
+    }
     let mut results = vec![vec![0.0f64; plan.total()]; inputs.len()];
     for (rank, rank_outs) in outcome.outputs.iter().enumerate() {
         for (item, res) in rank_outs.iter().zip(results.iter_mut()) {
@@ -405,6 +439,7 @@ pub fn fftu_execute_trig2_zigzag_batch_arena(
     scale: f64,
 ) -> Result<(Vec<Vec<f64>>, CostReport), FftError> {
     use crate::fft::trignd::trig_combine_flops;
+    reject_ladder(plan, "trig zig-zag")?;
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
@@ -504,6 +539,7 @@ pub fn fftu_execute_trig3_zigzag_batch_arena(
     scale: f64,
 ) -> Result<(Vec<Vec<f64>>, CostReport), FftError> {
     use crate::fft::trignd::trig_combine_flops;
+    reject_ladder(plan, "trig zig-zag")?;
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
@@ -617,6 +653,7 @@ pub fn fftu_execute_r2c_pairwise_batch_arena(
 ) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
     use crate::fft::realnd::wrap_flops;
     let p = plan.num_procs();
+    reject_ladder(plan, "r2c pairwise")?;
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
     if session.is_none() {
@@ -748,6 +785,7 @@ pub fn fftu_execute_c2r_pairwise_batch_arena(
     tw: &[C64],
 ) -> Result<(Vec<Vec<C64>>, CostReport), FftError> {
     use crate::fft::realnd::wrap_flops;
+    reject_ladder(plan, "c2r pairwise")?;
     let p = plan.num_procs();
     debug_assert_eq!(arena.procs(), p, "arena built for a different processor count");
     let session = arena.begin_session();
@@ -866,6 +904,48 @@ pub fn fftu_execute_c2r_pairwise_batch_arena(
     Ok((plan.dist.gather_batch(&outcome.outputs), outcome.report))
 }
 
+/// Typed rejection for the rank-local (zig-zag / pairwise) engine
+/// variants, which assume the single-all-to-all cyclic output placement
+/// and have no group-cyclic counterpart: a beyond-sqrt(N) ladder plan
+/// must run the gathered engines instead. Plan-time strategy validation
+/// ([`crate::api`]) catches this earlier with the same error kind; this
+/// guard keeps the invariant even for direct engine callers.
+fn reject_ladder(plan: &FftuPlan, engine: &str) -> Result<(), FftError> {
+    if plan.is_ladder() {
+        return Err(FftError::Unsupported {
+            reason: format!(
+                "{engine} engine requires the single-all-to-all plan (p_l^2 | n_l); \
+                 this grid needs the k = {} group-cyclic ladder — use the gathered \
+                 engine (DistStrategy::Gathered)",
+                plan.comm_stages()
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// Batch gather that respects the plan's *output* placement: cyclic
+/// plans use the compiled strip gather (`Dist::gather_batch`); ladder
+/// plans (beyond sqrt(N), `k > 1` communication supersteps) place each
+/// rank's output through the plan's per-axis map
+/// ([`FftuPlan::gather_rank_into`]), whose distribution is group-cyclic
+/// telescoped to blocks, not cyclic.
+fn gather_batch_any(plan: &FftuPlan, outputs: &[Vec<Vec<C64>>]) -> Vec<Vec<C64>> {
+    if !plan.is_ladder() {
+        return plan.dist.gather_batch(outputs);
+    }
+    let b = outputs.first().map_or(0, Vec::len);
+    let mut results = Vec::with_capacity(b);
+    for item in 0..b {
+        let mut out = vec![C64::ZERO; plan.total()];
+        for (rank, rank_outs) in outputs.iter().enumerate() {
+            plan.gather_rank_into(&rank_outs[item], rank, &mut out);
+        }
+        results.push(out);
+    }
+    results
+}
+
 /// Execute a prebuilt [`FftuPlan`] on a batch of global arrays in ONE
 /// SPMD session, with per-rank [`Worker`] state held in a transient
 /// [`ExecArena`]. Callers that repeat executes on the same plan (the
@@ -920,13 +1000,17 @@ pub fn fftu_execute_batch_arena(
         let worker = slot.as_mut().expect("arena worker just initialized");
         let b = inputs.len();
         let mut outs = Vec::with_capacity(b);
-        if ctx.pipeline_depth() >= 2 && b >= 2 {
+        if ctx.pipeline_depth() >= 2 && b >= 2 && !plan.is_ladder() {
             // Depth-2 software pipeline: entry i's packets fly through
             // the split-phase all-to-all while entry i+1 scatters, runs
             // its local FFTs, and packs into the alternate packet set.
             // Per-entry floating-point work and ledger charges are
             // bit-identical to the sequential arm below — only the
-            // inter-entry interleaving changes.
+            // inter-entry interleaving changes. Ladder plans (k > 1
+            // exchanges per entry) always take the sequential arm: their
+            // stage buffers migrate between teammates through the swap
+            // exchange, so there is no second packet set to overlap
+            // into, and `pipeline(d)` is defined as a no-op for them.
             worker.ensure_pipeline_buffers();
             let mut first = vec![C64::ZERO; plan.local_len()];
             plan.scatter_rank_into(inputs[0], rank, &mut first);
@@ -959,7 +1043,7 @@ pub fn fftu_execute_batch_arena(
         arena.poison();
         FftError::from(failure)
     })?;
-    Ok((plan.dist.gather_batch(&outcome.outputs), outcome.report))
+    Ok((gather_batch_any(plan, &outcome.outputs), outcome.report))
 }
 
 /// The pre-PR engine, retained verbatim for the benchmark trajectory
@@ -973,6 +1057,11 @@ pub fn fftu_execute_batch_legacy(
     inputs: &[&[C64]],
     dir: Direction,
 ) -> (Vec<Vec<C64>>, CostReport) {
+    assert!(
+        !plan.is_ladder(),
+        "the pre-PR legacy engine predates the group-cyclic ladder; \
+         benchmark it on p <= sqrt(N) grids only"
+    );
     let locals: Vec<Vec<Vec<C64>>> = inputs.iter().map(|g| plan.dist.scatter_generic(g)).collect();
     let p = plan.num_procs();
     let outcome = run_spmd(p, |ctx| {
@@ -1047,6 +1136,87 @@ mod tests {
     fn single_processor_reduces_to_sequential() {
         let mut rng = Rng::new(0x66);
         check(&[12, 10], &[1, 1], &mut rng);
+    }
+
+    /// Beyond-sqrt(N) analogue of `check`: the grid violates
+    /// `p_l^2 | n_l` somewhere, so the plan compiles the group-cyclic
+    /// ladder and the schedule has exactly `k` communication supersteps.
+    fn check_ladder(shape: &[usize], pgrid: &[usize], rng: &mut Rng) {
+        let planner = Planner::new();
+        let plan = FftuPlan::new(shape, pgrid, &planner).unwrap();
+        assert!(plan.is_ladder(), "shape {shape:?} grid {pgrid:?} should need the ladder");
+        let n: usize = shape.iter().product();
+        let x = rand_global(n, rng);
+        let mut want = x.clone();
+        fftn_inplace(&mut want, shape, Direction::Forward);
+        let (got, report) = fftu_global(shape, pgrid, &x, Direction::Forward).unwrap();
+        let err = rel_l2_error(&got, &want);
+        assert!(err < 1e-9, "shape {shape:?} grid {pgrid:?}: err {err}");
+        // The headline property, generalized: exactly
+        // max_l comm_supersteps_needed(n_l, p_l) wire exchanges.
+        let k: usize = shape
+            .iter()
+            .zip(pgrid)
+            .map(|(&nl, &pl)| comm_supersteps_needed(nl, pl))
+            .max()
+            .unwrap();
+        assert!(k > 1, "case is not beyond sqrt(N)");
+        assert_eq!(plan.comm_stages(), k, "shape {shape:?} grid {pgrid:?}");
+        assert_eq!(report.comm_supersteps(), k, "shape {shape:?} grid {pgrid:?}");
+    }
+
+    #[test]
+    fn ladder_matches_sequential_1d() {
+        let mut rng = Rng::new(0xBAD);
+        check_ladder(&[64], &[16], &mut rng); // k = 2, m = [4, 4]
+        check_ladder(&[64], &[32], &mut rng); // k = 5, m = [2; 5]
+        check_ladder(&[27], &[9], &mut rng); // odd radix, k = 2
+        check_ladder(&[256], &[64], &mut rng); // k = 3
+    }
+
+    #[test]
+    fn ladder_matches_sequential_nd() {
+        let mut rng = Rng::new(0xBEE);
+        check_ladder(&[16, 16], &[8, 8], &mut rng);
+        check_ladder(&[16, 8], &[8, 4], &mut rng);
+        check_ladder(&[8, 16, 4], &[4, 8, 2], &mut rng);
+        // Mixed: one ladder axis, one k = 1 axis, one idle axis.
+        check_ladder(&[16, 16, 4], &[8, 2, 1], &mut rng);
+    }
+
+    #[test]
+    fn ladder_inverse_roundtrip() {
+        let mut rng = Rng::new(0xCAB);
+        for (shape, grid) in
+            [(vec![64usize], vec![16usize]), (vec![16, 16], vec![8, 8])]
+        {
+            let n: usize = shape.iter().product();
+            let x = rand_global(n, &mut rng);
+            let (y, _) = fftu_global(&shape, &grid, &x, Direction::Forward).unwrap();
+            let (mut z, _) = fftu_global(&shape, &grid, &y, Direction::Inverse).unwrap();
+            for v in z.iter_mut() {
+                *v = *v * (1.0 / n as f64);
+            }
+            assert!(max_abs_diff(&z, &x) < 1e-9, "shape {shape:?} grid {grid:?}");
+        }
+    }
+
+    #[test]
+    fn zigzag_engines_reject_ladder_plans_typed() {
+        let planner = Planner::new();
+        let plan = Arc::new(FftuPlan::new(&[64], &[16], &planner).unwrap());
+        let arena = ExecArena::new(plan.num_procs());
+        let err = fftu_execute_trig3_zigzag_batch_arena(&plan, &arena, &[], false, &[], 1.0)
+            .unwrap_err();
+        match err {
+            FftError::Unsupported { reason } => {
+                assert!(reason.contains("k = 2"), "unexpected reason: {reason}")
+            }
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        let err =
+            fftu_execute_c2r_pairwise_batch_arena(&plan, &arena, &[64, 2], &[], &[]).unwrap_err();
+        assert!(matches!(err, FftError::Unsupported { .. }));
     }
 
     #[test]

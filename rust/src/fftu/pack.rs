@@ -438,6 +438,83 @@ pub fn unpack(plan: &FftuPlan, incoming: &[Vec<C64>], w: &mut [C64]) {
     }
 }
 
+/// Strip-program pack for a **ladder stage** (§2.3): no twiddling, and
+/// the program's receiver index is a *team* index `u` (raveled over the
+/// stage's per-axis split factors `m_l`) that `ranks[u]` maps to the
+/// global destination rank. Reuses [`PackProgram::compile`] verbatim
+/// with `local_shape = M`, `pgrid = m`, `packet_shape = M/m`: the strip
+/// decomposition of Alg. 3.1 is exactly the per-axis
+/// `(bb, up) = (T_l div m_l, T_l mod m_l)` split the group-cyclic
+/// redistribution needs, so one compiled program per stage serves every
+/// rank, with only the tiny `ranks` table rank-dependent.
+///
+/// Every destination slot of `packets` named by `ranks` (including the
+/// self slot) must be pre-sized to the stage packet length.
+pub fn pack_indexed(prog: &PackProgram, src: &[C64], ranks: &[u32], packets: &mut [Vec<C64>]) {
+    let (inner_n, inner_p, strip_len) = (prog.inner_n, prog.inner_p, prog.strip_len);
+    let mut flat = 0usize;
+    for row in &prog.rows {
+        let base_team = row.rank as usize * inner_p;
+        let base_off = row.off as usize * strip_len;
+        let src_row = &src[flat..flat + inner_n];
+        if inner_p == 1 {
+            let dst = &mut packets[ranks[base_team] as usize][base_off..base_off + inner_n];
+            dst.copy_from_slice(src_row);
+        } else {
+            for j in 0..inner_p {
+                let dst =
+                    &mut packets[ranks[base_team + j] as usize][base_off..base_off + strip_len];
+                for (k, dv) in dst.iter_mut().enumerate() {
+                    *dv = src_row[j + k * inner_p];
+                }
+            }
+        }
+        flat += inner_n;
+    }
+}
+
+/// Receive-side assembly for a **ladder stage**: the packet from the
+/// teammate with per-axis group coordinate `s1_l` (team index `v`,
+/// global rank `ranks[v]`) occupies the block with axis-`l` range
+/// `[s1_l * nb_l, (s1_l + 1) * nb_l)` of the local array — the
+/// precomputed `unpack_base[v]` of the stage program, exactly Alg. 2.3
+/// line 5 with the stage's `(m, nb)` geometry. `packet_shape` is the
+/// stage's per-axis packet shape `nb = M/m`.
+pub fn unpack_indexed(
+    prog: &PackProgram,
+    packet_shape: &[usize],
+    ranks: &[u32],
+    packets: &[Vec<C64>],
+    out: &mut [C64],
+) {
+    let d = packet_shape.len();
+    debug_assert!(d <= MAX_PACK_DIMS, "ladder plans reject d > MAX_PACK_DIMS");
+    let lstride = &prog.lstride;
+    let run = packet_shape[d - 1];
+    let words: usize = packet_shape.iter().product();
+    let runs_per_packet = words / run;
+    let mut j_stack = [0usize; MAX_PACK_DIMS];
+    for (v, &gr) in ranks.iter().enumerate() {
+        let packet = &packets[gr as usize];
+        debug_assert_eq!(packet.len(), words);
+        let j = &mut j_stack[..d];
+        j.fill(0);
+        let mut woff = prog.unpack_base[v];
+        for r in 0..runs_per_packet {
+            out[woff..woff + run].copy_from_slice(&packet[r * run..(r + 1) * run]);
+            for l in (0..d.saturating_sub(1)).rev() {
+                j[l] += 1;
+                if j[l] < packet_shape[l] {
+                    woff += lstride[l];
+                    break;
+                }
+                j[l] = 0;
+                woff -= (packet_shape[l] - 1) * lstride[l];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -595,6 +672,54 @@ mod tests {
                     let got = w[(2 * a + i) * 2 + b];
                     assert_eq!(got, C64::new(s as f64, i as f64), "sender ({a},{b}) row {i}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_pack_unpack_stage_geometry() {
+        // One ladder stage on a local axis of M = 4 split by m = 2:
+        // strips {0,2} -> team 0, {1,3} -> team 1; receive side places
+        // teammate v's packet at base v * nb = 2v. With the identity
+        // rank table this is the classic mod/div shuffle.
+        let prog = PackProgram::compile(&[4], &[2], &[2]);
+        let src: Vec<C64> = (0..4).map(|i| C64::new(i as f64, 0.0)).collect();
+        let ranks = [0u32, 1u32];
+        let mut packets = vec![vec![C64::ZERO; 2]; 2];
+        pack_indexed(&prog, &src, &ranks, &mut packets);
+        assert_eq!(packets[0], vec![src[0], src[2]]);
+        assert_eq!(packets[1], vec![src[1], src[3]]);
+        let mut out = vec![C64::ZERO; 4];
+        unpack_indexed(&prog, &[2], &ranks, &packets, &mut out);
+        assert_eq!(out, vec![src[0], src[2], src[1], src[3]]);
+        // Permuted rank table: team u's strips land in packets[ranks[u]],
+        // and the unpack reads them back from the same slots.
+        let ranks_perm = [1u32, 0u32];
+        let mut packets2 = vec![vec![C64::ZERO; 2]; 2];
+        pack_indexed(&prog, &src, &ranks_perm, &mut packets2);
+        assert_eq!(packets2[1], vec![src[0], src[2]]);
+        let mut out2 = vec![C64::ZERO; 4];
+        unpack_indexed(&prog, &[2], &ranks_perm, &packets2, &mut out2);
+        assert_eq!(out2, out);
+    }
+
+    #[test]
+    fn indexed_pack_unpack_2d_stage() {
+        // 2D stage: M = (4, 6), m = (2, 3), nb = (2, 2). Round-trip
+        // through pack + unpack is the per-axis mod/div permutation.
+        let prog = PackProgram::compile(&[4, 6], &[2, 3], &[2, 2]);
+        let src: Vec<C64> = (0..24).map(|i| C64::new(i as f64, -1.0)).collect();
+        let ranks: Vec<u32> = (0..6).collect();
+        let mut packets = vec![vec![C64::ZERO; 4]; 6];
+        pack_indexed(&prog, &src, &ranks, &mut packets);
+        let mut out = vec![C64::ZERO; 24];
+        unpack_indexed(&prog, &[2, 2], &ranks, &packets, &mut out);
+        // Element T = (t0, t1) lands at (s1_0 * 2 + b0, s1_1 * 2 + b1)
+        // with s1 = T mod m, b = T div m.
+        for t0 in 0..4 {
+            for t1 in 0..6 {
+                let dst = ((t0 % 2) * 2 + t0 / 2) * 6 + (t1 % 3) * 2 + t1 / 3;
+                assert_eq!(out[dst], src[t0 * 6 + t1], "T=({t0},{t1})");
             }
         }
     }

@@ -4,9 +4,182 @@ use std::sync::Arc;
 
 use crate::api::FftError;
 use crate::dist::GridDist;
-use crate::fft::{NdPlan, Plan, Planner};
+use crate::fft::{C64, NdPlan, Plan, Planner};
 
-use super::pack::PackProgram;
+use super::group_cyclic::ladder_factors;
+use super::pack::{PackProgram, MAX_PACK_DIMS};
+
+/// Ceiling on the number of ladder stages a plan will compile (`k =
+/// comm_supersteps_needed`). Eight stages means `p > (n/p)^7` — far past
+/// any grid the cost model would ever pick; the cap exists so the ledger
+/// labels can be `&'static str` arrays.
+pub const MAX_LADDER_STAGES: usize = 8;
+
+/// Communication-superstep labels of the group-cyclic ladder, one per
+/// stage in execution order. The static verifier's collective lint
+/// checks these *in order*, which is what catches a wrong cycle
+/// sequence or a mislabelled stage.
+pub const LADDER_COMM_LABELS: [&str; MAX_LADDER_STAGES] = [
+    "fftu-ladder-0",
+    "fftu-ladder-1",
+    "fftu-ladder-2",
+    "fftu-ladder-3",
+    "fftu-ladder-4",
+    "fftu-ladder-5",
+    "fftu-ladder-6",
+    "fftu-ladder-7",
+];
+
+/// Computation-superstep labels of the per-stage `F_m` + twiddle passes.
+pub const LADDER_FFT_LABELS: [&str; MAX_LADDER_STAGES] = [
+    "fftu-ladder-fft-0",
+    "fftu-ladder-fft-1",
+    "fftu-ladder-fft-2",
+    "fftu-ladder-fft-3",
+    "fftu-ladder-fft-4",
+    "fftu-ladder-fft-5",
+    "fftu-ladder-fft-6",
+    "fftu-ladder-fft-7",
+];
+
+/// One redistribution + butterfly pass of the beyond-sqrt(N) ladder
+/// (§2.3): the group-cyclic cycle shrinks from `axes_c[l]` to
+/// `axes_c[l] / axes_m[l]` on every axis, via an all-to-all *within
+/// teams of `mprod` ranks*, a per-axis `F_{m_l}` over strided slot
+/// lines, and the stage twiddle `w_{c_l}^{s2_l q1_l}` (the Eq. 3.1
+/// generalization).
+pub struct LadderStage {
+    /// Per-axis split factor `m_l` this stage (1 = axis already done).
+    pub axes_m: Vec<usize>,
+    /// Per-axis cycle `c_l` *entering* this stage (stage 0: `c_l = p_l`).
+    pub axes_c: Vec<usize>,
+    /// Per-axis lines per team member, `nb_l = (n_l/p_l) / m_l`.
+    pub nbs: Vec<usize>,
+    /// Team size `prod_l m_l` (ranks exchanging this stage).
+    pub mprod: usize,
+    /// Stage packet length in words: `local_len / mprod`.
+    pub words: usize,
+    /// Strip program over `(local_shape, m, nb)`: the *same* Alg. 3.1
+    /// compilation as superstep 1's packer, reinterpreted — the row
+    /// "rank" is the team index `u = T mod m` and `unpack_base[v]` is
+    /// teammate `v`'s block corner `sum_l s1_l nb_l lstride_l`.
+    pub prog: PackProgram,
+    /// `F_{m_l}` plans for the active axes (`None` where `m_l = 1`).
+    pub axis_plans: Vec<Option<Arc<Plan>>>,
+    /// Ledger label of the stage's communication superstep.
+    pub comm_label: &'static str,
+    /// Ledger label of the stage's computation superstep.
+    pub fft_label: &'static str,
+}
+
+impl std::fmt::Debug for LadderStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LadderStage")
+            .field("axes_m", &self.axes_m)
+            .field("axes_c", &self.axes_c)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Compiled beyond-sqrt(N) executor: the full cyclic -> group-cyclic ->
+/// ... -> block redistribution ladder plus the output placement map.
+/// Present on an [`FftuPlan`] exactly when some axis has
+/// `p_l > sqrt(n_l)` (more precisely: when `p_l^2 | n_l` fails
+/// somewhere, so the single-all-to-all engine cannot run).
+#[derive(Debug)]
+pub struct LadderProgram {
+    /// Stages in execution order; `stages.len()` is the plan's `k`.
+    pub stages: Vec<LadderStage>,
+    /// Output placement, per axis: `out_axis_map[l][s_l * M_l + t_l]` is
+    /// the *global* axis-`l` coordinate of local slot `t_l` on a rank
+    /// with axis coordinate `s_l`, after the last stage. (The ladder's
+    /// output distribution is not cyclic — each rank ends up owning
+    /// `q * M_l + b` lines per the telescoped `q = q1 + m q2 + ...`
+    /// digit reconstruction — so the gather needs this map.)
+    pub out_axis_map: Vec<Vec<u32>>,
+}
+
+impl LadderProgram {
+    /// Compile the ladder for a grid with `p_l | n_l` on every axis.
+    /// `factors[l]` is the per-axis greedy gcd factorization from
+    /// [`ladder_factors`] (`prod = p_l`, each factor divides `n_l/p_l`).
+    fn compile(
+        shape: &[usize],
+        pgrid: &[usize],
+        local_shape: &[usize],
+        factors: &[Vec<usize>],
+        planner: &Planner,
+    ) -> Self {
+        let d = shape.len();
+        let k = factors.iter().map(Vec::len).max().unwrap_or(0);
+        let local_len: usize = local_shape.iter().product();
+        let mut stages = Vec::with_capacity(k);
+        let mut cyc: Vec<usize> = pgrid.to_vec();
+        for j in 0..k {
+            let axes_m: Vec<usize> =
+                (0..d).map(|l| factors[l].get(j).copied().unwrap_or(1)).collect();
+            let axes_c = cyc.clone();
+            let nbs: Vec<usize> =
+                local_shape.iter().zip(&axes_m).map(|(&ml, &m)| ml / m).collect();
+            let mprod: usize = axes_m.iter().product();
+            let prog = PackProgram::compile(local_shape, &axes_m, &nbs);
+            let axis_plans: Vec<Option<Arc<Plan>>> = axes_m
+                .iter()
+                .map(|&m| if m > 1 { Some(planner.plan(m)) } else { None })
+                .collect();
+            for (c, &m) in cyc.iter_mut().zip(&axes_m) {
+                *c /= m;
+            }
+            stages.push(LadderStage {
+                axes_m,
+                axes_c,
+                nbs,
+                mprod,
+                words: local_len / mprod,
+                prog,
+                axis_plans,
+                comm_label: LADDER_COMM_LABELS[j],
+                fft_label: LADDER_FFT_LABELS[j],
+            });
+        }
+        debug_assert!(cyc.iter().all(|&c| c == 1), "ladder must end at cycle 1");
+        // Output placement: per axis, invert the slot bookkeeping by
+        // walking the stages backward (later stages contribute higher
+        // digits of the output index q = q1 + m q2 + ...): the final
+        // slot decomposes as q1 * nb + bb, and the slot *entering* the
+        // stage was bb * m + u with u the rank's own group residue.
+        let mut out_axis_map = Vec::with_capacity(d);
+        for l in 0..d {
+            let ml = local_shape[l];
+            let mut map = vec![0u32; pgrid[l] * ml];
+            for s in 0..pgrid[l] {
+                for t in 0..ml {
+                    let (mut slot, mut q) = (t, 0usize);
+                    for stage in stages.iter().rev() {
+                        let m = stage.axes_m[l];
+                        if m == 1 {
+                            continue;
+                        }
+                        let cp = stage.axes_c[l] / m;
+                        let nb = stage.nbs[l];
+                        let (q1, bb) = (slot / nb, slot % nb);
+                        q = q1 + m * q;
+                        let u = (s % stage.axes_c[l]) / cp;
+                        slot = bb * m + u;
+                    }
+                    map[s * ml + t] = (q * ml + slot) as u32;
+                }
+            }
+            out_axis_map.push(map);
+        }
+        LadderProgram { stages, out_axis_map }
+    }
+
+    /// Number of communication supersteps (`k` of §2.3).
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+}
 
 /// Validated configuration of Algorithm 2.3 for one (shape, grid) pair.
 ///
@@ -14,6 +187,11 @@ use super::pack::PackProgram;
 /// FFT plan of superstep 0, the per-axis `F_{p_l}` plans of superstep 2,
 /// and the derived shapes. Per-rank state (twiddle tables, scratch) lives
 /// in [`super::worker::Worker`].
+///
+/// Two regimes share the type: within `p_l <= sqrt(n_l)` the classic
+/// single-all-to-all engine runs (`ladder` is `None`); beyond it the
+/// plan carries a compiled [`LadderProgram`] and the worker runs
+/// `k = comm_supersteps_needed` exchange supersteps instead.
 pub struct FftuPlan {
     /// Global array shape `n_1 x ... x n_d`.
     pub shape: Vec<usize>,
@@ -31,8 +209,13 @@ pub struct FftuPlan {
     pub axis_plans: Vec<Arc<Plan>>,
     /// Compiled strip schedule of Alg. 3.1 (pack *and* unpack geometry):
     /// rank-independent, built once here, executed allocation-free by
-    /// every [`super::worker::Worker`].
+    /// every [`super::worker::Worker`]. For ladder plans this is the
+    /// trivial single-strip program (the stage programs live in
+    /// `ladder`); it still feeds the shared superstep-0 twiddle tables.
     pub pack: PackProgram,
+    /// Beyond-sqrt(N) ladder (§2.3), present iff `p_l^2 | n_l` fails on
+    /// some axis. `None` = the single-all-to-all engine.
+    pub ladder: Option<LadderProgram>,
 }
 
 impl std::fmt::Debug for FftuPlan {
@@ -45,7 +228,11 @@ impl std::fmt::Debug for FftuPlan {
 }
 
 impl FftuPlan {
-    /// Build a plan, checking the paper's constraint `p_l^2 | n_l`.
+    /// Build a plan. Within the paper's constraint `p_l^2 | n_l` this is
+    /// the classic single-all-to-all configuration; beyond it (`p_l` up
+    /// to `n_l` itself) the plan compiles the §2.3 group-cyclic ladder,
+    /// provided `p_l | n_l` and `p_l` greedily factors into divisors of
+    /// `n_l / p_l` (see [`ladder_factors`]).
     pub fn new(shape: &[usize], pgrid: &[usize], planner: &Planner) -> Result<Self, FftError> {
         if shape.len() != pgrid.len() {
             return Err(FftError::RankMismatch { shape: shape.len(), grid: pgrid.len() });
@@ -54,17 +241,67 @@ impl FftuPlan {
             if p == 0 {
                 return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l >= 1" });
             }
-            if n % (p * p) != 0 {
-                return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l^2 | n_l" });
+            if n % p != 0 {
+                return Err(FftError::AxisConstraint { axis, n, p, requires: "p_l | n_l" });
             }
         }
-        let dist = GridDist::cyclic(shape, pgrid)?;
+        let single = shape.iter().zip(pgrid).all(|(&n, &p)| n % (p * p) == 0);
         let local_shape: Vec<usize> = shape.iter().zip(pgrid).map(|(&n, &p)| n / p).collect();
-        let packet_shape: Vec<usize> =
-            shape.iter().zip(pgrid).map(|(&n, &p)| n / (p * p)).collect();
+        let ladder = if single {
+            None
+        } else {
+            // Beyond sqrt(N): compile the ladder (or reject, typed).
+            if shape.len() > MAX_PACK_DIMS {
+                return Err(FftError::Unsupported {
+                    reason: format!(
+                        "group-cyclic ladder supports at most {MAX_PACK_DIMS} axes, got {}",
+                        shape.len()
+                    ),
+                });
+            }
+            let mut factors = Vec::with_capacity(shape.len());
+            for (axis, ((&n, &p), &ml)) in
+                shape.iter().zip(pgrid).zip(&local_shape).enumerate()
+            {
+                match ladder_factors(p, ml) {
+                    Some(f) => factors.push(f),
+                    None => {
+                        return Err(FftError::AxisConstraint {
+                            axis,
+                            n,
+                            p,
+                            requires: "p_l factors into divisors of n_l/p_l (ladder)",
+                        })
+                    }
+                }
+            }
+            let k = factors.iter().map(Vec::len).max().unwrap_or(0);
+            if k > MAX_LADDER_STAGES {
+                return Err(FftError::Unsupported {
+                    reason: format!(
+                        "group-cyclic ladder needs {k} stages, ceiling is {MAX_LADDER_STAGES}"
+                    ),
+                });
+            }
+            Some(LadderProgram::compile(shape, pgrid, &local_shape, &factors, planner))
+        };
+        let dist = GridDist::cyclic(shape, pgrid)?;
+        // Ladder plans have no single uniform all-to-all: packet_shape
+        // degenerates to the whole local array and `pack` to the trivial
+        // one-strip program (which keeps the shared twiddle tables'
+        // strip permutation well-formed).
+        let packet_shape: Vec<usize> = if ladder.is_none() {
+            shape.iter().zip(pgrid).map(|(&n, &p)| n / (p * p)).collect()
+        } else {
+            local_shape.clone()
+        };
         let nd_plan = NdPlan::new(&local_shape, planner);
         let axis_plans = pgrid.iter().map(|&p| planner.plan(p)).collect();
-        let pack = PackProgram::compile(&local_shape, pgrid, &packet_shape);
+        let pack = if ladder.is_none() {
+            PackProgram::compile(&local_shape, pgrid, &packet_shape)
+        } else {
+            PackProgram::compile(&local_shape, &vec![1; shape.len()], &packet_shape)
+        };
         Ok(FftuPlan {
             shape: shape.to_vec(),
             pgrid: pgrid.to_vec(),
@@ -74,7 +311,185 @@ impl FftuPlan {
             nd_plan,
             axis_plans,
             pack,
+            ladder,
         })
+    }
+
+    /// Does this plan run the beyond-sqrt(N) group-cyclic ladder?
+    pub fn is_ladder(&self) -> bool {
+        self.ladder.is_some()
+    }
+
+    /// Number of communication supersteps the executor performs: the
+    /// ladder's `k`, or 1 for the single-all-to-all engine.
+    pub fn comm_stages(&self) -> usize {
+        self.ladder.as_ref().map_or(1, LadderProgram::num_stages)
+    }
+
+    /// Global ranks of `rank`'s exchange team at ladder stage
+    /// `stage_idx`, indexed by team index `u` (raveled row-major over
+    /// the stage's `axes_m`): the teammate with per-axis group residue
+    /// `u_l` sits at axis coordinate `base_l + u_l cp_l + s2_l`, where
+    /// `a_l = s_l mod c_l = s1_l cp_l + s2_l` and `base_l = s_l - a_l`.
+    /// The same table serves both directions: outgoing strips for team
+    /// index `u` go *to* `team[u]`, and the packet placed at
+    /// `unpack_base[v]` comes *from* `team[v]`.
+    pub fn ladder_team_ranks(&self, rank: usize, stage_idx: usize) -> Vec<u32> {
+        let lad = self.ladder.as_ref().expect("ladder_team_ranks on a k=1 plan");
+        let stage = &lad.stages[stage_idx];
+        let d = self.pgrid.len();
+        let s = self.dist.proc_coords(rank);
+        let mut team = vec![0u32; stage.mprod];
+        for (v, slot) in team.iter_mut().enumerate() {
+            let mut rem = v;
+            let mut coord = 0usize;
+            for l in 0..d {
+                // Row-major unravel of v over axes_m, fused with the
+                // row-major ravel of the axis coordinate over pgrid.
+                let mstride: usize = stage.axes_m[l + 1..].iter().product();
+                let u = (rem / mstride) % stage.axes_m[l];
+                rem %= mstride;
+                let c = stage.axes_c[l];
+                let cp = c / stage.axes_m[l];
+                let a = s[l] % c;
+                let axis = (s[l] - a) + u * cp + a % cp;
+                coord = coord * self.pgrid[l] + axis;
+            }
+            *slot = coord as u32;
+        }
+        team
+    }
+
+    /// `rank`'s own team index at ladder stage `stage_idx` (the `v` with
+    /// `ladder_team_ranks(rank, j)[v] == rank`): raveled per-axis `s1_l`.
+    pub fn ladder_self_team(&self, rank: usize, stage_idx: usize) -> usize {
+        let lad = self.ladder.as_ref().expect("ladder_self_team on a k=1 plan");
+        let stage = &lad.stages[stage_idx];
+        let s = self.dist.proc_coords(rank);
+        let mut v = 0usize;
+        for l in 0..self.pgrid.len() {
+            let c = stage.axes_c[l];
+            let cp = c / stage.axes_m[l];
+            v = v * stage.axes_m[l] + (s[l] % c) / cp;
+        }
+        v
+    }
+
+    /// Write rank `rank`'s post-execution local array into the global
+    /// row-major output. For k = 1 plans the output distribution is the
+    /// input's (cyclic) and this mirrors [`Self::scatter_rank_into`];
+    /// ladder plans place through the compiled per-axis output map
+    /// (their output distribution telescopes to `q * M_l + b`, not
+    /// cyclic). Ranks own disjoint output sets, so the driver calls this
+    /// once per rank into one buffer. Allocation-free up to
+    /// [`MAX_PACK_DIMS`] axes.
+    pub fn gather_rank_into(&self, local: &[C64], rank: usize, out: &mut [C64]) {
+        let d = self.shape.len();
+        assert_eq!(local.len(), self.local_len(), "gather: local length mismatch");
+        assert_eq!(out.len(), self.total(), "gather: global length mismatch");
+        let mut gstride_stack = [1usize; MAX_PACK_DIMS];
+        let mut gstride_heap = if d > MAX_PACK_DIMS { vec![1usize; d] } else { Vec::new() };
+        let gstride: &mut [usize] =
+            if d > MAX_PACK_DIMS { &mut gstride_heap } else { &mut gstride_stack[..d] };
+        for l in (0..d.saturating_sub(1)).rev() {
+            gstride[l] = gstride[l + 1] * self.shape[l + 1];
+        }
+        let mut s_stack = [0usize; MAX_PACK_DIMS];
+        let mut s_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
+        let s: &mut [usize] = if d > MAX_PACK_DIMS { &mut s_heap } else { &mut s_stack[..d] };
+        let mut rem = rank;
+        for l in (0..d).rev() {
+            s[l] = rem % self.pgrid[l];
+            rem /= self.pgrid[l];
+        }
+        match &self.ladder {
+            None => {
+                // Cyclic: local t -> global t_l p_l + s_l, the exact
+                // inverse walk of `scatter_rank_into`.
+                let mut gbase = 0usize;
+                for l in 0..d {
+                    gbase += s[l] * gstride[l];
+                }
+                let inner_n = self.local_shape[d - 1];
+                let inner_p = self.pgrid[d - 1];
+                let rows = self.local_len() / inner_n;
+                let mut t_stack = [0usize; MAX_PACK_DIMS];
+                let mut t_heap = if d > MAX_PACK_DIMS { vec![0usize; d] } else { Vec::new() };
+                let t: &mut [usize] =
+                    if d > MAX_PACK_DIMS { &mut t_heap } else { &mut t_stack[..d] };
+                for (row, chunk) in local.chunks_exact(inner_n).enumerate() {
+                    for (td, &v) in chunk.iter().enumerate() {
+                        out[gbase + td * inner_p] = v;
+                    }
+                    if row + 1 == rows {
+                        break;
+                    }
+                    for l in (0..d - 1).rev() {
+                        t[l] += 1;
+                        if t[l] < self.local_shape[l] {
+                            gbase += self.pgrid[l] * gstride[l];
+                            break;
+                        }
+                        t[l] = 0;
+                        gbase -= (self.local_shape[l] - 1) * self.pgrid[l] * gstride[l];
+                    }
+                }
+            }
+            Some(lad) => {
+                // Ladder: per-axis compiled map. Odometer over the local
+                // slots with an incremental global-offset prefix; the
+                // inner axis is a table-driven scatter.
+                let mut t_stack = [0usize; MAX_PACK_DIMS];
+                let t: &mut [usize] = &mut t_stack[..d];
+                let mut base_stack = [0usize; MAX_PACK_DIMS];
+                let base: &mut [usize] = &mut base_stack[..d];
+                for l in 0..d.saturating_sub(1) {
+                    let g = lad.out_axis_map[l][s[l] * self.local_shape[l]] as usize;
+                    base[l] = if l == 0 { 0 } else { base[l - 1] } + g * gstride[l];
+                }
+                let inner_n = self.local_shape[d - 1];
+                let inner_map =
+                    &lad.out_axis_map[d - 1][s[d - 1] * inner_n..(s[d - 1] + 1) * inner_n];
+                let rows = self.local_len() / inner_n;
+                for (row, chunk) in local.chunks_exact(inner_n).enumerate() {
+                    let obase = if d >= 2 { base[d - 2] } else { 0 };
+                    for (td, &v) in chunk.iter().enumerate() {
+                        out[obase + inner_map[td] as usize] = v;
+                    }
+                    if row + 1 == rows {
+                        break;
+                    }
+                    let mut l = d as isize - 2;
+                    while l >= 0 {
+                        let lu = l as usize;
+                        t[lu] += 1;
+                        if t[lu] < self.local_shape[lu] {
+                            break;
+                        }
+                        t[lu] = 0;
+                        l -= 1;
+                    }
+                    debug_assert!(l >= 0, "gather odometer exhausted early");
+                    for lv in l as usize..=d - 2 {
+                        let g = lad.out_axis_map[lv]
+                            [s[lv] * self.local_shape[lv] + t[lv]]
+                            as usize;
+                        base[lv] = if lv == 0 { 0 } else { base[lv - 1] } + g * gstride[lv];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Gather every rank's output into one global array —
+    /// ladder-placement-aware (use instead of `dist.gather` whenever the
+    /// plan might be a ladder plan).
+    pub fn gather_outputs(&self, outputs: &[Vec<C64>]) -> Vec<C64> {
+        let mut out = vec![C64::ZERO; self.total()];
+        for (rank, local) in outputs.iter().enumerate() {
+            self.gather_rank_into(local, rank, &mut out);
+        }
+        out
     }
 
     pub fn total(&self) -> usize {
@@ -348,6 +763,21 @@ impl FftuPlan {
             5.0 * self.local_len() as f64 * (p as f64).log2()
         }
     }
+
+    /// Model flops of ladder stage `stage_idx`'s computation superstep:
+    /// `5 (N/p) log2(mprod_j) + 6 (N/p)` — the per-axis `F_{m_l}`
+    /// butterflies over the local volume plus one complex multiply per
+    /// element for the stage twiddle (charged uniformly on every stage,
+    /// including the last where the factors collapse to 1, so the
+    /// executed and analytic ledgers agree term by term). Summed over
+    /// stages the butterfly terms telescope to superstep 2's
+    /// `5 (N/p) log2(p)`.
+    pub fn flops_ladder_stage(&self, stage_idx: usize) -> f64 {
+        let lad = self.ladder.as_ref().expect("flops_ladder_stage on a k=1 plan");
+        let mprod = lad.stages[stage_idx].mprod as f64;
+        let np = self.local_len() as f64;
+        5.0 * np * mprod.log2() + 6.0 * np
+    }
 }
 
 /// Largest usable `p_l` for one axis of length `n`: the biggest `q` with
@@ -462,6 +892,87 @@ pub fn enumerate_grids(shape: &[usize], p: usize) -> Vec<Vec<usize>> {
     out
 }
 
+/// Can one axis of length `n` host `q` processors in *some* FFTU
+/// regime — single all-to-all (`q^2 | n`) or the §2.3 ladder (`q | n`
+/// and the greedy factorization succeeds within the stage ceiling)?
+pub fn axis_feasible(n: usize, q: usize) -> bool {
+    if q == 0 || n % q != 0 {
+        return false;
+    }
+    if n % (q * q) == 0 {
+        return true;
+    }
+    ladder_factors(q, n / q).is_some_and(|f| f.len() <= MAX_LADDER_STAGES)
+}
+
+/// Is `(shape, pgrid)` executable by some FFTU engine? True iff
+/// [`FftuPlan::new`] would succeed: every axis passes
+/// [`axis_feasible`], and beyond-sqrt(N) grids respect the dimension
+/// cap of the compiled ladder.
+pub fn grid_feasible(shape: &[usize], pgrid: &[usize]) -> bool {
+    if shape.len() != pgrid.len() {
+        return false;
+    }
+    let single = shape.iter().zip(pgrid).all(|(&n, &q)| q >= 1 && n % (q * q) == 0);
+    if !single && shape.len() > MAX_PACK_DIMS {
+        return false;
+    }
+    shape.iter().zip(pgrid).all(|(&n, &q)| axis_feasible(n, q))
+}
+
+/// Every processor grid *any* FFTU regime admits for this shape: the
+/// single-all-to-all grids of [`enumerate_grids`] first (same order —
+/// [`choose_grid`]'s pick leads when it exists), then the beyond-sqrt(N)
+/// ladder grids lexicographically. The planner prices all of them, so
+/// `Algorithm::Auto` scales past `p_max = sqrt(N)` whenever the cost
+/// model favors it (and a `Grid::Auto` request beyond `fftu_pmax` still
+/// resolves instead of erroring).
+pub fn enumerate_grids_any(shape: &[usize], p: usize) -> Vec<Vec<usize>> {
+    fn rec(
+        shape: &[usize],
+        axis: usize,
+        rem: usize,
+        cur: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if axis == shape.len() {
+            if rem == 1 {
+                out.push(cur.clone());
+            }
+            return;
+        }
+        let mut q = 1usize;
+        while q <= rem {
+            if rem % q == 0 && axis_feasible(shape[axis], q) {
+                cur.push(q);
+                rec(shape, axis + 1, rem / q, cur, out);
+                cur.pop();
+            }
+            q += 1;
+        }
+    }
+    let mut out = enumerate_grids(shape, p);
+    if shape.len() > MAX_PACK_DIMS {
+        return out;
+    }
+    let mut all = Vec::new();
+    rec(shape, 0, p, &mut Vec::with_capacity(shape.len()), &mut all);
+    all.sort();
+    for g in all {
+        if !out.contains(&g) {
+            out.push(g);
+        }
+    }
+    out
+}
+
+/// [`choose_grid`] with the ladder fallback: the single-all-to-all pick
+/// when one exists, otherwise the first beyond-sqrt(N) grid of
+/// [`enumerate_grids_any`] (deterministic — lexicographically least).
+pub fn choose_grid_any(shape: &[usize], p: usize) -> Option<Vec<usize>> {
+    choose_grid(shape, p).or_else(|| enumerate_grids_any(shape, p).into_iter().next())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -556,15 +1067,129 @@ mod tests {
     fn plan_rejects_bad_grid_with_typed_errors() {
         use crate::api::FftError;
         let planner = Planner::new();
+        // 16 ∤ 8, but 4 | 8 and ladder_factors(4, 2) = [2, 2]: since
+        // PR 10 this grid PLANS (beyond sqrt(N)) instead of erroring.
+        let plan = FftuPlan::new(&[8, 8], &[4, 1], &planner).unwrap();
+        assert!(plan.is_ladder());
+        assert_eq!(plan.comm_stages(), 2);
+        // Still typed errors: non-dividing p ...
         assert!(matches!(
-            FftuPlan::new(&[8, 8], &[4, 1], &planner), // 16 ∤ 8
-            Err(FftError::AxisConstraint { axis: 0, n: 8, p: 4, requires: "p_l^2 | n_l" })
+            FftuPlan::new(&[8, 8], &[3, 1], &planner),
+            Err(FftError::AxisConstraint { axis: 0, n: 8, p: 3, requires: "p_l | n_l" })
         ));
+        // ... an infeasible greedy factorization (p = 12, n/p = 3:
+        // after peeling 3 the leftover 4 shares no factor with 3) ...
+        assert!(matches!(
+            FftuPlan::new(&[36, 8], &[12, 1], &planner),
+            Err(FftError::AxisConstraint { axis: 0, n: 36, p: 12, requires: _ })
+        ));
+        // ... and rank mismatch.
         assert!(matches!(
             FftuPlan::new(&[8, 8], &[2], &planner),
             Err(FftError::RankMismatch { shape: 2, grid: 1 })
         ));
-        assert!(FftuPlan::new(&[8, 8], &[2, 2], &planner).is_ok());
+        let plan = FftuPlan::new(&[8, 8], &[2, 2], &planner).unwrap();
+        assert!(!plan.is_ladder());
+        assert_eq!(plan.comm_stages(), 1);
+    }
+
+    #[test]
+    fn ladder_stage_sequence_64_on_16() {
+        // n = 64, p = 16, M = 4: k = 2 stages of m = 4, cycle 16 -> 4 -> 1.
+        let planner = Planner::new();
+        let plan = FftuPlan::new(&[64], &[16], &planner).unwrap();
+        let lad = plan.ladder.as_ref().unwrap();
+        assert_eq!(lad.num_stages(), 2);
+        assert_eq!(lad.stages[0].axes_m, vec![4]);
+        assert_eq!(lad.stages[0].axes_c, vec![16]);
+        assert_eq!(lad.stages[1].axes_m, vec![4]);
+        assert_eq!(lad.stages[1].axes_c, vec![4]);
+        // Per-stage packet: local_len / mprod = 4 / 4 = 1 word.
+        for st in &lad.stages {
+            assert_eq!(st.mprod, 4);
+            assert_eq!(st.words, 1);
+            assert_eq!(st.nbs, vec![1]);
+        }
+        // Matches the analytic superstep count.
+        assert_eq!(plan.comm_stages(), super::super::comm_supersteps_needed(64, 16));
+    }
+
+    #[test]
+    fn ladder_team_ranks_group_structure() {
+        // n = 64, p = 16: stage 0 has c = 16, m = 4, cp = 4 — rank s
+        // teams with {u * 4 + s mod 4}. Stage 1 has c = 4, m = 4,
+        // cp = 1 — teams are the aligned groups {base .. base + 4}.
+        let planner = Planner::new();
+        let plan = FftuPlan::new(&[64], &[16], &planner).unwrap();
+        for s in 0..16usize {
+            let t0 = plan.ladder_team_ranks(s, 0);
+            let want0: Vec<u32> = (0..4).map(|u| (u * 4 + s % 4) as u32).collect();
+            assert_eq!(t0, want0, "stage 0 rank {s}");
+            assert_eq!(t0[plan.ladder_self_team(s, 0)] as usize, s);
+            let t1 = plan.ladder_team_ranks(s, 1);
+            let base = s - s % 4;
+            let want1: Vec<u32> = (0..4).map(|u| (base + u) as u32).collect();
+            assert_eq!(t1, want1, "stage 1 rank {s}");
+            assert_eq!(t1[plan.ladder_self_team(s, 1)] as usize, s);
+        }
+    }
+
+    #[test]
+    fn ladder_gather_covers_every_output_once() {
+        use crate::fft::C64;
+        let planner = Planner::new();
+        for (shape, grid) in [
+            (vec![64usize], vec![16usize]),
+            (vec![16, 16], vec![8, 8]),
+            (vec![16, 8], vec![8, 4]),
+            (vec![27], vec![9]),
+        ] {
+            let plan = FftuPlan::new(&shape, &grid, &planner).unwrap();
+            assert!(plan.is_ladder(), "{shape:?}/{grid:?}");
+            // Tag each local slot uniquely; the gather must place every
+            // tag exactly once (the output map is a bijection).
+            let outputs: Vec<Vec<C64>> = (0..plan.num_procs())
+                .map(|r| {
+                    (0..plan.local_len())
+                        .map(|t| C64::new((r * plan.local_len() + t) as f64 + 1.0, 0.0))
+                        .collect()
+                })
+                .collect();
+            let global = plan.gather_outputs(&outputs);
+            let mut seen = vec![false; plan.total()];
+            for z in &global {
+                assert!(z.re >= 1.0, "hole in the output map ({shape:?}/{grid:?})");
+                let tag = z.re as usize - 1;
+                assert!(!seen[tag], "tag {tag} placed twice ({shape:?}/{grid:?})");
+                seen[tag] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn grid_feasibility_and_enumeration_any() {
+        // axis_feasible: k = 1 regime, ladder regime, infeasible.
+        assert!(axis_feasible(64, 8)); // 8^2 | 64
+        assert!(axis_feasible(64, 16)); // ladder [4, 4]
+        assert!(axis_feasible(64, 32)); // ladder [2; 5]
+        assert!(!axis_feasible(64, 64)); // M = 1: no batch to split by
+        assert!(!axis_feasible(64, 48)); // 48 does not divide 64
+        assert!(!axis_feasible(36, 12)); // greedy stalls (3 then 4 vs 3)
+        // enumerate_grids_any leads with the k = 1 list.
+        let grids = enumerate_grids_any(&[64], 16);
+        assert_eq!(grids, vec![vec![16]]); // no k = 1 grid exists at p = 16
+        let grids = enumerate_grids_any(&[64, 64], 16);
+        let single = enumerate_grids(&[64, 64], 16);
+        assert_eq!(grids[..single.len()], single[..]);
+        assert!(grids.len() > single.len());
+        for g in &grids {
+            assert!(grid_feasible(&[64, 64], g), "{g:?}");
+            assert_eq!(g.iter().product::<usize>(), 16);
+        }
+        // choose_grid_any: falls back to the ladder when k = 1 cannot.
+        assert_eq!(choose_grid_any(&[64], 16), Some(vec![16]));
+        assert_eq!(choose_grid_any(&[64, 64], 4), choose_grid(&[64, 64], 4));
+        assert_eq!(choose_grid_any(&[15, 15], 3), None);
     }
 
     #[test]

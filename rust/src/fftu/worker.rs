@@ -24,8 +24,40 @@ use crate::api::Normalization;
 use crate::bsp::Ctx;
 use crate::fft::{C64, Direction};
 
-use super::pack::{pack_twiddle, pack_twiddle_odometer, unpack, TwiddleTables};
+use super::pack::{
+    pack_indexed, pack_twiddle, pack_twiddle_odometer, unpack, unpack_indexed, TwiddleTables,
+};
 use super::plan::FftuPlan;
+
+/// Per-rank state of the beyond-sqrt(N) group-cyclic ladder (§2.3):
+/// everything the k-superstep execute path touches, built once at
+/// [`Worker::new`] so the steady state allocates nothing.
+struct LadderState {
+    /// Per-stage team tables: `team_ranks[j][u]` is the global rank of
+    /// the stage-`j` teammate with team index `u` (see
+    /// [`FftuPlan::ladder_team_ranks`]). Serves both pack destinations
+    /// and unpack sources.
+    team_ranks: Vec<Vec<u32>>,
+    /// Per-stage compiled receive expectation for
+    /// [`Ctx::exchange_swap_checked`]: `stage.words` at the team's
+    /// slots, 0 everywhere else — a short or spurious packet at *any*
+    /// ladder stage aborts the session typed.
+    expected_in: Vec<Vec<usize>>,
+    /// Per-stage elementwise twiddle `prod_l w_{c_l}^{s2_l q1_l}` over
+    /// the active axes (Eq. 3.1 generalized), forward sign; the inverse
+    /// path conjugates on the fly.
+    stage_tw: Vec<Vec<C64>>,
+    /// Superstep-0 twiddle `prod_l w_{n_l}^{t_l s_l}` (the ladder has
+    /// no packing to fuse it into, so it is applied elementwise while
+    /// moving the local FFT output into the working array).
+    tw0: Vec<C64>,
+    /// Stage packet buffers, one slot per *global* rank. Slots in the
+    /// union of all stage teams carry capacity `max_j words_j`; every
+    /// rank sizes the same way, so the vectors that migrate between
+    /// teammates through the swap exchange always have room for any
+    /// stage's `resize` — zero steady-state allocations.
+    bufs: Vec<Vec<C64>>,
+}
 
 /// Per-rank state: twiddle tables (which depend on the processor
 /// coordinates `s`), reusable packet buffers, and FFT scratch. Built once
@@ -61,6 +93,9 @@ pub struct Worker {
     /// ([`crate::fftu::zigzag::scatter_rank_spectrum`]); kept across the
     /// mirror exchange because the retangle needs both sides.
     pub spec_buf: Vec<C64>,
+    /// Group-cyclic ladder state; `Some` exactly when the plan is a
+    /// beyond-sqrt(N) ladder plan.
+    lad: Option<LadderState>,
 }
 
 impl std::fmt::Debug for Worker {
@@ -76,22 +111,105 @@ impl Worker {
     // Plan-time construction: the packet buffers, working array, and
     // scratch allocated here are exactly the ones the steady-state
     // supersteps reuse forever after.
-    #[allow(clippy::disallowed_macros)]
+    #[allow(clippy::disallowed_macros, clippy::disallowed_methods)]
     pub fn new(plan: Arc<FftuPlan>, rank: usize) -> Self {
         let s_coords = plan.dist.proc_coords(rank);
         let tables = TwiddleTables::new(&plan, &s_coords);
-        let packets = vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()];
+        // Ladder plans have no single uniform all-to-all; their packet
+        // buffers live in the LadderState instead.
+        let packets = if plan.is_ladder() {
+            Vec::new()
+        } else {
+            vec![vec![C64::ZERO; plan.packet_len()]; plan.num_procs()]
+        };
         let w = vec![C64::ZERO; plan.local_len()];
         // Scratch must cover: local fftn (superstep 0), per-axis
-        // interleaved F_{p_l} (superstep 2), and any Bluestein lines.
+        // interleaved F_{p_l} (superstep 2) or the ladder's per-stage
+        // F_{m_l}, and any Bluestein lines.
         let mut need = plan.nd_plan.scratch_len();
         let d = plan.shape.len();
         for l in 0..d {
             let inner: usize = plan.local_shape[l + 1..].iter().product();
             let chunk = plan.local_shape[l] * inner;
             need = need.max(plan.axis_plans[l].scratch_len(chunk)).max(chunk);
+            if let Some(lp) = plan.ladder.as_ref() {
+                for stage in &lp.stages {
+                    if let Some(ap) = &stage.axis_plans[l] {
+                        need = need.max(ap.scratch_len(chunk)).max(chunk);
+                    }
+                }
+            }
         }
         let scratch = vec![C64::ZERO; need];
+        let lad = plan.ladder.as_ref().map(|lp| {
+            let p = plan.num_procs();
+            let np = plan.local_len();
+            let cap = lp.stages.iter().map(|s| s.words).max().unwrap_or(0);
+            let mut team_ranks = Vec::with_capacity(lp.stages.len());
+            let mut expected_in = Vec::with_capacity(lp.stages.len());
+            let mut stage_tw = Vec::with_capacity(lp.stages.len());
+            let mut bufs: Vec<Vec<C64>> = (0..p).map(|_| Vec::new()).collect();
+            for (j, stage) in lp.stages.iter().enumerate() {
+                let team = plan.ladder_team_ranks(rank, j);
+                let mut exp = vec![0usize; p];
+                for &r in &team {
+                    exp[r as usize] = stage.words;
+                    if bufs[r as usize].capacity() < cap {
+                        bufs[r as usize] = Vec::with_capacity(cap);
+                    }
+                }
+                // Stage twiddle prod over active axes of
+                // w_{c_l}^{s2_l q1_l}, with s2_l = (s_l mod c_l) mod cp_l
+                // and q1_l = t_l div nb_l (forward sign, like the Eq. 3.1
+                // tables; all-ones on the final stage, where cp_l = 1).
+                let mut tw = vec![C64::ONE; np];
+                let mut t = vec![0usize; d];
+                for twv in tw.iter_mut() {
+                    let mut f = C64::ONE;
+                    for l in 0..d {
+                        let m = stage.axes_m[l];
+                        if m == 1 {
+                            continue;
+                        }
+                        let c = stage.axes_c[l];
+                        let cp = c / m;
+                        let s2 = (s_coords[l] % c) % cp;
+                        let q1 = t[l] / stage.nbs[l];
+                        f *= C64::root_of_unity(c, s2 * q1);
+                    }
+                    *twv = f;
+                    for l in (0..d).rev() {
+                        t[l] += 1;
+                        if t[l] < plan.local_shape[l] {
+                            break;
+                        }
+                        t[l] = 0;
+                    }
+                }
+                team_ranks.push(team);
+                expected_in.push(exp);
+                stage_tw.push(tw);
+            }
+            // Superstep-0 twiddle from the shared per-axis tables:
+            // tw0[t] = prod_l per_axis[l][t_l].
+            let mut tw0 = vec![C64::ONE; np];
+            let mut t = vec![0usize; d];
+            for twv in tw0.iter_mut() {
+                let mut f = C64::ONE;
+                for l in 0..d {
+                    f *= tables.per_axis[l][t[l]];
+                }
+                *twv = f;
+                for l in (0..d).rev() {
+                    t[l] += 1;
+                    if t[l] < plan.local_shape[l] {
+                        break;
+                    }
+                    t[l] = 0;
+                }
+            }
+            LadderState { team_ranks, expected_in, stage_tw, tw0, bufs }
+        });
         Worker {
             plan,
             s_coords,
@@ -103,6 +221,7 @@ impl Worker {
             pair_buf: Vec::new(),
             mirror_buf: Vec::new(),
             spec_buf: Vec::new(),
+            lad,
         }
     }
 
@@ -113,6 +232,10 @@ impl Worker {
     // Lazily-reached plan-time construction, like `Worker::new`.
     #[allow(clippy::disallowed_macros)]
     pub fn ensure_pipeline_buffers(&mut self) {
+        debug_assert!(
+            !self.plan.is_ladder(),
+            "ladder plans execute their batches sequentially (no depth-2 pipeline)"
+        );
         if self.packets_alt.len() != self.plan.num_procs() {
             self.packets_alt =
                 vec![vec![C64::ZERO; self.plan.packet_len()]; self.plan.num_procs()];
@@ -201,6 +324,9 @@ impl Worker {
     /// Run the full Algorithm 2.3 on this rank's local array (in place),
     /// charging the BSP ledger with the model costs of §2.3.
     pub fn execute(&mut self, ctx: &mut Ctx, local: &mut [C64], dir: Direction) {
+        if self.plan.is_ladder() {
+            return self.execute_ladder(ctx, local, dir);
+        }
         ctx.begin_comp("fftu-superstep0");
         ctx.charge_flops(self.plan.flops_superstep0() + self.plan.flops_twiddle());
         self.superstep0(local, dir);
@@ -208,6 +334,64 @@ impl Worker {
         ctx.begin_comp("fftu-superstep2");
         ctx.charge_flops(self.plan.flops_superstep2());
         self.superstep2(local, dir);
+    }
+
+    /// Run the group-cyclic ladder (Alg. 3.2 generalized to `k`
+    /// communication supersteps) on this rank's local array, in place:
+    /// superstep 0 is the local `F_{N/p}` plus the Eq. 3.1 twiddle, then
+    /// each ladder stage exchanges within shrinking cyclic groups
+    /// (`c: p -> p/m_1 -> ... -> 1`), applies the per-axis `F_{m_l}`
+    /// butterflies over the received slots, and the stage twiddle
+    /// `w_c^{s2 q1}`. The result lands in the plan's group-cyclic output
+    /// placement (see [`FftuPlan::gather_rank_into`]).
+    pub fn execute_ladder(&mut self, ctx: &mut Ctx, local: &mut [C64], dir: Direction) {
+        let conj = dir == Direction::Inverse;
+        ctx.begin_comp("fftu-superstep0");
+        ctx.charge_flops(self.plan.flops_superstep0() + self.plan.flops_twiddle());
+        self.plan.nd_plan.execute(local, &mut self.scratch, dir);
+        let LadderState { team_ranks, expected_in, stage_tw, tw0, bufs } = self
+            .lad
+            .as_mut()
+            .expect("execute_ladder on a single-all-to-all plan");
+        for ((wv, lv), tw) in self.w.iter_mut().zip(local.iter()).zip(tw0.iter()) {
+            *wv = *lv * if conj { tw.conj() } else { *tw };
+        }
+        let d = self.plan.shape.len();
+        let stages = &self.plan.ladder.as_ref().expect("ladder program").stages;
+        for (j, stage) in stages.iter().enumerate() {
+            let team = &team_ranks[j];
+            for &r in team.iter() {
+                // Within the capacity reserved at construction (the
+                // stage-wise maximum packet length over the union of
+                // this rank's teams), so the steady state never
+                // allocates.
+                #[allow(clippy::disallowed_methods)]
+                bufs[r as usize].resize(stage.words, C64::ZERO);
+            }
+            pack_indexed(&stage.prog, &self.w, team, bufs);
+            ctx.exchange_swap_checked(stage.comm_label, bufs, &expected_in[j]);
+            unpack_indexed(&stage.prog, &stage.nbs, team, bufs, &mut self.w);
+            ctx.begin_comp(stage.fft_label);
+            ctx.charge_flops(self.plan.flops_ladder_stage(j));
+            for l in 0..d {
+                if stage.axes_m[l] == 1 {
+                    continue;
+                }
+                let inner: usize = self.plan.local_shape[l + 1..].iter().product();
+                let chunk = self.plan.local_shape[l] * inner;
+                let stride = stage.nbs[l] * inner;
+                let axis_plan = stage.axis_plans[l]
+                    .as_ref()
+                    .expect("active ladder axis has a compiled F_m plan");
+                for block in self.w.chunks_exact_mut(chunk) {
+                    axis_plan.execute_interleaved(block, &mut self.scratch, stride, dir);
+                }
+            }
+            for (wv, tw) in self.w.iter_mut().zip(stage_tw[j].iter()) {
+                *wv *= if conj { tw.conj() } else { *tw };
+            }
+        }
+        local.copy_from_slice(&self.w);
     }
 
     /// Pipelined-engine slice of [`Worker::execute`]: open the
@@ -248,6 +432,10 @@ impl Worker {
     /// reallocation per superstep), exactly as the engine behaved before
     /// the compiled strip programs landed.
     pub fn execute_odometer(&mut self, ctx: &mut Ctx, local: &mut [C64], dir: Direction) {
+        debug_assert!(
+            !self.plan.is_ladder(),
+            "the legacy odometer path is single-all-to-all only"
+        );
         ctx.begin_comp("fftu-superstep0");
         ctx.charge_flops(self.plan.flops_superstep0() + self.plan.flops_twiddle());
         self.plan.nd_plan.execute(local, &mut self.scratch, dir);

@@ -49,6 +49,28 @@
 //! # Ok::<(), fftu::FftError>(())
 //! ```
 //!
+//! More processors than `sqrt(N)`? When some `p_l^2` does not divide
+//! `n_l` the plan compiles the paper's §2.3 **group-cyclic ladder**
+//! instead: the cyclic distribution walks the group-cyclic family with
+//! a shrinking cycle, paying `k =`
+//! [`fftu::comm_supersteps_needed`](crate::fftu::comm_supersteps_needed)
+//! exchange supersteps instead of one — same descriptor, same front
+//! door:
+//!
+//! ```
+//! use fftu::api::{Algorithm, Transform};
+//! use fftu::fft::C64;
+//!
+//! let x: Vec<C64> = (0..64).map(|i| C64::new(i as f64, -0.25)).collect();
+//! // [64] on 16 ranks: 16^2 > 64, beyond the single-all-to-all
+//! // ceiling. The ladder shrinks the cycle 16 -> 4 -> 1: two stages.
+//! let fwd = Transform::new(&[64]).grid(&[16]).plan(Algorithm::Fftu)?;
+//! let y = fwd.execute(&x)?.complex();
+//! assert_eq!(y.report.comm_supersteps(), 2);
+//! assert_eq!(fftu::fftu::comm_supersteps_needed(64, 16), 2);
+//! # Ok::<(), fftu::FftError>(())
+//! ```
+//!
 //! Real input? Declare the kind ([`api::Kind`]): r2c packs adjacent
 //! last-axis pairs into complex, runs the complex core on the half shape
 //! `[..., n_d/2]` — roughly **halving flops and communication volume** —

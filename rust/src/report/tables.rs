@@ -12,10 +12,10 @@
 use crate::api::{Algorithm, Kind};
 use crate::baselines::{pencil_pmax, pfft_best_pmax, slab_pmax, OutputDist};
 use crate::costmodel::{
-    fftu_report, heffte_report, pencil_report, popovici_report, real_wrap_report, slab_report,
-    Machine,
+    fftu_ladder_report, fftu_report, heffte_report, pencil_report, popovici_report,
+    real_wrap_report, slab_report, Machine,
 };
-use crate::fftu::{choose_grid, fftu_pmax};
+use crate::fftu::{choose_grid, choose_grid_any, fftu_pmax};
 
 use super::measure::{measure_cold, measure_fftu};
 use super::paper::{PaperRow, SEQ_FFTW_1024_3, SEQ_FFTW_2_24X64, SEQ_FFTW_64_5, TABLE_4_1, TABLE_4_2, TABLE_4_3};
@@ -256,7 +256,16 @@ pub fn comm_steps_table(shape: &[usize], p: usize, kind: Kind) -> Table {
             t.row(vec![name.to_string(), "-".into(), "-".into()]);
         }
     };
-    add("FFTU (same dist)", wrap(Some(fftu_report(core, p))));
+    add("FFTU (same dist)", wrap(choose_grid(core, p).map(|_| fftu_report(core, p))));
+    if choose_grid(core, p).is_none() {
+        // Beyond the sqrt(N) ceiling the single all-to-all is infeasible;
+        // the group-cyclic ladder (k = comm_supersteps_needed exchanges
+        // with shrinking cycles) is what actually plans and runs there.
+        add(
+            "FFTU group-cyclic ladder",
+            wrap(choose_grid_any(core, p).map(|g| fftu_ladder_report(core, &g))),
+        );
+    }
     if kind != Kind::C2C {
         // The rank-local variant: zig-zag cyclic combine (trig) or the
         // conjugate pairwise untangle (r2c/c2r). Its report is complete
@@ -376,6 +385,23 @@ mod tests {
             !zz_line(&t).split_whitespace().any(|tok| tok == "-"),
             "r2c zig-zag row must always be priced:\n{t}"
         );
+    }
+
+    #[test]
+    fn comm_steps_table_prices_the_ladder_beyond_sqrt_n() {
+        // [64] at p = 16 is beyond the sqrt(N) ceiling (16^2 > 64): the
+        // single-all-to-all row cannot be priced and the group-cyclic
+        // ladder row must show k = 2 exchanges of h = 3 words each.
+        let t = comm_steps_table(&[64], 16, Kind::C2C).render();
+        let same = t.lines().find(|l| l.contains("same dist")).expect("same-dist row");
+        assert!(same.split_whitespace().any(|tok| tok == "-"), "{t}");
+        let lad = t.lines().find(|l| l.contains("group-cyclic")).expect("ladder row");
+        let toks: Vec<&str> = lad.split_whitespace().collect();
+        assert!(toks.contains(&"2"), "ladder k:\n{t}");
+        assert!(toks.contains(&"6"), "ladder total h:\n{t}");
+        // Within the ceiling the ladder row is absent (nothing to add).
+        let t = comm_steps_table(&[64], 8, Kind::C2C).render();
+        assert!(!t.contains("group-cyclic"), "{t}");
     }
 
     #[test]

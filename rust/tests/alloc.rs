@@ -148,6 +148,26 @@ fn steady_state_execute_is_allocation_free_1d() {
 }
 
 #[test]
+fn steady_state_group_cyclic_ladder_is_allocation_free() {
+    let _serial = serial();
+    // Beyond the sqrt(N) ceiling the plan compiles the k-stage
+    // group-cyclic ladder. The warm-up execute builds every per-stage
+    // resource (stage pack programs are plan-time, stage twiddles and
+    // exchange buffers are worker-construction), and the swap exchange
+    // circulates the stage buffers between ranks by pointer swap with
+    // their capacities attached — so a warm ladder execute must be as
+    // allocation-free as the single-all-to-all engine, on every rank,
+    // at every one of the k supersteps, in both directions.
+    let count = measure(&[64], &[16], &[Direction::Forward, Direction::Inverse]);
+    assert_eq!(count, 0, "steady-state k = 2 ladder allocated {count} times (64/[16])");
+    // A mixed multidimensional ladder (k = 3, with a k < 3 axis riding
+    // along): per-axis stage schedules of different depths share the
+    // same exchange supersteps.
+    let count = measure(&[16, 8], &[8, 4], &[Direction::Forward]);
+    assert_eq!(count, 0, "steady-state k = 3 ladder allocated {count} times (16x8/[8,4])");
+}
+
+#[test]
 fn steady_state_trig_path_is_allocation_free() {
     let _serial = serial();
     // The trig (DCT/DST) extension folds the Makhoul permutation into

@@ -320,6 +320,139 @@ fn mutation_comm_outside_session_fires_session_safety() {
 }
 
 // ---------------------------------------------------------------------
+// Beyond sqrt(N): the group-cyclic ladder sweep and its lint mutations.
+// ---------------------------------------------------------------------
+
+#[test]
+fn sweep_group_cyclic_ladder_every_gathered_kind() {
+    // [64] at p = 16 sits beyond the single-all-to-all ceiling
+    // (16^2 > 64), so the plan compiles the k = 2 ladder. The real
+    // kinds run the core on the packed half shape, so [128] lands on
+    // the same beyond-sqrt(N) core. Every gathered kind must lint
+    // clean, including the exactly-k ladder form of the
+    // single-all-to-all invariant.
+    for kind in ALL_KINDS {
+        let shape: &[usize] = if kind.is_real_fft() { &[128] } else { &[64] };
+        let t = Transform::new(shape).kind(kind).procs(16);
+        assert_clean(Algorithm::Fftu, &t);
+    }
+    // Mixed multidimensional ladder: [2, 2, 2] on axis 0 and [2, 2] on
+    // axis 1, so k = 3 with axis 1 idle in the last stage.
+    assert_clean(Algorithm::Fftu, &Transform::new(&[16, 8]).grid(&[8, 4]));
+}
+
+/// The ladder schedule the beyond-sqrt(N) mutations start from
+/// ([64] on p = 16, k = 2): [session+, superstep0, ladder-0,
+/// ladder-fft-0, ladder-1, ladder-fft-1, session-] per rank.
+fn ladder_report() -> ScheduleReport {
+    let report = analyze(Algorithm::Fftu, &Transform::new(&[64]).grid(&[16]));
+    assert!(report.passed(), "seed schedule must be clean:\n{}", report.render());
+    report
+}
+
+#[test]
+fn ladder_schedule_runs_exactly_k_exchanges_in_stage_order() {
+    let report = ladder_report();
+    let labels: Vec<&str> = report.schedule.ranks[0]
+        .iter()
+        .filter_map(|e| match e {
+            Event::AllToAll { label, .. } => Some(*label),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        labels,
+        [fftu::fftu::LADDER_COMM_LABELS[0], fftu::fftu::LADDER_COMM_LABELS[1]],
+        "ladder exchanges out of order:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_extra_ladder_stage_fires_single_alltoall() {
+    let mut report = ladder_report();
+    let i = position(&report, |e| matches!(e, Event::AllToAll { .. }));
+    let p = report.schedule.nprocs();
+    // A third exchange inserted on EVERY rank, so collective matching
+    // still holds and the exactly-comm_supersteps_needed count convicts.
+    for events in &mut report.schedule.ranks {
+        events.insert(i, Event::AllToAll { label: "fftu-ladder-0", send_counts: vec![0; p] });
+    }
+    report.reverify();
+    assert!(violations(&report, Lint::CollectiveMatching).is_empty());
+    assert!(
+        violations(&report, Lint::SingleAllToAll)
+            .iter()
+            .any(|v| v.contains("comm_supersteps_needed")),
+        "expected an exactly-k ladder violation:\n{}",
+        report.render()
+    );
+    assert!(!report.passed());
+}
+
+#[test]
+fn mutation_dropped_ladder_stage_fires_single_alltoall() {
+    let mut report = ladder_report();
+    // Every rank skips the final exchange: the cycle never shrinks to 1,
+    // so the schedule ends one redistribution short of cyclic output.
+    for events in &mut report.schedule.ranks {
+        let i = events
+            .iter()
+            .rposition(|e| matches!(e, Event::AllToAll { .. }))
+            .expect("ladder seed carries exchanges");
+        events.remove(i);
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SingleAllToAll)
+            .iter()
+            .any(|v| v.contains("comm_supersteps_needed")),
+        "expected an exactly-k ladder violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_wrong_cycle_sequence_fires_single_alltoall() {
+    let mut report = ladder_report();
+    let i = position(&report, |e| matches!(e, Event::AllToAll { .. }));
+    // Stage 1's label in stage 0's slot on every rank: the shrinking
+    // cycle sequence p -> p/m_1 -> ... -> 1 no longer telescopes.
+    for events in &mut report.schedule.ranks {
+        if let Event::AllToAll { label, .. } = &mut events[i] {
+            *label = "fftu-ladder-1";
+        }
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SingleAllToAll)
+            .iter()
+            .any(|v| v.contains("shrinking-cycle order")),
+        "expected a stage-order violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn mutation_mislabelled_ladder_stage_fires_single_alltoall() {
+    let mut report = ladder_report();
+    let i = position(&report, |e| matches!(e, Event::AllToAll { .. }));
+    for events in &mut report.schedule.ranks {
+        if let Event::AllToAll { label, .. } = &mut events[i] {
+            *label = "smuggled-transpose";
+        }
+    }
+    report.reverify();
+    assert!(
+        violations(&report, Lint::SingleAllToAll)
+            .iter()
+            .any(|v| v.contains("smuggled-transpose")),
+        "expected a mislabelled-stage violation:\n{}",
+        report.render()
+    );
+}
+
+// ---------------------------------------------------------------------
 // Pipelined batch schedules: the sweep and the split-phase mutations.
 // ---------------------------------------------------------------------
 

@@ -115,6 +115,55 @@ fn panic_report_names_the_victim_rank_and_superstep() {
     }
 }
 
+/// Beyond sqrt(N): faults injected at an INTERMEDIATE group-cyclic
+/// ladder exchange (comm step >= 1, when the data is partially
+/// redistributed and partially transformed) must surface as typed
+/// session errors, and the rebuilt arena must replay bit-identically.
+///
+/// [128] on p = 16 compiles the k = 2 ladder [8, 2]: stage 1 moves
+/// 4-word packets, so truncation is observable. Rank 15's stage-1
+/// destination team is {14, 15}, hence the packet faults target 14.
+#[test]
+fn group_cyclic_ladder_faults_at_intermediate_stage() {
+    let planned = plan(Algorithm::Fftu, &Transform::new(&[128]).grid(&[16])).unwrap();
+    let x = complex_input(128, 0x1ADD);
+    let want = planned.execute(&x).unwrap().complex().output;
+    for (kind, name) in [
+        (FaultKind::Panic, "panic"),
+        (FaultKind::DropPacket { to: 14 }, "drop"),
+        (FaultKind::TruncatePacket { to: 14, keep: 1 }, "truncate"),
+    ] {
+        let what = format!("ladder [128]/[16] {name}@15:1");
+        let faults = FaultPlan::new().with(15, 1, kind);
+        assert_faults_then_recovers(&planned, &x, &want, faults, &what);
+    }
+}
+
+/// A scripted panic at the LAST ladder exchange is attributed to the
+/// panicking rank with that stage's superstep label — the failure names
+/// where in the shrinking-cycle sequence the session died.
+#[test]
+fn ladder_panic_report_names_the_stage_superstep() {
+    // [16, 4] on 8 x 2: axis 0 runs the k = 3 ladder [2, 2, 2]; axis 1
+    // finishes in stage 0 and rides the remaining stages inactive.
+    let planned = plan(Algorithm::Fftu, &Transform::new(&[16, 4]).grid(&[8, 2])).unwrap();
+    let x = complex_input(64, 0x1AD2);
+    let want = planned.execute(&x).unwrap().complex().output;
+    planned.set_exec_options(
+        ExecOptions::builder().faults(FaultPlan::new().with(3, 2, FaultKind::Panic)).build(),
+    );
+    match planned.execute(&x).expect_err("injected panic") {
+        FftError::RankFailure { rank, superstep, .. } => {
+            assert_eq!(rank, 3);
+            assert_eq!(superstep, "fftu-ladder-2");
+        }
+        other => panic!("expected RankFailure, got {other:?}"),
+    }
+    planned.set_exec_options(ExecOptions::default());
+    let got = planned.execute(&x).expect("recovery failed").complex();
+    assert_bits_eq(&got.output, &want, "ladder k = 3 recovery");
+}
+
 /// A delayed rank trips the configured superstep deadline: the waiting
 /// peers detect the stall, report `Timeout`, and the session unwinds —
 /// it does not hang for the duration of the delay's owner forever.

@@ -17,8 +17,8 @@ use fftu::api::{plan, Algorithm, Kind, Normalization, PlanCache, PlannedFft, Tra
 use fftu::baselines::{pencil_global, slab_global, OutputDist};
 use fftu::bsp::{redistribute, run_spmd, SuperstepKind};
 use fftu::costmodel::{
-    fftu_c2r_zigzag_report, fftu_r2c_report, fftu_r2c_zigzag_report, fftu_report,
-    fftu_trig_report, fftu_trig_zigzag_report, pencil_report, slab_report,
+    fftu_c2r_zigzag_report, fftu_ladder_report, fftu_r2c_report, fftu_r2c_zigzag_report,
+    fftu_report, fftu_trig_report, fftu_trig_zigzag_report, pencil_report, slab_report,
 };
 use fftu::dist::{analytic_h, AxisDist, GridDist, RedistPlan};
 use fftu::fft::C64;
@@ -320,6 +320,81 @@ fn prop_fftu_zigzag_r2c_c2r_ledger_matches_analytic_exactly() {
         let rows = half_local / (shape[d - 1] / 2 / grid[d - 1]).max(1);
         for h in comm_h(&executed) {
             prop_assert!(h <= half_local + rows, "c2r {shape:?}: h {h} too large");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ladder_ledger_matches_analytic_superstep_for_superstep() {
+    forall("beyond-sqrt(N): executed ledger == fftu_ladder_report", 10, 0x1421, |rng| {
+        // Axis 0 exceeds the sqrt(N) ceiling: p_0 in {8, 16} with
+        // n_0 = 2 p_0 or 4 p_0 (so p_0^2 never divides n_0); the other
+        // axes use the classic k = 1 generator and ride the ladder.
+        let d = rng.range(1, 3);
+        let mut shape = Vec::new();
+        let mut grid = Vec::new();
+        let p0 = *rng.choose(&[8usize, 16]);
+        shape.push(p0 * *rng.choose(&[2usize, 4]));
+        grid.push(p0);
+        for _ in 1..d {
+            let g = rng.range(1, 2);
+            shape.push(g * g * rng.range(1, 3));
+            grid.push(g);
+        }
+        let p: usize = grid.iter().product();
+        let n: usize = shape.iter().product();
+        let x = rand_complex(n, rng);
+        let planned =
+            plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid)).map_err(String::from)?;
+        let executed = planned.execute(&x)?.into_report();
+        let analytic = fftu_ladder_report(&shape, &grid);
+        // Superstep-for-superstep: the executed ledger and the analytic
+        // ladder report must agree on the full sequence — kind and
+        // label of every entry, h on every communication entry. This is
+        // the precondition for trusting the paper-scale extrapolations
+        // of the beyond-sqrt(N) regime.
+        prop_assert!(
+            executed.supersteps.len() == analytic.supersteps.len(),
+            "{shape:?} grid {grid:?}: {} vs {} supersteps",
+            executed.supersteps.len(),
+            analytic.supersteps.len()
+        );
+        for (e, a) in executed.supersteps.iter().zip(&analytic.supersteps) {
+            prop_assert!(
+                e.kind == a.kind && e.label == a.label,
+                "{shape:?} grid {grid:?}: stage order — executed '{}' vs analytic '{}'",
+                e.label,
+                a.label
+            );
+            if e.kind == SuperstepKind::Communication {
+                prop_assert!(
+                    e.h_max == a.h_max,
+                    "{shape:?} grid {grid:?} '{}': executed h {} vs analytic {}",
+                    e.label,
+                    e.h_max,
+                    a.h_max
+                );
+            }
+        }
+        // Exactly comm_supersteps_needed wire exchanges — the paper's
+        // lower bound, met with equality by the group-cyclic ladder.
+        let k = shape
+            .iter()
+            .zip(&grid)
+            .map(|(&nl, &pl)| fftu::fftu::comm_supersteps_needed(nl, pl))
+            .max()
+            .unwrap();
+        prop_assert!(k > 1, "generator must exceed sqrt(N): {shape:?} grid {grid:?}");
+        prop_assert!(
+            executed.comm_supersteps() == k,
+            "{shape:?} grid {grid:?}: {} comm supersteps, want exactly {k}",
+            executed.comm_supersteps()
+        );
+        // Generalized Theorem 2.1 bound: every ladder stage moves at
+        // most N/p words per rank (h_j = (N/p)(1 - 1/m_j) < N/p).
+        for h in comm_h(&executed) {
+            prop_assert!(h <= n / p, "{shape:?} grid {grid:?}: h {h} > N/p = {}", n / p);
         }
         Ok(())
     });

@@ -110,6 +110,31 @@ fn pipelined_c2c_matches_sequential_bit_exact_1d_to_4d() {
     }
 }
 
+/// Beyond sqrt(N): batched group-cyclic ladder plans refuse to overlap
+/// (a k-stage ladder has no single all-to-all to hide behind the next
+/// entry's superstep 0), so the default depth-2 pipeline must degrade
+/// to — and stay bit-identical with — the `pipeline(1)` oracle, while
+/// still running exactly k exchange supersteps per batch entry.
+#[test]
+fn pipelined_batched_ladder_matches_sequential_bit_exact() {
+    for (shape, grid, k) in [
+        (vec![64usize], vec![16usize], 2usize), // ladder [4, 4]
+        (vec![16, 8], vec![8, 4], 3),           // [2, 2, 2] x [2, 2]
+    ] {
+        let n: usize = shape.iter().product();
+        for batch in [2usize, 3] {
+            let t = Transform::new(&shape).grid(&grid).batch(batch);
+            let planned = plan(Algorithm::Fftu, &t).unwrap();
+            let x = rand_complex(batch * n, 0x1ADE ^ ((batch as u64) << 8) ^ n as u64);
+            let what = format!("ladder c2c {shape:?}/{grid:?} batch {batch}");
+            assert_pipelined_matches_sequential(&planned, BatchIo::Complex(&x), &what);
+            let ledger = planned.execute(BatchIo::Complex(&x)).unwrap();
+            let comm = comm_ledger(ledger.report());
+            assert_eq!(comm.len(), batch * k, "{what}: wire exchanges != batch * k");
+        }
+    }
+}
+
 /// R2C and C2R, gathered: the real front door and its inverse; the c2r
 /// batch input is the r2c batch output (a genuine Hermitian spectrum).
 #[test]

@@ -455,6 +455,175 @@ fn prop_zigzag_r2c_c2r_round_trips() {
     });
 }
 
+/// Random beyond-sqrt(N) (shape, grid): axis 0 draws `p_0 in {8, 16}`
+/// and `n_0 = p_0 * m` with `m in {2, 4}`, so `p_0^2` never divides
+/// `n_0` and FFTU must take the `k > 1` group-cyclic ladder (powers of
+/// two keep `ladder_factors` feasible by construction). The remaining
+/// axes use the classic `g^2 | n` generator; for `real` shapes the
+/// last axis is doubled so the constraint holds on the packed half
+/// shape. Total ranks stay <= 64.
+fn rand_ladder_shape_grid(rng: &mut Rng, d: usize, real: bool) -> (Vec<usize>, Vec<usize>) {
+    let mut shape = Vec::with_capacity(d);
+    let mut grid = Vec::with_capacity(d);
+    let p0 = *rng.choose(&[8usize, 16]);
+    shape.push(p0 * *rng.choose(&[2usize, 4]));
+    grid.push(p0);
+    for _ in 1..d {
+        let g = rng.range(1, 2);
+        shape.push(g * g * rng.range(1, 3));
+        grid.push(g);
+    }
+    if real {
+        let last = shape.len() - 1;
+        shape[last] *= 2;
+    }
+    (shape, grid)
+}
+
+/// The ladder depth the plan must take: `max_l` of the per-axis
+/// communication-superstep lower bound (Theorem 3.1) on the core shape.
+fn expected_ladder_k(core_shape: &[usize], grid: &[usize]) -> usize {
+    core_shape
+        .iter()
+        .zip(grid)
+        .map(|(&nl, &pl)| fftu::fftu::comm_supersteps_needed(nl, pl))
+        .max()
+        .unwrap_or(0)
+}
+
+#[test]
+fn prop_ladder_c2c_matches_oracle_and_roundtrips() {
+    forall("beyond-sqrt(N) c2c: == dft_nd, k supersteps, roundtrip", 10, 0x1D10, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_ladder_shape_grid(rng, d, false);
+        let n: usize = shape.iter().product();
+        let batch = rng.range(1, 2);
+        let x = rand_complex(batch * n, rng);
+        let k = expected_ladder_k(&shape, &grid);
+        prop_assert!(k > 1, "generator must exceed sqrt(N): {shape:?} grid {grid:?}");
+        let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).batch(batch))
+            .map_err(|e| format!("fftu must plan the ladder {shape:?} grid {grid:?}: {e}"))?;
+        let y = fwd.execute(&x)?.complex();
+        // Exactly k wire exchanges per transform — no more, no fewer.
+        prop_assert!(
+            y.report.comm_supersteps() == batch * k,
+            "{shape:?} grid {grid:?}: {} comm supersteps for batch {batch}, want {batch} x {k}",
+            y.report.comm_supersteps()
+        );
+        for b in 0..batch {
+            let want = dft_nd(&x[b * n..(b + 1) * n], &shape, Direction::Forward);
+            let err = rel_l2_error(&y.output[b * n..(b + 1) * n], &want);
+            prop_assert!(err < 1e-9, "{shape:?} grid {grid:?} entry {b}: forward err {err}");
+        }
+        let inv = plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape)
+                .grid(&grid)
+                .inverse()
+                .normalization(Normalization::ByN)
+                .batch(batch),
+        )?;
+        let z = inv.execute(&y.output)?.complex();
+        let err = max_abs_diff(&z.output, &x);
+        prop_assert!(err < 1e-8, "{shape:?} grid {grid:?} batch {batch}: roundtrip err {err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ladder_parseval_and_k1_agreement() {
+    forall("beyond-sqrt(N) c2c: Parseval, == the k = 1 path", 10, 0x1D11, |rng| {
+        let d = rng.range(1, 3);
+        let (shape, grid) = rand_ladder_shape_grid(rng, d, false);
+        let n: usize = shape.iter().product();
+        let x = rand_complex(n, rng);
+        let norm = *rng.choose(&[Normalization::None, Normalization::Unitary, Normalization::ByN]);
+        let planned =
+            plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).normalization(norm))
+                .map_err(|e| format!("fftu must plan the ladder {shape:?} grid {grid:?}: {e}"))?;
+        let y = planned.execute(&x)?.complex();
+        let ex: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let ey: f64 = y.output.iter().map(|v| v.norm_sqr()).sum();
+        let scale = norm.scale(n);
+        let want = scale * scale * n as f64 * ex;
+        prop_assert!(
+            (ey / want - 1.0).abs() < 1e-8,
+            "{shape:?} grid {grid:?} {norm:?}: energy {ey} vs {want}"
+        );
+        // Pin the ladder to the gathered k = 1 path: axis 0 is always a
+        // multiple of 16, so grid [2, 1, ...] satisfies p_l^2 | n_l and
+        // runs the single-all-to-all engine on the same transform.
+        let mut single_grid = vec![1usize; d];
+        single_grid[0] = 2;
+        let single = plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape).grid(&single_grid).normalization(norm),
+        )?;
+        let ys = single.execute(&x)?.complex();
+        prop_assert!(
+            ys.report.comm_supersteps() == 1,
+            "grid {single_grid:?} must be the single-all-to-all path"
+        );
+        let err = rel_l2_error(&y.output, &ys.output);
+        prop_assert!(err < 1e-9, "{shape:?}: ladder vs k = 1 path err {err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ladder_real_and_trig_kinds_roundtrip() {
+    forall("beyond-sqrt(N) r2c/c2r and trig kinds", 8, 0x1D12, |rng| {
+        let d = rng.range(1, 2);
+        let (shape, grid) = rand_ladder_shape_grid(rng, d, true);
+        let n: usize = shape.iter().product();
+        let x = rand_real(n, rng);
+        let half = fftu::fft::realnd::half_shape(&shape);
+        prop_assert!(
+            expected_ladder_k(&half, &grid) > 1,
+            "real generator must exceed sqrt(N) on the half shape: {shape:?} grid {grid:?}"
+        );
+        // r2c against the sequential oracle, then c2r back (the gathered
+        // untangle passes are distribution-agnostic over the ladder).
+        let fwd = plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).r2c())
+            .map_err(|e| format!("fftu must plan ladder r2c {shape:?} grid {grid:?}: {e}"))?;
+        let spec = fwd.execute(&x)?.complex();
+        let want = rfftn(&x, &shape);
+        let err = rel_l2_error(&spec.output, &want);
+        prop_assert!(err < 1e-9, "ladder r2c {shape:?} grid {grid:?} vs rfftn: {err}");
+        let inv = plan(
+            Algorithm::Fftu,
+            &Transform::new(&shape).grid(&grid).c2r().normalization(Normalization::ByN),
+        )?;
+        let back = inv.execute(&spec.output)?.real();
+        let err = x.iter().zip(&back.output).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        prop_assert!(err < 1e-9, "ladder c2r {shape:?} grid {grid:?} roundtrip: {err}");
+        // The trig pairs run the complex core on the FULL shape, which
+        // is also beyond sqrt(N) on axis 0; type-3 inverts type-2.
+        let scale: f64 = shape.iter().map(|&nl| 2.0 * nl as f64).product();
+        for (fwd_kind, inv_kind) in [(Kind::Dct2, Kind::Dct3), (Kind::Dst2, Kind::Dst3)] {
+            let fwd =
+                plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(fwd_kind))
+                    .map_err(|e| {
+                        format!("fftu must plan ladder {fwd_kind:?} {shape:?} grid {grid:?}: {e}")
+                    })?;
+            let coeff = fwd.execute(&x)?.real();
+            let inv =
+                plan(Algorithm::Fftu, &Transform::new(&shape).grid(&grid).kind(inv_kind))?;
+            let back = inv.execute(&coeff.output)?.real();
+            let err = x
+                .iter()
+                .zip(&back.output)
+                .map(|(a, b)| (b / scale - a).abs())
+                .fold(0.0, f64::max);
+            prop_assert!(
+                err < 1e-8,
+                "ladder {fwd_kind:?}/{inv_kind:?} {shape:?} grid {grid:?}: err {err}"
+            );
+        }
+        Ok(())
+    });
+}
+
 /// The properties above randomize d in 1..=3; pin a 4D case as well so
 /// the suite demonstrably covers > 3 dimensions for both kinds.
 #[test]
